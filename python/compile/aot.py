@@ -1,0 +1,74 @@
+"""AOT pipeline: lower every Layer-2 graph to HLO *text* artifacts.
+
+HLO text (not ``lowered.compile().serialize()`` and not the serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Also writes ``manifest.txt`` describing each artifact's entry signature,
+parsed by rust/src/runtime/manifest.rs.  Format, one record per line:
+
+    <name> <file> in=<p>:<dtype>:<d0>x<d1>,... out=<dtype>:<dims>,...
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import GRAPHS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dims(shape):
+    return "x".join(str(d) for d in shape) if shape else "scalar"
+
+
+def lower_all(out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, (fn, specs, arg_names) in sorted(GRAPHS.items()):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+
+        outs = jax.eval_shape(fn, *specs)
+        in_desc = ",".join(
+            f"{arg}:{spec.dtype}:{_dims(spec.shape)}"
+            for arg, spec in zip(arg_names, specs)
+        )
+        out_desc = ",".join(f"{o.dtype}:{_dims(o.shape)}" for o in outs)
+        manifest_lines.append(f"{name} {fname} in={in_desc} out={out_desc}")
+        print(f"lowered {name}: {len(text)} chars, outs={out_desc}")
+
+    manifest = "\n".join(manifest_lines) + "\n"
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write(manifest)
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts",
+                        help="artifact output directory")
+    args = parser.parse_args()
+    lower_all(args.out)
+    print(f"wrote manifest to {args.out}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

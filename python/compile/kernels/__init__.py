@@ -1,0 +1,25 @@
+"""Layer-1 Pallas kernels for the Austerity-MCMC hot path.
+
+Each kernel fuses the per-datapoint log-likelihood difference
+``l_i = log p(x_i; theta') - log p(x_i; theta)`` with the masked moment
+reduction ``(sum_i l_i, sum_i l_i^2)`` so that only two scalars leave the
+kernel.  These moments are exactly what the Layer-3 sequential test
+consumes (Alg. 1 of the paper).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness path
+and TPU performance is estimated analytically (DESIGN.md section Perf).
+"""
+
+from .logistic import logistic_lldiff, logistic_lldiff_block
+from .ica import ica_lldiff, ica_lldiff_block
+from .linreg import linreg_lldiff, linreg_lldiff_block
+
+__all__ = [
+    "logistic_lldiff",
+    "logistic_lldiff_block",
+    "ica_lldiff",
+    "ica_lldiff_block",
+    "linreg_lldiff",
+    "linreg_lldiff_block",
+]

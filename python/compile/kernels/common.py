@@ -1,0 +1,44 @@
+"""Shared helpers for the Pallas kernels.
+
+Numerically-stable primitives and the padding logic that lets a kernel
+compiled for a fixed block size serve arbitrary batch sizes (the mask
+input zeroes out padded rows, matching the Layer-3 contract where the
+tail mini-batch of a without-replacement sweep may be short).
+"""
+
+import jax.numpy as jnp
+
+# Block size along the batch dimension.  128 rows x 50 features of f32 is
+# 25.6 KB -- comfortably VMEM-resident next to the (D, 2) parameter panel,
+# and a multiple of the 8x128 VPU tile.
+DEFAULT_BLOCK_M = 128
+
+
+def softplus(z):
+    """log(1 + exp(z)) computed stably for large |z|."""
+    return jnp.maximum(z, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(z)))
+
+
+def log_sigmoid(z):
+    """log(sigmoid(z)) = -softplus(-z)."""
+    return -softplus(-z)
+
+
+def log_cosh(z):
+    """log(cosh(z)) computed stably: |z| + log1p(exp(-2|z|)) - log 2."""
+    a = jnp.abs(z)
+    return a + jnp.log1p(jnp.exp(-2.0 * a)) - jnp.log(2.0).astype(z.dtype)
+
+
+def pad_batch(arr, block_m):
+    """Pad the leading (batch) axis of ``arr`` up to a multiple of block_m."""
+    m = arr.shape[0]
+    pad = (-m) % block_m
+    if pad == 0:
+        return arr
+    widths = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, widths)
+
+
+def padded_len(m, block_m):
+    return m + ((-m) % block_m)

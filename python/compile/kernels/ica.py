@@ -1,0 +1,103 @@
+"""Pallas kernel: ICA log-likelihood difference moments.
+
+Model (paper section 6.2): p(x | W) = |det W| prod_j [4 cosh^2(0.5 w_j^T x)]^-1
+with W on the Stiefel manifold of orthonormal matrices, so
+
+    log p(x | W) = log|det W| - sum_j (2 log 2 + 2 log cosh(0.5 w_j^T x)).
+
+Per datapoint:
+
+    l_i = log p(x_i | W') - log p(x_i | W)
+        = const + sum_j 2 log cosh(0.5 s_ij) - 2 log cosh(0.5 s'_ij)
+
+where s = x W^T, s' = x W'^T and const = log|det W'| - log|det W| (the
+2 log 2 terms cancel).  The determinant difference is constant across the
+batch, computed once in Layer 2 (jnp.linalg.slogdet) and fed to the
+kernel as a scalar so it participates in l_i *before* squaring.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DEFAULT_BLOCK_M, log_cosh, pad_batch
+
+
+def _kernel(x_ref, mask_ref, w2_ref, const_ref, sum_ref, sum2_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        sum2_ref[...] = jnp.zeros_like(sum2_ref)
+
+    x = x_ref[...]          # (bm, D)
+    mask = mask_ref[...]    # (bm,)
+    w2 = w2_ref[...]        # (2D, D): rows 0..D = W, rows D..2D = W'
+    const = const_ref[0, 0]
+
+    # One matmul for both unmixing matrices: s2[:, :D] = x W^T, s2[:, D:] = x W'^T.
+    s2 = jnp.dot(x, w2.T, preferred_element_type=jnp.float32)  # (bm, 2D)
+    lc = 2.0 * log_cosh(0.5 * s2)
+    d = w2.shape[1]
+    l = (const + jnp.sum(lc[:, :d], axis=1) - jnp.sum(lc[:, d:], axis=1)) * mask
+
+    sum_ref[0, 0] += jnp.sum(l)
+    sum2_ref[0, 0] += jnp.sum(l * l)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def ica_lldiff_block_const(x, mask, w, w_p, const, *, block_m=DEFAULT_BLOCK_M):
+    """Moments of l_i with the logdet difference supplied as a scalar.
+
+    The slogdet is NOT computed here: jnp.linalg.slogdet lowers to a
+    TYPED_FFI LAPACK custom-call that xla_extension 0.5.1 cannot execute,
+    so the AOT artifact takes `const = logdet(W') - logdet(W)` as an
+    input (computed by the Rust coordinator's LU slogdet, or by the
+    python wrapper below for the in-process path).
+    """
+    m, d = x.shape
+    assert m % block_m == 0, (m, block_m)
+    assert w.shape == (d, d) and w_p.shape == (d, d)
+    w2 = jnp.concatenate([w, w_p], axis=0)  # (2D, D)
+    const = jnp.asarray(const, jnp.float32).reshape(1, 1)
+    grid = (m // block_m,)
+    sum_l, sum_l2 = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((2 * d, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x, mask, w2, const)
+    return sum_l[0, 0], sum_l2[0, 0]
+
+
+def ica_lldiff_block(x, mask, w, w_p, *, block_m=DEFAULT_BLOCK_M):
+    """Moments of l_i; computes the logdet difference in-process."""
+    _, logdet = jnp.linalg.slogdet(w)
+    _, logdet_p = jnp.linalg.slogdet(w_p)
+    const = (logdet_p - logdet).astype(jnp.float32)
+    return ica_lldiff_block_const(x, mask, w, w_p, const, block_m=block_m)
+
+
+def ica_lldiff(x, mask, w, w_p, *, block_m=DEFAULT_BLOCK_M):
+    """Public entry: pads an arbitrary batch length up to the block size."""
+    x = pad_batch(x.astype(jnp.float32), block_m)
+    mask = pad_batch(mask.astype(jnp.float32), block_m)
+    return ica_lldiff_block(
+        x, mask, w.astype(jnp.float32), w_p.astype(jnp.float32), block_m=block_m
+    )

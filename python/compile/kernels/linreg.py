@@ -1,0 +1,80 @@
+"""Pallas kernel: 1-d L1-regularized linear-regression log-lik difference.
+
+The SGLD pitfall experiment (paper section 6.4) uses a 1-d toy model with
+Gaussian errors p(y | x, theta) ~ exp(-lambda/2 (y - theta x)^2), so
+
+    l_i = -lambda/2 [ (y_i - theta' x_i)^2 - (y_i - theta x_i)^2 ].
+
+The Laplacian prior enters the MH threshold mu_0 (Layer 3), not l_i.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DEFAULT_BLOCK_M, pad_batch
+
+
+def _kernel(x_ref, y_ref, mask_ref, params_ref, sum_ref, sum2_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        sum2_ref[...] = jnp.zeros_like(sum2_ref)
+
+    x = x_ref[...]
+    y = y_ref[...]
+    mask = mask_ref[...]
+    theta = params_ref[0, 0]
+    theta_p = params_ref[0, 1]
+    lam = params_ref[0, 2]
+
+    r = y - theta * x
+    r_p = y - theta_p * x
+    l = (-0.5 * lam) * (r_p * r_p - r * r) * mask
+
+    sum_ref[0, 0] += jnp.sum(l)
+    sum2_ref[0, 0] += jnp.sum(l * l)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def linreg_lldiff_block(x, y, mask, theta, theta_p, lam, *, block_m=DEFAULT_BLOCK_M):
+    m = x.shape[0]
+    assert m % block_m == 0, (m, block_m)
+    params = jnp.stack(
+        [jnp.asarray(theta, jnp.float32),
+         jnp.asarray(theta_p, jnp.float32),
+         jnp.asarray(lam, jnp.float32)]
+    ).reshape(1, 3)
+    grid = (m // block_m,)
+    sum_l, sum_l2 = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x, y, mask, params)
+    return sum_l[0, 0], sum_l2[0, 0]
+
+
+def linreg_lldiff(x, y, mask, theta, theta_p, lam, *, block_m=DEFAULT_BLOCK_M):
+    """Public entry: pads an arbitrary batch length up to the block size."""
+    x = pad_batch(x.astype(jnp.float32), block_m)
+    y = pad_batch(y.astype(jnp.float32), block_m)
+    mask = pad_batch(mask.astype(jnp.float32), block_m)
+    return linreg_lldiff_block(x, y, mask, theta, theta_p, lam, block_m=block_m)

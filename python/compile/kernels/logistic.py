@@ -1,0 +1,92 @@
+"""Pallas kernel: logistic-regression log-likelihood difference moments.
+
+Per datapoint (features x_i, label y_i in {-1, +1}):
+
+    l_i = log sigmoid(y_i x_i^T theta') - log sigmoid(y_i x_i^T theta)
+
+and the kernel returns the masked moments (sum l_i, sum l_i^2) consumed
+by the sequential test.  theta and theta' are stacked into one (D, 2)
+panel so a single MXU matmul serves both states; the log-sigmoid tail and
+the moment reduction are fused so only two scalars leave VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DEFAULT_BLOCK_M, log_sigmoid, pad_batch, padded_len
+
+
+def _kernel(x_ref, y_ref, mask_ref, theta2_ref, sum_ref, sum2_ref):
+    """One batch block: (bm, D) rows against the stacked (D, 2) panel."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        sum2_ref[...] = jnp.zeros_like(sum2_ref)
+
+    x = x_ref[...]            # (bm, D)
+    y = y_ref[...]            # (bm,)
+    mask = mask_ref[...]      # (bm,)
+    theta2 = theta2_ref[...]  # (D, 2): column 0 = theta, column 1 = theta'
+
+    # One matmul for both parameter states: z[:, 0] = X theta, z[:, 1] = X theta'.
+    z = jnp.dot(x, theta2, preferred_element_type=jnp.float32)  # (bm, 2)
+    yz = y[:, None] * z
+    # l = log sig(y z') - log sig(y z)
+    ll = log_sigmoid(yz)
+    l = (ll[:, 1] - ll[:, 0]) * mask
+
+    sum_ref[0, 0] += jnp.sum(l)
+    sum2_ref[0, 0] += jnp.sum(l * l)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def logistic_lldiff_block(x, y, mask, theta, theta_p, *, block_m=DEFAULT_BLOCK_M):
+    """Moments of l_i for a batch whose length is a multiple of block_m."""
+    m, d = x.shape
+    assert m % block_m == 0, (m, block_m)
+    theta2 = jnp.stack([theta, theta_p], axis=1)  # (D, 2)
+    grid = (m // block_m,)
+    sum_l, sum_l2 = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((d, 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x, y, mask, theta2)
+    return sum_l[0, 0], sum_l2[0, 0]
+
+
+def logistic_lldiff(x, y, mask, theta, theta_p, *, block_m=DEFAULT_BLOCK_M):
+    """Public entry: pads an arbitrary batch length up to the block size."""
+    x = pad_batch(x.astype(jnp.float32), block_m)
+    y = pad_batch(y.astype(jnp.float32), block_m)
+    mask = pad_batch(mask.astype(jnp.float32), block_m)
+    return logistic_lldiff_block(
+        x, y, mask, theta.astype(jnp.float32), theta_p.astype(jnp.float32),
+        block_m=block_m,
+    )
+
+
+def vmem_bytes(block_m, d):
+    """Analytic VMEM footprint of one grid step (perf model, DESIGN §Perf)."""
+    per_block = block_m * d + 2 * block_m  # x, y, mask
+    panel = d * 2
+    inter = block_m * 2 * 3                # z, yz, ll
+    return 4 * (per_block + panel + inter + 2)

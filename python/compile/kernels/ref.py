@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are written to be as plain and obviously-correct as possible; the
+pytest suite (python/tests/) asserts the Pallas kernels match them across
+hypothesis-generated shapes/values, and the Layer-2 graphs are built from
+the kernels, so this file anchors the whole compute path.
+"""
+
+import jax.numpy as jnp
+
+
+def _softplus(z):
+    return jnp.maximum(z, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(z)))
+
+
+def _log_sigmoid(z):
+    return -_softplus(-z)
+
+
+def _log_cosh(z):
+    a = jnp.abs(z)
+    return a + jnp.log1p(jnp.exp(-2.0 * a)) - jnp.log(2.0).astype(z.dtype)
+
+
+def logistic_l(x, y, theta):
+    """Per-datapoint logistic log-likelihood log sigmoid(y x^T theta)."""
+    return _log_sigmoid(y * (x @ theta))
+
+
+def logistic_lldiff_ref(x, y, mask, theta, theta_p):
+    l = (logistic_l(x, y, theta_p) - logistic_l(x, y, theta)) * mask
+    return jnp.sum(l), jnp.sum(l * l)
+
+
+def ica_logpdf(x, w):
+    """log p(x | W) per row of x (paper Eqn in section 6.2)."""
+    _, logdet = jnp.linalg.slogdet(w)
+    s = x @ w.T
+    return logdet - jnp.sum(2.0 * jnp.log(2.0) + 2.0 * _log_cosh(0.5 * s), axis=-1)
+
+
+def ica_lldiff_ref(x, mask, w, w_p):
+    l = (ica_logpdf(x, w_p) - ica_logpdf(x, w)) * mask
+    return jnp.sum(l), jnp.sum(l * l)
+
+
+def linreg_logpdf(x, y, theta, lam):
+    return -0.5 * lam * (y - theta * x) ** 2
+
+
+def linreg_lldiff_ref(x, y, mask, theta, theta_p, lam):
+    l = (linreg_logpdf(x, y, theta_p, lam) - linreg_logpdf(x, y, theta, lam)) * mask
+    return jnp.sum(l), jnp.sum(l * l)
+
+
+def logistic_grad_ref(x, y, mask, theta):
+    """Gradient of sum_i mask_i log sigmoid(y_i x_i^T theta) w.r.t. theta."""
+    z = y * (x @ theta)
+    sig = 1.0 / (1.0 + jnp.exp(z))  # sigmoid(-z)
+    return (mask * y * sig) @ x
+
+
+def linreg_grad_ref(x, y, mask, theta, lam):
+    """Gradient of sum_i mask_i log p(y_i | x_i, theta) w.r.t. theta."""
+    return jnp.sum(mask * lam * (y - theta * x) * x)
+
+
+def logistic_predict_ref(x, theta):
+    """p(y = +1 | x, theta) = sigmoid(x theta)."""
+    return 1.0 / (1.0 + jnp.exp(-(x @ theta)))

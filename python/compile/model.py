@@ -1,0 +1,113 @@
+"""Layer-2 JAX compute graphs, each lowered once to an HLO artifact.
+
+Every graph is a pure function of concrete-shaped arrays; the moment
+graphs call the Layer-1 Pallas kernels so they lower into the same HLO
+module the Rust runtime executes.  Gradient and predictive graphs are
+plain jnp (they are memory-bound elementwise/matvec work where XLA's own
+fusion is already optimal; DESIGN.md section 2).
+
+Conventions shared with the Rust side (rust/src/runtime/):
+  * batch capacity is fixed at lowering time; shorter logical batches are
+    padded and masked by the caller,
+  * labels y are +/- 1 floats,
+  * every graph returns a tuple (lowered with return_tuple=True) and the
+    Rust side unwraps with to_tupleN.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linreg_lldiff_block, logistic_lldiff_block
+from .kernels.ica import ica_lldiff_block_const
+from .kernels.common import DEFAULT_BLOCK_M
+
+# Fixed artifact shapes (see DESIGN.md section 2 and artifacts/manifest.txt).
+BATCH = 512            # mini-batch capacity of the moment/grad graphs
+LOGISTIC_D = 50        # feature dim of the logistic experiments (6.1/6.3)
+ICA_D = 4              # sources in the ICA experiment (6.2)
+PREDICT_T = 2048       # test-point capacity of the predictive graph
+
+
+def logistic_lldiff_graph(x, y, mask, theta, theta_p):
+    """(BATCH, D) mini-batch -> (sum l, sum l^2) via the Pallas kernel."""
+    s, s2 = logistic_lldiff_block(x, y, mask, theta, theta_p,
+                                  block_m=DEFAULT_BLOCK_M)
+    return (s, s2)
+
+
+def ica_lldiff_graph(x, mask, w, w_p, const):
+    """const = logdet(W') - logdet(W), computed by the caller (Rust LU
+    slogdet) — see kernels/ica.py for why it is not lowered here."""
+    s, s2 = ica_lldiff_block_const(x, mask, w, w_p, const[0],
+                                   block_m=DEFAULT_BLOCK_M)
+    return (s, s2)
+
+
+def linreg_lldiff_graph(x, y, mask, theta, theta_p, lam):
+    s, s2 = linreg_lldiff_block(x, y, mask, theta[0], theta_p[0], lam[0],
+                                block_m=DEFAULT_BLOCK_M)
+    return (s, s2)
+
+
+def logistic_grad_graph(x, y, mask, theta):
+    """Mini-batch gradient of the logistic log-likelihood (for SGLD/MAP)."""
+    def nll(t):
+        z = y * (x @ t)
+        ll = -(jnp.maximum(-z, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(z))))
+        return jnp.sum(mask * ll)
+
+    return (jax.grad(nll)(theta),)
+
+
+def linreg_grad_graph(x, y, mask, theta, lam):
+    """Mini-batch gradient of the 1-d linreg log-likelihood (for SGLD)."""
+    def ll(t):
+        return jnp.sum(mask * (-0.5 * lam[0] * (y - t[0] * x) ** 2))
+
+    return (jax.grad(ll)(theta),)
+
+
+def logistic_predict_graph(x, theta):
+    """p(y=+1 | x) for a panel of test points (risk evaluation)."""
+    return (jax.nn.sigmoid(x @ theta),)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+#: name -> (fn, input specs, input names).  aot.py lowers each entry.
+GRAPHS = {
+    "logistic_lldiff": (
+        logistic_lldiff_graph,
+        [_f32(BATCH, LOGISTIC_D), _f32(BATCH), _f32(BATCH),
+         _f32(LOGISTIC_D), _f32(LOGISTIC_D)],
+        ["x", "y", "mask", "theta", "theta_p"],
+    ),
+    "ica_lldiff": (
+        ica_lldiff_graph,
+        [_f32(BATCH, ICA_D), _f32(BATCH), _f32(ICA_D, ICA_D),
+         _f32(ICA_D, ICA_D), _f32(1)],
+        ["x", "mask", "w", "w_p", "const"],
+    ),
+    "linreg_lldiff": (
+        linreg_lldiff_graph,
+        [_f32(BATCH), _f32(BATCH), _f32(BATCH), _f32(1), _f32(1), _f32(1)],
+        ["x", "y", "mask", "theta", "theta_p", "lam"],
+    ),
+    "logistic_grad": (
+        logistic_grad_graph,
+        [_f32(BATCH, LOGISTIC_D), _f32(BATCH), _f32(BATCH), _f32(LOGISTIC_D)],
+        ["x", "y", "mask", "theta"],
+    ),
+    "linreg_grad": (
+        linreg_grad_graph,
+        [_f32(BATCH), _f32(BATCH), _f32(BATCH), _f32(1), _f32(1)],
+        ["x", "y", "mask", "theta", "lam"],
+    ),
+    "logistic_predict": (
+        logistic_predict_graph,
+        [_f32(PREDICT_T, LOGISTIC_D), _f32(LOGISTIC_D)],
+        ["x", "theta"],
+    ),
+}

@@ -1,0 +1,103 @@
+"""Layer-2 graph correctness: shapes and values vs the jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _logistic_inputs(rng):
+    x = rng.normal(size=(model.BATCH, model.LOGISTIC_D)).astype(np.float32)
+    y = np.where(rng.random(model.BATCH) < 0.5, -1.0, 1.0).astype(np.float32)
+    mask = (rng.random(model.BATCH) < 0.9).astype(np.float32)
+    theta = (0.1 * rng.normal(size=model.LOGISTIC_D)).astype(np.float32)
+    theta_p = (theta + 0.01 * rng.normal(size=model.LOGISTIC_D)).astype(np.float32)
+    return x, y, mask, theta, theta_p
+
+
+def test_logistic_lldiff_graph_matches_ref():
+    x, y, mask, theta, theta_p = _logistic_inputs(_rng(0))
+    s, s2 = model.logistic_lldiff_graph(x, y, mask, theta, theta_p)
+    rs, rs2 = ref.logistic_lldiff_ref(x, y, mask, theta, theta_p)
+    np.testing.assert_allclose(s, rs, rtol=3e-4, atol=1e-4)
+    np.testing.assert_allclose(s2, rs2, rtol=3e-4, atol=1e-4)
+
+
+def test_ica_lldiff_graph_matches_ref():
+    rng = _rng(1)
+    x = rng.normal(size=(model.BATCH, model.ICA_D)).astype(np.float32)
+    mask = np.ones(model.BATCH, np.float32)
+    q, r = np.linalg.qr(rng.normal(size=(model.ICA_D, model.ICA_D)))
+    w = (q * np.sign(np.diag(r))).astype(np.float32)
+    q, r = np.linalg.qr(rng.normal(size=(model.ICA_D, model.ICA_D)))
+    w_p = (q * np.sign(np.diag(r))).astype(np.float32)
+    const = np.array(
+        [np.linalg.slogdet(w_p)[1] - np.linalg.slogdet(w)[1]], np.float32
+    )
+    s, s2 = model.ica_lldiff_graph(x, mask, w, w_p, const)
+    rs, rs2 = ref.ica_lldiff_ref(x, mask, w, w_p)
+    np.testing.assert_allclose(s, rs, rtol=3e-4, atol=5e-4)
+    np.testing.assert_allclose(s2, rs2, rtol=3e-4, atol=5e-4)
+
+
+def test_linreg_lldiff_graph_matches_ref():
+    rng = _rng(2)
+    x = rng.normal(size=model.BATCH).astype(np.float32)
+    y = (0.5 * x + rng.normal(size=model.BATCH) / 3.0).astype(np.float32)
+    mask = np.ones(model.BATCH, np.float32)
+    s, s2 = model.linreg_lldiff_graph(
+        x, y, mask,
+        np.array([0.4], np.float32), np.array([0.55], np.float32),
+        np.array([3.0], np.float32),
+    )
+    rs, rs2 = ref.linreg_lldiff_ref(x, y, mask, 0.4, 0.55, 3.0)
+    np.testing.assert_allclose(s, rs, rtol=3e-4, atol=1e-4)
+    np.testing.assert_allclose(s2, rs2, rtol=3e-4, atol=1e-4)
+
+
+def test_logistic_grad_graph_matches_ref():
+    x, y, mask, theta, _ = _logistic_inputs(_rng(3))
+    (g,) = model.logistic_grad_graph(x, y, mask, theta)
+    rg = ref.logistic_grad_ref(x, y, mask, theta)
+    assert g.shape == (model.LOGISTIC_D,)
+    np.testing.assert_allclose(g, rg, rtol=1e-4, atol=1e-4)
+
+
+def test_linreg_grad_graph_matches_ref():
+    rng = _rng(4)
+    x = rng.normal(size=model.BATCH).astype(np.float32)
+    y = (0.5 * x + rng.normal(size=model.BATCH) / 3.0).astype(np.float32)
+    mask = (rng.random(model.BATCH) < 0.8).astype(np.float32)
+    (g,) = model.linreg_grad_graph(
+        x, y, mask, np.array([0.3], np.float32), np.array([3.0], np.float32)
+    )
+    rg = ref.linreg_grad_ref(x, y, mask, 0.3, 3.0)
+    np.testing.assert_allclose(g[0], rg, rtol=1e-4, atol=1e-4)
+
+
+def test_logistic_predict_graph_matches_ref():
+    rng = _rng(5)
+    x = rng.normal(size=(model.PREDICT_T, model.LOGISTIC_D)).astype(np.float32)
+    theta = (0.1 * rng.normal(size=model.LOGISTIC_D)).astype(np.float32)
+    (p,) = model.logistic_predict_graph(x, theta)
+    rp = ref.logistic_predict_ref(x, theta)
+    assert p.shape == (model.PREDICT_T,)
+    np.testing.assert_allclose(p, rp, rtol=1e-5, atol=1e-6)
+    assert float(jnp.min(p)) >= 0.0 and float(jnp.max(p)) <= 1.0
+
+
+def test_graph_registry_shapes_consistent():
+    """Every GRAPHS entry must eval_shape without error and name all args."""
+    for name, (fn, specs, arg_names) in model.GRAPHS.items():
+        assert len(specs) == len(arg_names), name
+        outs = jax.eval_shape(fn, *specs)
+        assert len(outs) >= 1, name
+        for o in outs:
+            assert o.dtype == jnp.float32, name

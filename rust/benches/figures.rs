@@ -1,0 +1,45 @@
+//! Figure-regeneration bench (`cargo bench --bench figures`): runs every
+//! paper-figure driver at a reduced scale, timing each, and prints the
+//! headline shape checks. Full-scale runs: `austerity fig all --scale 1`.
+//!
+//! Plain binary (criterion is not in the offline crate set); scale can be
+//! overridden with AUSTERITY_BENCH_SCALE (default 0.08).
+
+use austerity::exp::{run_figure, Scale, ALL_FIGURES};
+
+fn main() {
+    // `cargo bench -- --quick` style filtering: any args = figure names
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let scale = Scale(
+        std::env::var("AUSTERITY_BENCH_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.08),
+    );
+    let names: Vec<&str> = if args.is_empty() {
+        ALL_FIGURES.to_vec()
+    } else {
+        ALL_FIGURES
+            .iter()
+            .copied()
+            .filter(|n| args.iter().any(|a| a == n))
+            .collect()
+    };
+
+    println!("figure bench at scale {} (AUSTERITY_BENCH_SCALE to change)", scale.0);
+    let total = std::time::Instant::now();
+    for name in names {
+        let t0 = std::time::Instant::now();
+        let ok = run_figure(name, scale);
+        assert!(ok, "unknown figure {name}");
+        println!("== {name} done in {:.1}s ==\n", t0.elapsed().as_secs_f64());
+    }
+    println!(
+        "all figures regenerated in {:.1}s; CSVs under {}",
+        total.elapsed().as_secs_f64(),
+        austerity::exp::figures_dir().display()
+    );
+}

@@ -1,0 +1,135 @@
+//! Hot-path micro-benchmarks (`cargo bench --bench hotpath`): the
+//! components on the per-MH-step critical path, timed with a simple
+//! median-of-runs harness (criterion is not in the offline crate set).
+//!
+//! Layers:
+//!   L3 native moments   — fused lldiff moment pass (the default backend)
+//!   L3 sequential test  — one full approximate MH decision
+//!   L3 t-CDF / scheduler / DP — supporting substrate
+//!   L1/L2 via PJRT      — the AOT Pallas kernel executed through PJRT
+
+use std::time::Instant;
+
+use austerity::coordinator::austerity::{seq_mh_test, SeqTestConfig};
+use austerity::coordinator::dp::analyze_pocock;
+use austerity::coordinator::scheduler::MinibatchScheduler;
+use austerity::models::traits::LlDiffModel;
+use austerity::runtime::{PjrtLogistic, PjrtRuntime};
+use austerity::stats::student_t::t_sf;
+use austerity::stats::Pcg64;
+
+/// Median wall time of `iters` calls, repeated 7 times.
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters.div_ceil(4).max(1) {
+        f();
+    }
+    let mut times: Vec<f64> = (0..7)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            t0.elapsed().as_secs_f64() / iters as f64
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = times[3];
+    let (val, unit) = if med < 1e-6 {
+        (med * 1e9, "ns")
+    } else if med < 1e-3 {
+        (med * 1e6, "us")
+    } else {
+        (med * 1e3, "ms")
+    };
+    println!("{name:<44} {val:>9.2} {unit}/iter");
+    med
+}
+
+fn main() {
+    let n = 12_214usize;
+    let model = austerity::exp::population::mnist_like_model(n, 42);
+    let mut rng = Pcg64::seeded(0);
+    let theta = model.map_estimate(60);
+    let theta_p: Vec<f64> = theta.iter().map(|t| t + 0.01 * rng.normal()).collect();
+    let idx: Vec<usize> = (0..500).map(|_| rng.below(n)).collect();
+
+    println!("\n-- L3 native hot path (N = {n}, D = 50, m = 500) --");
+    let t_mom = bench("lldiff_moments (500 x 50 fused)", 200, || {
+        std::hint::black_box(model.lldiff_moments(&idx, &theta, &theta_p));
+    });
+    println!(
+        "{:<44} {:>9.2} Melem/s",
+        "  -> throughput",
+        500.0 * 50.0 / t_mom / 1e6
+    );
+
+    let cfg = SeqTestConfig::new(0.05, 500);
+    let mut sched = MinibatchScheduler::new(n);
+    let mut buf = Vec::new();
+    bench("seq_mh_test (full decision, eps=0.05)", 100, || {
+        let mu0 = (rng.uniform_pos().ln()) / n as f64;
+        std::hint::black_box(seq_mh_test(
+            &model, &theta, &theta_p, mu0, &cfg, &mut sched, &mut rng, &mut buf,
+        ));
+    });
+
+    println!("\n-- L3 substrate --");
+    bench("student-t sf (nu = 499)", 10_000, || {
+        std::hint::black_box(t_sf(1.7, 499.0));
+    });
+    bench("scheduler next_batch(500)", 2_000, || {
+        sched.reset();
+        std::hint::black_box(sched.next_batch(500, &mut rng));
+    });
+    bench("random-walk DP (m=500, L=256)", 5, || {
+        std::hint::black_box(analyze_pocock(0.5, 500, n, 0.05, 256));
+    });
+
+    if PjrtRuntime::default_dir().join("manifest.txt").exists() {
+        println!("\n-- L1/L2 via PJRT (AOT Pallas kernel, batch 512) --");
+        let rt = PjrtRuntime::new(&PjrtRuntime::default_dir()).expect("runtime");
+        let pjrt = PjrtLogistic::new(&model, rt).expect("backend");
+        let t_pjrt = bench("pjrt lldiff_moments (512-cap kernel)", 50, || {
+            std::hint::black_box(pjrt.lldiff_moments(&idx, &theta, &theta_p));
+        });
+        println!(
+            "{:<44} {:>9.2}x native",
+            "  -> dispatch overhead ratio",
+            t_pjrt / t_mom
+        );
+    } else {
+        println!("\n(run `make artifacts` to bench the PJRT path)");
+    }
+
+    println!("\n-- end-to-end step rate --");
+    let mode = austerity::coordinator::MhMode::approx(0.05, 500);
+    let mut scratch = austerity::coordinator::MhScratch::new(n);
+    let kernel = austerity::samplers::GaussianRandomWalk::new(0.01, 10.0);
+    let mut cur = theta.clone();
+    bench("mh_step approx (propose + decide)", 200, || {
+        use austerity::models::traits::ProposalKernel;
+        let prop = kernel.propose(&cur, &mut rng);
+        std::hint::black_box(austerity::coordinator::mh_step(
+            &model,
+            &mut cur,
+            prop,
+            &mode,
+            &mut scratch,
+            &mut rng,
+        ));
+    });
+    let exact = austerity::coordinator::MhMode::Exact;
+    bench("mh_step exact (full scan)", 20, || {
+        use austerity::models::traits::ProposalKernel;
+        let prop = kernel.propose(&cur, &mut rng);
+        std::hint::black_box(austerity::coordinator::mh_step(
+            &model,
+            &mut cur,
+            prop,
+            &exact,
+            &mut scratch,
+            &mut rng,
+        ));
+    });
+}

@@ -1,0 +1,180 @@
+//! Adaptive epsilon — the paper's future-work extension (§7):
+//!
+//! > "a better algorithm can be obtained by adapting this threshold over
+//! >  time. An adaptive algorithm can tune bias and variance
+//! >  contributions in such a way that at every moment our risk (the sum
+//! >  of squared bias and variance) is as low as possible."
+//!
+//! Risk = B^2 + V with B growing ~linearly in the acceptance error
+//! (Theorem 1, and Delta itself is ~linear in eps for small eps) and
+//! V ~ sigma^2 tau / t after t effective samples. Minimizing
+//! `(c1 eps)^2 + c2 / t` over eps at a given t — subject to the fact
+//! that smaller eps costs more data per step, so t grows more slowly —
+//! yields an annealing schedule eps_t ~ t^(-1/2): both terms then decay
+//! together at O(1/t). `EpsSchedule::Anneal` implements exactly that
+//! (with a floor), and `run_adaptive_chain` re-arms the sequential test
+//! per step. The ablation bench (`exp::ablation`) compares fixed
+//! epsilons against the schedule on the logistic risk curve.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::chain::{Budget, ChainStats, Sample};
+use crate::coordinator::mh::{mh_step, MhMode, MhScratch};
+use crate::models::traits::{LlDiffModel, ProposalKernel};
+use crate::stats::Pcg64;
+
+/// Epsilon as a function of the step index.
+#[derive(Clone, Debug)]
+pub enum EpsSchedule {
+    Fixed(f64),
+    /// eps_t = max(eps_min, eps0 * (tau / (tau + t))^gamma);
+    /// gamma = 0.5 equalizes the bias^2 and variance decay rates.
+    Anneal { eps0: f64, eps_min: f64, tau: f64, gamma: f64 },
+}
+
+impl EpsSchedule {
+    /// Default annealing: start loose (0.2), floor at 0.005, gamma 1/2.
+    pub fn default_anneal() -> Self {
+        EpsSchedule::Anneal { eps0: 0.2, eps_min: 0.005, tau: 100.0, gamma: 0.5 }
+    }
+
+    pub fn eps_at(&self, step: usize) -> f64 {
+        match *self {
+            EpsSchedule::Fixed(e) => e,
+            EpsSchedule::Anneal { eps0, eps_min, tau, gamma } => {
+                (eps0 * (tau / (tau + step as f64)).powf(gamma)).max(eps_min)
+            }
+        }
+    }
+}
+
+/// `run_chain` with a per-step epsilon schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn run_adaptive_chain<M, K, F>(
+    model: &M,
+    kernel: &K,
+    schedule: &EpsSchedule,
+    batch: usize,
+    init: M::Param,
+    budget: Budget,
+    burn_in: usize,
+    thin: usize,
+    mut f: F,
+    rng: &mut Pcg64,
+) -> (Vec<Sample>, ChainStats)
+where
+    M: LlDiffModel,
+    K: ProposalKernel<M::Param>,
+    F: FnMut(&M::Param) -> f64,
+{
+    assert!(thin >= 1);
+    let mut scratch = MhScratch::new(model.n());
+    let mut cur = init;
+    let mut stats = ChainStats::default();
+    let mut samples = Vec::new();
+    let start = Instant::now();
+
+    loop {
+        match budget {
+            Budget::Steps(s) => {
+                if stats.steps >= s {
+                    break;
+                }
+            }
+            Budget::Wall(d) => {
+                if start.elapsed() >= d {
+                    break;
+                }
+            }
+        }
+        let mode = MhMode::approx(schedule.eps_at(stats.steps), batch);
+        let proposal = kernel.propose(&cur, rng);
+        let info = mh_step(model, &mut cur, proposal, &mode, &mut scratch, rng);
+        stats.steps += 1;
+        stats.accepted += info.accepted as usize;
+        stats.data_used += info.n_used as u64;
+        if stats.steps > burn_in && (stats.steps - burn_in) % thin == 0 {
+            samples.push(Sample {
+                value: f(&cur),
+                at_secs: start.elapsed().as_secs_f64(),
+                at_data: stats.data_used,
+            });
+        }
+    }
+    stats.wall = start.elapsed();
+    let _ = Duration::from_secs(0);
+    (samples, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_class_gaussian;
+    use crate::models::LogisticModel;
+    use crate::samplers::GaussianRandomWalk;
+
+    #[test]
+    fn schedule_monotone_decreasing_with_floor() {
+        let s = EpsSchedule::default_anneal();
+        let mut prev = f64::INFINITY;
+        for step in [0usize, 10, 100, 1_000, 100_000] {
+            let e = s.eps_at(step);
+            assert!(e <= prev + 1e-15);
+            assert!(e >= 0.005 - 1e-15);
+            prev = e;
+        }
+        assert_eq!(s.eps_at(10_000_000), 0.005);
+        assert_eq!(EpsSchedule::Fixed(0.1).eps_at(12345), 0.1);
+    }
+
+    #[test]
+    fn adaptive_chain_uses_more_data_over_time() {
+        let model = LogisticModel::new(two_class_gaussian(8_000, 6, 1.2, 0), 10.0);
+        let init = model.map_estimate(40);
+        let kernel = GaussianRandomWalk::new(0.02, 10.0);
+        let mut rng = Pcg64::seeded(0);
+        let schedule =
+            EpsSchedule::Anneal { eps0: 0.3, eps_min: 0.001, tau: 30.0, gamma: 1.0 };
+        let (samples, stats) = run_adaptive_chain(
+            &model,
+            &kernel,
+            &schedule,
+            400,
+            init,
+            Budget::Steps(600),
+            0,
+            1,
+            |_| 0.0,
+            &mut rng,
+        );
+        assert_eq!(stats.steps, 600);
+        // early chunk uses less data per step than the late chunk
+        let early = samples[99].at_data as f64 / 100.0;
+        let late = (samples[599].at_data - samples[499].at_data) as f64 / 100.0;
+        assert!(late > early, "early {early} late {late}");
+    }
+
+    #[test]
+    fn adaptive_matches_fixed_when_schedule_constant() {
+        let model = LogisticModel::new(two_class_gaussian(4_000, 4, 1.2, 1), 10.0);
+        let init = model.map_estimate(30);
+        let kernel = GaussianRandomWalk::new(0.02, 10.0);
+        let run = |sched: EpsSchedule| {
+            let mut rng = Pcg64::seeded(7);
+            run_adaptive_chain(
+                &model, &kernel, &sched, 400, init.clone(),
+                Budget::Steps(200), 0, 1, |t| t[0], &mut rng,
+            )
+        };
+        let (a, sa) = run(EpsSchedule::Fixed(0.05));
+        let (b, sb) = run(EpsSchedule::Anneal {
+            eps0: 0.05,
+            eps_min: 0.05,
+            tau: 1.0,
+            gamma: 0.5,
+        });
+        assert_eq!(sa.accepted, sb.accepted);
+        assert_eq!(sa.data_used, sb.data_used);
+        assert_eq!(a.last().unwrap().value, b.last().unwrap().value);
+    }
+}

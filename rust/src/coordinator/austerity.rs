@@ -1,0 +1,313 @@
+//! The approximate Metropolis-Hastings test (paper Alg. 1) — the core
+//! contribution: a sequential hypothesis test that decides accept/reject
+//! from a growing without-replacement sample of log-likelihood
+//! differences, stopping as soon as the Student-t tail probability
+//! `delta = 1 - F_{n-1}(|t|)` drops below the knob `epsilon`.
+
+use crate::coordinator::scheduler::MinibatchScheduler;
+use crate::models::traits::LlDiffModel;
+use crate::stats::student_t::{t_sf, t_inv};
+use crate::stats::welford::MomentAccumulator;
+use crate::stats::Pcg64;
+
+/// Per-stage decision bound.
+#[derive(Clone, Debug)]
+pub enum BoundSeq {
+    /// Constant error threshold epsilon per stage (Pocock design — the
+    /// paper's default knob).
+    Pocock { eps: f64 },
+    /// Wang-Tsiatis family: z-bound G_j = g0 * pi_j^delta. delta = 0 is
+    /// Pocock with g0 = Phi^{-1}(1 - eps); delta = -0.5 is
+    /// O'Brien-Fleming (supp. D).
+    WangTsiatis { g0: f64, delta: f64 },
+}
+
+impl BoundSeq {
+    /// The per-stage error threshold eps_j given the data proportion pi_j.
+    /// (For a z-bound G_j this is the one-sided tail Phi(-G_j); the
+    /// runtime test then compares the Student-t tail against it, which
+    /// recovers |z| > G_j under the paper's CLT assumption.)
+    pub fn eps_at(&self, pi_j: f64) -> f64 {
+        match *self {
+            BoundSeq::Pocock { eps } => eps,
+            BoundSeq::WangTsiatis { g0, delta } => {
+                let g = g0 * pi_j.powf(delta);
+                crate::stats::normal::phi_sf(g)
+            }
+        }
+    }
+
+    /// The per-stage z-bound G_j (used by the DP error analysis).
+    pub fn bound_at(&self, pi_j: f64) -> f64 {
+        match *self {
+            BoundSeq::Pocock { eps } => crate::stats::normal::phi_inv(1.0 - eps),
+            BoundSeq::WangTsiatis { g0, delta } => g0 * pi_j.powf(delta),
+        }
+    }
+}
+
+/// Configuration of the sequential test.
+#[derive(Clone, Debug)]
+pub struct SeqTestConfig {
+    /// Mini-batch increment m (paper recommends ~500).
+    pub batch_size: usize,
+    /// Decision bound sequence (knob epsilon).
+    pub bound: BoundSeq,
+}
+
+impl SeqTestConfig {
+    pub fn new(eps: f64, batch_size: usize) -> Self {
+        // eps = 0.5 is meaningful (paper §6.4: always decide on the first
+        // mini-batch); anything above is a no-op test.
+        assert!((0.0..=0.5).contains(&eps), "epsilon in [0, 0.5]: got {eps}");
+        assert!(batch_size >= 2);
+        SeqTestConfig { batch_size, bound: BoundSeq::Pocock { eps } }
+    }
+}
+
+/// Outcome of one sequential test.
+#[derive(Clone, Copy, Debug)]
+pub struct SeqTestOutcome {
+    pub accept: bool,
+    /// Datapoints consumed.
+    pub n_used: usize,
+    /// Mini-batch stages run.
+    pub stages: usize,
+    /// Final sample mean of the l_i.
+    pub mean: f64,
+    /// Final test statistic.
+    pub t_stat: f64,
+}
+
+/// Run the sequential approximate MH test (Alg. 1).
+///
+/// `mu0` is the threshold from Eqn. 2 (computed by the caller from u, the
+/// prior ratio and the proposal ratio). The scheduler must belong to the
+/// same population as `model` (same N) and is reset here.
+pub fn seq_mh_test<M: LlDiffModel>(
+    model: &M,
+    cur: &M::Param,
+    prop: &M::Param,
+    mu0: f64,
+    cfg: &SeqTestConfig,
+    sched: &mut MinibatchScheduler,
+    rng: &mut Pcg64,
+    idx_buf: &mut Vec<usize>,
+) -> SeqTestOutcome {
+    debug_assert_eq!(model.n(), sched.n());
+    let n_total = model.n();
+    sched.reset();
+    let mut acc = MomentAccumulator::new();
+    let mut stages = 0usize;
+
+    loop {
+        let batch = sched.next_batch(cfg.batch_size, rng);
+        debug_assert!(!batch.is_empty(), "population exhausted without decision");
+        idx_buf.clear();
+        idx_buf.extend(batch.iter().map(|&i| i as usize));
+        let (s, s2) = model.lldiff_moments(idx_buf, cur, prop);
+        acc.add_batch(s, s2, idx_buf.len());
+        stages += 1;
+
+        let n = acc.n();
+        let t = acc.t_statistic(mu0, n_total);
+        // delta = 1 - F_{n-1}(|t|); infinite t (all data, s = 0) gives 0.
+        let delta = t_sf(t.abs(), (n - 1).max(1) as f64);
+        let pi_j = n as f64 / n_total as f64;
+        let eps_j = cfg.bound.eps_at(pi_j);
+
+        if delta < eps_j || n == n_total {
+            return SeqTestOutcome {
+                accept: acc.mean() > mu0,
+                n_used: n,
+                stages,
+                mean: acc.mean(),
+                t_stat: t,
+            };
+        }
+    }
+}
+
+/// The z-quantile matching a per-stage epsilon with nu dof (diagnostic;
+/// the runtime test uses the tail probability directly).
+pub fn t_threshold(eps: f64, nu: f64) -> f64 {
+    t_inv(1.0 - eps, nu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::traits::testutil::FixedPopulation;
+    use crate::testkit;
+
+    fn run(
+        ls: Vec<f64>,
+        mu0: f64,
+        eps: f64,
+        m: usize,
+        seed: u64,
+    ) -> SeqTestOutcome {
+        let model = FixedPopulation { ls };
+        let mut sched = MinibatchScheduler::new(model.n());
+        let mut rng = Pcg64::seeded(seed);
+        let mut buf = Vec::new();
+        seq_mh_test(
+            &model,
+            &(),
+            &(),
+            mu0,
+            &SeqTestConfig::new(eps, m),
+            &mut sched,
+            &mut rng,
+            &mut buf,
+        )
+    }
+
+    #[test]
+    fn obvious_accept_decides_early() {
+        // population mean 1.0, tiny spread, mu0 = 0 -> immediate accept.
+        let mut rng = Pcg64::seeded(0);
+        let ls: Vec<f64> = (0..10_000).map(|_| 1.0 + 0.01 * rng.normal()).collect();
+        let out = run(ls, 0.0, 0.05, 500, 1);
+        assert!(out.accept);
+        assert_eq!(out.stages, 1);
+        assert_eq!(out.n_used, 500);
+    }
+
+    #[test]
+    fn obvious_reject_decides_early() {
+        let mut rng = Pcg64::seeded(1);
+        let ls: Vec<f64> = (0..10_000).map(|_| -0.5 + 0.01 * rng.normal()).collect();
+        let out = run(ls, 0.0, 0.05, 500, 2);
+        assert!(!out.accept);
+        assert_eq!(out.stages, 1);
+    }
+
+    #[test]
+    fn ambiguous_case_consumes_more_data() {
+        // mean exactly at mu0: needs all (or nearly all) the data.
+        let mut rng = Pcg64::seeded(2);
+        let ls: Vec<f64> = (0..5_000).map(|_| rng.normal()).collect();
+        let mean = ls.iter().sum::<f64>() / ls.len() as f64;
+        let out = run(ls, mean, 0.01, 500, 3);
+        assert!(out.n_used > 2_000, "used {}", out.n_used);
+    }
+
+    #[test]
+    fn exhausting_data_matches_exact_decision() {
+        // When the test runs to n = N the decision must equal mean > mu0.
+        testkit::forall(64, |rng| {
+            let n = rng.below(2_000) + 100;
+            let ls: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mean = ls.iter().sum::<f64>() / n as f64;
+            // mu0 very near the true mean forces a full scan
+            let mu0 = mean + 1e-12;
+            let model = FixedPopulation { ls };
+            let mut sched = MinibatchScheduler::new(n);
+            let mut buf = Vec::new();
+            let out = seq_mh_test(
+                &model,
+                &(),
+                &(),
+                mu0,
+                &SeqTestConfig::new(1e-9, 100),
+                &mut sched,
+                rng,
+                &mut buf,
+            );
+            assert_eq!(out.n_used, n);
+            assert_eq!(out.accept, mean > mu0, "exact decision mismatch");
+        });
+    }
+
+    #[test]
+    fn epsilon_zero_always_scans_everything() {
+        let mut rng = Pcg64::seeded(4);
+        let ls: Vec<f64> = (0..3_000).map(|_| 2.0 + rng.normal()).collect();
+        let out = run(ls, 0.0, 0.0, 500, 5);
+        assert_eq!(out.n_used, 3_000);
+        assert!(out.accept);
+    }
+
+    #[test]
+    fn larger_epsilon_uses_no_more_data() {
+        // Monotonicity: a looser test can only stop earlier (same draws).
+        testkit::forall(32, |rng| {
+            let n = 4_000;
+            let shift = rng.normal_scaled(0.0, 0.05);
+            let ls: Vec<f64> = (0..n).map(|_| shift + rng.normal()).collect();
+            let seed = rng.next_u64();
+            let mut used = Vec::new();
+            for &eps in &[0.01, 0.05, 0.2] {
+                let model = FixedPopulation { ls: ls.clone() };
+                let mut sched = MinibatchScheduler::new(n);
+                let mut r = Pcg64::seeded(seed);
+                let mut buf = Vec::new();
+                let out = seq_mh_test(
+                    &model,
+                    &(),
+                    &(),
+                    0.0,
+                    &SeqTestConfig::new(eps, 400),
+                    &mut sched,
+                    &mut r,
+                    &mut buf,
+                );
+                used.push(out.n_used);
+            }
+            assert!(used[0] >= used[1] && used[1] >= used[2], "{used:?}");
+        });
+    }
+
+    #[test]
+    fn decision_error_rate_bounded_by_analysis() {
+        // For a population with mu clearly != mu0, repeated tests almost
+        // always agree with the exact decision.
+        let mut rng = Pcg64::seeded(6);
+        let n = 20_000;
+        let ls: Vec<f64> = (0..n).map(|_| 0.05 + rng.normal()).collect();
+        let mean = ls.iter().sum::<f64>() / n as f64;
+        let exact = mean > 0.0;
+        let model = FixedPopulation { ls };
+        let mut sched = MinibatchScheduler::new(n);
+        let mut buf = Vec::new();
+        let mut wrong = 0;
+        let trials = 200;
+        for s in 0..trials {
+            let mut r = Pcg64::new(100 + s, 0);
+            let out = seq_mh_test(
+                &model,
+                &(),
+                &(),
+                0.0,
+                &SeqTestConfig::new(0.05, 500),
+                &mut sched,
+                &mut r,
+                &mut buf,
+            );
+            if out.accept != exact {
+                wrong += 1;
+            }
+        }
+        // sequential error is bounded by a small multiple of eps in the
+        // non-worst case; allow generous slack for test stability
+        assert!(wrong < 30, "wrong = {wrong}/{trials}");
+    }
+
+    #[test]
+    fn wang_tsiatis_bounds_shrink_with_pi_for_obf() {
+        let b = BoundSeq::WangTsiatis { g0: 2.0, delta: -0.5 };
+        assert!(b.bound_at(0.04) > b.bound_at(0.5));
+        assert!(b.bound_at(0.5) > b.bound_at(1.0));
+        // eps_at inverts through the normal tail
+        assert!(b.eps_at(0.04) < b.eps_at(1.0));
+    }
+
+    #[test]
+    fn pocock_bound_constant() {
+        let b = BoundSeq::Pocock { eps: 0.05 };
+        assert_eq!(b.eps_at(0.1), 0.05);
+        let g = b.bound_at(0.3);
+        assert!((crate::stats::normal::phi_sf(g) - 0.05).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,245 @@
+//! Error in the MH acceptance probability (paper Eqn. 6 / supp. B):
+//!
+//!   Delta(theta, theta') = int_{Pa}^{1} E(mu_std(u)) du
+//!                        - int_{0}^{Pa} E(mu_std(u)) du
+//!
+//! where mu_std(u) = (mu - mu0(u)) sqrt(N-1) / sigma_l and
+//! Pa = min(1, exp(N mu - c)) with c the prior/proposal log correction.
+//! E(mu_std) comes from the random-walk DP; since a design search
+//! evaluates Delta at many (mu, sigma_l) pairs we precompute E and pi_bar
+//! on a |mu_std| grid once per test configuration and interpolate.
+
+use crate::coordinator::dp::{analyze_walk, uniform_pis};
+use crate::stats::quadrature::gauss_legendre_composite;
+
+/// Precomputed E(|mu_std|) and pi_bar(|mu_std|) for one test config.
+/// Both are even functions of mu_std (the walk mirrors), so the grid
+/// covers [0, mu_max].
+#[derive(Clone, Debug)]
+pub struct SeqTestTable {
+    mu_grid: Vec<f64>,
+    err: Vec<f64>,
+    pi: Vec<f64>,
+    /// pi_bar limit for |mu_std| -> inf (one mini-batch always decides).
+    pi_floor: f64,
+}
+
+impl SeqTestTable {
+    /// Build the table for a Pocock test with batch `m`, population `n`,
+    /// knob `eps`. `points` grid nodes on [0, mu_max], DP grid `grid`.
+    pub fn build(m: usize, n: usize, eps: f64, mu_max: f64, points: usize, grid: usize) -> Self {
+        let pis = uniform_pis(m, n);
+        let g = crate::stats::normal::phi_inv(1.0 - eps.clamp(1e-12, 0.5 - 1e-12));
+        let bounds = vec![g; pis.len().saturating_sub(1)];
+        Self::build_with_bounds(&pis, &bounds, mu_max, points, grid)
+    }
+
+    /// Build for arbitrary stage proportions and bounds.
+    pub fn build_with_bounds(
+        pis: &[f64],
+        bounds: &[f64],
+        mu_max: f64,
+        points: usize,
+        grid: usize,
+    ) -> Self {
+        assert!(points >= 2 && mu_max > 0.0);
+        // Quadratic spacing: dense near 0 where E varies fastest.
+        let mu_grid: Vec<f64> = (0..points)
+            .map(|i| {
+                let t = i as f64 / (points - 1) as f64;
+                mu_max * t * t
+            })
+            .collect();
+        let mut err = Vec::with_capacity(points);
+        let mut pi = Vec::with_capacity(points);
+        for &mu in &mu_grid {
+            let a = analyze_walk(mu, pis, bounds, grid);
+            err.push(a.error);
+            pi.push(a.expected_pi);
+        }
+        let pi_floor = pis.first().copied().unwrap_or(1.0);
+        SeqTestTable { mu_grid, err, pi, pi_floor }
+    }
+
+    fn interp(&self, xs: &[f64], mu_std: f64, tail: f64) -> f64 {
+        let a = mu_std.abs();
+        let grid = &self.mu_grid;
+        if a >= *grid.last().unwrap() {
+            return tail;
+        }
+        // binary search for the segment
+        let mut lo = 0usize;
+        let mut hi = grid.len() - 1;
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if grid[mid] <= a {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let t = (a - grid[lo]) / (grid[hi] - grid[lo]);
+        xs[lo] * (1.0 - t) + xs[hi] * t
+    }
+
+    /// Interpolated sequential-test error E(mu_std).
+    pub fn error(&self, mu_std: f64) -> f64 {
+        self.interp(&self.err, mu_std, 0.0)
+    }
+
+    /// Interpolated expected data usage pi_bar(mu_std).
+    pub fn data_usage(&self, mu_std: f64) -> f64 {
+        self.interp(&self.pi, mu_std, self.pi_floor)
+    }
+}
+
+/// One (theta, theta') pair reduced to the sufficient statistics the
+/// analysis needs: population mean mu, population std sigma_l, and the
+/// prior/proposal log correction c (so mu0(u) = (ln u + c)/N).
+#[derive(Clone, Copy, Debug)]
+pub struct PairStats {
+    pub mu: f64,
+    pub sigma_l: f64,
+    pub log_correction: f64,
+}
+
+/// Exact acceptance probability Pa = min(1, exp(N mu - c)).
+pub fn exact_accept_prob(n: usize, p: &PairStats) -> f64 {
+    let log_pa = n as f64 * p.mu - p.log_correction;
+    if log_pa >= 0.0 {
+        1.0
+    } else {
+        log_pa.exp()
+    }
+}
+
+/// mu_std(u) for a given uniform draw u (paper §5.1).
+pub fn mu_std_of_u(n: usize, p: &PairStats, u: f64) -> f64 {
+    let mu0 = (u.ln() + p.log_correction) / n as f64;
+    if p.sigma_l <= 0.0 {
+        return if p.mu > mu0 { f64::INFINITY } else { f64::NEG_INFINITY };
+    }
+    (p.mu - mu0) * ((n as f64 - 1.0).sqrt()) / p.sigma_l
+}
+
+/// Delta, the signed error in the acceptance probability (Eqn. 6), via
+/// composite Gauss-Legendre on each side of the kink at Pa.
+pub fn delta_accept_prob(n: usize, p: &PairStats, table: &SeqTestTable, panels: usize) -> f64 {
+    let pa = exact_accept_prob(n, p);
+    let e = |u: f64| table.error(mu_std_of_u(n, p, u));
+    let upper = gauss_legendre_composite(pa, 1.0, panels.max(1), e);
+    let lower = gauss_legendre_composite(0.0, pa, panels.max(1), e);
+    upper - lower
+}
+
+/// Approximate acceptance probability P_{a,eps} = Pa + Delta.
+pub fn approx_accept_prob(n: usize, p: &PairStats, table: &SeqTestTable, panels: usize) -> f64 {
+    (exact_accept_prob(n, p) + delta_accept_prob(n, p, table, panels)).clamp(0.0, 1.0)
+}
+
+/// Expected data usage marginalized over u: E_u[pi_bar(mu_std(u))].
+pub fn expected_data_usage(n: usize, p: &PairStats, table: &SeqTestTable, panels: usize) -> f64 {
+    let f = |u: f64| table.data_usage(mu_std_of_u(n, p, u));
+    let pa = exact_accept_prob(n, p);
+    // split at the kink for accuracy
+    gauss_legendre_composite(0.0, pa, panels.max(1), f)
+        + gauss_legendre_composite(pa, 1.0, panels.max(1), f)
+}
+
+/// Average |E| over u (the blue-cross series of supp. Fig. 11).
+pub fn mean_abs_error(n: usize, p: &PairStats, table: &SeqTestTable, panels: usize) -> f64 {
+    let e = |u: f64| table.error(mu_std_of_u(n, p, u));
+    let pa = exact_accept_prob(n, p);
+    gauss_legendre_composite(0.0, pa, panels.max(1), e)
+        + gauss_legendre_composite(pa, 1.0, panels.max(1), e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> SeqTestTable {
+        SeqTestTable::build(500, 12_214, 0.05, 12.0, 25, 128)
+    }
+
+    #[test]
+    fn table_error_decreasing_in_mu() {
+        let t = table();
+        assert!(t.error(0.0) > t.error(1.0));
+        assert!(t.error(1.0) > t.error(5.0));
+        assert!(t.error(20.0) == 0.0); // beyond grid -> 0 tail
+        // symmetry
+        assert!((t.error(-2.0) - t.error(2.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn table_matches_direct_dp_at_nodes() {
+        let t = table();
+        let direct = crate::coordinator::dp::analyze_pocock(3.0, 500, 12_214, 0.05, 128);
+        assert!((t.error(3.0) - direct.error).abs() < 5e-3);
+        assert!((t.data_usage(3.0) - direct.expected_pi).abs() < 2e-2);
+    }
+
+    #[test]
+    fn exact_accept_prob_formula() {
+        let p = PairStats { mu: 0.0, sigma_l: 1.0, log_correction: 0.0 };
+        assert_eq!(exact_accept_prob(100, &p), 1.0);
+        let p = PairStats { mu: -0.01, sigma_l: 1.0, log_correction: 0.0 };
+        assert!((exact_accept_prob(100, &p) - (-1.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_small_when_margin_large() {
+        // |N mu| >> sigma_l sqrt(N): every u decides correctly; Delta ~ 0.
+        // (realistic pair scale: mu ~ O(1)/N, sigma_l ~ proposal step)
+        let t = table();
+        let p = PairStats { mu: 2e-3, sigma_l: 0.01, log_correction: 0.0 };
+        let d = delta_accept_prob(12_214, &p, &t, 32);
+        assert!(d.abs() < 1e-9, "delta={d}");
+    }
+
+    #[test]
+    fn delta_bounded_by_worst_case() {
+        let t = table();
+        let worst = t.error(0.0);
+        for &(mu, c) in &[(0.0, 0.0), (1e-4, 0.5), (-2e-4, -1.0), (5e-5, 2.0)] {
+            let p = PairStats { mu, sigma_l: 0.8, log_correction: c };
+            let d = delta_accept_prob(12_214, &p, &t, 32);
+            assert!(d.abs() <= worst + 1e-9, "mu={mu} c={c}: {d} vs {worst}");
+        }
+    }
+
+    #[test]
+    fn approx_prob_in_unit_interval_and_tracks_exact() {
+        // Pair scale as a real chain produces: N mu - c of order 1,
+        // sigma_l of order the proposal step, so mu_std(u) spans O(1)
+        // and the u-errors partly cancel (supp. B / Fig. 12).
+        let t = table();
+        for &(mu, c) in &[(2e-4, 0.0), (-1e-4, 0.3), (0.0, -0.7), (3e-4, 4.0)] {
+            let p = PairStats { mu, sigma_l: 0.01, log_correction: c };
+            let pa = exact_accept_prob(12_214, &p);
+            let pae = approx_accept_prob(12_214, &p, &t, 32);
+            assert!((0.0..=1.0).contains(&pae));
+            assert!((pae - pa).abs() < 0.15, "pa={pa} pae={pae}");
+        }
+    }
+
+    #[test]
+    fn data_usage_between_floor_and_one() {
+        let t = table();
+        for &mu in &[0.0, 5e-5, 1e-3] {
+            let p = PairStats { mu, sigma_l: 1.0, log_correction: 0.0 };
+            let d = expected_data_usage(12_214, &p, &t, 32);
+            assert!(d >= 500.0 / 12_214.0 - 1e-9 && d <= 1.0 + 1e-9, "{d}");
+        }
+    }
+
+    #[test]
+    fn zero_sigma_population_is_deterministic() {
+        let t = table();
+        let p = PairStats { mu: 1e-3, sigma_l: 0.0, log_correction: 0.0 };
+        // mu_std = +inf for u < Pa: error 0 everywhere -> delta 0
+        let d = delta_accept_prob(12_214, &p, &t, 16);
+        assert!(d.abs() < 1e-12);
+    }
+}

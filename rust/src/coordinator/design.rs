@@ -1,0 +1,306 @@
+//! Optimal sequential test design (paper §5.2, supp. D): choose the
+//! mini-batch size m and the knob epsilon minimizing expected data usage
+//! subject to a tolerance on the acceptance-probability error.
+//!
+//! Two designs:
+//!  * average design (Eqn. 7): constrain the average |Delta| over an
+//!    empirical distribution of (theta, theta') pairs from a trial run;
+//!  * worst-case design (Eqn. 8): constrain E(0, m, eps), the worst-case
+//!    single-test error (conservative — no trial run needed).
+
+use crate::coordinator::delta::{delta_accept_prob, expected_data_usage, PairStats, SeqTestTable};
+use crate::coordinator::dp::analyze_pocock;
+
+/// Candidate grid for the search.
+#[derive(Clone, Debug)]
+pub struct DesignGrid {
+    pub m_grid: Vec<usize>,
+    pub eps_grid: Vec<f64>,
+    /// DP density cells.
+    pub dp_grid: usize,
+    /// mu_std table nodes and extent.
+    pub table_points: usize,
+    pub mu_max: f64,
+    /// quadrature panels per side for Delta / usage integrals.
+    pub panels: usize,
+}
+
+impl Default for DesignGrid {
+    fn default() -> Self {
+        DesignGrid {
+            m_grid: vec![100, 200, 400, 600, 1000, 2000, 5000],
+            eps_grid: vec![1e-4, 5e-4, 0.001, 0.005, 0.01, 0.02, 0.05, 0.1, 0.2],
+            dp_grid: 96,
+            table_points: 21,
+            mu_max: 12.0,
+            panels: 16,
+        }
+    }
+}
+
+/// A chosen configuration and its predicted performance.
+#[derive(Clone, Copy, Debug)]
+pub struct DesignChoice {
+    pub m: usize,
+    pub eps: f64,
+    /// predicted average data usage (fraction of N)
+    pub data_usage: f64,
+    /// predicted error (avg |Delta| for average design, E(0) for worst)
+    pub error: f64,
+}
+
+/// Worst-case design (Eqn. 8): min pi_bar(0) s.t. E(0) <= tol.
+pub fn worst_case_design(n: usize, tol: f64, grid: &DesignGrid) -> Option<DesignChoice> {
+    let mut best: Option<DesignChoice> = None;
+    for &m in &grid.m_grid {
+        for &eps in &grid.eps_grid {
+            let a = analyze_pocock(0.0, m, n, eps, grid.dp_grid);
+            if a.error > tol {
+                continue;
+            }
+            let cand = DesignChoice { m, eps, data_usage: a.expected_pi, error: a.error };
+            if best.map_or(true, |b| cand.data_usage < b.data_usage) {
+                best = Some(cand);
+            }
+        }
+    }
+    best
+}
+
+/// Predicted average performance of one (m, eps) cell over a training set
+/// of pair statistics: (avg |Delta|, avg E_u[pi_bar]).
+pub fn evaluate_design(
+    n: usize,
+    train: &[PairStats],
+    m: usize,
+    eps: f64,
+    grid: &DesignGrid,
+) -> (f64, f64) {
+    let table = SeqTestTable::build(m, n, eps, grid.mu_max, grid.table_points, grid.dp_grid);
+    evaluate_with_table(n, train, &table, grid.panels)
+}
+
+/// Same, reusing a prebuilt table.
+pub fn evaluate_with_table(
+    n: usize,
+    train: &[PairStats],
+    table: &SeqTestTable,
+    panels: usize,
+) -> (f64, f64) {
+    assert!(!train.is_empty());
+    let mut sum_abs_delta = 0.0;
+    let mut sum_usage = 0.0;
+    for p in train {
+        sum_abs_delta += delta_accept_prob(n, p, table, panels).abs();
+        sum_usage += expected_data_usage(n, p, table, panels);
+    }
+    let k = train.len() as f64;
+    (sum_abs_delta / k, sum_usage / k)
+}
+
+/// Average design (Eqn. 7): min avg E_u[pi_bar] s.t. avg |Delta| <= tol,
+/// over the empirical (theta, theta') distribution in `train`.
+pub fn average_design(
+    n: usize,
+    train: &[PairStats],
+    tol: f64,
+    grid: &DesignGrid,
+) -> Option<DesignChoice> {
+    let mut best: Option<DesignChoice> = None;
+    for &m in &grid.m_grid {
+        for &eps in &grid.eps_grid {
+            let (avg_delta, avg_usage) = evaluate_design(n, train, m, eps, grid);
+            if avg_delta > tol {
+                continue;
+            }
+            let cand = DesignChoice { m, eps, data_usage: avg_usage, error: avg_delta };
+            if best.map_or(true, |b| cand.data_usage < b.data_usage) {
+                best = Some(cand);
+            }
+        }
+    }
+    best
+}
+
+/// Wang-Tsiatis generalized-bound design (supp. D): search over the
+/// batch size m, the base bound G0 and the shape exponent delta in
+/// G_j = G0 * pi_j^delta (delta = 0 Pocock, -0.5 O'Brien-Fleming),
+/// minimizing average data usage subject to avg |Delta| <= tol.
+#[derive(Clone, Copy, Debug)]
+pub struct WtChoice {
+    pub m: usize,
+    pub g0: f64,
+    pub delta_exp: f64,
+    pub data_usage: f64,
+    pub error: f64,
+}
+
+pub fn wang_tsiatis_design(
+    n: usize,
+    train: &[PairStats],
+    tol: f64,
+    grid: &DesignGrid,
+    g0_grid: &[f64],
+    delta_grid: &[f64],
+) -> Option<WtChoice> {
+    let mut best: Option<WtChoice> = None;
+    for &m in &grid.m_grid {
+        let pis = crate::coordinator::dp::uniform_pis(m, n);
+        if pis.len() < 2 {
+            continue;
+        }
+        for &g0 in g0_grid {
+            for &de in delta_grid {
+                let bounds: Vec<f64> =
+                    pis[..pis.len() - 1].iter().map(|&p| g0 * p.powf(de)).collect();
+                let table = SeqTestTable::build_with_bounds(
+                    &pis,
+                    &bounds,
+                    grid.mu_max,
+                    grid.table_points,
+                    grid.dp_grid,
+                );
+                let (err, usage) = evaluate_with_table(n, train, &table, grid.panels);
+                if err > tol {
+                    continue;
+                }
+                let cand = WtChoice { m, g0, delta_exp: de, data_usage: usage, error: err };
+                if best.map_or(true, |b| cand.data_usage < b.data_usage) {
+                    best = Some(cand);
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Average design with m fixed (the §5.2 heuristic, Fig. 6 triangles).
+pub fn fixed_m_design(
+    n: usize,
+    train: &[PairStats],
+    m: usize,
+    tol: f64,
+    grid: &DesignGrid,
+) -> Option<DesignChoice> {
+    let sub = DesignGrid { m_grid: vec![m], ..grid.clone() };
+    average_design(n, train, tol, &sub)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_grid() -> DesignGrid {
+        DesignGrid {
+            m_grid: vec![200, 500, 1000],
+            eps_grid: vec![0.001, 0.005, 0.01, 0.05, 0.1],
+            dp_grid: 64,
+            table_points: 13,
+            mu_max: 10.0,
+            panels: 8,
+        }
+    }
+
+    fn train_set() -> Vec<PairStats> {
+        // mostly-decisive pairs (|mu_std| >> 1) plus one ambiguous one,
+        // the mix a real trial run produces (N = 10^4, sigma_l/sqrt(N) = 0.01)
+        vec![
+            PairStats { mu: 0.05, sigma_l: 1.0, log_correction: 0.0 },
+            PairStats { mu: -0.04, sigma_l: 0.8, log_correction: 0.5 },
+            PairStats { mu: 3e-3, sigma_l: 1.0, log_correction: -0.2 },
+            PairStats { mu: 0.0, sigma_l: 1.2, log_correction: 0.0 },
+        ]
+    }
+
+    #[test]
+    fn worst_case_design_meets_tolerance() {
+        let g = small_grid();
+        let d = worst_case_design(10_000, 0.05, &g).expect("feasible");
+        let a = analyze_pocock(0.0, d.m, 10_000, d.eps, g.dp_grid);
+        assert!(a.error <= 0.05 + 1e-9);
+        assert!((a.expected_pi - d.data_usage).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worst_case_infeasible_returns_none() {
+        let g = small_grid();
+        // an impossible tolerance with a loose eps grid
+        let d = worst_case_design(10_000, 1e-12, &g);
+        assert!(d.is_none());
+    }
+
+    #[test]
+    fn looser_tolerance_uses_less_data() {
+        let g = small_grid();
+        let tight = worst_case_design(10_000, 0.01, &g).unwrap();
+        let loose = worst_case_design(10_000, 0.2, &g).unwrap();
+        assert!(loose.data_usage <= tight.data_usage + 1e-12);
+    }
+
+    #[test]
+    fn average_design_beats_worst_case_usage() {
+        // The central claim of Fig. 6(b): for the same tolerance the
+        // average design consumes less data.
+        let g = small_grid();
+        let n = 10_000;
+        let train = train_set();
+        let avg = average_design(n, &train, 0.03, &g).expect("avg feasible");
+        let worst = worst_case_design(n, 0.03, &g).expect("worst feasible");
+        let (_, worst_usage) = evaluate_design(n, &train, worst.m, worst.eps, &g);
+        assert!(
+            avg.data_usage <= worst_usage + 1e-9,
+            "avg {} vs worst-projected {}",
+            avg.data_usage,
+            worst_usage
+        );
+    }
+
+    #[test]
+    fn average_design_constraint_active() {
+        let g = small_grid();
+        let d = average_design(10_000, &train_set(), 0.06, &g).unwrap();
+        assert!(d.error <= 0.06 + 1e-9);
+    }
+
+    #[test]
+    fn wang_tsiatis_design_at_least_as_good_as_pocock() {
+        // The WT family contains Pocock (delta = 0), so the generalized
+        // search can only improve on the eps-grid-matched Pocock choice.
+        let g = small_grid();
+        let n = 10_000;
+        let train = train_set();
+        let pocock = average_design(n, &train, 0.03, &g);
+        let wt = wang_tsiatis_design(
+            n,
+            &train,
+            0.03,
+            &g,
+            &[1.5, 2.0, 2.5, 3.0],
+            &[0.0, -0.25, -0.5],
+        );
+        let wt = wt.expect("wt feasible");
+        assert!(wt.error <= 0.03 + 1e-9);
+        if let Some(p) = pocock {
+            // generous slack: the grids are different discretizations
+            assert!(
+                wt.data_usage <= p.data_usage + 0.1,
+                "wt {} vs pocock {}",
+                wt.data_usage,
+                p.data_usage
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_m_is_feasible_subset() {
+        let g = small_grid();
+        let n = 10_000;
+        let train = train_set();
+        let free = average_design(n, &train, 0.05, &g).unwrap();
+        if let Some(fixed) = fixed_m_design(n, &train, 500, 0.05, &g) {
+            assert_eq!(fixed.m, 500);
+            // the free search can only do at least as well
+            assert!(free.data_usage <= fixed.data_usage + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,344 @@
+//! Gaussian-random-walk dynamic program for the sequential test
+//! (paper §5.1 + supplementary A, Proposition 2).
+//!
+//! Under the CLT assumptions the z-statistics across stages follow
+//!
+//!   z_j | z_{j-1} ~ N( mu_std * (pi_j - pi_{j-1}) / (1 - pi_{j-1})
+//!                        / sqrt(pi_j (1 - pi_j))
+//!                      + z_{j-1} * sqrt( pi_{j-1} (1 - pi_j)
+//!                                        / (pi_j (1 - pi_{j-1})) ),
+//!                     (pi_j - pi_{j-1}) / (pi_j (1 - pi_{j-1})) )
+//!
+//! Thresholding |z_j| at G_j maps the sequential test onto a first-
+//! passage problem; discretizing the surviving density on a grid gives
+//! the O(L^2 J) dynamic program of the paper for the test error
+//! E(mu_std) (Eqn. 19) and the expected data usage pi_bar (Eqn. 20).
+
+use crate::stats::normal::phi_cdf;
+
+/// Result of the DP (or simulation) analysis of one sequential test.
+#[derive(Clone, Copy, Debug)]
+pub struct SeqAnalysis {
+    /// Probability of a wrong final decision, E(mu_std) (Eqn. 19/21).
+    pub error: f64,
+    /// P(decide mu < mu0 before the final stage).
+    pub err_low: f64,
+    /// P(decide mu > mu0 before the final stage).
+    pub err_high: f64,
+    /// Expected proportion of data consumed, pi_bar (Eqn. 20).
+    pub expected_pi: f64,
+    /// P(test reaches the final, full-data stage), P(j' = J).
+    pub p_final: f64,
+}
+
+/// Data proportions pi_j = min(j m / N, 1) for batch size m, population N.
+pub fn uniform_pis(m: usize, n: usize) -> Vec<f64> {
+    assert!(m >= 1 && n >= 1);
+    let mut pis = Vec::new();
+    let mut used = 0usize;
+    while used < n {
+        used = (used + m).min(n);
+        pis.push(used as f64 / n as f64);
+    }
+    pis
+}
+
+/// Random-walk transition coefficients at stage j: m_j = a + b z_{j-1},
+/// sd = sigma (Proposition 2, Eqns. 11-12).
+pub fn stage_coeffs(mu_std: f64, pi_prev: f64, pi_j: f64) -> (f64, f64, f64) {
+    debug_assert!(pi_j > pi_prev && pi_j < 1.0);
+    let a = mu_std * (pi_j - pi_prev) / (1.0 - pi_prev) / (pi_j * (1.0 - pi_j)).sqrt();
+    let b = ((pi_prev / pi_j) * ((1.0 - pi_j) / (1.0 - pi_prev))).sqrt();
+    let var = (pi_j - pi_prev) / (pi_j * (1.0 - pi_prev));
+    (a, b, var.sqrt())
+}
+
+/// DP analysis of the sequential test with per-stage z-bounds `bounds`
+/// (length >= pis.len() - 1; the final stage is a forced exact decision).
+/// `grid` is the number of density cells L (paper's discretization).
+pub fn analyze_walk(mu_std: f64, pis: &[f64], bounds: &[f64], grid: usize) -> SeqAnalysis {
+    let j_max = pis.len();
+    assert!(j_max >= 1);
+    assert!((pis[j_max - 1] - 1.0).abs() < 1e-12, "last pi must be 1");
+    assert!(bounds.len() + 1 >= j_max, "need a bound for every non-final stage");
+    assert!(grid >= 8);
+
+    if j_max == 1 {
+        // Single full-data stage: decision always exact.
+        return SeqAnalysis { error: 0.0, err_low: 0.0, err_high: 0.0, expected_pi: 1.0, p_final: 1.0 };
+    }
+
+    let mut err_low = 0.0f64;
+    let mut err_high = 0.0f64;
+    let mut expected_pi = 0.0f64;
+
+    // Surviving density over grid cells of the previous stage.
+    let mut density: Vec<f64> = Vec::new();
+    let mut centers: Vec<f64> = Vec::new();
+
+    for j in 0..j_max - 1 {
+        let pi_prev = if j == 0 { 0.0 } else { pis[j - 1] };
+        let pi_j = pis[j];
+        let g = bounds[j];
+        let (a, b, sd) = stage_coeffs(mu_std, pi_prev, pi_j);
+
+        // New grid on [-g, g].
+        let h = 2.0 * g / grid as f64;
+        let new_centers: Vec<f64> = (0..grid).map(|k| -g + (k as f64 + 0.5) * h).collect();
+        let mut new_density = vec![0.0f64; grid];
+        let mut dec_low = 0.0f64;
+        let mut dec_high = 0.0f64;
+
+        // Sources: stage 0 has a single deterministic source of mass 1.
+        let sources: &[(f64, f64)] = if j == 0 {
+            &[(0.0, 1.0)]
+        } else {
+            // pack (center, mass) pairs lazily below
+            &[]
+        };
+        let mut scratch_pairs: Vec<(f64, f64)> = Vec::new();
+        let src_iter: &[(f64, f64)] = if j == 0 {
+            sources
+        } else {
+            scratch_pairs.extend(centers.iter().copied().zip(density.iter().copied()));
+            &scratch_pairs
+        };
+
+        for &(z_prev, mass) in src_iter {
+            if mass <= 0.0 {
+                continue;
+            }
+            let mean = a + b * z_prev;
+            // tail masses
+            let low = phi_cdf((-g - mean) / sd);
+            let high = 1.0 - phi_cdf((g - mean) / sd);
+            dec_low += mass * low;
+            dec_high += mass * high;
+            // interior cells: reuse edge CDF evaluations
+            let mut prev_cdf = phi_cdf((-g - mean) / sd);
+            for k in 0..grid {
+                let upper = -g + (k as f64 + 1.0) * h;
+                let c = phi_cdf((upper - mean) / sd);
+                new_density[k] += mass * (c - prev_cdf);
+                prev_cdf = c;
+            }
+        }
+
+        err_low += dec_low;
+        err_high += dec_high;
+        expected_pi += pi_j * (dec_low + dec_high);
+        density = new_density;
+        centers = new_centers;
+
+        // Early exit: once the surviving mass is negligible the remaining
+        // stages contribute nothing measurable to error or usage.
+        if density.iter().sum::<f64>() < 1e-12 {
+            break;
+        }
+    }
+
+    let p_final: f64 = density.iter().sum();
+    expected_pi += p_final; // final stage consumes pi = 1
+
+    // Final stage decides exactly: wrong side mass is zero unless
+    // mu_std == 0, where the paper defines E as half the early mass.
+    let error = if mu_std > 0.0 {
+        err_low
+    } else if mu_std < 0.0 {
+        err_high
+    } else {
+        0.5 * (err_low + err_high)
+    };
+
+    SeqAnalysis { error, err_low, err_high, expected_pi, p_final }
+}
+
+/// Convenience: Pocock analysis with constant bound from epsilon.
+pub fn analyze_pocock(mu_std: f64, m: usize, n: usize, eps: f64, grid: usize) -> SeqAnalysis {
+    let pis = uniform_pis(m, n);
+    let g = crate::stats::normal::phi_inv(1.0 - eps.clamp(1e-12, 0.5 - 1e-12));
+    let bounds = vec![g; pis.len().saturating_sub(1)];
+    analyze_walk(mu_std, &pis, &bounds, grid)
+}
+
+/// Monte-Carlo simulation of the same random walk (validation of the DP,
+/// and the "simulation" series of Figs. 1/10).
+pub fn simulate_walk(
+    mu_std: f64,
+    pis: &[f64],
+    bounds: &[f64],
+    sims: usize,
+    rng: &mut crate::stats::Pcg64,
+) -> SeqAnalysis {
+    let j_max = pis.len();
+    let mut err_low = 0usize;
+    let mut err_high = 0usize;
+    let mut reached_final = 0usize;
+    let mut pi_sum = 0.0f64;
+
+    for _ in 0..sims {
+        let mut z = 0.0f64;
+        let mut decided = false;
+        for j in 0..j_max - 1 {
+            let pi_prev = if j == 0 { 0.0 } else { pis[j - 1] };
+            let (a, b, sd) = stage_coeffs(mu_std, pi_prev, pis[j]);
+            z = a + b * z + sd * rng.normal();
+            if z < -bounds[j] {
+                err_low += 1;
+                pi_sum += pis[j];
+                decided = true;
+                break;
+            }
+            if z > bounds[j] {
+                err_high += 1;
+                pi_sum += pis[j];
+                decided = true;
+                break;
+            }
+        }
+        if !decided {
+            reached_final += 1;
+            pi_sum += 1.0;
+        }
+    }
+
+    let s = sims as f64;
+    let (el, eh) = (err_low as f64 / s, err_high as f64 / s);
+    let error = if mu_std > 0.0 {
+        el
+    } else if mu_std < 0.0 {
+        eh
+    } else {
+        0.5 * (el + eh)
+    };
+    SeqAnalysis {
+        error,
+        err_low: el,
+        err_high: eh,
+        expected_pi: pi_sum / s,
+        p_final: reached_final as f64 / s,
+    }
+}
+
+/// Worst-case error bound E(0) (Eqn. 21) for the Pocock test.
+pub fn worst_case_error(m: usize, n: usize, eps: f64, grid: usize) -> f64 {
+    analyze_pocock(0.0, m, n, eps, grid).error
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Pcg64;
+
+    #[test]
+    fn uniform_pis_shape() {
+        let pis = uniform_pis(500, 1200);
+        assert_eq!(pis.len(), 3);
+        assert!((pis[0] - 500.0 / 1200.0).abs() < 1e-12);
+        assert!((pis[2] - 1.0).abs() < 1e-12);
+        assert_eq!(uniform_pis(2000, 1200), vec![1.0]);
+    }
+
+    #[test]
+    fn single_stage_is_exact() {
+        let a = analyze_walk(0.7, &[1.0], &[], 64);
+        assert_eq!(a.error, 0.0);
+        assert_eq!(a.expected_pi, 1.0);
+        assert_eq!(a.p_final, 1.0);
+    }
+
+    #[test]
+    fn worst_case_symmetric() {
+        let a = analyze_pocock(0.0, 500, 10_000, 0.05, 256);
+        assert!((a.err_low - a.err_high).abs() < 1e-6, "{a:?}");
+        assert!((a.error - 0.5 * (a.err_low + a.err_high)).abs() < 1e-12);
+        // mass conservation
+        assert!((a.err_low + a.err_high + a.p_final - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn error_decreases_away_from_mu0() {
+        let e0 = analyze_pocock(0.0, 500, 10_000, 0.05, 256).error;
+        let e2 = analyze_pocock(2.0, 500, 10_000, 0.05, 256).error;
+        let e10 = analyze_pocock(10.0, 500, 10_000, 0.05, 256).error;
+        assert!(e0 > e2 && e2 > e10, "{e0} {e2} {e10}");
+        assert!(e10 < 1e-3);
+    }
+
+    #[test]
+    fn data_usage_decreases_away_from_mu0() {
+        let p0 = analyze_pocock(0.0, 500, 10_000, 0.05, 256).expected_pi;
+        let p5 = analyze_pocock(5.0, 500, 10_000, 0.05, 256).expected_pi;
+        let p20 = analyze_pocock(20.0, 500, 10_000, 0.05, 256).expected_pi;
+        assert!(p0 > p5 && p5 > p20, "{p0} {p5} {p20}");
+        // far from mu0 a single batch should essentially always decide
+        assert!((p20 - 500.0 / 10_000.0).abs() < 0.01, "p20={p20}");
+    }
+
+    #[test]
+    fn smaller_eps_means_less_error_more_data() {
+        let tight = analyze_pocock(1.0, 500, 10_000, 0.005, 256);
+        let loose = analyze_pocock(1.0, 500, 10_000, 0.2, 256);
+        assert!(tight.error < loose.error);
+        assert!(tight.expected_pi > loose.expected_pi);
+    }
+
+    #[test]
+    fn dp_matches_simulation() {
+        let mut rng = Pcg64::seeded(0);
+        for &mu_std in &[0.0, 0.8, -1.5, 3.0] {
+            let pis = uniform_pis(500, 12_214);
+            let g = crate::stats::normal::phi_inv(1.0 - 0.05);
+            let bounds = vec![g; pis.len() - 1];
+            let dp = analyze_walk(mu_std, &pis, &bounds, 400);
+            let sim = simulate_walk(mu_std, &pis, &bounds, 60_000, &mut rng);
+            assert!(
+                (dp.error - sim.error).abs() < 0.01,
+                "mu_std={mu_std}: dp {} sim {}",
+                dp.error,
+                sim.error
+            );
+            assert!(
+                (dp.expected_pi - sim.expected_pi).abs() < 0.01,
+                "mu_std={mu_std}: dp {} sim {}",
+                dp.expected_pi,
+                sim.expected_pi
+            );
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_worst_case() {
+        let worst = worst_case_error(500, 12_214, 0.05, 300);
+        for &mu in &[0.2, 0.9, 2.5, -4.0] {
+            let e = analyze_pocock(mu, 500, 12_214, 0.05, 300).error;
+            assert!(e <= worst + 1e-6, "mu={mu}: {e} > {worst}");
+        }
+    }
+
+    #[test]
+    fn grid_refinement_converges() {
+        let coarse = analyze_pocock(0.5, 500, 10_000, 0.05, 64).error;
+        let fine = analyze_pocock(0.5, 500, 10_000, 0.05, 512).error;
+        let finer = analyze_pocock(0.5, 500, 10_000, 0.05, 1024).error;
+        assert!((fine - finer).abs() < (coarse - finer).abs() + 1e-9);
+        assert!((fine - finer).abs() < 2e-4, "{fine} vs {finer}");
+    }
+
+    #[test]
+    fn obf_bounds_shift_usage_earlier_decisions_later() {
+        // O'Brien-Fleming spends little alpha early: more early survival,
+        // but same-ish worst-case error. Check it runs and conserves mass.
+        let pis = uniform_pis(500, 10_000);
+        let g0 = 2.0;
+        let bounds: Vec<f64> = pis[..pis.len() - 1]
+            .iter()
+            .map(|&p| g0 * p.powf(-0.5))
+            .collect();
+        let a = analyze_walk(0.0, &pis, &bounds, 256);
+        assert!((a.err_low + a.err_high + a.p_final - 1.0).abs() < 1e-6);
+        // early bounds are larger than Pocock's G(0.023)~2: fewer early stops
+        let pocock = analyze_walk(0.0, &pis, &vec![2.0; pis.len() - 1], 256);
+        assert!(a.p_final > pocock.p_final);
+    }
+}

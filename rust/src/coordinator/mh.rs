@@ -1,0 +1,265 @@
+//! Metropolis-Hastings step orchestration: the exact O(N) test and the
+//! approximate sequential test behind one interface (paper §2 and §4).
+
+use crate::coordinator::austerity::{seq_mh_test, SeqTestConfig, SeqTestOutcome};
+use crate::coordinator::scheduler::MinibatchScheduler;
+use crate::models::traits::{LlDiffModel, Proposal};
+use crate::stats::Pcg64;
+
+/// Which accept/reject test to run.
+#[derive(Clone, Debug)]
+pub enum MhMode {
+    /// Classic full-data test (epsilon = 0 baseline).
+    Exact,
+    /// Sequential approximate test with the given configuration.
+    Approx(SeqTestConfig),
+}
+
+impl MhMode {
+    pub fn approx(eps: f64, batch: usize) -> MhMode {
+        if eps <= 0.0 {
+            MhMode::Exact
+        } else {
+            MhMode::Approx(SeqTestConfig::new(eps, batch))
+        }
+    }
+
+    /// Approximate test with an explicit bound sequence (e.g. the
+    /// Wang-Tsiatis / O'Brien-Fleming designs of supp. D).
+    pub fn approx_with_bound(bound: crate::coordinator::austerity::BoundSeq, batch: usize) -> MhMode {
+        MhMode::Approx(SeqTestConfig { batch_size: batch, bound })
+    }
+}
+
+/// Result of one MH step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepInfo {
+    pub accepted: bool,
+    /// Datapoints examined by the accept/reject test.
+    pub n_used: usize,
+    /// Sequential-test stages (1 for exact).
+    pub stages: usize,
+}
+
+/// Reusable per-chain scratch (avoids per-step allocation).
+pub struct MhScratch {
+    pub sched: MinibatchScheduler,
+    idx_buf: Vec<usize>,
+}
+
+impl MhScratch {
+    pub fn new(n: usize) -> Self {
+        MhScratch { sched: MinibatchScheduler::new(n), idx_buf: Vec::new() }
+    }
+}
+
+/// Execute one MH accept/reject decision for a proposed move.
+///
+/// `proposal.log_correction` must be
+/// `log[rho(cur) q(prop|cur) / (rho(prop) q(cur|prop))]` so that
+/// `mu_0 = (ln u + log_correction) / N` (Eqn. 2). On acceptance `cur` is
+/// overwritten with the proposal's parameter.
+pub fn mh_step<M: LlDiffModel>(
+    model: &M,
+    cur: &mut M::Param,
+    proposal: Proposal<M::Param>,
+    mode: &MhMode,
+    scratch: &mut MhScratch,
+    rng: &mut Pcg64,
+) -> StepInfo {
+    let n = model.n() as f64;
+    let u = rng.uniform_pos();
+
+    // A proposal with -inf correction (zero prior mass at cur — cannot
+    // happen for valid chains) or +inf (zero prior mass at prop) resolves
+    // without data.
+    if proposal.log_correction == f64::INFINITY {
+        return StepInfo { accepted: false, n_used: 0, stages: 0 };
+    }
+    let mu0 = (u.ln() + proposal.log_correction) / n;
+
+    let (accepted, outcome): (bool, Option<SeqTestOutcome>) = match mode {
+        MhMode::Exact => {
+            let mu = model.full_mean(cur, &proposal.param);
+            (mu > mu0, None)
+        }
+        MhMode::Approx(cfg) => {
+            let out = seq_mh_test(
+                model,
+                cur,
+                &proposal.param,
+                mu0,
+                cfg,
+                &mut scratch.sched,
+                rng,
+                &mut scratch.idx_buf,
+            );
+            (out.accept, Some(out))
+        }
+    };
+
+    if accepted {
+        *cur = proposal.param;
+    }
+    match outcome {
+        Some(o) => StepInfo { accepted, n_used: o.n_used, stages: o.stages },
+        None => StepInfo { accepted, n_used: model.n(), stages: 1 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::traits::testutil::FixedPopulation;
+    use crate::models::traits::ProposalKernel;
+
+    #[test]
+    fn exact_step_uses_all_data() {
+        let model = FixedPopulation { ls: vec![1.0; 100] };
+        let mut scratch = MhScratch::new(100);
+        let mut rng = Pcg64::seeded(0);
+        let mut cur = ();
+        let info = mh_step(
+            &model,
+            &mut cur,
+            Proposal { param: (), log_correction: 0.0 },
+            &MhMode::Exact,
+            &mut scratch,
+            &mut rng,
+        );
+        assert_eq!(info.n_used, 100);
+        // mean l = 1 -> acceptance prob = min(1, e^{100}) = 1
+        assert!(info.accepted);
+    }
+
+    #[test]
+    fn certain_rejection() {
+        let model = FixedPopulation { ls: vec![-10.0; 100] };
+        let mut scratch = MhScratch::new(100);
+        let mut rng = Pcg64::seeded(1);
+        let mut cur = ();
+        for _ in 0..20 {
+            let info = mh_step(
+                &model,
+                &mut cur,
+                Proposal { param: (), log_correction: 0.0 },
+                &MhMode::Exact,
+                &mut scratch,
+                &mut rng,
+            );
+            assert!(!info.accepted);
+        }
+    }
+
+    #[test]
+    fn infinite_correction_rejects_without_data() {
+        let model = FixedPopulation { ls: vec![1.0; 50] };
+        let mut scratch = MhScratch::new(50);
+        let mut rng = Pcg64::seeded(2);
+        let mut cur = ();
+        let info = mh_step(
+            &model,
+            &mut cur,
+            Proposal { param: (), log_correction: f64::INFINITY },
+            &MhMode::Exact,
+            &mut scratch,
+            &mut rng,
+        );
+        assert!(!info.accepted);
+        assert_eq!(info.n_used, 0);
+    }
+
+    #[test]
+    fn exact_acceptance_rate_matches_formula() {
+        // With constant l and correction c, Pa = min(1, exp(N*l - c)).
+        let n = 40;
+        let l = 0.01; // exp(0.4 - c)
+        let c = 0.6f64;
+        let want = (n as f64 * l - c).exp(); // ~0.819
+        let model = FixedPopulation { ls: vec![l; n] };
+        let mut scratch = MhScratch::new(n);
+        let mut rng = Pcg64::seeded(3);
+        let trials = 40_000;
+        let mut acc = 0usize;
+        let mut cur = ();
+        for _ in 0..trials {
+            let info = mh_step(
+                &model,
+                &mut cur,
+                Proposal { param: (), log_correction: c },
+                &MhMode::Exact,
+                &mut scratch,
+                &mut rng,
+            );
+            if info.accepted {
+                acc += 1;
+            }
+        }
+        let rate = acc as f64 / trials as f64;
+        assert!((rate - want).abs() < 0.01, "rate {rate} want {want}");
+    }
+
+    #[test]
+    fn approx_matches_exact_acceptance_when_unambiguous() {
+        // Wide margin between mu and mu0: approximate acceptance rate must
+        // track the exact one closely even with a large epsilon.
+        let n = 10_000;
+        let mut rng = Pcg64::seeded(4);
+        let ls: Vec<f64> = (0..n).map(|_| 3e-4 + 1e-4 * rng.normal()).collect();
+        let model = FixedPopulation { ls };
+        let want = {
+            // Pa = E_u[mu > mu0(u)] = min(1, exp(N mu)); N*mu = 3.0
+            let nm: f64 = 3.0;
+            nm.exp().min(1.0)
+        };
+        assert_eq!(want, 1.0);
+        let mut scratch = MhScratch::new(n);
+        let mode = MhMode::approx(0.05, 500);
+        let mut acc = 0;
+        let mut cur = ();
+        for _ in 0..200 {
+            let info = mh_step(
+                &model,
+                &mut cur,
+                Proposal { param: (), log_correction: 0.0 },
+                &mode,
+                &mut scratch,
+                &mut rng,
+            );
+            assert!(info.n_used <= n);
+            if info.accepted {
+                acc += 1;
+            }
+        }
+        assert!(acc >= 195, "acc={acc}");
+    }
+
+    #[test]
+    fn approx_mode_zero_eps_is_exact() {
+        match MhMode::approx(0.0, 500) {
+            MhMode::Exact => {}
+            _ => panic!("eps=0 must map to exact"),
+        }
+    }
+
+    #[test]
+    fn kernel_closure_integration() {
+        // A full little chain on the fixed population with a dummy kernel.
+        let model = FixedPopulation { ls: vec![0.0; 500] };
+        let kernel = |_: &(), _: &mut Pcg64| Proposal { param: (), log_correction: 0.0 };
+        let mut scratch = MhScratch::new(500);
+        let mut rng = Pcg64::seeded(5);
+        let mut cur = ();
+        let mut acc = 0;
+        for _ in 0..100 {
+            let p = kernel.propose(&cur, &mut rng);
+            let info = mh_step(&model, &mut cur, p, &MhMode::approx(0.1, 100), &mut scratch, &mut rng);
+            if info.accepted {
+                acc += 1;
+            }
+        }
+        // mu = 0 = mu0 mean: accepts iff ln u < 0 which is always true...
+        // actually mu0 = ln(u)/N < 0 = mu always, so all accepted.
+        assert_eq!(acc, 100);
+    }
+}

@@ -1,0 +1,27 @@
+//! The Layer-3 coordinator: the paper's contribution.
+//!
+//! * `austerity` — the sequential approximate MH test (Alg. 1)
+//! * `mh` — exact + approximate MH step orchestration
+//! * `chain` — chain driver with budgets, thinning, parallel replicas
+//! * `scheduler` — without-replacement mini-batch scheduling
+//! * `dp` — Gaussian-random-walk error/usage dynamic program (§5.1)
+//! * `delta` — acceptance-probability error via quadrature (Eqn. 6)
+//! * `design` — optimal test design, average & worst-case (§5.2)
+
+pub mod adaptive;
+pub mod austerity;
+pub mod chain;
+pub mod delta;
+pub mod design;
+pub mod dp;
+pub mod mh;
+pub mod scheduler;
+
+pub use adaptive::{run_adaptive_chain, EpsSchedule};
+pub use austerity::{seq_mh_test, BoundSeq, SeqTestConfig, SeqTestOutcome};
+pub use chain::{run_chain, run_chains_parallel, Budget, ChainStats, Sample};
+pub use delta::{PairStats, SeqTestTable};
+pub use design::{average_design, wang_tsiatis_design, worst_case_design, DesignChoice, DesignGrid, WtChoice};
+pub use dp::{analyze_pocock, analyze_walk, simulate_walk, uniform_pis, SeqAnalysis};
+pub use mh::{mh_step, MhMode, MhScratch, StepInfo};
+pub use scheduler::MinibatchScheduler;

@@ -1,0 +1,167 @@
+//! Mini-batch scheduler: uniform draws *without replacement* from the
+//! datapoint population, amortized O(batch) per draw.
+//!
+//! Alg. 1 consumes the population in growing prefixes; a naive
+//! implementation reshuffles all N indices every MH step (O(N) even when
+//! the test stops after 500 points). We instead keep one persistent
+//! permutation buffer and lazily Fisher-Yates only the prefix actually
+//! consumed: position k swaps with a uniform position in [k, N). Because
+//! each step's prefix is re-randomized against the whole buffer, every
+//! step sees an exchangeable uniform without-replacement sample no matter
+//! what earlier steps consumed.
+
+use crate::stats::Pcg64;
+
+pub struct MinibatchScheduler {
+    indices: Vec<u32>,
+    /// consumed prefix length of the current draw
+    pos: usize,
+}
+
+impl MinibatchScheduler {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0 && n <= u32::MAX as usize);
+        MinibatchScheduler { indices: (0..n as u32).collect(), pos: 0 }
+    }
+
+    pub fn n(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Start a fresh without-replacement draw (call once per MH step).
+    pub fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    /// Number of indices handed out since the last reset.
+    pub fn consumed(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.indices.len() - self.pos
+    }
+
+    /// Draw the next mini-batch of up to `m` fresh indices; returns the
+    /// drawn slice (empty once the population is exhausted).
+    pub fn next_batch(&mut self, m: usize, rng: &mut Pcg64) -> &[u32] {
+        let n = self.indices.len();
+        let take = m.min(n - self.pos);
+        let start = self.pos;
+        for k in start..start + take {
+            let j = k + rng.below(n - k);
+            self.indices.swap(k, j);
+        }
+        self.pos += take;
+        &self.indices[start..self.pos]
+    }
+
+    /// The full prefix consumed so far in this draw.
+    pub fn consumed_slice(&self) -> &[u32] {
+        &self.indices[..self.pos]
+    }
+}
+
+/// Convenience: the consumed prefix as usize indices (allocates).
+pub fn to_usize(ix: &[u32]) -> Vec<usize> {
+    ix.iter().map(|&i| i as usize).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn batches_are_disjoint_and_in_range() {
+        testkit::forall(64, |rng| {
+            let n = rng.below(500) + 10;
+            let m = rng.below(50) + 1;
+            let mut sched = MinibatchScheduler::new(n);
+            sched.reset();
+            let mut seen = std::collections::HashSet::new();
+            loop {
+                let batch: Vec<u32> = sched.next_batch(m, rng).to_vec();
+                if batch.is_empty() {
+                    break;
+                }
+                for &i in &batch {
+                    assert!((i as usize) < n);
+                    assert!(seen.insert(i), "duplicate index {i}");
+                }
+            }
+            assert_eq!(seen.len(), n, "must exhaust the population");
+        });
+    }
+
+    #[test]
+    fn tail_batch_is_short() {
+        let mut rng = Pcg64::seeded(0);
+        let mut sched = MinibatchScheduler::new(10);
+        sched.reset();
+        assert_eq!(sched.next_batch(7, &mut rng).len(), 7);
+        assert_eq!(sched.next_batch(7, &mut rng).len(), 3);
+        assert_eq!(sched.next_batch(7, &mut rng).len(), 0);
+        assert_eq!(sched.consumed(), 10);
+    }
+
+    use crate::stats::Pcg64;
+
+    #[test]
+    fn draws_are_uniform_across_steps() {
+        // after many reset+draw cycles, every index appears in the first
+        // batch roughly equally often (exchangeability across steps).
+        let n = 20;
+        let m = 5;
+        let steps = 40_000;
+        let mut rng = Pcg64::seeded(1);
+        let mut sched = MinibatchScheduler::new(n);
+        let mut counts = vec![0usize; n];
+        for _ in 0..steps {
+            sched.reset();
+            for &i in sched.next_batch(m, &mut rng) {
+                counts[i as usize] += 1;
+            }
+        }
+        let expect = steps * m / n; // 10_000
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect as f64).abs() < 0.05 * expect as f64,
+                "index {i}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn pairwise_inclusion_is_uniform() {
+        // second-order exchangeability: each unordered pair co-occurs in
+        // the first batch with roughly equal frequency.
+        let n = 8;
+        let m = 3;
+        let steps = 60_000;
+        let mut rng = Pcg64::seeded(2);
+        let mut sched = MinibatchScheduler::new(n);
+        let mut counts = vec![vec![0usize; n]; n];
+        for _ in 0..steps {
+            sched.reset();
+            let batch: Vec<u32> = sched.next_batch(m, &mut rng).to_vec();
+            for a in 0..batch.len() {
+                for b in a + 1..batch.len() {
+                    let (i, j) = (batch[a] as usize, batch[b] as usize);
+                    counts[i.min(j)][i.max(j)] += 1;
+                }
+            }
+        }
+        // pairs per step: C(3,2)=3, total pairs C(8,2)=28
+        let expect = steps * 3 / 28;
+        for i in 0..n {
+            for j in i + 1..n {
+                let c = counts[i][j];
+                assert!(
+                    (c as f64 - expect as f64).abs() < 0.08 * expect as f64,
+                    "pair ({i},{j}): {c} vs {expect}"
+                );
+            }
+        }
+    }
+}

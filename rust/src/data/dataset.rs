@@ -1,0 +1,160 @@
+//! Dense row-major dataset containers shared by all models.
+
+/// Supervised dataset: features `x` (n x d, row-major) and labels `y`.
+/// For classification models labels are +/- 1.0; for regression they are
+/// real-valued targets.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    x: Vec<f64>,
+    y: Vec<f64>,
+    n: usize,
+    d: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f64>, y: Vec<f64>, n: usize, d: usize) -> Self {
+        assert_eq!(x.len(), n * d, "feature matrix shape mismatch");
+        assert_eq!(y.len(), n, "label length mismatch");
+        Dataset { x, y, n, d }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> f64 {
+        self.y[i]
+    }
+
+    pub fn features(&self) -> &[f64] {
+        &self.x
+    }
+
+    pub fn labels(&self) -> &[f64] {
+        &self.y
+    }
+
+    /// Deterministic split into (train, test) by a shuffled index set.
+    pub fn split(&self, train_frac: f64, rng: &mut crate::stats::Pcg64) -> (Dataset, Dataset) {
+        assert!((0.0..=1.0).contains(&train_frac));
+        let mut idx: Vec<usize> = (0..self.n).collect();
+        rng.shuffle(&mut idx);
+        let n_train = ((self.n as f64) * train_frac).round() as usize;
+        let take = |ids: &[usize]| {
+            let mut x = Vec::with_capacity(ids.len() * self.d);
+            let mut y = Vec::with_capacity(ids.len());
+            for &i in ids {
+                x.extend_from_slice(self.row(i));
+                y.push(self.y[i]);
+            }
+            Dataset::new(x, y, ids.len(), self.d)
+        };
+        (take(&idx[..n_train]), take(&idx[n_train..]))
+    }
+
+    /// Subset by explicit row indices.
+    pub fn subset(&self, ids: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(ids.len() * self.d);
+        let mut y = Vec::with_capacity(ids.len());
+        for &i in ids {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset::new(x, y, ids.len(), self.d)
+    }
+}
+
+/// Unsupervised dataset (ICA): observations only.
+#[derive(Clone, Debug)]
+pub struct Unsupervised {
+    x: Vec<f64>,
+    n: usize,
+    d: usize,
+}
+
+impl Unsupervised {
+    pub fn new(x: Vec<f64>, n: usize, d: usize) -> Self {
+        assert_eq!(x.len(), n * d);
+        Unsupervised { x, n, d }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn features(&self) -> &[f64] {
+        &self.x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Pcg64;
+
+    fn toy() -> Dataset {
+        Dataset::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![1.0, -1.0, 1.0], 3, 2)
+    }
+
+    #[test]
+    fn rows_and_labels() {
+        let d = toy();
+        assert_eq!(d.row(0), &[1.0, 2.0]);
+        assert_eq!(d.row(2), &[5.0, 6.0]);
+        assert_eq!(d.label(1), -1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        Dataset::new(vec![1.0; 5], vec![0.0; 2], 2, 2);
+    }
+
+    #[test]
+    fn split_partitions_everything() {
+        let mut rng = Pcg64::seeded(0);
+        let n = 100;
+        let x: Vec<f64> = (0..n * 3).map(|i| i as f64).collect();
+        let y: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let d = Dataset::new(x, y, n, 3);
+        let (tr, te) = d.split(0.8, &mut rng);
+        assert_eq!(tr.n() + te.n(), n);
+        assert_eq!(tr.n(), 80);
+        // every original label appears exactly once across the split
+        let mut seen: Vec<f64> = tr.labels().iter().chain(te.labels()).copied().collect();
+        seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(seen, (0..n).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn subset_picks_rows() {
+        let d = toy();
+        let s = d.subset(&[2, 0]);
+        assert_eq!(s.row(0), &[5.0, 6.0]);
+        assert_eq!(s.row(1), &[1.0, 2.0]);
+        assert_eq!(s.labels(), &[1.0, 1.0]);
+    }
+}

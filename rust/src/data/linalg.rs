@@ -1,0 +1,390 @@
+//! Small dense linear algebra for the ICA substrate (D is 4-8, so simple
+//! O(D^3) routines are exactly right): matvec, matmul, QR-based random
+//! orthonormal matrices, LU slogdet, skew-symmetric matrix exponential.
+
+/// Row-major dense square matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub d: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(d: usize) -> Self {
+        Mat { d, a: vec![0.0; d * d] }
+    }
+
+    pub fn eye(d: usize) -> Self {
+        let mut m = Mat::zeros(d);
+        for i in 0..d {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let d = rows.len();
+        let mut a = Vec::with_capacity(d * d);
+        for r in rows {
+            assert_eq!(r.len(), d);
+            a.extend_from_slice(r);
+        }
+        Mat { d, a }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.a[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let d = self.d;
+        let mut t = Mat::zeros(d);
+        for i in 0..d {
+            for j in 0..d {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        let d = self.d;
+        assert_eq!(d, other.d);
+        let mut out = Mat::zeros(d);
+        for i in 0..d {
+            for k in 0..d {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..d {
+                    out[(i, j)] += aik * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        let d = self.d;
+        assert_eq!(x.len(), d);
+        assert_eq!(y.len(), d);
+        for i in 0..d {
+            let mut s = 0.0;
+            let row = self.row(i);
+            for j in 0..d {
+                s += row[j] * x[j];
+            }
+            y[i] = s;
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat { d: self.d, a: self.a.iter().map(|v| v * s).collect() }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.d, other.d);
+        Mat {
+            d: self.d,
+            a: self.a.iter().zip(&other.a).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn frobenius_dist(&self, other: &Mat) -> f64 {
+        self.a
+            .iter()
+            .zip(&other.a)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// log|det A| and the sign of det via partial-pivot LU.
+    pub fn slogdet(&self) -> (f64, f64) {
+        let d = self.d;
+        let mut lu = self.a.clone();
+        let mut sign = 1.0f64;
+        let mut logdet = 0.0f64;
+        for col in 0..d {
+            // pivot
+            let mut p = col;
+            let mut best = lu[col * d + col].abs();
+            for r in col + 1..d {
+                let v = lu[r * d + col].abs();
+                if v > best {
+                    best = v;
+                    p = r;
+                }
+            }
+            if best == 0.0 {
+                return (-1.0, f64::NEG_INFINITY);
+            }
+            if p != col {
+                for j in 0..d {
+                    lu.swap(col * d + j, p * d + j);
+                }
+                sign = -sign;
+            }
+            let piv = lu[col * d + col];
+            sign *= piv.signum();
+            logdet += piv.abs().ln();
+            for r in col + 1..d {
+                let f = lu[r * d + col] / piv;
+                lu[r * d + col] = f;
+                for j in col + 1..d {
+                    lu[r * d + j] -= f * lu[col * d + j];
+                }
+            }
+        }
+        (sign, logdet)
+    }
+
+    /// Matrix inverse via Gauss-Jordan (small D only).
+    pub fn inverse(&self) -> Mat {
+        let d = self.d;
+        let mut aug = vec![0.0; d * 2 * d];
+        for i in 0..d {
+            for j in 0..d {
+                aug[i * 2 * d + j] = self[(i, j)];
+            }
+            aug[i * 2 * d + d + i] = 1.0;
+        }
+        for col in 0..d {
+            let mut p = col;
+            let mut best = aug[col * 2 * d + col].abs();
+            for r in col + 1..d {
+                let v = aug[r * 2 * d + col].abs();
+                if v > best {
+                    best = v;
+                    p = r;
+                }
+            }
+            assert!(best > 1e-300, "singular matrix");
+            if p != col {
+                for j in 0..2 * d {
+                    aug.swap(col * 2 * d + j, p * 2 * d + j);
+                }
+            }
+            let piv = aug[col * 2 * d + col];
+            for j in 0..2 * d {
+                aug[col * 2 * d + j] /= piv;
+            }
+            for r in 0..d {
+                if r == col {
+                    continue;
+                }
+                let f = aug[r * 2 * d + col];
+                if f == 0.0 {
+                    continue;
+                }
+                for j in 0..2 * d {
+                    aug[r * 2 * d + j] -= f * aug[col * 2 * d + j];
+                }
+            }
+        }
+        let mut inv = Mat::zeros(d);
+        for i in 0..d {
+            for j in 0..d {
+                inv[(i, j)] = aug[i * 2 * d + d + j];
+            }
+        }
+        inv
+    }
+
+    /// Matrix exponential via scaling-and-squaring + Taylor (small norms).
+    pub fn expm(&self) -> Mat {
+        let d = self.d;
+        let norm: f64 = self.a.iter().map(|v| v.abs()).fold(0.0, f64::max) * d as f64;
+        let squarings = norm.log2().ceil().max(0.0) as u32 + 1;
+        let scaled = self.scale(1.0 / f64::powi(2.0, squarings as i32));
+        // Taylor to order 12 on the scaled matrix.
+        let mut result = Mat::eye(d);
+        let mut term = Mat::eye(d);
+        for k in 1..=12 {
+            term = term.matmul(&scaled).scale(1.0 / k as f64);
+            result = result.add(&term);
+        }
+        for _ in 0..squarings {
+            result = result.matmul(&result);
+        }
+        result
+    }
+
+    /// Max |A A^T - I| entry: orthonormality defect.
+    pub fn orthonormal_defect(&self) -> f64 {
+        let g = self.matmul(&self.transpose());
+        let mut worst = 0.0f64;
+        for i in 0..self.d {
+            for j in 0..self.d {
+                let want = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((g[(i, j)] - want).abs());
+            }
+        }
+        worst
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.a[i * self.d + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.a[i * self.d + j]
+    }
+}
+
+/// Random orthonormal matrix (Haar-ish via modified Gram-Schmidt on a
+/// Gaussian matrix, with sign correction from the R diagonal).
+pub fn random_orthonormal(d: usize, rng: &mut crate::stats::Pcg64) -> Mat {
+    loop {
+        let mut m = Mat::zeros(d);
+        for v in m.a.iter_mut() {
+            *v = rng.normal();
+        }
+        if let Some(q) = gram_schmidt(&m) {
+            return q;
+        }
+    }
+}
+
+/// Modified Gram-Schmidt orthonormalization of rows; None if near-singular.
+fn gram_schmidt(m: &Mat) -> Option<Mat> {
+    let d = m.d;
+    let mut q = m.clone();
+    for i in 0..d {
+        for j in 0..i {
+            let dot: f64 = (0..d).map(|k| q[(i, k)] * q[(j, k)]).sum();
+            for k in 0..d {
+                let v = q[(j, k)];
+                q[(i, k)] -= dot * v;
+            }
+        }
+        let norm: f64 = (0..d).map(|k| q[(i, k)] * q[(i, k)]).sum::<f64>().sqrt();
+        if norm < 1e-10 {
+            return None;
+        }
+        for k in 0..d {
+            q[(i, k)] /= norm;
+        }
+    }
+    Some(q)
+}
+
+/// Random skew-symmetric matrix with N(0, sigma^2) upper-triangle entries.
+pub fn random_skew(d: usize, sigma: f64, rng: &mut crate::stats::Pcg64) -> Mat {
+    let mut k = Mat::zeros(d);
+    for i in 0..d {
+        for j in i + 1..d {
+            let v = rng.normal_scaled(0.0, sigma);
+            k[(i, j)] = v;
+            k[(j, i)] = -v;
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Pcg64;
+    use crate::testkit;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::seeded(0);
+        let m = random_orthonormal(5, &mut rng);
+        let i = Mat::eye(5);
+        assert!(m.matmul(&i).frobenius_dist(&m) < 1e-12);
+    }
+
+    #[test]
+    fn random_orthonormal_is_orthonormal() {
+        testkit::forall(32, |rng| {
+            let d = rng.below(7) + 2;
+            let q = random_orthonormal(d, rng);
+            assert!(q.orthonormal_defect() < 1e-10, "defect {}", q.orthonormal_defect());
+            let (_, logdet) = q.slogdet();
+            assert!(logdet.abs() < 1e-9, "logdet {logdet}");
+        });
+    }
+
+    #[test]
+    fn slogdet_known() {
+        let m = Mat::from_rows(&[&[2.0, 0.0], &[0.0, 3.0]]);
+        let (s, l) = m.slogdet();
+        assert_eq!(s, 1.0);
+        assert!((l - 6.0f64.ln()).abs() < 1e-12);
+        let m = Mat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]); // det = -1
+        let (s, l) = m.slogdet();
+        assert_eq!(s, -1.0);
+        assert!(l.abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_round_trip() {
+        testkit::forall(32, |rng| {
+            let d = rng.below(5) + 2;
+            let mut m = Mat::zeros(d);
+            for v in m.a.iter_mut() {
+                *v = rng.normal();
+            }
+            m = m.add(&Mat::eye(d).scale(3.0)); // keep well-conditioned
+            let inv = m.inverse();
+            let defect = m.matmul(&inv).frobenius_dist(&Mat::eye(d));
+            assert!(defect < 1e-8, "defect {defect}");
+        });
+    }
+
+    #[test]
+    fn expm_skew_is_orthonormal() {
+        testkit::forall(32, |rng| {
+            let d = rng.below(6) + 2;
+            let k = random_skew(d, 0.5, rng);
+            let r = k.expm();
+            assert!(r.orthonormal_defect() < 1e-9, "defect {}", r.orthonormal_defect());
+        });
+    }
+
+    #[test]
+    fn expm_matches_series_small() {
+        // exp of 2x2 rotation generator: [[0,-t],[t,0]] -> rotation matrix
+        let t = 0.7f64;
+        let k = Mat::from_rows(&[&[0.0, -t], &[t, 0.0]]);
+        let r = k.expm();
+        assert!((r[(0, 0)] - t.cos()).abs() < 1e-12);
+        assert!((r[(0, 1)] + t.sin()).abs() < 1e-12);
+        assert!((r[(1, 0)] - t.sin()).abs() < 1e-12);
+        assert!((r[(1, 1)] - t.cos()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expm_inverse_is_negative_exponent() {
+        let mut rng = Pcg64::seeded(5);
+        let k = random_skew(4, 0.3, &mut rng);
+        let a = k.expm();
+        let b = k.scale(-1.0).expm();
+        assert!(a.matmul(&b).frobenius_dist(&Mat::eye(4)) < 1e-10);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg64::seeded(6);
+        let m = random_orthonormal(4, &mut rng);
+        let x = [1.0, -2.0, 0.5, 3.0];
+        let mut y = [0.0; 4];
+        m.matvec(&x, &mut y);
+        for i in 0..4 {
+            let want: f64 = (0..4).map(|j| m[(i, j)] * x[j]).sum();
+            assert!((y[i] - want).abs() < 1e-14);
+        }
+    }
+}

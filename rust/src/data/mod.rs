@@ -1,0 +1,8 @@
+//! Datasets and the small linear-algebra kit the models sit on.
+
+pub mod dataset;
+pub mod linalg;
+pub mod synthetic;
+
+pub use dataset::{Dataset, Unsupervised};
+pub use linalg::Mat;

@@ -1,0 +1,305 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!
+//!  A1 — mini-batch size m: worst-case error vs data usage trade-off
+//!  A2 — bound family: Pocock vs O'Brien-Fleming vs Wang-Tsiatis at
+//!       matched worst-case error
+//!  A3 — with- vs without-replacement mini-batches (the FPC term of
+//!       Eqn. 4 assumes without)
+//!  A4 — adaptive epsilon schedule vs fixed epsilons (paper §7
+//!       future work)
+//!  A5 — pseudo-marginal Poisson-estimator baseline vs the sequential
+//!       test (the paper's §4 argument)
+
+use crate::coordinator::adaptive::{run_adaptive_chain, EpsSchedule};
+use crate::coordinator::austerity::{seq_mh_test, SeqTestConfig};
+use crate::coordinator::chain::{run_chain, Budget};
+use crate::coordinator::dp::{analyze_walk, uniform_pis};
+use crate::coordinator::mh::MhMode;
+use crate::coordinator::scheduler::MinibatchScheduler;
+use crate::exp::common::{FigureSink, Scale};
+use crate::exp::population::{harvest_pairs, mnist_like_model, FixedLs};
+use crate::samplers::pseudo_marginal::{run_pseudo_marginal, PoissonEstimator};
+use crate::samplers::GaussianRandomWalk;
+use crate::stats::welford::Welford;
+use crate::stats::{MomentAccumulator, Pcg64};
+use crate::stats::student_t::t_sf;
+
+/// A1: sweep m at fixed worst-case error target; report (m, eps needed,
+/// usage at mu_std = 0 and at mu_std = 2).
+pub fn ablation_batch_size(_scale: Scale) -> Vec<(usize, f64, f64)> {
+    let n = 100_000;
+    let mut sink = FigureSink::new("ablation_batch_size");
+    sink.header(&["m", "worst_error", "usage_mu0", "usage_mu2"]);
+    let mut out = Vec::new();
+    for m in [50usize, 100, 200, 500, 1000, 2000, 5000] {
+        let eps = 0.01;
+        let worst = crate::coordinator::dp::analyze_pocock(0.0, m, n, eps, 128);
+        let far = crate::coordinator::dp::analyze_pocock(2.0, m, n, eps, 128);
+        sink.row(&[m as f64, worst.error, worst.expected_pi, far.expected_pi]);
+        out.push((m, worst.expected_pi, far.expected_pi));
+    }
+    out
+}
+
+/// A2: bound families at matched G0 scale.
+pub fn ablation_bound_family(_scale: Scale) -> Vec<(String, f64, f64)> {
+    let n = 100_000;
+    let m = 500;
+    let pis = uniform_pis(m, n);
+    let mut sink = FigureSink::new("ablation_bound_family");
+    sink.header(&["family", "worst_error", "usage_mu0", "usage_mu2"]);
+    let mut out = Vec::new();
+    for (label, delta_exp) in [("pocock", 0.0), ("wt-0.25", -0.25), ("obf", -0.5)] {
+        // calibrate G0 so each family hits the same worst-case error
+        let target = 0.05;
+        let mut lo = 0.5f64;
+        let mut hi = 6.0f64;
+        for _ in 0..30 {
+            let g0 = 0.5 * (lo + hi);
+            let bounds: Vec<f64> =
+                pis[..pis.len() - 1].iter().map(|&p| g0 * p.powf(delta_exp)).collect();
+            let e = analyze_walk(0.0, &pis, &bounds, 128).error;
+            if e > target {
+                lo = g0;
+            } else {
+                hi = g0;
+            }
+        }
+        let g0 = 0.5 * (lo + hi);
+        let bounds: Vec<f64> =
+            pis[..pis.len() - 1].iter().map(|&p| g0 * p.powf(delta_exp)).collect();
+        let worst = analyze_walk(0.0, &pis, &bounds, 128);
+        let far = analyze_walk(2.0, &pis, &bounds, 128);
+        sink.row_tagged(label, &[worst.error, worst.expected_pi, far.expected_pi]);
+        out.push((label.to_string(), worst.expected_pi, far.expected_pi));
+    }
+    out
+}
+
+/// A3: without- vs with-replacement mini-batches on a real population.
+/// With replacement, the FPC is wrong (variance never reaches 0), so the
+/// test needs more data and can even fail to terminate by exhaustion —
+/// we emulate the with-replacement variant explicitly.
+pub fn ablation_replacement(scale: Scale) -> (f64, f64) {
+    let n = scale.n(12_214);
+    let m = 500.min(n / 4).max(16);
+    let model = mnist_like_model(n, 42);
+    let pop = &harvest_pairs(&model, 0.01, 1, 5, 7)[0];
+    let trials = scale.steps(400).max(50);
+    let mu0 = pop.mu - 1.0 * pop.sigma_l / ((n - 1) as f64).sqrt();
+
+    // without replacement: the real sequential test
+    let fixed = FixedLs(&pop.ls);
+    let cfg = SeqTestConfig::new(0.05, m);
+    let mut sched = MinibatchScheduler::new(n);
+    let mut rng = Pcg64::seeded(11);
+    let mut buf = Vec::new();
+    let mut used_wo = 0u64;
+    for _ in 0..trials {
+        let o = seq_mh_test(&fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng, &mut buf);
+        used_wo += o.n_used as u64;
+    }
+
+    // with replacement: same decision rule, iid batches, no FPC
+    let mut used_w = 0u64;
+    for _ in 0..trials {
+        let mut acc = MomentAccumulator::new();
+        loop {
+            let (mut s, mut s2) = (0.0, 0.0);
+            for _ in 0..m {
+                let l = pop.ls[rng.below(n)];
+                s += l;
+                s2 += l * l;
+            }
+            acc.add_batch(s, s2, m);
+            let nn = acc.n();
+            // plain (no-FPC) t statistic
+            let std = acc.sample_std() / (nn as f64).sqrt();
+            let t = if std == 0.0 {
+                f64::INFINITY
+            } else {
+                (acc.mean() - mu0) / std
+            };
+            let delta = t_sf(t.abs(), (nn - 1) as f64);
+            if delta < 0.05 || nn >= 4 * n {
+                used_w += nn as u64;
+                break;
+            }
+        }
+    }
+
+    let wo = used_wo as f64 / (trials as f64 * n as f64);
+    let w = used_w as f64 / (trials as f64 * n as f64);
+    let mut sink = FigureSink::new("ablation_replacement");
+    sink.header(&["without_replacement_usage", "with_replacement_usage"]);
+    sink.row(&[wo, w]);
+    (wo, w)
+}
+
+/// A4: adaptive epsilon schedule vs fixed epsilons — final estimate error
+/// of E[theta_0] at a fixed step budget.
+pub fn ablation_adaptive(scale: Scale) -> Vec<(String, f64, f64)> {
+    let n = scale.n(12_214);
+    let model = mnist_like_model(n, 42);
+    let init = model.map_estimate(60);
+    let kernel = GaussianRandomWalk::new(0.01, model.prior_precision);
+    let steps = scale.steps(20_000);
+
+    // truth from a long exact run
+    let mut rng = Pcg64::seeded(1);
+    let (truth_samples, _) = run_chain(
+        &model,
+        &kernel,
+        &MhMode::Exact,
+        init.clone(),
+        Budget::Steps(steps * 2),
+        steps / 10,
+        1,
+        |t| t[0],
+        &mut rng,
+    );
+    let mut tw = Welford::new();
+    for s in &truth_samples {
+        tw.add(s.value);
+    }
+    let truth = tw.mean();
+
+    let mut sink = FigureSink::new("ablation_adaptive");
+    sink.header(&["schedule", "sq_error", "data_fraction"]);
+    let mut out = Vec::new();
+    let schedules: Vec<(String, EpsSchedule)> = vec![
+        ("fixed_0.01".into(), EpsSchedule::Fixed(0.01)),
+        ("fixed_0.1".into(), EpsSchedule::Fixed(0.1)),
+        ("anneal".into(), EpsSchedule::default_anneal()),
+    ];
+    for (label, sched) in schedules {
+        let mut rng = Pcg64::seeded(2);
+        let (samples, stats) = run_adaptive_chain(
+            &model,
+            &kernel,
+            &sched,
+            500.min(n / 4).max(16),
+            init.clone(),
+            Budget::Steps(steps),
+            steps / 10,
+            1,
+            |t| t[0],
+            &mut rng,
+        );
+        let mut w = Welford::new();
+        for s in &samples {
+            w.add(s.value);
+        }
+        let sq = (w.mean() - truth) * (w.mean() - truth);
+        let frac = stats.mean_data_fraction(n);
+        sink.row_tagged(&label, &[sq, frac]);
+        out.push((label, sq, frac));
+    }
+    out
+}
+
+/// A5: the pseudo-marginal baseline vs the sequential test.
+pub fn ablation_pseudo_marginal(scale: Scale) -> (f64, f64, usize) {
+    let n = scale.n(12_214);
+    let model = mnist_like_model(n, 42);
+    let init = model.map_estimate(50);
+    let kernel = GaussianRandomWalk::new(0.02, model.prior_precision);
+    let steps = scale.steps(600).max(100);
+
+    let est = PoissonEstimator { batch: 100.min(n / 8).max(8), lambda: 3.0, center: 0.0 };
+    let mut rng = Pcg64::seeded(3);
+    let pm = run_pseudo_marginal(&model, &kernel, &est, init.clone(), steps, &mut rng, |_| {});
+
+    let mut rng = Pcg64::seeded(3);
+    let (_, seq) = run_chain(
+        &model,
+        &kernel,
+        &MhMode::approx(0.05, 500.min(n / 4).max(16)),
+        init,
+        Budget::Steps(steps),
+        0,
+        1,
+        |_| 0.0,
+        &mut rng,
+    );
+
+    let pm_acc = pm.accepted as f64 / pm.steps as f64;
+    let seq_acc = seq.acceptance_rate();
+    let mut sink = FigureSink::new("ablation_pseudo_marginal");
+    sink.header(&["pm_accept", "seq_accept", "pm_longest_stuck", "pm_clamped_frac"]);
+    sink.row(&[
+        pm_acc,
+        seq_acc,
+        pm.longest_stuck as f64,
+        pm.clamped as f64 / pm.steps as f64,
+    ]);
+    (pm_acc, seq_acc, pm.longest_stuck)
+}
+
+/// Run all ablations.
+pub fn run_all(scale: Scale) {
+    ablation_batch_size(scale);
+    ablation_bound_family(scale);
+    ablation_replacement(scale);
+    ablation_adaptive(scale);
+    ablation_pseudo_marginal(scale);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_size_tradeoff_holds() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        let rows = ablation_batch_size(Scale(1.0));
+        // at mu_std = 2, smaller m should let the test stop earlier
+        let first = rows.first().unwrap().2;
+        let last = rows.last().unwrap().2;
+        assert!(first < last, "usage@mu2: m=50 {first} vs m=5000 {last}");
+    }
+
+    #[test]
+    fn replacement_ablation_favors_without() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        let (wo, w) = ablation_replacement(Scale(0.3));
+        assert!(
+            wo <= w + 0.05,
+            "without-replacement {wo} should not use more than with {w}"
+        );
+    }
+
+    #[test]
+    fn pseudo_marginal_underperforms_sequential() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        let (pm, seq, stuck) = ablation_pseudo_marginal(Scale(0.3));
+        assert!(pm < seq, "pm {pm} vs seq {seq}");
+        assert!(stuck >= 5, "stuck {stuck}");
+    }
+
+    #[test]
+    fn adaptive_between_fixed_extremes_in_data_usage() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        let rows = ablation_adaptive(Scale(0.05));
+        let by = |name: &str| rows.iter().find(|r| r.0 == name).unwrap().2;
+        let tight = by("fixed_0.01");
+        let loose = by("fixed_0.1");
+        let anneal = by("anneal");
+        assert!(
+            anneal <= tight + 0.05 && anneal >= loose - 0.05,
+            "anneal {anneal} vs tight {tight} loose {loose}"
+        );
+    }
+
+    #[test]
+    fn bound_family_matched_error() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        let rows = ablation_bound_family(Scale(1.0));
+        assert_eq!(rows.len(), 3);
+        // all usable (usage in (0, 1])
+        for (label, u0, u2) in &rows {
+            assert!(*u0 > 0.0 && *u0 <= 1.0, "{label}: {u0}");
+            assert!(*u2 > 0.0 && *u2 <= 1.0, "{label}: {u2}");
+        }
+    }
+}

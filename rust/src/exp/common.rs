@@ -1,0 +1,133 @@
+//! Shared experiment infrastructure: CSV emission (stdout + file under
+//! `target/figures/`) and run-scale control so benches and the CLI can
+//! run the same drivers at different sizes.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+/// Output sink for one figure: echoes rows to stdout and writes a CSV.
+pub struct FigureSink {
+    name: String,
+    file: Option<std::fs::File>,
+    quiet: bool,
+}
+
+impl FigureSink {
+    pub fn new(name: &str) -> Self {
+        let dir = figures_dir();
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join(format!("{name}.csv"));
+        let file = std::fs::File::create(&path).ok();
+        FigureSink { name: name.to_string(), file, quiet: false }
+    }
+
+    pub fn quiet(name: &str) -> Self {
+        let mut s = Self::new(name);
+        s.quiet = true;
+        s
+    }
+
+    pub fn header(&mut self, cols: &[&str]) {
+        self.line(&cols.join(","));
+    }
+
+    pub fn row(&mut self, values: &[f64]) {
+        let s = values
+            .iter()
+            .map(|v| {
+                if v.is_nan() {
+                    "nan".to_string()
+                } else {
+                    format!("{v:.6e}")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        self.line(&s);
+    }
+
+    pub fn row_tagged(&mut self, tag: &str, values: &[f64]) {
+        let mut s = tag.to_string();
+        for v in values {
+            s.push(',');
+            if v.is_nan() {
+                s.push_str("nan");
+            } else {
+                s.push_str(&format!("{v:.6e}"));
+            }
+        }
+        self.line(&s);
+    }
+
+    fn line(&mut self, s: &str) {
+        if !self.quiet {
+            println!("[{}] {s}", self.name);
+        }
+        if let Some(f) = &mut self.file {
+            let _ = writeln!(f, "{s}");
+        }
+    }
+}
+
+/// Where figure CSVs land.
+pub fn figures_dir() -> PathBuf {
+    std::env::var_os("AUSTERITY_FIGURES")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target").join("figures")
+        })
+}
+
+/// Run-scale knob: 1.0 = paper scale, smaller = faster smoke runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale(pub f64);
+
+impl Scale {
+    pub fn n(&self, full: usize) -> usize {
+        ((full as f64 * self.0).round() as usize).max(16)
+    }
+
+    pub fn steps(&self, full: usize) -> usize {
+        ((full as f64 * self.0).round() as usize).max(10)
+    }
+
+    pub fn secs(&self, full: f64) -> f64 {
+        (full * self.0).max(0.2)
+    }
+}
+
+impl Default for Scale {
+    fn default() -> Self {
+        Scale(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_writes_csv() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_test");
+        let mut s = FigureSink::quiet("unit_test_sink");
+        s.header(&["a", "b"]);
+        s.row(&[1.0, f64::NAN]);
+        s.row_tagged("tag", &[2.5]);
+        drop(s);
+        let text =
+            std::fs::read_to_string("/tmp/austerity_fig_test/unit_test_sink.csv").unwrap();
+        assert!(text.contains("a,b"));
+        assert!(text.contains("nan"));
+        assert!(text.contains("tag,2.5"));
+        std::env::remove_var("AUSTERITY_FIGURES");
+    }
+
+    #[test]
+    fn scale_clamps() {
+        let s = Scale(0.001);
+        assert_eq!(s.n(1000), 16);
+        assert!(s.secs(10.0) >= 0.2);
+        let full = Scale::default();
+        assert_eq!(full.n(1000), 1000);
+    }
+}

@@ -1,0 +1,184 @@
+//! Analysis figures driven by the logistic population:
+//!   Fig. 1  — sequential-test error: simulation vs DP vs worst bound
+//!   Fig. 7  — t-statistic distribution vs Student-t / normal
+//!   Fig. 8  — random-walk realizations + analytic envelope
+//!   Fig. 10 — data usage: simulation vs DP vs worst case
+
+use crate::coordinator::austerity::{seq_mh_test, SeqTestConfig};
+use crate::coordinator::dp::{analyze_pocock, stage_coeffs, uniform_pis};
+use crate::coordinator::scheduler::MinibatchScheduler;
+use crate::exp::common::{FigureSink, Scale};
+use crate::exp::population::{harvest_pairs, mnist_like_model, FixedLs};
+use crate::stats::normal::phi_pdf;
+use crate::stats::student_t::t_pdf;
+use crate::stats::welford::MomentAccumulator;
+use crate::stats::{Histogram, Pcg64};
+
+/// Figs. 1 and 10 share the simulation: run real sequential tests on a
+/// real l-population at chosen mu_std values, measure error and usage.
+pub fn run_fig1_and_fig10(scale: Scale) {
+    let n = scale.n(12_214);
+    let m = 500usize.min(n / 4).max(16);
+    let model = mnist_like_model(n, 42);
+    let pop = &harvest_pairs(&model, 0.01, 1, 5, 7)[0];
+
+    let trials = scale.steps(1_000);
+    let eps_values = [0.01, 0.05, 0.1];
+    let mu_stds = [0.0, 0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+    let mut f1 = FigureSink::new("fig1_error");
+    f1.header(&["eps", "mu_std", "sim_error", "sim_stderr", "dp_error", "worst_bound"]);
+    let mut f10 = FigureSink::new("fig10_data_usage");
+    f10.header(&["eps", "mu_std", "sim_pi", "dp_pi", "worst_pi"]);
+
+    let sqrt_n1 = ((n - 1) as f64).sqrt();
+    for &eps in &eps_values {
+        let worst = analyze_pocock(0.0, m, n, eps, 256);
+        for &mu_std in &mu_stds {
+            // mu0 placed so the pair has exactly this standardized mean
+            let mu0 = pop.mu - mu_std * pop.sigma_l / sqrt_n1;
+            let truth = pop.mu > mu0 || mu_std == 0.0;
+            let cfg = SeqTestConfig::new(eps, m);
+            let fixed = FixedLs(&pop.ls);
+            let mut sched = MinibatchScheduler::new(n);
+            let mut rng = Pcg64::new(1000 + (eps * 1e4) as u64, mu_std.to_bits());
+            let mut buf = Vec::new();
+            let mut wrong = 0usize;
+            let mut used = 0u64;
+            for _ in 0..trials {
+                let out =
+                    seq_mh_test(&fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng, &mut buf);
+                used += out.n_used as u64;
+                if mu_std == 0.0 {
+                    // worst case: any early decision counts half (Eqn. 21)
+                    if out.n_used < n {
+                        wrong += 1;
+                    }
+                } else if out.accept != truth {
+                    wrong += 1;
+                }
+            }
+            let mut sim_err = wrong as f64 / trials as f64;
+            if mu_std == 0.0 {
+                sim_err *= 0.5;
+            }
+            let stderr = (sim_err * (1.0 - sim_err) / trials as f64).sqrt();
+            let dp = analyze_pocock(mu_std, m, n, eps, 256);
+            f1.row(&[eps, mu_std, sim_err, stderr, dp.error, worst.error]);
+            f10.row(&[
+                eps,
+                mu_std,
+                used as f64 / (trials as f64 * n as f64),
+                dp.expected_pi,
+                worst.expected_pi,
+            ]);
+        }
+    }
+}
+
+/// Fig. 7: empirical t-statistic distribution under resampling without
+/// replacement at mu = mu0, vs Student-t(n-1) and standard normal pdfs.
+pub fn run_fig7(scale: Scale) {
+    let n = scale.n(12_214);
+    let model = mnist_like_model(n, 42);
+    let pop = &harvest_pairs(&model, 0.01, 1, 5, 9)[0];
+    let resamples = scale.steps(100_000);
+
+    let mut sink = FigureSink::new("fig7_tstat");
+    sink.header(&["n", "bin_center", "empirical_density", "student_t_pdf", "normal_pdf"]);
+
+    let mut rng = Pcg64::seeded(11);
+    for &batch in &[50usize, 500, 5_000] {
+        let batch = batch.min(n / 2);
+        let mut sched = MinibatchScheduler::new(n);
+        let mut hist = Histogram::new(-5.0, 5.0, 50);
+        for _ in 0..resamples {
+            sched.reset();
+            let ids = sched.next_batch(batch, &mut rng);
+            let mut acc = MomentAccumulator::new();
+            for &i in ids {
+                acc.add(pop.ls[i as usize]);
+            }
+            // t statistic at mu0 = true mean (the null of Fig. 7)
+            let t = acc.t_statistic(pop.mu, n);
+            if t.is_finite() {
+                hist.add(t);
+            }
+        }
+        for b in 0..hist.bins() {
+            let c = hist.center(b);
+            sink.row(&[
+                batch as f64,
+                c,
+                hist.density(b),
+                t_pdf(c, (batch - 1) as f64),
+                phi_pdf(c),
+            ]);
+        }
+    }
+}
+
+/// Fig. 8: a few z random-walk realizations plus the analytic mean and
+/// 95% envelope as functions of pi (Proposition 2).
+pub fn run_fig8(_scale: Scale) {
+    let n = 10_000usize;
+    let m = 500usize;
+    let mu_std = 1.5f64;
+    let pis = uniform_pis(m, n);
+    let mut sink = FigureSink::new("fig8_walk");
+    sink.header(&["pi", "mean", "lo95", "hi95", "path0", "path1", "path2", "path3"]);
+
+    let paths = 4usize;
+    let mut zs = vec![0.0f64; paths];
+    let mut rng = Pcg64::seeded(8);
+    for (j, &pi) in pis.iter().enumerate() {
+        if pi >= 1.0 {
+            break;
+        }
+        let pi_prev = if j == 0 { 0.0 } else { pis[j - 1] };
+        let (a, b, sd) = stage_coeffs(mu_std, pi_prev, pi);
+        for z in zs.iter_mut() {
+            *z = a + b * *z + sd * rng.normal();
+        }
+        // analytic marginal: mean mu_std sqrt(pi/(1-pi)), var 1
+        let mean = mu_std * (pi / (1.0 - pi)).sqrt();
+        let mut row = vec![pi, mean, mean - 1.96, mean + 1.96];
+        row.extend(zs.iter().copied());
+        sink.row(&row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_and_10_smoke() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        run_fig1_and_fig10(Scale(0.02));
+        let text =
+            std::fs::read_to_string("/tmp/austerity_fig_smoke/fig1_error.csv").unwrap();
+        assert!(text.lines().count() > 10);
+        let usage =
+            std::fs::read_to_string("/tmp/austerity_fig_smoke/fig10_data_usage.csv").unwrap();
+        assert!(usage.lines().count() > 10);
+    }
+
+    #[test]
+    fn fig7_smoke() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        run_fig7(Scale(0.01));
+        let text =
+            std::fs::read_to_string("/tmp/austerity_fig_smoke/fig7_tstat.csv").unwrap();
+        assert!(text.lines().count() > 100);
+    }
+
+    #[test]
+    fn fig8_smoke() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        run_fig8(Scale(1.0));
+        let text =
+            std::fs::read_to_string("/tmp/austerity_fig_smoke/fig8_walk.csv").unwrap();
+        assert!(text.lines().count() >= 15);
+    }
+}

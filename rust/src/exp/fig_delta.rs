@@ -1,0 +1,98 @@
+//! Figs. 11 and 12 (supplementary B): the acceptance-probability error.
+//!   Fig. 11 — Delta vs exact Pa, with E_u|E| and the worst-case bound
+//!   Fig. 12 — approximate Pa (analytic and measured) vs true Pa
+
+use crate::coordinator::austerity::SeqTestConfig;
+use crate::coordinator::delta::{
+    approx_accept_prob, delta_accept_prob, exact_accept_prob, mean_abs_error, SeqTestTable,
+};
+use crate::coordinator::scheduler::MinibatchScheduler;
+use crate::exp::common::{FigureSink, Scale};
+use crate::exp::population::{harvest_pairs, mnist_like_model, FixedLs};
+use crate::stats::Pcg64;
+
+pub struct DeltaPoint {
+    pub pa: f64,
+    pub delta: f64,
+    pub mean_abs_e: f64,
+    pub pa_approx_analytic: f64,
+    pub pa_approx_measured: f64,
+}
+
+pub fn run_fig11_and_fig12(scale: Scale) -> Vec<DeltaPoint> {
+    let n = scale.n(12_214);
+    let m = 500usize.min(n / 4).max(16);
+    let eps = 0.05;
+    let model = mnist_like_model(n, 42);
+    let pair_count = scale.steps(40).min(60).max(6);
+    let pops = harvest_pairs(&model, 0.01, pair_count, 2, 3);
+    let table = SeqTestTable::build(m, n, eps, 12.0, 21, 128);
+    let worst = table.error(0.0);
+
+    let mut f11 = FigureSink::new("fig11_delta_vs_pa");
+    f11.header(&["pa", "delta", "mean_abs_e", "worst_bound"]);
+    let mut f12 = FigureSink::new("fig12_approx_pa");
+    f12.header(&["pa_true", "pa_approx_analytic", "pa_approx_measured"]);
+
+    let trials = scale.steps(400).max(50);
+    let cfg = SeqTestConfig::new(eps, m);
+    let mut out = Vec::new();
+    let mut rng = Pcg64::seeded(17);
+
+    for pop in &pops {
+        let stats = pop.stats();
+        let pa = exact_accept_prob(n, &stats);
+        let delta = delta_accept_prob(n, &stats, &table, 24);
+        let mean_e = mean_abs_error(n, &stats, &table, 24);
+        let pa_analytic = approx_accept_prob(n, &stats, &table, 24);
+
+        // measured: run the actual sequential test with fresh u each time
+        let fixed = FixedLs(&pop.ls);
+        let mut sched = MinibatchScheduler::new(n);
+        let mut buf = Vec::new();
+        let mut accepts = 0usize;
+        for _ in 0..trials {
+            let u = rng.uniform_pos();
+            let mu0 = (u.ln() + pop.log_correction) / n as f64;
+            let o = crate::coordinator::austerity::seq_mh_test(
+                &fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng, &mut buf,
+            );
+            accepts += o.accept as usize;
+        }
+        let pa_measured = accepts as f64 / trials as f64;
+
+        f11.row(&[pa, delta, mean_e, worst]);
+        f12.row(&[pa, pa_analytic, pa_measured]);
+        out.push(DeltaPoint {
+            pa,
+            delta,
+            mean_abs_e: mean_e,
+            pa_approx_analytic: pa_analytic,
+            pa_approx_measured: pa_measured,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig11_12_deltas_bounded_and_consistent() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        let pts = run_fig11_and_fig12(Scale(0.05));
+        assert!(!pts.is_empty());
+        for p in &pts {
+            // |Delta| <= E_u|E| <= worst bound (cancellation claim)
+            assert!(p.delta.abs() <= p.mean_abs_e + 1e-9, "{} vs {}", p.delta, p.mean_abs_e);
+            // analytic and measured approximate Pa agree reasonably
+            assert!(
+                (p.pa_approx_analytic - p.pa_approx_measured).abs() < 0.2,
+                "analytic {} measured {}",
+                p.pa_approx_analytic,
+                p.pa_approx_measured
+            );
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Gibbs-sampling figures (supplementary F.1):
+//!   Fig. 14 — empirical vs exact conditional probability, eps sweep
+//!   Fig. 15 — average L1 error over 5-variable joint marginals vs time
+
+use std::time::Instant;
+
+use crate::exp::common::{FigureSink, Scale};
+use crate::models::MrfModel;
+use crate::samplers::gibbs::{
+    gibbs_sweep, gibbs_update, GibbsMode, GibbsScratch, GibbsStats, SubsetMarginal,
+};
+use crate::stats::Pcg64;
+
+/// Fig. 14: for random (variable, neighborhood) pairs, the frequency of
+/// assigning X_v = 1 under repeated approximate updates vs the exact
+/// conditional.
+pub fn run_fig14(scale: Scale) -> Vec<(f64, f64, f64)> {
+    let d = scale.n(100).clamp(12, 100);
+    let model = MrfModel::random(d, 0.02, 5);
+    let states = scale.steps(30).clamp(8, 60);
+    let trials = scale.steps(300).max(60);
+    let eps_values = [0.01, 0.1, 0.25];
+
+    let mut sink = FigureSink::new("fig14_conditionals");
+    sink.header(&["eps", "exact_conditional", "empirical_conditional"]);
+
+    let mut rng = Pcg64::seeded(14);
+    let mut scratch = GibbsScratch::new(&model);
+    let mut out = Vec::new();
+
+    // warm the state with a few exact sweeps so neighborhoods are typical
+    let mut x: Vec<bool> = (0..d).map(|_| rng.uniform() < 0.5).collect();
+    let mut stats = GibbsStats::default();
+    for _ in 0..3 {
+        gibbs_sweep(&model, &mut x, &GibbsMode::Exact, &mut scratch, &mut stats, &mut rng);
+    }
+
+    for _ in 0..states {
+        // random neighborhood tweak + random variable
+        let flip = rng.below(d);
+        x[flip] = !x[flip];
+        let v = rng.below(d);
+        let exact = model.exact_conditional(v, &x);
+        for &eps in &eps_values {
+            let mode = GibbsMode::Approx { eps, batch: 500.min(model.n_pairs() / 2).max(8) };
+            let mut ones = 0usize;
+            for _ in 0..trials {
+                let mut xx = x.clone();
+                gibbs_update(&model, v, &mut xx, &mode, &mut scratch, &mut rng);
+                ones += xx[v] as usize;
+            }
+            let emp = ones as f64 / trials as f64;
+            sink.row(&[eps, exact, emp]);
+            out.push((eps, exact, emp));
+        }
+    }
+    out
+}
+
+/// Fig. 15: L1 error of 5-variable joint marginals vs running time for
+/// exact Gibbs and an eps sweep. Ground truth from a long exact run.
+pub fn run_fig15(scale: Scale) -> Vec<(f64, f64)> {
+    let d = scale.n(100).clamp(12, 100);
+    let model = MrfModel::random(d, 0.02, 6);
+    let n_subsets = scale.steps(1_600).clamp(50, 1_600);
+    let mut rng = Pcg64::seeded(15);
+
+    // random 5-variable subsets
+    let subsets: Vec<Vec<usize>> = (0..n_subsets)
+        .map(|_| {
+            let mut vars = std::collections::BTreeSet::new();
+            while vars.len() < 5.min(d) {
+                vars.insert(rng.below(d));
+            }
+            vars.into_iter().collect()
+        })
+        .collect();
+
+    // ground truth from a long exact run
+    let gt_sweeps = scale.steps(4_000).max(300);
+    let mut truth_marginals: Vec<SubsetMarginal> =
+        subsets.iter().map(|s| SubsetMarginal::new(s.clone())).collect();
+    {
+        let mut x: Vec<bool> = (0..d).map(|_| rng.uniform() < 0.5).collect();
+        let mut scratch = GibbsScratch::new(&model);
+        let mut stats = GibbsStats::default();
+        for s in 0..gt_sweeps {
+            gibbs_sweep(&model, &mut x, &GibbsMode::Exact, &mut scratch, &mut stats, &mut rng);
+            if s >= gt_sweeps / 10 {
+                for m in truth_marginals.iter_mut() {
+                    m.record(&x);
+                }
+            }
+        }
+    }
+    let truth: Vec<Vec<f64>> = truth_marginals.iter().map(|m| m.probs()).collect();
+
+    // timed runs
+    let budget_secs = scale.secs(30.0);
+    let checkpoints: Vec<f64> = (1..=8)
+        .map(|i| budget_secs * (i as f64 / 8.0).powi(2))
+        .collect();
+    let modes: Vec<(f64, GibbsMode)> = vec![
+        (0.0, GibbsMode::Exact),
+        (0.05, GibbsMode::Approx { eps: 0.05, batch: 500.min(model.n_pairs() / 2).max(8) }),
+        (0.1, GibbsMode::Approx { eps: 0.1, batch: 500.min(model.n_pairs() / 2).max(8) }),
+        (0.2, GibbsMode::Approx { eps: 0.2, batch: 500.min(model.n_pairs() / 2).max(8) }),
+    ];
+
+    let mut sink = FigureSink::new("fig15_l1_error");
+    sink.header(&["eps", "t_secs", "l1_error", "sweeps", "pairs_used"]);
+    let mut finals = Vec::new();
+
+    for (eps, mode) in &modes {
+        let mut rng = Pcg64::new(150, (eps * 1e4) as u64);
+        let mut x: Vec<bool> = (0..d).map(|_| rng.uniform() < 0.5).collect();
+        let mut scratch = GibbsScratch::new(&model);
+        let mut stats = GibbsStats::default();
+        let mut marginals: Vec<SubsetMarginal> =
+            subsets.iter().map(|s| SubsetMarginal::new(s.clone())).collect();
+        let start = Instant::now();
+        let mut next_cp = 0usize;
+        let mut sweeps = 0usize;
+        let mut last_err = f64::NAN;
+        while next_cp < checkpoints.len() {
+            gibbs_sweep(&model, &mut x, mode, &mut scratch, &mut stats, &mut rng);
+            sweeps += 1;
+            for m in marginals.iter_mut() {
+                m.record(&x);
+            }
+            let el = start.elapsed().as_secs_f64();
+            while next_cp < checkpoints.len() && el >= checkpoints[next_cp] {
+                let err: f64 = marginals
+                    .iter()
+                    .zip(&truth)
+                    .map(|(m, t)| m.l1_to(t))
+                    .sum::<f64>()
+                    / marginals.len() as f64;
+                sink.row(&[*eps, el, err, sweeps as f64, stats.pairs_used as f64]);
+                last_err = err;
+                next_cp += 1;
+            }
+        }
+        finals.push((*eps, last_err));
+    }
+    finals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig14_small_eps_tracks_exact() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        let pts = run_fig14(Scale(0.15));
+        assert!(!pts.is_empty());
+        // eps = 0.01 rows should hug the diagonal
+        let (mut err, mut n) = (0.0, 0);
+        for &(eps, exact, emp) in &pts {
+            if eps == 0.01 {
+                err += (exact - emp).abs();
+                n += 1;
+            }
+        }
+        assert!(n > 0);
+        let mean_gap = err / n as f64;
+        assert!(mean_gap < 0.15, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn fig15_runs_and_reports() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        let finals = run_fig15(Scale(0.02));
+        assert_eq!(finals.len(), 4);
+        for (_, err) in &finals {
+            assert!(err.is_finite() && *err >= 0.0);
+        }
+    }
+}

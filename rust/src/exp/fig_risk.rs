@@ -1,0 +1,225 @@
+//! Risk-vs-time figures:
+//!   Fig. 2 — random-walk logistic regression, risk of predictive mean
+//!   Fig. 3 — ICA on the Stiefel manifold, risk of E[Amari distance]
+//!   Fig. 4 — reversible-jump variable selection, risk of predictive mean
+//!
+//! Each: estimate ground truth from a long exact run, then run replica
+//! chains per epsilon and report chain-averaged MSE at time checkpoints.
+
+use crate::coordinator::chain::{run_chain, Budget};
+use crate::coordinator::mh::MhMode;
+use crate::data::linalg::Mat;
+use crate::data::synthetic::{ica_mixture, sparse_logistic};
+use crate::exp::common::{FigureSink, Scale};
+use crate::exp::population::mnist_like_model;
+use crate::exp::risk_driver::{risk_vs_time, RiskConfig};
+use crate::metrics::predictive::PredictiveMean;
+use crate::models::ica::amari_distance;
+use crate::models::rjlogistic::{RjLogisticModel, RjState};
+use crate::models::{IcaModel, LlDiffModel};
+use crate::samplers::{GaussianRandomWalk, RjKernel, StiefelRandomWalk};
+use crate::stats::Pcg64;
+
+fn emit(sink: &mut FigureSink, results: &[crate::exp::risk_driver::EpsRisk]) {
+    sink.header(&["eps", "t_secs", "risk", "chains", "data_fraction", "acceptance", "steps_per_sec"]);
+    for r in results {
+        for (i, &t) in r.curve.at_secs.iter().enumerate() {
+            sink.row(&[
+                r.eps,
+                t,
+                r.curve.risk[i],
+                r.curve.chains[i] as f64,
+                r.data_fraction,
+                r.acceptance,
+                r.steps_per_sec,
+            ]);
+        }
+    }
+}
+
+/// Fig. 2. Returns (eps, final risk) pairs for assertions.
+pub fn run_fig2(scale: Scale) -> Vec<(f64, f64)> {
+    let n = scale.n(12_214);
+    let n_test = scale.n(2_037).min(n);
+    let model = mnist_like_model(n, 42);
+    let test = mnist_like_model(n_test, 43); // held-out panel
+    let map = model.map_estimate(80);
+    let kernel = GaussianRandomWalk::new(0.01, model.prior_precision);
+
+    let predict = |theta: &Vec<f64>| -> Vec<f64> {
+        (0..test.n()).map(|i| test.predict(test.data().row(i), theta)).collect()
+    };
+
+    // ground truth: long exact run (stands in for the paper's HMC run)
+    let gt_secs = scale.secs(60.0);
+    let mut rng = Pcg64::seeded(5);
+    let mut pm = PredictiveMean::new(test.n());
+    let (_, _stats) = run_chain(
+        &model,
+        &kernel,
+        &MhMode::Exact,
+        map.clone(),
+        Budget::Wall(std::time::Duration::from_secs_f64(gt_secs)),
+        50,
+        2,
+        |theta| {
+            pm.add(&predict(theta));
+            0.0
+        },
+        &mut rng,
+    );
+    let truth = pm.mean();
+
+    let cfg = RiskConfig {
+        eps_values: vec![0.0, 0.01, 0.05, 0.1, 0.2],
+        batch: 500.min(n / 4).max(16),
+        chains: 5,
+        secs: scale.secs(30.0),
+        checkpoints: 10,
+        burn_in_steps: 20,
+        thin: 2,
+        base_seed: 77,
+    };
+    let results = risk_vs_time(&model, &kernel, map, &truth, predict, &cfg);
+    let mut sink = FigureSink::new("fig2_logistic_risk");
+    emit(&mut sink, &results);
+    results
+        .iter()
+        .map(|r| (r.eps, *r.curve.risk.last().unwrap()))
+        .collect()
+}
+
+/// Fig. 3. Returns (eps, final risk).
+pub fn run_fig3(scale: Scale) -> Vec<(f64, f64)> {
+    let n = scale.n(195_000);
+    let (obs, w0) = ica_mixture(n, 11);
+    let model = IcaModel::new(obs);
+    let kernel = StiefelRandomWalk::new(0.03);
+    let init = w0.clone(); // start near truth; burn-in handles the rest
+
+    let test_fn = move |w: &Mat| vec![amari_distance(w, &w0)];
+
+    // ground truth E[amari] from a long exact run
+    let gt_secs = scale.secs(120.0);
+    let mut rng = Pcg64::seeded(6);
+    let mut sum = 0.0f64;
+    let mut count = 0u64;
+    run_chain(
+        &model,
+        &kernel,
+        &MhMode::Exact,
+        init.clone(),
+        Budget::Wall(std::time::Duration::from_secs_f64(gt_secs)),
+        20,
+        1,
+        |w| {
+            sum += test_fn(w)[0];
+            count += 1;
+            0.0
+        },
+        &mut rng,
+    );
+    let truth = vec![sum / count.max(1) as f64];
+
+    let cfg = RiskConfig {
+        eps_values: vec![0.0, 0.01, 0.05, 0.1, 0.2],
+        batch: 600.min(model.n() / 4).max(16),
+        chains: 5,
+        secs: scale.secs(60.0),
+        checkpoints: 10,
+        burn_in_steps: 20,
+        thin: 1,
+        base_seed: 78,
+    };
+    let results = risk_vs_time(&model, &kernel, init, &truth, test_fn, &cfg);
+    let mut sink = FigureSink::new("fig3_ica_risk");
+    emit(&mut sink, &results);
+    results.iter().map(|r| (r.eps, *r.curve.risk.last().unwrap())).collect()
+}
+
+/// Fig. 4. Returns (eps, final risk).
+pub fn run_fig4(scale: Scale) -> Vec<(f64, f64)> {
+    let n = scale.n(130_065);
+    let d = 51;
+    let (ds, _beta) = sparse_logistic(n, d, 12, 0.28, 13);
+    let mut rng = Pcg64::seeded(9);
+    let (train, test) = ds.split(0.8, &mut rng);
+    let model = RjLogisticModel::new(train, 1e-10);
+    let kernel = RjKernel::new(&model);
+    let init = RjState::with_active(d, &[0], &[-0.9]);
+    let n_test = test.n().min(scale.n(2_000));
+
+    let predict = {
+        let test = test.clone();
+        move |s: &RjState| -> Vec<f64> {
+            (0..n_test).map(|i| model_predict(&test, i, s)).collect()
+        }
+    };
+
+    let gt_secs = scale.secs(90.0);
+    let mut rng = Pcg64::seeded(10);
+    let mut pm = PredictiveMean::new(n_test);
+    run_chain(
+        &model,
+        &kernel,
+        &MhMode::Exact,
+        init.clone(),
+        Budget::Wall(std::time::Duration::from_secs_f64(gt_secs)),
+        100,
+        2,
+        |s| {
+            pm.add(&predict(s));
+            0.0
+        },
+        &mut rng,
+    );
+    let truth = pm.mean();
+
+    let cfg = RiskConfig {
+        eps_values: vec![0.0, 0.01, 0.05, 0.1],
+        batch: 500.min(model.n() / 4).max(16),
+        chains: 5,
+        secs: scale.secs(45.0),
+        checkpoints: 10,
+        burn_in_steps: 50,
+        thin: 2,
+        base_seed: 79,
+    };
+    let results = risk_vs_time(&model, &kernel, init, &truth, predict, &cfg);
+    let mut sink = FigureSink::new("fig4_rjmcmc_risk");
+    emit(&mut sink, &results);
+    results.iter().map(|r| (r.eps, *r.curve.risk.last().unwrap())).collect()
+}
+
+fn model_predict(test: &crate::data::Dataset, i: usize, s: &RjState) -> f64 {
+    crate::models::logistic::sigmoid(s.logit(test.row(i)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_smoke_exact_uses_all_data() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        let out = run_fig2(Scale(0.01));
+        assert_eq!(out.len(), 5);
+        for (_, risk) in &out {
+            assert!(risk.is_finite(), "{out:?}");
+        }
+    }
+
+    #[test]
+    fn fig3_smoke() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        let out = run_fig3(Scale(0.005));
+        assert_eq!(out.len(), 5);
+    }
+
+    #[test]
+    fn fig4_smoke() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        let out = run_fig4(Scale(0.005));
+        assert_eq!(out.len(), 4);
+    }
+}

@@ -1,0 +1,75 @@
+//! Experiment drivers regenerating every figure in the paper's
+//! evaluation (see the per-experiment index in DESIGN.md §5):
+//!
+//! | driver                 | paper figure(s) |
+//! |------------------------|-----------------|
+//! | `fig_analysis`         | 1, 7, 8, 10     |
+//! | `fig_risk`             | 2, 3, 4         |
+//! | `fig_sgld`             | 5               |
+//! | `fig_design`           | 6               |
+//! | `fig_delta`            | 11, 12          |
+//! | `fig_rj`               | 13              |
+//! | `fig_gibbs`            | 14, 15          |
+//!
+//! All drivers write CSV series to `target/figures/` (override with
+//! `AUSTERITY_FIGURES`) and take a `Scale` so the bench harness, the CLI
+//! and the test suite can run them at different sizes.
+
+pub mod ablation;
+pub mod common;
+pub mod fig_analysis;
+pub mod fig_delta;
+pub mod fig_design;
+pub mod fig_gibbs;
+pub mod fig_risk;
+pub mod fig_rj;
+pub mod fig_sgld;
+pub mod population;
+pub mod risk_driver;
+
+pub use common::{figures_dir, FigureSink, Scale};
+
+/// Run a named figure at the given scale; returns false for unknown names.
+pub fn run_figure(name: &str, scale: Scale) -> bool {
+    match name {
+        "fig1" | "fig10" => fig_analysis::run_fig1_and_fig10(scale),
+        "fig2" => {
+            fig_risk::run_fig2(scale);
+        }
+        "fig3" => {
+            fig_risk::run_fig3(scale);
+        }
+        "fig4" => {
+            fig_risk::run_fig4(scale);
+        }
+        "fig5" => {
+            fig_sgld::run_fig5(scale);
+        }
+        "fig6" => {
+            fig_design::run_fig6(scale);
+        }
+        "fig7" => fig_analysis::run_fig7(scale),
+        "fig8" => fig_analysis::run_fig8(scale),
+        "fig11" | "fig12" => {
+            fig_delta::run_fig11_and_fig12(scale);
+        }
+        "fig13" => {
+            fig_rj::run_fig13(scale);
+        }
+        "fig14" => {
+            fig_gibbs::run_fig14(scale);
+        }
+        "fig15" => {
+            fig_gibbs::run_fig15(scale);
+        }
+        "ablations" => ablation::run_all(scale),
+        _ => return false,
+    }
+    true
+}
+
+/// All figure names in paper order.
+pub const ALL_FIGURES: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig10", "fig11",
+    "fig12", "fig13", "fig14", "fig15",
+];

@@ -1,0 +1,115 @@
+//! Shared setup for the analysis figures: the synthetic-MNIST logistic
+//! population (§6.1) and (theta, theta') pairs harvested from a trial
+//! chain, reduced to the (mu, sigma_l, log_correction) statistics the
+//! §5 analysis consumes.
+
+use crate::coordinator::delta::PairStats;
+use crate::coordinator::mh::{mh_step, MhMode, MhScratch};
+use crate::data::synthetic::two_class_gaussian;
+use crate::models::traits::{LlDiffModel, ProposalKernel};
+use crate::models::LogisticModel;
+use crate::samplers::GaussianRandomWalk;
+use crate::stats::Pcg64;
+
+/// The paper's §6.1 target at a configurable N (default 12214, D=50).
+pub fn mnist_like_model(n: usize, seed: u64) -> LogisticModel {
+    LogisticModel::new(two_class_gaussian(n, 50, 1.2, seed), 10.0)
+}
+
+/// The l_i population for one (theta, theta') pair.
+pub struct LPopulation {
+    pub ls: Vec<f64>,
+    pub mu: f64,
+    pub sigma_l: f64,
+    pub log_correction: f64,
+}
+
+/// Run a short exact trial chain and harvest `count` (theta, theta')
+/// pairs (every `stride` steps), returning their l-populations.
+pub fn harvest_pairs(
+    model: &LogisticModel,
+    sigma_rw: f64,
+    count: usize,
+    stride: usize,
+    seed: u64,
+) -> Vec<LPopulation> {
+    let kernel = GaussianRandomWalk::new(sigma_rw, model.prior_precision);
+    let mut rng = Pcg64::new(seed, 21);
+    let mut scratch = MhScratch::new(model.n());
+    let mut cur = model.map_estimate(50);
+    let mode = MhMode::Exact;
+    let mut out = Vec::with_capacity(count);
+
+    while out.len() < count {
+        for _ in 0..stride {
+            let prop = kernel.propose(&cur, &mut rng);
+            mh_step(model, &mut cur, prop, &mode, &mut scratch, &mut rng);
+        }
+        let prop = kernel.propose(&cur, &mut rng);
+        let ls: Vec<f64> = (0..model.n())
+            .map(|i| model.lldiff(i, &cur, &prop.param))
+            .collect();
+        let n = ls.len() as f64;
+        let mu = ls.iter().sum::<f64>() / n;
+        let var = ls.iter().map(|l| (l - mu) * (l - mu)).sum::<f64>() / n;
+        out.push(LPopulation {
+            ls,
+            mu,
+            sigma_l: var.sqrt(),
+            log_correction: prop.log_correction,
+        });
+    }
+    out
+}
+
+impl LPopulation {
+    pub fn stats(&self) -> PairStats {
+        PairStats { mu: self.mu, sigma_l: self.sigma_l, log_correction: self.log_correction }
+    }
+}
+
+/// A fixed l-population as an `LlDiffModel` (for running sequential tests
+/// directly against a chosen mu_0).
+pub struct FixedLs<'a>(pub &'a [f64]);
+
+impl<'a> LlDiffModel for FixedLs<'a> {
+    type Param = ();
+
+    fn n(&self) -> usize {
+        self.0.len()
+    }
+
+    fn lldiff(&self, i: usize, _: &(), _: &()) -> f64 {
+        self.0[i]
+    }
+
+    fn lldiff_moments(&self, idx: &[usize], _: &(), _: &()) -> (f64, f64) {
+        let (mut s, mut s2) = (0.0, 0.0);
+        for &i in idx {
+            let l = self.0[i];
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harvest_produces_finite_stats() {
+        let model = mnist_like_model(2_000, 0);
+        let pops = harvest_pairs(&model, 0.01, 3, 2, 1);
+        assert_eq!(pops.len(), 3);
+        for p in &pops {
+            assert_eq!(p.ls.len(), 2_000);
+            assert!(p.sigma_l > 0.0 && p.sigma_l.is_finite());
+            assert!(p.mu.is_finite() && p.log_correction.is_finite());
+            // mu should be small relative to sigma_l * sqrt(N) (near-
+            // stationary proposals are near-ties)
+            assert!(p.mu.abs() < 1.0);
+        }
+    }
+}

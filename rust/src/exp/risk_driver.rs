@@ -1,0 +1,214 @@
+//! Generic risk-vs-time driver behind Figs. 2, 3 and 4: run replica
+//! chains per epsilon, stream a vector test function, and report the
+//! chain-averaged MSE against ground truth at wall-clock checkpoints.
+
+use std::time::Instant;
+
+use crate::coordinator::mh::{mh_step, MhMode, MhScratch};
+use crate::metrics::risk::{risk_curve, Checkpoints, RiskCurve};
+use crate::models::traits::{LlDiffModel, ProposalKernel};
+use crate::stats::Pcg64;
+
+/// Configuration for one risk experiment.
+#[derive(Clone, Debug)]
+pub struct RiskConfig {
+    /// epsilon = 0 means the exact MH baseline.
+    pub eps_values: Vec<f64>,
+    pub batch: usize,
+    pub chains: usize,
+    /// wall-clock budget per chain (seconds)
+    pub secs: f64,
+    pub checkpoints: usize,
+    pub burn_in_steps: usize,
+    pub thin: usize,
+    pub base_seed: u64,
+}
+
+/// Per-epsilon result.
+pub struct EpsRisk {
+    pub eps: f64,
+    pub curve: RiskCurve,
+    /// mean fraction of data used per MH test (averaged over chains)
+    pub data_fraction: f64,
+    pub acceptance: f64,
+    pub steps_per_sec: f64,
+}
+
+/// Run one chain, recording MSE against `truth` at each checkpoint.
+#[allow(clippy::too_many_arguments)]
+fn run_one_chain<M, K, F>(
+    model: &M,
+    kernel: &K,
+    mode: &MhMode,
+    init: M::Param,
+    truth: &[f64],
+    test_fn: &F,
+    cfg: &RiskConfig,
+    checks: &Checkpoints,
+    seed: u64,
+) -> (Vec<f64>, f64, f64, f64)
+where
+    M: LlDiffModel,
+    K: ProposalKernel<M::Param>,
+    F: Fn(&M::Param) -> Vec<f64>,
+{
+    let mut rng = Pcg64::new(seed, 11);
+    let mut scratch = MhScratch::new(model.n());
+    let mut cur = init;
+    let mut sums = vec![0.0f64; truth.len()];
+    let mut count = 0u64;
+    let mut errors = vec![f64::NAN; checks.len()];
+    let mut next_cp = 0usize;
+    let mut steps = 0usize;
+    let mut accepted = 0usize;
+    let mut data_used = 0u64;
+    let start = Instant::now();
+
+    loop {
+        let elapsed = start.elapsed().as_secs_f64();
+        while next_cp < checks.len() && elapsed >= checks.at_secs[next_cp] {
+            if count > 0 {
+                let mse = sums
+                    .iter()
+                    .zip(truth)
+                    .map(|(s, t)| {
+                        let d = s / count as f64 - t;
+                        d * d
+                    })
+                    .sum::<f64>()
+                    / truth.len() as f64;
+                errors[next_cp] = mse;
+            }
+            next_cp += 1;
+        }
+        if next_cp >= checks.len() || elapsed >= cfg.secs {
+            break;
+        }
+        let proposal = kernel.propose(&cur, &mut rng);
+        let info = mh_step(model, &mut cur, proposal, mode, &mut scratch, &mut rng);
+        steps += 1;
+        accepted += info.accepted as usize;
+        data_used += info.n_used as u64;
+        if steps > cfg.burn_in_steps && steps % cfg.thin == 0 {
+            let v = test_fn(&cur);
+            debug_assert_eq!(v.len(), truth.len());
+            for (s, x) in sums.iter_mut().zip(&v) {
+                *s += x;
+            }
+            count += 1;
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+    (
+        errors,
+        data_used as f64 / (steps.max(1) as f64 * model.n() as f64),
+        accepted as f64 / steps.max(1) as f64,
+        steps as f64 / wall,
+    )
+}
+
+/// Run the full experiment: all epsilons, all chains (chains in threads).
+pub fn risk_vs_time<M, K, F>(
+    model: &M,
+    kernel: &K,
+    init: M::Param,
+    truth: &[f64],
+    test_fn: F,
+    cfg: &RiskConfig,
+) -> Vec<EpsRisk>
+where
+    M: LlDiffModel + Sync,
+    K: ProposalKernel<M::Param> + Sync,
+    M::Param: Clone + Send,
+    F: Fn(&M::Param) -> Vec<f64> + Sync,
+{
+    let checks = Checkpoints::log_spaced(
+        (cfg.secs / 100.0).max(0.05),
+        cfg.secs,
+        cfg.checkpoints,
+    );
+    let mut out = Vec::new();
+    for (ei, &eps) in cfg.eps_values.iter().enumerate() {
+        let mode = MhMode::approx(eps, cfg.batch);
+        let results: Vec<(Vec<f64>, f64, f64, f64)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..cfg.chains)
+                .map(|c| {
+                    let init = init.clone();
+                    let mode = mode.clone();
+                    let test_fn = &test_fn;
+                    let checks = &checks;
+                    scope.spawn(move || {
+                        run_one_chain(
+                            model,
+                            kernel,
+                            &mode,
+                            init,
+                            truth,
+                            test_fn,
+                            cfg,
+                            checks,
+                            cfg.base_seed + (ei * 1000 + c) as u64,
+                        )
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("chain panicked")).collect()
+        });
+        let errors: Vec<Vec<f64>> = results.iter().map(|r| r.0.clone()).collect();
+        let k = results.len() as f64;
+        out.push(EpsRisk {
+            eps,
+            curve: risk_curve(&checks.at_secs, &errors),
+            data_fraction: results.iter().map(|r| r.1).sum::<f64>() / k,
+            acceptance: results.iter().map(|r| r.2).sum::<f64>() / k,
+            steps_per_sec: results.iter().map(|r| r.3).sum::<f64>() / k,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_class_gaussian;
+    use crate::models::LogisticModel;
+    use crate::samplers::GaussianRandomWalk;
+
+    #[test]
+    fn smoke_risk_driver_orders_data_usage() {
+        let model = LogisticModel::new(two_class_gaussian(4_000, 5, 1.2, 0), 10.0);
+        let map = model.map_estimate(40);
+        let kernel = GaussianRandomWalk::new(0.02, 10.0);
+        let truth: Vec<f64> = (0..model.n().min(50))
+            .map(|i| model.predict(model.data().row(i), &map))
+            .collect();
+        let rows: Vec<usize> = (0..50).collect();
+        let cfg = RiskConfig {
+            eps_values: vec![0.0, 0.1],
+            batch: 500,
+            chains: 2,
+            secs: 0.6,
+            checkpoints: 4,
+            burn_in_steps: 5,
+            thin: 1,
+            base_seed: 3,
+        };
+        let out = risk_vs_time(
+            &model,
+            &kernel,
+            map.clone(),
+            &truth,
+            |p| rows.iter().map(|&i| model.predict(model.data().row(i), p)).collect(),
+            &cfg,
+        );
+        assert_eq!(out.len(), 2);
+        // exact uses the full dataset every step; approximate uses less
+        assert!((out[0].data_fraction - 1.0).abs() < 1e-9);
+        assert!(out[1].data_fraction < 1.0);
+        // approximate generates more steps per second
+        assert!(out[1].steps_per_sec > out[0].steps_per_sec);
+        // risk columns populated at the late checkpoints
+        assert!(out[0].curve.risk.last().unwrap().is_finite());
+        assert!(out[1].curve.risk.last().unwrap().is_finite());
+    }
+}

@@ -1,0 +1,25 @@
+//! # Austerity MCMC
+//!
+//! A complete implementation of **"Austerity in MCMC Land: Cutting the
+//! Metropolis-Hastings Budget"** (Korattikara, Chen & Welling, ICML 2014):
+//! approximate Metropolis-Hastings via sequential hypothesis tests over
+//! mini-batches, the Gaussian-random-walk error analysis, optimal
+//! sequential test design, and every application from the paper
+//! (random-walk logistic regression, Stiefel-manifold ICA, reversible-jump
+//! variable selection, MH-corrected SGLD, approximate Gibbs on dense MRFs).
+//!
+//! Architecture (see DESIGN.md): this crate is the Layer-3 coordinator of
+//! a three-layer stack. The bulk log-likelihood moments can be served
+//! either by a pure-Rust backend or by AOT-compiled JAX/Pallas artifacts
+//! executed through the PJRT C API (`runtime` module); Python never runs
+//! on the sampling path.
+
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod samplers;
+pub mod stats;
+pub mod testkit;

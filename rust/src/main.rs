@@ -1,0 +1,186 @@
+//! `austerity` — launcher CLI for the Austerity-MCMC reproduction.
+//!
+//! Subcommands (hand-rolled parser; clap is not in the offline crate set):
+//!   austerity info                         runtime + artifact inventory
+//!   austerity fig <name|all> [--scale S]   regenerate paper figures
+//!   austerity design --n N --tol T         optimal sequential test design
+//!   austerity sample [--eps E] [--steps K] [--pjrt]
+//!                                          run a logistic RW-MH chain
+
+use std::process::ExitCode;
+
+use austerity::coordinator::design::{worst_case_design, DesignGrid};
+use austerity::coordinator::{mh_step, MhMode, MhScratch};
+use austerity::exp::{run_figure, Scale, ALL_FIGURES};
+use austerity::models::traits::ProposalKernel;
+use austerity::runtime::{PjrtLogistic, PjrtRuntime};
+use austerity::samplers::GaussianRandomWalk;
+use austerity::stats::Pcg64;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("info") => info(),
+        Some("fig") => fig(&args[1..]),
+        Some("design") => design(&args[1..]),
+        Some("sample") => sample(&args[1..]),
+        _ => {
+            eprintln!(
+                "usage: austerity <info|fig|design|sample> [options]\n\
+                 \n\
+                 info                          show PJRT platform + artifacts\n\
+                 fig <name|all> [--scale S]    regenerate figure CSVs (fig1..fig15)\n\
+                 design --n N --tol T          worst-case sequential test design\n\
+                 sample [--eps E] [--steps K] [--n N] [--pjrt]\n\
+                 \n\
+                 figures: {}",
+                ALL_FIGURES.join(" ")
+            );
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn info() -> ExitCode {
+    println!("austerity-mcmc: Korattikara, Chen & Welling (ICML 2014) reproduction");
+    match PjrtRuntime::new(&PjrtRuntime::default_dir()) {
+        Ok(rt) => {
+            println!("pjrt platform: {}", rt.platform());
+            println!("artifacts ({}):", PjrtRuntime::default_dir().display());
+            for name in rt.artifact_names() {
+                let spec = rt.spec(&name).unwrap();
+                println!(
+                    "  {name}: {} inputs -> {} outputs ({})",
+                    spec.inputs.len(),
+                    spec.outputs.len(),
+                    spec.file
+                );
+            }
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("runtime unavailable: {e:#} (run `make artifacts`)");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn fig(args: &[String]) -> ExitCode {
+    let name = match args.first() {
+        Some(n) => n.clone(),
+        None => {
+            eprintln!("usage: austerity fig <name|all> [--scale S]");
+            return ExitCode::from(2);
+        }
+    };
+    let scale = Scale(
+        flag_value(args, "--scale").and_then(|s| s.parse().ok()).unwrap_or(1.0),
+    );
+    let names: Vec<&str> = if name == "all" {
+        ALL_FIGURES.to_vec()
+    } else {
+        vec![name.as_str()]
+    };
+    for n in names {
+        println!("== {n} (scale {}) ==", scale.0);
+        if !run_figure(n, scale) {
+            eprintln!("unknown figure {n}; known: {}", ALL_FIGURES.join(" "));
+            return ExitCode::from(2);
+        }
+    }
+    println!("CSV output under {}", austerity::exp::figures_dir().display());
+    ExitCode::SUCCESS
+}
+
+fn design(args: &[String]) -> ExitCode {
+    let n: usize =
+        flag_value(args, "--n").and_then(|s| s.parse().ok()).unwrap_or(100_000);
+    let tol: f64 =
+        flag_value(args, "--tol").and_then(|s| s.parse().ok()).unwrap_or(0.01);
+    let grid = DesignGrid::default();
+    match worst_case_design(n, tol, &grid) {
+        Some(d) => {
+            println!(
+                "worst-case design for N={n}, tol={tol}: m={} eps={} \
+                 (predicted data usage {:.3}, worst error {:.4})",
+                d.m, d.eps, d.data_usage, d.error
+            );
+            ExitCode::SUCCESS
+        }
+        None => {
+            eprintln!("no feasible (m, eps) in the default grid for tol={tol}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn sample(args: &[String]) -> ExitCode {
+    let eps: f64 = flag_value(args, "--eps").and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let steps: usize =
+        flag_value(args, "--steps").and_then(|s| s.parse().ok()).unwrap_or(200);
+    let n: usize =
+        flag_value(args, "--n").and_then(|s| s.parse().ok()).unwrap_or(12_214);
+    let use_pjrt = args.iter().any(|a| a == "--pjrt");
+
+    let model = austerity::exp::population::mnist_like_model(n, 42);
+    let kernel = GaussianRandomWalk::new(0.01, model.prior_precision);
+    let mode = MhMode::approx(eps, 500);
+    let init = model.map_estimate(60);
+
+    // generic over backend via a per-step closure
+    let run = |step: &mut dyn FnMut(&mut Vec<f64>, &mut MhScratch, &mut Pcg64) -> (bool, usize)| {
+        let mut cur = init.clone();
+        let mut scratch = MhScratch::new(n);
+        let mut rng = Pcg64::seeded(1);
+        let mut accepted = 0usize;
+        let mut used = 0u64;
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let (acc, nu) = step(&mut cur, &mut scratch, &mut rng);
+            accepted += acc as usize;
+            used += nu as u64;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "steps={steps} accept={:.2} mean-data-fraction={:.4} steps/sec={:.1}",
+            accepted as f64 / steps as f64,
+            used as f64 / (steps as f64 * n as f64),
+            steps as f64 / dt
+        );
+    };
+
+    if use_pjrt {
+        let rt = match PjrtRuntime::new(&PjrtRuntime::default_dir()) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("pjrt unavailable: {e:#}");
+                return ExitCode::FAILURE;
+            }
+        };
+        let pjrt = match PjrtLogistic::new(&model, rt) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("backend: {e:#}");
+                return ExitCode::FAILURE;
+            }
+        };
+        println!("backend: pjrt (AOT Pallas kernel), N={n}, eps={eps}");
+        run(&mut |cur, scratch, rng| {
+            let prop = kernel.propose(cur, rng);
+            let info = mh_step(&pjrt, cur, prop, &mode, scratch, rng);
+            (info.accepted, info.n_used)
+        });
+    } else {
+        println!("backend: native, N={n}, eps={eps}");
+        run(&mut |cur, scratch, rng| {
+            let prop = kernel.propose(cur, rng);
+            let info = mh_step(&model, cur, prop, &mode, scratch, rng);
+            (info.accepted, info.n_used)
+        });
+    }
+    ExitCode::SUCCESS
+}

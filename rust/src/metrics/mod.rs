@@ -1,0 +1,8 @@
+//! Evaluation metrics: risk-vs-time curves, predictive means, ground
+//! truth estimation — the measurement half of every §6 figure.
+
+pub mod predictive;
+pub mod risk;
+
+pub use predictive::PredictiveMean;
+pub use risk::{risk_curve, Checkpoints, RiskCurve};

@@ -1,0 +1,97 @@
+//! Streaming predictive-mean estimator: the test function of the
+//! logistic-regression and RJMCMC risk figures (Figs. 2 and 4).
+//!
+//! The predictive mean of test point x* is E_{p(theta|X)}[p(x*|theta)];
+//! a chain estimates it by averaging p(x*|theta_t) over collected
+//! samples. This accumulator streams that average over a panel of test
+//! points without storing samples.
+
+/// Running mean of a vector-valued test function (one entry per test point).
+#[derive(Clone, Debug)]
+pub struct PredictiveMean {
+    sums: Vec<f64>,
+    count: u64,
+}
+
+impl PredictiveMean {
+    pub fn new(n_points: usize) -> Self {
+        PredictiveMean { sums: vec![0.0; n_points], count: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sums.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sums.is_empty()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Fold in the per-point predictive probabilities of one sample.
+    pub fn add(&mut self, probs: &[f64]) {
+        assert_eq!(probs.len(), self.sums.len());
+        for (s, p) in self.sums.iter_mut().zip(probs) {
+            *s += p;
+        }
+        self.count += 1;
+    }
+
+    /// Current estimate per test point.
+    pub fn mean(&self) -> Vec<f64> {
+        assert!(self.count > 0, "no samples accumulated");
+        self.sums.iter().map(|s| s / self.count as f64).collect()
+    }
+
+    /// Mean squared error against a ground-truth predictive mean,
+    /// averaged over test points — the risk integrand of Figs. 2/4.
+    pub fn mse_against(&self, truth: &[f64]) -> f64 {
+        assert_eq!(truth.len(), self.sums.len());
+        assert!(self.count > 0);
+        let c = self.count as f64;
+        self.sums
+            .iter()
+            .zip(truth)
+            .map(|(s, t)| {
+                let d = s / c - t;
+                d * d
+            })
+            .sum::<f64>()
+            / self.sums.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_of_constant_stream() {
+        let mut pm = PredictiveMean::new(3);
+        for _ in 0..10 {
+            pm.add(&[0.2, 0.5, 0.9]);
+        }
+        assert_eq!(pm.count(), 10);
+        let m = pm.mean();
+        assert!((m[0] - 0.2).abs() < 1e-12);
+        assert!((m[2] - 0.9).abs() < 1e-12);
+        assert!(pm.mse_against(&[0.2, 0.5, 0.9]) < 1e-24);
+    }
+
+    #[test]
+    fn mse_measures_bias() {
+        let mut pm = PredictiveMean::new(2);
+        pm.add(&[0.0, 1.0]);
+        pm.add(&[1.0, 1.0]);
+        // means = [0.5, 1.0]; truth = [0.5, 0.5] -> mse = (0 + 0.25)/2
+        assert!((pm.mse_against(&[0.5, 0.5]) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_mean_panics() {
+        PredictiveMean::new(2).mean();
+    }
+}

@@ -1,0 +1,96 @@
+//! Risk-vs-time machinery (paper §3): risk R = B^2 + V estimated as the
+//! mean squared error of per-chain estimates against ground truth,
+//! averaged over independent chains, evaluated at wall-clock checkpoints.
+
+/// Logarithmically spaced wall-clock checkpoints (seconds).
+#[derive(Clone, Debug)]
+pub struct Checkpoints {
+    pub at_secs: Vec<f64>,
+}
+
+impl Checkpoints {
+    /// `count` points log-spaced between `first` and `last` seconds.
+    pub fn log_spaced(first: f64, last: f64, count: usize) -> Self {
+        assert!(first > 0.0 && last > first && count >= 2);
+        let ratio = (last / first).powf(1.0 / (count - 1) as f64);
+        let at_secs = (0..count).map(|i| first * ratio.powi(i as i32)).collect();
+        Checkpoints { at_secs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.at_secs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.at_secs.is_empty()
+    }
+
+    /// Index of the first checkpoint not yet passed at `t` seconds.
+    pub fn next_after(&self, t: f64) -> usize {
+        self.at_secs.partition_point(|&c| c <= t)
+    }
+}
+
+/// A risk curve: per checkpoint, the chain-averaged squared error.
+#[derive(Clone, Debug)]
+pub struct RiskCurve {
+    pub at_secs: Vec<f64>,
+    pub risk: Vec<f64>,
+    /// number of chains contributing at each checkpoint
+    pub chains: Vec<usize>,
+}
+
+/// Combine per-chain per-checkpoint squared errors into a risk curve.
+/// `errors[c][k]` = squared error of chain c's estimate at checkpoint k
+/// (NaN if the chain had no samples yet at that checkpoint).
+pub fn risk_curve(at_secs: &[f64], errors: &[Vec<f64>]) -> RiskCurve {
+    let k = at_secs.len();
+    let mut risk = vec![0.0; k];
+    let mut chains = vec![0usize; k];
+    for chain in errors {
+        assert_eq!(chain.len(), k);
+        for (i, &e) in chain.iter().enumerate() {
+            if e.is_finite() {
+                risk[i] += e;
+                chains[i] += 1;
+            }
+        }
+    }
+    for i in 0..k {
+        risk[i] = if chains[i] > 0 { risk[i] / chains[i] as f64 } else { f64::NAN };
+    }
+    RiskCurve { at_secs: at_secs.to_vec(), risk, chains }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_spacing_monotone_and_bounded() {
+        let c = Checkpoints::log_spaced(0.1, 100.0, 13);
+        assert_eq!(c.len(), 13);
+        assert!((c.at_secs[0] - 0.1).abs() < 1e-12);
+        assert!((c.at_secs[12] - 100.0).abs() < 1e-9);
+        assert!(c.at_secs.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn next_after_partitions() {
+        let c = Checkpoints::log_spaced(1.0, 8.0, 4); // 1, 2, 4, 8
+        assert_eq!(c.next_after(0.5), 0);
+        assert_eq!(c.next_after(1.0), 1);
+        assert_eq!(c.next_after(3.0), 2);
+        assert_eq!(c.next_after(100.0), 4);
+    }
+
+    #[test]
+    fn risk_curve_averages_and_skips_nan() {
+        let at = [1.0, 2.0];
+        let errors = vec![vec![0.4, 0.2], vec![f64::NAN, 0.4]];
+        let rc = risk_curve(&at, &errors);
+        assert_eq!(rc.chains, vec![1, 2]);
+        assert!((rc.risk[0] - 0.4).abs() < 1e-12);
+        assert!((rc.risk[1] - 0.3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,209 @@
+//! Independent Component Analysis posterior (paper §6.2).
+//!
+//! Model: p(x | W) = |det W| prod_j [4 cosh^2(0.5 w_j^T x)]^{-1} with the
+//! unmixing matrix W constrained to the Stiefel manifold (uniform prior
+//! on the manifold, zero elsewhere). Includes the Amari distance used as
+//! the test function in Fig. 3.
+
+use crate::data::linalg::Mat;
+use crate::data::Unsupervised;
+use crate::models::traits::LlDiffModel;
+
+/// Stable log cosh.
+#[inline]
+pub fn log_cosh(z: f64) -> f64 {
+    let a = z.abs();
+    a + (-2.0 * a).exp().ln_1p() - std::f64::consts::LN_2
+}
+
+/// ICA posterior target over pre-whitened observations.
+pub struct IcaModel {
+    data: Unsupervised,
+}
+
+impl IcaModel {
+    pub fn new(data: Unsupervised) -> Self {
+        IcaModel { data }
+    }
+
+    pub fn data(&self) -> &Unsupervised {
+        &self.data
+    }
+
+    pub fn d(&self) -> usize {
+        self.data.d()
+    }
+
+    /// log p(x_i | W) with the logdet term included.
+    pub fn loglik_point(&self, i: usize, w: &Mat) -> f64 {
+        let (_, logdet) = w.slogdet();
+        logdet + self.cosh_part(i, w)
+    }
+
+    /// The -sum_j [2 log 2 + 2 log cosh(0.5 w_j^T x)] part (no logdet).
+    fn cosh_part(&self, i: usize, w: &Mat) -> f64 {
+        let d = self.d();
+        let x = self.data.row(i);
+        let mut s = 0.0;
+        for j in 0..d {
+            let row = w.row(j);
+            let mut dot = 0.0;
+            for k in 0..d {
+                dot += row[k] * x[k];
+            }
+            s -= 2.0 * std::f64::consts::LN_2 + 2.0 * log_cosh(0.5 * dot);
+        }
+        s
+    }
+}
+
+impl LlDiffModel for IcaModel {
+    type Param = Mat;
+
+    fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    fn lldiff(&self, i: usize, cur: &Mat, prop: &Mat) -> f64 {
+        let (_, ld_cur) = cur.slogdet();
+        let (_, ld_prop) = prop.slogdet();
+        (ld_prop - ld_cur) + self.cosh_part(i, prop) - self.cosh_part(i, cur)
+    }
+
+    fn lldiff_moments(&self, idx: &[usize], cur: &Mat, prop: &Mat) -> (f64, f64) {
+        // slogdet once per call, fused cosh pass per row.
+        let (_, ld_cur) = cur.slogdet();
+        let (_, ld_prop) = prop.slogdet();
+        let const_shift = ld_prop - ld_cur;
+        let d = self.d();
+        let (mut s, mut s2) = (0.0, 0.0);
+        for &i in idx {
+            let x = self.data.row(i);
+            let mut l = const_shift;
+            for j in 0..d {
+                let (rc, rp) = (cur.row(j), prop.row(j));
+                let (mut dc, mut dp) = (0.0, 0.0);
+                for k in 0..d {
+                    dc += rc[k] * x[k];
+                    dp += rp[k] * x[k];
+                }
+                // 2log2 terms cancel between prop and cur.
+                l += 2.0 * (log_cosh(0.5 * dc) - log_cosh(0.5 * dp));
+            }
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
+}
+
+/// Amari distance between two unmixing matrices (Amari et al., 1996) —
+/// permutation- and scale-invariant; 0 iff W recovers W0 up to those.
+pub fn amari_distance(w: &Mat, w0: &Mat) -> f64 {
+    let d = w.d;
+    assert_eq!(d, w0.d);
+    // r = W * W0^{-1}
+    let r = w.matmul(&w0.inverse());
+    let mut total = 0.0;
+    for i in 0..d {
+        let row_max = (0..d).map(|j| r[(i, j)].abs()).fold(0.0f64, f64::max);
+        let row_sum: f64 = (0..d).map(|j| r[(i, j)].abs()).sum();
+        total += row_sum / row_max - 1.0;
+        let col_max = (0..d).map(|j| r[(j, i)].abs()).fold(0.0f64, f64::max);
+        let col_sum: f64 = (0..d).map(|j| r[(j, i)].abs()).sum();
+        total += col_sum / col_max - 1.0;
+    }
+    total / (2.0 * d as f64 * (d as f64 - 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::linalg::{random_orthonormal, random_skew};
+    use crate::data::synthetic::ica_mixture;
+    use crate::stats::Pcg64;
+    use crate::testkit;
+
+    #[test]
+    fn log_cosh_values() {
+        assert!(log_cosh(0.0).abs() < 1e-15);
+        for &z in &[-3.0, -0.5, 0.2, 5.0] {
+            assert!((log_cosh(z) - (z as f64).cosh().ln()).abs() < 1e-12);
+        }
+        // stability at large |z|: log cosh(z) ~ |z| - ln 2
+        assert!((log_cosh(500.0) - (500.0 - std::f64::consts::LN_2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lldiff_matches_pointwise_logliks() {
+        let (obs, _) = ica_mixture(200, 0);
+        let m = IcaModel::new(obs);
+        let mut rng = Pcg64::seeded(1);
+        let w = random_orthonormal(4, &mut rng);
+        let wp = random_orthonormal(4, &mut rng);
+        for i in [0usize, 57, 199] {
+            let want = m.loglik_point(i, &wp) - m.loglik_point(i, &w);
+            assert!((m.lldiff(i, &w, &wp) - want).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fused_moments_match_loop() {
+        let (obs, _) = ica_mixture(300, 2);
+        let m = IcaModel::new(obs);
+        testkit::forall(16, |rng| {
+            let w = random_orthonormal(4, rng);
+            let wp = w.matmul(&random_skew(4, 0.05, rng).expm());
+            let k = rng.below(80) + 1;
+            let idx: Vec<usize> = (0..k).map(|_| rng.below(300)).collect();
+            let (s, s2) = m.lldiff_moments(&idx, &w, &wp);
+            let (mut ws, mut ws2) = (0.0, 0.0);
+            for &i in &idx {
+                let l = m.lldiff(i, &w, &wp);
+                ws += l;
+                ws2 += l * l;
+            }
+            assert!((s - ws).abs() < 1e-8);
+            assert!((s2 - ws2).abs() < 1e-8);
+        });
+    }
+
+    #[test]
+    fn amari_zero_for_permutation_and_scale() {
+        let mut rng = Pcg64::seeded(3);
+        let w0 = random_orthonormal(4, &mut rng);
+        assert!(amari_distance(&w0, &w0) < 1e-12);
+        // permute rows and rescale: distance stays ~0
+        let mut perm = Mat::zeros(4);
+        perm[(0, 2)] = 3.0;
+        perm[(1, 0)] = -0.5;
+        perm[(2, 3)] = 1.0;
+        perm[(3, 1)] = 2.0;
+        let w = perm.matmul(&w0);
+        assert!(amari_distance(&w, &w0) < 1e-12);
+    }
+
+    #[test]
+    fn amari_positive_for_mixing() {
+        let mut rng = Pcg64::seeded(4);
+        let w0 = random_orthonormal(4, &mut rng);
+        let w = random_orthonormal(4, &mut rng);
+        assert!(amari_distance(&w, &w0) > 0.05);
+        // small perturbation: small but positive distance
+        let wp = w0.matmul(&random_skew(4, 0.01, &mut rng).expm());
+        let d = amari_distance(&wp, &w0);
+        assert!(d > 0.0 && d < 0.05, "d={d}");
+    }
+
+    #[test]
+    fn true_unmixing_beats_random_in_loglik() {
+        let (obs, w0) = ica_mixture(2000, 5);
+        let m = IcaModel::new(obs);
+        let mut rng = Pcg64::seeded(6);
+        let wr = random_orthonormal(4, &mut rng);
+        let idx: Vec<usize> = (0..2000).collect();
+        // mean lldiff from random W to true W0 should be positive
+        let (s, _) = m.lldiff_moments(&idx, &wr, &w0);
+        assert!(s > 0.0, "sum lldiff {s}");
+    }
+}

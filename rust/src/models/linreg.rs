@@ -1,0 +1,191 @@
+//! 1-d L1-regularized linear regression — the SGLD pitfall toy (§6.4).
+//!
+//! p(y | x, theta) ~ exp(-lam/2 (y - theta x)^2), Laplacian prior
+//! p(theta) ~ exp(-lam0 |theta|). The paper uses lam = 3, lam0 = 4950 so
+//! the prior spike at 0 competes with the likelihood mode near 0.5,
+//! creating the low-density valley that throws uncorrected SGLD off.
+
+use crate::data::Dataset;
+use crate::models::traits::LlDiffModel;
+
+pub struct LinRegModel {
+    data: Dataset,
+    /// Gaussian noise precision lambda (paper: 3).
+    pub lam: f64,
+    /// Laplace prior rate lambda_0 (paper: 4950).
+    pub lam0: f64,
+}
+
+impl LinRegModel {
+    pub fn new(data: Dataset, lam: f64, lam0: f64) -> Self {
+        assert_eq!(data.d(), 1, "toy model is 1-d");
+        LinRegModel { data, lam, lam0 }
+    }
+
+    pub fn data(&self) -> &Dataset {
+        &self.data
+    }
+
+    pub fn log_prior(&self, theta: f64) -> f64 {
+        -self.lam0 * theta.abs()
+    }
+
+    pub fn loglik_point(&self, i: usize, theta: f64) -> f64 {
+        let x = self.data.row(i)[0];
+        let r = self.data.label(i) - theta * x;
+        -0.5 * self.lam * r * r
+    }
+
+    /// Unnormalized log posterior (for the density panels of Fig. 5).
+    pub fn log_post_unnorm(&self, theta: f64) -> f64 {
+        let mut s = self.log_prior(theta);
+        for i in 0..self.data.n() {
+            s += self.loglik_point(i, theta);
+        }
+        s
+    }
+
+    /// d/dtheta log posterior (for the gradient panel of Fig. 5 and SGLD).
+    /// Mini-batch version with N/n scaling; pass all indices for exact.
+    pub fn grad_log_post(&self, theta: f64, idx: &[usize]) -> f64 {
+        let scale = self.data.n() as f64 / idx.len() as f64;
+        let mut g = 0.0;
+        for &i in idx {
+            let x = self.data.row(i)[0];
+            let r = self.data.label(i) - theta * x;
+            g += self.lam * r * x;
+        }
+        scale * g - self.lam0 * theta.signum()
+    }
+
+    /// Normalized posterior density on a grid (quadrature normalization),
+    /// returned as (grid, density).
+    pub fn posterior_density(&self, lo: f64, hi: f64, points: usize) -> (Vec<f64>, Vec<f64>) {
+        let grid: Vec<f64> = (0..points)
+            .map(|i| lo + (hi - lo) * i as f64 / (points - 1) as f64)
+            .collect();
+        let logs: Vec<f64> = grid.iter().map(|&t| self.log_post_unnorm(t)).collect();
+        let max = logs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let dens: Vec<f64> = logs.iter().map(|&l| (l - max).exp()).collect();
+        let h = (hi - lo) / (points - 1) as f64;
+        // trapezoid normalization
+        let mut z = 0.0;
+        for i in 0..points - 1 {
+            z += 0.5 * (dens[i] + dens[i + 1]) * h;
+        }
+        (grid, dens.iter().map(|d| d / z).collect())
+    }
+}
+
+impl LlDiffModel for LinRegModel {
+    type Param = f64;
+
+    fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    fn lldiff(&self, i: usize, cur: &f64, prop: &f64) -> f64 {
+        let x = self.data.row(i)[0];
+        let y = self.data.label(i);
+        let (rc, rp) = (y - cur * x, y - prop * x);
+        -0.5 * self.lam * (rp * rp - rc * rc)
+    }
+
+    fn lldiff_moments(&self, idx: &[usize], cur: &f64, prop: &f64) -> (f64, f64) {
+        let (mut s, mut s2) = (0.0, 0.0);
+        let half_lam = 0.5 * self.lam;
+        for &i in idx {
+            let x = self.data.row(i)[0];
+            let y = self.data.label(i);
+            let (rc, rp) = (y - cur * x, y - prop * x);
+            let l = -half_lam * (rp * rp - rc * rc);
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::linreg_toy;
+    use crate::testkit;
+
+    fn model() -> LinRegModel {
+        // paper scale: N = 10000 (the prior/likelihood balance that
+        // creates the valley depends on it)
+        LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0)
+    }
+
+    #[test]
+    fn lldiff_matches_pointwise() {
+        let m = model();
+        for i in [0usize, 10, 1999] {
+            let want = m.loglik_point(i, 0.3) - m.loglik_point(i, 0.1);
+            assert!((m.lldiff(i, &0.1, &0.3) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn moments_match_loop() {
+        let m = model();
+        testkit::forall(32, |rng| {
+            let cur = rng.normal_scaled(0.3, 0.2);
+            let prop = rng.normal_scaled(0.3, 0.2);
+            let k = rng.below(200) + 1;
+            let idx: Vec<usize> = (0..k).map(|_| rng.below(2000)).collect();
+            let (s, s2) = m.lldiff_moments(&idx, &cur, &prop);
+            let (mut ws, mut ws2) = (0.0, 0.0);
+            for &i in &idx {
+                let l = m.lldiff(i, &cur, &prop);
+                ws += l;
+                ws2 += l * l;
+            }
+            assert!((s - ws).abs() < 1e-9);
+            assert!((s2 - ws2).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn posterior_density_integrates_to_one() {
+        let m = model();
+        let (grid, dens) = m.posterior_density(-0.2, 0.8, 400);
+        let h = grid[1] - grid[0];
+        let z: f64 = dens.windows(2).map(|w| 0.5 * (w[0] + w[1]) * h).sum();
+        assert!((z - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn posterior_is_bimodal_shaped() {
+        // With the paper's lam0 the prior creates a spike near 0 and the
+        // likelihood a mode near 0.5; density at the valley between them
+        // is much lower than at the likelihood mode.
+        let m = model();
+        let lp_mode = m.log_post_unnorm(0.49);
+        let lp_valley = m.log_post_unnorm(0.1);
+        assert!(lp_mode > lp_valley + 10.0, "mode {lp_mode} valley {lp_valley}");
+    }
+
+    #[test]
+    fn grad_sign_pulls_to_mode() {
+        let m = model();
+        let all: Vec<usize> = (0..m.n()).collect();
+        // to the right of the likelihood mode the gradient is negative
+        assert!(m.grad_log_post(0.8, &all) < 0.0);
+        // in the valley, gradient pushes right (towards likelihood mode)
+        assert!(m.grad_log_post(0.3, &all) > 0.0);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference_away_from_kink() {
+        let m = model();
+        let all: Vec<usize> = (0..m.n()).collect();
+        for &t in &[0.2, 0.45, 0.7] {
+            let h = 1e-6;
+            let fd = (m.log_post_unnorm(t + h) - m.log_post_unnorm(t - h)) / (2.0 * h);
+            let g = m.grad_log_post(t, &all);
+            assert!((g - fd).abs() < 1e-3 * (1.0 + fd.abs()), "t={t}: {g} vs {fd}");
+        }
+    }
+}

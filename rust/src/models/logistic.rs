@@ -1,0 +1,295 @@
+//! Bayesian logistic regression (paper §6.1 and the likelihood of §6.3).
+//!
+//! Model: p(y_i | x_i, theta) = sigmoid(y_i x_i^T theta), y_i in {-1, +1},
+//! spherical Gaussian prior N(0, I / precision).
+
+use crate::data::Dataset;
+use crate::models::traits::LlDiffModel;
+
+/// Stable log sigmoid: log sig(z) = -softplus(-z).
+#[inline]
+pub fn log_sigmoid(z: f64) -> f64 {
+    -((-z).max(0.0) + (-(-z).abs()).exp().ln_1p())
+}
+
+/// Logistic-regression posterior target over a dataset.
+pub struct LogisticModel {
+    data: Dataset,
+    /// Gaussian prior precision (paper uses 10).
+    pub prior_precision: f64,
+}
+
+impl LogisticModel {
+    pub fn new(data: Dataset, prior_precision: f64) -> Self {
+        LogisticModel { data, prior_precision }
+    }
+
+    pub fn data(&self) -> &Dataset {
+        &self.data
+    }
+
+    pub fn d(&self) -> usize {
+        self.data.d()
+    }
+
+    /// Log prior log rho(theta) up to a constant.
+    pub fn log_prior(&self, theta: &[f64]) -> f64 {
+        -0.5 * self.prior_precision * theta.iter().map(|t| t * t).sum::<f64>()
+    }
+
+    /// Per-datapoint log-likelihood.
+    pub fn loglik_point(&self, i: usize, theta: &[f64]) -> f64 {
+        let z: f64 = self
+            .data
+            .row(i)
+            .iter()
+            .zip(theta)
+            .map(|(x, t)| x * t)
+            .sum();
+        log_sigmoid(self.data.label(i) * z)
+    }
+
+    /// Full-data log-likelihood (ground-truth / diagnostics only).
+    pub fn loglik_full(&self, theta: &[f64]) -> f64 {
+        (0..self.data.n()).map(|i| self.loglik_point(i, theta)).sum()
+    }
+
+    /// Gradient of the log-posterior (for MAP initialization and SGLD).
+    /// `idx` selects a mini-batch; the likelihood part is scaled by N/n.
+    pub fn grad_log_post(&self, theta: &[f64], idx: &[usize], grad: &mut [f64]) {
+        let d = self.d();
+        let scale = self.data.n() as f64 / idx.len() as f64;
+        for g in grad.iter_mut() {
+            *g = 0.0;
+        }
+        for &i in idx {
+            let row = self.data.row(i);
+            let y = self.data.label(i);
+            let z: f64 = row.iter().zip(theta.iter()).map(|(x, t)| x * t).sum();
+            // d/dtheta log sig(y z) = y sig(-y z) x
+            let w = y * sigmoid(-y * z);
+            for j in 0..d {
+                grad[j] += w * row[j];
+            }
+        }
+        for j in 0..d {
+            grad[j] = scale * grad[j] - self.prior_precision * theta[j];
+        }
+    }
+
+    /// MAP estimate by gradient ascent with backtracking (initialization
+    /// for ground-truth chains).
+    pub fn map_estimate(&self, iters: usize) -> Vec<f64> {
+        let d = self.d();
+        let idx: Vec<usize> = (0..self.data.n()).collect();
+        let mut theta = vec![0.0; d];
+        let mut grad = vec![0.0; d];
+        let mut step = 1.0 / self.data.n() as f64;
+        let mut obj = self.loglik_full(&theta) + self.log_prior(&theta);
+        for _ in 0..iters {
+            self.grad_log_post(&theta, &idx, &mut grad);
+            loop {
+                let cand: Vec<f64> = theta
+                    .iter()
+                    .zip(&grad)
+                    .map(|(t, g)| t + step * g)
+                    .collect();
+                let cand_obj = self.loglik_full(&cand) + self.log_prior(&cand);
+                if cand_obj > obj {
+                    theta = cand;
+                    obj = cand_obj;
+                    step *= 1.5;
+                    break;
+                }
+                step *= 0.5;
+                if step < 1e-14 {
+                    return theta;
+                }
+            }
+        }
+        theta
+    }
+
+    /// Predictive probability p(y=+1 | x, theta).
+    pub fn predict(&self, x: &[f64], theta: &[f64]) -> f64 {
+        let z: f64 = x.iter().zip(theta).map(|(a, b)| a * b).sum();
+        sigmoid(z)
+    }
+}
+
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+impl LlDiffModel for LogisticModel {
+    type Param = Vec<f64>;
+
+    fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    fn lldiff(&self, i: usize, cur: &Vec<f64>, prop: &Vec<f64>) -> f64 {
+        let row = self.data.row(i);
+        let y = self.data.label(i);
+        let (mut z0, mut z1) = (0.0, 0.0);
+        for j in 0..row.len() {
+            z0 += row[j] * cur[j];
+            z1 += row[j] * prop[j];
+        }
+        log_sigmoid(y * z1) - log_sigmoid(y * z0)
+    }
+
+    fn lldiff_moments(&self, idx: &[usize], cur: &Vec<f64>, prop: &Vec<f64>) -> (f64, f64) {
+        // Fused pass: both dot products per row, no allocation. The
+        // inner loops use exact-sized slices + 4-wide partial sums so
+        // LLVM drops the bounds checks and vectorizes (see EXPERIMENTS
+        // §Perf for the measured effect).
+        let d = self.d();
+        let cur = &cur[..d];
+        let prop = &prop[..d];
+        let (mut s, mut s2) = (0.0, 0.0);
+        for &i in idx {
+            let row = self.data.row(i);
+            let mut a0 = [0.0f64; 4];
+            let mut a1 = [0.0f64; 4];
+            let mut chunks_r = row.chunks_exact(4);
+            let mut chunks_c = cur.chunks_exact(4);
+            let mut chunks_p = prop.chunks_exact(4);
+            for ((r, c), p) in (&mut chunks_r).zip(&mut chunks_c).zip(&mut chunks_p) {
+                for k in 0..4 {
+                    a0[k] += r[k] * c[k];
+                    a1[k] += r[k] * p[k];
+                }
+            }
+            let (mut z0, mut z1) = (
+                (a0[0] + a0[1]) + (a0[2] + a0[3]),
+                (a1[0] + a1[1]) + (a1[2] + a1[3]),
+            );
+            for ((r, c), p) in chunks_r
+                .remainder()
+                .iter()
+                .zip(chunks_c.remainder())
+                .zip(chunks_p.remainder())
+            {
+                z0 += r * c;
+                z1 += r * p;
+            }
+            let y = self.data.label(i);
+            let l = log_sigmoid(y * z1) - log_sigmoid(y * z0);
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_class_gaussian;
+    use crate::stats::Pcg64;
+    use crate::testkit;
+
+    fn model() -> LogisticModel {
+        LogisticModel::new(two_class_gaussian(500, 8, 1.2, 0), 10.0)
+    }
+
+    #[test]
+    fn log_sigmoid_stable_and_correct() {
+        assert!((log_sigmoid(0.0) - 0.5f64.ln()).abs() < 1e-12);
+        assert!((log_sigmoid(2.0) - (1.0 / (1.0 + (-2.0f64).exp())).ln()).abs() < 1e-12);
+        // extreme values do not overflow
+        assert!(log_sigmoid(800.0).abs() < 1e-12);
+        assert!((log_sigmoid(-800.0) + 800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sigmoid_matches_exp_form() {
+        for &z in &[-30.0, -2.0, 0.0, 1.5, 40.0] {
+            let want = 1.0 / (1.0 + (-z as f64).exp());
+            assert!((sigmoid(z) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn lldiff_consistent_with_loglik() {
+        let m = model();
+        let mut rng = Pcg64::seeded(1);
+        let cur: Vec<f64> = (0..8).map(|_| 0.1 * rng.normal()).collect();
+        let prop: Vec<f64> = (0..8).map(|_| 0.1 * rng.normal()).collect();
+        for i in [0usize, 7, 100, 499] {
+            let want = m.loglik_point(i, &prop) - m.loglik_point(i, &cur);
+            assert!((m.lldiff(i, &cur, &prop) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fused_moments_match_default_loop() {
+        let m = model();
+        testkit::forall(32, |rng| {
+            let cur: Vec<f64> = (0..8).map(|_| 0.2 * rng.normal()).collect();
+            let prop: Vec<f64> = (0..8).map(|_| 0.2 * rng.normal()).collect();
+            let k = rng.below(100) + 1;
+            let idx: Vec<usize> = (0..k).map(|_| rng.below(500)).collect();
+            let (s, s2) = m.lldiff_moments(&idx, &cur, &prop);
+            let (mut ws, mut ws2) = (0.0, 0.0);
+            for &i in &idx {
+                let l = m.lldiff(i, &cur, &prop);
+                ws += l;
+                ws2 += l * l;
+            }
+            assert!((s - ws).abs() < 1e-9, "{s} vs {ws}");
+            assert!((s2 - ws2).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn map_improves_loglik_and_classifies() {
+        let m = model();
+        let theta = m.map_estimate(60);
+        let zero = vec![0.0; 8];
+        assert!(m.loglik_full(&theta) > m.loglik_full(&zero));
+        // MAP should classify most training points correctly
+        let correct = (0..m.n())
+            .filter(|&i| {
+                let p = m.predict(m.data().row(i), &theta);
+                (p > 0.5) == (m.data().label(i) > 0.0)
+            })
+            .count();
+        assert!(correct as f64 / m.n() as f64 > 0.7, "acc={}", correct);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let m = model();
+        let mut rng = Pcg64::seeded(2);
+        let theta: Vec<f64> = (0..8).map(|_| 0.1 * rng.normal()).collect();
+        let idx: Vec<usize> = (0..m.n()).collect();
+        let mut grad = vec![0.0; 8];
+        m.grad_log_post(&theta, &idx, &mut grad);
+        let f = |t: &[f64]| m.loglik_full(t) + m.log_prior(t);
+        let h = 1e-6;
+        for j in 0..8 {
+            let mut tp = theta.clone();
+            tp[j] += h;
+            let mut tm = theta.clone();
+            tm[j] -= h;
+            let fd = (f(&tp) - f(&tm)) / (2.0 * h);
+            assert!((grad[j] - fd).abs() < 1e-4 * (1.0 + fd.abs()), "j={j}: {} vs {fd}", grad[j]);
+        }
+    }
+
+    #[test]
+    fn prior_precision_shrinks_map() {
+        let loose = LogisticModel::new(two_class_gaussian(500, 8, 1.2, 0), 0.1);
+        let tight = LogisticModel::new(two_class_gaussian(500, 8, 1.2, 0), 1000.0);
+        let norm = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!(norm(&tight.map_estimate(40)) < norm(&loose.map_estimate(40)));
+    }
+}

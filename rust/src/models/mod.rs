@@ -1,0 +1,18 @@
+//! Target models: each paper experiment's posterior as an `LlDiffModel`
+//! population (plus the MRF, whose Gibbs population is pair-indexed).
+
+pub mod ica;
+pub mod linreg;
+pub mod logistic;
+pub mod mrf;
+pub mod potts;
+pub mod rjlogistic;
+pub mod traits;
+
+pub use ica::IcaModel;
+pub use linreg::LinRegModel;
+pub use logistic::LogisticModel;
+pub use mrf::MrfModel;
+pub use potts::PottsModel;
+pub use rjlogistic::{RjLogisticModel, RjState};
+pub use traits::{LlDiffModel, Proposal, ProposalKernel};

@@ -1,0 +1,239 @@
+//! Dense binary Markov Random Field with triple-clique potentials
+//! (paper supp. F.1): D variables, all C(D,3) potentials psi_{ijk},
+//! log psi drawn N(0, sigma^2).
+//!
+//! For a Gibbs update of variable v the "population" the sequential test
+//! subsamples is the set of (D-1)(D-2)/2 pairs (j, k):
+//!     l_pair = log psi(X_v=1, x_j, x_k) - log psi(X_v=0, x_j, x_k)
+//! and the exact conditional is sigmoid(sum over all pairs).
+
+use crate::data::synthetic::mrf_potentials;
+
+/// Binary MRF with all-triples log-potential tables.
+pub struct MrfModel {
+    d: usize,
+    /// Flattened tables: triple (i<j<k) at `triple_index`, 8 entries each
+    /// indexed by (x_i << 2) | (x_j << 1) | x_k.
+    log_psi: Vec<f64>,
+}
+
+impl MrfModel {
+    pub fn new(d: usize, log_psi: Vec<f64>) -> Self {
+        assert!(d >= 3);
+        assert_eq!(log_psi.len(), n_triples(d) * 8);
+        MrfModel { d, log_psi }
+    }
+
+    /// Random instance matching the paper: log psi ~ N(0, sigma^2).
+    pub fn random(d: usize, sigma: f64, seed: u64) -> Self {
+        Self::new(d, mrf_potentials(d, sigma, seed))
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of (j,k) pairs in one variable's Gibbs population.
+    pub fn n_pairs(&self) -> usize {
+        (self.d - 1) * (self.d - 2) / 2
+    }
+
+    /// Log potential of triple {a,b,c} (any order) at the given state.
+    pub fn log_potential(&self, mut a: usize, mut b: usize, mut c: usize, xa: bool, xb: bool, xc: bool) -> f64 {
+        let (mut va, mut vb, mut vc) = (xa, xb, xc);
+        // sort (a,b,c) carrying values along
+        if a > b {
+            std::mem::swap(&mut a, &mut b);
+            std::mem::swap(&mut va, &mut vb);
+        }
+        if b > c {
+            std::mem::swap(&mut b, &mut c);
+            std::mem::swap(&mut vb, &mut vc);
+        }
+        if a > b {
+            std::mem::swap(&mut a, &mut b);
+            std::mem::swap(&mut va, &mut vb);
+        }
+        let t = triple_index(a, b, c);
+        let bits = ((va as usize) << 2) | ((vb as usize) << 1) | (vc as usize);
+        self.log_psi[t * 8 + bits]
+    }
+
+    /// The pair population item for a Gibbs update of variable `v`:
+    /// pair_rank enumerates the (j,k), j<k, j,k != v pairs.
+    pub fn pair_lldiff(&self, v: usize, pair_rank: usize, x: &[bool]) -> f64 {
+        let (j, k) = self.pair_at(v, pair_rank);
+        self.log_potential(v, j, k, true, x[j], x[k])
+            - self.log_potential(v, j, k, false, x[j], x[k])
+    }
+
+    /// Decode pair_rank into the actual (j, k), j < k, both != v.
+    pub fn pair_at(&self, v: usize, rank: usize) -> (usize, usize) {
+        debug_assert!(rank < self.n_pairs());
+        // others = [0..d) \ {v}; rank indexes pairs of `others`.
+        // decode rank -> (p, q) over m = d-1 items, p < q
+        let m = self.d - 1;
+        // row p contributes (m - 1 - p) pairs; find p.
+        let mut p = 0usize;
+        let mut r = rank;
+        loop {
+            let row = m - 1 - p;
+            if r < row {
+                break;
+            }
+            r -= row;
+            p += 1;
+        }
+        let q = p + 1 + r;
+        let map = |t: usize| if t < v { t } else { t + 1 };
+        (map(p), map(q))
+    }
+
+    /// Exact log ratio sum over all pairs: log P(Xv=1,x_-v)/P(Xv=0,x_-v).
+    pub fn exact_log_ratio(&self, v: usize, x: &[bool]) -> f64 {
+        (0..self.n_pairs()).map(|r| self.pair_lldiff(v, r, x)).sum()
+    }
+
+    /// Exact Gibbs conditional P(X_v = 1 | x_{-v}).
+    pub fn exact_conditional(&self, v: usize, x: &[bool]) -> f64 {
+        crate::models::logistic::sigmoid(self.exact_log_ratio(v, x))
+    }
+
+    /// Moments (sum, sum of squares) of pair lldiffs over given ranks.
+    pub fn pair_moments(&self, v: usize, ranks: &[usize], x: &[bool]) -> (f64, f64) {
+        let (mut s, mut s2) = (0.0, 0.0);
+        for &r in ranks {
+            let l = self.pair_lldiff(v, r, x);
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
+
+    /// Unnormalized log joint (for small-D exact checks only).
+    pub fn log_joint(&self, x: &[bool]) -> f64 {
+        let d = self.d;
+        let mut s = 0.0;
+        for i in 0..d {
+            for j in i + 1..d {
+                for k in j + 1..d {
+                    s += self.log_potential(i, j, k, x[i], x[j], x[k]);
+                }
+            }
+        }
+        s
+    }
+}
+
+pub fn n_triples(d: usize) -> usize {
+    d * (d - 1) * (d - 2) / 6
+}
+
+/// Rank of the triple (i < j < k) in the combinatorial number system.
+pub fn triple_index(i: usize, j: usize, k: usize) -> usize {
+    debug_assert!(i < j && j < k);
+    k * (k - 1) * (k - 2) / 6 + j * (j - 1) / 2 + i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn triple_index_is_bijective() {
+        let d = 12;
+        let mut seen = vec![false; n_triples(d)];
+        for i in 0..d {
+            for j in i + 1..d {
+                for k in j + 1..d {
+                    let t = triple_index(i, j, k);
+                    assert!(t < seen.len(), "({i},{j},{k}) -> {t}");
+                    assert!(!seen[t], "collision at ({i},{j},{k})");
+                    seen[t] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn pair_at_enumerates_all_pairs() {
+        let m = MrfModel::random(9, 0.02, 0);
+        for v in 0..9 {
+            let mut seen = std::collections::HashSet::new();
+            for r in 0..m.n_pairs() {
+                let (j, k) = m.pair_at(v, r);
+                assert!(j < k && j != v && k != v, "v={v} r={r} -> ({j},{k})");
+                assert!(seen.insert((j, k)), "dup pair ({j},{k})");
+            }
+            assert_eq!(seen.len(), m.n_pairs());
+        }
+    }
+
+    #[test]
+    fn log_potential_order_invariant() {
+        let m = MrfModel::random(7, 0.5, 1);
+        testkit::forall(64, |rng| {
+            let mut ids = [0usize; 3];
+            loop {
+                for v in ids.iter_mut() {
+                    *v = rng.below(7);
+                }
+                if ids[0] != ids[1] && ids[1] != ids[2] && ids[0] != ids[2] {
+                    break;
+                }
+            }
+            let vals = [rng.uniform() < 0.5, rng.uniform() < 0.5, rng.uniform() < 0.5];
+            let a = m.log_potential(ids[0], ids[1], ids[2], vals[0], vals[1], vals[2]);
+            let b = m.log_potential(ids[2], ids[0], ids[1], vals[2], vals[0], vals[1]);
+            let c = m.log_potential(ids[1], ids[2], ids[0], vals[1], vals[2], vals[0]);
+            assert!((a - b).abs() < 1e-15 && (a - c).abs() < 1e-15);
+        });
+    }
+
+    #[test]
+    fn exact_conditional_matches_joint() {
+        // P(Xv=1 | x_-v) from pair sums must equal the ratio of joints.
+        let m = MrfModel::random(6, 0.3, 2);
+        testkit::forall(32, |rng| {
+            let v = rng.below(6);
+            let mut x: Vec<bool> = (0..6).map(|_| rng.uniform() < 0.5).collect();
+            x[v] = true;
+            let lp1 = m.log_joint(&x);
+            x[v] = false;
+            let lp0 = m.log_joint(&x);
+            let want = 1.0 / (1.0 + (lp0 - lp1).exp());
+            let got = m.exact_conditional(v, &x);
+            assert!((got - want).abs() < 1e-10, "v={v}: {got} vs {want}");
+        });
+    }
+
+    #[test]
+    fn pair_moments_match_loop() {
+        let m = MrfModel::random(10, 0.02, 3);
+        testkit::forall(32, |rng| {
+            let v = rng.below(10);
+            let x: Vec<bool> = (0..10).map(|_| rng.uniform() < 0.5).collect();
+            let n = rng.below(m.n_pairs()) + 1;
+            let ranks: Vec<usize> = (0..n).map(|_| rng.below(m.n_pairs())).collect();
+            let (s, s2) = m.pair_moments(v, &ranks, &x);
+            let (mut ws, mut ws2) = (0.0, 0.0);
+            for &r in &ranks {
+                let l = m.pair_lldiff(v, r, &x);
+                ws += l;
+                ws2 += l * l;
+            }
+            assert!((s - ws).abs() < 1e-12);
+            assert!((s2 - ws2).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn paper_scale_pair_count() {
+        // D=100: 4851 pairs per variable (paper supp. F.1).
+        let m = MrfModel::random(100, 0.02, 4);
+        assert_eq!(m.n_pairs(), 4851);
+        assert_eq!(n_triples(100), 161_700);
+    }
+}

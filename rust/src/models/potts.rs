@@ -1,0 +1,237 @@
+//! Multi-valued (Potts-style) dense MRF — the supp.-F extension:
+//! "the extension to multi-valued variables is also possible".
+//!
+//! D categorical variables with K states, triple-clique potentials
+//! psi_{ijk} over all C(D,3) triples (log tables of K^3 entries, drawn
+//! N(0, sigma^2) like the binary model). The Gibbs population for
+//! variable v is again the (D-1)(D-2)/2 pairs (j,k); the per-pair factor
+//! of state `a` is log psi(a, x_j, x_k), and a *comparison* population
+//! between states a and b is l_pair = f_pair(a) - f_pair(b) — exactly
+//! the shape the sequential test consumes (see samplers::gibbs_potts).
+
+use crate::models::mrf::{n_triples, triple_index};
+use crate::stats::Pcg64;
+
+pub struct PottsModel {
+    d: usize,
+    k: usize,
+    /// triple (i<j<k) tables: k^3 entries indexed (xi*k + xj)*k + xk
+    log_psi: Vec<f64>,
+}
+
+impl PottsModel {
+    pub fn new(d: usize, k: usize, log_psi: Vec<f64>) -> Self {
+        assert!(d >= 3 && k >= 2);
+        assert_eq!(log_psi.len(), n_triples(d) * k * k * k);
+        PottsModel { d, k, log_psi }
+    }
+
+    pub fn random(d: usize, k: usize, sigma: f64, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 6);
+        let tables = (0..n_triples(d) * k * k * k)
+            .map(|_| rng.normal_scaled(0.0, sigma))
+            .collect();
+        Self::new(d, k, tables)
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n_pairs(&self) -> usize {
+        (self.d - 1) * (self.d - 2) / 2
+    }
+
+    /// Log potential of triple {a,b,c} with values (va,vb,vc).
+    pub fn log_potential(
+        &self,
+        mut a: usize,
+        mut b: usize,
+        mut c: usize,
+        mut va: usize,
+        mut vb: usize,
+        mut vc: usize,
+    ) -> f64 {
+        if a > b {
+            std::mem::swap(&mut a, &mut b);
+            std::mem::swap(&mut va, &mut vb);
+        }
+        if b > c {
+            std::mem::swap(&mut b, &mut c);
+            std::mem::swap(&mut vb, &mut vc);
+        }
+        if a > b {
+            std::mem::swap(&mut a, &mut b);
+            std::mem::swap(&mut va, &mut vb);
+        }
+        let t = triple_index(a, b, c);
+        let k = self.k;
+        self.log_psi[t * k * k * k + (va * k + vb) * k + vc]
+    }
+
+    /// Decode pair rank into (j, k), j < k, both != v (same enumeration
+    /// as the binary model).
+    pub fn pair_at(&self, v: usize, rank: usize) -> (usize, usize) {
+        debug_assert!(rank < self.n_pairs());
+        let m = self.d - 1;
+        let mut p = 0usize;
+        let mut r = rank;
+        loop {
+            let row = m - 1 - p;
+            if r < row {
+                break;
+            }
+            r -= row;
+            p += 1;
+        }
+        let q = p + 1 + r;
+        let map = |t: usize| if t < v { t } else { t + 1 };
+        (map(p), map(q))
+    }
+
+    /// Factor value: log psi(v=state, x_j, x_k) for one pair.
+    #[inline]
+    pub fn pair_factor(&self, v: usize, rank: usize, state: usize, x: &[usize]) -> f64 {
+        let (j, k) = self.pair_at(v, rank);
+        self.log_potential(v, j, k, state, x[j], x[k])
+    }
+
+    /// Comparison population item between states a and b.
+    #[inline]
+    pub fn pair_lldiff(&self, v: usize, rank: usize, a: usize, b: usize, x: &[usize]) -> f64 {
+        self.pair_factor(v, rank, a, x) - self.pair_factor(v, rank, b, x)
+    }
+
+    /// Moments of the comparison population over given ranks.
+    pub fn pair_moments(
+        &self,
+        v: usize,
+        ranks: &[usize],
+        a: usize,
+        b: usize,
+        x: &[usize],
+    ) -> (f64, f64) {
+        let (mut s, mut s2) = (0.0, 0.0);
+        for &r in ranks {
+            let l = self.pair_lldiff(v, r, a, b, x);
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
+
+    /// Exact unnormalized log conditional of each state of v.
+    pub fn exact_scores(&self, v: usize, x: &[usize]) -> Vec<f64> {
+        (0..self.k)
+            .map(|state| {
+                (0..self.n_pairs()).map(|r| self.pair_factor(v, r, state, x)).sum()
+            })
+            .collect()
+    }
+
+    /// Exact conditional distribution of X_v.
+    pub fn exact_conditional(&self, v: usize, x: &[usize]) -> Vec<f64> {
+        let scores = self.exact_scores(v, x);
+        let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = scores.iter().map(|s| (s - max).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        exps.iter().map(|e| e / z).collect()
+    }
+
+    /// Unnormalized log joint (small-D checks only).
+    pub fn log_joint(&self, x: &[usize]) -> f64 {
+        let d = self.d;
+        let mut s = 0.0;
+        for i in 0..d {
+            for j in i + 1..d {
+                for k in j + 1..d {
+                    s += self.log_potential(i, j, k, x[i], x[j], x[k]);
+                }
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn exact_conditional_matches_joint() {
+        let m = PottsModel::random(5, 3, 0.3, 0);
+        testkit::forall(24, |rng| {
+            let v = rng.below(5);
+            let x: Vec<usize> = (0..5).map(|_| rng.below(3)).collect();
+            let cond = m.exact_conditional(v, &x);
+            // brute force from the joint
+            let mut logs = Vec::new();
+            for state in 0..3 {
+                let mut xx = x.clone();
+                xx[v] = state;
+                logs.push(m.log_joint(&xx));
+            }
+            let max = logs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let exps: Vec<f64> = logs.iter().map(|l| (l - max).exp()).collect();
+            let z: f64 = exps.iter().sum();
+            for state in 0..3 {
+                assert!(
+                    (cond[state] - exps[state] / z).abs() < 1e-10,
+                    "v={v} state={state}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn pair_moments_match_loop() {
+        let m = PottsModel::random(10, 3, 0.1, 1);
+        testkit::forall(24, |rng| {
+            let v = rng.below(10);
+            let x: Vec<usize> = (0..10).map(|_| rng.below(3)).collect();
+            let a = rng.below(3);
+            let b = rng.below(3);
+            let n = rng.below(m.n_pairs()) + 1;
+            let ranks: Vec<usize> = (0..n).map(|_| rng.below(m.n_pairs())).collect();
+            let (s, s2) = m.pair_moments(v, &ranks, a, b, &x);
+            let (mut ws, mut ws2) = (0.0, 0.0);
+            for &r in &ranks {
+                let l = m.pair_lldiff(v, r, a, b, &x);
+                ws += l;
+                ws2 += l * l;
+            }
+            assert!((s - ws).abs() < 1e-12);
+            assert!((s2 - ws2).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn conditional_sums_to_one() {
+        let m = PottsModel::random(8, 4, 0.2, 2);
+        let x: Vec<usize> = (0..8).map(|i| i % 4).collect();
+        for v in 0..8 {
+            let c = m.exact_conditional(v, &x);
+            assert!((c.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+            assert!(c.iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn binary_potts_matches_binary_mrf_shape() {
+        // K = 2 Potts with the same enumeration should expose the same
+        // pair structure as MrfModel.
+        let m = PottsModel::random(12, 2, 0.1, 3);
+        assert_eq!(m.n_pairs(), 55);
+        let b = crate::models::MrfModel::random(12, 0.1, 3);
+        for v in 0..12 {
+            for r in 0..m.n_pairs() {
+                assert_eq!(m.pair_at(v, r), b.pair_at(v, r));
+            }
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Variable-selection logistic regression for reversible-jump MCMC
+//! (paper §6.3, supp. E): theta = (beta, gamma) with a Laplace shrinkage
+//! prior on active coefficients, a right-truncated Poisson prior on the
+//! model size, and the MiniBooNE-like likelihood.
+
+use crate::data::Dataset;
+use crate::models::logistic::log_sigmoid;
+use crate::models::traits::LlDiffModel;
+use crate::stats::student_t::ln_gamma;
+
+/// Sparse parameter state: full-length beta plus the sorted active set.
+/// beta[j] is meaningful only when j is in `active`.
+#[derive(Clone, Debug)]
+pub struct RjState {
+    pub beta: Vec<f64>,
+    pub active: Vec<usize>,
+}
+
+impl RjState {
+    pub fn new(d: usize) -> Self {
+        RjState { beta: vec![0.0; d], active: Vec::new() }
+    }
+
+    pub fn with_active(d: usize, active: &[usize], values: &[f64]) -> Self {
+        let mut s = RjState::new(d);
+        for (&j, &v) in active.iter().zip(values) {
+            s.beta[j] = v;
+        }
+        s.active = active.to_vec();
+        s.active.sort_unstable();
+        s
+    }
+
+    pub fn k(&self) -> usize {
+        self.active.len()
+    }
+
+    /// L1 norm over the active set.
+    pub fn l1(&self) -> f64 {
+        self.active.iter().map(|&j| self.beta[j].abs()).sum()
+    }
+
+    #[inline]
+    pub fn logit(&self, row: &[f64]) -> f64 {
+        let mut z = 0.0;
+        for &j in &self.active {
+            z += self.beta[j] * row[j];
+        }
+        z
+    }
+}
+
+/// The RJ variable-selection target.
+pub struct RjLogisticModel {
+    data: Dataset,
+    /// Model-size Poisson rate lambda (paper: 1e-10).
+    pub lambda: f64,
+}
+
+impl RjLogisticModel {
+    pub fn new(data: Dataset, lambda: f64) -> Self {
+        RjLogisticModel { data, lambda }
+    }
+
+    pub fn data(&self) -> &Dataset {
+        &self.data
+    }
+
+    pub fn d(&self) -> usize {
+        self.data.d()
+    }
+
+    /// Log of the (nu-integrated-out) prior factor:
+    /// ||beta||_1^{-k} lambda^k B(k, D-k+1)   (paper §6.3).
+    pub fn log_prior(&self, s: &RjState) -> f64 {
+        let k = s.k() as f64;
+        let d = self.d() as f64;
+        if s.k() == 0 {
+            // empty model: the beta-function factor with k=0 (B(0,.) is
+            // divergent; the paper starts at k=1 — treat k=0 as k=1 with
+            // zero coefficient mass to keep the chain well-defined).
+            return f64::NEG_INFINITY;
+        }
+        let l1 = s.l1();
+        -k * l1.ln() + k * self.lambda.ln() + ln_beta(k, d - k + 1.0)
+    }
+
+    pub fn loglik_point(&self, i: usize, s: &RjState) -> f64 {
+        log_sigmoid(self.data.label(i) * s.logit(self.data.row(i)))
+    }
+
+    pub fn predict(&self, row: &[f64], s: &RjState) -> f64 {
+        crate::models::logistic::sigmoid(s.logit(row))
+    }
+}
+
+/// log Beta(a, b).
+pub fn ln_beta(a: f64, b: f64) -> f64 {
+    ln_gamma(a) + ln_gamma(b) - ln_gamma(a + b)
+}
+
+impl LlDiffModel for RjLogisticModel {
+    type Param = RjState;
+
+    fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    fn lldiff(&self, i: usize, cur: &RjState, prop: &RjState) -> f64 {
+        let row = self.data.row(i);
+        let y = self.data.label(i);
+        log_sigmoid(y * prop.logit(row)) - log_sigmoid(y * cur.logit(row))
+    }
+
+    fn lldiff_moments(&self, idx: &[usize], cur: &RjState, prop: &RjState) -> (f64, f64) {
+        let (mut s, mut s2) = (0.0, 0.0);
+        for &i in idx {
+            let row = self.data.row(i);
+            let y = self.data.label(i);
+            let l = log_sigmoid(y * prop.logit(row)) - log_sigmoid(y * cur.logit(row));
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::sparse_logistic;
+
+    fn model() -> (RjLogisticModel, Vec<f64>) {
+        let (ds, beta) = sparse_logistic(1000, 11, 3, 0.3, 0);
+        (RjLogisticModel::new(ds, 1e-10), beta)
+    }
+
+    #[test]
+    fn ln_beta_matches_definition() {
+        // B(2,3) = 1/12
+        assert!((ln_beta(2.0, 3.0) - (1.0f64 / 12.0).ln()).abs() < 1e-12);
+        // B(1,1) = 1
+        assert!(ln_beta(1.0, 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn state_logit_uses_only_active() {
+        let s = RjState::with_active(5, &[1, 3], &[2.0, -1.0]);
+        let row = [10.0, 1.0, 10.0, 2.0, 10.0];
+        assert!((s.logit(&row) - (2.0 - 2.0)).abs() < 1e-12);
+        assert_eq!(s.k(), 2);
+        assert!((s.l1() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lldiff_zero_for_same_state() {
+        let (m, _) = model();
+        let s = RjState::with_active(11, &[0, 2], &[0.5, -0.3]);
+        let idx: Vec<usize> = (0..100).collect();
+        let (sum, sum2) = m.lldiff_moments(&idx, &s, &s);
+        assert_eq!(sum, 0.0);
+        assert_eq!(sum2, 0.0);
+    }
+
+    #[test]
+    fn true_support_improves_loglik() {
+        let (m, beta_true) = model();
+        let active: Vec<usize> =
+            (0..11).filter(|&j| beta_true[j] != 0.0).collect();
+        let values: Vec<f64> = active.iter().map(|&j| beta_true[j]).collect();
+        let truth = RjState::with_active(11, &active, &values);
+        let null = RjState::with_active(11, &[0], &[0.0]);
+        let idx: Vec<usize> = (0..m.n()).collect();
+        let (s, _) = m.lldiff_moments(&idx, &null, &truth);
+        assert!(s > 0.0, "truth should beat empty model: {s}");
+    }
+
+    #[test]
+    fn prior_prefers_small_models_with_tiny_lambda() {
+        let (m, _) = model();
+        let small = RjState::with_active(11, &[1], &[0.5]);
+        let big = RjState::with_active(11, &[1, 2, 3, 4, 5, 6], &[0.5; 6]);
+        assert!(m.log_prior(&small) > m.log_prior(&big));
+    }
+
+    #[test]
+    fn empty_model_has_zero_prior_mass() {
+        let (m, _) = model();
+        assert_eq!(m.log_prior(&RjState::new(11)), f64::NEG_INFINITY);
+    }
+}

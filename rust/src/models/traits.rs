@@ -1,0 +1,132 @@
+//! Model traits: the contract between the sequential-test coordinator and
+//! the per-datapoint log-likelihood populations.
+//!
+//! The approximate MH test (paper Alg. 1) only ever sees the population
+//! `{ l_i = log p(x_i; theta') - log p(x_i; theta) }` through mini-batch
+//! moments `(sum l, sum l^2)`. `LlDiffModel` is exactly that interface;
+//! backends (pure Rust here, PJRT-executed Pallas in `runtime`) provide
+//! the `lldiff_moments` implementation.
+
+/// A target posterior whose likelihood factorizes over `n()` datapoints.
+pub trait LlDiffModel {
+    /// Parameter state of the Markov chain.
+    type Param: Clone + Send + Sync;
+
+    /// Number of datapoints N.
+    fn n(&self) -> usize;
+
+    /// Log-likelihood difference of datapoint `i` between `prop` and `cur`:
+    /// `l_i = log p(x_i; prop) - log p(x_i; cur)`.
+    fn lldiff(&self, i: usize, cur: &Self::Param, prop: &Self::Param) -> f64;
+
+    /// Mini-batch moments `(sum_i l_i, sum_i l_i^2)` over `idx`.
+    ///
+    /// The default loops `lldiff`; models override with fused batch code
+    /// (one dot-product pass, the Pallas kernel, ...) — this is the hot
+    /// path of the whole system.
+    fn lldiff_moments(&self, idx: &[usize], cur: &Self::Param, prop: &Self::Param) -> (f64, f64) {
+        let (mut s, mut s2) = (0.0, 0.0);
+        for &i in idx {
+            let l = self.lldiff(i, cur, prop);
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
+
+    /// Population mean `mu = (1/N) sum_i l_i` (exact MH path).
+    fn full_mean(&self, cur: &Self::Param, prop: &Self::Param) -> f64 {
+        let idx: Vec<usize> = (0..self.n()).collect();
+        let (s, _) = self.lldiff_moments(&idx, cur, prop);
+        s / self.n() as f64
+    }
+
+    /// Population std sigma_l of the l_i (used by the error analysis /
+    /// test design, not by the sampler itself).
+    fn full_std(&self, cur: &Self::Param, prop: &Self::Param) -> f64 {
+        let idx: Vec<usize> = (0..self.n()).collect();
+        let (s, s2) = self.lldiff_moments(&idx, cur, prop);
+        let n = self.n() as f64;
+        let mean = s / n;
+        ((s2 / n - mean * mean).max(0.0)).sqrt()
+    }
+}
+
+/// A proposed move plus the proposal/prior correction that enters mu_0:
+/// `log_correction = log[ rho(cur) q(prop|cur) / (rho(prop) q(cur|prop)) ]`
+/// so that `mu_0(u) = (ln u + log_correction) / N` (paper Eqn. 2).
+#[derive(Clone, Debug)]
+pub struct Proposal<P> {
+    pub param: P,
+    pub log_correction: f64,
+}
+
+/// Proposal kernel: draws a candidate state given the current one.
+pub trait ProposalKernel<P> {
+    fn propose(&self, cur: &P, rng: &mut crate::stats::Pcg64) -> Proposal<P>;
+}
+
+impl<P, F> ProposalKernel<P> for F
+where
+    F: Fn(&P, &mut crate::stats::Pcg64) -> Proposal<P>,
+{
+    fn propose(&self, cur: &P, rng: &mut crate::stats::Pcg64) -> Proposal<P> {
+        self(cur, rng)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Tiny synthetic model for coordinator unit tests: l_i are fixed
+    /// numbers independent of the parameter (the "population" view the
+    /// sequential test actually sees).
+    pub struct FixedPopulation {
+        pub ls: Vec<f64>,
+    }
+
+    impl LlDiffModel for FixedPopulation {
+        type Param = ();
+
+        fn n(&self) -> usize {
+            self.ls.len()
+        }
+
+        fn lldiff(&self, i: usize, _: &(), _: &()) -> f64 {
+            self.ls[i]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::FixedPopulation;
+    use super::*;
+
+    #[test]
+    fn default_moments_match_loop() {
+        let m = FixedPopulation { ls: vec![1.0, -2.0, 3.0, 0.5] };
+        let (s, s2) = m.lldiff_moments(&[0, 2, 3], &(), &());
+        assert!((s - 4.5).abs() < 1e-12);
+        assert!((s2 - (1.0 + 9.0 + 0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_mean_and_std() {
+        let m = FixedPopulation { ls: vec![1.0, 3.0] };
+        assert!((m.full_mean(&(), &()) - 2.0).abs() < 1e-12);
+        assert!((m.full_std(&(), &()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn closure_is_a_kernel() {
+        let k = |cur: &f64, rng: &mut crate::stats::Pcg64| Proposal {
+            param: cur + rng.normal(),
+            log_correction: 0.0,
+        };
+        let mut rng = crate::stats::Pcg64::seeded(0);
+        let p = k.propose(&1.0, &mut rng);
+        assert!(p.param.is_finite());
+    }
+}

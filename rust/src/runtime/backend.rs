@@ -1,0 +1,263 @@
+//! PJRT-served model backends: the three-layer hot path.
+//!
+//! `PjrtLogistic` implements the same `LlDiffModel` contract as the
+//! native Rust model but serves `lldiff_moments` by executing the
+//! AOT-compiled Pallas kernel (`logistic_lldiff.hlo.txt`). An
+//! integration test asserts native and PJRT moments agree to f32
+//! tolerance on random mini-batches — the cross-layer correctness proof.
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::pjrt::PjrtRuntime;
+use crate::models::logistic::LogisticModel;
+use crate::models::traits::LlDiffModel;
+
+/// Logistic-regression population served by the PJRT runtime.
+pub struct PjrtLogistic<'a> {
+    model: &'a LogisticModel,
+    /// runtime + reusable host staging buffers behind one lock
+    inner: Mutex<PjrtScratch>,
+    /// dataset pre-converted to f32, padded row-major to d_cap columns
+    /// (gathering a mini-batch is then a memcpy per row — §Perf)
+    x_f32: Vec<f32>,
+    y_f32: Vec<f32>,
+    /// batch capacity of the compiled kernel (manifest `x` leading dim)
+    batch_cap: usize,
+    /// feature capacity of the compiled kernel
+    d_cap: usize,
+}
+
+struct PjrtScratch {
+    rt: PjrtRuntime,
+    x: Vec<f32>,
+    y: Vec<f32>,
+    mask: Vec<f32>,
+}
+
+impl<'a> PjrtLogistic<'a> {
+    /// Wrap a native model; the dataset's feature dim must not exceed the
+    /// artifact's compiled width (features/theta are zero-padded up to it).
+    pub fn new(model: &'a LogisticModel, mut rt: PjrtRuntime) -> Result<Self> {
+        let spec = rt
+            .spec("logistic_lldiff")
+            .ok_or_else(|| anyhow::anyhow!("logistic_lldiff missing from manifest"))?
+            .clone();
+        let batch_cap = spec.inputs[0].dims[0];
+        let d_cap = spec.inputs[0].dims[1];
+        anyhow::ensure!(
+            model.d() <= d_cap,
+            "model d={} exceeds compiled width {d_cap}",
+            model.d()
+        );
+        rt.load("logistic_lldiff")?;
+        // pre-convert + pad the dataset once (f64 -> f32 casts off the
+        // per-step path; see EXPERIMENTS.md §Perf)
+        let n = model.n();
+        let d = model.d();
+        let mut x_f32 = vec![0f32; n * d_cap];
+        let mut y_f32 = vec![0f32; n];
+        for i in 0..n {
+            let row = model.data().row(i);
+            for j in 0..d {
+                x_f32[i * d_cap + j] = row[j] as f32;
+            }
+            y_f32[i] = model.data().label(i) as f32;
+        }
+        let scratch = PjrtScratch {
+            rt,
+            x: vec![0f32; batch_cap * d_cap],
+            y: vec![0f32; batch_cap],
+            mask: vec![0f32; batch_cap],
+        };
+        Ok(PjrtLogistic { model, inner: Mutex::new(scratch), x_f32, y_f32, batch_cap, d_cap })
+    }
+
+    pub fn batch_capacity(&self) -> usize {
+        self.batch_cap
+    }
+
+    fn pad_theta(&self, theta: &[f64]) -> Vec<f32> {
+        let mut t = vec![0f32; self.d_cap];
+        for (o, &v) in t.iter_mut().zip(theta) {
+            *o = v as f32;
+        }
+        t
+    }
+
+    /// One kernel execution over up to `batch_cap` rows.
+    fn exec_chunk(
+        &self,
+        idx: &[usize],
+        theta: &[f32],
+        theta_p: &[f32],
+    ) -> (f64, f64) {
+        debug_assert!(idx.len() <= self.batch_cap);
+        let dc = self.d_cap;
+        let mut inner = self.inner.lock().expect("runtime poisoned");
+        let inner = &mut *inner;
+        // gather rows from the pre-converted f32 matrix (memcpy per row)
+        for (r, &i) in idx.iter().enumerate() {
+            inner.x[r * dc..(r + 1) * dc]
+                .copy_from_slice(&self.x_f32[i * dc..(i + 1) * dc]);
+            inner.y[r] = self.y_f32[i];
+            inner.mask[r] = 1.0;
+        }
+        for r in idx.len()..self.batch_cap {
+            inner.x[r * dc..(r + 1) * dc].fill(0.0);
+            inner.y[r] = 0.0;
+            inner.mask[r] = 0.0;
+        }
+        let outs = inner
+            .rt
+            .exec("logistic_lldiff", &[&inner.x, &inner.y, &inner.mask, theta, theta_p])
+            .expect("pjrt exec failed");
+        (outs[0][0] as f64, outs[1][0] as f64)
+    }
+}
+
+impl<'a> LlDiffModel for PjrtLogistic<'a> {
+    type Param = Vec<f64>;
+
+    fn n(&self) -> usize {
+        self.model.n()
+    }
+
+    fn lldiff(&self, i: usize, cur: &Vec<f64>, prop: &Vec<f64>) -> f64 {
+        // single-point fallback: exact native value (used by diagnostics)
+        self.model.lldiff(i, cur, prop)
+    }
+
+    fn lldiff_moments(&self, idx: &[usize], cur: &Vec<f64>, prop: &Vec<f64>) -> (f64, f64) {
+        let theta = self.pad_theta(cur);
+        let theta_p = self.pad_theta(prop);
+        let (mut s, mut s2) = (0.0, 0.0);
+        for chunk in idx.chunks(self.batch_cap) {
+            let (cs, cs2) = self.exec_chunk(chunk, &theta, &theta_p);
+            s += cs;
+            s2 += cs2;
+        }
+        (s, s2)
+    }
+}
+
+/// ICA population served by the PJRT runtime (`ica_lldiff` artifact).
+pub struct PjrtIca<'a> {
+    model: &'a crate::models::IcaModel,
+    rt: Mutex<PjrtRuntime>,
+    batch_cap: usize,
+    d: usize,
+}
+
+impl<'a> PjrtIca<'a> {
+    pub fn new(model: &'a crate::models::IcaModel, mut rt: PjrtRuntime) -> Result<Self> {
+        let spec = rt
+            .spec("ica_lldiff")
+            .ok_or_else(|| anyhow::anyhow!("ica_lldiff missing from manifest"))?
+            .clone();
+        let batch_cap = spec.inputs[0].dims[0];
+        let d = spec.inputs[0].dims[1];
+        anyhow::ensure!(
+            model.d() == d,
+            "ICA artifact compiled for D={d}, model has D={}",
+            model.d()
+        );
+        rt.load("ica_lldiff")?;
+        Ok(PjrtIca { model, rt: Mutex::new(rt), batch_cap, d })
+    }
+
+    fn mat_f32(&self, m: &crate::data::Mat) -> Vec<f32> {
+        m.a.iter().map(|&v| v as f32).collect()
+    }
+
+    fn exec_chunk(&self, idx: &[usize], w: &[f32], w_p: &[f32], const_shift: f32) -> (f64, f64) {
+        debug_assert!(idx.len() <= self.batch_cap);
+        let (bc, d) = (self.batch_cap, self.d);
+        let mut x = vec![0f32; bc * d];
+        let mut mask = vec![0f32; bc];
+        for (r, &i) in idx.iter().enumerate() {
+            for (j, &v) in self.model.data().row(i).iter().enumerate() {
+                x[r * d + j] = v as f32;
+            }
+            mask[r] = 1.0;
+        }
+        let cs = [const_shift];
+        let mut rt = self.rt.lock().expect("runtime poisoned");
+        let outs = rt
+            .exec("ica_lldiff", &[&x, &mask, w, w_p, &cs])
+            .expect("pjrt exec failed");
+        (outs[0][0] as f64, outs[1][0] as f64)
+    }
+}
+
+impl<'a> LlDiffModel for PjrtIca<'a> {
+    type Param = crate::data::Mat;
+
+    fn n(&self) -> usize {
+        self.model.n()
+    }
+
+    fn lldiff(&self, i: usize, cur: &Self::Param, prop: &Self::Param) -> f64 {
+        self.model.lldiff(i, cur, prop)
+    }
+
+    fn lldiff_moments(&self, idx: &[usize], cur: &Self::Param, prop: &Self::Param) -> (f64, f64) {
+        let w = self.mat_f32(cur);
+        let w_p = self.mat_f32(prop);
+        // logdet difference computed host-side (the artifact takes it as
+        // a scalar: slogdet's LAPACK custom-call cannot run on this PJRT)
+        let (_, ld_cur) = cur.slogdet();
+        let (_, ld_prop) = prop.slogdet();
+        let const_shift = (ld_prop - ld_cur) as f32;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for chunk in idx.chunks(self.batch_cap) {
+            let (cs, cs2) = self.exec_chunk(chunk, &w, &w_p, const_shift);
+            s += cs;
+            s2 += cs2;
+        }
+        (s, s2)
+    }
+}
+
+/// Predictive-probability panel served by the `logistic_predict` artifact.
+pub struct PjrtPredictor {
+    rt: Mutex<PjrtRuntime>,
+    t_cap: usize,
+    d_cap: usize,
+}
+
+impl PjrtPredictor {
+    pub fn new(mut rt: PjrtRuntime) -> Result<Self> {
+        let spec = rt
+            .spec("logistic_predict")
+            .ok_or_else(|| anyhow::anyhow!("logistic_predict missing from manifest"))?
+            .clone();
+        let t_cap = spec.inputs[0].dims[0];
+        let d_cap = spec.inputs[0].dims[1];
+        rt.load("logistic_predict")?;
+        Ok(PjrtPredictor { rt: Mutex::new(rt), t_cap, d_cap })
+    }
+
+    /// sigmoid(X theta) for up to `t_cap` test rows of width <= d_cap.
+    pub fn predict(&self, rows: &[&[f64]], theta: &[f64]) -> Result<Vec<f64>> {
+        anyhow::ensure!(!rows.is_empty());
+        let mut out = Vec::with_capacity(rows.len());
+        let mut th = vec![0f32; self.d_cap];
+        for (o, &v) in th.iter_mut().zip(theta) {
+            *o = v as f32;
+        }
+        for chunk in rows.chunks(self.t_cap) {
+            let mut x = vec![0f32; self.t_cap * self.d_cap];
+            for (r, row) in chunk.iter().enumerate() {
+                for (j, &v) in row.iter().enumerate() {
+                    x[r * self.d_cap + j] = v as f32;
+                }
+            }
+            let mut rt = self.rt.lock().expect("runtime poisoned");
+            let outs = rt.exec("logistic_predict", &[&x, &th])?;
+            out.extend(outs[0][..chunk.len()].iter().map(|&p| p as f64));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,151 @@
+//! Parser for `artifacts/manifest.txt`, the contract between the Python
+//! AOT pipeline (python/compile/aot.py) and the Rust runtime.
+//!
+//! Line format (one artifact per line):
+//!   <name> <file> in=<arg>:<dtype>:<d0>x<d1>,... out=<dtype>:<dims>,...
+//! dims are `x`-separated or the literal `scalar`.
+
+use anyhow::{bail, Context, Result};
+
+/// Shape of one tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    /// empty = scalar
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(Vec::new());
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().context("bad dim"))
+        .collect()
+}
+
+fn parse_tensor(part: &str, with_name: bool) -> Result<TensorSpec> {
+    let fields: Vec<&str> = part.split(':').collect();
+    match (with_name, fields.as_slice()) {
+        (true, [name, dtype, dims]) => Ok(TensorSpec {
+            name: name.to_string(),
+            dtype: dtype.to_string(),
+            dims: parse_dims(dims)?,
+        }),
+        (false, [dtype, dims]) => Ok(TensorSpec {
+            name: String::new(),
+            dtype: dtype.to_string(),
+            dims: parse_dims(dims)?,
+        }),
+        _ => bail!("malformed tensor spec: {part}"),
+    }
+}
+
+/// Parse a full manifest.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
+    let mut specs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields.len() != 4 {
+            bail!("manifest line {}: expected 4 fields, got {}", lineno + 1, fields.len());
+        }
+        let ins = fields[2]
+            .strip_prefix("in=")
+            .with_context(|| format!("line {}: missing in=", lineno + 1))?;
+        let outs = fields[3]
+            .strip_prefix("out=")
+            .with_context(|| format!("line {}: missing out=", lineno + 1))?;
+        specs.push(ArtifactSpec {
+            name: fields[0].to_string(),
+            file: fields[1].to_string(),
+            inputs: ins
+                .split(',')
+                .map(|p| parse_tensor(p, true))
+                .collect::<Result<_>>()?,
+            outputs: outs
+                .split(',')
+                .map(|p| parse_tensor(p, false))
+                .collect::<Result<_>>()?,
+        });
+    }
+    Ok(specs)
+}
+
+/// Load and parse `<dir>/manifest.txt`.
+pub fn load_manifest(dir: &std::path::Path) -> Result<Vec<ArtifactSpec>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+    parse_manifest(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+logistic_lldiff logistic_lldiff.hlo.txt in=x:float32:512x50,y:float32:512 out=float32:scalar,float32:scalar
+logistic_predict logistic_predict.hlo.txt in=x:float32:2048x50,theta:float32:50 out=float32:2048
+";
+
+    #[test]
+    fn parses_sample() {
+        let specs = parse_manifest(SAMPLE).unwrap();
+        assert_eq!(specs.len(), 2);
+        let s = &specs[0];
+        assert_eq!(s.name, "logistic_lldiff");
+        assert_eq!(s.inputs[0].dims, vec![512, 50]);
+        assert_eq!(s.inputs[0].name, "x");
+        assert_eq!(s.inputs[0].numel(), 512 * 50);
+        assert_eq!(s.outputs[0].dims, Vec::<usize>::new());
+        assert_eq!(s.outputs[0].numel(), 1);
+        assert_eq!(specs[1].outputs[0].dims, vec![2048]);
+    }
+
+    #[test]
+    fn skips_blank_and_comment_lines() {
+        let text = format!("# comment\n\n{SAMPLE}\n");
+        assert_eq!(parse_manifest(&text).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_manifest("name only").is_err());
+        assert!(parse_manifest("a b c=bad d=also").is_err());
+        assert!(parse_manifest("a b in=x:f32:2xq out=f32:1").is_err());
+    }
+
+    #[test]
+    fn parses_real_generated_manifest_if_present() {
+        // When artifacts were built (make artifacts), validate for real.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let specs = load_manifest(&dir).unwrap();
+            assert!(specs.iter().any(|s| s.name == "logistic_lldiff"));
+            for s in &specs {
+                assert!(dir.join(&s.file).exists(), "missing {}", s.file);
+                assert!(!s.inputs.is_empty() && !s.outputs.is_empty());
+            }
+        }
+    }
+}

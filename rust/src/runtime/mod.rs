@@ -1,0 +1,12 @@
+//! AOT artifact execution through the PJRT C API (the `xla` crate):
+//! manifest parsing, executable cache, and `LlDiffModel` backends that
+//! serve moments from the compiled Pallas kernels. Python never runs
+//! here — artifacts are loaded from `artifacts/*.hlo.txt`.
+
+pub mod backend;
+pub mod manifest;
+pub mod pjrt;
+
+pub use backend::{PjrtIca, PjrtLogistic, PjrtPredictor};
+pub use manifest::{load_manifest, parse_manifest, ArtifactSpec, TensorSpec};
+pub use pjrt::PjrtRuntime;

@@ -1,0 +1,296 @@
+//! Exact and approximate Gibbs sampling for dense binary MRFs
+//! (paper supp. F): the conditional flip of variable v is decided by the
+//! same sequential test, run over the population of potential pairs.
+//!
+//! The accept threshold is mu_0 = (1/Np) log(u / (1 - u)) — note the
+//! paper's Eqn. 42 prints log u / log(1-u), a typo: u < p1/(p0+p1) is
+//! equivalent to mean lldiff > log(u/(1-u))/Np (see DESIGN.md).
+
+use crate::coordinator::austerity::BoundSeq;
+use crate::coordinator::scheduler::MinibatchScheduler;
+use crate::models::mrf::MrfModel;
+use crate::stats::student_t::t_sf;
+use crate::stats::welford::MomentAccumulator;
+use crate::stats::Pcg64;
+
+/// Gibbs update mode.
+#[derive(Clone, Debug)]
+pub enum GibbsMode {
+    Exact,
+    /// Sequential test over pair mini-batches.
+    Approx { eps: f64, batch: usize },
+}
+
+/// Counters for one run.
+#[derive(Clone, Debug, Default)]
+pub struct GibbsStats {
+    pub updates: usize,
+    /// Total potential-pair evaluations.
+    pub pairs_used: u64,
+    pub ones_assigned: u64,
+}
+
+/// Scratch to avoid per-update allocation.
+pub struct GibbsScratch {
+    sched: MinibatchScheduler,
+    ranks: Vec<usize>,
+}
+
+impl GibbsScratch {
+    pub fn new(model: &MrfModel) -> Self {
+        GibbsScratch { sched: MinibatchScheduler::new(model.n_pairs()), ranks: Vec::new() }
+    }
+}
+
+/// One Gibbs update of variable `v`; returns pairs consumed.
+pub fn gibbs_update(
+    model: &MrfModel,
+    v: usize,
+    x: &mut [bool],
+    mode: &GibbsMode,
+    scratch: &mut GibbsScratch,
+    rng: &mut Pcg64,
+) -> usize {
+    let np = model.n_pairs();
+    let u = rng.uniform_pos();
+    // guard against u == 1 (log(u/(1-u)) = inf)
+    let u = u.min(1.0 - 1e-16);
+    let mu0 = (u / (1.0 - u)).ln() / np as f64;
+
+    match mode {
+        GibbsMode::Exact => {
+            let mu = model.exact_log_ratio(v, x) / np as f64;
+            x[v] = mu > mu0;
+            np
+        }
+        GibbsMode::Approx { eps, batch } => {
+            let bound = BoundSeq::Pocock { eps: *eps };
+            scratch.sched.reset();
+            let mut acc = MomentAccumulator::new();
+            loop {
+                let b = scratch.sched.next_batch(*batch, rng);
+                debug_assert!(!b.is_empty());
+                scratch.ranks.clear();
+                scratch.ranks.extend(b.iter().map(|&i| i as usize));
+                let (s, s2) = model.pair_moments(v, &scratch.ranks, x);
+                acc.add_batch(s, s2, scratch.ranks.len());
+
+                let n = acc.n();
+                let t = acc.t_statistic(mu0, np);
+                let delta = t_sf(t.abs(), (n - 1).max(1) as f64);
+                let pi = n as f64 / np as f64;
+                if delta < bound.eps_at(pi) || n == np {
+                    x[v] = acc.mean() > mu0;
+                    return n;
+                }
+            }
+        }
+    }
+}
+
+/// One full sweep (each variable once, in order), updating stats.
+pub fn gibbs_sweep(
+    model: &MrfModel,
+    x: &mut [bool],
+    mode: &GibbsMode,
+    scratch: &mut GibbsScratch,
+    stats: &mut GibbsStats,
+    rng: &mut Pcg64,
+) {
+    for v in 0..model.d() {
+        let used = gibbs_update(model, v, x, mode, scratch, rng);
+        stats.updates += 1;
+        stats.pairs_used += used as u64;
+        stats.ones_assigned += x[v] as u64;
+    }
+}
+
+/// Empirical joint distribution over a subset of variables, as
+/// probabilities over the 2^|subset| configurations (supp. F.1 metric).
+pub struct SubsetMarginal {
+    pub vars: Vec<usize>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl SubsetMarginal {
+    pub fn new(vars: Vec<usize>) -> Self {
+        assert!(vars.len() <= 20);
+        let k = vars.len();
+        SubsetMarginal { vars, counts: vec![0; 1 << k], total: 0 }
+    }
+
+    pub fn record(&mut self, x: &[bool]) {
+        let mut idx = 0usize;
+        for (b, &v) in self.vars.iter().enumerate() {
+            idx |= (x[v] as usize) << b;
+        }
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn probs(&self) -> Vec<f64> {
+        if self.total == 0 {
+            return vec![0.0; self.counts.len()];
+        }
+        self.counts.iter().map(|&c| c as f64 / self.total as f64).collect()
+    }
+
+    /// L1 distance to another probability vector.
+    pub fn l1_to(&self, other: &[f64]) -> f64 {
+        self.probs()
+            .iter()
+            .zip(other)
+            .map(|(a, b)| (a - b).abs())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> MrfModel {
+        MrfModel::random(6, 0.3, 0)
+    }
+
+    #[test]
+    fn exact_update_matches_conditional_frequency() {
+        // repeated exact updates at a fixed neighborhood assign 1 with
+        // the exact conditional probability.
+        let m = tiny();
+        let mut rng = Pcg64::seeded(1);
+        let mut scratch = GibbsScratch::new(&m);
+        let base: Vec<bool> = (0..6).map(|i| i % 2 == 0).collect();
+        let v = 2;
+        let want = m.exact_conditional(v, &base);
+        let trials = 40_000;
+        let mut ones = 0;
+        for _ in 0..trials {
+            let mut x = base.clone();
+            gibbs_update(&m, v, &mut x, &GibbsMode::Exact, &mut scratch, &mut rng);
+            ones += x[v] as usize;
+        }
+        let got = ones as f64 / trials as f64;
+        assert!((got - want).abs() < 0.01, "got {got} want {want}");
+    }
+
+    #[test]
+    fn approx_update_tracks_conditional() {
+        let m = MrfModel::random(24, 0.1, 2);
+        let mut rng = Pcg64::seeded(3);
+        let mut scratch = GibbsScratch::new(&m);
+        let base: Vec<bool> = (0..24).map(|i| i % 3 == 0).collect();
+        let v = 5;
+        let want = m.exact_conditional(v, &base);
+        let trials = 8_000;
+        let mut ones = 0;
+        let mode = GibbsMode::Approx { eps: 0.05, batch: 40 };
+        for _ in 0..trials {
+            let mut x = base.clone();
+            gibbs_update(&m, v, &mut x, &mode, &mut scratch, &mut rng);
+            ones += x[v] as usize;
+        }
+        let got = ones as f64 / trials as f64;
+        assert!((got - want).abs() < 0.05, "got {got} want {want}");
+    }
+
+    #[test]
+    fn approx_uses_fewer_pairs_with_larger_eps() {
+        let m = MrfModel::random(40, 0.05, 4);
+        let mut rng = Pcg64::seeded(5);
+        let mut scratch = GibbsScratch::new(&m);
+        let mut x: Vec<bool> = (0..40).map(|_| rng.uniform() < 0.5).collect();
+        let mut used = Vec::new();
+        for &eps in &[0.01, 0.2] {
+            let mode = GibbsMode::Approx { eps, batch: 50 };
+            let mut stats = GibbsStats::default();
+            let mut r = Pcg64::seeded(6);
+            for _ in 0..5 {
+                gibbs_sweep(&m, &mut x, &mode, &mut scratch, &mut stats, &mut r);
+            }
+            used.push(stats.pairs_used);
+        }
+        assert!(used[1] <= used[0], "{used:?}");
+    }
+
+    #[test]
+    fn exact_sweep_counts() {
+        let m = tiny();
+        let mut rng = Pcg64::seeded(7);
+        let mut scratch = GibbsScratch::new(&m);
+        let mut x = vec![false; 6];
+        let mut stats = GibbsStats::default();
+        gibbs_sweep(&m, &mut x, &GibbsMode::Exact, &mut scratch, &mut stats, &mut rng);
+        assert_eq!(stats.updates, 6);
+        assert_eq!(stats.pairs_used, (6 * m.n_pairs()) as u64);
+    }
+
+    #[test]
+    fn exact_chain_matches_bruteforce_marginals() {
+        // D=6: enumerate the joint exactly and compare Gibbs marginals.
+        let m = tiny();
+        let d = 6;
+        // brute force P(x)
+        let mut probs = vec![0.0f64; 1 << d];
+        let mut logs = vec![0.0f64; 1 << d];
+        for cfg in 0..(1usize << d) {
+            let x: Vec<bool> = (0..d).map(|b| (cfg >> b) & 1 == 1).collect();
+            logs[cfg] = m.log_joint(&x);
+        }
+        let max = logs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut z = 0.0;
+        for cfg in 0..(1 << d) {
+            probs[cfg] = (logs[cfg] - max).exp();
+            z += probs[cfg];
+        }
+        for p in probs.iter_mut() {
+            *p /= z;
+        }
+        let want_marginal: Vec<f64> = (0..d)
+            .map(|v| {
+                (0..(1usize << d))
+                    .filter(|cfg| (cfg >> v) & 1 == 1)
+                    .map(|cfg| probs[cfg])
+                    .sum()
+            })
+            .collect();
+
+        let mut rng = Pcg64::seeded(8);
+        let mut scratch = GibbsScratch::new(&m);
+        let mut x = vec![false; d];
+        let mut stats = GibbsStats::default();
+        let sweeps = 30_000;
+        let mut ones = vec![0u64; d];
+        for s in 0..sweeps {
+            gibbs_sweep(&m, &mut x, &GibbsMode::Exact, &mut scratch, &mut stats, &mut rng);
+            if s >= 1000 {
+                for v in 0..d {
+                    ones[v] += x[v] as u64;
+                }
+            }
+        }
+        for v in 0..d {
+            let got = ones[v] as f64 / (sweeps - 1000) as f64;
+            assert!(
+                (got - want_marginal[v]).abs() < 0.02,
+                "var {v}: got {got} want {}",
+                want_marginal[v]
+            );
+        }
+    }
+
+    #[test]
+    fn subset_marginal_bookkeeping() {
+        let mut sm = SubsetMarginal::new(vec![0, 2]);
+        sm.record(&[true, false, false]);
+        sm.record(&[true, false, true]);
+        sm.record(&[false, false, true]);
+        let p = sm.probs();
+        // configs: bit0 = x[0], bit1 = x[2]
+        assert!((p[0b01] - 1.0 / 3.0).abs() < 1e-12); // x0=1, x2=0
+        assert!((p[0b11] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((p[0b10] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((sm.l1_to(&[0.0, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0])).abs() < 1e-12);
+    }
+}

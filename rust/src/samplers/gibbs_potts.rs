@@ -1,0 +1,307 @@
+//! Approximate Gibbs for multi-valued variables — the supp.-F extension.
+//!
+//! For a K-state conditional P(X_v = a | x_-v) ∝ exp(S_a) with
+//! S_a = sum over the pair population of log psi(a, x_j, x_k), exact
+//! sampling is equivalent to the Gumbel-max trick:
+//!
+//! ```text
+//! X_v = argmax_a ( S_a + G_a ),   G_a iid standard Gumbel.
+//! ```
+//!
+//! Deciding the argmax is a tournament of K-1 pairwise comparisons
+//! "(S_a + G_a) > (S_b + G_b)?", and each comparison is precisely the
+//! paper's population-mean threshold test with
+//!
+//! ```text
+//! mu    = (1/Np) sum_pairs [f_pair(a) - f_pair(b)]
+//! mu_0  = (G_b - G_a) / Np
+//! ```
+//!
+//! so the binary sequential test (Alg. 1) applies unchanged. With exact
+//! comparisons the update is exactly Gibbs; with epsilon > 0 each
+//! comparison errs with the controlled probability of §5.
+
+use crate::coordinator::austerity::BoundSeq;
+use crate::coordinator::scheduler::MinibatchScheduler;
+use crate::models::potts::PottsModel;
+use crate::stats::student_t::t_sf;
+use crate::stats::welford::MomentAccumulator;
+use crate::stats::Pcg64;
+
+/// Update mode for the categorical Gibbs sampler.
+#[derive(Clone, Debug)]
+pub enum PottsMode {
+    /// exact conditional (full pair scan, inverse-CDF draw)
+    Exact,
+    /// Gumbel-max tournament of sequential tests
+    Approx { eps: f64, batch: usize },
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct PottsStats {
+    pub updates: usize,
+    pub pairs_used: u64,
+}
+
+pub struct PottsScratch {
+    sched: MinibatchScheduler,
+    ranks: Vec<usize>,
+    gumbels: Vec<f64>,
+}
+
+impl PottsScratch {
+    pub fn new(model: &PottsModel) -> Self {
+        PottsScratch {
+            sched: MinibatchScheduler::new(model.n_pairs()),
+            ranks: Vec::new(),
+            gumbels: vec![0.0; model.k()],
+        }
+    }
+}
+
+/// Standard Gumbel draw.
+#[inline]
+fn gumbel(rng: &mut Pcg64) -> f64 {
+    -(-rng.uniform_pos().ln()).ln()
+}
+
+/// One sequential comparison: decide sign of mean lldiff(a,b) - mu0.
+#[allow(clippy::too_many_arguments)]
+fn seq_compare(
+    model: &PottsModel,
+    v: usize,
+    a: usize,
+    b: usize,
+    mu0: f64,
+    eps: f64,
+    batch: usize,
+    x: &[usize],
+    scratch: &mut PottsScratch,
+    rng: &mut Pcg64,
+) -> (bool, usize) {
+    let np = model.n_pairs();
+    let bound = BoundSeq::Pocock { eps };
+    scratch.sched.reset();
+    let mut acc = MomentAccumulator::new();
+    loop {
+        let bt = scratch.sched.next_batch(batch, rng);
+        debug_assert!(!bt.is_empty());
+        scratch.ranks.clear();
+        scratch.ranks.extend(bt.iter().map(|&i| i as usize));
+        let (s, s2) = model.pair_moments(v, &scratch.ranks, a, b, x);
+        acc.add_batch(s, s2, scratch.ranks.len());
+        let n = acc.n();
+        let t = acc.t_statistic(mu0, np);
+        let delta = t_sf(t.abs(), (n - 1).max(1) as f64);
+        if delta < bound.eps_at(n as f64 / np as f64) || n == np {
+            return (acc.mean() > mu0, n);
+        }
+    }
+}
+
+/// One Gibbs update of variable v; returns pairs consumed.
+pub fn potts_update(
+    model: &PottsModel,
+    v: usize,
+    x: &mut [usize],
+    mode: &PottsMode,
+    scratch: &mut PottsScratch,
+    rng: &mut Pcg64,
+) -> usize {
+    let np = model.n_pairs();
+    match mode {
+        PottsMode::Exact => {
+            let cond = model.exact_conditional(v, x);
+            let u = rng.uniform();
+            let mut cum = 0.0;
+            let mut pick = model.k() - 1;
+            for (state, &p) in cond.iter().enumerate() {
+                cum += p;
+                if u < cum {
+                    pick = state;
+                    break;
+                }
+            }
+            x[v] = pick;
+            np * model.k()
+        }
+        PottsMode::Approx { eps, batch } => {
+            // Gumbel-max tournament
+            for g in scratch.gumbels.iter_mut() {
+                *g = gumbel(rng);
+            }
+            let mut used = 0usize;
+            let mut champ = 0usize;
+            for cand in 1..model.k() {
+                // (S_champ + G_champ) > (S_cand + G_cand)?
+                let mu0 = (scratch.gumbels[cand] - scratch.gumbels[champ]) / np as f64;
+                let (champ_wins, n) =
+                    seq_compare(model, v, champ, cand, mu0, *eps, *batch, x, scratch, rng);
+                used += n;
+                if !champ_wins {
+                    champ = cand;
+                }
+            }
+            x[v] = champ;
+            used
+        }
+    }
+}
+
+/// Full sweep over all variables.
+pub fn potts_sweep(
+    model: &PottsModel,
+    x: &mut [usize],
+    mode: &PottsMode,
+    scratch: &mut PottsScratch,
+    stats: &mut PottsStats,
+    rng: &mut Pcg64,
+) {
+    for v in 0..model.d() {
+        let used = potts_update(model, v, x, mode, scratch, rng);
+        stats.updates += 1;
+        stats.pairs_used += used as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gumbel_max_with_exact_scores_samples_conditional() {
+        // sanity of the trick itself: argmax(S + G) ~ softmax(S)
+        let scores = [1.0f64, 0.0, -0.5];
+        let mut rng = Pcg64::seeded(0);
+        let mut counts = [0usize; 3];
+        let trials = 60_000;
+        for _ in 0..trials {
+            let mut best = 0;
+            let mut best_v = f64::NEG_INFINITY;
+            for (i, &s) in scores.iter().enumerate() {
+                let v = s + gumbel(&mut rng);
+                if v > best_v {
+                    best_v = v;
+                    best = i;
+                }
+            }
+            counts[best] += 1;
+        }
+        let z: f64 = scores.iter().map(|s| s.exp()).sum();
+        for i in 0..3 {
+            let want = scores[i].exp() / z;
+            let got = counts[i] as f64 / trials as f64;
+            assert!((got - want).abs() < 0.01, "state {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn approx_update_tracks_exact_conditional() {
+        let m = PottsModel::random(20, 3, 0.08, 1);
+        let mut rng = Pcg64::seeded(2);
+        let mut scratch = PottsScratch::new(&m);
+        let base: Vec<usize> = (0..20).map(|i| i % 3).collect();
+        let v = 4;
+        let want = m.exact_conditional(v, &base);
+        let mode = PottsMode::Approx { eps: 0.05, batch: 40 };
+        let trials = 6_000;
+        let mut counts = vec![0usize; 3];
+        for _ in 0..trials {
+            let mut x = base.clone();
+            potts_update(&m, v, &mut x, &mode, &mut scratch, &mut rng);
+            counts[x[v]] += 1;
+        }
+        for state in 0..3 {
+            let got = counts[state] as f64 / trials as f64;
+            assert!(
+                (got - want[state]).abs() < 0.06,
+                "state {state}: {got} vs {}",
+                want[state]
+            );
+        }
+    }
+
+    #[test]
+    fn approx_uses_fewer_pairs_than_exact_scan() {
+        let m = PottsModel::random(40, 3, 0.02, 3);
+        let mut rng = Pcg64::seeded(4);
+        let mut scratch = PottsScratch::new(&m);
+        let mut x: Vec<usize> = (0..40).map(|_| rng.below(3)).collect();
+        let mode = PottsMode::Approx { eps: 0.2, batch: 100 };
+        let mut stats = PottsStats::default();
+        for _ in 0..5 {
+            potts_sweep(&m, &mut x, &mode, &mut scratch, &mut stats, &mut rng);
+        }
+        let per_update = stats.pairs_used as f64 / stats.updates as f64;
+        // exact cost would be n_pairs * K
+        assert!(
+            per_update < (m.n_pairs() * m.k()) as f64,
+            "per-update {per_update} vs exact {}",
+            m.n_pairs() * m.k()
+        );
+    }
+
+    #[test]
+    fn exact_chain_matches_bruteforce_marginals() {
+        let m = PottsModel::random(5, 3, 0.25, 5);
+        let d = 5;
+        // brute-force marginals
+        let total = 3usize.pow(5);
+        let mut probs = vec![0.0f64; total];
+        let mut logs = vec![0.0f64; total];
+        let decode = |mut cfg: usize| -> Vec<usize> {
+            let mut x = vec![0usize; d];
+            for v in x.iter_mut() {
+                *v = cfg % 3;
+                cfg /= 3;
+            }
+            x
+        };
+        for cfg in 0..total {
+            logs[cfg] = m.log_joint(&decode(cfg));
+        }
+        let max = logs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut z = 0.0;
+        for cfg in 0..total {
+            probs[cfg] = (logs[cfg] - max).exp();
+            z += probs[cfg];
+        }
+        let want: Vec<Vec<f64>> = (0..d)
+            .map(|v| {
+                (0..3)
+                    .map(|s| {
+                        (0..total)
+                            .filter(|&cfg| decode(cfg)[v] == s)
+                            .map(|cfg| probs[cfg] / z)
+                            .sum()
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let mut rng = Pcg64::seeded(6);
+        let mut scratch = PottsScratch::new(&m);
+        let mut x = vec![0usize; d];
+        let mut stats = PottsStats::default();
+        let sweeps = 20_000;
+        let mut counts = vec![vec![0u64; 3]; d];
+        for s in 0..sweeps {
+            potts_sweep(&m, &mut x, &PottsMode::Exact, &mut scratch, &mut stats, &mut rng);
+            if s >= 1_000 {
+                for v in 0..d {
+                    counts[v][x[v]] += 1;
+                }
+            }
+        }
+        for v in 0..d {
+            for s in 0..3 {
+                let got = counts[v][s] as f64 / (sweeps - 1_000) as f64;
+                assert!(
+                    (got - want[v][s]).abs() < 0.02,
+                    "v={v} s={s}: {got} vs {}",
+                    want[v][s]
+                );
+            }
+        }
+    }
+}

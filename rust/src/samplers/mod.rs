@@ -1,0 +1,20 @@
+//! Proposal kernels and non-MH samplers for every paper experiment:
+//! Gaussian random walk (§6.1), Stiefel-manifold walk (§6.2),
+//! reversible-jump moves (§6.3), SGLD ± correction (§6.4), and
+//! exact/approximate Gibbs for MRFs (supp. F).
+
+pub mod gibbs;
+pub mod gibbs_potts;
+pub mod pseudo_marginal;
+pub mod random_walk;
+pub mod rjmcmc;
+pub mod sgld;
+pub mod stiefel;
+
+pub use gibbs_potts::{potts_sweep, potts_update, PottsMode, PottsScratch, PottsStats};
+pub use pseudo_marginal::{run_pseudo_marginal, PmStats, PoissonEstimator};
+pub use gibbs::{gibbs_sweep, gibbs_update, GibbsMode, GibbsScratch, GibbsStats, SubsetMarginal};
+pub use random_walk::{GaussianRandomWalk, ScalarRandomWalk};
+pub use rjmcmc::{MoveProbs, RjKernel};
+pub use sgld::{run_sgld, SgldConfig, SgldStats};
+pub use stiefel::StiefelRandomWalk;

@@ -1,0 +1,204 @@
+//! Stochastic Gradient Langevin Dynamics for the 1-d toy model
+//! (paper §6.4): the uncorrected sampler that exhibits the pitfall, and
+//! the version corrected by the approximate MH test.
+//!
+//! Proposal (Eqn. 9):
+//!   theta' ~ N( theta + alpha/2 * [ (N/n) sum_{x in Xn} grad log p(x|theta)
+//!                                   + grad log rho(theta) ],  alpha )
+//!
+//! The corrected variant treats the SGLD kernel as a mixture over
+//! mini-batches and enforces detailed balance against each component:
+//!   mu_0 = (1/N) log[ u rho(theta) q(theta'|theta, Xn)
+//!                       / (rho(theta') q(theta|theta', Xn)) ].
+
+use crate::coordinator::austerity::{seq_mh_test, SeqTestConfig};
+use crate::coordinator::scheduler::MinibatchScheduler;
+use crate::models::linreg::LinRegModel;
+use crate::models::traits::LlDiffModel;
+use crate::stats::Pcg64;
+
+/// SGLD driver configuration.
+#[derive(Clone, Debug)]
+pub struct SgldConfig {
+    /// Step size alpha (paper: 5e-6).
+    pub alpha: f64,
+    /// Gradient mini-batch size n (paper style; we default 500).
+    pub grad_batch: usize,
+    /// None = uncorrected SGLD (always accept); Some = approximate MH
+    /// correction with this sequential test config.
+    pub correction: Option<SeqTestConfig>,
+}
+
+/// Outcome counters of an SGLD run.
+#[derive(Clone, Debug, Default)]
+pub struct SgldStats {
+    pub steps: usize,
+    pub accepted: usize,
+    pub data_used: u64,
+}
+
+/// log N(x; mean, var).
+#[inline]
+fn log_normal_pdf(x: f64, mean: f64, var: f64) -> f64 {
+    let d = x - mean;
+    -0.5 * (d * d / var) - 0.5 * (var * 2.0 * std::f64::consts::PI).ln()
+}
+
+/// Run SGLD on the toy model, collecting every post-burn-in sample of
+/// theta. Returns (samples, stats).
+pub fn run_sgld(
+    model: &LinRegModel,
+    cfg: &SgldConfig,
+    init: f64,
+    steps: usize,
+    burn_in: usize,
+    rng: &mut Pcg64,
+) -> (Vec<f64>, SgldStats) {
+    let n_total = model.n();
+    let mut grad_sched = MinibatchScheduler::new(n_total);
+    let mut test_sched = MinibatchScheduler::new(n_total);
+    let mut idx_buf: Vec<usize> = Vec::new();
+    let mut theta = init;
+    let mut out = Vec::with_capacity(steps.saturating_sub(burn_in));
+    let mut stats = SgldStats::default();
+
+    for step in 0..steps {
+        // Draw the gradient mini-batch Xn (fresh without-replacement draw).
+        grad_sched.reset();
+        let batch = grad_sched.next_batch(cfg.grad_batch, rng);
+        idx_buf.clear();
+        idx_buf.extend(batch.iter().map(|&i| i as usize));
+
+        let drift = 0.5 * cfg.alpha * model.grad_log_post(theta, &idx_buf);
+        let mean_fwd = theta + drift;
+        let prop = mean_fwd + cfg.alpha.sqrt() * rng.normal();
+        stats.data_used += idx_buf.len() as u64;
+
+        let accepted = match &cfg.correction {
+            None => true,
+            Some(test_cfg) => {
+                // Reverse-move drift uses the SAME mini-batch Xn.
+                let drift_rev = 0.5 * cfg.alpha * model.grad_log_post(prop, &idx_buf);
+                let mean_rev = prop + drift_rev;
+                let log_q_fwd = log_normal_pdf(prop, mean_fwd, cfg.alpha);
+                let log_q_rev = log_normal_pdf(theta, mean_rev, cfg.alpha);
+                // c = log[rho(cur) q(prop|cur,Xn) / (rho(prop) q(cur|prop,Xn))]
+                let c = model.log_prior(theta) - model.log_prior(prop) + log_q_fwd - log_q_rev;
+                let u = rng.uniform_pos();
+                let mu0 = (u.ln() + c) / n_total as f64;
+                let out = seq_mh_test(
+                    model, &theta, &prop, mu0, test_cfg, &mut test_sched, rng, &mut idx_buf,
+                );
+                stats.data_used += out.n_used as u64;
+                out.accept
+            }
+        };
+
+        if accepted {
+            theta = prop;
+            stats.accepted += 1;
+        }
+        stats.steps += 1;
+        if step >= burn_in {
+            out.push(theta);
+        }
+    }
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::linreg_toy;
+    use crate::stats::Histogram;
+
+    fn model() -> LinRegModel {
+        LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0)
+    }
+
+    #[test]
+    fn uncorrected_always_accepts() {
+        let m = model();
+        let cfg = SgldConfig { alpha: 5e-6, grad_batch: 500, correction: None };
+        let mut rng = Pcg64::seeded(0);
+        let (samples, stats) = run_sgld(&m, &cfg, 0.45, 500, 0, &mut rng);
+        assert_eq!(stats.accepted, stats.steps);
+        assert_eq!(samples.len(), 500);
+    }
+
+    #[test]
+    fn corrected_rejects_some_moves() {
+        let m = model();
+        let cfg = SgldConfig {
+            alpha: 5e-6,
+            grad_batch: 500,
+            correction: Some(SeqTestConfig::new(0.5, 500)),
+        };
+        let mut rng = Pcg64::seeded(1);
+        let (_, stats) = run_sgld(&m, &cfg, 0.45, 2_000, 0, &mut rng);
+        assert!(stats.accepted < stats.steps, "no rejections?");
+        assert!(stats.accepted as f64 / stats.steps as f64 > 0.3, "too many rejections");
+    }
+
+    #[test]
+    fn corrected_concentrates_at_mode() {
+        // The paper's headline qualitative claim: with the MH correction
+        // the mass far to the right of the mode (the pitfall region)
+        // disappears.
+        let m = model();
+        let steps = 20_000;
+        let mut rng = Pcg64::seeded(2);
+        let un = SgldConfig { alpha: 5e-6, grad_batch: 500, correction: None };
+        let (s_un, _) = run_sgld(&m, &un, 0.45, steps, 1000, &mut rng);
+        let co = SgldConfig {
+            alpha: 5e-6,
+            grad_batch: 500,
+            correction: Some(SeqTestConfig::new(0.5, 500)),
+        };
+        let (s_co, _) = run_sgld(&m, &co, 0.45, steps, 1000, &mut rng);
+
+        let far = |s: &[f64]| s.iter().filter(|&&t| t > 0.6).count() as f64 / s.len() as f64;
+        assert!(
+            far(&s_co) < far(&s_un) + 0.02,
+            "corrected {} vs uncorrected {}",
+            far(&s_co),
+            far(&s_un)
+        );
+
+        // corrected samples should track the true posterior around the mode
+        let mut h = Histogram::new(0.2, 0.8, 30);
+        h.add_all(&s_co);
+        let (grid, dens) = m.posterior_density(0.2, 0.8, 30);
+        let mode_idx = dens
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        // histogram peak within 2 bins of the true mode
+        let h_peak = (0..h.bins())
+            .max_by(|&a, &b| h.density(a).partial_cmp(&h.density(b)).unwrap())
+            .unwrap();
+        assert!(
+            (h_peak as i64 - mode_idx as i64).abs() <= 3,
+            "peak bin {h_peak} vs mode bin {mode_idx} (grid {:?})",
+            &grid[mode_idx]
+        );
+    }
+
+    #[test]
+    fn log_normal_pdf_normalizes() {
+        // integrate over a grid
+        let var = 0.3;
+        let mean = -0.2;
+        let n = 4000;
+        let (lo, hi) = (-6.0, 6.0);
+        let h = (hi - lo) / n as f64;
+        let mut s = 0.0;
+        for i in 0..n {
+            let x = lo + (i as f64 + 0.5) * h;
+            s += log_normal_pdf(x, mean, var).exp() * h;
+        }
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+}

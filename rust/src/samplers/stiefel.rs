@@ -1,0 +1,104 @@
+//! Random walk on the Stiefel manifold of orthonormal matrices
+//! (paper §6.2, following Ouyang 2008): W' = exp(K) W with K a random
+//! skew-symmetric matrix. Left-multiplication by exp(K) preserves
+//! orthonormality; flipping the sign of K gives the reverse move and K
+//! and -K are equally likely, so the proposal is symmetric and only
+//! log(u) enters mu_0 (the prior is uniform on the manifold).
+
+use crate::data::linalg::{random_skew, Mat};
+use crate::models::traits::{Proposal, ProposalKernel};
+use crate::stats::Pcg64;
+
+pub struct StiefelRandomWalk {
+    /// Std-dev of the skew generator entries (step size on the manifold).
+    pub sigma: f64,
+}
+
+impl StiefelRandomWalk {
+    pub fn new(sigma: f64) -> Self {
+        assert!(sigma > 0.0);
+        StiefelRandomWalk { sigma }
+    }
+}
+
+impl ProposalKernel<Mat> for StiefelRandomWalk {
+    fn propose(&self, cur: &Mat, rng: &mut Pcg64) -> Proposal<Mat> {
+        let k = random_skew(cur.d, self.sigma, rng);
+        let rot = k.expm();
+        Proposal { param: rot.matmul(cur), log_correction: 0.0 }
+    }
+}
+
+/// Re-orthonormalize a drifting state (numerical hygiene on long chains).
+pub fn reorthonormalize(w: &Mat) -> Mat {
+    // one Newton iteration of the polar decomposition:
+    // W <- W (3 I - W^T W) / 2 (quadratically convergent near the manifold)
+    let d = w.d;
+    let wtw = w.transpose().matmul(w);
+    let mut corr = Mat::eye(d).scale(3.0);
+    for i in 0..d {
+        for j in 0..d {
+            corr[(i, j)] -= wtw[(i, j)];
+        }
+    }
+    w.matmul(&corr).scale(0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::linalg::random_orthonormal;
+    use crate::testkit;
+
+    #[test]
+    fn proposal_stays_on_manifold() {
+        testkit::forall(32, |rng| {
+            let d = rng.below(5) + 2;
+            let w = random_orthonormal(d, rng);
+            let k = StiefelRandomWalk::new(0.1);
+            let p = k.propose(&w, rng);
+            assert!(p.param.orthonormal_defect() < 1e-8);
+            assert_eq!(p.log_correction, 0.0);
+        });
+    }
+
+    #[test]
+    fn step_size_controls_distance() {
+        let mut rng = Pcg64::seeded(0);
+        let w = random_orthonormal(4, &mut rng);
+        let small = StiefelRandomWalk::new(0.01);
+        let large = StiefelRandomWalk::new(0.5);
+        let mut ds = 0.0;
+        let mut dl = 0.0;
+        for _ in 0..50 {
+            ds += small.propose(&w, &mut rng).param.frobenius_dist(&w);
+            dl += large.propose(&w, &mut rng).param.frobenius_dist(&w);
+        }
+        assert!(dl > 5.0 * ds, "small {ds} large {dl}");
+    }
+
+    #[test]
+    fn reorthonormalize_projects_back() {
+        let mut rng = Pcg64::seeded(1);
+        let w = random_orthonormal(4, &mut rng);
+        // perturb off the manifold slightly
+        let mut drift = w.clone();
+        for v in drift.a.iter_mut() {
+            *v += 1e-4 * rng.normal();
+        }
+        let before = drift.orthonormal_defect();
+        let fixed = reorthonormalize(&drift);
+        assert!(fixed.orthonormal_defect() < before / 50.0);
+    }
+
+    #[test]
+    fn chain_of_proposals_does_not_drift() {
+        let mut rng = Pcg64::seeded(2);
+        let mut w = random_orthonormal(4, &mut rng);
+        let k = StiefelRandomWalk::new(0.2);
+        for _ in 0..500 {
+            w = k.propose(&w, &mut rng).param;
+        }
+        assert!(w.orthonormal_defect() < 1e-6, "defect {}", w.orthonormal_defect());
+    }
+}

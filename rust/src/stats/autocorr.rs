@@ -1,0 +1,107 @@
+//! Integrated autocorrelation time (IAT) estimation.
+//!
+//! The paper's variance decomposition `V ~= sigma_f^2 tau / T` (section 2)
+//! uses the IAT `tau`; we estimate it with Geyer's initial positive
+//! sequence (IPS) estimator, the standard choice for reversible chains,
+//! and report effective sample size `T / tau`.
+
+/// Autocovariance at the given lag (biased, divide-by-n convention).
+pub fn autocovariance(xs: &[f64], lag: usize) -> f64 {
+    let n = xs.len();
+    assert!(lag < n);
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let mut s = 0.0;
+    for i in 0..n - lag {
+        s += (xs[i] - mean) * (xs[i + lag] - mean);
+    }
+    s / n as f64
+}
+
+/// Geyer initial-positive-sequence IAT estimate.
+///
+/// tau = 1 + 2 sum_k rho_k, truncated at the first k where the paired sum
+/// Gamma_m = rho_{2m} + rho_{2m+1} turns non-positive.
+pub fn integrated_autocorr_time(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 4 {
+        return 1.0;
+    }
+    let c0 = autocovariance(xs, 0);
+    if c0 <= 0.0 {
+        return 1.0;
+    }
+    let max_lag = (n - 1).min(n / 2);
+    let mut tau = 1.0;
+    let mut m = 0;
+    loop {
+        let l1 = 2 * m + 1;
+        let l2 = 2 * m + 2;
+        if l2 > max_lag {
+            break;
+        }
+        let gamma = (autocovariance(xs, l1) + autocovariance(xs, l2)) / c0;
+        if gamma <= 0.0 {
+            break;
+        }
+        tau += 2.0 * gamma;
+        m += 1;
+    }
+    tau.max(1.0)
+}
+
+/// Effective sample size T / tau.
+pub fn effective_sample_size(xs: &[f64]) -> f64 {
+    xs.len() as f64 / integrated_autocorr_time(xs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+
+    #[test]
+    fn iid_has_tau_near_one() {
+        let mut rng = Pcg64::seeded(0);
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.normal()).collect();
+        let tau = integrated_autocorr_time(&xs);
+        assert!(tau < 1.2, "tau={tau}");
+    }
+
+    #[test]
+    fn ar1_tau_matches_theory() {
+        // AR(1) x_t = a x_{t-1} + e: tau = (1+a)/(1-a).
+        let a: f64 = 0.8;
+        let mut rng = Pcg64::seeded(1);
+        let mut x = 0.0;
+        let xs: Vec<f64> = (0..200_000)
+            .map(|_| {
+                x = a * x + rng.normal() * (1.0 - a * a).sqrt();
+                x
+            })
+            .collect();
+        let tau = integrated_autocorr_time(&xs);
+        let want = (1.0 + a) / (1.0 - a); // 9
+        assert!((tau - want).abs() / want < 0.15, "tau={tau} want={want}");
+    }
+
+    #[test]
+    fn constant_series_degenerate() {
+        let xs = vec![2.5; 100];
+        assert_eq!(integrated_autocorr_time(&xs), 1.0);
+    }
+
+    #[test]
+    fn ess_bounded_by_n() {
+        let mut rng = Pcg64::seeded(2);
+        let mut x = 0.0;
+        let xs: Vec<f64> = (0..5_000)
+            .map(|_| {
+                x = 0.5 * x + rng.normal();
+                x
+            })
+            .collect();
+        let ess = effective_sample_size(&xs);
+        assert!(ess > 0.0 && ess <= xs.len() as f64);
+        assert!(ess < 0.9 * xs.len() as f64); // correlated: well below n
+    }
+}

@@ -1,0 +1,123 @@
+//! Fixed-bin histogram used by the SGLD pitfall figure (empirical sample
+//! density vs true posterior) and the t-statistic distribution figure.
+
+/// Equal-width histogram over [lo, hi]; out-of-range samples are clamped
+/// into the edge bins (and counted, so densities stay normalized).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            total: 0,
+        }
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * bins as f64) as isize).clamp(0, bins as isize - 1) as usize;
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn add_all(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn count(&self, i: usize) -> u64 {
+        self.counts[i]
+    }
+
+    /// Center of bin i.
+    pub fn center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.bins() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        (self.hi - self.lo) / self.bins() as f64
+    }
+
+    /// Normalized density estimate at bin i (integrates to 1).
+    pub fn density(&self, i: usize) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.counts[i] as f64 / (self.total as f64 * self.bin_width())
+    }
+
+    /// L1 distance between this (normalized) histogram and a density
+    /// evaluated at bin centers — the figure-5 comparison metric.
+    pub fn l1_vs_density<F: Fn(f64) -> f64>(&self, f: F) -> f64 {
+        let w = self.bin_width();
+        (0..self.bins())
+            .map(|i| (self.density(i) - f(self.center(i))).abs() * w)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+
+    #[test]
+    fn density_integrates_to_one() {
+        let mut h = Histogram::new(-3.0, 3.0, 50);
+        let mut rng = Pcg64::seeded(0);
+        for _ in 0..10_000 {
+            h.add(rng.normal());
+        }
+        let integral: f64 = (0..h.bins()).map(|i| h.density(i) * h.bin_width()).sum();
+        assert!((integral - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn out_of_range_clamped() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.add(-5.0);
+        h.add(5.0);
+        assert_eq!(h.count(0), 1);
+        assert_eq!(h.count(9), 1);
+        assert_eq!(h.total(), 2);
+    }
+
+    #[test]
+    fn normal_histogram_close_to_pdf() {
+        let mut h = Histogram::new(-4.0, 4.0, 40);
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..200_000 {
+            h.add(rng.normal());
+        }
+        let l1 = h.l1_vs_density(crate::stats::normal::phi_pdf);
+        assert!(l1 < 0.05, "l1={l1}");
+    }
+
+    #[test]
+    fn centers_are_monotone() {
+        let h = Histogram::new(-1.0, 1.0, 4);
+        assert!((h.center(0) - (-0.75)).abs() < 1e-12);
+        assert!((h.center(3) - 0.75).abs() < 1e-12);
+    }
+}

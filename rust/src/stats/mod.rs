@@ -1,0 +1,17 @@
+//! Statistics substrate: RNG, special functions, moment accumulators,
+//! quadrature, autocorrelation, histograms.
+//!
+//! Everything here is dependency-free and deterministic given a seed —
+//! the foundation the sequential-test coordinator is built on.
+
+pub mod autocorr;
+pub mod histogram;
+pub mod normal;
+pub mod quadrature;
+pub mod rng;
+pub mod student_t;
+pub mod welford;
+
+pub use histogram::Histogram;
+pub use rng::Pcg64;
+pub use welford::{MomentAccumulator, Welford};

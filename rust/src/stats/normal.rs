@@ -1,0 +1,271 @@
+//! Normal distribution primitives: erf/erfc, Phi, phi, and inverse Phi.
+//!
+//! erf uses the Cody-style rational approximations from W. J. Cody,
+//! "Rational Chebyshev approximation for the error function" (1969),
+//! accurate to ~1e-15 over the full range; the inverse CDF uses Acklam's
+//! algorithm refined by one Halley step (~1e-15). These feed the
+//! Student-t CDF, the random-walk DP, and the design quadrature, all of
+//! which are sensitive to tail accuracy.
+
+/// Error function, |err| < 1.5e-15.
+pub fn erf(x: f64) -> f64 {
+    if x.is_nan() {
+        return f64::NAN;
+    }
+    let ax = x.abs();
+    if ax < 0.5 {
+        // rational approx of erf(x)/x on [0, 0.5]
+        const P: [f64; 5] = [
+            3.209377589138469472562e3,
+            3.774852376853020208137e2,
+            1.138641541510501556495e2,
+            3.161123743870565596947e0,
+            1.857777061846031526730e-1,
+        ];
+        const Q: [f64; 5] = [
+            2.844236833439170622273e3,
+            1.282616526077372275645e3,
+            2.440246379344441733056e2,
+            2.360129095234412093499e1,
+            1.0,
+        ];
+        let z = x * x;
+        let mut num = P[4];
+        let mut den = Q[4];
+        for i in (0..4).rev() {
+            num = num * z + P[i];
+            den = den * z + Q[i];
+        }
+        x * num / den
+    } else {
+        let s = 1.0 - erfc(ax);
+        if x < 0.0 {
+            -s
+        } else {
+            s
+        }
+    }
+}
+
+/// Complementary error function, relative accuracy ~1e-14 in the tails.
+pub fn erfc(x: f64) -> f64 {
+    if x.is_nan() {
+        return f64::NAN;
+    }
+    let ax = x.abs();
+    let r = if ax < 0.5 {
+        1.0 - erf(ax)
+    } else if ax <= 4.0 {
+        // Cody's erfc rational approximation on [0.46875, 4]
+        const P: [f64; 9] = [
+            1.23033935479799725272e3,
+            2.05107837782607146532e3,
+            1.71204761263407058314e3,
+            8.81952221241769090411e2,
+            2.98635138197400131132e2,
+            6.61191906371416294775e1,
+            8.88314979438837594118e0,
+            5.64188496988670089180e-1,
+            2.15311535474403846343e-8,
+        ];
+        const Q: [f64; 9] = [
+            1.23033935480374942043e3,
+            3.43936767414372163696e3,
+            4.36261909014324715820e3,
+            3.29079923573345962678e3,
+            1.62138957456669018874e3,
+            5.37181101862009857509e2,
+            1.17693950891312499305e2,
+            1.57449261107098347253e1,
+            1.0,
+        ];
+        let mut num = P[8];
+        let mut den = Q[8];
+        for i in (0..8).rev() {
+            num = num * ax + P[i];
+            den = den * ax + Q[i];
+        }
+        (-ax * ax).exp() * num / den
+    } else {
+        // Cody's asymptotic form for [4, inf)
+        const P: [f64; 6] = [
+            -6.58749161529837803157e-4,
+            -1.60837851487422766278e-2,
+            -1.25781726111229246204e-1,
+            -3.60344899949804439429e-1,
+            -3.05326634961232344035e-1,
+            -1.63153871373020978498e-2,
+        ];
+        const Q: [f64; 6] = [
+            2.33520497626869185443e-3,
+            6.05183413124413191178e-2,
+            5.27905102951428412248e-1,
+            1.87295284992346047209e0,
+            2.56852019228982242072e0,
+            1.0,
+        ];
+        let z = 1.0 / (ax * ax);
+        let mut num = P[5];
+        let mut den = Q[5];
+        for i in (0..5).rev() {
+            num = num * z + P[i];
+            den = den * z + Q[i];
+        }
+        // erfc(x) = exp(-x^2)/x * (1/sqrt(pi) - z R(z)); our P is Cody's
+        // negated, so the subtraction becomes an addition.
+        let frac = z * num / den;
+        (-ax * ax).exp() * (0.564_189_583_547_756_3 + frac) / ax
+    };
+    if x < 0.0 {
+        2.0 - r
+    } else {
+        r
+    }
+}
+
+/// Standard normal PDF.
+#[inline]
+pub fn phi_pdf(x: f64) -> f64 {
+    const INV_SQRT_2PI: f64 = 0.398_942_280_401_432_7;
+    INV_SQRT_2PI * (-0.5 * x * x).exp()
+}
+
+/// Standard normal CDF Phi(x).
+#[inline]
+pub fn phi_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x * std::f64::consts::FRAC_1_SQRT_2)
+}
+
+/// Upper tail 1 - Phi(x), computed without cancellation.
+#[inline]
+pub fn phi_sf(x: f64) -> f64 {
+    0.5 * erfc(x * std::f64::consts::FRAC_1_SQRT_2)
+}
+
+/// Inverse standard normal CDF (Acklam + one Halley refinement).
+pub fn phi_inv(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "phi_inv domain: got {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    // One Halley step using the exact CDF.
+    let e = phi_cdf(x) - p;
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (x * x / 2.0).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        // Reference values from Abramowitz & Stegun / mpmath.
+        let cases = [
+            (0.0, 0.0),
+            (0.5, 0.5204998778130465),
+            (1.0, 0.8427007929497149),
+            (2.0, 0.9953222650189527),
+            (3.0, 0.9999779095030014),
+            (-1.0, -0.8427007929497149),
+        ];
+        for (x, want) in cases {
+            assert!((erf(x) - want).abs() < 1e-13, "erf({x})");
+        }
+    }
+
+    #[test]
+    fn erfc_tail_accuracy() {
+        // erfc(5) = 1.5374597944280349e-12 (mpmath)
+        let got = erfc(5.0);
+        assert!((got / 1.537_459_794_428_034_9e-12 - 1.0).abs() < 1e-10, "got {got:e}");
+        // erfc(10) = 2.0884875837625447e-45
+        let got = erfc(10.0);
+        assert!((got / 2.088_487_583_762_544_7e-45 - 1.0).abs() < 1e-9, "got {got:e}");
+    }
+
+    #[test]
+    fn phi_cdf_known_values() {
+        assert!((phi_cdf(0.0) - 0.5).abs() < 1e-15);
+        assert!((phi_cdf(1.959963984540054) - 0.975).abs() < 1e-12);
+        assert!((phi_cdf(-1.6448536269514722) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phi_sf_symmetry() {
+        for &x in &[0.0, 0.3, 1.0, 2.5, 4.0, 7.0] {
+            assert!((phi_sf(x) - phi_cdf(-x)).abs() < 1e-15);
+            assert!((phi_cdf(x) + phi_sf(x) - 1.0).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn phi_inv_round_trip() {
+        for i in 1..999 {
+            let p = i as f64 / 1000.0;
+            let x = phi_inv(p);
+            assert!((phi_cdf(x) - p).abs() < 1e-12, "p={p}");
+        }
+        // deep tails
+        for &p in &[1e-10, 1e-6, 1.0 - 1e-6] {
+            let x = phi_inv(p);
+            assert!((phi_cdf(x) - p).abs() / p.min(1.0 - p) < 1e-8, "p={p}");
+        }
+    }
+
+    #[test]
+    fn pdf_integrates_to_cdf_diff() {
+        // Trapezoid integration of the pdf matches the cdf difference.
+        let (a, b) = (-1.3, 2.1);
+        let n = 20_000;
+        let h = (b - a) / n as f64;
+        let mut s = 0.5 * (phi_pdf(a) + phi_pdf(b));
+        for i in 1..n {
+            s += phi_pdf(a + i as f64 * h);
+        }
+        let integral = s * h;
+        assert!((integral - (phi_cdf(b) - phi_cdf(a))).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,169 @@
+//! 1-d numerical quadrature for the acceptance-probability error
+//! `Delta = int_{Pa}^{1} E(mu_std(u)) du - int_0^{Pa} E(mu_std(u)) du`
+//! (paper Eqn. 6 / supp. Eqn. 22) and the design objective E_u[pi_bar].
+//!
+//! Gauss-Legendre fixed rules (mapped to arbitrary [a, b]) plus an
+//! adaptive Simpson fallback for integrands with a sharp feature (the
+//! error E spikes near u where mu_0(u) = mu).
+
+/// Nodes/weights of the 32-point Gauss-Legendre rule on [-1, 1]
+/// (positive half; the rule is symmetric).
+const GL32_X: [f64; 16] = [
+    0.048_307_665_687_738_32,
+    0.144_471_961_582_796_5,
+    0.239_287_362_252_137_1,
+    0.331_868_602_282_127_65,
+    0.421_351_276_130_635_3,
+    0.506_899_908_932_229_4,
+    0.587_715_757_240_762_3,
+    0.663_044_266_930_215_2,
+    0.732_182_118_740_289_7,
+    0.794_483_795_967_942_4,
+    0.849_367_613_732_569_97,
+    0.896_321_155_766_052_1,
+    0.934_906_075_937_739_7,
+    0.964_762_255_587_506_4,
+    0.985_611_511_545_268_3,
+    0.997_263_861_849_481_56,
+];
+const GL32_W: [f64; 16] = [
+    0.096_540_088_514_727_8,
+    0.095_638_720_079_274_86,
+    0.093_844_399_080_804_57,
+    0.091_173_878_695_763_88,
+    0.087_652_093_004_403_81,
+    0.083_311_924_226_946_75,
+    0.078_193_895_787_070_3,
+    0.072_345_794_108_848_51,
+    0.065_822_222_776_361_85,
+    0.058_684_093_478_535_55,
+    0.050_998_059_262_376_18,
+    0.042_835_898_022_226_68,
+    0.034_273_862_913_021_43,
+    0.025_392_065_309_262_06,
+    0.016_274_394_730_905_67,
+    0.007_018_610_009_470_1,
+];
+
+/// Integrate f over [a, b] with the 32-point Gauss-Legendre rule.
+pub fn gauss_legendre_32<F: FnMut(f64) -> f64>(a: f64, b: f64, mut f: F) -> f64 {
+    if a == b {
+        return 0.0;
+    }
+    let c = 0.5 * (a + b);
+    let h = 0.5 * (b - a);
+    let mut s = 0.0;
+    for i in 0..16 {
+        let dx = h * GL32_X[i];
+        s += GL32_W[i] * (f(c + dx) + f(c - dx));
+    }
+    s * h
+}
+
+/// Composite GL32 over `panels` equal sub-intervals (for kinky integrands).
+pub fn gauss_legendre_composite<F: FnMut(f64) -> f64>(
+    a: f64,
+    b: f64,
+    panels: usize,
+    mut f: F,
+) -> f64 {
+    assert!(panels >= 1);
+    let h = (b - a) / panels as f64;
+    (0..panels)
+        .map(|i| gauss_legendre_32(a + i as f64 * h, a + (i + 1) as f64 * h, &mut f))
+        .sum()
+}
+
+/// Adaptive Simpson with an absolute tolerance.
+pub fn adaptive_simpson<F: FnMut(f64) -> f64>(a: f64, b: f64, tol: f64, mut f: F) -> f64 {
+    fn simpson(fa: f64, fm: f64, fb: f64, a: f64, b: f64) -> f64 {
+        (b - a) / 6.0 * (fa + 4.0 * fm + fb)
+    }
+    fn recurse<F: FnMut(f64) -> f64>(
+        f: &mut F,
+        a: f64,
+        b: f64,
+        fa: f64,
+        fm: f64,
+        fb: f64,
+        whole: f64,
+        tol: f64,
+        depth: usize,
+    ) -> f64 {
+        let m = 0.5 * (a + b);
+        let lm = 0.5 * (a + m);
+        let rm = 0.5 * (m + b);
+        let flm = f(lm);
+        let frm = f(rm);
+        let left = simpson(fa, flm, fm, a, m);
+        let right = simpson(fm, frm, fb, m, b);
+        let delta = left + right - whole;
+        if depth == 0 || delta.abs() <= 15.0 * tol {
+            left + right + delta / 15.0
+        } else {
+            recurse(f, a, m, fa, flm, fm, left, 0.5 * tol, depth - 1)
+                + recurse(f, m, b, fm, frm, fb, right, 0.5 * tol, depth - 1)
+        }
+    }
+    let m = 0.5 * (a + b);
+    let fa = f(a);
+    let fm = f(m);
+    let fb = f(b);
+    let whole = simpson(fa, fm, fb, a, b);
+    recurse(&mut f, a, b, fa, fm, fb, whole, tol, 40)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gl32_polynomial_exact() {
+        // GL32 is exact for polynomials up to degree 63.
+        let got = gauss_legendre_32(0.0, 1.0, |x| x.powi(10));
+        assert!((got - 1.0 / 11.0).abs() < 1e-14);
+        let got = gauss_legendre_32(-2.0, 3.0, |x| 3.0 * x * x - x + 1.0);
+        let want = (3.0f64.powi(3) - (-2.0f64).powi(3)) - (9.0 - 4.0) / 2.0 + 5.0;
+        assert!((got - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gl32_transcendental() {
+        let got = gauss_legendre_32(0.0, std::f64::consts::PI, f64::sin);
+        assert!((got - 2.0).abs() < 1e-12);
+        let got = gauss_legendre_32(0.0, 1.0, |x| (-x).exp());
+        assert!((got - (1.0 - (-1.0f64).exp())).abs() < 1e-13);
+    }
+
+    #[test]
+    fn composite_handles_kinks() {
+        // |x - 0.3| has a kink; composite with enough panels converges.
+        let f = |x: f64| (x - 0.3).abs();
+        let want = 0.3f64.powi(2) / 2.0 + 0.7f64.powi(2) / 2.0;
+        let got = gauss_legendre_composite(0.0, 1.0, 64, f);
+        assert!((got - want).abs() < 1e-6, "got {got} want {want}");
+    }
+
+    #[test]
+    fn adaptive_simpson_matches_gl() {
+        let f = |x: f64| (5.0 * x).sin() * (-x * x).exp();
+        let a = adaptive_simpson(-1.0, 2.0, 1e-12, f);
+        let b = gauss_legendre_composite(-1.0, 2.0, 8, f);
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adaptive_simpson_sharp_peak() {
+        // Narrow Gaussian: integral over wide interval ~ sqrt(pi)*w
+        let w = 1e-3;
+        let f = |x: f64| (-(x / w) * (x / w)).exp();
+        let got = adaptive_simpson(-1.0, 1.0, 1e-12, f);
+        let want = std::f64::consts::PI.sqrt() * w;
+        assert!((got / want - 1.0).abs() < 1e-6, "got {got:e} want {want:e}");
+    }
+
+    #[test]
+    fn zero_width_interval() {
+        assert_eq!(gauss_legendre_32(0.5, 0.5, |x| x), 0.0);
+    }
+}

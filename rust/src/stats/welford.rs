@@ -1,0 +1,276 @@
+//! Moment accumulators for the sequential test.
+//!
+//! The Pallas/native backends hand back per-mini-batch sums
+//! `(sum l, sum l^2, count)`; the sequential test needs the running
+//! sample mean and the paper's standard-deviation estimate
+//!
+//! ```text
+//! s_l = sqrt((l2bar - lbar^2) * n / (n - 1))              (unbiased)
+//! s   = s_l / sqrt(n) * sqrt(1 - (n - 1)/(N - 1))         (Eqn. 4)
+//! ```
+//!
+//! `MomentAccumulator` tracks the raw sums (matching Alg. 1's lbar /
+//! l2bar updates exactly); `Welford` is the numerically-hardened
+//! alternative used where single-pass variance over long streams is
+//! needed (risk estimates, IAT).
+
+/// Raw-sum accumulator mirroring Alg. 1 state (lbar, l2bar, n).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MomentAccumulator {
+    sum: f64,
+    sum_sq: f64,
+    n: usize,
+}
+
+impl MomentAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold in one mini-batch worth of kernel outputs.
+    #[inline]
+    pub fn add_batch(&mut self, sum_l: f64, sum_l2: f64, count: usize) {
+        self.sum += sum_l;
+        self.sum_sq += sum_l2;
+        self.n += count;
+    }
+
+    /// Fold in a single datapoint.
+    #[inline]
+    pub fn add(&mut self, l: f64) {
+        self.add_batch(l, l * l, 1);
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Sample mean lbar.
+    #[inline]
+    pub fn mean(&self) -> f64 {
+        assert!(self.n > 0);
+        self.sum / self.n as f64
+    }
+
+    /// Unbiased sample standard deviation s_l.
+    pub fn sample_std(&self) -> f64 {
+        assert!(self.n > 1, "need n >= 2 for a std estimate");
+        let n = self.n as f64;
+        let mean = self.sum / n;
+        let var = (self.sum_sq / n - mean * mean) * n / (n - 1.0);
+        var.max(0.0).sqrt()
+    }
+
+    /// Std of the mean with the finite-population correction (Eqn. 4).
+    pub fn mean_std_fpc(&self, population: usize) -> f64 {
+        let n = self.n as f64;
+        let cap_n = population as f64;
+        debug_assert!(self.n <= population);
+        let fpc = (1.0 - (n - 1.0) / (cap_n - 1.0)).max(0.0);
+        self.sample_std() / n.sqrt() * fpc.sqrt()
+    }
+
+    /// Paper Eqn. 5 test statistic t = (lbar - mu0) / s.
+    pub fn t_statistic(&self, mu0: f64, population: usize) -> f64 {
+        let s = self.mean_std_fpc(population);
+        if s == 0.0 {
+            // All data consumed (or zero variance): decision is exact.
+            return if self.mean() > mu0 {
+                f64::INFINITY
+            } else {
+                f64::NEG_INFINITY
+            };
+        }
+        (self.mean() - mu0) / s
+    }
+}
+
+/// Welford/Chan single-pass mean+variance with merge.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.n += other.n;
+    }
+
+    #[inline]
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    #[inline]
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (divide by n).
+    pub fn var_pop(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample variance (divide by n-1).
+    pub fn var_sample(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_sample(&self) -> f64 {
+        self.var_sample().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+
+    #[test]
+    fn moments_match_two_pass() {
+        let mut rng = Pcg64::seeded(0);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.normal_scaled(3.0, 2.0)).collect();
+        let mut acc = MomentAccumulator::new();
+        for &x in &xs {
+            acc.add(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((acc.mean() - mean).abs() < 1e-12);
+        assert!((acc.sample_std() - var.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_and_pointwise_agree() {
+        let mut rng = Pcg64::seeded(1);
+        let xs: Vec<f64> = (0..500).map(|_| rng.uniform()).collect();
+        let mut a = MomentAccumulator::new();
+        let mut b = MomentAccumulator::new();
+        for &x in &xs {
+            a.add(x);
+        }
+        let (mut s, mut s2) = (0.0, 0.0);
+        for &x in &xs[..200] {
+            s += x;
+            s2 += x * x;
+        }
+        b.add_batch(s, s2, 200);
+        let (mut s, mut s2) = (0.0, 0.0);
+        for &x in &xs[200..] {
+            s += x;
+            s2 += x * x;
+        }
+        b.add_batch(s, s2, 300);
+        assert!((a.mean() - b.mean()).abs() < 1e-12);
+        assert!((a.sample_std() - b.sample_std()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fpc_zero_when_all_data_used() {
+        let mut acc = MomentAccumulator::new();
+        for i in 0..100 {
+            acc.add(i as f64);
+        }
+        let s = acc.mean_std_fpc(100);
+        assert!(s.abs() < 1e-9, "s={s}");
+        // t statistic becomes an exact +/- infinity decision
+        assert_eq!(acc.t_statistic(0.0, 100), f64::INFINITY);
+        assert_eq!(acc.t_statistic(1e9, 100), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn fpc_reduces_std() {
+        let mut acc = MomentAccumulator::new();
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..500 {
+            acc.add(rng.normal());
+        }
+        let plain = acc.sample_std() / (500f64).sqrt();
+        let fpc = acc.mean_std_fpc(10_000);
+        assert!(fpc < plain);
+        assert!(fpc > 0.9 * plain); // n << N: correction is mild
+    }
+
+    #[test]
+    fn welford_matches_moment_acc() {
+        let mut rng = Pcg64::seeded(3);
+        let mut w = Welford::new();
+        let mut m = MomentAccumulator::new();
+        for _ in 0..10_000 {
+            let x = rng.normal_scaled(-1.0, 0.1);
+            w.add(x);
+            m.add(x);
+        }
+        assert!((w.mean() - m.mean()).abs() < 1e-12);
+        assert!((w.std_sample() - m.sample_std()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let mut rng = Pcg64::seeded(4);
+        let xs: Vec<f64> = (0..3000).map(|_| rng.laplace(1.0)).collect();
+        let mut whole = Welford::new();
+        for &x in &xs {
+            whole.add(x);
+        }
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for &x in &xs[..1234] {
+            a.add(x);
+        }
+        for &x in &xs[1234..] {
+            b.add(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.n(), whole.n());
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.var_sample() - whole.var_sample()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn t_statistic_sign() {
+        let mut acc = MomentAccumulator::new();
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..50 {
+            acc.add(rng.normal_scaled(2.0, 1.0));
+        }
+        assert!(acc.t_statistic(0.0, 10_000) > 0.0);
+        assert!(acc.t_statistic(4.0, 10_000) < 0.0);
+    }
+}

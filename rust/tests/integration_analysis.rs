@@ -1,0 +1,122 @@
+//! Integration of the §5 analysis stack against real sequential tests:
+//! the DP error/usage predictions must match Monte-Carlo measurements on
+//! actual data populations, and the design machinery must order methods
+//! the way Fig. 6 reports.
+
+use austerity::coordinator::austerity::{seq_mh_test, SeqTestConfig};
+use austerity::coordinator::delta::{exact_accept_prob, SeqTestTable};
+use austerity::coordinator::dp::analyze_pocock;
+use austerity::coordinator::scheduler::MinibatchScheduler;
+use austerity::exp::population::{harvest_pairs, mnist_like_model, FixedLs};
+use austerity::stats::Pcg64;
+
+#[test]
+fn dp_predicts_real_test_error_and_usage() {
+    // The Gaussian-random-walk DP is an *approximation* (CLT across
+    // stages); verify it against real sequential tests on a real
+    // logistic l-population, as in Figs. 1 and 10.
+    let n = 12_214;
+    let m = 500;
+    let eps = 0.05;
+    let model = mnist_like_model(n, 42);
+    let pop = &harvest_pairs(&model, 0.01, 1, 5, 3)[0];
+    let sqrt_n1 = ((n - 1) as f64).sqrt();
+    let trials = 3_000;
+
+    for mu_std in [0.5f64, 1.5, 3.0] {
+        let mu0 = pop.mu - mu_std * pop.sigma_l / sqrt_n1;
+        let cfg = SeqTestConfig::new(eps, m);
+        let fixed = FixedLs(&pop.ls);
+        let mut sched = MinibatchScheduler::new(n);
+        let mut rng = Pcg64::new(50, mu_std.to_bits());
+        let mut buf = Vec::new();
+        let (mut wrong, mut used) = (0usize, 0u64);
+        for _ in 0..trials {
+            let o = seq_mh_test(&fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng, &mut buf);
+            wrong += (!o.accept) as usize; // truth: mu > mu0
+            used += o.n_used as u64;
+        }
+        let sim_err = wrong as f64 / trials as f64;
+        let sim_pi = used as f64 / (trials as f64 * n as f64);
+        let dp = analyze_pocock(mu_std, m, n, eps, 256);
+        let err_tol = 3.0 * (dp.error * (1.0 - dp.error) / trials as f64).sqrt() + 0.015;
+        assert!(
+            (sim_err - dp.error).abs() < err_tol,
+            "mu_std {mu_std}: sim {sim_err} dp {} (tol {err_tol})",
+            dp.error
+        );
+        assert!(
+            (sim_pi - dp.expected_pi).abs() < 0.08,
+            "mu_std {mu_std}: sim pi {sim_pi} dp {}",
+            dp.expected_pi
+        );
+    }
+}
+
+#[test]
+fn table_interpolation_matches_measured_acceptance() {
+    // P_{a,eps} = Pa + Delta from the table must match the measured
+    // acceptance frequency of the real sequential test (Fig. 12).
+    let n = 12_214;
+    let m = 500;
+    let eps = 0.05;
+    let model = mnist_like_model(n, 42);
+    let pops = harvest_pairs(&model, 0.01, 5, 3, 9);
+    let table = SeqTestTable::build(m, n, eps, 12.0, 21, 128);
+    let cfg = SeqTestConfig::new(eps, m);
+    let trials = 800;
+
+    for pop in &pops {
+        let stats = pop.stats();
+        let pa_pred = austerity::coordinator::delta::approx_accept_prob(n, &stats, &table, 24);
+        let fixed = FixedLs(&pop.ls);
+        let mut sched = MinibatchScheduler::new(n);
+        let mut rng = Pcg64::seeded(stats.mu.to_bits());
+        let mut buf = Vec::new();
+        let mut acc = 0usize;
+        for _ in 0..trials {
+            let u = rng.uniform_pos();
+            let mu0 = (u.ln() + pop.log_correction) / n as f64;
+            let o = seq_mh_test(&fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng, &mut buf);
+            acc += o.accept as usize;
+        }
+        let measured = acc as f64 / trials as f64;
+        assert!(
+            (pa_pred - measured).abs() < 0.08,
+            "predicted {pa_pred} measured {measured} (exact {})",
+            exact_accept_prob(n, &stats)
+        );
+    }
+}
+
+#[test]
+fn epsilon_sweep_monotone_in_data_usage_on_real_chain() {
+    // Across the approximate chain as a whole, larger eps must not use
+    // more data (the knob works end-to-end).
+    use austerity::coordinator::{run_chain, Budget, MhMode};
+    use austerity::samplers::GaussianRandomWalk;
+
+    let model = mnist_like_model(8_000, 1);
+    let init = model.map_estimate(50);
+    let kernel = GaussianRandomWalk::new(0.01, 10.0);
+    let mut fractions = Vec::new();
+    for eps in [0.01, 0.05, 0.2] {
+        let mut rng = Pcg64::seeded(2);
+        let (_, stats) = run_chain(
+            &model,
+            &kernel,
+            &MhMode::approx(eps, 400),
+            init.clone(),
+            Budget::Steps(300),
+            0,
+            1,
+            |_| 0.0,
+            &mut rng,
+        );
+        fractions.push(stats.mean_data_fraction(8_000));
+    }
+    assert!(
+        fractions[0] >= fractions[1] && fractions[1] >= fractions[2],
+        "{fractions:?}"
+    );
+}

@@ -1,0 +1,174 @@
+//! End-to-end chain integration: the approximate chain must sample the
+//! same posterior as the exact chain on every §6 model, while using less
+//! data — the paper's core claim, checked across the whole stack.
+
+use austerity::coordinator::{run_chain, Budget, MhMode};
+use austerity::data::synthetic::{ica_mixture, linreg_toy, sparse_logistic, two_class_gaussian};
+use austerity::models::ica::amari_distance;
+use austerity::models::rjlogistic::{RjLogisticModel, RjState};
+use austerity::models::{IcaModel, LinRegModel, LlDiffModel, LogisticModel};
+use austerity::samplers::{GaussianRandomWalk, RjKernel, ScalarRandomWalk, StiefelRandomWalk};
+use austerity::stats::welford::Welford;
+use austerity::stats::Pcg64;
+
+fn summarize(samples: &[austerity::coordinator::Sample]) -> Welford {
+    let mut w = Welford::new();
+    for s in samples {
+        w.add(s.value);
+    }
+    w
+}
+
+#[test]
+fn logistic_posterior_matches_across_modes() {
+    let model = LogisticModel::new(two_class_gaussian(6_000, 8, 1.2, 0), 10.0);
+    let init = model.map_estimate(60);
+    let kernel = GaussianRandomWalk::new(0.02, 10.0);
+    let steps = 8_000;
+
+    let mut stats_by_eps = Vec::new();
+    for eps in [0.0, 0.05] {
+        let mut rng = Pcg64::seeded(3);
+        let (samples, stats) = run_chain(
+            &model,
+            &kernel,
+            &MhMode::approx(eps, 500),
+            init.clone(),
+            Budget::Steps(steps),
+            1_000,
+            1,
+            |t| t[0],
+            &mut rng,
+        );
+        stats_by_eps.push((summarize(&samples), stats));
+    }
+    let (exact_w, exact_stats) = &stats_by_eps[0];
+    let (approx_w, approx_stats) = &stats_by_eps[1];
+
+    // posterior means agree within combined MC error
+    let tol = 4.0 * (exact_w.std_sample() + approx_w.std_sample())
+        / (exact_w.n() as f64).sqrt()
+        + 0.02;
+    assert!(
+        (exact_w.mean() - approx_w.mean()).abs() < tol,
+        "means {} vs {} (tol {tol})",
+        exact_w.mean(),
+        approx_w.mean()
+    );
+    // data austerity
+    assert!((exact_stats.mean_data_fraction(model.n()) - 1.0).abs() < 1e-12);
+    assert!(approx_stats.mean_data_fraction(model.n()) < 0.8);
+}
+
+#[test]
+fn ica_posterior_amari_matches_across_modes() {
+    let (obs, w0) = ica_mixture(20_000, 5);
+    let model = IcaModel::new(obs);
+    let kernel = StiefelRandomWalk::new(0.05);
+    let steps = 1_200;
+
+    let mut results = Vec::new();
+    for eps in [0.0, 0.05] {
+        let w0c = w0.clone();
+        let mut rng = Pcg64::seeded(4);
+        let (samples, stats) = run_chain(
+            &model,
+            &kernel,
+            &MhMode::approx(eps, 600),
+            w0.clone(),
+            Budget::Steps(steps),
+            200,
+            1,
+            move |w| amari_distance(w, &w0c),
+            &mut rng,
+        );
+        results.push((summarize(&samples), stats));
+    }
+    let exact = results[0].0.mean();
+    let approx = results[1].0.mean();
+    assert!(
+        (exact - approx).abs() < 0.05,
+        "E[amari] exact {exact} vs approx {approx}"
+    );
+    assert!(results[1].1.mean_data_fraction(model.n()) < 0.9);
+    // posterior concentrates near the true unmixing matrix
+    assert!(exact < 0.2, "exact E[amari] {exact}");
+}
+
+#[test]
+fn linreg_scalar_chain_matches_quadrature() {
+    // exact-MH random walk on the SGLD toy posterior vs quadrature truth
+    let model = LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0);
+    let (grid, dens) = model.posterior_density(-0.2, 0.8, 4_000);
+    let h = grid[1] - grid[0];
+    let t_mean: f64 = grid.iter().zip(&dens).map(|(t, d)| t * d * h).sum();
+
+    let kernel = ScalarRandomWalk { sigma: 0.004, log_prior: |t: f64| -4950.0 * t.abs() };
+    let mut rng = Pcg64::seeded(6);
+    let (samples, stats) = run_chain(
+        &model,
+        &kernel,
+        &MhMode::approx(0.05, 500),
+        t_mean,
+        Budget::Steps(20_000),
+        2_000,
+        1,
+        |&t| t,
+        &mut rng,
+    );
+    let w = summarize(&samples);
+    assert!(
+        (w.mean() - t_mean).abs() < 0.01,
+        "chain mean {} vs quadrature {}",
+        w.mean(),
+        t_mean
+    );
+    assert!(stats.acceptance_rate() > 0.2);
+    assert!(stats.mean_data_fraction(model.n()) < 1.0);
+}
+
+#[test]
+fn rjmcmc_approx_recovers_same_support_as_exact() {
+    let (ds, beta_true) = sparse_logistic(15_000, 13, 3, 0.3, 2);
+    let model = RjLogisticModel::new(ds, 1e-10);
+    let truly_active: Vec<usize> = (1..13).filter(|&j| beta_true[j] != 0.0).collect();
+    let steps = 10_000;
+
+    let mut per_mode = Vec::new();
+    for eps in [0.0, 0.05] {
+        let kernel = RjKernel::new(&model);
+        let mut rng = Pcg64::seeded(8);
+        let mut incl = vec![0u64; 13];
+        let mut count = 0u64;
+        let (_, stats) = run_chain(
+            &model,
+            &kernel,
+            &MhMode::approx(eps, 500),
+            RjState::with_active(13, &[0], &[-0.7]),
+            Budget::Steps(steps),
+            2_000,
+            1,
+            |s| {
+                for &j in &s.active {
+                    incl[j] += 1;
+                }
+                count += 1;
+                0.0
+            },
+            &mut rng,
+        );
+        let probs: Vec<f64> = incl.iter().map(|&c| c as f64 / count as f64).collect();
+        per_mode.push((probs, stats.mean_data_fraction(model.n())));
+    }
+    for (label, (probs, _)) in ["exact", "approx"].iter().zip(&per_mode) {
+        let on: f64 = truly_active.iter().map(|&j| probs[j]).sum::<f64>()
+            / truly_active.len() as f64;
+        let off: f64 = (1..13)
+            .filter(|j| !truly_active.contains(j))
+            .map(|j| probs[j])
+            .sum::<f64>()
+            / (12 - truly_active.len()) as f64;
+        assert!(on > off + 0.3, "{label}: active {on} vs inactive {off}");
+    }
+    assert!(per_mode[1].1 < 0.7, "approx data fraction {}", per_mode[1].1);
+}

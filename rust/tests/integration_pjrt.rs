@@ -1,0 +1,163 @@
+//! Cross-layer integration: the PJRT-executed Pallas artifacts must agree
+//! with the native Rust model, and the whole approximate-MH stack must
+//! run end-to-end on the PJRT backend.
+//!
+//! Requires `make artifacts` (tests skip with a note if absent).
+
+use austerity::coordinator::{mh_step, MhMode, MhScratch};
+use austerity::data::synthetic::two_class_gaussian;
+use austerity::models::traits::{LlDiffModel, Proposal};
+use austerity::models::LogisticModel;
+use austerity::runtime::{PjrtLogistic, PjrtPredictor, PjrtRuntime};
+use austerity::samplers::GaussianRandomWalk;
+use austerity::models::traits::ProposalKernel;
+use austerity::stats::Pcg64;
+
+fn artifacts_ready() -> bool {
+    PjrtRuntime::default_dir().join("manifest.txt").exists()
+}
+
+fn model() -> LogisticModel {
+    LogisticModel::new(two_class_gaussian(12_214, 50, 1.2, 7), 10.0)
+}
+
+#[test]
+fn pjrt_moments_match_native() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let native = model();
+    let rt = PjrtRuntime::new(&PjrtRuntime::default_dir()).unwrap();
+    let pjrt = PjrtLogistic::new(&native, rt).unwrap();
+    let mut rng = Pcg64::seeded(0);
+
+    for trial in 0..10 {
+        let theta: Vec<f64> = (0..50).map(|_| 0.1 * rng.normal()).collect();
+        let theta_p: Vec<f64> =
+            theta.iter().map(|t| t + 0.01 * rng.normal()).collect();
+        let k = rng.below(1500) + 1;
+        let idx: Vec<usize> = (0..k).map(|_| rng.below(12_214)).collect();
+
+        let (ns, ns2) = native.lldiff_moments(&idx, &theta, &theta_p);
+        let (ps, ps2) = pjrt.lldiff_moments(&idx, &theta, &theta_p);
+        // f32 kernel vs f64 native: tolerances scale with batch size
+        let tol = 1e-4 * (k as f64).sqrt().max(1.0);
+        assert!((ns - ps).abs() < tol, "trial {trial}: sum {ns} vs {ps}");
+        assert!((ns2 - ps2).abs() < tol, "trial {trial}: sumsq {ns2} vs {ps2}");
+    }
+}
+
+#[test]
+fn pjrt_predictor_matches_native_sigmoid() {
+    if !artifacts_ready() {
+        return;
+    }
+    let native = model();
+    let rt = PjrtRuntime::new(&PjrtRuntime::default_dir()).unwrap();
+    let pred = PjrtPredictor::new(rt).unwrap();
+    let mut rng = Pcg64::seeded(1);
+    let theta: Vec<f64> = (0..50).map(|_| 0.2 * rng.normal()).collect();
+    let rows: Vec<&[f64]> = (0..3000).map(|i| native.data().row(i)).collect();
+    let got = pred.predict(&rows, &theta).unwrap();
+    assert_eq!(got.len(), 3000);
+    for (i, row) in rows.iter().enumerate() {
+        let want = native.predict(row, &theta);
+        assert!((got[i] - want).abs() < 1e-5, "row {i}: {} vs {want}", got[i]);
+    }
+}
+
+#[test]
+fn approximate_chain_runs_on_pjrt_backend() {
+    if !artifacts_ready() {
+        return;
+    }
+    // A short approximate-MH chain where every accept/reject decision is
+    // served by the AOT-compiled Pallas kernel through PJRT — the full
+    // three-layer architecture on the hot path.
+    let native = model();
+    let rt = PjrtRuntime::new(&PjrtRuntime::default_dir()).unwrap();
+    let pjrt = PjrtLogistic::new(&native, rt).unwrap();
+
+    let kernel = GaussianRandomWalk::new(0.01, 10.0);
+    let mode = MhMode::approx(0.05, 500);
+    let mut scratch = MhScratch::new(pjrt.n());
+    let mut rng = Pcg64::seeded(2);
+    let mut cur = native.map_estimate(40);
+
+    let mut accepted = 0usize;
+    let mut data_used = 0u64;
+    let steps = 30;
+    for _ in 0..steps {
+        let prop = kernel.propose(&cur, &mut rng);
+        let info = mh_step(&pjrt, &mut cur, prop, &mode, &mut scratch, &mut rng);
+        accepted += info.accepted as usize;
+        data_used += info.n_used as u64;
+    }
+    // the headline behaviour: decisions from a fraction of the data
+    let frac = data_used as f64 / (steps as f64 * pjrt.n() as f64);
+    assert!(frac < 1.0, "mean data fraction {frac}");
+    assert!(accepted > 0, "chain frozen");
+}
+
+#[test]
+fn pjrt_and_native_decisions_agree_with_shared_randomness() {
+    if !artifacts_ready() {
+        return;
+    }
+    // With identical RNG streams, the f32 kernel and the f64 native
+    // model should almost always make the same accept/reject decision.
+    let native = model();
+    let rt = PjrtRuntime::new(&PjrtRuntime::default_dir()).unwrap();
+    let pjrt = PjrtLogistic::new(&native, rt).unwrap();
+    let map = native.map_estimate(40);
+    let kernel = GaussianRandomWalk::new(0.01, 10.0);
+    let mode = MhMode::approx(0.05, 500);
+
+    let mut agree = 0usize;
+    let trials = 25usize;
+    for t in 0..trials {
+        let seed = 100 + t as u64;
+        let mut rng_a = Pcg64::new(seed, 5);
+        let mut rng_b = Pcg64::new(seed, 5);
+        let mut cur_a = map.clone();
+        let mut cur_b = map.clone();
+        let prop = kernel.propose(&cur_a, &mut rng_a);
+        let _ = kernel.propose(&cur_b, &mut rng_b); // keep streams aligned
+        let prop_b = Proposal { param: prop.param.clone(), log_correction: prop.log_correction };
+        let mut scratch_a = MhScratch::new(native.n());
+        let mut scratch_b = MhScratch::new(native.n());
+        let a = mh_step(&native, &mut cur_a, prop, &mode, &mut scratch_a, &mut rng_a);
+        let b = mh_step(&pjrt, &mut cur_b, prop_b, &mode, &mut scratch_b, &mut rng_b);
+        agree += (a.accepted == b.accepted) as usize;
+    }
+    assert!(agree >= trials - 2, "agreement {agree}/{trials}");
+}
+
+#[test]
+fn pjrt_ica_moments_match_native() {
+    if !artifacts_ready() {
+        return;
+    }
+    use austerity::data::linalg::{random_orthonormal, random_skew};
+    use austerity::data::synthetic::ica_mixture;
+    use austerity::models::IcaModel;
+    use austerity::runtime::PjrtIca;
+
+    let (obs, _) = ica_mixture(5_000, 3);
+    let native = IcaModel::new(obs);
+    let rt = PjrtRuntime::new(&PjrtRuntime::default_dir()).unwrap();
+    let pjrt = PjrtIca::new(&native, rt).unwrap();
+    let mut rng = Pcg64::seeded(4);
+    for trial in 0..6 {
+        let w = random_orthonormal(4, &mut rng);
+        let wp = w.matmul(&random_skew(4, 0.05, &mut rng).expm());
+        let k = rng.below(1_200) + 1;
+        let idx: Vec<usize> = (0..k).map(|_| rng.below(5_000)).collect();
+        let (ns, ns2) = native.lldiff_moments(&idx, &w, &wp);
+        let (ps, ps2) = pjrt.lldiff_moments(&idx, &w, &wp);
+        let tol = 2e-4 * (k as f64).sqrt().max(1.0);
+        assert!((ns - ps).abs() < tol, "trial {trial}: {ns} vs {ps}");
+        assert!((ns2 - ps2).abs() < tol, "trial {trial}: {ns2} vs {ps2}");
+    }
+}
