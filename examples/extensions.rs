@@ -6,7 +6,7 @@
 //! Run: cargo run --release --example extensions
 
 use austerity::coordinator::adaptive::{run_adaptive_chain, EpsSchedule};
-use austerity::coordinator::{run_chain, Budget, MhMode};
+use austerity::coordinator::{run_engine_cached, Budget, EngineConfig, MhMode};
 use austerity::models::{LlDiffModel, PottsModel};
 use austerity::samplers::gibbs_potts::{potts_sweep, PottsMode, PottsScratch, PottsStats};
 use austerity::samplers::pseudo_marginal::{run_pseudo_marginal, PoissonEstimator};
@@ -42,11 +42,15 @@ fn main() {
     let est = PoissonEstimator { batch: 100, lambda: 3.0, center: 0.0 };
     let mut rng = Pcg64::seeded(2);
     let pm = run_pseudo_marginal(&model, &kernel, &est, init.clone(), 400, &mut rng, |_| {});
-    let mut rng = Pcg64::seeded(2);
-    let (_, seq) = run_chain(
-        &model, &kernel, &MhMode::approx(0.05, 500), init,
-        Budget::Steps(400), 0, 1, |_| 0.0, &mut rng,
+    let seq_res = run_engine_cached(
+        &model,
+        &kernel,
+        &MhMode::approx(0.05, 500),
+        init,
+        &EngineConfig::new(1, 2, Budget::Steps(400)),
+        |_c| |_: &Vec<f64>| 0.0,
     );
+    let seq = seq_res.merged;
     println!(
         "   pseudo-marginal: accept {:.2}, longest stuck run {} steps, {:.0}% estimates clamped",
         pm.accepted as f64 / pm.steps as f64,

@@ -1,16 +1,17 @@
 //! Paper §6.2: posterior sampling of an ICA unmixing matrix on the
 //! Stiefel manifold, exact vs approximate MH, measured by the Amari
-//! distance to the true unmixing matrix.
+//! distance to the true unmixing matrix. Chains run in parallel on the
+//! multi-chain engine.
 //!
 //! Run: cargo run --release --example ica [-- N]
 
-use austerity::coordinator::{run_chain, Budget, MhMode};
+use austerity::coordinator::{run_engine, Budget, EngineConfig, MhMode};
 use austerity::data::synthetic::ica_mixture;
+use austerity::data::Mat;
 use austerity::models::ica::amari_distance;
 use austerity::models::{IcaModel, LlDiffModel};
 use austerity::samplers::StiefelRandomWalk;
 use austerity::stats::welford::Welford;
-use austerity::stats::Pcg64;
 
 fn main() {
     let n: usize = std::env::args()
@@ -22,36 +23,33 @@ fn main() {
     let model = IcaModel::new(obs);
     let kernel = StiefelRandomWalk::new(0.03);
 
-    let steps = 600;
-    println!("\neps    E[amari]  +-      accept  data/test  steps/s");
+    let chains = 2;
+    let steps_per_chain = 300;
+    println!("\neps    E[amari]  +-      accept  data/test  steps/s  R-hat");
     for eps in [0.0, 0.01, 0.05, 0.1] {
         let mode = MhMode::approx(eps, 600);
-        let mut rng = Pcg64::seeded(4);
         let t0 = std::time::Instant::now();
-        let w0c = w0.clone();
-        let (samples, stats) = run_chain(
-            &model,
-            &kernel,
-            &mode,
-            w0.clone(),
-            Budget::Steps(steps),
-            steps / 5,
-            1,
-            move |w| amari_distance(w, &w0c),
-            &mut rng,
-        );
+        let cfg = EngineConfig::new(chains, 4, Budget::Steps(steps_per_chain))
+            .burn_in(steps_per_chain / 5);
+        let res = run_engine(&model, &kernel, &mode, w0.clone(), &cfg, |_c| {
+            let w0c = w0.clone();
+            move |w: &Mat| amari_distance(w, &w0c)
+        });
         let secs = t0.elapsed().as_secs_f64();
         let mut w = Welford::new();
-        for s in &samples {
-            w.add(s.value);
+        for run in &res.runs {
+            for s in &run.samples {
+                w.add(s.value);
+            }
         }
         println!(
-            "{eps:<5}  {:.4}   {:.4}  {:.2}    {:.3}      {:.1}",
+            "{eps:<5}  {:.4}   {:.4}  {:.2}    {:.3}      {:.1}    {:.3}",
             w.mean(),
             w.std_sample(),
-            stats.acceptance_rate(),
-            stats.mean_data_fraction(model.n()),
-            steps as f64 / secs
+            res.merged.acceptance_rate(),
+            res.merged.mean_data_fraction(model.n()),
+            res.merged.steps as f64 / secs,
+            res.convergence.rhat,
         );
     }
     println!(

@@ -1,46 +1,61 @@
 //! Paper §6.1: random-walk MH on a logistic-regression posterior with an
 //! epsilon sweep — the risk/variance trade-off of Fig. 2 in miniature,
-//! including the three-layer PJRT backend if artifacts are built.
+//! run on the parallel multi-chain engine, including the three-layer
+//! PJRT backend if artifacts are built.
 //!
 //! Run: make artifacts && cargo run --release --example logistic_regression
 
-use austerity::coordinator::{mh_step, MhMode, MhScratch};
+use austerity::coordinator::{run_engine, Budget, ChainObserver, EngineConfig, MhMode};
 use austerity::metrics::PredictiveMean;
-use austerity::models::traits::ProposalKernel;
 use austerity::models::{LlDiffModel, LogisticModel};
 use austerity::runtime::{PjrtLogistic, PjrtRuntime};
 use austerity::samplers::GaussianRandomWalk;
-use austerity::stats::Pcg64;
 
-fn run_eps<M: LlDiffModel<Param = Vec<f64>>>(
+/// Per-chain predictive-mean accumulator over a held-out panel.
+struct PmObs<'a> {
+    test: &'a LogisticModel,
+    pm: PredictiveMean,
+}
+
+impl<'a> ChainObserver<Vec<f64>> for PmObs<'a> {
+    fn observe(&mut self, theta: &Vec<f64>) -> f64 {
+        let probs: Vec<f64> = (0..self.test.n())
+            .map(|i| self.test.predict(self.test.data().row(i), theta))
+            .collect();
+        self.pm.add(&probs);
+        0.0
+    }
+}
+
+fn run_eps<M>(
     model: &M,
     test: &LogisticModel,
     init: &[f64],
     eps: f64,
     steps: usize,
-) -> (Vec<f64>, f64, f64) {
+) -> (Vec<f64>, f64, f64)
+where
+    M: LlDiffModel<Param = Vec<f64>> + Sync,
+{
     let kernel = GaussianRandomWalk::new(0.01, 10.0);
     let mode = MhMode::approx(eps, 500);
-    let mut scratch = MhScratch::new(model.n());
-    let mut rng = Pcg64::seeded(7);
-    let mut cur = init.to_vec();
-    let mut pm = PredictiveMean::new(test.n());
-    let mut used = 0u64;
+    let chains = 2usize;
+    let per_chain = (steps / chains).max(1);
+    let cfg = EngineConfig::new(chains, 7, Budget::Steps(per_chain)).burn_in(per_chain / 5);
     let t0 = std::time::Instant::now();
-    for step in 0..steps {
-        let prop = kernel.propose(&cur, &mut rng);
-        let info = mh_step(model, &mut cur, prop, &mode, &mut scratch, &mut rng);
-        used += info.n_used as u64;
-        if step >= steps / 5 {
-            let probs: Vec<f64> =
-                (0..test.n()).map(|i| test.predict(test.data().row(i), &cur)).collect();
-            pm.add(&probs);
-        }
+    let res = run_engine(model, &kernel, &mode, init.to_vec(), &cfg, |_c| PmObs {
+        test,
+        pm: PredictiveMean::new(test.n()),
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let mut pm = PredictiveMean::new(test.n());
+    for o in &res.observers {
+        pm.merge(&o.pm);
     }
     (
         pm.mean(),
-        used as f64 / (steps as f64 * model.n() as f64),
-        steps as f64 / t0.elapsed().as_secs_f64(),
+        res.merged.data_used as f64 / (res.merged.steps as f64 * model.n() as f64),
+        res.merged.steps as f64 / secs,
     )
 }
 
@@ -50,7 +65,7 @@ fn main() {
     let init = model.map_estimate(80);
     let steps = 1_500;
 
-    // ground truth: exact chain, 4x the steps
+    // ground truth: exact chains, 4x the steps
     let (truth, _, _) = run_eps(&model, &test, &init, 0.0, steps * 4);
 
     println!("eps    risk(pred-mean)   data/test   steps/s");
@@ -66,7 +81,7 @@ fn main() {
     }
 
     // same chain served by the AOT Pallas kernel through PJRT
-    if PjrtRuntime::default_dir().join("manifest.txt").exists() {
+    if PjrtRuntime::available() && PjrtRuntime::default_dir().join("manifest.txt").exists() {
         let rt = PjrtRuntime::new(&PjrtRuntime::default_dir()).expect("runtime");
         let pjrt = PjrtLogistic::new(&model, rt).expect("backend");
         let (_, frac, sps) = run_eps(&pjrt, &test, &init, 0.05, 100);

@@ -1,15 +1,33 @@
 //! Paper §6.3: Bayesian variable selection by reversible-jump MCMC on a
-//! MiniBooNE-like synthetic dataset — exact vs approximate MH tests,
-//! reporting the recovered support and model size.
+//! MiniBooNE-like synthetic dataset — exact vs approximate MH tests on
+//! the parallel multi-chain engine, reporting the recovered support and
+//! model size merged across chains.
 //!
 //! Run: cargo run --release --example rjmcmc_variable_selection
 
-use austerity::coordinator::{run_chain, Budget, MhMode};
+use austerity::coordinator::{run_engine, Budget, ChainObserver, EngineConfig, MhMode};
 use austerity::data::synthetic::sparse_logistic;
 use austerity::models::rjlogistic::{RjLogisticModel, RjState};
 use austerity::models::LlDiffModel;
 use austerity::samplers::RjKernel;
-use austerity::stats::Pcg64;
+
+/// Per-chain accumulator of inclusion counts and model size.
+struct SupportObserver {
+    incl: Vec<u64>,
+    ks: u64,
+    count: u64,
+}
+
+impl ChainObserver<RjState> for SupportObserver {
+    fn observe(&mut self, s: &RjState) -> f64 {
+        for &j in &s.active {
+            self.incl[j] += 1;
+        }
+        self.ks += s.k() as u64;
+        self.count += 1;
+        0.0
+    }
+}
 
 fn main() {
     let n = 40_000;
@@ -19,39 +37,38 @@ fn main() {
     println!("N = {n}, D = {d}, true support {truly_active:?}");
 
     let model = RjLogisticModel::new(ds, 1e-10);
-    let steps = 20_000;
+    let chains = 2;
+    let steps_per_chain = 10_000;
 
     for (label, mode) in [
         ("exact ", MhMode::Exact),
         ("approx", MhMode::approx(0.05, 500)),
     ] {
         let kernel = RjKernel::new(&model);
-        let mut rng = Pcg64::seeded(9);
-        let mut incl = vec![0u64; d];
-        let mut ks = 0u64;
-        let mut count = 0u64;
         let t0 = std::time::Instant::now();
-        let (_, stats) = run_chain(
+        let cfg = EngineConfig::new(chains, 9, Budget::Steps(steps_per_chain))
+            .burn_in(steps_per_chain / 5);
+        let res = run_engine(
             &model,
             &kernel,
             &mode,
             RjState::with_active(d, &[0], &[-0.9]),
-            Budget::Steps(steps),
-            steps / 5,
-            1,
-            |s| {
-                for &j in &s.active {
-                    incl[j] += 1;
-                }
-                ks += s.k() as u64;
-                count += 1;
-                0.0
-            },
-            &mut rng,
+            &cfg,
+            |_c| SupportObserver { incl: vec![0; d], ks: 0, count: 0 },
         );
         let secs = t0.elapsed().as_secs_f64();
+        let mut incl = vec![0u64; d];
+        let mut ks = 0u64;
+        let mut count = 0u64;
+        for o in &res.observers {
+            for (t, v) in incl.iter_mut().zip(&o.incl) {
+                *t += v;
+            }
+            ks += o.ks;
+            count += o.count;
+        }
         let mut top: Vec<(usize, f64)> = (1..d)
-            .map(|j| (j, incl[j] as f64 / count as f64))
+            .map(|j| (j, incl[j] as f64 / count.max(1) as f64))
             .collect();
         top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         let picked: Vec<usize> = top.iter().take(5).map(|(j, _)| *j).collect();
@@ -59,10 +76,10 @@ fn main() {
         println!(
             "{label}: top-5 features {picked:?} ({hit}/5 correct) | mean k {:.1} | \
              accept {:.2} | data/test {:.3} | {:.0} steps/s",
-            ks as f64 / count as f64,
-            stats.acceptance_rate(),
-            stats.mean_data_fraction(model.n()),
-            steps as f64 / secs
+            ks as f64 / count.max(1) as f64,
+            res.merged.acceptance_rate(),
+            res.merged.mean_data_fraction(model.n()),
+            res.merged.steps as f64 / secs
         );
     }
 }

@@ -3,50 +3,93 @@
 //! median-of-runs harness (criterion is not in the offline crate set).
 //!
 //! Layers:
-//!   L3 native moments   — fused lldiff moment pass (the default backend)
+//!   L3 moments kernels  — naive per-index loop vs fused dual-dot pass
+//!                         vs the cached-activation fast path
 //!   L3 sequential test  — one full approximate MH decision
-//!   L3 t-CDF / scheduler / DP — supporting substrate
+//!   L3 mh_step          — end-to-end step, uncached vs cached
+//!   L3 engine           — K-chain throughput scaling on the worker pool
+//!   L3 substrate        — t-CDF, scheduler, DP
 //!   L1/L2 via PJRT      — the AOT Pallas kernel executed through PJRT
+//!
+//! Besides the human-readable table, every measurement lands in
+//! `BENCH_hotpath.json` (name -> median ns unless the key says
+//! otherwise), so the perf trajectory is tracked PR over PR.
 
 use std::time::Instant;
 
 use austerity::coordinator::austerity::{seq_mh_test, SeqTestConfig};
 use austerity::coordinator::dp::analyze_pocock;
+use austerity::coordinator::engine::{run_engine_cached, EngineConfig};
 use austerity::coordinator::scheduler::MinibatchScheduler;
-use austerity::models::traits::LlDiffModel;
+use austerity::coordinator::{mh_step, mh_step_cached, Budget, MhMode, MhScratch};
+use austerity::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
 use austerity::runtime::{PjrtLogistic, PjrtRuntime};
 use austerity::stats::student_t::t_sf;
 use austerity::stats::Pcg64;
 
-/// Median wall time of `iters` calls, repeated 7 times.
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
-    // warmup
-    for _ in 0..iters.div_ceil(4).max(1) {
-        f();
+/// Timing harness: records every measurement for the JSON report.
+struct Recorder {
+    rows: Vec<(String, f64)>,
+}
+
+impl Recorder {
+    fn new() -> Self {
+        Recorder { rows: Vec::new() }
     }
-    let mut times: Vec<f64> = (0..7)
-        .map(|_| {
-            let t0 = Instant::now();
-            for _ in 0..iters {
-                f();
+
+    /// Median wall time of `iters` calls, repeated 7 times; recorded in
+    /// nanoseconds under `name`.
+    fn bench<F: FnMut()>(&mut self, name: &str, iters: usize, mut f: F) -> f64 {
+        for _ in 0..iters.div_ceil(4).max(1) {
+            f();
+        }
+        let mut times: Vec<f64> = (0..7)
+            .map(|_| {
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    f();
+                }
+                t0.elapsed().as_secs_f64() / iters as f64
+            })
+            .collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = times[3];
+        let (val, unit) = if med < 1e-6 {
+            (med * 1e9, "ns")
+        } else if med < 1e-3 {
+            (med * 1e6, "us")
+        } else {
+            (med * 1e3, "ms")
+        };
+        println!("{name:<44} {val:>9.2} {unit}/iter");
+        self.rows.push((name.to_string(), med * 1e9));
+        med
+    }
+
+    /// Record a derived, non-timing value (ratios, throughputs).
+    fn record(&mut self, name: &str, value: f64) {
+        self.rows.push((name.to_string(), value));
+    }
+
+    /// Minimal JSON object: {"name": value, ...}; no escaping needed as
+    /// long as names stay [a-z0-9_].
+    fn write_json(&self, path: &str) {
+        let mut s = String::from("{\n");
+        for (i, (k, v)) in self.rows.iter().enumerate() {
+            s.push_str(&format!("  \"{k}\": {v:.3}"));
+            if i + 1 < self.rows.len() {
+                s.push(',');
             }
-            t0.elapsed().as_secs_f64() / iters as f64
-        })
-        .collect();
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let med = times[3];
-    let (val, unit) = if med < 1e-6 {
-        (med * 1e9, "ns")
-    } else if med < 1e-3 {
-        (med * 1e6, "us")
-    } else {
-        (med * 1e3, "ms")
-    };
-    println!("{name:<44} {val:>9.2} {unit}/iter");
-    med
+            s.push('\n');
+        }
+        s.push_str("}\n");
+        std::fs::write(path, &s).expect("write bench json");
+        println!("\nmachine-readable results -> {path}");
+    }
 }
 
 fn main() {
+    let mut rec = Recorder::new();
     let n = 12_214usize;
     let model = austerity::exp::population::mnist_like_model(n, 42);
     let mut rng = Pcg64::seeded(0);
@@ -54,82 +97,144 @@ fn main() {
     let theta_p: Vec<f64> = theta.iter().map(|t| t + 0.01 * rng.normal()).collect();
     let idx: Vec<usize> = (0..500).map(|_| rng.below(n)).collect();
 
-    println!("\n-- L3 native hot path (N = {n}, D = 50, m = 500) --");
-    let t_mom = bench("lldiff_moments (500 x 50 fused)", 200, || {
+    println!("\n-- L3 moments kernels (N = {n}, D = 50, m = 500) --");
+    let t_naive = rec.bench("lldiff_moments_naive", 200, || {
+        // the pre-fusion baseline: one `lldiff` call per index, two
+        // unblocked dot products per row
+        let (mut s, mut s2) = (0.0, 0.0);
+        for &i in &idx {
+            let l = model.lldiff(i, &theta, &theta_p);
+            s += l;
+            s2 += l * l;
+        }
+        std::hint::black_box((s, s2));
+    });
+    let t_fused = rec.bench("lldiff_moments_fused", 200, || {
         std::hint::black_box(model.lldiff_moments(&idx, &theta, &theta_p));
+    });
+    let mut cache = model.init_cache(&theta);
+    model.begin_step(&mut cache);
+    let t_cached = rec.bench("lldiff_moments_cached", 200, || {
+        std::hint::black_box(model.cached_moments(&mut cache, &idx, &theta_p));
     });
     println!(
         "{:<44} {:>9.2} Melem/s",
-        "  -> throughput",
-        500.0 * 50.0 / t_mom / 1e6
+        "  -> fused throughput",
+        500.0 * 50.0 / t_fused / 1e6
+    );
+    let fused_speedup = t_naive / t_fused;
+    let cached_speedup = t_naive / t_cached;
+    rec.record("speedup_fused_vs_naive_x", fused_speedup);
+    rec.record("speedup_cached_vs_naive_x", cached_speedup);
+    println!(
+        "  -> speedup vs naive: fused {fused_speedup:.2}x, cached {cached_speedup:.2}x ({})",
+        if cached_speedup >= 1.5 { "PASS >= 1.5x" } else { "FAIL < 1.5x" }
     );
 
+    println!("\n-- L3 sequential test + steps --");
     let cfg = SeqTestConfig::new(0.05, 500);
     let mut sched = MinibatchScheduler::new(n);
     let mut buf = Vec::new();
-    bench("seq_mh_test (full decision, eps=0.05)", 100, || {
+    rec.bench("seq_mh_test", 100, || {
         let mu0 = (rng.uniform_pos().ln()) / n as f64;
         std::hint::black_box(seq_mh_test(
             &model, &theta, &theta_p, mu0, &cfg, &mut sched, &mut rng, &mut buf,
         ));
     });
 
+    let mode = MhMode::approx(0.05, 500);
+    let exact = MhMode::Exact;
+    let kernel = austerity::samplers::GaussianRandomWalk::new(0.01, 10.0);
+    {
+        let mut scratch = MhScratch::new(n);
+        let mut cur = theta.clone();
+        rec.bench("mh_step_approx", 200, || {
+            let prop = kernel.propose(&cur, &mut rng);
+            std::hint::black_box(mh_step(&model, &mut cur, prop, &mode, &mut scratch, &mut rng));
+        });
+        rec.bench("mh_step_exact", 20, || {
+            let prop = kernel.propose(&cur, &mut rng);
+            std::hint::black_box(mh_step(&model, &mut cur, prop, &exact, &mut scratch, &mut rng));
+        });
+    }
+    {
+        let mut scratch = MhScratch::new(n);
+        let mut cur = theta.clone();
+        let mut cache = model.init_cache(&cur);
+        rec.bench("mh_step_approx_cached", 200, || {
+            let prop = kernel.propose(&cur, &mut rng);
+            std::hint::black_box(mh_step_cached(
+                &model, &mut cur, &mut cache, prop, &mode, &mut scratch, &mut rng,
+            ));
+        });
+        rec.bench("mh_step_exact_cached", 20, || {
+            let prop = kernel.propose(&cur, &mut rng);
+            std::hint::black_box(mh_step_cached(
+                &model, &mut cur, &mut cache, prop, &exact, &mut scratch, &mut rng,
+            ));
+        });
+    }
+
+    println!("\n-- L3 engine scaling (chains x 400 approx steps) --");
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    rec.record("cores", cores as f64);
+    let mut sps_k1 = 0.0f64;
+    for k in [1usize, 2, 4] {
+        let ecfg = EngineConfig::new(k, 99, Budget::Steps(400));
+        // warmup run keeps page faults and turbo ramp out of the timing
+        let _ = run_engine_cached(&model, &kernel, &mode, theta.clone(), &ecfg, |_c| {
+            |t: &Vec<f64>| t[0]
+        });
+        let t0 = Instant::now();
+        let res = run_engine_cached(&model, &kernel, &mode, theta.clone(), &ecfg, |_c| {
+            |t: &Vec<f64>| t[0]
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let sps = res.merged.steps as f64 / wall;
+        if k == 1 {
+            sps_k1 = sps;
+        }
+        let scaling = sps / sps_k1;
+        let ideal = k.min(cores) as f64;
+        rec.record(&format!("engine_steps_per_sec_k{k}"), sps);
+        rec.record(&format!("engine_scaling_k{k}_x"), scaling);
+        println!(
+            "engine k={k}: {sps:>9.1} steps/s, {scaling:.2}x vs k=1 ({})",
+            if scaling >= 0.7 * ideal {
+                "PASS >= 0.7x ideal"
+            } else {
+                "below 0.7x ideal"
+            }
+        );
+    }
+
     println!("\n-- L3 substrate --");
-    bench("student-t sf (nu = 499)", 10_000, || {
+    rec.bench("t_sf_nu499", 10_000, || {
         std::hint::black_box(t_sf(1.7, 499.0));
     });
-    bench("scheduler next_batch(500)", 2_000, || {
+    rec.bench("scheduler_next_batch_500", 2_000, || {
         sched.reset();
         std::hint::black_box(sched.next_batch(500, &mut rng));
     });
-    bench("random-walk DP (m=500, L=256)", 5, || {
+    rec.bench("dp_analyze_pocock_m500", 5, || {
         std::hint::black_box(analyze_pocock(0.5, 500, n, 0.05, 256));
     });
 
-    if PjrtRuntime::default_dir().join("manifest.txt").exists() {
+    if PjrtRuntime::available() && PjrtRuntime::default_dir().join("manifest.txt").exists() {
         println!("\n-- L1/L2 via PJRT (AOT Pallas kernel, batch 512) --");
         let rt = PjrtRuntime::new(&PjrtRuntime::default_dir()).expect("runtime");
         let pjrt = PjrtLogistic::new(&model, rt).expect("backend");
-        let t_pjrt = bench("pjrt lldiff_moments (512-cap kernel)", 50, || {
+        let t_pjrt = rec.bench("pjrt_lldiff_moments", 50, || {
             std::hint::black_box(pjrt.lldiff_moments(&idx, &theta, &theta_p));
         });
         println!(
             "{:<44} {:>9.2}x native",
             "  -> dispatch overhead ratio",
-            t_pjrt / t_mom
+            t_pjrt / t_fused
         );
     } else {
         println!("\n(run `make artifacts` to bench the PJRT path)");
     }
 
-    println!("\n-- end-to-end step rate --");
-    let mode = austerity::coordinator::MhMode::approx(0.05, 500);
-    let mut scratch = austerity::coordinator::MhScratch::new(n);
-    let kernel = austerity::samplers::GaussianRandomWalk::new(0.01, 10.0);
-    let mut cur = theta.clone();
-    bench("mh_step approx (propose + decide)", 200, || {
-        use austerity::models::traits::ProposalKernel;
-        let prop = kernel.propose(&cur, &mut rng);
-        std::hint::black_box(austerity::coordinator::mh_step(
-            &model,
-            &mut cur,
-            prop,
-            &mode,
-            &mut scratch,
-            &mut rng,
-        ));
-    });
-    let exact = austerity::coordinator::MhMode::Exact;
-    bench("mh_step exact (full scan)", 20, || {
-        use austerity::models::traits::ProposalKernel;
-        let prop = kernel.propose(&cur, &mut rng);
-        std::hint::black_box(austerity::coordinator::mh_step(
-            &model,
-            &mut cur,
-            prop,
-            &exact,
-            &mut scratch,
-            &mut rng,
-        ));
-    });
+    rec.write_json("BENCH_hotpath.json");
 }

@@ -5,7 +5,7 @@
 //! `delta = 1 - F_{n-1}(|t|)` drops below the knob `epsilon`.
 
 use crate::coordinator::scheduler::MinibatchScheduler;
-use crate::models::traits::LlDiffModel;
+use crate::models::traits::{CachedLlDiff, LlDiffModel};
 use crate::stats::student_t::{t_sf, t_inv};
 use crate::stats::welford::MomentAccumulator;
 use crate::stats::Pcg64;
@@ -95,7 +95,57 @@ pub fn seq_mh_test<M: LlDiffModel>(
     idx_buf: &mut Vec<usize>,
 ) -> SeqTestOutcome {
     debug_assert_eq!(model.n(), sched.n());
-    let n_total = model.n();
+    seq_test_core(
+        model.n(),
+        |idx| model.lldiff_moments(idx, cur, prop),
+        mu0,
+        cfg,
+        sched,
+        rng,
+        idx_buf,
+    )
+}
+
+/// `seq_mh_test` on the state-caching fast path: moments are served from
+/// the model's activation cache (current side cached, proposal side
+/// computed), which is bit-identical to the uncached test by the
+/// `CachedLlDiff` contract. The caller owns the step protocol
+/// (`begin_step` before, `end_step` after).
+#[allow(clippy::too_many_arguments)]
+pub fn seq_mh_test_cached<M: CachedLlDiff>(
+    model: &M,
+    cache: &mut M::Cache,
+    prop: &M::Param,
+    mu0: f64,
+    cfg: &SeqTestConfig,
+    sched: &mut MinibatchScheduler,
+    rng: &mut Pcg64,
+    idx_buf: &mut Vec<usize>,
+) -> SeqTestOutcome {
+    debug_assert_eq!(model.n(), sched.n());
+    seq_test_core(
+        model.n(),
+        |idx| model.cached_moments(cache, idx, prop),
+        mu0,
+        cfg,
+        sched,
+        rng,
+        idx_buf,
+    )
+}
+
+/// The sequential test itself, abstracted over the moments backend so
+/// the cached and uncached paths share one decision procedure (any
+/// divergence here would break their bit-identity guarantee).
+fn seq_test_core<F: FnMut(&[usize]) -> (f64, f64)>(
+    n_total: usize,
+    mut moments: F,
+    mu0: f64,
+    cfg: &SeqTestConfig,
+    sched: &mut MinibatchScheduler,
+    rng: &mut Pcg64,
+    idx_buf: &mut Vec<usize>,
+) -> SeqTestOutcome {
     sched.reset();
     let mut acc = MomentAccumulator::new();
     let mut stages = 0usize;
@@ -105,7 +155,7 @@ pub fn seq_mh_test<M: LlDiffModel>(
         debug_assert!(!batch.is_empty(), "population exhausted without decision");
         idx_buf.clear();
         idx_buf.extend(batch.iter().map(|&i| i as usize));
-        let (s, s2) = model.lldiff_moments(idx_buf, cur, prop);
+        let (s, s2) = moments(idx_buf);
         acc.add_batch(s, s2, idx_buf.len());
         stages += 1;
 

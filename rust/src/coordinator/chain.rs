@@ -4,8 +4,8 @@
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::mh::{mh_step, MhMode, MhScratch};
-use crate::models::traits::{LlDiffModel, ProposalKernel};
+use crate::coordinator::mh::{mh_step, mh_step_cached, MhMode, MhScratch, StepInfo};
+use crate::models::traits::{CachedLlDiff, LlDiffModel, Proposal, ProposalKernel};
 use crate::stats::Pcg64;
 
 /// Summary statistics of one chain run.
@@ -55,28 +55,26 @@ pub struct Sample {
     pub at_data: u64,
 }
 
-/// Run a chain; `f` maps the current parameter to the scalar test
-/// function recorded every `thin` steps after `burn_in` steps.
+/// The single chain loop behind both `run_chain` variants: budget check,
+/// propose, step, burn-in/thinned recording. `step` performs one MH
+/// decision and mutates the parameter in place.
 #[allow(clippy::too_many_arguments)]
-pub fn run_chain<M, K, F>(
-    model: &M,
+fn drive_chain<P, K, F, S>(
     kernel: &K,
-    mode: &MhMode,
-    init: M::Param,
+    mut cur: P,
     budget: Budget,
     burn_in: usize,
     thin: usize,
     mut f: F,
     rng: &mut Pcg64,
+    mut step: S,
 ) -> (Vec<Sample>, ChainStats)
 where
-    M: LlDiffModel,
-    K: ProposalKernel<M::Param>,
-    F: FnMut(&M::Param) -> f64,
+    K: ProposalKernel<P>,
+    F: FnMut(&P) -> f64,
+    S: FnMut(&mut P, Proposal<P>, &mut Pcg64) -> StepInfo,
 {
     assert!(thin >= 1);
-    let mut scratch = MhScratch::new(model.n());
-    let mut cur = init;
     let mut stats = ChainStats::default();
     let mut samples = Vec::new();
     let start = Instant::now();
@@ -95,7 +93,7 @@ where
             }
         }
         let proposal = kernel.propose(&cur, rng);
-        let info = mh_step(model, &mut cur, proposal, mode, &mut scratch, rng);
+        let info = step(&mut cur, proposal, rng);
         stats.steps += 1;
         stats.accepted += info.accepted as usize;
         stats.data_used += info.n_used as u64;
@@ -111,8 +109,63 @@ where
     (samples, stats)
 }
 
+/// Run a chain; `f` maps the current parameter to the scalar test
+/// function recorded every `thin` steps after `burn_in` steps.
+#[allow(clippy::too_many_arguments)]
+pub fn run_chain<M, K, F>(
+    model: &M,
+    kernel: &K,
+    mode: &MhMode,
+    init: M::Param,
+    budget: Budget,
+    burn_in: usize,
+    thin: usize,
+    f: F,
+    rng: &mut Pcg64,
+) -> (Vec<Sample>, ChainStats)
+where
+    M: LlDiffModel,
+    K: ProposalKernel<M::Param>,
+    F: FnMut(&M::Param) -> f64,
+{
+    let mut scratch = MhScratch::new(model.n());
+    drive_chain(kernel, init, budget, burn_in, thin, f, rng, |cur, proposal, rng| {
+        mh_step(model, cur, proposal, mode, &mut scratch, rng)
+    })
+}
+
+/// `run_chain` on the state-caching fast path: per-datapoint statistics
+/// of the current parameter persist across steps in a model-provided
+/// cache, so each MH test only evaluates the proposal side. Produces
+/// bit-identical samples to `run_chain` under the same RNG stream.
+#[allow(clippy::too_many_arguments)]
+pub fn run_chain_cached<M, K, F>(
+    model: &M,
+    kernel: &K,
+    mode: &MhMode,
+    init: M::Param,
+    budget: Budget,
+    burn_in: usize,
+    thin: usize,
+    f: F,
+    rng: &mut Pcg64,
+) -> (Vec<Sample>, ChainStats)
+where
+    M: CachedLlDiff,
+    K: ProposalKernel<M::Param>,
+    F: FnMut(&M::Param) -> f64,
+{
+    let mut scratch = MhScratch::new(model.n());
+    let mut cache = model.init_cache(&init);
+    drive_chain(kernel, init, budget, burn_in, thin, f, rng, |cur, proposal, rng| {
+        mh_step_cached(model, cur, &mut cache, proposal, mode, &mut scratch, rng)
+    })
+}
+
 /// Run `n_chains` independent chains in parallel (std threads), seeding
-/// each from `base_seed + chain index`. Returns per-chain results.
+/// each from `base_seed + chain index`. Kept for API compatibility; the
+/// `engine` module is the full-featured multi-chain front end (worker
+/// pools, observers, cross-chain diagnostics).
 #[allow(clippy::too_many_arguments)]
 pub fn run_chains_parallel<M, K, F>(
     model: &M,

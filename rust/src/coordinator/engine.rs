@@ -1,0 +1,382 @@
+//! Parallel multi-chain execution engine: K independent chains across a
+//! std::thread worker pool, per-chain RNG streams, merged statistics and
+//! cross-chain convergence diagnostics (split R-hat / ESS).
+//!
+//! Design rules (see DESIGN.md §Engine):
+//!
+//! * **Determinism**: chain `c` always runs on `Pcg64::new(base_seed,
+//!   STREAM_BASE + c)`, regardless of how chains are packed onto worker
+//!   threads — the same configuration produces bit-identical samples
+//!   whether it runs on 1 thread or 16 (for step budgets; wall budgets
+//!   are inherently timing-dependent).
+//! * **No shared mutable state**: the model is shared immutably
+//!   (`M: Sync`); every chain owns its scratch, RNG, cache and observer.
+//! * **Observers**: per-chain stateful test functions created by a
+//!   factory and returned with the results, so experiments can stream
+//!   vector statistics (predictive means, inclusion counts) without a
+//!   second pass over samples.
+
+use crate::coordinator::chain::{run_chain, run_chain_cached, Budget, ChainStats, Sample};
+use crate::coordinator::mh::MhMode;
+use crate::metrics::convergence::{cross_chain, Convergence};
+use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
+use crate::stats::Pcg64;
+
+/// RNG stream id of chain 0 (chain `c` uses `STREAM_BASE + c`); matches
+/// the historical `run_chains_parallel` convention so seeds stay stable.
+pub const STREAM_BASE: u64 = 1000;
+
+/// Configuration of one engine launch.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Number of independent chains K.
+    pub chains: usize,
+    /// Worker threads; 0 means one worker per chain.
+    pub threads: usize,
+    /// Base seed; chain `c` draws from stream `STREAM_BASE + c`.
+    pub base_seed: u64,
+    /// Per-chain stop condition.
+    pub budget: Budget,
+    pub burn_in: usize,
+    pub thin: usize,
+}
+
+impl EngineConfig {
+    pub fn new(chains: usize, base_seed: u64, budget: Budget) -> Self {
+        EngineConfig { chains, threads: 0, base_seed, budget, burn_in: 0, thin: 1 }
+    }
+
+    pub fn burn_in(mut self, burn_in: usize) -> Self {
+        self.burn_in = burn_in;
+        self
+    }
+
+    pub fn thin(mut self, thin: usize) -> Self {
+        assert!(thin >= 1);
+        self.thin = thin;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+}
+
+/// Per-chain stateful test function. Implemented for any
+/// `FnMut(&P) -> f64 + Send` closure; implement it on a struct when the
+/// chain should accumulate vector statistics you need back afterwards.
+pub trait ChainObserver<P>: Send {
+    /// Called for every recorded (post-burn-in, thinned) state; the
+    /// return value becomes the recorded `Sample::value`.
+    fn observe(&mut self, param: &P) -> f64;
+}
+
+impl<P, F: FnMut(&P) -> f64 + Send> ChainObserver<P> for F {
+    fn observe(&mut self, param: &P) -> f64 {
+        self(param)
+    }
+}
+
+/// One chain's output.
+#[derive(Clone, Debug)]
+pub struct ChainRun {
+    pub chain: usize,
+    pub samples: Vec<Sample>,
+    pub stats: ChainStats,
+}
+
+/// Everything one engine launch produced.
+pub struct EngineResult<O> {
+    /// Per-chain samples and statistics, in chain order.
+    pub runs: Vec<ChainRun>,
+    /// Per-chain observers, in chain order.
+    pub observers: Vec<O>,
+    /// Chain-summed counters; `merged.wall` is the slowest single chain
+    /// (not the launch duration — chains may share workers).
+    pub merged: ChainStats,
+    /// Wall-clock duration of the whole launch, spawn to last join.
+    /// Equals roughly max(chain walls) when every chain has its own
+    /// worker, and approaches their sum as the pool shrinks.
+    pub wall: std::time::Duration,
+    /// Cross-chain split R-hat / ESS over the recorded sample values.
+    pub convergence: Convergence,
+}
+
+impl<O> EngineResult<O> {
+    /// Recorded values per chain (for custom diagnostics).
+    pub fn values(&self) -> Vec<Vec<f64>> {
+        self.runs
+            .iter()
+            .map(|r| r.samples.iter().map(|s| s.value).collect())
+            .collect()
+    }
+
+    /// Aggregate steps per wall-clock second of the launch.
+    pub fn steps_per_sec(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs > 0.0 {
+            self.merged.steps as f64 / secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run `tasks` independent jobs over a worker pool of `threads` threads
+/// (0 = one per task), returning results in task order. Task `i` always
+/// receives index `i`, so any deterministic task function yields
+/// identical results regardless of the pool size.
+pub fn parallel_map<T, F>(tasks: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = if threads == 0 { tasks } else { threads.min(tasks) };
+    if workers <= 1 {
+        return (0..tasks).map(f).collect();
+    }
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(tasks);
+    slots.resize_with(tasks, || None);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut i = w;
+                    while i < tasks {
+                        out.push((i, f(i)));
+                        i += workers;
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, t) in h.join().expect("engine worker panicked") {
+                slots[i] = Some(t);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("missing engine task result"))
+        .collect()
+}
+
+/// Run K chains of `model` under `mode`, one observer per chain.
+pub fn run_engine<M, K, OF, O>(
+    model: &M,
+    kernel: &K,
+    mode: &MhMode,
+    init: M::Param,
+    cfg: &EngineConfig,
+    make_observer: OF,
+) -> EngineResult<O>
+where
+    M: LlDiffModel + Sync,
+    K: ProposalKernel<M::Param> + Sync,
+    M::Param: Clone + Send + Sync,
+    OF: Fn(usize) -> O + Sync,
+    O: ChainObserver<M::Param>,
+{
+    assert!(cfg.chains >= 1, "need at least one chain");
+    let init = &init;
+    let start = std::time::Instant::now();
+    let pairs = parallel_map(cfg.chains, cfg.threads, |c| {
+        let mut rng = Pcg64::new(cfg.base_seed, STREAM_BASE + c as u64);
+        let mut obs = make_observer(c);
+        let (samples, stats) = run_chain(
+            model,
+            kernel,
+            mode,
+            init.clone(),
+            cfg.budget,
+            cfg.burn_in,
+            cfg.thin,
+            |p| obs.observe(p),
+            &mut rng,
+        );
+        (ChainRun { chain: c, samples, stats }, obs)
+    });
+    finish(pairs, start.elapsed())
+}
+
+/// `run_engine` on the state-caching fast path: each chain owns a
+/// model cache (`CachedLlDiff`), halving hot-path FLOPs per decision.
+pub fn run_engine_cached<M, K, OF, O>(
+    model: &M,
+    kernel: &K,
+    mode: &MhMode,
+    init: M::Param,
+    cfg: &EngineConfig,
+    make_observer: OF,
+) -> EngineResult<O>
+where
+    M: CachedLlDiff + Sync,
+    K: ProposalKernel<M::Param> + Sync,
+    M::Param: Clone + Send + Sync,
+    OF: Fn(usize) -> O + Sync,
+    O: ChainObserver<M::Param>,
+{
+    assert!(cfg.chains >= 1, "need at least one chain");
+    let init = &init;
+    let start = std::time::Instant::now();
+    let pairs = parallel_map(cfg.chains, cfg.threads, |c| {
+        let mut rng = Pcg64::new(cfg.base_seed, STREAM_BASE + c as u64);
+        let mut obs = make_observer(c);
+        let (samples, stats) = run_chain_cached(
+            model,
+            kernel,
+            mode,
+            init.clone(),
+            cfg.budget,
+            cfg.burn_in,
+            cfg.thin,
+            |p| obs.observe(p),
+            &mut rng,
+        );
+        (ChainRun { chain: c, samples, stats }, obs)
+    });
+    finish(pairs, start.elapsed())
+}
+
+fn finish<O>(pairs: Vec<(ChainRun, O)>, wall: std::time::Duration) -> EngineResult<O> {
+    let mut merged = ChainStats::default();
+    for (run, _) in &pairs {
+        merged.steps += run.stats.steps;
+        merged.accepted += run.stats.accepted;
+        merged.data_used += run.stats.data_used;
+        merged.wall = merged.wall.max(run.stats.wall);
+    }
+    let series: Vec<Vec<f64>> = pairs
+        .iter()
+        .map(|(r, _)| r.samples.iter().map(|s| s.value).collect())
+        .collect();
+    let convergence = cross_chain(&series);
+    let (runs, observers): (Vec<ChainRun>, Vec<O>) = pairs.into_iter().unzip();
+    EngineResult { runs, observers, merged, wall, convergence }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::traits::Proposal;
+
+    /// 1-d Gaussian posterior split over N identical "datapoints".
+    struct GaussTarget {
+        n: usize,
+    }
+
+    impl LlDiffModel for GaussTarget {
+        type Param = f64;
+
+        fn n(&self) -> usize {
+            self.n
+        }
+
+        fn lldiff(&self, _i: usize, cur: &f64, prop: &f64) -> f64 {
+            (0.5 * (cur * cur - prop * prop)) / self.n as f64
+        }
+    }
+
+    fn rw_kernel(sigma: f64) -> impl Fn(&f64, &mut Pcg64) -> Proposal<f64> + Sync {
+        move |cur: &f64, rng: &mut Pcg64| Proposal {
+            param: cur + rng.normal_scaled(0.0, sigma),
+            log_correction: 0.0,
+        }
+    }
+
+    #[test]
+    fn parallel_map_is_ordered_and_pool_size_invariant() {
+        let serial = parallel_map(13, 1, |i| i * i);
+        for threads in [0usize, 2, 3, 8] {
+            assert_eq!(parallel_map(13, threads, |i| i * i), serial);
+        }
+        assert_eq!(serial[5], 25);
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn engine_is_deterministic_across_thread_counts() {
+        let model = GaussTarget { n: 50 };
+        let kernel = rw_kernel(1.0);
+        let run = |threads: usize| {
+            let cfg = EngineConfig::new(4, 42, Budget::Steps(300))
+                .burn_in(20)
+                .threads(threads);
+            run_engine(&model, &kernel, &MhMode::Exact, 0.0, &cfg, |_c| |p: &f64| *p)
+        };
+        let a = run(1);
+        let b = run(4);
+        let c = run(3);
+        assert_eq!(a.runs.len(), 4);
+        for ((ra, rb), rc) in a.runs.iter().zip(&b.runs).zip(&c.runs) {
+            assert_eq!(ra.chain, rb.chain);
+            assert_eq!(ra.stats.steps, rb.stats.steps);
+            assert_eq!(ra.stats.accepted, rb.stats.accepted);
+            let va: Vec<f64> = ra.samples.iter().map(|s| s.value).collect();
+            let vb: Vec<f64> = rb.samples.iter().map(|s| s.value).collect();
+            let vc: Vec<f64> = rc.samples.iter().map(|s| s.value).collect();
+            assert_eq!(va, vb);
+            assert_eq!(va, vc);
+        }
+        // chains explore independently
+        assert_ne!(
+            a.runs[0].samples.last().unwrap().value,
+            a.runs[1].samples.last().unwrap().value
+        );
+    }
+
+    #[test]
+    fn merged_stats_sum_chains() {
+        let model = GaussTarget { n: 30 };
+        let kernel = rw_kernel(1.0);
+        let cfg = EngineConfig::new(3, 7, Budget::Steps(200));
+        let res = run_engine(&model, &kernel, &MhMode::Exact, 0.0, &cfg, |_c| |p: &f64| *p);
+        assert_eq!(res.merged.steps, 600);
+        assert_eq!(res.merged.data_used, 600 * 30);
+        let acc_sum: usize = res.runs.iter().map(|r| r.stats.accepted).sum();
+        assert_eq!(res.merged.accepted, acc_sum);
+        assert!(res.steps_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn observers_come_back_in_chain_order() {
+        struct Counter {
+            chain: usize,
+            seen: usize,
+        }
+        impl ChainObserver<f64> for Counter {
+            fn observe(&mut self, p: &f64) -> f64 {
+                self.seen += 1;
+                *p
+            }
+        }
+        let model = GaussTarget { n: 20 };
+        let kernel = rw_kernel(1.0);
+        let cfg = EngineConfig::new(3, 9, Budget::Steps(100)).burn_in(10).thin(3);
+        let res = run_engine(&model, &kernel, &MhMode::Exact, 0.0, &cfg, |c| Counter {
+            chain: c,
+            seen: 0,
+        });
+        for (c, (obs, run)) in res.observers.iter().zip(&res.runs).enumerate() {
+            assert_eq!(obs.chain, c);
+            assert_eq!(run.chain, c);
+            assert_eq!(obs.seen, run.samples.len());
+            assert_eq!(obs.seen, 30); // (100 - 10) / 3
+        }
+    }
+
+    #[test]
+    fn well_mixed_chains_have_rhat_near_one() {
+        let model = GaussTarget { n: 40 };
+        let kernel = rw_kernel(1.5);
+        let cfg = EngineConfig::new(4, 5, Budget::Steps(20_000)).burn_in(2_000);
+        let res = run_engine(&model, &kernel, &MhMode::Exact, 0.0, &cfg, |_c| |p: &f64| *p);
+        let rhat = res.convergence.rhat;
+        assert!(rhat.is_finite() && (rhat - 1.0).abs() < 0.05, "rhat {rhat}");
+        assert!(res.convergence.ess > 100.0, "ess {}", res.convergence.ess);
+    }
+}

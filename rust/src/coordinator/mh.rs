@@ -1,9 +1,9 @@
 //! Metropolis-Hastings step orchestration: the exact O(N) test and the
 //! approximate sequential test behind one interface (paper §2 and §4).
 
-use crate::coordinator::austerity::{seq_mh_test, SeqTestConfig, SeqTestOutcome};
+use crate::coordinator::austerity::{seq_mh_test, seq_mh_test_cached, SeqTestConfig, SeqTestOutcome};
 use crate::coordinator::scheduler::MinibatchScheduler;
-use crate::models::traits::{LlDiffModel, Proposal};
+use crate::models::traits::{full_scan_moments, CachedLlDiff, LlDiffModel, Proposal};
 use crate::stats::Pcg64;
 
 /// Which accept/reject test to run.
@@ -80,8 +80,10 @@ pub fn mh_step<M: LlDiffModel>(
 
     let (accepted, outcome): (bool, Option<SeqTestOutcome>) = match mode {
         MhMode::Exact => {
-            let mu = model.full_mean(cur, &proposal.param);
-            (mu > mu0, None)
+            // chunked full scan through the reusable scratch buffer: no
+            // length-N index vector, no per-step allocation
+            let (s, _) = model.full_moments_buf(cur, &proposal.param, &mut scratch.idx_buf);
+            (s / n > mu0, None)
         }
         MhMode::Approx(cfg) => {
             let out = seq_mh_test(
@@ -105,6 +107,72 @@ pub fn mh_step<M: LlDiffModel>(
         Some(o) => StepInfo { accepted, n_used: o.n_used, stages: o.stages },
         None => StepInfo { accepted, n_used: model.n(), stages: 1 },
     }
+}
+
+/// `mh_step` on the state-caching fast path: current-side per-datapoint
+/// statistics live in `cache` across steps, so each decision computes
+/// only the proposal side (and a rejected step leaves the cache valid
+/// for free). Decisions are bit-identical to `mh_step` under the same
+/// RNG stream — regression-tested in `tests/integration_engine.rs`.
+pub fn mh_step_cached<M: CachedLlDiff>(
+    model: &M,
+    cur: &mut M::Param,
+    cache: &mut M::Cache,
+    proposal: Proposal<M::Param>,
+    mode: &MhMode,
+    scratch: &mut MhScratch,
+    rng: &mut Pcg64,
+) -> StepInfo {
+    let n = model.n() as f64;
+    let u = rng.uniform_pos();
+
+    if proposal.log_correction == f64::INFINITY {
+        return StepInfo { accepted: false, n_used: 0, stages: 0 };
+    }
+    let mu0 = (u.ln() + proposal.log_correction) / n;
+
+    model.begin_step(cache);
+    let (accepted, outcome): (bool, Option<SeqTestOutcome>) = match mode {
+        MhMode::Exact => {
+            let (s, _) =
+                cached_full_moments(model, cache, &proposal.param, &mut scratch.idx_buf);
+            (s / n > mu0, None)
+        }
+        MhMode::Approx(cfg) => {
+            let out = seq_mh_test_cached(
+                model,
+                cache,
+                &proposal.param,
+                mu0,
+                cfg,
+                &mut scratch.sched,
+                rng,
+                &mut scratch.idx_buf,
+            );
+            (out.accept, Some(out))
+        }
+    };
+    model.end_step(cache, &proposal.param, accepted);
+
+    if accepted {
+        *cur = proposal.param;
+    }
+    match outcome {
+        Some(o) => StepInfo { accepted, n_used: o.n_used, stages: o.stages },
+        None => StepInfo { accepted, n_used: model.n(), stages: 1 },
+    }
+}
+
+/// Full-population moments through the cache; shares `full_scan_moments`
+/// with the uncached exact path, so both accumulate in the same order
+/// (bit-identity by construction).
+fn cached_full_moments<M: CachedLlDiff>(
+    model: &M,
+    cache: &mut M::Cache,
+    prop: &M::Param,
+    buf: &mut Vec<usize>,
+) -> (f64, f64) {
+    full_scan_moments(model.n(), buf, |idx| model.cached_moments(cache, idx, prop))
 }
 
 #[cfg(test)]
@@ -232,6 +300,46 @@ mod tests {
             }
         }
         assert!(acc >= 195, "acc={acc}");
+    }
+
+    #[test]
+    fn cached_step_matches_uncached_step_exactly() {
+        use crate::data::synthetic::linreg_toy;
+        use crate::models::LinRegModel;
+
+        let model = LinRegModel::new(linreg_toy(3_000, 0), 3.0, 4950.0);
+        let kernel = |cur: &f64, rng: &mut Pcg64| Proposal {
+            param: cur + rng.normal_scaled(0.0, 0.005),
+            log_correction: 0.0,
+        };
+        for mode in [MhMode::Exact, MhMode::approx(0.05, 300)] {
+            let mut rng_a = Pcg64::new(11, 4);
+            let mut rng_b = Pcg64::new(11, 4);
+            let mut scratch_a = MhScratch::new(model.n());
+            let mut scratch_b = MhScratch::new(model.n());
+            let mut cur_a = 0.45f64;
+            let mut cur_b = 0.45f64;
+            let mut cache = model.init_cache(&cur_b);
+            for step in 0..150 {
+                let prop_a = kernel.propose(&cur_a, &mut rng_a);
+                let prop_b = kernel.propose(&cur_b, &mut rng_b);
+                assert_eq!(prop_a.param.to_bits(), prop_b.param.to_bits());
+                let a = mh_step(&model, &mut cur_a, prop_a, &mode, &mut scratch_a, &mut rng_a);
+                let b = mh_step_cached(
+                    &model,
+                    &mut cur_b,
+                    &mut cache,
+                    prop_b,
+                    &mode,
+                    &mut scratch_b,
+                    &mut rng_b,
+                );
+                assert_eq!(a.accepted, b.accepted, "step {step}");
+                assert_eq!(a.n_used, b.n_used, "step {step}");
+                assert_eq!(a.stages, b.stages, "step {step}");
+                assert_eq!(cur_a.to_bits(), cur_b.to_bits(), "step {step}");
+            }
+        }
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! The Layer-3 coordinator: the paper's contribution.
 //!
 //! * `austerity` — the sequential approximate MH test (Alg. 1)
-//! * `mh` — exact + approximate MH step orchestration
-//! * `chain` — chain driver with budgets, thinning, parallel replicas
+//! * `mh` — exact + approximate MH step orchestration (plus the
+//!   state-caching fast path `mh_step_cached`)
+//! * `chain` — single-chain driver with budgets and thinning
+//! * `engine` — parallel multi-chain engine: worker pool, per-chain RNG
+//!   streams and observers, merged stats, split R-hat / ESS
 //! * `scheduler` — without-replacement mini-batch scheduling
 //! * `dp` — Gaussian-random-walk error/usage dynamic program (§5.1)
 //! * `delta` — acceptance-probability error via quadrature (Eqn. 6)
@@ -14,14 +17,19 @@ pub mod chain;
 pub mod delta;
 pub mod design;
 pub mod dp;
+pub mod engine;
 pub mod mh;
 pub mod scheduler;
 
 pub use adaptive::{run_adaptive_chain, EpsSchedule};
-pub use austerity::{seq_mh_test, BoundSeq, SeqTestConfig, SeqTestOutcome};
-pub use chain::{run_chain, run_chains_parallel, Budget, ChainStats, Sample};
+pub use austerity::{seq_mh_test, seq_mh_test_cached, BoundSeq, SeqTestConfig, SeqTestOutcome};
+pub use chain::{run_chain, run_chain_cached, run_chains_parallel, Budget, ChainStats, Sample};
 pub use delta::{PairStats, SeqTestTable};
 pub use design::{average_design, wang_tsiatis_design, worst_case_design, DesignChoice, DesignGrid, WtChoice};
 pub use dp::{analyze_pocock, analyze_walk, simulate_walk, uniform_pis, SeqAnalysis};
-pub use mh::{mh_step, MhMode, MhScratch, StepInfo};
+pub use engine::{
+    parallel_map, run_engine, run_engine_cached, ChainObserver, ChainRun, EngineConfig,
+    EngineResult,
+};
+pub use mh::{mh_step, mh_step_cached, MhMode, MhScratch, StepInfo};
 pub use scheduler::MinibatchScheduler;

@@ -12,7 +12,8 @@
 
 use crate::coordinator::adaptive::{run_adaptive_chain, EpsSchedule};
 use crate::coordinator::austerity::{seq_mh_test, SeqTestConfig};
-use crate::coordinator::chain::{run_chain, Budget};
+use crate::coordinator::chain::Budget;
+use crate::coordinator::engine::{run_engine_cached, EngineConfig};
 use crate::coordinator::dp::{analyze_walk, uniform_pis};
 use crate::coordinator::mh::MhMode;
 use crate::coordinator::scheduler::MinibatchScheduler;
@@ -145,24 +146,19 @@ pub fn ablation_adaptive(scale: Scale) -> Vec<(String, f64, f64)> {
     let kernel = GaussianRandomWalk::new(0.01, model.prior_precision);
     let steps = scale.steps(20_000);
 
-    // truth from a long exact run
-    let mut rng = Pcg64::seeded(1);
-    let (truth_samples, _) = run_chain(
+    // truth from parallel exact chains on the cached fast path (same
+    // total step budget as the old single long run)
+    let truth_cfg =
+        EngineConfig::new(2, 1, Budget::Steps(steps)).burn_in(steps / 10);
+    let truth_res = run_engine_cached(
         &model,
         &kernel,
         &MhMode::Exact,
         init.clone(),
-        Budget::Steps(steps * 2),
-        steps / 10,
-        1,
-        |t| t[0],
-        &mut rng,
+        &truth_cfg,
+        |_c| |t: &Vec<f64>| t[0],
     );
-    let mut tw = Welford::new();
-    for s in &truth_samples {
-        tw.add(s.value);
-    }
-    let truth = tw.mean();
+    let truth = truth_res.convergence.pooled_mean;
 
     let mut sink = FigureSink::new("ablation_adaptive");
     sink.header(&["schedule", "sq_error", "data_fraction"]);
@@ -210,18 +206,15 @@ pub fn ablation_pseudo_marginal(scale: Scale) -> (f64, f64, usize) {
     let mut rng = Pcg64::seeded(3);
     let pm = run_pseudo_marginal(&model, &kernel, &est, init.clone(), steps, &mut rng, |_| {});
 
-    let mut rng = Pcg64::seeded(3);
-    let (_, seq) = run_chain(
+    let seq_res = run_engine_cached(
         &model,
         &kernel,
         &MhMode::approx(0.05, 500.min(n / 4).max(16)),
         init,
-        Budget::Steps(steps),
-        0,
-        1,
-        |_| 0.0,
-        &mut rng,
+        &EngineConfig::new(1, 3, Budget::Steps(steps)),
+        |_c| |_: &Vec<f64>| 0.0,
     );
+    let seq = &seq_res.merged;
 
     let pm_acc = pm.accepted as f64 / pm.steps as f64;
     let seq_acc = seq.acceptance_rate();

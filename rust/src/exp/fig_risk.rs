@@ -3,10 +3,14 @@
 //!   Fig. 3 — ICA on the Stiefel manifold, risk of E[Amari distance]
 //!   Fig. 4 — reversible-jump variable selection, risk of predictive mean
 //!
-//! Each: estimate ground truth from a long exact run, then run replica
-//! chains per epsilon and report chain-averaged MSE at time checkpoints.
+//! Each: estimate ground truth from parallel exact chains (the engine
+//! merges their streams), then run replica chains per epsilon and report
+//! chain-averaged MSE at time checkpoints.
 
-use crate::coordinator::chain::{run_chain, Budget};
+use std::time::Duration;
+
+use crate::coordinator::chain::Budget;
+use crate::coordinator::engine::{run_engine, run_engine_cached, ChainObserver, EngineConfig};
 use crate::coordinator::mh::MhMode;
 use crate::data::linalg::Mat;
 use crate::data::synthetic::{ica_mixture, sparse_logistic};
@@ -19,6 +23,22 @@ use crate::models::rjlogistic::{RjLogisticModel, RjState};
 use crate::models::{IcaModel, LlDiffModel};
 use crate::samplers::{GaussianRandomWalk, RjKernel, StiefelRandomWalk};
 use crate::stats::Pcg64;
+
+/// Per-chain observer streaming a vector test function into a
+/// `PredictiveMean`; the engine hands the observers back and the chains'
+/// panels merge into one ground-truth estimate.
+struct PredObs<F> {
+    f: F,
+    pm: PredictiveMean,
+}
+
+impl<P, F: FnMut(&P) -> Vec<f64> + Send> ChainObserver<P> for PredObs<F> {
+    fn observe(&mut self, p: &P) -> f64 {
+        let v = (self.f)(p);
+        self.pm.add(&v);
+        0.0
+    }
+}
 
 fn emit(sink: &mut FigureSink, results: &[crate::exp::risk_driver::EpsRisk]) {
     sink.header(&["eps", "t_secs", "risk", "chains", "data_fraction", "acceptance", "steps_per_sec"]);
@@ -50,24 +70,19 @@ pub fn run_fig2(scale: Scale) -> Vec<(f64, f64)> {
         (0..test.n()).map(|i| test.predict(test.data().row(i), theta)).collect()
     };
 
-    // ground truth: long exact run (stands in for the paper's HMC run)
+    // ground truth: parallel exact chains on the cached fast path
+    // (stands in for the paper's HMC run)
     let gt_secs = scale.secs(60.0);
-    let mut rng = Pcg64::seeded(5);
+    let gt_cfg = EngineConfig::new(2, 5, Budget::Wall(Duration::from_secs_f64(gt_secs)))
+        .burn_in(50)
+        .thin(2);
+    let gt = run_engine_cached(&model, &kernel, &MhMode::Exact, map.clone(), &gt_cfg, |_c| {
+        PredObs { f: &predict, pm: PredictiveMean::new(test.n()) }
+    });
     let mut pm = PredictiveMean::new(test.n());
-    let (_, _stats) = run_chain(
-        &model,
-        &kernel,
-        &MhMode::Exact,
-        map.clone(),
-        Budget::Wall(std::time::Duration::from_secs_f64(gt_secs)),
-        50,
-        2,
-        |theta| {
-            pm.add(&predict(theta));
-            0.0
-        },
-        &mut rng,
-    );
+    for obs in &gt.observers {
+        pm.merge(&obs.pm);
+    }
     let truth = pm.mean();
 
     let cfg = RiskConfig {
@@ -97,29 +112,20 @@ pub fn run_fig3(scale: Scale) -> Vec<(f64, f64)> {
     let kernel = StiefelRandomWalk::new(0.03);
     let init = w0.clone(); // start near truth; burn-in handles the rest
 
-    let test_fn = move |w: &Mat| vec![amari_distance(w, &w0)];
+    let test_fn = {
+        let w0 = w0.clone();
+        move |w: &Mat| vec![amari_distance(w, &w0)]
+    };
 
-    // ground truth E[amari] from a long exact run
+    // ground truth E[amari] from parallel exact chains
     let gt_secs = scale.secs(120.0);
-    let mut rng = Pcg64::seeded(6);
-    let mut sum = 0.0f64;
-    let mut count = 0u64;
-    run_chain(
-        &model,
-        &kernel,
-        &MhMode::Exact,
-        init.clone(),
-        Budget::Wall(std::time::Duration::from_secs_f64(gt_secs)),
-        20,
-        1,
-        |w| {
-            sum += test_fn(w)[0];
-            count += 1;
-            0.0
-        },
-        &mut rng,
-    );
-    let truth = vec![sum / count.max(1) as f64];
+    let gt_cfg =
+        EngineConfig::new(2, 6, Budget::Wall(Duration::from_secs_f64(gt_secs))).burn_in(20);
+    let gt = run_engine(&model, &kernel, &MhMode::Exact, init.clone(), &gt_cfg, |_c| {
+        let w0c = w0.clone();
+        move |w: &Mat| amari_distance(w, &w0c)
+    });
+    let truth = vec![if gt.convergence.n_samples > 0 { gt.convergence.pooled_mean } else { 0.0 }];
 
     let cfg = RiskConfig {
         eps_values: vec![0.0, 0.01, 0.05, 0.1, 0.2],
@@ -157,22 +163,16 @@ pub fn run_fig4(scale: Scale) -> Vec<(f64, f64)> {
     };
 
     let gt_secs = scale.secs(90.0);
-    let mut rng = Pcg64::seeded(10);
+    let gt_cfg = EngineConfig::new(2, 10, Budget::Wall(Duration::from_secs_f64(gt_secs)))
+        .burn_in(100)
+        .thin(2);
+    let gt = run_engine(&model, &kernel, &MhMode::Exact, init.clone(), &gt_cfg, |_c| {
+        PredObs { f: &predict, pm: PredictiveMean::new(n_test) }
+    });
     let mut pm = PredictiveMean::new(n_test);
-    run_chain(
-        &model,
-        &kernel,
-        &MhMode::Exact,
-        init.clone(),
-        Budget::Wall(std::time::Duration::from_secs_f64(gt_secs)),
-        100,
-        2,
-        |s| {
-            pm.add(&predict(s));
-            0.0
-        },
-        &mut rng,
-    );
+    for obs in &gt.observers {
+        pm.merge(&obs.pm);
+    }
     let truth = pm.mean();
 
     let cfg = RiskConfig {

@@ -2,18 +2,34 @@
 //! p(gamma_j = 1 | data) from the exact reversible-jump chain vs the
 //! approximate chain, started from the same initialization.
 
-use crate::coordinator::chain::{run_chain, Budget};
+use crate::coordinator::chain::Budget;
+use crate::coordinator::engine::{run_engine, ChainObserver, EngineConfig};
 use crate::coordinator::mh::MhMode;
 use crate::data::synthetic::sparse_logistic;
 use crate::exp::common::{FigureSink, Scale};
 use crate::models::rjlogistic::{RjLogisticModel, RjState};
 use crate::samplers::RjKernel;
-use crate::stats::Pcg64;
 
 pub struct Fig13Result {
     pub exact: Vec<f64>,
     pub approx: Vec<f64>,
     pub beta_true: Vec<f64>,
+}
+
+/// Per-chain inclusion counter; chains merge after the engine returns.
+struct InclObserver {
+    incl: Vec<u64>,
+    count: u64,
+}
+
+impl ChainObserver<RjState> for InclObserver {
+    fn observe(&mut self, s: &RjState) -> f64 {
+        for &j in &s.active {
+            self.incl[j] += 1;
+        }
+        self.count += 1;
+        0.0
+    }
 }
 
 fn inclusion_probs(
@@ -25,26 +41,21 @@ fn inclusion_probs(
 ) -> Vec<f64> {
     let kernel = RjKernel::new(model);
     let d = model.d();
+    let chains = 2usize;
+    let per_chain = (steps / chains).max(1);
+    let cfg = EngineConfig::new(chains, seed, Budget::Steps(per_chain)).burn_in(per_chain / 5);
+    let res = run_engine(model, &kernel, mode, init, &cfg, |_c| InclObserver {
+        incl: vec![0; d],
+        count: 0,
+    });
     let mut incl = vec![0u64; d];
     let mut count = 0u64;
-    let mut rng = Pcg64::seeded(seed);
-    run_chain(
-        model,
-        &kernel,
-        mode,
-        init,
-        Budget::Steps(steps),
-        steps / 5,
-        1,
-        |s| {
-            for &j in &s.active {
-                incl[j] += 1;
-            }
-            count += 1;
-            0.0
-        },
-        &mut rng,
-    );
+    for o in &res.observers {
+        for (t, v) in incl.iter_mut().zip(&o.incl) {
+            *t += v;
+        }
+        count += o.count;
+    }
     incl.iter().map(|&c| c as f64 / count.max(1) as f64).collect()
 }
 

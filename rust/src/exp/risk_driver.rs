@@ -4,6 +4,7 @@
 
 use std::time::Instant;
 
+use crate::coordinator::engine::parallel_map;
 use crate::coordinator::mh::{mh_step, MhMode, MhScratch};
 use crate::metrics::risk::{risk_curve, Checkpoints, RiskCurve};
 use crate::models::traits::{LlDiffModel, ProposalKernel};
@@ -107,7 +108,8 @@ where
     )
 }
 
-/// Run the full experiment: all epsilons, all chains (chains in threads).
+/// Run the full experiment: all epsilons, all chains (chains fan out
+/// over the engine's worker pool).
 pub fn risk_vs_time<M, K, F>(
     model: &M,
     kernel: &K,
@@ -119,7 +121,7 @@ pub fn risk_vs_time<M, K, F>(
 where
     M: LlDiffModel + Sync,
     K: ProposalKernel<M::Param> + Sync,
-    M::Param: Clone + Send,
+    M::Param: Clone + Send + Sync,
     F: Fn(&M::Param) -> Vec<f64> + Sync,
 {
     let checks = Checkpoints::log_spaced(
@@ -130,30 +132,20 @@ where
     let mut out = Vec::new();
     for (ei, &eps) in cfg.eps_values.iter().enumerate() {
         let mode = MhMode::approx(eps, cfg.batch);
-        let results: Vec<(Vec<f64>, f64, f64, f64)> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..cfg.chains)
-                .map(|c| {
-                    let init = init.clone();
-                    let mode = mode.clone();
-                    let test_fn = &test_fn;
-                    let checks = &checks;
-                    scope.spawn(move || {
-                        run_one_chain(
-                            model,
-                            kernel,
-                            &mode,
-                            init,
-                            truth,
-                            test_fn,
-                            cfg,
-                            checks,
-                            cfg.base_seed + (ei * 1000 + c) as u64,
-                        )
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("chain panicked")).collect()
-        });
+        let results: Vec<(Vec<f64>, f64, f64, f64)> =
+            parallel_map(cfg.chains, 0, |c| {
+                run_one_chain(
+                    model,
+                    kernel,
+                    &mode,
+                    init.clone(),
+                    truth,
+                    &test_fn,
+                    cfg,
+                    &checks,
+                    cfg.base_seed + (ei * 1000 + c) as u64,
+                )
+            });
         let errors: Vec<Vec<f64>> = results.iter().map(|r| r.0.clone()).collect();
         let k = results.len() as f64;
         out.push(EpsRisk {

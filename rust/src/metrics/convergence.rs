@@ -1,0 +1,131 @@
+//! Cross-chain convergence diagnostics for the multi-chain engine:
+//! split R-hat (Gelman-Rubin with split chains) and pooled effective
+//! sample size, both over a scalar test function.
+//!
+//! R-hat compares between-chain and within-chain variance; values near 1
+//! mean the K chains are sampling the same distribution. ESS sums the
+//! per-chain `T / tau` of `stats::autocorr` (chains are independent, so
+//! their effective sizes add).
+
+use crate::stats::autocorr::effective_sample_size;
+
+/// Summary of a multi-chain run's recorded values.
+#[derive(Clone, Debug)]
+pub struct Convergence {
+    /// Split R-hat; NaN when there are too few samples to estimate.
+    pub rhat: f64,
+    /// Total effective sample size across chains.
+    pub ess: f64,
+    /// Mean over all recorded values of all chains (NaN if none).
+    pub pooled_mean: f64,
+    /// Total number of recorded values.
+    pub n_samples: usize,
+}
+
+/// Split R-hat over per-chain value series. Each chain is split in half
+/// (guarding against within-chain drift), all half-chains truncated to a
+/// common length. Returns NaN when fewer than 4 values per chain exist.
+pub fn split_rhat(chains: &[Vec<f64>]) -> f64 {
+    let min_len = chains.iter().map(|c| c.len()).min().unwrap_or(0);
+    if chains.is_empty() || min_len < 4 {
+        return f64::NAN;
+    }
+    let half = min_len / 2;
+    let mut groups: Vec<&[f64]> = Vec::with_capacity(chains.len() * 2);
+    for c in chains {
+        groups.push(&c[..half]);
+        groups.push(&c[half..2 * half]);
+    }
+    let m = groups.len() as f64;
+    let n = half as f64;
+    let means: Vec<f64> = groups.iter().map(|g| g.iter().sum::<f64>() / n).collect();
+    let grand = means.iter().sum::<f64>() / m;
+    // between-half-chain variance B and mean within variance W
+    let b = n / (m - 1.0) * means.iter().map(|mu| (mu - grand) * (mu - grand)).sum::<f64>();
+    let w = groups
+        .iter()
+        .zip(&means)
+        .map(|(g, &mu)| g.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / (n - 1.0))
+        .sum::<f64>()
+        / m;
+    if w <= 0.0 {
+        // all half-chains constant: identical means => converged trivially
+        return if b <= 0.0 { 1.0 } else { f64::INFINITY };
+    }
+    let var_plus = (n - 1.0) / n * w + b / n;
+    (var_plus / w).sqrt()
+}
+
+/// Full cross-chain summary of per-chain value series.
+pub fn cross_chain(chains: &[Vec<f64>]) -> Convergence {
+    let n_samples: usize = chains.iter().map(|c| c.len()).sum();
+    let pooled_mean = if n_samples == 0 {
+        f64::NAN
+    } else {
+        chains.iter().flat_map(|c| c.iter()).sum::<f64>() / n_samples as f64
+    };
+    let ess = chains
+        .iter()
+        .filter(|c| c.len() >= 4)
+        .map(|c| effective_sample_size(c.as_slice()))
+        .sum::<f64>();
+    Convergence { rhat: split_rhat(chains), ess, pooled_mean, n_samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Pcg64;
+
+    fn iid_chain(seed: u64, n: usize, mu: f64) -> Vec<f64> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n).map(|_| mu + rng.normal()).collect()
+    }
+
+    #[test]
+    fn iid_same_target_rhat_near_one() {
+        let chains: Vec<Vec<f64>> = (0..4).map(|s| iid_chain(s, 5_000, 0.0)).collect();
+        let r = split_rhat(&chains);
+        assert!((r - 1.0).abs() < 0.02, "rhat {r}");
+    }
+
+    #[test]
+    fn shifted_chain_inflates_rhat() {
+        let mut chains: Vec<Vec<f64>> = (0..3).map(|s| iid_chain(s, 2_000, 0.0)).collect();
+        chains.push(iid_chain(9, 2_000, 3.0)); // one chain stuck elsewhere
+        let r = split_rhat(&chains);
+        assert!(r > 1.5, "rhat {r}");
+    }
+
+    #[test]
+    fn within_chain_drift_detected_by_split() {
+        // a single drifting chain: plain R-hat can't see it, split can
+        let n = 4_000;
+        let mut rng = Pcg64::seeded(3);
+        let drift: Vec<f64> = (0..n)
+            .map(|i| 4.0 * i as f64 / n as f64 + 0.1 * rng.normal())
+            .collect();
+        let r = split_rhat(&[drift].to_vec());
+        assert!(r > 1.5, "rhat {r}");
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(split_rhat(&[]).is_nan());
+        assert!(split_rhat(&[vec![1.0, 2.0]].to_vec()).is_nan());
+        assert_eq!(split_rhat(&[vec![2.0; 100], vec![2.0; 100]].to_vec()), 1.0);
+    }
+
+    #[test]
+    fn cross_chain_pools_mean_and_ess() {
+        let chains: Vec<Vec<f64>> = (0..2).map(|s| iid_chain(s, 10_000, 1.0)).collect();
+        let c = cross_chain(&chains);
+        assert_eq!(c.n_samples, 20_000);
+        assert!((c.pooled_mean - 1.0).abs() < 0.05);
+        // iid: ESS close to the pooled count
+        assert!(c.ess > 15_000.0, "ess {}", c.ess);
+        assert!((c.rhat - 1.0).abs() < 0.02);
+        let empty = cross_chain(&[]);
+        assert!(empty.pooled_mean.is_nan() && empty.n_samples == 0);
+    }
+}

@@ -1,8 +1,11 @@
 //! Evaluation metrics: risk-vs-time curves, predictive means, ground
-//! truth estimation — the measurement half of every §6 figure.
+//! truth estimation, cross-chain convergence diagnostics — the
+//! measurement half of every §6 figure and of the multi-chain engine.
 
+pub mod convergence;
 pub mod predictive;
 pub mod risk;
 
+pub use convergence::{cross_chain, split_rhat, Convergence};
 pub use predictive::PredictiveMean;
 pub use risk::{risk_curve, Checkpoints, RiskCurve};

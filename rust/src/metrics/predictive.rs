@@ -39,6 +39,16 @@ impl PredictiveMean {
         self.count += 1;
     }
 
+    /// Merge another accumulator over the same test panel (per-chain
+    /// accumulators from the parallel engine combine into one estimate).
+    pub fn merge(&mut self, other: &PredictiveMean) {
+        assert_eq!(other.sums.len(), self.sums.len(), "panel size mismatch");
+        for (s, o) in self.sums.iter_mut().zip(&other.sums) {
+            *s += o;
+        }
+        self.count += other.count;
+    }
+
     /// Current estimate per test point.
     pub fn mean(&self) -> Vec<f64> {
         assert!(self.count > 0, "no samples accumulated");
@@ -93,5 +103,26 @@ mod tests {
     #[should_panic]
     fn empty_mean_panics() {
         PredictiveMean::new(2).mean();
+    }
+
+    #[test]
+    fn merge_equals_sequential_accumulation() {
+        let mut whole = PredictiveMean::new(2);
+        let mut a = PredictiveMean::new(2);
+        let mut b = PredictiveMean::new(2);
+        for i in 0..10 {
+            let v = [0.1 * i as f64, 1.0 - 0.05 * i as f64];
+            whole.add(&v);
+            if i % 2 == 0 {
+                a.add(&v);
+            } else {
+                b.add(&v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        let (ma, mw) = (a.mean(), whole.mean());
+        assert!((ma[0] - mw[0]).abs() < 1e-12);
+        assert!((ma[1] - mw[1]).abs() < 1e-12);
     }
 }

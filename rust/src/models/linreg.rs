@@ -6,7 +6,7 @@
 //! creating the low-density valley that throws uncorrected SGLD off.
 
 use crate::data::Dataset;
-use crate::models::traits::LlDiffModel;
+use crate::models::traits::{CachedLlDiff, LlDiffModel};
 
 pub struct LinRegModel {
     data: Dataset,
@@ -106,6 +106,86 @@ impl LlDiffModel for LinRegModel {
     }
 }
 
+/// Per-chain cache of the squared residuals `(y_i - theta_cur x_i)^2`
+/// with lazy revalidation (mirrors `LogisticCache`): fresh entries save
+/// the current-side residual, stale ones are recomputed on read, and an
+/// accepted step costs only an O(N) stamp sweep.
+pub struct LinRegCache {
+    theta_cur: f64,
+    /// `sq_cur[i]` is valid iff `cur_ver[i] == version`
+    sq_cur: Vec<f64>,
+    cur_ver: Vec<u64>,
+    version: u64,
+    sq_prop: Vec<f64>,
+    stamp: Vec<u64>,
+    step: u64,
+}
+
+impl CachedLlDiff for LinRegModel {
+    type Cache = LinRegCache;
+
+    fn init_cache(&self, cur: &f64) -> LinRegCache {
+        let n = self.n();
+        LinRegCache {
+            theta_cur: *cur,
+            sq_cur: vec![0.0; n],
+            cur_ver: vec![0; n],
+            version: 1,
+            sq_prop: vec![0.0; n],
+            stamp: vec![0; n],
+            step: 0,
+        }
+    }
+
+    fn begin_step(&self, cache: &mut LinRegCache) {
+        cache.step += 1;
+    }
+
+    fn cached_moments(&self, cache: &mut LinRegCache, idx: &[usize], prop: &f64) -> (f64, f64) {
+        let half_lam = 0.5 * self.lam;
+        let step = cache.step;
+        let version = cache.version;
+        let theta_cur = cache.theta_cur;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for &i in idx {
+            let x = self.data.row(i)[0];
+            let y = self.data.label(i);
+            let sq_c = if cache.cur_ver[i] == version {
+                cache.sq_cur[i]
+            } else {
+                let rc = y - theta_cur * x;
+                let sq = rc * rc;
+                cache.sq_cur[i] = sq;
+                cache.cur_ver[i] = version;
+                sq
+            };
+            let rp = y - prop * x;
+            let sq_p = rp * rp;
+            cache.sq_prop[i] = sq_p;
+            cache.stamp[i] = step;
+            let l = -half_lam * (sq_p - sq_c);
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
+
+    fn end_step(&self, cache: &mut LinRegCache, prop: &f64, accepted: bool) {
+        if !accepted {
+            return;
+        }
+        cache.theta_cur = *prop;
+        cache.version += 1;
+        let (step, version) = (cache.step, cache.version);
+        for i in 0..self.n() {
+            if cache.stamp[i] == step {
+                cache.sq_cur[i] = cache.sq_prop[i];
+                cache.cur_ver[i] = version;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +224,33 @@ mod tests {
             }
             assert!((s - ws).abs() < 1e-9);
             assert!((s2 - ws2).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn cached_moments_bit_identical_to_uncached() {
+        let m = model();
+        testkit::forall(32, |rng| {
+            let cur = rng.normal_scaled(0.3, 0.2);
+            let prop = rng.normal_scaled(0.3, 0.2);
+            let k = rng.below(200) + 1;
+            let idx: Vec<usize> = (0..k).map(|_| rng.below(2000)).collect();
+            let mut cache = m.init_cache(&cur);
+            m.begin_step(&mut cache);
+            let cached = m.cached_moments(&mut cache, &idx, &prop);
+            let plain = m.lldiff_moments(&idx, &cur, &prop);
+            assert_eq!(cached.0.to_bits(), plain.0.to_bits());
+            assert_eq!(cached.1.to_bits(), plain.1.to_bits());
+            // accept, then a full-population probe must still be
+            // bit-identical to the uncached pass from the new parameter
+            m.end_step(&mut cache, &prop, true);
+            let all: Vec<usize> = (0..m.n()).collect();
+            let probe = prop + 0.01;
+            m.begin_step(&mut cache);
+            let cached = m.cached_moments(&mut cache, &all, &probe);
+            let plain = m.lldiff_moments(&all, &prop, &probe);
+            assert_eq!(cached.0.to_bits(), plain.0.to_bits());
+            assert_eq!(cached.1.to_bits(), plain.1.to_bits());
         });
     }
 

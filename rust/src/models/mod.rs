@@ -10,9 +10,9 @@ pub mod rjlogistic;
 pub mod traits;
 
 pub use ica::IcaModel;
-pub use linreg::LinRegModel;
-pub use logistic::LogisticModel;
+pub use linreg::{LinRegCache, LinRegModel};
+pub use logistic::{LogisticCache, LogisticModel};
 pub use mrf::MrfModel;
 pub use potts::PottsModel;
 pub use rjlogistic::{RjLogisticModel, RjState};
-pub use traits::{LlDiffModel, Proposal, ProposalKernel};
+pub use traits::{CachedLlDiff, LlDiffModel, Proposal, ProposalKernel};

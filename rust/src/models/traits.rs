@@ -7,6 +7,36 @@
 //! backends (pure Rust here, PJRT-executed Pallas in `runtime`) provide
 //! the `lldiff_moments` implementation.
 
+/// Chunk length for full-population scans. Matches the batch capacity of
+/// the AOT Pallas kernels so the chunked scan maps 1:1 onto kernel
+/// dispatches on the PJRT backend, and keeps the index buffer small
+/// enough to stay resident in L1.
+pub const FULL_SCAN_CHUNK: usize = 512;
+
+/// Chunked full-population scan shared by the cached and uncached exact
+/// paths: streams `0..n` through `buf` in `FULL_SCAN_CHUNK` pieces and
+/// sums the per-chunk moments. Both paths MUST go through this one
+/// driver — identical chunking and accumulation order is what makes
+/// their results bit-identical by construction.
+pub fn full_scan_moments<F: FnMut(&[usize]) -> (f64, f64)>(
+    n: usize,
+    buf: &mut Vec<usize>,
+    mut moments: F,
+) -> (f64, f64) {
+    let (mut s, mut s2) = (0.0, 0.0);
+    let mut start = 0usize;
+    while start < n {
+        let take = FULL_SCAN_CHUNK.min(n - start);
+        buf.clear();
+        buf.extend(start..start + take);
+        let (bs, bs2) = moments(buf);
+        s += bs;
+        s2 += bs2;
+        start += take;
+    }
+    (s, s2)
+}
+
 /// A target posterior whose likelihood factorizes over `n()` datapoints.
 pub trait LlDiffModel {
     /// Parameter state of the Markov chain.
@@ -34,22 +64,81 @@ pub trait LlDiffModel {
         (s, s2)
     }
 
+    /// Full-population moments, streamed through `buf` in
+    /// `FULL_SCAN_CHUNK`-sized chunks so the exact-MH path never
+    /// materializes a length-N index vector. Callers on the hot path
+    /// (`MhScratch`) reuse one buffer across steps, so the steady state
+    /// allocates nothing.
+    fn full_moments_buf(
+        &self,
+        cur: &Self::Param,
+        prop: &Self::Param,
+        buf: &mut Vec<usize>,
+    ) -> (f64, f64) {
+        full_scan_moments(self.n(), buf, |idx| self.lldiff_moments(idx, cur, prop))
+    }
+
     /// Population mean `mu = (1/N) sum_i l_i` (exact MH path).
     fn full_mean(&self, cur: &Self::Param, prop: &Self::Param) -> f64 {
-        let idx: Vec<usize> = (0..self.n()).collect();
-        let (s, _) = self.lldiff_moments(&idx, cur, prop);
+        let mut buf = Vec::with_capacity(FULL_SCAN_CHUNK.min(self.n()));
+        let (s, _) = self.full_moments_buf(cur, prop, &mut buf);
         s / self.n() as f64
     }
 
     /// Population std sigma_l of the l_i (used by the error analysis /
     /// test design, not by the sampler itself).
     fn full_std(&self, cur: &Self::Param, prop: &Self::Param) -> f64 {
-        let idx: Vec<usize> = (0..self.n()).collect();
-        let (s, s2) = self.lldiff_moments(&idx, cur, prop);
+        let mut buf = Vec::with_capacity(FULL_SCAN_CHUNK.min(self.n()));
+        let (s, s2) = self.full_moments_buf(cur, prop, &mut buf);
         let n = self.n() as f64;
         let mean = s / n;
         ((s2 / n - mean * mean).max(0.0)).sqrt()
     }
+}
+
+/// State-caching fast path: models that can keep per-datapoint sufficient
+/// statistics of the *current* parameter alive across MH steps, so each
+/// accept/reject test only computes the proposal side (roughly half the
+/// FLOPs of the uncached `lldiff_moments`).
+///
+/// Step protocol (enforced by `mh_step_cached` / `run_chain_cached`):
+///
+/// 1. `init_cache(theta_init)` once per chain;
+/// 2. per MH step: `begin_step`, then any number of `cached_moments`
+///    calls over disjoint index sets (the proposal is fixed within a
+///    step), then exactly one `end_step` with the decision;
+/// 3. after an accepted step the cache reflects `prop` as the new
+///    current parameter; after a reject it is unchanged (the win: a
+///    rejected step costs nothing beyond the proposal-side evaluations).
+///
+/// Contract: for identical inputs, `cached_moments` must return exactly
+/// the same bits as `lldiff_moments`, so a cached chain makes decisions
+/// bit-identical to an uncached one (regression-tested).
+pub trait CachedLlDiff: LlDiffModel {
+    /// Per-chain cache state (owned by the chain, not the model, so
+    /// parallel chains over one shared model never contend).
+    type Cache: Send;
+
+    /// Build a cache holding the current-side statistics of `cur`.
+    fn init_cache(&self, cur: &Self::Param) -> Self::Cache;
+
+    /// Open a new MH step (invalidates proposal-side entries of the
+    /// previous step via a stamp bump; O(1)).
+    fn begin_step(&self, cache: &mut Self::Cache);
+
+    /// Mini-batch moments over `idx` against the cached current state,
+    /// recording the proposal-side statistics for `idx` in the cache.
+    fn cached_moments(
+        &self,
+        cache: &mut Self::Cache,
+        idx: &[usize],
+        prop: &Self::Param,
+    ) -> (f64, f64);
+
+    /// Close the step: on accept, swap in proposal-side statistics for
+    /// every index touched this step and recompute the rest; on reject,
+    /// do nothing.
+    fn end_step(&self, cache: &mut Self::Cache, prop: &Self::Param, accepted: bool);
 }
 
 /// A proposed move plus the proposal/prior correction that enters mu_0:
@@ -117,6 +206,23 @@ mod tests {
         let m = FixedPopulation { ls: vec![1.0, 3.0] };
         assert!((m.full_mean(&(), &()) - 2.0).abs() < 1e-12);
         assert!((m.full_std(&(), &()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunked_full_scan_matches_direct_sum() {
+        // population larger than one chunk: the chunked scan must cover
+        // every index exactly once.
+        let mut rng = crate::stats::Pcg64::seeded(9);
+        let ls: Vec<f64> = (0..(2 * FULL_SCAN_CHUNK + 37)).map(|_| rng.normal()).collect();
+        let want_s: f64 = ls.iter().sum();
+        let want_s2: f64 = ls.iter().map(|l| l * l).sum();
+        let m = FixedPopulation { ls };
+        let mut buf = Vec::new();
+        let (s, s2) = m.full_moments_buf(&(), &(), &mut buf);
+        assert!((s - want_s).abs() < 1e-9, "{s} vs {want_s}");
+        assert!((s2 - want_s2).abs() < 1e-9);
+        assert!(buf.len() <= FULL_SCAN_CHUNK, "buffer stays chunk-sized");
+        assert!((m.full_mean(&(), &()) - want_s / m.n() as f64).abs() < 1e-12);
     }
 
     #[test]

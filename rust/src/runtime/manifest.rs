@@ -5,7 +5,9 @@
 //!   <name> <file> in=<arg>:<dtype>:<d0>x<d1>,... out=<dtype>:<dims>,...
 //! dims are `x`-separated or the literal `scalar`.
 
-use anyhow::{bail, Context, Result};
+use super::RuntimeError;
+
+type Result<T> = std::result::Result<T, RuntimeError>;
 
 /// Shape of one tensor in an artifact signature.
 #[derive(Clone, Debug, PartialEq)]
@@ -36,7 +38,10 @@ fn parse_dims(s: &str) -> Result<Vec<usize>> {
         return Ok(Vec::new());
     }
     s.split('x')
-        .map(|d| d.parse::<usize>().context("bad dim"))
+        .map(|d| {
+            d.parse::<usize>()
+                .map_err(|_| RuntimeError::new(format!("bad dim {d:?}")))
+        })
         .collect()
 }
 
@@ -53,7 +58,7 @@ fn parse_tensor(part: &str, with_name: bool) -> Result<TensorSpec> {
             dtype: dtype.to_string(),
             dims: parse_dims(dims)?,
         }),
-        _ => bail!("malformed tensor spec: {part}"),
+        _ => Err(RuntimeError::new(format!("malformed tensor spec: {part}"))),
     }
 }
 
@@ -67,14 +72,18 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
         }
         let fields: Vec<&str> = line.split_whitespace().collect();
         if fields.len() != 4 {
-            bail!("manifest line {}: expected 4 fields, got {}", lineno + 1, fields.len());
+            return Err(RuntimeError::new(format!(
+                "manifest line {}: expected 4 fields, got {}",
+                lineno + 1,
+                fields.len()
+            )));
         }
         let ins = fields[2]
             .strip_prefix("in=")
-            .with_context(|| format!("line {}: missing in=", lineno + 1))?;
+            .ok_or_else(|| RuntimeError::new(format!("line {}: missing in=", lineno + 1)))?;
         let outs = fields[3]
             .strip_prefix("out=")
-            .with_context(|| format!("line {}: missing out=", lineno + 1))?;
+            .ok_or_else(|| RuntimeError::new(format!("line {}: missing out=", lineno + 1)))?;
         specs.push(ArtifactSpec {
             name: fields[0].to_string(),
             file: fields[1].to_string(),
@@ -94,8 +103,9 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
 /// Load and parse `<dir>/manifest.txt`.
 pub fn load_manifest(dir: &std::path::Path) -> Result<Vec<ArtifactSpec>> {
     let path = dir.join("manifest.txt");
-    let text = std::fs::read_to_string(&path)
-        .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        RuntimeError::new(format!("reading {path:?} (run `make artifacts` first): {e}"))
+    })?;
     parse_manifest(&text)
 }
 

@@ -1,12 +1,50 @@
-//! AOT artifact execution through the PJRT C API (the `xla` crate):
-//! manifest parsing, executable cache, and `LlDiffModel` backends that
-//! serve moments from the compiled Pallas kernels. Python never runs
-//! here — artifacts are loaded from `artifacts/*.hlo.txt`.
+//! AOT artifact execution through the PJRT C API: manifest parsing,
+//! executable cache, and `LlDiffModel` backends that serve moments from
+//! the compiled Pallas kernels. Python never runs here — artifacts are
+//! loaded from `artifacts/*.hlo.txt`.
+//!
+//! The real runtime needs the `xla` (PJRT bindings) and `anyhow` crates,
+//! which only exist in the internal artifact environment; it is compiled
+//! under the `pjrt` feature, and enabling that feature also requires
+//! declaring those two crates in Cargo.toml (see the note there).
+//! Without the feature a stub with the same API is built:
+//! `PjrtRuntime::available()` is false and `new` always errors, so
+//! callers gate on availability before touching artifacts.
 
-pub mod backend;
 pub mod manifest;
-pub mod pjrt;
 
-pub use backend::{PjrtIca, PjrtLogistic, PjrtPredictor};
+#[cfg(feature = "pjrt")]
+pub mod backend;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+
 pub use manifest::{load_manifest, parse_manifest, ArtifactSpec, TensorSpec};
+
+#[cfg(feature = "pjrt")]
+pub use backend::{PjrtIca, PjrtLogistic, PjrtPredictor};
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtRuntime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{PjrtIca, PjrtLogistic, PjrtPredictor, PjrtRuntime};
+
+/// Error type of the dependency-free runtime surface (manifest parsing
+/// and the stub). Implements `std::error::Error`, so it converts into
+/// `anyhow::Error` transparently when the real runtime is compiled.
+#[derive(Clone, Debug)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        RuntimeError(msg.into())
+    }
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}

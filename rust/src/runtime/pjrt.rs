@@ -27,6 +27,12 @@ pub struct PjrtRuntime {
 }
 
 impl PjrtRuntime {
+    /// Whether this build can execute PJRT artifacts at all (true: the
+    /// `pjrt` feature compiled the real runtime).
+    pub fn available() -> bool {
+        true
+    }
+
     /// Create a CPU client and read the manifest in `dir`.
     pub fn new(dir: &Path) -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;

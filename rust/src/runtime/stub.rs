@@ -1,0 +1,158 @@
+//! Stub runtime compiled when the `pjrt` feature is off (the default in
+//! offline builds, where the `xla` PJRT bindings are unavailable).
+//!
+//! Mirrors the public API of `runtime::{pjrt,backend}` so every caller
+//! compiles unchanged; `PjrtRuntime::available()` is `false` and
+//! `PjrtRuntime::new` always errors, which makes the backends
+//! unconstructible. Callers must gate on `available()` (not just on the
+//! artifacts being present on disk) before constructing the runtime.
+//! The `LlDiffModel` impls delegate to the native models, so even
+//! hypothetical use stays semantically correct.
+
+use std::path::{Path, PathBuf};
+
+use super::manifest::ArtifactSpec;
+use super::RuntimeError;
+use crate::models::traits::LlDiffModel;
+use crate::models::{IcaModel, LogisticModel};
+
+type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(RuntimeError::new(
+        "PJRT runtime not compiled in: rebuild with `--features pjrt` in an \
+         environment providing the `xla` crate (see DESIGN.md §Layers)",
+    ))
+}
+
+/// Stub of the PJRT CPU runtime: construction always fails.
+pub struct PjrtRuntime {
+    _private: (),
+}
+
+impl PjrtRuntime {
+    /// Whether this build can execute PJRT artifacts at all (false: the
+    /// `pjrt` feature is off and this is the stub).
+    pub fn available() -> bool {
+        false
+    }
+
+    pub fn new(_dir: &Path) -> Result<Self> {
+        unavailable()
+    }
+
+    /// Default artifact directory (repo-root `artifacts/`); kept so the
+    /// "artifacts present?" gates in examples/benches still work.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("AUSTERITY_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    pub fn spec(&self, _name: &str) -> Option<&ArtifactSpec> {
+        None
+    }
+
+    pub fn exec(&mut self, _name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        unavailable()
+    }
+}
+
+/// Stub logistic backend; delegates to the native model.
+pub struct PjrtLogistic<'a> {
+    model: &'a LogisticModel,
+}
+
+impl<'a> PjrtLogistic<'a> {
+    pub fn new(_model: &'a LogisticModel, _rt: PjrtRuntime) -> Result<Self> {
+        unavailable()
+    }
+
+    pub fn batch_capacity(&self) -> usize {
+        0
+    }
+}
+
+impl<'a> LlDiffModel for PjrtLogistic<'a> {
+    type Param = Vec<f64>;
+
+    fn n(&self) -> usize {
+        self.model.n()
+    }
+
+    fn lldiff(&self, i: usize, cur: &Vec<f64>, prop: &Vec<f64>) -> f64 {
+        self.model.lldiff(i, cur, prop)
+    }
+
+    fn lldiff_moments(&self, idx: &[usize], cur: &Vec<f64>, prop: &Vec<f64>) -> (f64, f64) {
+        self.model.lldiff_moments(idx, cur, prop)
+    }
+}
+
+/// Stub ICA backend; delegates to the native model.
+pub struct PjrtIca<'a> {
+    model: &'a IcaModel,
+}
+
+impl<'a> PjrtIca<'a> {
+    pub fn new(_model: &'a IcaModel, _rt: PjrtRuntime) -> Result<Self> {
+        unavailable()
+    }
+}
+
+impl<'a> LlDiffModel for PjrtIca<'a> {
+    type Param = crate::data::Mat;
+
+    fn n(&self) -> usize {
+        self.model.n()
+    }
+
+    fn lldiff(&self, i: usize, cur: &Self::Param, prop: &Self::Param) -> f64 {
+        self.model.lldiff(i, cur, prop)
+    }
+
+    fn lldiff_moments(&self, idx: &[usize], cur: &Self::Param, prop: &Self::Param) -> (f64, f64) {
+        self.model.lldiff_moments(idx, cur, prop)
+    }
+}
+
+/// Stub predictive-panel backend.
+pub struct PjrtPredictor {
+    _private: (),
+}
+
+impl PjrtPredictor {
+    pub fn new(_rt: PjrtRuntime) -> Result<Self> {
+        unavailable()
+    }
+
+    pub fn predict(&self, _rows: &[&[f64]], _theta: &[f64]) -> Result<Vec<f64>> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_construction_fails_with_guidance() {
+        let err = PjrtRuntime::new(&PjrtRuntime::default_dir()).err().unwrap();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn default_dir_respects_env_override() {
+        // don't mutate the env (tests run in parallel): just check shape
+        let d = PjrtRuntime::default_dir();
+        assert!(d.as_os_str().len() > 0);
+    }
+}
