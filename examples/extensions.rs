@@ -1,4 +1,5 @@
-//! The beyond-the-paper extensions in one tour:
+//! The beyond-the-paper extensions in one tour — every one a
+//! `TransitionKernel` on the multi-chain engine:
 //!   1. adaptive epsilon (paper §7 future work): anneal the bias knob
 //!   2. the pseudo-marginal baseline the paper argues against (§4)
 //!   3. multi-valued Gibbs via Gumbel-max tournaments (supp. F extension)
@@ -6,10 +7,10 @@
 //! Run: cargo run --release --example extensions
 
 use austerity::coordinator::adaptive::{run_adaptive_chain, EpsSchedule};
-use austerity::coordinator::{run_engine_cached, Budget, EngineConfig, MhMode};
+use austerity::coordinator::{run_engine_cached, run_engine_kernel, Budget, EngineConfig, MhMode};
 use austerity::models::{LlDiffModel, PottsModel};
-use austerity::samplers::gibbs_potts::{potts_sweep, PottsMode, PottsScratch, PottsStats};
-use austerity::samplers::pseudo_marginal::{run_pseudo_marginal, PoissonEstimator};
+use austerity::samplers::gibbs_potts::{PottsMode, PottsSweepKernel};
+use austerity::samplers::pseudo_marginal::{PmKernel, PmPathology, PoissonEstimator};
 use austerity::samplers::GaussianRandomWalk;
 use austerity::stats::Pcg64;
 
@@ -40,8 +41,15 @@ fn main() {
     // ---- 2. pseudo-marginal baseline ------------------------------------
     println!("\n2. pseudo-marginal (Poisson estimator) vs sequential test");
     let est = PoissonEstimator { batch: 100, lambda: 3.0, center: 0.0 };
-    let mut rng = Pcg64::seeded(2);
-    let pm = run_pseudo_marginal(&model, &kernel, &est, init.clone(), 400, &mut rng, |_| {});
+    let pm_kernel = PmKernel::new(&model, &kernel, &est, init.clone());
+    let pm_res = run_engine_kernel(
+        &pm_kernel,
+        pm_kernel.init_state(),
+        &EngineConfig::new(1, 2, Budget::Steps(400)),
+        |_c| PmPathology::default(),
+    );
+    let pm = &pm_res.merged;
+    let path = &pm_res.observers[0];
     let seq_res = run_engine_cached(
         &model,
         &kernel,
@@ -53,9 +61,9 @@ fn main() {
     let seq = seq_res.merged;
     println!(
         "   pseudo-marginal: accept {:.2}, longest stuck run {} steps, {:.0}% estimates clamped",
-        pm.accepted as f64 / pm.steps as f64,
-        pm.longest_stuck,
-        100.0 * pm.clamped as f64 / pm.steps as f64,
+        pm.acceptance_rate(),
+        path.longest_stuck,
+        100.0 * path.clamped as f64 / pm.steps as f64,
     );
     println!(
         "   sequential test: accept {:.2} — exact-but-stuck vs biased-but-mixing (paper §4)",
@@ -65,22 +73,23 @@ fn main() {
     // ---- 3. multi-valued Gibbs ------------------------------------------
     println!("\n3. K=3 Potts Gibbs via Gumbel-max tournaments of sequential tests");
     let potts = PottsModel::random(60, 3, 0.03, 7);
+    let mut rng = Pcg64::seeded(3);
+    let x0: Vec<usize> = (0..60).map(|_| rng.below(3)).collect();
     for (label, mode) in [
         ("exact      ", PottsMode::Exact),
         ("approx e=.1", PottsMode::Approx { eps: 0.1, batch: 300 }),
     ] {
-        let mut rng = Pcg64::seeded(3);
-        let mut x: Vec<usize> = (0..60).map(|_| rng.below(3)).collect();
-        let mut scratch = PottsScratch::new(&potts);
-        let mut stats = PottsStats::default();
-        let t0 = std::time::Instant::now();
-        for _ in 0..50 {
-            potts_sweep(&potts, &mut x, &mode, &mut scratch, &mut stats, &mut rng);
-        }
+        let sweep_kernel = PottsSweepKernel { model: &potts, mode };
+        let res = run_engine_kernel(
+            &sweep_kernel,
+            x0.clone(),
+            &EngineConfig::new(2, 3, Budget::Steps(25)),
+            |_c| |x: &Vec<usize>| x.iter().filter(|&&s| s == 0).count() as f64 / x.len() as f64,
+        );
         println!(
             "   {label}: {:.1} sweeps/s, {:.0} pair-evals/update",
-            50.0 / t0.elapsed().as_secs_f64(),
-            stats.pairs_used as f64 / stats.updates as f64
+            res.steps_per_sec(),
+            res.merged.data_used as f64 / (res.merged.steps * potts.d()) as f64,
         );
     }
 }

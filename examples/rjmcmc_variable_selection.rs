@@ -11,7 +11,9 @@ use austerity::models::rjlogistic::{RjLogisticModel, RjState};
 use austerity::models::LlDiffModel;
 use austerity::samplers::RjKernel;
 
-/// Per-chain accumulator of inclusion counts and model size.
+/// Per-chain accumulator of inclusion counts and model size. The
+/// recorded scalar is k, so the engine's cross-chain R-hat / ESS come
+/// out of the same launch.
 struct SupportObserver {
     incl: Vec<u64>,
     ks: u64,
@@ -25,7 +27,7 @@ impl ChainObserver<RjState> for SupportObserver {
         }
         self.ks += s.k() as u64;
         self.count += 1;
-        0.0
+        s.k() as f64
     }
 }
 
@@ -75,11 +77,13 @@ fn main() {
         let hit = picked.iter().filter(|j| truly_active.contains(j)).count();
         println!(
             "{label}: top-5 features {picked:?} ({hit}/5 correct) | mean k {:.1} | \
-             accept {:.2} | data/test {:.3} | {:.0} steps/s",
+             accept {:.2} | data/test {:.3} | {:.0} steps/s | rhat(k) {:.2} ess {:.0}",
             ks as f64 / count.max(1) as f64,
             res.merged.acceptance_rate(),
             res.merged.mean_data_fraction(model.n()),
-            res.merged.steps as f64 / secs
+            res.merged.steps as f64 / secs,
+            res.convergence.rhat,
+            res.convergence.ess,
         );
     }
 }

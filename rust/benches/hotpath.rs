@@ -19,11 +19,15 @@ use std::time::Instant;
 
 use austerity::coordinator::austerity::{seq_mh_test, SeqTestConfig};
 use austerity::coordinator::dp::analyze_pocock;
-use austerity::coordinator::engine::{run_engine_cached, EngineConfig};
+use austerity::coordinator::engine::{run_engine_cached, run_engine_kernel, EngineConfig};
 use austerity::coordinator::scheduler::MinibatchScheduler;
 use austerity::coordinator::{mh_step, mh_step_cached, Budget, MhMode, MhScratch};
+use austerity::data::synthetic::linreg_toy;
 use austerity::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
+use austerity::models::{LinRegModel, MrfModel};
 use austerity::runtime::{PjrtLogistic, PjrtRuntime};
+use austerity::samplers::gibbs::{GibbsMode, GibbsSweepKernel};
+use austerity::samplers::sgld::{SgldConfig, SgldKernel};
 use austerity::stats::student_t::t_sf;
 use austerity::stats::Pcg64;
 
@@ -206,6 +210,42 @@ fn main() {
                 "below 0.7x ideal"
             }
         );
+    }
+
+    println!("\n-- L3 engine kernels (ported families via TransitionKernel) --");
+    // corrected SGLD on the §6.4 toy: gradient batch + first-batch test
+    let toy = LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0);
+    let sgld_kernel = SgldKernel {
+        model: &toy,
+        cfg: SgldConfig {
+            alpha: 5e-6,
+            grad_batch: 500,
+            correction: Some(SeqTestConfig::new(0.5, 500)),
+        },
+    };
+    for k in [1usize, 4] {
+        let ecfg = EngineConfig::new(k, 23, Budget::Steps(400));
+        let _ = run_engine_kernel(&sgld_kernel, 0.45f64, &ecfg, |_c| |t: &f64| *t);
+        let t0 = Instant::now();
+        let res = run_engine_kernel(&sgld_kernel, 0.45f64, &ecfg, |_c| |t: &f64| *t);
+        let sps = res.merged.steps as f64 / t0.elapsed().as_secs_f64();
+        rec.record(&format!("engine_steps_per_sec_sgld_k{k}"), sps);
+        println!("sgld  k={k}: {sps:>9.1} steps/s");
+    }
+    // approximate Gibbs sweeps on a dense binary MRF (supp. F)
+    let mrf = MrfModel::random(60, 0.02, 1);
+    let gibbs_kernel =
+        GibbsSweepKernel { model: &mrf, mode: GibbsMode::Approx { eps: 0.1, batch: 500 } };
+    let frac_ones = |x: &Vec<bool>| x.iter().filter(|&&b| b).count() as f64 / x.len() as f64;
+    let x0: Vec<bool> = (0..60).map(|i| i % 2 == 0).collect();
+    for k in [1usize, 4] {
+        let ecfg = EngineConfig::new(k, 24, Budget::Steps(40));
+        let _ = run_engine_kernel(&gibbs_kernel, x0.clone(), &ecfg, |_c| frac_ones);
+        let t0 = Instant::now();
+        let res = run_engine_kernel(&gibbs_kernel, x0.clone(), &ecfg, |_c| frac_ones);
+        let sps = res.merged.steps as f64 / t0.elapsed().as_secs_f64();
+        rec.record(&format!("engine_steps_per_sec_gibbs_k{k}"), sps);
+        println!("gibbs k={k}: {sps:>9.1} sweeps/s");
     }
 
     println!("\n-- L3 substrate --");

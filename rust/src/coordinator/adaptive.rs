@@ -16,9 +16,8 @@
 //! per step. The ablation bench (`exp::ablation`) compares fixed
 //! epsilons against the schedule on the logistic risk curve.
 
-use std::time::{Duration, Instant};
-
-use crate::coordinator::chain::{Budget, ChainStats, Sample};
+use crate::coordinator::chain::{drive_chain, Budget, ChainStats, Sample};
+use crate::coordinator::kernel::{StepOutcome, TransitionKernel};
 use crate::coordinator::mh::{mh_step, MhMode, MhScratch};
 use crate::models::traits::{LlDiffModel, ProposalKernel};
 use crate::stats::Pcg64;
@@ -48,6 +47,51 @@ impl EpsSchedule {
     }
 }
 
+/// The adaptive-epsilon MH family as a `TransitionKernel`: the test's
+/// error knob is re-armed per step from the schedule (the step counter
+/// lives in the chain-local scratch, so parallel chains anneal
+/// independently and deterministically).
+pub struct AdaptiveMhKernel<'a, M, K> {
+    pub model: &'a M,
+    pub proposal: &'a K,
+    pub schedule: &'a EpsSchedule,
+    /// Sequential-test mini-batch increment m.
+    pub batch: usize,
+}
+
+/// Per-chain scratch: the usual MH workspace plus the step counter the
+/// schedule is evaluated at.
+pub struct AdaptiveScratch {
+    mh: MhScratch,
+    step: usize,
+}
+
+impl<M, K> TransitionKernel for AdaptiveMhKernel<'_, M, K>
+where
+    M: LlDiffModel,
+    K: ProposalKernel<M::Param>,
+{
+    type State = M::Param;
+    type Scratch = AdaptiveScratch;
+
+    fn scratch(&self, _init: &M::Param) -> AdaptiveScratch {
+        AdaptiveScratch { mh: MhScratch::new(self.model.n()), step: 0 }
+    }
+
+    fn step(
+        &self,
+        state: &mut M::Param,
+        scratch: &mut AdaptiveScratch,
+        rng: &mut Pcg64,
+    ) -> StepOutcome {
+        let mode = MhMode::approx(self.schedule.eps_at(scratch.step), self.batch);
+        scratch.step += 1;
+        let proposal = self.proposal.propose(state, rng);
+        let info = mh_step(self.model, state, proposal, &mode, &mut scratch.mh, rng);
+        StepOutcome { accepted: info.accepted, data_used: info.n_used as u64 }
+    }
+}
+
 /// `run_chain` with a per-step epsilon schedule.
 #[allow(clippy::too_many_arguments)]
 pub fn run_adaptive_chain<M, K, F>(
@@ -59,7 +103,7 @@ pub fn run_adaptive_chain<M, K, F>(
     budget: Budget,
     burn_in: usize,
     thin: usize,
-    mut f: F,
+    f: F,
     rng: &mut Pcg64,
 ) -> (Vec<Sample>, ChainStats)
 where
@@ -67,43 +111,15 @@ where
     K: ProposalKernel<M::Param>,
     F: FnMut(&M::Param) -> f64,
 {
-    assert!(thin >= 1);
-    let mut scratch = MhScratch::new(model.n());
-    let mut cur = init;
-    let mut stats = ChainStats::default();
-    let mut samples = Vec::new();
-    let start = Instant::now();
-
-    loop {
-        match budget {
-            Budget::Steps(s) => {
-                if stats.steps >= s {
-                    break;
-                }
-            }
-            Budget::Wall(d) => {
-                if start.elapsed() >= d {
-                    break;
-                }
-            }
-        }
-        let mode = MhMode::approx(schedule.eps_at(stats.steps), batch);
-        let proposal = kernel.propose(&cur, rng);
-        let info = mh_step(model, &mut cur, proposal, &mode, &mut scratch, rng);
-        stats.steps += 1;
-        stats.accepted += info.accepted as usize;
-        stats.data_used += info.n_used as u64;
-        if stats.steps > burn_in && (stats.steps - burn_in) % thin == 0 {
-            samples.push(Sample {
-                value: f(&cur),
-                at_secs: start.elapsed().as_secs_f64(),
-                at_data: stats.data_used,
-            });
-        }
-    }
-    stats.wall = start.elapsed();
-    let _ = Duration::from_secs(0);
-    (samples, stats)
+    drive_chain(
+        &AdaptiveMhKernel { model, proposal: kernel, schedule, batch },
+        init,
+        budget,
+        burn_in,
+        thin,
+        f,
+        rng,
+    )
 }
 
 #[cfg(test)]

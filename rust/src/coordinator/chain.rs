@@ -1,11 +1,13 @@
-//! Markov-chain driver: runs proposal kernel + MH test for a step or
-//! time budget, collecting test-function values, acceptance and data-use
-//! statistics — the harness every experiment in §6 runs on.
+//! Markov-chain driver: advances any `TransitionKernel` under a step,
+//! wall-clock or datapoint budget, collecting test-function values,
+//! acceptance and data-use statistics — the harness every experiment in
+//! §6 (and supp. E/F) runs on.
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::mh::{mh_step, mh_step_cached, MhMode, MhScratch, StepInfo};
-use crate::models::traits::{CachedLlDiff, LlDiffModel, Proposal, ProposalKernel};
+use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
+use crate::coordinator::mh::MhMode;
+use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
 use crate::stats::Pcg64;
 
 /// Summary statistics of one chain run.
@@ -13,7 +15,8 @@ use crate::stats::Pcg64;
 pub struct ChainStats {
     pub steps: usize,
     pub accepted: usize,
-    /// Total datapoint likelihood evaluations consumed by MH tests.
+    /// Total datapoint likelihood (or potential-pair) evaluations
+    /// consumed by the kernel's decisions.
     pub data_used: u64,
     pub wall: Duration,
 }
@@ -40,8 +43,16 @@ impl ChainStats {
 /// Stop condition for a run.
 #[derive(Clone, Copy, Debug)]
 pub enum Budget {
+    /// Stop after this many transitions.
     Steps(usize),
+    /// Stop once this much wall-clock time has elapsed (inherently
+    /// timing-dependent; use `Data` for reproducible cost budgets).
     Wall(Duration),
+    /// Stop once the chain has consumed this many cumulative datapoint
+    /// evaluations — the natural x-axis of the paper's risk-vs-cost
+    /// curves, and deterministic unlike wall budgets. The step that
+    /// crosses the budget completes; no further step starts.
+    Data(u64),
 }
 
 /// A recorded sample: the test-function value and the cumulative cost at
@@ -55,26 +66,25 @@ pub struct Sample {
     pub at_data: u64,
 }
 
-/// The single chain loop behind both `run_chain` variants: budget check,
-/// propose, step, burn-in/thinned recording. `step` performs one MH
-/// decision and mutates the parameter in place.
-#[allow(clippy::too_many_arguments)]
-fn drive_chain<P, K, F, S>(
-    kernel: &K,
-    mut cur: P,
+/// The single chain loop behind every sampler family: budget check,
+/// kernel step, burn-in/thinned recording. Builds the kernel's
+/// chain-local scratch once, so the steady state allocates nothing.
+pub fn drive_chain<T, F>(
+    kernel: &T,
+    init: T::State,
     budget: Budget,
     burn_in: usize,
     thin: usize,
     mut f: F,
     rng: &mut Pcg64,
-    mut step: S,
 ) -> (Vec<Sample>, ChainStats)
 where
-    K: ProposalKernel<P>,
-    F: FnMut(&P) -> f64,
-    S: FnMut(&mut P, Proposal<P>, &mut Pcg64) -> StepInfo,
+    T: TransitionKernel,
+    F: FnMut(&T::State) -> f64,
 {
     assert!(thin >= 1);
+    let mut scratch = kernel.scratch(&init);
+    let mut cur = init;
     let mut stats = ChainStats::default();
     let mut samples = Vec::new();
     let start = Instant::now();
@@ -91,12 +101,16 @@ where
                     break;
                 }
             }
+            Budget::Data(d) => {
+                if stats.data_used >= d {
+                    break;
+                }
+            }
         }
-        let proposal = kernel.propose(&cur, rng);
-        let info = step(&mut cur, proposal, rng);
+        let outcome = kernel.step(&mut cur, &mut scratch, rng);
         stats.steps += 1;
-        stats.accepted += info.accepted as usize;
-        stats.data_used += info.n_used as u64;
+        stats.accepted += outcome.accepted as usize;
+        stats.data_used += outcome.data_used;
         if stats.steps > burn_in && (stats.steps - burn_in) % thin == 0 {
             samples.push(Sample {
                 value: f(&cur),
@@ -109,7 +123,7 @@ where
     (samples, stats)
 }
 
-/// Run a chain; `f` maps the current parameter to the scalar test
+/// Run an MH chain; `f` maps the current parameter to the scalar test
 /// function recorded every `thin` steps after `burn_in` steps.
 #[allow(clippy::too_many_arguments)]
 pub fn run_chain<M, K, F>(
@@ -128,10 +142,15 @@ where
     K: ProposalKernel<M::Param>,
     F: FnMut(&M::Param) -> f64,
 {
-    let mut scratch = MhScratch::new(model.n());
-    drive_chain(kernel, init, budget, burn_in, thin, f, rng, |cur, proposal, rng| {
-        mh_step(model, cur, proposal, mode, &mut scratch, rng)
-    })
+    drive_chain(
+        &MhKernel { model, proposal: kernel, mode },
+        init,
+        budget,
+        burn_in,
+        thin,
+        f,
+        rng,
+    )
 }
 
 /// `run_chain` on the state-caching fast path: per-datapoint statistics
@@ -155,49 +174,15 @@ where
     K: ProposalKernel<M::Param>,
     F: FnMut(&M::Param) -> f64,
 {
-    let mut scratch = MhScratch::new(model.n());
-    let mut cache = model.init_cache(&init);
-    drive_chain(kernel, init, budget, burn_in, thin, f, rng, |cur, proposal, rng| {
-        mh_step_cached(model, cur, &mut cache, proposal, mode, &mut scratch, rng)
-    })
-}
-
-/// Run `n_chains` independent chains in parallel (std threads), seeding
-/// each from `base_seed + chain index`. Kept for API compatibility; the
-/// `engine` module is the full-featured multi-chain front end (worker
-/// pools, observers, cross-chain diagnostics).
-#[allow(clippy::too_many_arguments)]
-pub fn run_chains_parallel<M, K, F>(
-    model: &M,
-    kernel: &K,
-    mode: &MhMode,
-    init: M::Param,
-    budget: Budget,
-    burn_in: usize,
-    thin: usize,
-    f: F,
-    base_seed: u64,
-    n_chains: usize,
-) -> Vec<(Vec<Sample>, ChainStats)>
-where
-    M: LlDiffModel + Sync,
-    K: ProposalKernel<M::Param> + Sync,
-    M::Param: Clone + Send,
-    F: Fn(&M::Param) -> f64 + Sync,
-{
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..n_chains)
-            .map(|c| {
-                let init = init.clone();
-                let f = &f;
-                scope.spawn(move || {
-                    let mut rng = Pcg64::new(base_seed, 1000 + c as u64);
-                    run_chain(model, kernel, mode, init, budget, burn_in, thin, |p| f(p), &mut rng)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("chain panicked")).collect()
-    })
+    drive_chain(
+        &CachedMhKernel { model, proposal: kernel, mode },
+        init,
+        budget,
+        burn_in,
+        thin,
+        f,
+        rng,
+    )
 }
 
 #[cfg(test)]
@@ -320,35 +305,21 @@ mod tests {
     }
 
     #[test]
-    fn parallel_chains_differ_and_are_deterministic() {
-        let model = GaussTarget { n: 20 };
+    fn data_budget_matches_equivalent_step_budget() {
+        // Exact MH consumes exactly N per step, so Budget::Data(k * N)
+        // must reproduce Budget::Steps(k) bit for bit.
+        let model = GaussTarget { n: 40 };
         let kernel = rw_kernel(1.0);
-        let run = || {
-            run_chains_parallel(
-                &model,
-                &kernel,
-                &MhMode::Exact,
-                0.0,
-                Budget::Steps(500),
-                0,
-                1,
-                |&p| p,
-                42,
-                4,
-            )
+        let run = |budget: Budget| {
+            let mut rng = Pcg64::seeded(9);
+            run_chain(&model, &kernel, &MhMode::Exact, 0.0, budget, 0, 1, |&p| p, &mut rng)
         };
-        let a = run();
-        let b = run();
-        assert_eq!(a.len(), 4);
-        // chains differ from each other
-        assert_ne!(
-            a[0].0.last().unwrap().value,
-            a[1].0.last().unwrap().value
-        );
-        // but the whole ensemble is reproducible
-        for (ca, cb) in a.iter().zip(&b) {
-            assert_eq!(ca.0.len(), cb.0.len());
-            assert_eq!(ca.0.last().unwrap().value, cb.0.last().unwrap().value);
-        }
+        let (sa, sta) = run(Budget::Steps(250));
+        let (sb, stb) = run(Budget::Data(250 * 40));
+        assert_eq!(sta.steps, stb.steps);
+        assert_eq!(sta.data_used, stb.data_used);
+        let va: Vec<u64> = sa.iter().map(|s| s.value.to_bits()).collect();
+        let vb: Vec<u64> = sb.iter().map(|s| s.value.to_bits()).collect();
+        assert_eq!(va, vb);
     }
 }

@@ -16,14 +16,15 @@
 //!   vector statistics (predictive means, inclusion counts) without a
 //!   second pass over samples.
 
-use crate::coordinator::chain::{run_chain, run_chain_cached, Budget, ChainStats, Sample};
+use crate::coordinator::chain::{drive_chain, Budget, ChainStats, Sample};
+use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
 use crate::coordinator::mh::MhMode;
 use crate::metrics::convergence::{cross_chain, Convergence};
 use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
 use crate::stats::Pcg64;
 
 /// RNG stream id of chain 0 (chain `c` uses `STREAM_BASE + c`); matches
-/// the historical `run_chains_parallel` convention so seeds stay stable.
+/// the historical single-chain convention so seeds stay stable.
 pub const STREAM_BASE: u64 = 1000;
 
 /// Configuration of one engine launch.
@@ -165,7 +166,44 @@ where
         .collect()
 }
 
-/// Run K chains of `model` under `mode`, one observer per chain.
+/// Run K chains of any `TransitionKernel`, one observer per chain —
+/// the engine entry point every sampler family shares. Chain `c` starts
+/// from a clone of `init` and steps on `Pcg64::new(base_seed,
+/// STREAM_BASE + c)`, so a launch is bit-reproducible for any pool size
+/// (for step and data budgets).
+pub fn run_engine_kernel<T, OF, O>(
+    kernel: &T,
+    init: T::State,
+    cfg: &EngineConfig,
+    make_observer: OF,
+) -> EngineResult<O>
+where
+    T: TransitionKernel + Sync,
+    T::State: Sync,
+    OF: Fn(usize) -> O + Sync,
+    O: ChainObserver<T::State>,
+{
+    assert!(cfg.chains >= 1, "need at least one chain");
+    let init = &init;
+    let start = std::time::Instant::now();
+    let pairs = parallel_map(cfg.chains, cfg.threads, |c| {
+        let mut rng = Pcg64::new(cfg.base_seed, STREAM_BASE + c as u64);
+        let mut obs = make_observer(c);
+        let (samples, stats) = drive_chain(
+            kernel,
+            init.clone(),
+            cfg.budget,
+            cfg.burn_in,
+            cfg.thin,
+            |p| obs.observe(p),
+            &mut rng,
+        );
+        (ChainRun { chain: c, samples, stats }, obs)
+    });
+    finish(pairs, start.elapsed())
+}
+
+/// Run K MH chains of `model` under `mode`, one observer per chain.
 pub fn run_engine<M, K, OF, O>(
     model: &M,
     kernel: &K,
@@ -177,30 +215,10 @@ pub fn run_engine<M, K, OF, O>(
 where
     M: LlDiffModel + Sync,
     K: ProposalKernel<M::Param> + Sync,
-    M::Param: Clone + Send + Sync,
     OF: Fn(usize) -> O + Sync,
     O: ChainObserver<M::Param>,
 {
-    assert!(cfg.chains >= 1, "need at least one chain");
-    let init = &init;
-    let start = std::time::Instant::now();
-    let pairs = parallel_map(cfg.chains, cfg.threads, |c| {
-        let mut rng = Pcg64::new(cfg.base_seed, STREAM_BASE + c as u64);
-        let mut obs = make_observer(c);
-        let (samples, stats) = run_chain(
-            model,
-            kernel,
-            mode,
-            init.clone(),
-            cfg.budget,
-            cfg.burn_in,
-            cfg.thin,
-            |p| obs.observe(p),
-            &mut rng,
-        );
-        (ChainRun { chain: c, samples, stats }, obs)
-    });
-    finish(pairs, start.elapsed())
+    run_engine_kernel(&MhKernel { model, proposal: kernel, mode }, init, cfg, make_observer)
 }
 
 /// `run_engine` on the state-caching fast path: each chain owns a
@@ -216,30 +234,15 @@ pub fn run_engine_cached<M, K, OF, O>(
 where
     M: CachedLlDiff + Sync,
     K: ProposalKernel<M::Param> + Sync,
-    M::Param: Clone + Send + Sync,
     OF: Fn(usize) -> O + Sync,
     O: ChainObserver<M::Param>,
 {
-    assert!(cfg.chains >= 1, "need at least one chain");
-    let init = &init;
-    let start = std::time::Instant::now();
-    let pairs = parallel_map(cfg.chains, cfg.threads, |c| {
-        let mut rng = Pcg64::new(cfg.base_seed, STREAM_BASE + c as u64);
-        let mut obs = make_observer(c);
-        let (samples, stats) = run_chain_cached(
-            model,
-            kernel,
-            mode,
-            init.clone(),
-            cfg.budget,
-            cfg.burn_in,
-            cfg.thin,
-            |p| obs.observe(p),
-            &mut rng,
-        );
-        (ChainRun { chain: c, samples, stats }, obs)
-    });
-    finish(pairs, start.elapsed())
+    run_engine_kernel(
+        &CachedMhKernel { model, proposal: kernel, mode },
+        init,
+        cfg,
+        make_observer,
+    )
 }
 
 fn finish<O>(pairs: Vec<(ChainRun, O)>, wall: std::time::Duration) -> EngineResult<O> {

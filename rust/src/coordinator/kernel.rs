@@ -1,0 +1,213 @@
+//! The transition-kernel step abstraction: one trait every sampler
+//! family implements, so one chain driver and one multi-chain engine
+//! serve them all (see DESIGN.md §Transition-kernel layer).
+//!
+//! The tall-data literature (Bardenet, Doucet & Holmes 2015; Seita et
+//! al. 2017) frames exact/approximate MH, corrected SGLD, pseudo-marginal
+//! chains and subsampled Gibbs sweeps as instances of one *subsampled
+//! transition kernel*: a Markov move whose accept/advance decision
+//! consumes a data-dependent number of likelihood (or potential-pair)
+//! evaluations. `TransitionKernel` is exactly that interface:
+//!
+//! * `State` — the chain state the kernel advances (a parameter vector,
+//!   an `RjState`, a spin configuration, a parameter + auxiliary weight);
+//! * `Scratch` — chain-local reusable workspace (schedulers, index
+//!   buffers, likelihood caches) built once per chain so the steady
+//!   state allocates nothing and parallel chains never contend;
+//! * `step` — one transition: mutate the state in place, return the
+//!   accept flag and the datapoint-evaluation cost, which the driver
+//!   accumulates into `ChainStats`.
+//!
+//! The MH families live here (`MhKernel`, `CachedMhKernel`); the
+//! non-MH families implement the trait next to their samplers
+//! (`samplers::{SgldKernel, PmKernel, GibbsSweepKernel,
+//! PottsSweepKernel}`) and the adaptive-epsilon chain in
+//! `coordinator::adaptive::AdaptiveMhKernel`.
+
+use crate::coordinator::mh::{mh_step, mh_step_cached, MhMode, MhScratch};
+use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
+use crate::stats::Pcg64;
+
+/// What one transition reported: the deltas the chain driver folds into
+/// `ChainStats` (steps are counted by the driver itself).
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    /// Did the chain move? (Always true for Gibbs-style sweeps.)
+    pub accepted: bool,
+    /// Datapoint (or potential-pair) evaluations consumed by this step.
+    pub data_used: u64,
+}
+
+/// One sampler family: a Markov transition over `State` with chain-local
+/// `Scratch`, stepped by `drive_chain` / `run_engine_kernel`.
+pub trait TransitionKernel {
+    /// Chain state advanced by `step`.
+    type State: Clone + Send;
+    /// Chain-local workspace; built once per chain via `scratch`.
+    type Scratch;
+
+    /// Build the per-chain scratch for a chain starting at `init`
+    /// (schedulers, buffers, likelihood caches seeded from the state).
+    fn scratch(&self, init: &Self::State) -> Self::Scratch;
+
+    /// Perform one transition, mutating `state` in place.
+    fn step(
+        &self,
+        state: &mut Self::State,
+        scratch: &mut Self::Scratch,
+        rng: &mut Pcg64,
+    ) -> StepOutcome;
+}
+
+/// Metropolis-Hastings with a full-data or sequential approximate test
+/// (paper §2 / §4): propose via `proposal`, decide via `mh_step`. This is
+/// the family every `run_chain` / `run_engine` call runs on.
+pub struct MhKernel<'a, M, K> {
+    pub model: &'a M,
+    pub proposal: &'a K,
+    pub mode: &'a MhMode,
+}
+
+impl<M, K> TransitionKernel for MhKernel<'_, M, K>
+where
+    M: LlDiffModel,
+    K: ProposalKernel<M::Param>,
+{
+    type State = M::Param;
+    type Scratch = MhScratch;
+
+    fn scratch(&self, _init: &M::Param) -> MhScratch {
+        MhScratch::new(self.model.n())
+    }
+
+    fn step(&self, state: &mut M::Param, scratch: &mut MhScratch, rng: &mut Pcg64) -> StepOutcome {
+        let proposal = self.proposal.propose(state, rng);
+        let info = mh_step(self.model, state, proposal, self.mode, scratch, rng);
+        StepOutcome { accepted: info.accepted, data_used: info.n_used as u64 }
+    }
+}
+
+/// Per-chain scratch of the cached MH family: the usual `MhScratch` plus
+/// the model's per-datapoint likelihood cache (owned by the chain, never
+/// by the shared model).
+pub struct CachedMhScratch<M: CachedLlDiff> {
+    pub mh: MhScratch,
+    pub cache: M::Cache,
+}
+
+/// `MhKernel` on the state-caching fast path (`CachedLlDiff`): decisions
+/// are bit-identical to the uncached kernel under the same RNG stream —
+/// the contract regression-tested in `tests/integration_engine.rs`.
+pub struct CachedMhKernel<'a, M, K> {
+    pub model: &'a M,
+    pub proposal: &'a K,
+    pub mode: &'a MhMode,
+}
+
+impl<M, K> TransitionKernel for CachedMhKernel<'_, M, K>
+where
+    M: CachedLlDiff,
+    K: ProposalKernel<M::Param>,
+{
+    type State = M::Param;
+    type Scratch = CachedMhScratch<M>;
+
+    fn scratch(&self, init: &M::Param) -> CachedMhScratch<M> {
+        CachedMhScratch { mh: MhScratch::new(self.model.n()), cache: self.model.init_cache(init) }
+    }
+
+    fn step(
+        &self,
+        state: &mut M::Param,
+        scratch: &mut CachedMhScratch<M>,
+        rng: &mut Pcg64,
+    ) -> StepOutcome {
+        let proposal = self.proposal.propose(state, rng);
+        let info = mh_step_cached(
+            self.model,
+            state,
+            &mut scratch.cache,
+            proposal,
+            self.mode,
+            &mut scratch.mh,
+            rng,
+        );
+        StepOutcome { accepted: info.accepted, data_used: info.n_used as u64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::chain::{drive_chain, Budget};
+    use crate::models::traits::Proposal;
+
+    /// Dummy kernel: deterministic counter state, fixed per-step cost.
+    struct Counter {
+        cost: u64,
+    }
+
+    impl TransitionKernel for Counter {
+        type State = u64;
+        type Scratch = ();
+
+        fn scratch(&self, _: &u64) {}
+
+        fn step(&self, state: &mut u64, _: &mut (), _: &mut Pcg64) -> StepOutcome {
+            *state += 1;
+            StepOutcome { accepted: true, data_used: self.cost }
+        }
+    }
+
+    #[test]
+    fn data_budget_stops_at_cumulative_cost() {
+        let kernel = Counter { cost: 7 };
+        let mut rng = Pcg64::seeded(0);
+        let (samples, stats) =
+            drive_chain(&kernel, 0u64, Budget::Data(70), 0, 1, |&s| s as f64, &mut rng);
+        // 10 steps of cost 7 reach exactly 70
+        assert_eq!(stats.steps, 10);
+        assert_eq!(stats.data_used, 70);
+        assert_eq!(samples.len(), 10);
+        assert_eq!(samples.last().unwrap().value, 10.0);
+        assert_eq!(samples.last().unwrap().at_data, 70);
+    }
+
+    #[test]
+    fn data_budget_is_inclusive_of_overshoot() {
+        // a step that crosses the budget still completes; the NEXT step
+        // does not start.
+        let kernel = Counter { cost: 9 };
+        let mut rng = Pcg64::seeded(0);
+        let (_, stats) = drive_chain(&kernel, 0u64, Budget::Data(20), 0, 1, |&s| s as f64, &mut rng);
+        assert_eq!(stats.steps, 3); // 9, 18, 27 >= 20 after the third
+        assert_eq!(stats.data_used, 27);
+    }
+
+    #[test]
+    fn mh_kernel_matches_manual_propose_step_loop() {
+        use crate::models::traits::testutil::FixedPopulation;
+
+        let model = FixedPopulation { ls: vec![0.002; 400] };
+        let proposal = |_: &(), _: &mut Pcg64| Proposal { param: (), log_correction: 0.4 };
+        let mode = MhMode::Exact;
+
+        // manual loop (the pre-refactor shape of run_chain)
+        let mut rng_a = Pcg64::new(3, 5);
+        let mut scratch = MhScratch::new(model.n());
+        let mut accepted_a = 0usize;
+        let mut cur = ();
+        for _ in 0..200 {
+            let p = proposal.propose(&cur, &mut rng_a);
+            let info = mh_step(&model, &mut cur, p, &mode, &mut scratch, &mut rng_a);
+            accepted_a += info.accepted as usize;
+        }
+
+        // the same chain through the kernel + driver
+        let kernel = MhKernel { model: &model, proposal: &proposal, mode: &mode };
+        let mut rng_b = Pcg64::new(3, 5);
+        let (_, stats) = drive_chain(&kernel, (), Budget::Steps(200), 0, 1, |_| 0.0, &mut rng_b);
+        assert_eq!(stats.accepted, accepted_a);
+        assert_eq!(stats.data_used, 200 * 400);
+    }
+}

@@ -3,9 +3,16 @@
 //! * `austerity` — the sequential approximate MH test (Alg. 1)
 //! * `mh` — exact + approximate MH step orchestration (plus the
 //!   state-caching fast path `mh_step_cached`)
-//! * `chain` — single-chain driver with budgets and thinning
-//! * `engine` — parallel multi-chain engine: worker pool, per-chain RNG
-//!   streams and observers, merged stats, split R-hat / ESS
+//! * `kernel` — the `TransitionKernel` step abstraction every sampler
+//!   family implements (MH exact/approx ± cache here; SGLD ± correction,
+//!   pseudo-marginal, Gibbs/Potts sweeps next to their samplers), so one
+//!   driver and one engine serve them all
+//! * `chain` — generic single-chain driver (`drive_chain`) with step /
+//!   wall / datapoint budgets and thinning
+//! * `engine` — parallel multi-chain engine over any kernel
+//!   (`run_engine_kernel`): worker pool, per-chain RNG streams and
+//!   observers, merged stats, split R-hat / ESS
+//! * `adaptive` — adaptive-epsilon MH kernel (paper §7 future work)
 //! * `scheduler` — without-replacement mini-batch scheduling
 //! * `dp` — Gaussian-random-walk error/usage dynamic program (§5.1)
 //! * `delta` — acceptance-probability error via quadrature (Eqn. 6)
@@ -18,18 +25,20 @@ pub mod delta;
 pub mod design;
 pub mod dp;
 pub mod engine;
+pub mod kernel;
 pub mod mh;
 pub mod scheduler;
 
-pub use adaptive::{run_adaptive_chain, EpsSchedule};
+pub use adaptive::{run_adaptive_chain, AdaptiveMhKernel, EpsSchedule};
 pub use austerity::{seq_mh_test, seq_mh_test_cached, BoundSeq, SeqTestConfig, SeqTestOutcome};
-pub use chain::{run_chain, run_chain_cached, run_chains_parallel, Budget, ChainStats, Sample};
+pub use chain::{drive_chain, run_chain, run_chain_cached, Budget, ChainStats, Sample};
 pub use delta::{PairStats, SeqTestTable};
 pub use design::{average_design, wang_tsiatis_design, worst_case_design, DesignChoice, DesignGrid, WtChoice};
 pub use dp::{analyze_pocock, analyze_walk, simulate_walk, uniform_pis, SeqAnalysis};
 pub use engine::{
-    parallel_map, run_engine, run_engine_cached, ChainObserver, ChainRun, EngineConfig,
-    EngineResult,
+    parallel_map, run_engine, run_engine_cached, run_engine_kernel, ChainObserver, ChainRun,
+    EngineConfig, EngineResult,
 };
+pub use kernel::{CachedMhKernel, CachedMhScratch, MhKernel, StepOutcome, TransitionKernel};
 pub use mh::{mh_step, mh_step_cached, MhMode, MhScratch, StepInfo};
 pub use scheduler::MinibatchScheduler;

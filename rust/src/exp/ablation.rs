@@ -13,13 +13,13 @@
 use crate::coordinator::adaptive::{run_adaptive_chain, EpsSchedule};
 use crate::coordinator::austerity::{seq_mh_test, SeqTestConfig};
 use crate::coordinator::chain::Budget;
-use crate::coordinator::engine::{run_engine_cached, EngineConfig};
+use crate::coordinator::engine::{run_engine_cached, run_engine_kernel, EngineConfig};
 use crate::coordinator::dp::{analyze_walk, uniform_pis};
 use crate::coordinator::mh::MhMode;
 use crate::coordinator::scheduler::MinibatchScheduler;
 use crate::exp::common::{FigureSink, Scale};
 use crate::exp::population::{harvest_pairs, mnist_like_model, FixedLs};
-use crate::samplers::pseudo_marginal::{run_pseudo_marginal, PoissonEstimator};
+use crate::samplers::pseudo_marginal::{PmKernel, PmPathology, PoissonEstimator};
 use crate::samplers::GaussianRandomWalk;
 use crate::stats::welford::Welford;
 use crate::stats::{MomentAccumulator, Pcg64};
@@ -203,8 +203,15 @@ pub fn ablation_pseudo_marginal(scale: Scale) -> (f64, f64, usize) {
     let steps = scale.steps(600).max(100);
 
     let est = PoissonEstimator { batch: 100.min(n / 8).max(8), lambda: 3.0, center: 0.0 };
-    let mut rng = Pcg64::seeded(3);
-    let pm = run_pseudo_marginal(&model, &kernel, &est, init.clone(), steps, &mut rng, |_| {});
+    let pm_kernel = PmKernel::new(&model, &kernel, &est, init.clone());
+    let pm_res = run_engine_kernel(
+        &pm_kernel,
+        pm_kernel.init_state(),
+        &EngineConfig::new(1, 3, Budget::Steps(steps)),
+        |_c| PmPathology::default(),
+    );
+    let pm = &pm_res.merged;
+    let path = &pm_res.observers[0];
 
     let seq_res = run_engine_cached(
         &model,
@@ -216,17 +223,17 @@ pub fn ablation_pseudo_marginal(scale: Scale) -> (f64, f64, usize) {
     );
     let seq = &seq_res.merged;
 
-    let pm_acc = pm.accepted as f64 / pm.steps as f64;
+    let pm_acc = pm.acceptance_rate();
     let seq_acc = seq.acceptance_rate();
     let mut sink = FigureSink::new("ablation_pseudo_marginal");
     sink.header(&["pm_accept", "seq_accept", "pm_longest_stuck", "pm_clamped_frac"]);
     sink.row(&[
         pm_acc,
         seq_acc,
-        pm.longest_stuck as f64,
-        pm.clamped as f64 / pm.steps as f64,
+        path.longest_stuck as f64,
+        path.clamped as f64 / pm.steps as f64,
     ]);
-    (pm_acc, seq_acc, pm.longest_stuck)
+    (pm_acc, seq_acc, path.longest_stuck)
 }
 
 /// Run all ablations.

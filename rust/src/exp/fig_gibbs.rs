@@ -1,13 +1,21 @@
 //! Gibbs-sampling figures (supplementary F.1):
 //!   Fig. 14 — empirical vs exact conditional probability, eps sweep
 //!   Fig. 15 — average L1 error over 5-variable joint marginals vs time
+//!
+//! Fig. 15's chains run as `GibbsSweepKernel` launches on the multi-chain
+//! engine: the ground truth fans out over two exact chains (marginals
+//! merged), and each timed run is an engine launch whose observer records
+//! marginals and checkpoints the L1 error as it goes.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::coordinator::chain::Budget;
+use crate::coordinator::engine::{run_engine_kernel, ChainObserver, EngineConfig};
 use crate::exp::common::{FigureSink, Scale};
 use crate::models::MrfModel;
 use crate::samplers::gibbs::{
-    gibbs_sweep, gibbs_update, GibbsMode, GibbsScratch, GibbsStats, SubsetMarginal,
+    gibbs_sweep, gibbs_update, GibbsMode, GibbsScratch, GibbsStats, GibbsSweepKernel,
+    SubsetMarginal,
 };
 use crate::stats::Pcg64;
 
@@ -57,6 +65,93 @@ pub fn run_fig14(scale: Scale) -> Vec<(f64, f64, f64)> {
     out
 }
 
+/// Per-chain marginal recorder for the ground-truth launch; the recorded
+/// scalar is the fraction of ones (a cheap whole-state test function).
+struct MarginalObserver {
+    marginals: Vec<SubsetMarginal>,
+}
+
+impl MarginalObserver {
+    fn new(subsets: &[Vec<usize>]) -> Self {
+        MarginalObserver {
+            marginals: subsets.iter().map(|s| SubsetMarginal::new(s.clone())).collect(),
+        }
+    }
+}
+
+fn frac_ones(x: &[bool]) -> f64 {
+    x.iter().filter(|&&b| b).count() as f64 / x.len() as f64
+}
+
+impl ChainObserver<Vec<bool>> for MarginalObserver {
+    fn observe(&mut self, x: &Vec<bool>) -> f64 {
+        for m in self.marginals.iter_mut() {
+            m.record(x);
+        }
+        frac_ones(x)
+    }
+}
+
+/// Timed-run observer: records marginals every sweep and snapshots the
+/// mean L1 error to the truth at each wall-clock checkpoint.
+struct CheckpointObserver<'a> {
+    marginals: Vec<SubsetMarginal>,
+    truth: &'a [Vec<f64>],
+    checkpoints: &'a [f64],
+    start: Instant,
+    next_cp: usize,
+    sweeps: usize,
+    /// (elapsed secs, mean L1 error, sweeps done) per checkpoint
+    rows: Vec<(f64, f64, usize)>,
+}
+
+impl<'a> CheckpointObserver<'a> {
+    fn new(subsets: &[Vec<usize>], truth: &'a [Vec<f64>], checkpoints: &'a [f64]) -> Self {
+        CheckpointObserver {
+            marginals: subsets.iter().map(|s| SubsetMarginal::new(s.clone())).collect(),
+            truth,
+            checkpoints,
+            start: Instant::now(),
+            next_cp: 0,
+            sweeps: 0,
+            rows: Vec::new(),
+        }
+    }
+
+    fn err(&self) -> f64 {
+        self.marginals
+            .iter()
+            .zip(self.truth)
+            .map(|(m, t)| m.l1_to(t))
+            .sum::<f64>()
+            / self.marginals.len() as f64
+    }
+
+    /// Emit any checkpoints the wall budget cut off (at least the final
+    /// one, so every mode reports a terminal error).
+    fn flush(&mut self, final_secs: f64) {
+        while self.next_cp < self.checkpoints.len() {
+            self.rows.push((final_secs, self.err(), self.sweeps));
+            self.next_cp += 1;
+        }
+    }
+}
+
+impl ChainObserver<Vec<bool>> for CheckpointObserver<'_> {
+    fn observe(&mut self, x: &Vec<bool>) -> f64 {
+        self.sweeps += 1;
+        for m in self.marginals.iter_mut() {
+            m.record(x);
+        }
+        let el = self.start.elapsed().as_secs_f64();
+        while self.next_cp < self.checkpoints.len() && el >= self.checkpoints[self.next_cp] {
+            self.rows.push((el, self.err(), self.sweeps));
+            self.next_cp += 1;
+        }
+        frac_ones(x)
+    }
+}
+
 /// Fig. 15: L1 error of 5-variable joint marginals vs running time for
 /// exact Gibbs and an eps sweep. Ground truth from a long exact run.
 pub fn run_fig15(scale: Scale) -> Vec<(f64, f64)> {
@@ -76,21 +171,21 @@ pub fn run_fig15(scale: Scale) -> Vec<(f64, f64)> {
         })
         .collect();
 
-    // ground truth from a long exact run
+    let x0: Vec<bool> = (0..d).map(|_| rng.uniform() < 0.5).collect();
+
+    // ground truth: two exact chains on the engine, marginals merged
     let gt_sweeps = scale.steps(4_000).max(300);
+    let per_chain = (gt_sweeps / 2).max(10);
+    let gt_kernel = GibbsSweepKernel { model: &model, mode: GibbsMode::Exact };
+    let gt_cfg =
+        EngineConfig::new(2, 1500, Budget::Steps(per_chain)).burn_in(per_chain / 10);
+    let gt_res =
+        run_engine_kernel(&gt_kernel, x0.clone(), &gt_cfg, |_c| MarginalObserver::new(&subsets));
     let mut truth_marginals: Vec<SubsetMarginal> =
         subsets.iter().map(|s| SubsetMarginal::new(s.clone())).collect();
-    {
-        let mut x: Vec<bool> = (0..d).map(|_| rng.uniform() < 0.5).collect();
-        let mut scratch = GibbsScratch::new(&model);
-        let mut stats = GibbsStats::default();
-        for s in 0..gt_sweeps {
-            gibbs_sweep(&model, &mut x, &GibbsMode::Exact, &mut scratch, &mut stats, &mut rng);
-            if s >= gt_sweeps / 10 {
-                for m in truth_marginals.iter_mut() {
-                    m.record(&x);
-                }
-            }
+    for obs in &gt_res.observers {
+        for (t, m) in truth_marginals.iter_mut().zip(&obs.marginals) {
+            t.merge(m);
         }
     }
     let truth: Vec<Vec<f64>> = truth_marginals.iter().map(|m| m.probs()).collect();
@@ -112,35 +207,27 @@ pub fn run_fig15(scale: Scale) -> Vec<(f64, f64)> {
     let mut finals = Vec::new();
 
     for (eps, mode) in &modes {
-        let mut rng = Pcg64::new(150, (eps * 1e4) as u64);
-        let mut x: Vec<bool> = (0..d).map(|_| rng.uniform() < 0.5).collect();
-        let mut scratch = GibbsScratch::new(&model);
-        let mut stats = GibbsStats::default();
-        let mut marginals: Vec<SubsetMarginal> =
-            subsets.iter().map(|s| SubsetMarginal::new(s.clone())).collect();
-        let start = Instant::now();
-        let mut next_cp = 0usize;
-        let mut sweeps = 0usize;
-        let mut last_err = f64::NAN;
-        while next_cp < checkpoints.len() {
-            gibbs_sweep(&model, &mut x, mode, &mut scratch, &mut stats, &mut rng);
-            sweeps += 1;
-            for m in marginals.iter_mut() {
-                m.record(&x);
-            }
-            let el = start.elapsed().as_secs_f64();
-            while next_cp < checkpoints.len() && el >= checkpoints[next_cp] {
-                let err: f64 = marginals
-                    .iter()
-                    .zip(&truth)
-                    .map(|(m, t)| m.l1_to(t))
-                    .sum::<f64>()
-                    / marginals.len() as f64;
-                sink.row(&[*eps, el, err, sweeps as f64, stats.pairs_used as f64]);
-                last_err = err;
-                next_cp += 1;
-            }
+        let kernel = GibbsSweepKernel { model: &model, mode: mode.clone() };
+        let cfg = EngineConfig::new(
+            1,
+            150 + (eps * 1e4) as u64,
+            Budget::Wall(Duration::from_secs_f64(budget_secs)),
+        );
+        let res = run_engine_kernel(&kernel, x0.clone(), &cfg, |_c| {
+            CheckpointObserver::new(&subsets, &truth, &checkpoints)
+        });
+        let run = res.runs.into_iter().next().expect("one chain");
+        let mut obs = res.observers.into_iter().next().expect("one chain");
+        obs.flush(run.stats.wall.as_secs_f64());
+        for &(el, err, sweeps) in &obs.rows {
+            let pairs = if sweeps == 0 {
+                0.0
+            } else {
+                run.samples[sweeps - 1].at_data as f64
+            };
+            sink.row(&[*eps, el, err, sweeps as f64, pairs]);
         }
+        let last_err = obs.rows.last().map(|r| r.1).unwrap_or(f64::NAN);
         finals.push((*eps, last_err));
     }
     finals

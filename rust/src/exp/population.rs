@@ -72,7 +72,7 @@ impl LPopulation {
 /// directly against a chosen mu_0).
 pub struct FixedLs<'a>(pub &'a [f64]);
 
-impl<'a> LlDiffModel for FixedLs<'a> {
+impl LlDiffModel for FixedLs<'_> {
     type Param = ();
 
     fn n(&self) -> usize {

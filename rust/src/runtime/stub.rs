@@ -81,7 +81,7 @@ impl<'a> PjrtLogistic<'a> {
     }
 }
 
-impl<'a> LlDiffModel for PjrtLogistic<'a> {
+impl LlDiffModel for PjrtLogistic<'_> {
     type Param = Vec<f64>;
 
     fn n(&self) -> usize {
@@ -108,7 +108,7 @@ impl<'a> PjrtIca<'a> {
     }
 }
 
-impl<'a> LlDiffModel for PjrtIca<'a> {
+impl LlDiffModel for PjrtIca<'_> {
     type Param = crate::data::Mat;
 
     fn n(&self) -> usize {

@@ -7,6 +7,7 @@
 //! equivalent to mean lldiff > log(u/(1-u))/Np (see DESIGN.md).
 
 use crate::coordinator::austerity::BoundSeq;
+use crate::coordinator::kernel::{StepOutcome, TransitionKernel};
 use crate::coordinator::scheduler::MinibatchScheduler;
 use crate::models::mrf::MrfModel;
 use crate::stats::student_t::t_sf;
@@ -105,6 +106,31 @@ pub fn gibbs_sweep(
     }
 }
 
+/// One full Gibbs sweep as a `TransitionKernel`: the engine's "step" is
+/// a systematic-scan sweep (each variable once, in order), its cost the
+/// potential-pair evaluations the sweep consumed. Runs the MRF
+/// experiments (supp. F) on the same K-chain engine as the MH families.
+pub struct GibbsSweepKernel<'a> {
+    pub model: &'a MrfModel,
+    pub mode: GibbsMode,
+}
+
+impl TransitionKernel for GibbsSweepKernel<'_> {
+    type State = Vec<bool>;
+    type Scratch = GibbsScratch;
+
+    fn scratch(&self, _init: &Vec<bool>) -> GibbsScratch {
+        GibbsScratch::new(self.model)
+    }
+
+    fn step(&self, x: &mut Vec<bool>, scratch: &mut GibbsScratch, rng: &mut Pcg64) -> StepOutcome {
+        let mut stats = GibbsStats::default();
+        gibbs_sweep(self.model, x, &self.mode, scratch, &mut stats, rng);
+        // a sweep always advances the state; cost is in pair evaluations
+        StepOutcome { accepted: true, data_used: stats.pairs_used }
+    }
+}
+
 /// Empirical joint distribution over a subset of variables, as
 /// probabilities over the 2^|subset| configurations (supp. F.1 metric).
 pub struct SubsetMarginal {
@@ -127,6 +153,16 @@ impl SubsetMarginal {
         }
         self.counts[idx] += 1;
         self.total += 1;
+    }
+
+    /// Fold another chain's counts into this marginal (for merging
+    /// per-chain observers after an engine run).
+    pub fn merge(&mut self, other: &SubsetMarginal) {
+        assert_eq!(self.vars, other.vars, "marginals over different subsets");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
     }
 
     pub fn probs(&self) -> Vec<f64> {

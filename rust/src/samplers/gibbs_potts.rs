@@ -22,6 +22,7 @@
 //! comparison errs with the controlled probability of §5.
 
 use crate::coordinator::austerity::BoundSeq;
+use crate::coordinator::kernel::{StepOutcome, TransitionKernel};
 use crate::coordinator::scheduler::MinibatchScheduler;
 use crate::models::potts::PottsModel;
 use crate::stats::student_t::t_sf;
@@ -145,6 +146,29 @@ pub fn potts_update(
             x[v] = champ;
             used
         }
+    }
+}
+
+/// One full categorical-Gibbs sweep as a `TransitionKernel` (the
+/// multi-valued analogue of `GibbsSweepKernel`), so the Potts extension
+/// runs on the multi-chain engine too.
+pub struct PottsSweepKernel<'a> {
+    pub model: &'a PottsModel,
+    pub mode: PottsMode,
+}
+
+impl TransitionKernel for PottsSweepKernel<'_> {
+    type State = Vec<usize>;
+    type Scratch = PottsScratch;
+
+    fn scratch(&self, _init: &Vec<usize>) -> PottsScratch {
+        PottsScratch::new(self.model)
+    }
+
+    fn step(&self, x: &mut Vec<usize>, scratch: &mut PottsScratch, rng: &mut Pcg64) -> StepOutcome {
+        let mut stats = PottsStats::default();
+        potts_sweep(self.model, x, &self.mode, scratch, &mut stats, rng);
+        StepOutcome { accepted: true, data_used: stats.pairs_used }
     }
 }
 

@@ -1,7 +1,13 @@
-//! Proposal kernels and non-MH samplers for every paper experiment:
-//! Gaussian random walk (§6.1), Stiefel-manifold walk (§6.2),
-//! reversible-jump moves (§6.3), SGLD ± correction (§6.4), and
-//! exact/approximate Gibbs for MRFs (supp. F).
+//! Proposal kernels and the non-MH sampler families for every paper
+//! experiment: Gaussian random walk (§6.1), Stiefel-manifold walk
+//! (§6.2), reversible-jump moves (§6.3), SGLD ± correction (§6.4), and
+//! exact/approximate Gibbs for binary and multi-valued MRFs (supp. F).
+//!
+//! Every family also implements `coordinator::TransitionKernel`
+//! (`SgldKernel`, `PmKernel`, `GibbsSweepKernel`, `PottsSweepKernel`;
+//! the MH families via `MhKernel`/`CachedMhKernel`), so all of them run
+//! on the parallel multi-chain engine with shared budgets, observers and
+//! cross-chain diagnostics.
 
 pub mod gibbs;
 pub mod gibbs_potts;
@@ -11,10 +17,17 @@ pub mod rjmcmc;
 pub mod sgld;
 pub mod stiefel;
 
-pub use gibbs_potts::{potts_sweep, potts_update, PottsMode, PottsScratch, PottsStats};
-pub use pseudo_marginal::{run_pseudo_marginal, PmStats, PoissonEstimator};
-pub use gibbs::{gibbs_sweep, gibbs_update, GibbsMode, GibbsScratch, GibbsStats, SubsetMarginal};
+pub use gibbs::{
+    gibbs_sweep, gibbs_update, GibbsMode, GibbsScratch, GibbsStats, GibbsSweepKernel,
+    SubsetMarginal,
+};
+pub use gibbs_potts::{
+    potts_sweep, potts_update, PottsMode, PottsScratch, PottsStats, PottsSweepKernel,
+};
+pub use pseudo_marginal::{
+    run_pseudo_marginal, PmKernel, PmPathology, PmState, PmStats, PoissonEstimator,
+};
 pub use random_walk::{GaussianRandomWalk, ScalarRandomWalk};
 pub use rjmcmc::{MoveProbs, RjKernel};
-pub use sgld::{run_sgld, SgldConfig, SgldStats};
+pub use sgld::{run_sgld, SgldConfig, SgldKernel, SgldScratch, SgldStats};
 pub use stiefel::StiefelRandomWalk;

@@ -15,6 +15,8 @@
 //! ablation bench shows acceptance collapsing as N grows while the
 //! sequential test keeps mixing.
 
+use crate::coordinator::engine::ChainObserver;
+use crate::coordinator::kernel::{StepOutcome, TransitionKernel};
 use crate::coordinator::scheduler::MinibatchScheduler;
 use crate::models::traits::{LlDiffModel, Proposal, ProposalKernel};
 use crate::stats::Pcg64;
@@ -109,6 +111,124 @@ pub struct PmStats {
     pub longest_stuck: usize,
 }
 
+/// Pseudo-marginal chain state: the auxiliary-variable construction
+/// carries the likelihood-ratio estimate of the current parameter, so
+/// `weight` is genuinely part of the Markov state. The pathology
+/// counters ride along (chain-local, observable mid-run) because the
+/// engine reports them through observers — see `PmPathology`.
+#[derive(Clone, Debug)]
+pub struct PmState<P> {
+    pub param: P,
+    /// `What(param)` — the carried estimate of L(param)/L(anchor).
+    pub weight: f64,
+    /// Estimates clamped at zero so far (the estimator pathology).
+    pub clamped: usize,
+    /// Current run of consecutive rejections.
+    pub stuck: usize,
+    /// Longest rejection run so far (the "stuck" symptom of §4).
+    pub longest_stuck: usize,
+}
+
+/// The pseudo-marginal family as a `TransitionKernel` (paper §4's
+/// counter-argument, on the same engine as everything else). The anchor
+/// of the ratio estimator is the chain's initialization. Step-for-step
+/// RNG-identical to the bespoke `run_pseudo_marginal` loop
+/// (regression-tested in `tests/integration_engine.rs`).
+pub struct PmKernel<'a, M: LlDiffModel, K> {
+    model: &'a M,
+    proposal: &'a K,
+    est: &'a PoissonEstimator,
+    anchor: M::Param,
+}
+
+/// Chain-local estimator workspace.
+pub struct PmScratch {
+    sched: MinibatchScheduler,
+    buf: Vec<usize>,
+}
+
+impl<'a, M: LlDiffModel, K> PmKernel<'a, M, K> {
+    /// `init` becomes both the chain start and the estimator anchor
+    /// (W(init) against itself is exactly 1 — no estimation noise).
+    pub fn new(model: &'a M, proposal: &'a K, est: &'a PoissonEstimator, init: M::Param) -> Self {
+        PmKernel { model, proposal, est, anchor: init }
+    }
+
+    /// The matching initial chain state.
+    pub fn init_state(&self) -> PmState<M::Param> {
+        PmState {
+            param: self.anchor.clone(),
+            weight: 1.0,
+            clamped: 0,
+            stuck: 0,
+            longest_stuck: 0,
+        }
+    }
+}
+
+impl<M, K> TransitionKernel for PmKernel<'_, M, K>
+where
+    M: LlDiffModel,
+    K: ProposalKernel<M::Param>,
+{
+    type State = PmState<M::Param>;
+    type Scratch = PmScratch;
+
+    fn scratch(&self, _init: &PmState<M::Param>) -> PmScratch {
+        PmScratch { sched: MinibatchScheduler::new(self.model.n()), buf: Vec::new() }
+    }
+
+    fn step(
+        &self,
+        state: &mut PmState<M::Param>,
+        s: &mut PmScratch,
+        rng: &mut Pcg64,
+    ) -> StepOutcome {
+        let Proposal { param, log_correction } = self.proposal.propose(&state.param, rng);
+        let r = self.est.estimate_ratio(self.model, &self.anchor, &param, &mut s.sched, rng, &mut s.buf);
+        let data_used = (r.stages * self.est.batch) as u64;
+        state.clamped += r.clamped as usize;
+        let a = if state.weight > 0.0 {
+            (r.value / state.weight) * (-log_correction).exp()
+        } else {
+            1.0
+        };
+        let accepted = rng.uniform() < a.min(1.0);
+        if accepted {
+            state.param = param;
+            state.weight = r.value;
+            state.stuck = 0;
+        } else {
+            state.stuck += 1;
+            state.longest_stuck = state.longest_stuck.max(state.stuck);
+        }
+        StepOutcome { accepted, data_used }
+    }
+}
+
+/// Observer that snapshots the pathology counters off the chain state
+/// and records the carried weight as the convergence test function.
+/// Observers only see recorded states, so the snapshots are the final
+/// chain counters exactly when every step is recorded (`burn_in = 0`,
+/// `thin = 1` — how every PM driver runs); under thinning they lag by
+/// up to `thin - 1` steps.
+#[derive(Clone, Debug, Default)]
+pub struct PmPathology {
+    pub clamped: usize,
+    pub longest_stuck: usize,
+}
+
+impl<P> ChainObserver<PmState<P>> for PmPathology
+where
+    P: Clone + Send,
+{
+    fn observe(&mut self, s: &PmState<P>) -> f64 {
+        self.clamped = s.clamped;
+        self.longest_stuck = s.longest_stuck;
+        s.weight
+    }
+}
+
 /// Run a pseudo-marginal chain. The auxiliary-variable construction
 /// requires the chain to CARRY the likelihood estimate of the current
 /// state (re-estimating each step would be Monte-Carlo-within-Metropolis,
@@ -117,6 +237,11 @@ pub struct PmStats {
 /// accept with `min(1, What'/What_cur * e^{-c})`; a lucky high `What_cur`
 /// then rejects everything until it is displaced — the sticking the
 /// paper describes.
+///
+/// Pre-refactor bespoke loop, retained for one release as the
+/// same-seed equivalence oracle of `PmKernel` (see
+/// `tests/integration_engine.rs`); new code should drive `PmKernel`
+/// through `drive_chain` / `run_engine_kernel` instead.
 #[allow(clippy::too_many_arguments)]
 pub fn run_pseudo_marginal<M, K>(
     model: &M,

@@ -82,7 +82,7 @@ fn log_normal0(x: f64, sigma: f64) -> f64 {
         - sigma.ln()
 }
 
-impl<'a> ProposalKernel<RjState> for RjKernel<'a> {
+impl ProposalKernel<RjState> for RjKernel<'_> {
     fn propose(&self, cur: &RjState, rng: &mut Pcg64) -> Proposal<RjState> {
         let d = self.model.d();
         let k = cur.k();

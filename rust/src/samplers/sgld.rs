@@ -12,6 +12,7 @@
 //!                       / (rho(theta') q(theta|theta', Xn)) ].
 
 use crate::coordinator::austerity::{seq_mh_test, SeqTestConfig};
+use crate::coordinator::kernel::{StepOutcome, TransitionKernel};
 use crate::coordinator::scheduler::MinibatchScheduler;
 use crate::models::linreg::LinRegModel;
 use crate::models::traits::LlDiffModel;
@@ -44,8 +45,96 @@ fn log_normal_pdf(x: f64, mean: f64, var: f64) -> f64 {
     -0.5 * (d * d / var) - 0.5 * (var * 2.0 * std::f64::consts::PI).ln()
 }
 
+/// SGLD (± the approximate-MH correction) as a `TransitionKernel`, so
+/// the §6.4 experiment runs on the multi-chain engine like every other
+/// family. A step draws a fresh gradient mini-batch, takes the Langevin
+/// proposal (Eqn. 9), and — when `cfg.correction` is set — decides it
+/// with the sequential test against the same mini-batch's reverse move.
+/// Step-for-step RNG-identical to the bespoke `run_sgld` loop
+/// (regression-tested in `tests/integration_engine.rs`).
+pub struct SgldKernel<'a> {
+    pub model: &'a LinRegModel,
+    pub cfg: SgldConfig,
+}
+
+/// Chain-local SGLD workspace: one scheduler per population role plus
+/// the shared index buffer, reused across steps.
+pub struct SgldScratch {
+    grad_sched: MinibatchScheduler,
+    test_sched: MinibatchScheduler,
+    idx_buf: Vec<usize>,
+}
+
+impl TransitionKernel for SgldKernel<'_> {
+    type State = f64;
+    type Scratch = SgldScratch;
+
+    fn scratch(&self, _init: &f64) -> SgldScratch {
+        let n = self.model.n();
+        SgldScratch {
+            grad_sched: MinibatchScheduler::new(n),
+            test_sched: MinibatchScheduler::new(n),
+            idx_buf: Vec::new(),
+        }
+    }
+
+    fn step(&self, theta: &mut f64, s: &mut SgldScratch, rng: &mut Pcg64) -> StepOutcome {
+        let model = self.model;
+        let cfg = &self.cfg;
+        let n_total = model.n();
+
+        // Draw the gradient mini-batch Xn (fresh without-replacement draw).
+        s.grad_sched.reset();
+        let batch = s.grad_sched.next_batch(cfg.grad_batch, rng);
+        s.idx_buf.clear();
+        s.idx_buf.extend(batch.iter().map(|&i| i as usize));
+
+        let drift = 0.5 * cfg.alpha * model.grad_log_post(*theta, &s.idx_buf);
+        let mean_fwd = *theta + drift;
+        let prop = mean_fwd + cfg.alpha.sqrt() * rng.normal();
+        let mut data_used = s.idx_buf.len() as u64;
+
+        let accepted = match &cfg.correction {
+            None => true,
+            Some(test_cfg) => {
+                // Reverse-move drift uses the SAME mini-batch Xn.
+                let drift_rev = 0.5 * cfg.alpha * model.grad_log_post(prop, &s.idx_buf);
+                let mean_rev = prop + drift_rev;
+                let log_q_fwd = log_normal_pdf(prop, mean_fwd, cfg.alpha);
+                let log_q_rev = log_normal_pdf(*theta, mean_rev, cfg.alpha);
+                // c = log[rho(cur) q(prop|cur,Xn) / (rho(prop) q(cur|prop,Xn))]
+                let c = model.log_prior(*theta) - model.log_prior(prop) + log_q_fwd - log_q_rev;
+                let u = rng.uniform_pos();
+                let mu0 = (u.ln() + c) / n_total as f64;
+                let out = seq_mh_test(
+                    model,
+                    theta,
+                    &prop,
+                    mu0,
+                    test_cfg,
+                    &mut s.test_sched,
+                    rng,
+                    &mut s.idx_buf,
+                );
+                data_used += out.n_used as u64;
+                out.accept
+            }
+        };
+
+        if accepted {
+            *theta = prop;
+        }
+        StepOutcome { accepted, data_used }
+    }
+}
+
 /// Run SGLD on the toy model, collecting every post-burn-in sample of
 /// theta. Returns (samples, stats).
+///
+/// Pre-refactor bespoke loop, retained for one release as the
+/// same-seed equivalence oracle of `SgldKernel` (see
+/// `tests/integration_engine.rs`); new code should drive `SgldKernel`
+/// through `drive_chain` / `run_engine_kernel` instead.
 pub fn run_sgld(
     model: &LinRegModel,
     cfg: &SgldConfig,

@@ -1,18 +1,33 @@
-//! Integration tests for the parallel multi-chain engine and the
-//! state-caching likelihood fast path:
+//! Integration tests for the parallel multi-chain engine, the
+//! `TransitionKernel` abstraction and the state-caching likelihood fast
+//! path:
 //!
 //! * deterministic replay: same seed + streams => bit-identical samples
-//!   regardless of worker-pool size;
+//!   regardless of worker-pool size — for the cached MH family AND the
+//!   ported SGLD / RJMCMC families;
+//! * same-seed equivalence of the ported kernels against the
+//!   pre-refactor bespoke loops (`run_sgld`, `run_pseudo_marginal`,
+//!   hand-rolled Gibbs sweeps), kept for one release as oracles;
 //! * cached vs uncached chains make bit-identical decisions on a seeded
 //!   logistic chain (the cache-invalidation contract, end to end);
+//! * `Budget::Data` reproduces across pool sizes (deterministic cost
+//!   budgets, unlike wall clocks);
 //! * `MinibatchScheduler` keeps its exchangeability guarantees when many
 //!   per-chain schedulers run concurrently.
 
-use austerity::coordinator::engine::{parallel_map, run_engine_cached, EngineConfig};
-use austerity::coordinator::{run_chain, run_chain_cached, Budget, MhMode, MinibatchScheduler};
-use austerity::data::synthetic::{linreg_toy, two_class_gaussian};
-use austerity::models::{LinRegModel, LlDiffModel, LogisticModel};
-use austerity::samplers::{GaussianRandomWalk, ScalarRandomWalk};
+use austerity::coordinator::engine::{
+    parallel_map, run_engine, run_engine_cached, run_engine_kernel, EngineConfig,
+};
+use austerity::coordinator::{
+    drive_chain, run_chain, run_chain_cached, Budget, MhMode, MinibatchScheduler, SeqTestConfig,
+};
+use austerity::data::synthetic::{linreg_toy, sparse_logistic, two_class_gaussian};
+use austerity::models::rjlogistic::{RjLogisticModel, RjState};
+use austerity::models::{LinRegModel, LlDiffModel, LogisticModel, MrfModel};
+use austerity::samplers::gibbs::{gibbs_sweep, GibbsMode, GibbsScratch, GibbsStats};
+use austerity::samplers::pseudo_marginal::{run_pseudo_marginal, PmKernel, PoissonEstimator};
+use austerity::samplers::sgld::{run_sgld, SgldConfig, SgldKernel};
+use austerity::samplers::{GaussianRandomWalk, RjKernel, ScalarRandomWalk};
 use austerity::stats::Pcg64;
 
 fn model() -> LogisticModel {
@@ -134,6 +149,197 @@ fn engine_diagnostics_see_one_posterior() {
     assert!(res.convergence.ess > 20.0, "ess {}", res.convergence.ess);
     assert!(res.merged.mean_data_fraction(model.n()) < 0.9);
     assert!(res.merged.acceptance_rate() > 0.05);
+}
+
+#[test]
+fn sgld_engine_replay_is_identical_across_pool_sizes() {
+    let model = LinRegModel::new(linreg_toy(3_000, 0), 3.0, 4950.0);
+    let kernel = SgldKernel {
+        model: &model,
+        cfg: SgldConfig {
+            alpha: 5e-6,
+            grad_batch: 200,
+            correction: Some(SeqTestConfig::new(0.3, 200)),
+        },
+    };
+    let run = |threads: usize| {
+        let cfg = EngineConfig::new(4, 77, Budget::Steps(300))
+            .burn_in(50)
+            .threads(threads);
+        run_engine_kernel(&kernel, 0.45f64, &cfg, |_c| |t: &f64| *t)
+    };
+    let serial = run(1);
+    for threads in [0usize, 4] {
+        let par = run(threads);
+        for (a, b) in serial.runs.iter().zip(&par.runs) {
+            assert_eq!(a.stats.accepted, b.stats.accepted);
+            assert_eq!(a.stats.data_used, b.stats.data_used);
+            let va: Vec<u64> = a.samples.iter().map(|s| s.value.to_bits()).collect();
+            let vb: Vec<u64> = b.samples.iter().map(|s| s.value.to_bits()).collect();
+            assert_eq!(va, vb, "threads={threads}");
+        }
+    }
+    // chains explore independently
+    assert_ne!(
+        serial.runs[0].samples.last().unwrap().value.to_bits(),
+        serial.runs[1].samples.last().unwrap().value.to_bits()
+    );
+}
+
+#[test]
+fn rjmcmc_engine_replay_is_identical_across_pool_sizes() {
+    let (ds, _) = sparse_logistic(2_000, 11, 3, 0.3, 0);
+    let model = RjLogisticModel::new(ds, 1e-10);
+    let kernel = RjKernel::new(&model);
+    let init = RjState::with_active(11, &[0], &[-0.5]);
+    let run = |threads: usize| {
+        let cfg = EngineConfig::new(4, 13, Budget::Steps(400))
+            .burn_in(50)
+            .threads(threads);
+        run_engine(&model, &kernel, &MhMode::approx(0.05, 400), init.clone(), &cfg, |_c| {
+            |s: &RjState| s.k() as f64
+        })
+    };
+    let serial = run(1);
+    for threads in [0usize, 4] {
+        let par = run(threads);
+        for (a, b) in serial.runs.iter().zip(&par.runs) {
+            assert_eq!(a.stats.accepted, b.stats.accepted);
+            assert_eq!(a.stats.data_used, b.stats.data_used);
+            let va: Vec<u64> = a.samples.iter().map(|s| s.value.to_bits()).collect();
+            let vb: Vec<u64> = b.samples.iter().map(|s| s.value.to_bits()).collect();
+            assert_eq!(va, vb, "threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn sgld_kernel_matches_bespoke_loop_same_seed() {
+    // The ported SGLD kernel must replay the pre-refactor `run_sgld`
+    // loop bit for bit under the same RNG stream, corrected or not.
+    let model = LinRegModel::new(linreg_toy(3_000, 0), 3.0, 4950.0);
+    for correction in [None, Some(SeqTestConfig::new(0.3, 200))] {
+        let cfg = SgldConfig { alpha: 5e-6, grad_batch: 200, correction };
+        let (steps, burn) = (500usize, 100usize);
+
+        let mut rng_a = Pcg64::new(5, 9);
+        let (bespoke, bstats) = run_sgld(&model, &cfg, 0.45, steps, burn, &mut rng_a);
+
+        let kernel = SgldKernel { model: &model, cfg: cfg.clone() };
+        let mut rng_b = Pcg64::new(5, 9);
+        let (samples, stats) =
+            drive_chain(&kernel, 0.45f64, Budget::Steps(steps), burn, 1, |&t| t, &mut rng_b);
+
+        assert_eq!(bstats.steps, stats.steps);
+        assert_eq!(bstats.accepted, stats.accepted);
+        assert_eq!(bstats.data_used, stats.data_used);
+        let va: Vec<u64> = bespoke.iter().map(|t| t.to_bits()).collect();
+        let vb: Vec<u64> = samples.iter().map(|s| s.value.to_bits()).collect();
+        assert_eq!(va, vb);
+    }
+}
+
+#[test]
+fn pm_kernel_matches_bespoke_loop_same_seed() {
+    let model = LogisticModel::new(two_class_gaussian(3_000, 8, 1.2, 0), 10.0);
+    let init = model.map_estimate(40);
+    let kernel = GaussianRandomWalk::new(0.02, 10.0);
+    let est = PoissonEstimator { batch: 100, lambda: 3.0, center: 0.0 };
+    let steps = 300usize;
+
+    let mut rng_a = Pcg64::new(8, 2);
+    let mut bespoke_path = Vec::new();
+    let bstats = run_pseudo_marginal(&model, &kernel, &est, init.clone(), steps, &mut rng_a, |p| {
+        bespoke_path.push(p[0].to_bits());
+    });
+
+    let pm_kernel = PmKernel::new(&model, &kernel, &est, init);
+    let mut rng_b = Pcg64::new(8, 2);
+    let (mut clamped, mut longest_stuck) = (0usize, 0usize);
+    let (samples, stats) = drive_chain(
+        &pm_kernel,
+        pm_kernel.init_state(),
+        Budget::Steps(steps),
+        0,
+        1,
+        |s| {
+            clamped = s.clamped;
+            longest_stuck = s.longest_stuck;
+            s.param[0]
+        },
+        &mut rng_b,
+    );
+
+    assert_eq!(bstats.steps, stats.steps);
+    assert_eq!(bstats.accepted, stats.accepted);
+    assert_eq!(bstats.data_used, stats.data_used);
+    assert_eq!(bstats.clamped, clamped);
+    assert_eq!(bstats.longest_stuck, longest_stuck);
+    let ported: Vec<u64> = samples.iter().map(|s| s.value.to_bits()).collect();
+    assert_eq!(bespoke_path, ported);
+}
+
+#[test]
+fn gibbs_sweep_kernel_matches_bespoke_loop_same_seed() {
+    use austerity::samplers::gibbs::GibbsSweepKernel;
+
+    let model = MrfModel::random(24, 0.1, 2);
+    let x0: Vec<bool> = (0..24).map(|i| i % 3 == 0).collect();
+    let sweeps = 40usize;
+    for mode in [GibbsMode::Exact, GibbsMode::Approx { eps: 0.05, batch: 40 }] {
+        let mut rng_a = Pcg64::new(6, 4);
+        let mut x = x0.clone();
+        let mut scratch = GibbsScratch::new(&model);
+        let mut bstats = GibbsStats::default();
+        let mut bespoke = Vec::new();
+        for _ in 0..sweeps {
+            gibbs_sweep(&model, &mut x, &mode, &mut scratch, &mut bstats, &mut rng_a);
+            bespoke.push(x.clone());
+        }
+
+        let kernel = GibbsSweepKernel { model: &model, mode: mode.clone() };
+        let mut rng_b = Pcg64::new(6, 4);
+        let mut ported = Vec::new();
+        let (_, stats) = drive_chain(
+            &kernel,
+            x0.clone(),
+            Budget::Steps(sweeps),
+            0,
+            1,
+            |x: &Vec<bool>| {
+                ported.push(x.clone());
+                0.0
+            },
+            &mut rng_b,
+        );
+        assert_eq!(stats.data_used, bstats.pairs_used);
+        assert_eq!(bespoke, ported, "mode {mode:?}");
+    }
+}
+
+#[test]
+fn data_budget_is_deterministic_across_pool_sizes() {
+    let model = model();
+    let init = model.map_estimate(40);
+    let kernel = GaussianRandomWalk::new(0.02, 10.0);
+    let budget = Budget::Data(60 * model.n() as u64 / 10); // ~a few hundred approx steps
+    let run = |threads: usize| {
+        let cfg = EngineConfig::new(3, 21, budget).threads(threads);
+        run_engine_cached(&model, &kernel, &MhMode::approx(0.05, 300), init.clone(), &cfg, |_c| {
+            |t: &Vec<f64>| t[0]
+        })
+    };
+    let serial = run(1);
+    let par = run(0);
+    for (a, b) in serial.runs.iter().zip(&par.runs) {
+        assert_eq!(a.stats.steps, b.stats.steps);
+        assert_eq!(a.stats.data_used, b.stats.data_used);
+        // the crossing step completes: budget is a floor on data_used
+        assert!(a.stats.data_used >= 60 * model.n() as u64 / 10);
+        let va: Vec<u64> = a.samples.iter().map(|s| s.value.to_bits()).collect();
+        let vb: Vec<u64> = b.samples.iter().map(|s| s.value.to_bits()).collect();
+        assert_eq!(va, vb);
+    }
 }
 
 #[test]
