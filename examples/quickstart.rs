@@ -1,11 +1,12 @@
-//! Quickstart: the approximate MH test in five minutes.
+//! Quickstart: budgeted Metropolis-Hastings in five minutes.
 //!
-//! Builds a small logistic-regression posterior and runs the exact and
-//! approximate (sequential-test) samplers on the parallel multi-chain
-//! engine: K chains on K cores, per-datapoint activations cached across
-//! steps, cross-chain R-hat for free. The headline numbers: matching
-//! posteriors, a fraction of the data touched per decision, and more
-//! samples per second.
+//! Builds a small logistic-regression posterior and runs all four
+//! acceptance rules on the parallel multi-chain engine — the exact
+//! full-data test, the paper's sequential (austerity) test, the
+//! minibatch Barker test and the confidence sampler — K chains on K
+//! cores, per-datapoint activations cached across steps, cross-chain
+//! R-hat for free. The headline numbers: matching posteriors, a fraction
+//! of the data touched per decision, and more samples per second.
 //!
 //! Run: cargo run --release --example quickstart
 
@@ -22,13 +23,15 @@ fn main() {
     let init = model.map_estimate(60);
     let kernel = GaussianRandomWalk::new(0.01, model.prior_precision);
 
-    // 2. Run both samplers: 2 chains x 1000 steps each on the engine.
+    // 2. One MhMode per acceptance rule: 2 chains x 1000 steps each.
     let chains = 2;
     let steps_per_chain = 1_000;
     let mut results = Vec::new();
     for (label, mode) in [
-        ("exact  (eps=0)   ", MhMode::Exact),
-        ("approx (eps=0.05)", MhMode::approx(0.05, 500)),
+        ("exact      (full scan) ", MhMode::Exact),
+        ("austerity  (eps = 0.05)", MhMode::approx(0.05, 500)),
+        ("barker     (sigma = 1) ", MhMode::barker(1.0, 500)),
+        ("confidence (delta=0.05)", MhMode::confidence(0.05, 500)),
     ] {
         let t0 = std::time::Instant::now();
         let cfg = EngineConfig::new(chains, 1, Budget::Steps(steps_per_chain)).burn_in(100);
@@ -55,13 +58,13 @@ fn main() {
         results.push((w.mean(), res.merged.mean_data_fraction(model.n())));
     }
 
-    // 3. The point of the paper in two lines:
+    // 3. The point of the whole family in two lines:
     let (exact_mean, _) = results[0];
-    let (approx_mean, approx_frac) = results[1];
-    println!(
-        "\nsame posterior ({:+.4} vs {:+.4}) from {:.0}% of the data per decision",
-        exact_mean,
-        approx_mean,
-        approx_frac * 100.0
-    );
+    for ((mean, frac), name) in results[1..].iter().zip(["austerity", "barker", "confidence"]) {
+        println!(
+            "{name}: same posterior ({exact_mean:+.4} vs {mean:+.4}) from {:.0}% of the data \
+             per decision",
+            frac * 100.0
+        );
+    }
 }

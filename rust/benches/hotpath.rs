@@ -179,6 +179,25 @@ fn main() {
         });
     }
 
+    println!("\n-- L3 acceptance rules (cached step, m = 500) --");
+    for (key, iters, rule_mode) in [
+        ("mh_step_cached_rule_austerity", 200usize, MhMode::approx(0.05, 500)),
+        ("mh_step_cached_rule_barker", 200, MhMode::barker(1.0, 500)),
+        ("mh_step_cached_rule_confidence", 200, MhMode::confidence(0.05, 500)),
+        ("mh_step_cached_rule_exact", 20, MhMode::Exact),
+    ] {
+        let mut scratch = MhScratch::new(n);
+        let mut cur = theta.clone();
+        let mut cache = model.init_cache(&cur);
+        let mut r = Pcg64::new(1, 2);
+        rec.bench(key, iters, || {
+            let prop = kernel.propose(&cur, &mut r);
+            std::hint::black_box(mh_step_cached(
+                &model, &mut cur, &mut cache, prop, &rule_mode, &mut scratch, &mut r,
+            ));
+        });
+    }
+
     println!("\n-- L3 engine scaling (chains x 400 approx steps) --");
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
     rec.record("cores", cores as f64);

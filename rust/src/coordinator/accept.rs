@@ -1,0 +1,706 @@
+//! The pluggable acceptance-test layer: one trait for the budgeted
+//! accept/reject decision, four rules behind it.
+//!
+//! The paper's sequential t-test is one member of a family of budgeted
+//! approximations to the exact N-point Metropolis-Hastings decision.
+//! `AcceptanceTest` is that family's contract: given the proposal's
+//! `log_correction`, a mini-batch moments source over the population of
+//! log-likelihood differences, a without-replacement scheduler and scratch
+//! buffers, decide accept/reject, report the datapoints consumed and a
+//! per-stage trace. The four members:
+//!
+//! | rule             | decision                                            | knob |
+//! |------------------|-----------------------------------------------------|------|
+//! | `ExactTest`      | full scan, `mean l > mu0(u)` (paper §2)             | —    |
+//! | `AusterityTest`  | sequential Student-t test (paper Alg. 1)            | eps  |
+//! | `BarkerTest`     | noise-corrected minibatch Barker test (Seita et al. 2017) | sigma |
+//! | `ConfidenceTest` | empirical-Bernstein adaptive subsampling (Bardenet et al.) | delta |
+//!
+//! **RNG contract.** Each rule consumes the per-chain stream in a fixed
+//! order. `ExactTest` draws only the MH uniform `u`; `AusterityTest`
+//! draws `u` then the scheduler's batch draws — exactly the order of the
+//! pre-refactor `mh_step`, so both are bit-identical to the historical
+//! code under the same seeds (regression-tested in
+//! `tests/integration_accept.rs`). `ConfidenceTest` draws `u` then batch
+//! draws; `BarkerTest` draws no `u` (the logistic noise replaces it):
+//! batch draws, then the top-up normal, then `X_corr`.
+//!
+//! **Bit-identity.** The moments source is the same closure the cached
+//! and uncached step paths already share (`lldiff_moments` /
+//! `cached_moments`), and `ExactTest` streams it through
+//! `full_scan_moments` with the same chunking as `full_moments_buf` — so
+//! a cached chain still makes decisions bit-identical to an uncached one
+//! for every rule.
+
+#![allow(clippy::too_many_arguments)]
+
+use std::sync::Arc;
+
+use crate::coordinator::austerity::{seq_test_core, SeqTestConfig};
+use crate::coordinator::scheduler::MinibatchScheduler;
+use crate::models::traits::full_scan_moments;
+use crate::stats::logistic_corr::LogisticCorrection;
+use crate::stats::welford::MomentAccumulator;
+use crate::stats::Pcg64;
+
+/// One recorded stage of a decision: how much data had been consumed and
+/// the rule-specific statistic/threshold pair that was compared.
+///
+/// * exact — `stat` = `mean - mu0`, `threshold` = 0;
+/// * austerity — `stat` = Student-t tail `delta`, `threshold` = `eps_j`;
+/// * barker — `stat` = estimator std of `Delta_hat`, `threshold` = sigma;
+/// * confidence — `stat` = `mean - mu0`, `threshold` = Bernstein bound.
+#[derive(Clone, Copy, Debug)]
+pub struct StageTrace {
+    pub n_used: usize,
+    pub stat: f64,
+    pub threshold: f64,
+}
+
+/// What a decision reported back to the step driver.
+#[derive(Clone, Copy, Debug)]
+pub struct AcceptOutcome {
+    pub accept: bool,
+    /// Datapoints examined.
+    pub n_used: usize,
+    /// Mini-batch stages run (1 for exact, 0 for a data-free rejection).
+    pub stages: usize,
+    /// Final sample mean of the l_i (NaN for a data-free rejection).
+    pub mean: f64,
+    /// Rule-specific final statistic (t for austerity, `Delta_hat` for
+    /// barker, `mean - mu0` for exact/confidence).
+    pub stat: f64,
+}
+
+impl AcceptOutcome {
+    /// A proposal with zero prior mass (`log_correction = +inf`) is
+    /// rejected without touching data or the scheduler.
+    pub(crate) fn rejected_free() -> Self {
+        AcceptOutcome {
+            accept: false,
+            n_used: 0,
+            stages: 0,
+            mean: f64::NAN,
+            stat: f64::NEG_INFINITY,
+        }
+    }
+}
+
+/// A budgeted accept/reject rule for one proposed MH move.
+///
+/// `moments(idx)` returns `(sum_i l_i, sum_i l_i^2)` over the requested
+/// indices — the same closure for the cached and uncached step paths.
+/// Implementations must clear and then fill `trace` (one entry per
+/// stage) and draw from `rng` in a fixed, documented order.
+pub trait AcceptanceTest {
+    /// Short label for experiment CSVs and benches.
+    fn name(&self) -> &'static str;
+
+    /// Decide accept/reject for a proposal over a population of
+    /// `n_total` log-likelihood differences.
+    fn decide<F: FnMut(&[usize]) -> (f64, f64)>(
+        &self,
+        n_total: usize,
+        log_correction: f64,
+        moments: F,
+        sched: &mut MinibatchScheduler,
+        idx_buf: &mut Vec<usize>,
+        trace: &mut Vec<StageTrace>,
+        rng: &mut Pcg64,
+    ) -> AcceptOutcome;
+}
+
+// ---------------------------------------------------------------------------
+// Exact
+
+/// The classic full-data MH test: `mean l > (ln u + log_correction)/N`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExactTest;
+
+impl AcceptanceTest for ExactTest {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn decide<F: FnMut(&[usize]) -> (f64, f64)>(
+        &self,
+        n_total: usize,
+        log_correction: f64,
+        moments: F,
+        _sched: &mut MinibatchScheduler,
+        idx_buf: &mut Vec<usize>,
+        trace: &mut Vec<StageTrace>,
+        rng: &mut Pcg64,
+    ) -> AcceptOutcome {
+        trace.clear();
+        let u = rng.uniform_pos();
+        if log_correction == f64::INFINITY {
+            return AcceptOutcome::rejected_free();
+        }
+        let n = n_total as f64;
+        let mu0 = (u.ln() + log_correction) / n;
+        // chunked full scan through the reusable buffer: identical
+        // chunking/accumulation order to `full_moments_buf`, no
+        // length-N index vector, no per-step allocation
+        let (s, _) = full_scan_moments(n_total, idx_buf, moments);
+        let mean = s / n;
+        let accept = mean > mu0;
+        trace.push(StageTrace { n_used: n_total, stat: mean - mu0, threshold: 0.0 });
+        AcceptOutcome { accept, n_used: n_total, stages: 1, mean, stat: mean - mu0 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Austerity (paper Alg. 1)
+
+/// The paper's sequential Student-t test as an `AcceptanceTest`. The
+/// decision loop is `austerity::seq_test_core` — the same code the
+/// standalone `seq_mh_test` entry points run — so porting onto the trait
+/// changed no decision bits.
+#[derive(Clone, Copy, Debug)]
+pub struct AusterityTest {
+    pub cfg: SeqTestConfig,
+}
+
+impl AusterityTest {
+    pub fn new(eps: f64, batch_size: usize) -> Self {
+        AusterityTest { cfg: SeqTestConfig::new(eps, batch_size) }
+    }
+}
+
+impl AcceptanceTest for AusterityTest {
+    fn name(&self) -> &'static str {
+        "austerity"
+    }
+
+    fn decide<F: FnMut(&[usize]) -> (f64, f64)>(
+        &self,
+        n_total: usize,
+        log_correction: f64,
+        moments: F,
+        sched: &mut MinibatchScheduler,
+        idx_buf: &mut Vec<usize>,
+        trace: &mut Vec<StageTrace>,
+        rng: &mut Pcg64,
+    ) -> AcceptOutcome {
+        trace.clear();
+        let u = rng.uniform_pos();
+        if log_correction == f64::INFINITY {
+            return AcceptOutcome::rejected_free();
+        }
+        let mu0 = (u.ln() + log_correction) / n_total as f64;
+        let out =
+            seq_test_core(n_total, moments, mu0, &self.cfg, sched, rng, idx_buf, Some(trace));
+        AcceptOutcome {
+            accept: out.accept,
+            n_used: out.n_used,
+            stages: out.stages,
+            mean: out.mean,
+            stat: out.t_stat,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Barker (Seita et al. 2017)
+
+/// Noise-corrected minibatch Barker test.
+///
+/// The exact Barker rule accepts with probability
+/// `g(Delta) = 1/(1 + e^-Delta)` where `Delta = N*mean(l) -
+/// log_correction` is the log MH ratio — equivalently, accept iff
+/// `Delta + V > 0` with `V ~ Logistic(0, 1)`. The minibatch estimate
+/// `Delta_hat` already carries ~`N(0, sd^2)` subsampling noise; the test
+/// grows the sample until `sd <= sigma`, tops the noise up to exactly
+/// `sigma` with an extra normal draw, and adds `X_corr ~ C_sigma`
+/// (`stats::logistic_corr`) so the total perturbation is logistic.
+/// Exhausting the population degenerates to the *exact* Barker test
+/// (sd = 0, full-noise draw), so the decision is always well defined.
+#[derive(Clone, Debug)]
+pub struct BarkerTest {
+    /// Target noise level sigma of the corrected decision (<= 1.1).
+    pub sigma: f64,
+    /// Mini-batch increment m.
+    pub batch_size: usize,
+    corr: Arc<LogisticCorrection>,
+}
+
+impl BarkerTest {
+    pub fn new(sigma: f64, batch_size: usize) -> Self {
+        assert!(batch_size >= 2, "barker batch_size >= 2");
+        BarkerTest { sigma, batch_size, corr: LogisticCorrection::shared(sigma) }
+    }
+
+    /// The tabulated correction distribution backing this test.
+    pub fn correction(&self) -> &LogisticCorrection {
+        &self.corr
+    }
+}
+
+impl AcceptanceTest for BarkerTest {
+    fn name(&self) -> &'static str {
+        "barker"
+    }
+
+    fn decide<F: FnMut(&[usize]) -> (f64, f64)>(
+        &self,
+        n_total: usize,
+        log_correction: f64,
+        mut moments: F,
+        sched: &mut MinibatchScheduler,
+        idx_buf: &mut Vec<usize>,
+        trace: &mut Vec<StageTrace>,
+        rng: &mut Pcg64,
+    ) -> AcceptOutcome {
+        trace.clear();
+        if log_correction == f64::INFINITY {
+            return AcceptOutcome::rejected_free();
+        }
+        let n = n_total as f64;
+        sched.reset();
+        let mut acc = MomentAccumulator::new();
+        let mut stages = 0usize;
+        loop {
+            let drawn = sched.next_batch_into(self.batch_size, idx_buf, rng);
+            debug_assert!(drawn > 0, "population exhausted without decision");
+            let (s, s2) = moments(idx_buf);
+            acc.add_batch(s, s2, drawn);
+            stages += 1;
+
+            let used = acc.n();
+            // std of Delta_hat = N * mean(l_batch): finite-population
+            // corrected, exactly 0 once the scan is complete
+            let sd = n * acc.mean_std_fpc(n_total);
+            trace.push(StageTrace { n_used: used, stat: sd, threshold: self.sigma });
+
+            if sd <= self.sigma || used == n_total {
+                let delta_hat = n * acc.mean() - log_correction;
+                let top_up = (self.sigma * self.sigma - sd * sd).max(0.0);
+                let x_nc = if top_up > 0.0 { top_up.sqrt() * rng.normal() } else { 0.0 };
+                let x_corr = self.corr.sample(rng);
+                return AcceptOutcome {
+                    accept: delta_hat + x_nc + x_corr > 0.0,
+                    n_used: used,
+                    stages,
+                    mean: acc.mean(),
+                    stat: delta_hat,
+                };
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Confidence sampler (Bardenet, Doucet & Holmes)
+
+/// Configuration of the empirical-Bernstein confidence test.
+#[derive(Clone, Copy, Debug)]
+pub struct ConfidenceConfig {
+    /// Total wrong-decision budget per test; the stage schedule spends
+    /// `delta_t = delta / 2^t`.
+    pub delta: f64,
+    /// First mini-batch size; later batches grow geometrically.
+    pub batch_size: usize,
+    /// Batch growth factor (Bardenet et al. recommend geometric growth).
+    pub grow: f64,
+    /// A-priori bound on the range of the l_i (the paper's
+    /// C_{theta,theta'}). `None` falls back to `range_kappa *
+    /// sample_std` — the practical variant when no Lipschitz bound is
+    /// available (heuristic: the bound is then only approximate).
+    pub range: Option<f64>,
+    /// Multiplier for the empirical range fallback.
+    pub range_kappa: f64,
+}
+
+impl ConfidenceConfig {
+    pub fn new(delta: f64, batch_size: usize) -> Self {
+        assert!(delta > 0.0 && delta < 1.0, "confidence delta in (0, 1): got {delta}");
+        assert!(batch_size >= 2, "confidence batch_size >= 2");
+        ConfidenceConfig { delta, batch_size, grow: 2.0, range: None, range_kappa: 4.0 }
+    }
+
+    /// Use a known bound on the spread of the l_i instead of the
+    /// empirical fallback.
+    pub fn with_range(mut self, range: f64) -> Self {
+        assert!(range > 0.0);
+        self.range = Some(range);
+        self
+    }
+}
+
+/// Bardenet-style adaptive subsampling: stop as soon as the
+/// empirical-Bernstein concentration bound
+/// `c_n = sigma_hat * sqrt(2 log(3/delta_t)/n) + 6 R log(3/delta_t)/n`
+/// separates the running mean from `mu0`; the exact decision is forced
+/// when the scan completes.
+#[derive(Clone, Copy, Debug)]
+pub struct ConfidenceTest {
+    pub cfg: ConfidenceConfig,
+}
+
+impl ConfidenceTest {
+    pub fn new(delta: f64, batch_size: usize) -> Self {
+        ConfidenceTest { cfg: ConfidenceConfig::new(delta, batch_size) }
+    }
+}
+
+impl AcceptanceTest for ConfidenceTest {
+    fn name(&self) -> &'static str {
+        "confidence"
+    }
+
+    fn decide<F: FnMut(&[usize]) -> (f64, f64)>(
+        &self,
+        n_total: usize,
+        log_correction: f64,
+        mut moments: F,
+        sched: &mut MinibatchScheduler,
+        idx_buf: &mut Vec<usize>,
+        trace: &mut Vec<StageTrace>,
+        rng: &mut Pcg64,
+    ) -> AcceptOutcome {
+        trace.clear();
+        let u = rng.uniform_pos();
+        if log_correction == f64::INFINITY {
+            return AcceptOutcome::rejected_free();
+        }
+        let n = n_total as f64;
+        let mu0 = (u.ln() + log_correction) / n;
+        sched.reset();
+        let mut acc = MomentAccumulator::new();
+        let mut stages = 0usize;
+        let mut want = self.cfg.batch_size;
+        loop {
+            let drawn = sched.next_batch_into(want, idx_buf, rng);
+            debug_assert!(drawn > 0, "population exhausted without decision");
+            let (s, s2) = moments(idx_buf);
+            acc.add_batch(s, s2, drawn);
+            stages += 1;
+
+            let used = acc.n();
+            let mean = acc.mean();
+            if used == n_total {
+                // complete scan: the decision is exact
+                trace.push(StageTrace { n_used: used, stat: mean - mu0, threshold: 0.0 });
+                return AcceptOutcome {
+                    accept: mean > mu0,
+                    n_used: used,
+                    stages,
+                    mean,
+                    stat: mean - mu0,
+                };
+            }
+            let sigma_hat = acc.sample_std();
+            // geometric error spending: sum_t delta/2^t < delta
+            let delta_t = self.cfg.delta / (1u64 << stages.min(50)) as f64;
+            let log3d = (3.0 / delta_t).ln();
+            let range = self.cfg.range.unwrap_or(self.cfg.range_kappa * sigma_hat);
+            let un = used as f64;
+            let bound = sigma_hat * (2.0 * log3d / un).sqrt() + 6.0 * range * log3d / un;
+            trace.push(StageTrace { n_used: used, stat: mean - mu0, threshold: bound });
+            if (mean - mu0).abs() > bound {
+                return AcceptOutcome {
+                    accept: mean > mu0,
+                    n_used: used,
+                    stages,
+                    mean,
+                    stat: mean - mu0,
+                };
+            }
+            want = (want as f64 * self.cfg.grow).ceil() as usize;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::traits::testutil::FixedPopulation;
+    use crate::models::traits::LlDiffModel;
+    use crate::stats::logistic_corr::logistic_cdf;
+
+    /// Run one decision of `test` against a fixed l-population.
+    fn decide_once<T: AcceptanceTest>(
+        test: &T,
+        model: &FixedPopulation,
+        log_correction: f64,
+        rng: &mut Pcg64,
+        sched: &mut MinibatchScheduler,
+        buf: &mut Vec<usize>,
+        trace: &mut Vec<StageTrace>,
+    ) -> AcceptOutcome {
+        test.decide(
+            model.n(),
+            log_correction,
+            |idx| model.lldiff_moments(idx, &(), &()),
+            sched,
+            buf,
+            trace,
+            rng,
+        )
+    }
+
+    fn harness(n: usize) -> (MinibatchScheduler, Vec<usize>, Vec<StageTrace>) {
+        (MinibatchScheduler::new(n), Vec::new(), Vec::new())
+    }
+
+    #[test]
+    fn exact_test_acceptance_rate_matches_formula() {
+        // Pa = min(1, exp(N*l - c))
+        let n = 40;
+        let (l, c) = (0.01, 0.6f64);
+        let want = (n as f64 * l - c).exp(); // ~0.819
+        let model = FixedPopulation { ls: vec![l; n] };
+        let (mut sched, mut buf, mut trace) = harness(n);
+        let mut rng = Pcg64::seeded(3);
+        let mut acc = 0usize;
+        let trials = 40_000;
+        for _ in 0..trials {
+            let out = decide_once(&ExactTest, &model, c, &mut rng, &mut sched, &mut buf, &mut trace);
+            assert_eq!(out.n_used, n);
+            assert_eq!(out.stages, 1);
+            acc += out.accept as usize;
+        }
+        let rate = acc as f64 / trials as f64;
+        assert!((rate - want).abs() < 0.01, "rate {rate} want {want}");
+    }
+
+    #[test]
+    fn infinite_correction_rejects_without_data_for_every_rule() {
+        let model = FixedPopulation { ls: vec![1.0; 64] };
+        let (mut sched, mut buf, mut trace) = harness(64);
+        let mut rng = Pcg64::seeded(0);
+        let exact = ExactTest;
+        let aust = AusterityTest::new(0.05, 8);
+        let barker = BarkerTest::new(1.0, 8);
+        let conf = ConfidenceTest::new(0.05, 8);
+
+        macro_rules! check {
+            ($t:expr) => {{
+                let out = decide_once(
+                    &$t,
+                    &model,
+                    f64::INFINITY,
+                    &mut rng,
+                    &mut sched,
+                    &mut buf,
+                    &mut trace,
+                );
+                assert!(!out.accept);
+                assert_eq!(out.n_used, 0);
+                assert_eq!(out.stages, 0);
+            }};
+        }
+        check!(exact);
+        check!(aust);
+        check!(barker);
+        check!(conf);
+    }
+
+    #[test]
+    fn austerity_trait_is_bit_identical_to_seq_mh_test() {
+        // the trait port must replay the standalone entry point exactly:
+        // same u draw, same scheduler draws, same decision
+        use crate::coordinator::austerity::seq_mh_test;
+        let mut gen = Pcg64::seeded(11);
+        let n = 4_000;
+        let ls: Vec<f64> = (0..n).map(|_| 0.001 + 0.02 * gen.normal()).collect();
+        let model = FixedPopulation { ls };
+        let test = AusterityTest::new(0.05, 300);
+        for seed in 0..20u64 {
+            let (mut sched_a, mut buf_a, mut trace) = harness(n);
+            let mut rng_a = Pcg64::new(77, seed);
+            let out_a =
+                decide_once(&test, &model, 0.3, &mut rng_a, &mut sched_a, &mut buf_a, &mut trace);
+
+            let mut rng_b = Pcg64::new(77, seed);
+            let u = rng_b.uniform_pos();
+            let mu0 = (u.ln() + 0.3) / n as f64;
+            let mut sched_b = MinibatchScheduler::new(n);
+            let mut buf_b = Vec::new();
+            let out_b = seq_mh_test(
+                &model, &(), &(), mu0, &test.cfg, &mut sched_b, &mut rng_b, &mut buf_b,
+            );
+            assert_eq!(out_a.accept, out_b.accept, "seed {seed}");
+            assert_eq!(out_a.n_used, out_b.n_used, "seed {seed}");
+            assert_eq!(out_a.stages, out_b.stages, "seed {seed}");
+            assert_eq!(out_a.stat.to_bits(), out_b.t_stat.to_bits(), "seed {seed}");
+            assert_eq!(out_a.stages, trace.len(), "trace records every stage");
+            // the two generators must be in the same stream position
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+        }
+    }
+
+    #[test]
+    fn barker_acceptance_matches_logistic_probability() {
+        // constant population: zero variance => the first batch pins the
+        // mean exactly, the decision is the exact Barker rule, so the
+        // acceptance rate must be logistic(Delta).
+        let n = 400;
+        let l = 0.005;
+        let c = 1.0;
+        let delta = n as f64 * l - c; // = 1.0
+        let want = logistic_cdf(delta);
+        let model = FixedPopulation { ls: vec![l; n] };
+        let test = BarkerTest::new(1.0, 100);
+        let (mut sched, mut buf, mut trace) = harness(n);
+        let mut rng = Pcg64::seeded(5);
+        let trials = 40_000;
+        let mut acc = 0usize;
+        for _ in 0..trials {
+            let out = decide_once(&test, &model, c, &mut rng, &mut sched, &mut buf, &mut trace);
+            assert_eq!(out.n_used, 100);
+            assert_eq!(out.stages, 1);
+            assert!((out.stat - delta).abs() < 1e-9);
+            acc += out.accept as usize;
+        }
+        let rate = acc as f64 / trials as f64;
+        assert!((rate - want).abs() < 0.012, "rate {rate} want {want}");
+    }
+
+    #[test]
+    fn barker_consumes_more_data_when_noisy() {
+        let mut gen = Pcg64::seeded(1);
+        let n = 10_000;
+        // per-point spread large enough that one batch of 500 leaves
+        // sd(Delta_hat) = N*sigma_l/sqrt(500) ~ 4.5 >> 1
+        let ls: Vec<f64> = (0..n).map(|_| 0.01 * gen.normal()).collect();
+        let model = FixedPopulation { ls };
+        let test = BarkerTest::new(1.0, 500);
+        let (mut sched, mut buf, mut trace) = harness(n);
+        let mut rng = Pcg64::seeded(2);
+        let out = decide_once(&test, &model, 0.0, &mut rng, &mut sched, &mut buf, &mut trace);
+        assert!(out.stages > 1, "stages {}", out.stages);
+        assert_eq!(out.stages, trace.len());
+        // trace sds decrease toward the sigma target
+        for w in trace.windows(2) {
+            assert!(w[1].stat <= w[0].stat * 1.5, "sd should shrink: {trace:?}");
+        }
+    }
+
+    #[test]
+    fn barker_exhausts_to_exact_barker_on_hard_populations() {
+        // spread so large the sd target is unreachable: the test must
+        // run to n = N and still decide (sd -> 0 via the fpc).
+        let mut gen = Pcg64::seeded(3);
+        let n = 300;
+        let ls: Vec<f64> = (0..n).map(|_| 0.5 * gen.normal()).collect();
+        let model = FixedPopulation { ls };
+        let test = BarkerTest::new(0.5, 100);
+        let (mut sched, mut buf, mut trace) = harness(n);
+        let mut rng = Pcg64::seeded(4);
+        let out = decide_once(&test, &model, 0.0, &mut rng, &mut sched, &mut buf, &mut trace);
+        assert_eq!(out.n_used, n);
+        assert_eq!(out.stages, 3);
+    }
+
+    #[test]
+    fn confidence_obvious_cases_decide_on_first_batch() {
+        let mut gen = Pcg64::seeded(6);
+        let n = 10_000;
+        let ls: Vec<f64> = (0..n).map(|_| 1.0 + 0.01 * gen.normal()).collect();
+        let model = FixedPopulation { ls };
+        let test = ConfidenceTest::new(0.05, 500);
+        let (mut sched, mut buf, mut trace) = harness(n);
+        let mut rng = Pcg64::seeded(7);
+        // mu0 far below the mean: ln u < 0 so mu0 <= -something/n < 1
+        let out = decide_once(&test, &model, 0.0, &mut rng, &mut sched, &mut buf, &mut trace);
+        assert!(out.accept);
+        assert_eq!(out.stages, 1);
+        assert_eq!(out.n_used, 500);
+    }
+
+    #[test]
+    fn confidence_exhaustion_matches_exact_decision() {
+        crate::testkit::forall(32, |gen| {
+            let n = gen.below(1_500) + 64;
+            let ls: Vec<f64> = (0..n).map(|_| gen.normal()).collect();
+            let mean = ls.iter().sum::<f64>() / n as f64;
+            let model = FixedPopulation { ls };
+            // log_correction that puts mu0 within a hair of the mean for
+            // u ~ 1: ln(u) ~ -1 typical; pick c = mean * n so mu0 =
+            // mean + ln(u)/n, forcing many stages
+            let c = mean * n as f64;
+            let test = ConfidenceTest::new(1e-6, 64);
+            let (mut sched, mut buf, mut trace) = harness(n);
+            let seed = gen.next_u64();
+            let mut rng = Pcg64::seeded(seed);
+            let out = decide_once(&test, &model, c, &mut rng, &mut sched, &mut buf, &mut trace);
+            // replay the u draw to recover mu0 and the exact decision
+            let mut rng2 = Pcg64::seeded(seed);
+            let mu0 = (rng2.uniform_pos().ln() + c) / n as f64;
+            assert_eq!(out.accept, mean > mu0, "decision must match exact");
+            if out.n_used == n {
+                assert_eq!(out.stages, trace.len());
+            }
+        });
+    }
+
+    #[test]
+    fn confidence_tighter_delta_uses_no_less_data() {
+        // the stage schedule is delta-independent, so runs share scheduler
+        // prefixes and a tighter budget can only stop later
+        let mut gen = Pcg64::seeded(8);
+        let n = 8_000;
+        let shift = 0.02;
+        let ls: Vec<f64> = (0..n).map(|_| shift + gen.normal()).collect();
+        let model = FixedPopulation { ls };
+        let mut used = Vec::new();
+        for &delta in &[1e-6, 1e-3, 0.2] {
+            let test = ConfidenceTest::new(delta, 200);
+            let (mut sched, mut buf, mut trace) = harness(n);
+            let mut rng = Pcg64::seeded(99);
+            let out = decide_once(&test, &model, 0.0, &mut rng, &mut sched, &mut buf, &mut trace);
+            used.push(out.n_used);
+        }
+        assert!(used[0] >= used[1] && used[1] >= used[2], "{used:?}");
+    }
+
+    #[test]
+    fn confidence_wrong_decision_rate_bounded() {
+        // clear-margin population: the wrong-decision rate must be far
+        // below the delta budget
+        let mut gen = Pcg64::seeded(9);
+        let n = 20_000;
+        let ls: Vec<f64> = (0..n).map(|_| 0.05 + gen.normal()).collect();
+        let mean = ls.iter().sum::<f64>() / n as f64;
+        let model = FixedPopulation { ls };
+        let test = ConfidenceTest::new(0.05, 500);
+        let (mut sched, mut buf, mut trace) = harness(n);
+        let mut wrong = 0usize;
+        let trials = 200;
+        for s in 0..trials {
+            let mut rng = Pcg64::new(1_000 + s, 0);
+            let mut rng2 = Pcg64::new(1_000 + s, 0);
+            let out = decide_once(&test, &model, 0.0, &mut rng, &mut sched, &mut buf, &mut trace);
+            let mu0 = rng2.uniform_pos().ln() / n as f64;
+            wrong += (out.accept != (mean > mu0)) as usize;
+        }
+        assert!(wrong <= 15, "wrong {wrong}/{trials}");
+    }
+
+    #[test]
+    fn trace_has_one_entry_per_stage_for_every_rule() {
+        let mut gen = Pcg64::seeded(10);
+        let n = 3_000;
+        let ls: Vec<f64> = (0..n).map(|_| 0.002 + 0.05 * gen.normal()).collect();
+        let model = FixedPopulation { ls };
+        let (mut sched, mut buf, mut trace) = harness(n);
+        let mut rng = Pcg64::seeded(12);
+        let aust = AusterityTest::new(0.01, 250);
+        let barker = BarkerTest::new(1.0, 250);
+        let conf = ConfidenceTest::new(0.01, 250);
+        macro_rules! check {
+            ($t:expr) => {{
+                let out =
+                    decide_once(&$t, &model, 0.0, &mut rng, &mut sched, &mut buf, &mut trace);
+                assert_eq!(out.stages, trace.len(), "{}", $t.name());
+                assert!(trace.iter().all(|s| s.n_used > 0));
+            }};
+        }
+        check!(ExactTest);
+        check!(aust);
+        check!(barker);
+        check!(conf);
+    }
+}

@@ -5,8 +5,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::coordinator::accept::AcceptanceTest;
 use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
-use crate::coordinator::mh::MhMode;
 use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
 use crate::stats::Pcg64;
 
@@ -123,13 +123,14 @@ where
     (samples, stats)
 }
 
-/// Run an MH chain; `f` maps the current parameter to the scalar test
+/// Run an MH chain under any acceptance rule (`&MhMode` or a concrete
+/// `AcceptanceTest`); `f` maps the current parameter to the scalar test
 /// function recorded every `thin` steps after `burn_in` steps.
 #[allow(clippy::too_many_arguments)]
-pub fn run_chain<M, K, F>(
+pub fn run_chain<M, K, T, F>(
     model: &M,
     kernel: &K,
-    mode: &MhMode,
+    mode: &T,
     init: M::Param,
     budget: Budget,
     burn_in: usize,
@@ -140,6 +141,7 @@ pub fn run_chain<M, K, F>(
 where
     M: LlDiffModel,
     K: ProposalKernel<M::Param>,
+    T: AcceptanceTest,
     F: FnMut(&M::Param) -> f64,
 {
     drive_chain(
@@ -158,10 +160,10 @@ where
 /// cache, so each MH test only evaluates the proposal side. Produces
 /// bit-identical samples to `run_chain` under the same RNG stream.
 #[allow(clippy::too_many_arguments)]
-pub fn run_chain_cached<M, K, F>(
+pub fn run_chain_cached<M, K, T, F>(
     model: &M,
     kernel: &K,
-    mode: &MhMode,
+    mode: &T,
     init: M::Param,
     budget: Budget,
     burn_in: usize,
@@ -172,6 +174,7 @@ pub fn run_chain_cached<M, K, F>(
 where
     M: CachedLlDiff,
     K: ProposalKernel<M::Param>,
+    T: AcceptanceTest,
     F: FnMut(&M::Param) -> f64,
 {
     drive_chain(
@@ -188,6 +191,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::mh::MhMode;
     use crate::models::traits::Proposal;
     use crate::stats::welford::Welford;
 

@@ -16,9 +16,9 @@
 //!   vector statistics (predictive means, inclusion counts) without a
 //!   second pass over samples.
 
+use crate::coordinator::accept::AcceptanceTest;
 use crate::coordinator::chain::{drive_chain, Budget, ChainStats, Sample};
 use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
-use crate::coordinator::mh::MhMode;
 use crate::metrics::convergence::{cross_chain, Convergence};
 use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
 use crate::stats::Pcg64;
@@ -203,11 +203,12 @@ where
     finish(pairs, start.elapsed())
 }
 
-/// Run K MH chains of `model` under `mode`, one observer per chain.
-pub fn run_engine<M, K, OF, O>(
+/// Run K MH chains of `model` under `mode` — any `AcceptanceTest`
+/// (`&MhMode` or a concrete rule) — one observer per chain.
+pub fn run_engine<M, K, T, OF, O>(
     model: &M,
     kernel: &K,
-    mode: &MhMode,
+    mode: &T,
     init: M::Param,
     cfg: &EngineConfig,
     make_observer: OF,
@@ -215,6 +216,7 @@ pub fn run_engine<M, K, OF, O>(
 where
     M: LlDiffModel + Sync,
     K: ProposalKernel<M::Param> + Sync,
+    T: AcceptanceTest + Sync,
     OF: Fn(usize) -> O + Sync,
     O: ChainObserver<M::Param>,
 {
@@ -223,10 +225,10 @@ where
 
 /// `run_engine` on the state-caching fast path: each chain owns a
 /// model cache (`CachedLlDiff`), halving hot-path FLOPs per decision.
-pub fn run_engine_cached<M, K, OF, O>(
+pub fn run_engine_cached<M, K, T, OF, O>(
     model: &M,
     kernel: &K,
-    mode: &MhMode,
+    mode: &T,
     init: M::Param,
     cfg: &EngineConfig,
     make_observer: OF,
@@ -234,6 +236,7 @@ pub fn run_engine_cached<M, K, OF, O>(
 where
     M: CachedLlDiff + Sync,
     K: ProposalKernel<M::Param> + Sync,
+    T: AcceptanceTest + Sync,
     OF: Fn(usize) -> O + Sync,
     O: ChainObserver<M::Param>,
 {
@@ -265,6 +268,7 @@ fn finish<O>(pairs: Vec<(ChainRun, O)>, wall: std::time::Duration) -> EngineResu
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::mh::MhMode;
     use crate::models::traits::Proposal;
 
     /// 1-d Gaussian posterior split over N identical "datapoints".

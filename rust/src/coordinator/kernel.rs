@@ -24,6 +24,7 @@
 //! PottsSweepKernel}`) and the adaptive-epsilon chain in
 //! `coordinator::adaptive::AdaptiveMhKernel`.
 
+use crate::coordinator::accept::AcceptanceTest;
 use crate::coordinator::mh::{mh_step, mh_step_cached, MhMode, MhScratch};
 use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
 use crate::stats::Pcg64;
@@ -59,19 +60,22 @@ pub trait TransitionKernel {
     ) -> StepOutcome;
 }
 
-/// Metropolis-Hastings with a full-data or sequential approximate test
-/// (paper §2 / §4): propose via `proposal`, decide via `mh_step`. This is
-/// the family every `run_chain` / `run_engine` call runs on.
-pub struct MhKernel<'a, M, K> {
+/// Metropolis-Hastings under any `AcceptanceTest` (exact full-data scan,
+/// the paper's sequential test, the Barker test, the confidence sampler,
+/// or a custom rule — `T` defaults to the `MhMode` enum): propose via
+/// `proposal`, decide via `mh_step`. This is the family every
+/// `run_chain` / `run_engine` call runs on.
+pub struct MhKernel<'a, M, K, T = MhMode> {
     pub model: &'a M,
     pub proposal: &'a K,
-    pub mode: &'a MhMode,
+    pub mode: &'a T,
 }
 
-impl<M, K> TransitionKernel for MhKernel<'_, M, K>
+impl<M, K, T> TransitionKernel for MhKernel<'_, M, K, T>
 where
     M: LlDiffModel,
     K: ProposalKernel<M::Param>,
+    T: AcceptanceTest,
 {
     type State = M::Param;
     type Scratch = MhScratch;
@@ -96,18 +100,20 @@ pub struct CachedMhScratch<M: CachedLlDiff> {
 }
 
 /// `MhKernel` on the state-caching fast path (`CachedLlDiff`): decisions
-/// are bit-identical to the uncached kernel under the same RNG stream —
-/// the contract regression-tested in `tests/integration_engine.rs`.
-pub struct CachedMhKernel<'a, M, K> {
+/// are bit-identical to the uncached kernel under the same RNG stream
+/// for every acceptance rule — the contract regression-tested in
+/// `tests/integration_engine.rs` and `tests/integration_accept.rs`.
+pub struct CachedMhKernel<'a, M, K, T = MhMode> {
     pub model: &'a M,
     pub proposal: &'a K,
-    pub mode: &'a MhMode,
+    pub mode: &'a T,
 }
 
-impl<M, K> TransitionKernel for CachedMhKernel<'_, M, K>
+impl<M, K, T> TransitionKernel for CachedMhKernel<'_, M, K, T>
 where
     M: CachedLlDiff,
     K: ProposalKernel<M::Param>,
+    T: AcceptanceTest,
 {
     type State = M::Param;
     type Scratch = CachedMhScratch<M>;

@@ -1,18 +1,34 @@
-//! Metropolis-Hastings step orchestration: the exact O(N) test and the
-//! approximate sequential test behind one interface (paper §2 and §4).
+//! Metropolis-Hastings step orchestration: one step driver over the
+//! pluggable acceptance-test layer (`coordinator::accept`), with the
+//! exact O(N) rule, the paper's sequential test, the minibatch Barker
+//! test and the confidence sampler behind one `MhMode` enum.
 
-use crate::coordinator::austerity::{seq_mh_test, seq_mh_test_cached, SeqTestConfig, SeqTestOutcome};
+use crate::coordinator::accept::{
+    AcceptanceTest, AusterityTest, BarkerTest, ConfidenceConfig, ConfidenceTest, ExactTest,
+    StageTrace,
+};
+use crate::coordinator::austerity::SeqTestConfig;
 use crate::coordinator::scheduler::MinibatchScheduler;
-use crate::models::traits::{full_scan_moments, CachedLlDiff, LlDiffModel, Proposal};
+use crate::models::traits::{CachedLlDiff, LlDiffModel, Proposal};
 use crate::stats::Pcg64;
 
-/// Which accept/reject test to run.
+/// Which accept/reject rule to run. A closed enum over the four
+/// `AcceptanceTest` members, so configurations stay `Clone`/`Debug` and
+/// experiments can switch rules from data; `MhMode` itself implements
+/// `AcceptanceTest` by delegation, and every step/chain/engine entry
+/// point is generic over the trait, so custom rules plug in without
+/// touching this enum.
 #[derive(Clone, Debug)]
 pub enum MhMode {
     /// Classic full-data test (epsilon = 0 baseline).
     Exact,
-    /// Sequential approximate test with the given configuration.
+    /// Sequential approximate test with the given configuration
+    /// (paper Alg. 1).
     Approx(SeqTestConfig),
+    /// Noise-corrected minibatch Barker test (Seita et al. 2017).
+    Barker(BarkerTest),
+    /// Empirical-Bernstein confidence sampler (Bardenet et al.).
+    Confidence(ConfidenceConfig),
 }
 
 impl MhMode {
@@ -29,6 +45,53 @@ impl MhMode {
     pub fn approx_with_bound(bound: crate::coordinator::austerity::BoundSeq, batch: usize) -> MhMode {
         MhMode::Approx(SeqTestConfig { batch_size: batch, bound })
     }
+
+    /// Barker test at noise target `sigma` (builds / reuses the shared
+    /// correction table).
+    pub fn barker(sigma: f64, batch: usize) -> MhMode {
+        MhMode::Barker(BarkerTest::new(sigma, batch))
+    }
+
+    /// Confidence sampler with wrong-decision budget `delta` per test.
+    pub fn confidence(delta: f64, batch: usize) -> MhMode {
+        MhMode::Confidence(ConfidenceConfig::new(delta, batch))
+    }
+}
+
+impl AcceptanceTest for MhMode {
+    fn name(&self) -> &'static str {
+        match self {
+            MhMode::Exact => ExactTest.name(),
+            MhMode::Approx(_) => "austerity",
+            MhMode::Barker(t) => t.name(),
+            MhMode::Confidence(_) => "confidence",
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn decide<F: FnMut(&[usize]) -> (f64, f64)>(
+        &self,
+        n_total: usize,
+        log_correction: f64,
+        moments: F,
+        sched: &mut MinibatchScheduler,
+        idx_buf: &mut Vec<usize>,
+        trace: &mut Vec<StageTrace>,
+        rng: &mut Pcg64,
+    ) -> crate::coordinator::accept::AcceptOutcome {
+        match self {
+            MhMode::Exact => {
+                ExactTest.decide(n_total, log_correction, moments, sched, idx_buf, trace, rng)
+            }
+            MhMode::Approx(cfg) => AusterityTest { cfg: *cfg }
+                .decide(n_total, log_correction, moments, sched, idx_buf, trace, rng),
+            MhMode::Barker(t) => {
+                t.decide(n_total, log_correction, moments, sched, idx_buf, trace, rng)
+            }
+            MhMode::Confidence(cfg) => ConfidenceTest { cfg: *cfg }
+                .decide(n_total, log_correction, moments, sched, idx_buf, trace, rng),
+        }
+    }
 }
 
 /// Result of one MH step.
@@ -37,142 +100,103 @@ pub struct StepInfo {
     pub accepted: bool,
     /// Datapoints examined by the accept/reject test.
     pub n_used: usize,
-    /// Sequential-test stages (1 for exact).
+    /// Test stages (1 for exact, 0 for a data-free rejection).
     pub stages: usize,
 }
 
-/// Reusable per-chain scratch (avoids per-step allocation).
+/// Reusable per-chain scratch (avoids per-step allocation): the
+/// without-replacement scheduler, the chunked-scan index buffer, and the
+/// per-stage trace of the last decision.
 pub struct MhScratch {
     pub sched: MinibatchScheduler,
-    idx_buf: Vec<usize>,
+    pub idx_buf: Vec<usize>,
+    /// Stage-by-stage record of the most recent decision (capacity is
+    /// reused; cleared by every `decide`).
+    pub trace: Vec<StageTrace>,
 }
 
 impl MhScratch {
     pub fn new(n: usize) -> Self {
-        MhScratch { sched: MinibatchScheduler::new(n), idx_buf: Vec::new() }
+        MhScratch {
+            sched: MinibatchScheduler::new(n),
+            idx_buf: Vec::new(),
+            trace: Vec::new(),
+        }
     }
 }
 
-/// Execute one MH accept/reject decision for a proposed move.
+/// Execute one MH accept/reject decision for a proposed move under any
+/// `AcceptanceTest`.
 ///
 /// `proposal.log_correction` must be
 /// `log[rho(cur) q(prop|cur) / (rho(prop) q(cur|prop))]` so that
 /// `mu_0 = (ln u + log_correction) / N` (Eqn. 2). On acceptance `cur` is
 /// overwritten with the proposal's parameter.
-pub fn mh_step<M: LlDiffModel>(
+pub fn mh_step<M, T>(
     model: &M,
     cur: &mut M::Param,
     proposal: Proposal<M::Param>,
-    mode: &MhMode,
+    mode: &T,
     scratch: &mut MhScratch,
     rng: &mut Pcg64,
-) -> StepInfo {
-    let n = model.n() as f64;
-    let u = rng.uniform_pos();
-
-    // A proposal with -inf correction (zero prior mass at cur — cannot
-    // happen for valid chains) or +inf (zero prior mass at prop) resolves
-    // without data.
-    if proposal.log_correction == f64::INFINITY {
-        return StepInfo { accepted: false, n_used: 0, stages: 0 };
-    }
-    let mu0 = (u.ln() + proposal.log_correction) / n;
-
-    let (accepted, outcome): (bool, Option<SeqTestOutcome>) = match mode {
-        MhMode::Exact => {
-            // chunked full scan through the reusable scratch buffer: no
-            // length-N index vector, no per-step allocation
-            let (s, _) = model.full_moments_buf(cur, &proposal.param, &mut scratch.idx_buf);
-            (s / n > mu0, None)
-        }
-        MhMode::Approx(cfg) => {
-            let out = seq_mh_test(
-                model,
-                cur,
-                &proposal.param,
-                mu0,
-                cfg,
-                &mut scratch.sched,
-                rng,
-                &mut scratch.idx_buf,
-            );
-            (out.accept, Some(out))
-        }
-    };
-
-    if accepted {
+) -> StepInfo
+where
+    M: LlDiffModel,
+    T: AcceptanceTest,
+{
+    let cur_ref: &M::Param = cur;
+    let out = mode.decide(
+        model.n(),
+        proposal.log_correction,
+        |idx| model.lldiff_moments(idx, cur_ref, &proposal.param),
+        &mut scratch.sched,
+        &mut scratch.idx_buf,
+        &mut scratch.trace,
+        rng,
+    );
+    if out.accept {
         *cur = proposal.param;
     }
-    match outcome {
-        Some(o) => StepInfo { accepted, n_used: o.n_used, stages: o.stages },
-        None => StepInfo { accepted, n_used: model.n(), stages: 1 },
-    }
+    StepInfo { accepted: out.accept, n_used: out.n_used, stages: out.stages }
 }
 
 /// `mh_step` on the state-caching fast path: current-side per-datapoint
 /// statistics live in `cache` across steps, so each decision computes
 /// only the proposal side (and a rejected step leaves the cache valid
 /// for free). Decisions are bit-identical to `mh_step` under the same
-/// RNG stream — regression-tested in `tests/integration_engine.rs`.
-pub fn mh_step_cached<M: CachedLlDiff>(
+/// RNG stream for every acceptance rule — the moments closure is the
+/// only thing that differs, and the `CachedLlDiff` contract makes it
+/// return identical bits. Regression-tested in
+/// `tests/integration_engine.rs` and `tests/integration_accept.rs`.
+pub fn mh_step_cached<M, T>(
     model: &M,
     cur: &mut M::Param,
     cache: &mut M::Cache,
     proposal: Proposal<M::Param>,
-    mode: &MhMode,
+    mode: &T,
     scratch: &mut MhScratch,
     rng: &mut Pcg64,
-) -> StepInfo {
-    let n = model.n() as f64;
-    let u = rng.uniform_pos();
-
-    if proposal.log_correction == f64::INFINITY {
-        return StepInfo { accepted: false, n_used: 0, stages: 0 };
-    }
-    let mu0 = (u.ln() + proposal.log_correction) / n;
-
+) -> StepInfo
+where
+    M: CachedLlDiff,
+    T: AcceptanceTest,
+{
     model.begin_step(cache);
-    let (accepted, outcome): (bool, Option<SeqTestOutcome>) = match mode {
-        MhMode::Exact => {
-            let (s, _) =
-                cached_full_moments(model, cache, &proposal.param, &mut scratch.idx_buf);
-            (s / n > mu0, None)
-        }
-        MhMode::Approx(cfg) => {
-            let out = seq_mh_test_cached(
-                model,
-                cache,
-                &proposal.param,
-                mu0,
-                cfg,
-                &mut scratch.sched,
-                rng,
-                &mut scratch.idx_buf,
-            );
-            (out.accept, Some(out))
-        }
-    };
-    model.end_step(cache, &proposal.param, accepted);
-
-    if accepted {
+    let cache_ref = &mut *cache;
+    let out = mode.decide(
+        model.n(),
+        proposal.log_correction,
+        |idx| model.cached_moments(cache_ref, idx, &proposal.param),
+        &mut scratch.sched,
+        &mut scratch.idx_buf,
+        &mut scratch.trace,
+        rng,
+    );
+    model.end_step(cache, &proposal.param, out.accept);
+    if out.accept {
         *cur = proposal.param;
     }
-    match outcome {
-        Some(o) => StepInfo { accepted, n_used: o.n_used, stages: o.stages },
-        None => StepInfo { accepted, n_used: model.n(), stages: 1 },
-    }
-}
-
-/// Full-population moments through the cache; shares `full_scan_moments`
-/// with the uncached exact path, so both accumulate in the same order
-/// (bit-identity by construction).
-fn cached_full_moments<M: CachedLlDiff>(
-    model: &M,
-    cache: &mut M::Cache,
-    prop: &M::Param,
-    buf: &mut Vec<usize>,
-) -> (f64, f64) {
-    full_scan_moments(model.n(), buf, |idx| model.cached_moments(cache, idx, prop))
+    StepInfo { accepted: out.accept, n_used: out.n_used, stages: out.stages }
 }
 
 #[cfg(test)]
@@ -225,16 +249,24 @@ mod tests {
         let mut scratch = MhScratch::new(50);
         let mut rng = Pcg64::seeded(2);
         let mut cur = ();
-        let info = mh_step(
-            &model,
-            &mut cur,
-            Proposal { param: (), log_correction: f64::INFINITY },
-            &MhMode::Exact,
-            &mut scratch,
-            &mut rng,
-        );
-        assert!(!info.accepted);
-        assert_eq!(info.n_used, 0);
+        for mode in [
+            MhMode::Exact,
+            MhMode::approx(0.05, 10),
+            MhMode::barker(1.0, 10),
+            MhMode::confidence(0.05, 10),
+        ] {
+            let info = mh_step(
+                &model,
+                &mut cur,
+                Proposal { param: (), log_correction: f64::INFINITY },
+                &mode,
+                &mut scratch,
+                &mut rng,
+            );
+            assert!(!info.accepted);
+            assert_eq!(info.n_used, 0);
+            assert_eq!(info.stages, 0);
+        }
     }
 
     #[test]
@@ -269,37 +301,38 @@ mod tests {
 
     #[test]
     fn approx_matches_exact_acceptance_when_unambiguous() {
-        // Wide margin between mu and mu0: approximate acceptance rate must
-        // track the exact one closely even with a large epsilon.
+        // Wide margin between mu and mu0: every budgeted rule's
+        // acceptance rate must track the exact one closely.
         let n = 10_000;
         let mut rng = Pcg64::seeded(4);
         let ls: Vec<f64> = (0..n).map(|_| 3e-4 + 1e-4 * rng.normal()).collect();
         let model = FixedPopulation { ls };
-        let want = {
-            // Pa = E_u[mu > mu0(u)] = min(1, exp(N mu)); N*mu = 3.0
-            let nm: f64 = 3.0;
-            nm.exp().min(1.0)
-        };
-        assert_eq!(want, 1.0);
+        // Pa = min(1, exp(N mu)); N*mu = 3.0 -> accept ~ always (the
+        // Barker rule accepts with logistic(3) ~ 0.95)
         let mut scratch = MhScratch::new(n);
-        let mode = MhMode::approx(0.05, 500);
-        let mut acc = 0;
-        let mut cur = ();
-        for _ in 0..200 {
-            let info = mh_step(
-                &model,
-                &mut cur,
-                Proposal { param: (), log_correction: 0.0 },
-                &mode,
-                &mut scratch,
-                &mut rng,
-            );
-            assert!(info.n_used <= n);
-            if info.accepted {
-                acc += 1;
+        for (mode, min_acc) in [
+            (MhMode::approx(0.05, 500), 195usize),
+            (MhMode::confidence(0.05, 500), 195),
+            (MhMode::barker(1.0, 500), 180),
+        ] {
+            let mut acc = 0;
+            let mut cur = ();
+            for _ in 0..200 {
+                let info = mh_step(
+                    &model,
+                    &mut cur,
+                    Proposal { param: (), log_correction: 0.0 },
+                    &mode,
+                    &mut scratch,
+                    &mut rng,
+                );
+                assert!(info.n_used <= n);
+                if info.accepted {
+                    acc += 1;
+                }
             }
+            assert!(acc >= min_acc, "mode {mode:?}: acc={acc}");
         }
-        assert!(acc >= 195, "acc={acc}");
     }
 
     #[test]
@@ -312,7 +345,12 @@ mod tests {
             param: cur + rng.normal_scaled(0.0, 0.005),
             log_correction: 0.0,
         };
-        for mode in [MhMode::Exact, MhMode::approx(0.05, 300)] {
+        for mode in [
+            MhMode::Exact,
+            MhMode::approx(0.05, 300),
+            MhMode::barker(1.0, 300),
+            MhMode::confidence(0.05, 300),
+        ] {
             let mut rng_a = Pcg64::new(11, 4);
             let mut rng_b = Pcg64::new(11, 4);
             let mut scratch_a = MhScratch::new(model.n());
@@ -334,10 +372,10 @@ mod tests {
                     &mut scratch_b,
                     &mut rng_b,
                 );
-                assert_eq!(a.accepted, b.accepted, "step {step}");
-                assert_eq!(a.n_used, b.n_used, "step {step}");
-                assert_eq!(a.stages, b.stages, "step {step}");
-                assert_eq!(cur_a.to_bits(), cur_b.to_bits(), "step {step}");
+                assert_eq!(a.accepted, b.accepted, "mode {mode:?} step {step}");
+                assert_eq!(a.n_used, b.n_used, "mode {mode:?} step {step}");
+                assert_eq!(a.stages, b.stages, "mode {mode:?} step {step}");
+                assert_eq!(cur_a.to_bits(), cur_b.to_bits(), "mode {mode:?} step {step}");
             }
         }
     }
@@ -348,6 +386,14 @@ mod tests {
             MhMode::Exact => {}
             _ => panic!("eps=0 must map to exact"),
         }
+    }
+
+    #[test]
+    fn mode_names_label_the_rules() {
+        assert_eq!(MhMode::Exact.name(), "exact");
+        assert_eq!(MhMode::approx(0.05, 100).name(), "austerity");
+        assert_eq!(MhMode::barker(1.0, 100).name(), "barker");
+        assert_eq!(MhMode::confidence(0.05, 100).name(), "confidence");
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! The Layer-3 coordinator: the paper's contribution.
 //!
+//! * `accept` — the pluggable acceptance-test layer: one trait
+//!   (`AcceptanceTest`) behind the exact scan, the paper's sequential
+//!   test, the minibatch Barker test and the confidence sampler
 //! * `austerity` — the sequential approximate MH test (Alg. 1)
-//! * `mh` — exact + approximate MH step orchestration (plus the
+//! * `mh` — MH step orchestration over any acceptance test (plus the
 //!   state-caching fast path `mh_step_cached`)
 //! * `kernel` — the `TransitionKernel` step abstraction every sampler
 //!   family implements (MH exact/approx ± cache here; SGLD ± correction,
@@ -18,6 +21,7 @@
 //! * `delta` — acceptance-probability error via quadrature (Eqn. 6)
 //! * `design` — optimal test design, average & worst-case (§5.2)
 
+pub mod accept;
 pub mod adaptive;
 pub mod austerity;
 pub mod chain;
@@ -29,6 +33,10 @@ pub mod kernel;
 pub mod mh;
 pub mod scheduler;
 
+pub use accept::{
+    AcceptOutcome, AcceptanceTest, AusterityTest, BarkerTest, ConfidenceConfig, ConfidenceTest,
+    ExactTest, StageTrace,
+};
 pub use adaptive::{run_adaptive_chain, AdaptiveMhKernel, EpsSchedule};
 pub use austerity::{seq_mh_test, seq_mh_test_cached, BoundSeq, SeqTestConfig, SeqTestOutcome};
 pub use chain::{drive_chain, run_chain, run_chain_cached, Budget, ChainStats, Sample};

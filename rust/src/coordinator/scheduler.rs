@@ -60,6 +60,19 @@ impl MinibatchScheduler {
     pub fn consumed_slice(&self) -> &[u32] {
         &self.indices[..self.pos]
     }
+
+    /// Draw the next mini-batch of up to `m` fresh indices into `buf` as
+    /// usize (clears `buf`; allocation-free once `buf` has capacity).
+    /// Returns the number drawn — 0 once the population is exhausted.
+    /// This is the one draw-and-convert protocol every sequential
+    /// acceptance rule shares; keeping it here means the rules cannot
+    /// silently diverge.
+    pub fn next_batch_into(&mut self, m: usize, buf: &mut Vec<usize>, rng: &mut Pcg64) -> usize {
+        let batch = self.next_batch(m, rng);
+        buf.clear();
+        buf.extend(batch.iter().map(|&i| i as usize));
+        buf.len()
+    }
 }
 
 /// Convenience: the consumed prefix as usize indices (allocates).
@@ -92,6 +105,27 @@ mod tests {
             }
             assert_eq!(seen.len(), n, "must exhaust the population");
         });
+    }
+
+    #[test]
+    fn next_batch_into_matches_next_batch() {
+        let mut a = MinibatchScheduler::new(50);
+        let mut b = MinibatchScheduler::new(50);
+        let mut rng_a = Pcg64::seeded(3);
+        let mut rng_b = Pcg64::seeded(3);
+        let mut buf = Vec::new();
+        a.reset();
+        b.reset();
+        loop {
+            let va: Vec<usize> =
+                a.next_batch(7, &mut rng_a).iter().map(|&i| i as usize).collect();
+            let n = b.next_batch_into(7, &mut buf, &mut rng_b);
+            assert_eq!(va, buf);
+            assert_eq!(n, va.len());
+            if n == 0 {
+                break;
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! Cross-method risk-vs-budget comparison of the four acceptance rules
+//! (exact / austerity / barker / confidence) on the §6.1
+//! logistic-regression workload.
+//!
+//! Unlike the wall-clock risk figures (fig 2-4), the x-axis here is
+//! `Budget::Data` — cumulative datapoint evaluations — so the comparison
+//! is deterministic and hardware-independent: every rule gets the same
+//! number of likelihood evaluations and we measure how much posterior
+//! accuracy it buys. Risk is the chain-averaged squared error of the
+//! posterior-mean estimate of theta_0 against a long exact run, over
+//! K = 4 engine chains per (rule, budget) cell.
+
+use crate::coordinator::accept::AcceptanceTest;
+use crate::coordinator::chain::Budget;
+use crate::coordinator::engine::{run_engine_cached, EngineConfig};
+use crate::coordinator::mh::MhMode;
+use crate::exp::common::{FigureSink, Scale};
+use crate::exp::population::mnist_like_model;
+use crate::samplers::GaussianRandomWalk;
+
+/// One rule's risk curve over the shared budget grid.
+#[derive(Clone, Debug)]
+pub struct RuleRisk {
+    pub rule: &'static str,
+    /// Datapoint budgets (shared across rules).
+    pub budgets: Vec<u64>,
+    /// Chain-averaged squared error at each budget.
+    pub risk: Vec<f64>,
+    /// Mean fraction of the dataset per decision at the largest budget.
+    pub data_fraction: f64,
+    /// Acceptance rate at the largest budget.
+    pub acceptance: f64,
+}
+
+/// Run the comparison; returns one `RuleRisk` per rule and writes
+/// `fig_accept_risk.csv`.
+pub fn run_fig_accept(scale: Scale) -> Vec<RuleRisk> {
+    let n = scale.n(12_214);
+    let model = mnist_like_model(n, 42);
+    let map = model.map_estimate(80);
+    let kernel = GaussianRandomWalk::new(0.01, model.prior_precision);
+    let batch = 500.min(n / 4).max(16);
+
+    // ground truth: long exact run on K = 4 chains
+    let gt_cfg = EngineConfig::new(4, 5, Budget::Steps(scale.steps(4_000)))
+        .burn_in(scale.steps(400));
+    let gt = run_engine_cached(&model, &kernel, &MhMode::Exact, map.clone(), &gt_cfg, |_c| {
+        |t: &Vec<f64>| t[0]
+    });
+    let truth = {
+        let (mut s, mut k) = (0.0, 0usize);
+        for run in &gt.runs {
+            for smp in &run.samples {
+                s += smp.value;
+                k += 1;
+            }
+        }
+        s / k.max(1) as f64
+    };
+
+    let rules: Vec<MhMode> = vec![
+        MhMode::Exact,
+        MhMode::approx(0.05, batch),
+        MhMode::barker(1.0, batch),
+        MhMode::confidence(0.05, batch),
+    ];
+    // budget grid in units of full scans; burn-in is 20 steps, so even
+    // the exact rule has >= 30 post-burn-in decisions at the smallest
+    let budgets: Vec<u64> = [50u64, 100, 200, 400].iter().map(|k| k * n as u64).collect();
+    let burn_in = 20usize;
+
+    let mut sink = FigureSink::new("fig_accept_risk");
+    sink.header(&["rule", "budget", "risk", "acceptance", "data_fraction", "steps"]);
+    let mut out = Vec::new();
+    for mode in &rules {
+        let rule = mode.name();
+        let mut risk = Vec::with_capacity(budgets.len());
+        let (mut last_frac, mut last_acc) = (0.0, 0.0);
+        for (bi, &b) in budgets.iter().enumerate() {
+            let cfg = EngineConfig::new(4, 900 + bi as u64, Budget::Data(b)).burn_in(burn_in);
+            let res =
+                run_engine_cached(&model, &kernel, mode, map.clone(), &cfg, |_c| {
+                    |t: &Vec<f64>| t[0]
+                });
+            let mut sq = 0.0;
+            let mut chains = 0usize;
+            for run in &res.runs {
+                if run.samples.is_empty() {
+                    continue;
+                }
+                let m: f64 = run.samples.iter().map(|s| s.value).sum::<f64>()
+                    / run.samples.len() as f64;
+                sq += (m - truth) * (m - truth);
+                chains += 1;
+            }
+            let r = if chains > 0 { sq / chains as f64 } else { f64::NAN };
+            last_frac = res.merged.mean_data_fraction(n);
+            last_acc = res.merged.acceptance_rate();
+            sink.row_tagged(
+                rule,
+                &[b as f64, r, last_acc, last_frac, res.merged.steps as f64],
+            );
+            risk.push(r);
+        }
+        out.push(RuleRisk {
+            rule,
+            budgets: budgets.clone(),
+            risk,
+            data_fraction: last_frac,
+            acceptance: last_acc,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig_accept_smoke_runs_all_four_rules() {
+        std::env::set_var("AUSTERITY_FIGURES", "/tmp/austerity_fig_smoke");
+        let out = run_fig_accept(Scale(0.02));
+        assert_eq!(out.len(), 4);
+        let names: Vec<&str> = out.iter().map(|r| r.rule).collect();
+        assert_eq!(names, ["exact", "austerity", "barker", "confidence"]);
+        for r in &out {
+            assert_eq!(r.risk.len(), 4);
+            assert!(r.risk.iter().all(|v| v.is_finite()), "{r:?}");
+            assert!(r.acceptance > 0.0 && r.acceptance <= 1.0, "{r:?}");
+        }
+        // the subsampling rules touch less data per decision than exact
+        assert!((out[0].data_fraction - 1.0).abs() < 1e-9);
+        assert!(out[1].data_fraction < 1.0);
+    }
+}

@@ -1,15 +1,17 @@
 //! Experiment drivers regenerating every figure in the paper's
-//! evaluation (see the per-experiment index in DESIGN.md §5):
+//! evaluation (see the per-experiment index in DESIGN.md §Experiment
+//! index):
 //!
-//! | driver                 | paper figure(s) |
-//! |------------------------|-----------------|
-//! | `fig_analysis`         | 1, 7, 8, 10     |
-//! | `fig_risk`             | 2, 3, 4         |
-//! | `fig_sgld`             | 5               |
-//! | `fig_design`           | 6               |
-//! | `fig_delta`            | 11, 12          |
-//! | `fig_rj`               | 13              |
-//! | `fig_gibbs`            | 14, 15          |
+//! | driver                 | paper figure(s)              |
+//! |------------------------|------------------------------|
+//! | `fig_analysis`         | 1, 7, 8, 10                  |
+//! | `fig_risk`             | 2, 3, 4                      |
+//! | `fig_sgld`             | 5                            |
+//! | `fig_design`           | 6                            |
+//! | `fig_delta`            | 11, 12                       |
+//! | `fig_rj`               | 13                           |
+//! | `fig_gibbs`            | 14, 15                       |
+//! | `fig_accept`           | acceptance-rule comparison (extension) |
 //!
 //! All drivers write CSV series to `target/figures/` (override with
 //! `AUSTERITY_FIGURES`) and take a `Scale` so the bench harness, the CLI
@@ -17,6 +19,7 @@
 
 pub mod ablation;
 pub mod common;
+pub mod fig_accept;
 pub mod fig_analysis;
 pub mod fig_delta;
 pub mod fig_design;
@@ -62,14 +65,17 @@ pub fn run_figure(name: &str, scale: Scale) -> bool {
         "fig15" => {
             fig_gibbs::run_fig15(scale);
         }
+        "fig_accept" => {
+            fig_accept::run_fig_accept(scale);
+        }
         "ablations" => ablation::run_all(scale),
         _ => return false,
     }
     true
 }
 
-/// All figure names in paper order.
+/// All figure names in paper order (plus the acceptance-rule extension).
 pub const ALL_FIGURES: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig10", "fig11",
-    "fig12", "fig13", "fig14", "fig15",
+    "fig12", "fig13", "fig14", "fig15", "fig_accept",
 ];

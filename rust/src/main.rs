@@ -29,9 +29,10 @@ fn main() -> ExitCode {
                 "usage: austerity <info|fig|design|sample> [options]\n\
                  \n\
                  info                          show PJRT platform + artifacts\n\
-                 fig <name|all> [--scale S]    regenerate figure CSVs (fig1..fig15)\n\
+                 fig <name|all> [--scale S]    regenerate figure CSVs (fig1..fig15, fig_accept)\n\
                  design --n N --tol T          worst-case sequential test design\n\
-                 sample [--eps E] [--steps K] [--n N] [--pjrt]\n\
+                 sample [--rule exact|austerity|barker|confidence]\n\
+                        [--eps E] [--sigma S] [--delta D] [--steps K] [--n N] [--pjrt]\n\
                  \n\
                  figures: {}",
                 ALL_FIGURES.join(" ")
@@ -120,15 +121,43 @@ fn design(args: &[String]) -> ExitCode {
 
 fn sample(args: &[String]) -> ExitCode {
     let eps: f64 = flag_value(args, "--eps").and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let sigma: f64 =
+        flag_value(args, "--sigma").and_then(|s| s.parse().ok()).unwrap_or(1.0);
+    let delta: f64 =
+        flag_value(args, "--delta").and_then(|s| s.parse().ok()).unwrap_or(0.05);
     let steps: usize =
         flag_value(args, "--steps").and_then(|s| s.parse().ok()).unwrap_or(200);
     let n: usize =
         flag_value(args, "--n").and_then(|s| s.parse().ok()).unwrap_or(12_214);
+    let rule = flag_value(args, "--rule").unwrap_or_else(|| "austerity".into());
     let use_pjrt = args.iter().any(|a| a == "--pjrt");
 
     let model = austerity::exp::population::mnist_like_model(n, 42);
     let kernel = GaussianRandomWalk::new(0.01, model.prior_precision);
-    let mode = MhMode::approx(eps, 500);
+    let batch = 500.min(n / 4).max(16);
+    let mode = match rule.as_str() {
+        "exact" => MhMode::Exact,
+        "austerity" => MhMode::approx(eps, batch),
+        "barker" => {
+            use austerity::stats::logistic_corr::{SIGMA_MAX, SIGMA_MIN};
+            if !(SIGMA_MIN..=SIGMA_MAX).contains(&sigma) {
+                eprintln!("--sigma must be in [{SIGMA_MIN}, {SIGMA_MAX}]: got {sigma}");
+                return ExitCode::from(2);
+            }
+            MhMode::barker(sigma, batch)
+        }
+        "confidence" => {
+            if !(delta > 0.0 && delta < 1.0) {
+                eprintln!("--delta must be in (0, 1): got {delta}");
+                return ExitCode::from(2);
+            }
+            MhMode::confidence(delta, batch)
+        }
+        other => {
+            eprintln!("unknown rule {other}; known: exact austerity barker confidence");
+            return ExitCode::from(2);
+        }
+    };
     let init = model.map_estimate(60);
 
     // generic over backend via a per-step closure
@@ -168,14 +197,14 @@ fn sample(args: &[String]) -> ExitCode {
                 return ExitCode::FAILURE;
             }
         };
-        println!("backend: pjrt (AOT Pallas kernel), N={n}, eps={eps}");
+        println!("backend: pjrt (AOT Pallas kernel), N={n}, rule={rule}");
         run(&mut |cur, scratch, rng| {
             let prop = kernel.propose(cur, rng);
             let info = mh_step(&pjrt, cur, prop, &mode, scratch, rng);
             (info.accepted, info.n_used)
         });
     } else {
-        println!("backend: native, N={n}, eps={eps}");
+        println!("backend: native, N={n}, rule={rule}");
         run(&mut |cur, scratch, rng| {
             let prop = kernel.propose(cur, rng);
             let info = mh_step(&model, cur, prop, &mode, scratch, rng);

@@ -1,0 +1,150 @@
+//! Regularized incomplete gamma functions and the chi-square tail —
+//! the p-value machinery of the statistical-validation testkit
+//! (`testkit::validate::chi_square_hist`).
+//!
+//! `gamma_p`/`gamma_q` follow the classic series / Lentz continued
+//! fraction split (Numerical Recipes gammp/gammq), accurate to ~1e-12;
+//! `ln_gamma` is shared with the Student-t machinery in `student_t`.
+
+use super::student_t::ln_gamma;
+
+/// Regularized lower incomplete gamma `P(a, x) = gamma(a, x) / Gamma(a)`.
+pub fn gamma_p(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0, "gamma_p: a={a}");
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        gser(a, x)
+    } else {
+        1.0 - gcf(a, x)
+    }
+}
+
+/// Regularized upper incomplete gamma `Q(a, x) = 1 - P(a, x)`, computed
+/// without cancellation in the far tail.
+pub fn gamma_q(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0, "gamma_q: a={a}");
+    if x <= 0.0 {
+        return 1.0;
+    }
+    if x < a + 1.0 {
+        1.0 - gser(a, x)
+    } else {
+        gcf(a, x)
+    }
+}
+
+/// Series representation of P(a, x), convergent for x < a + 1.
+fn gser(a: f64, x: f64) -> f64 {
+    let mut ap = a;
+    let mut sum = 1.0 / a;
+    let mut del = sum;
+    for _ in 0..500 {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * 1e-16 {
+            break;
+        }
+    }
+    sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+}
+
+/// Lentz continued fraction for Q(a, x), convergent for x >= a + 1.
+fn gcf(a: f64, x: f64) -> f64 {
+    const FPMIN: f64 = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / FPMIN;
+    let mut d = 1.0 / b.max(FPMIN);
+    let mut h = d;
+    for i in 1..=500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = b + an / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-15 {
+            break;
+        }
+    }
+    (-x + a * x.ln() - ln_gamma(a)).exp() * h
+}
+
+/// Chi-square CDF with `k` degrees of freedom.
+pub fn chi2_cdf(x: f64, k: f64) -> f64 {
+    assert!(k > 0.0, "chi2_cdf: k={k}");
+    gamma_p(0.5 * k, 0.5 * x)
+}
+
+/// Chi-square upper tail (the goodness-of-fit p-value).
+pub fn chi2_sf(x: f64, k: f64) -> f64 {
+    assert!(k > 0.0, "chi2_sf: k={k}");
+    gamma_q(0.5 * k, 0.5 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::normal::erf;
+
+    #[test]
+    fn p_and_q_are_complementary() {
+        for &a in &[0.5, 1.0, 2.5, 10.0, 60.0] {
+            for &x in &[0.01, 0.5, 1.0, 3.0, 12.0, 80.0] {
+                let s = gamma_p(a, x) + gamma_q(a, x);
+                assert!((s - 1.0).abs() < 1e-12, "a={a} x={x}: {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn half_dof_matches_erf() {
+        // P(1/2, x) = erf(sqrt(x))
+        for &x in &[0.01, 0.2, 1.0, 2.5, 9.0] {
+            let got = gamma_p(0.5, x);
+            let want = erf(x.sqrt());
+            assert!((got - want).abs() < 1e-12, "x={x}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn chi2_two_dof_is_exponential() {
+        // sf(x; 2) = e^{-x/2} exactly
+        for &x in &[0.0, 0.3, 1.0, 4.0, 11.0, 30.0] {
+            let got = chi2_sf(x, 2.0);
+            let want = (-0.5 * x).exp();
+            assert!((got - want).abs() < 1e-12, "x={x}");
+        }
+    }
+
+    #[test]
+    fn chi2_critical_values() {
+        // chi^2_{0.95, 1} = 3.841458820694124
+        assert!((chi2_sf(3.841458820694124, 1.0) - 0.05).abs() < 1e-9);
+        assert!(chi2_sf(0.0, 5.0) == 1.0);
+        assert!((chi2_cdf(0.0, 5.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn chi2_sf_monotone_decreasing() {
+        for &k in &[1.0, 4.0, 9.0, 30.0] {
+            let mut prev = 1.0 + 1e-12;
+            for i in 0..200 {
+                let x = i as f64 * 0.5;
+                let s = chi2_sf(x, k);
+                assert!(s <= prev, "k={k} x={x}");
+                assert!((0.0..=1.0).contains(&s));
+                prev = s;
+            }
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! The Barker-test correction distribution X_corr (Seita et al. 2017,
+//! arXiv:1610.06848, §3).
+//!
+//! The minibatch Barker test accepts when `Delta_hat + X_nc + X_corr > 0`
+//! where `Delta_hat` is the subsampled log MH ratio with (approximately)
+//! `N(0, sigma^2)` estimation noise, `X_nc` tops the noise up to exactly
+//! `sigma`, and `X_corr` is drawn from the *correction distribution*
+//! `C_sigma` defined by the deconvolution identity
+//!
+//! ```text
+//! N(0, sigma^2) * C_sigma = Logistic(0, 1)
+//! ```
+//!
+//! so the total perturbation is standard-logistic and the decision is a
+//! Barker (logistic-rule) acceptance — a valid MH acceptance function.
+//! An exact integrable deconvolution does not exist, so, like the paper,
+//! we solve for a discretized density on a grid: projected Landweber
+//! iterations on `min_c ||K c - logistic||^2, c >= 0` with `K` the
+//! Gaussian convolution operator. The residual is ~1e-3 in sup norm for
+//! `sigma <= 1.1` (it grows sharply beyond; the paper stops at ~1.2).
+//!
+//! Tables are deterministic (fixed grid, fixed iteration count — no RNG)
+//! and cached process-wide by `shared`, so cloning a `BarkerTest` or
+//! spawning K chains never rebuilds them.
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::stats::Pcg64;
+
+/// Variance of the standard Logistic(0, 1): pi^2 / 3.
+pub const LOGISTIC_VAR: f64 = std::f64::consts::PI * std::f64::consts::PI / 3.0;
+
+/// Largest Gaussian noise level the tabulated deconvolution supports.
+pub const SIGMA_MAX: f64 = 1.1;
+
+/// Smallest supported noise level (below this the fixed grid is too
+/// coarse for the Gaussian kernel; the test would waste data anyway).
+pub const SIGMA_MIN: f64 = 0.3;
+
+/// Standard logistic density `e^-|x| / (1 + e^-|x|)^2`.
+pub fn logistic_pdf(x: f64) -> f64 {
+    let e = (-x.abs()).exp();
+    e / ((1.0 + e) * (1.0 + e))
+}
+
+/// Standard logistic CDF `1 / (1 + e^-x)`, stable in both tails.
+pub fn logistic_cdf(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Half-width and point count of the tabulation grid. Correction tails
+/// decay like `e^(-|x| + sigma^2/2)`, so mass beyond 12 is < 1e-4.
+const GRID_HALF: f64 = 12.0;
+const GRID_POINTS: usize = 193;
+const LANDWEBER_ITERS: usize = 3000;
+
+/// Tabulated correction distribution `C_sigma` with inverse-CDF sampling.
+#[derive(Clone)]
+pub struct LogisticCorrection {
+    sigma: f64,
+    lo: f64,
+    h: f64,
+    pdf: Vec<f64>,
+    cdf: Vec<f64>,
+    resid: f64,
+}
+
+impl std::fmt::Debug for LogisticCorrection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LogisticCorrection")
+            .field("sigma", &self.sigma)
+            .field("points", &self.pdf.len())
+            .field("resid", &self.resid)
+            .finish()
+    }
+}
+
+impl LogisticCorrection {
+    /// Solve the discretized deconvolution for this `sigma`. Prefer
+    /// `shared` — tables are immutable and safely reusable.
+    pub fn build(sigma: f64) -> Self {
+        assert!(
+            (SIGMA_MIN..=SIGMA_MAX).contains(&sigma),
+            "barker correction needs sigma in [{SIGMA_MIN}, {SIGMA_MAX}]: got {sigma}"
+        );
+        let m = GRID_POINTS;
+        let h = 2.0 * GRID_HALF / (m - 1) as f64;
+        let xs: Vec<f64> = (0..m).map(|i| -GRID_HALF + i as f64 * h).collect();
+        // Gaussian convolution kernel by grid offset, mass-normalized row.
+        let norm = h / (sigma * (2.0 * std::f64::consts::PI).sqrt());
+        let kern: Vec<f64> = (0..m)
+            .map(|d| {
+                let z = d as f64 * h / sigma;
+                norm * (-0.5 * z * z).exp()
+            })
+            .collect();
+        let target: Vec<f64> = xs.iter().map(|&x| logistic_pdf(x)).collect();
+
+        // K is symmetric with spectral norm <= ~1 (rows sum to ~1), so
+        // plain Landweber `c += K(t - Kc)` (step 1) converges; projecting
+        // onto c >= 0 keeps it a density.
+        let conv = |c: &[f64], out: &mut [f64]| {
+            for i in 0..m {
+                let mut s = 0.0;
+                for (j, &cj) in c.iter().enumerate() {
+                    s += kern[i.abs_diff(j)] * cj;
+                }
+                out[i] = s;
+            }
+        };
+        // init at the moment-matched Gaussian (variance pi^2/3 - sigma^2)
+        let v0 = (LOGISTIC_VAR - sigma * sigma).max(0.25);
+        let mut c: Vec<f64> = xs
+            .iter()
+            .map(|&x| (-0.5 * x * x / v0).exp() / (v0 * 2.0 * std::f64::consts::PI).sqrt())
+            .collect();
+        let mut kc = vec![0.0; m];
+        let mut step = vec![0.0; m];
+        for _ in 0..LANDWEBER_ITERS {
+            conv(&c, &mut kc);
+            for i in 0..m {
+                kc[i] = target[i] - kc[i];
+            }
+            conv(&kc, &mut step);
+            for i in 0..m {
+                c[i] = (c[i] + step[i]).max(0.0);
+            }
+        }
+        conv(&c, &mut kc);
+        let resid = (0..m).map(|i| (kc[i] - target[i]).abs()).fold(0.0, f64::max);
+
+        // normalize to a proper density (trapezoid mass) and tabulate the CDF
+        let mass: f64 = h * (c.iter().sum::<f64>() - 0.5 * (c[0] + c[m - 1]));
+        for v in &mut c {
+            *v /= mass;
+        }
+        let mut cdf = vec![0.0; m];
+        for i in 1..m {
+            cdf[i] = cdf[i - 1] + 0.5 * h * (c[i - 1] + c[i]);
+        }
+        let end = cdf[m - 1];
+        for v in &mut cdf {
+            *v /= end;
+        }
+        LogisticCorrection { sigma, lo: -GRID_HALF, h, pdf: c, cdf, resid }
+    }
+
+    /// Process-wide table cache keyed by the exact bits of `sigma`.
+    pub fn shared(sigma: f64) -> Arc<LogisticCorrection> {
+        static CACHE: OnceLock<Mutex<Vec<Arc<LogisticCorrection>>>> = OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(Vec::new()));
+        let mut guard = cache.lock().unwrap();
+        if let Some(hit) = guard.iter().find(|t| t.sigma.to_bits() == sigma.to_bits()) {
+            return hit.clone();
+        }
+        let built = Arc::new(Self::build(sigma));
+        guard.push(built.clone());
+        built
+    }
+
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// Sup-norm residual `max |N_sigma * c - logistic|` of the solved
+    /// table — the per-decision acceptance-probability error scale.
+    pub fn max_residual(&self) -> f64 {
+        self.resid
+    }
+
+    /// Variance of the tabulated correction (ideally pi^2/3 - sigma^2).
+    pub fn variance(&self) -> f64 {
+        let m = self.pdf.len();
+        let mut s = 0.0;
+        for (i, &p) in self.pdf.iter().enumerate() {
+            let x = self.lo + i as f64 * self.h;
+            let w = if i == 0 || i == m - 1 { 0.5 } else { 1.0 };
+            s += w * x * x * p;
+        }
+        s * self.h
+    }
+
+    /// Draw one `X_corr` by inverse-CDF with in-cell linear
+    /// interpolation. Allocation-free (hot-path safe).
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let u = rng.uniform();
+        let cdf = &self.cdf;
+        let (mut lo, mut hi) = (0usize, cdf.len() - 1);
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if cdf[mid] <= u {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let seg = (cdf[hi] - cdf[lo]).max(1e-300);
+        self.lo + self.h * (lo as f64 + (u - cdf[lo]) / seg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Histogram;
+
+    #[test]
+    fn logistic_pdf_cdf_consistent() {
+        assert!((logistic_cdf(0.0) - 0.5).abs() < 1e-15);
+        assert!((logistic_pdf(0.0) - 0.25).abs() < 1e-15);
+        for &x in &[-8.0, -2.5, -0.3, 0.0, 0.7, 3.1, 9.0] {
+            // symmetry and numerical derivative
+            assert!((logistic_cdf(x) + logistic_cdf(-x) - 1.0).abs() < 1e-14);
+            let h = 1e-6;
+            let fd = (logistic_cdf(x + h) - logistic_cdf(x - h)) / (2.0 * h);
+            assert!((fd - logistic_pdf(x)).abs() < 1e-8, "x={x}");
+        }
+    }
+
+    #[test]
+    fn correction_convolves_back_to_logistic() {
+        let corr = LogisticCorrection::shared(1.0);
+        assert!(corr.max_residual() < 5e-3, "resid {}", corr.max_residual());
+        // moment identity: Var(X_corr) = pi^2/3 - sigma^2
+        let want = LOGISTIC_VAR - 1.0;
+        let got = corr.variance();
+        assert!((got - want).abs() < 0.05, "var {got} want {want}");
+    }
+
+    #[test]
+    fn samples_match_table_moments() {
+        let corr = LogisticCorrection::shared(1.0);
+        let mut rng = Pcg64::seeded(0);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = corr.sample(&mut rng);
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - (LOGISTIC_VAR - 1.0)).abs() < 0.08, "var {var}");
+    }
+
+    #[test]
+    fn normal_plus_correction_is_logistic() {
+        // the operational property the Barker test relies on
+        let corr = LogisticCorrection::shared(1.0);
+        let mut rng = Pcg64::seeded(1);
+        let mut h = Histogram::new(-8.0, 8.0, 64);
+        for _ in 0..300_000 {
+            h.add(corr.sample(&mut rng) + rng.normal());
+        }
+        let l1 = h.l1_vs_density(logistic_pdf);
+        assert!(l1 < 0.05, "l1 {l1}");
+    }
+
+    #[test]
+    fn shared_cache_reuses_tables() {
+        let a = LogisticCorrection::shared(1.0);
+        let b = LogisticCorrection::shared(1.0);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    #[should_panic(expected = "sigma")]
+    fn sigma_out_of_range_panics() {
+        let _ = LogisticCorrection::build(2.0);
+    }
+}

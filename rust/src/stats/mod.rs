@@ -5,7 +5,9 @@
 //! the foundation the sequential-test coordinator is built on.
 
 pub mod autocorr;
+pub mod gamma;
 pub mod histogram;
+pub mod logistic_corr;
 pub mod normal;
 pub mod quadrature;
 pub mod rng;

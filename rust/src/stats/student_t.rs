@@ -156,11 +156,35 @@ pub fn t_tail(t_abs: f64, nu: f64) -> f64 {
     t_sf(t_abs.abs(), nu)
 }
 
-/// Inverse CDF of the Student-t (bisection + Newton on the exact CDF).
+/// Inverse CDF of the Student-t.
+///
+/// Boundary and tiny-nu behavior is fully defined so sequential-test
+/// thresholds can never be NaN on a first mini-batch: `p = 0` / `p = 1`
+/// return the infinities (an eps-0 design means "never stop early"),
+/// and `nu = 1` (Cauchy) / `nu = 2` use exact closed forms — the generic
+/// Newton/bisection path would need enormous brackets in these
+/// infinite-variance regimes. Everything else is bisection + Newton on
+/// the exact CDF.
 pub fn t_inv(p: f64, nu: f64) -> f64 {
-    assert!(p > 0.0 && p < 1.0);
+    assert!(nu > 0.0, "t_inv: nu={nu}");
+    assert!((0.0..=1.0).contains(&p), "t_inv domain: p={p}");
+    if p == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if p == 1.0 {
+        return f64::INFINITY;
+    }
     if p == 0.5 {
         return 0.0;
+    }
+    if nu == 1.0 {
+        // Cauchy quantile
+        return (std::f64::consts::PI * (p - 0.5)).tan();
+    }
+    if nu == 2.0 {
+        // F(t) = 1/2 + t / (2 sqrt(2 + t^2)) inverts in closed form
+        let x = 2.0 * p - 1.0;
+        return x * (2.0 / (1.0 - x * x)).sqrt();
     }
     // Bracket by doubling out from the normal quantile (heavy tails at
     // small nu — Cauchy p=0.001 is near -318 — need a dynamic bracket).
@@ -287,11 +311,45 @@ mod tests {
 
     #[test]
     fn t_inv_round_trip() {
-        for &nu in &[1.0, 3.0, 10.0, 100.0, 499.0] {
+        for &nu in &[1.0, 2.0, 3.0, 10.0, 100.0, 499.0] {
             for &p in &[0.001, 0.05, 0.3, 0.5, 0.9, 0.975, 0.9999] {
                 let t = t_inv(p, nu);
                 assert!((t_cdf(t, nu) - p).abs() < 1e-10, "nu={nu} p={p}");
             }
+        }
+    }
+
+    #[test]
+    fn t_inv_closed_forms_pin_table_values() {
+        // classical t-table constants for the closed-form nus
+        let cases = [
+            (0.95, 1.0, 6.313751514675043),
+            (0.975, 1.0, 12.706204736432095),
+            (0.99, 1.0, 31.820515953773958),
+            (0.95, 2.0, 2.919985580353726),
+            (0.975, 2.0, 4.302652729911275),
+            (0.99, 2.0, 6.964556734283583),
+        ];
+        for (p, nu, want) in cases {
+            let got = t_inv(p, nu);
+            assert!(
+                ((got - want) / want).abs() < 1e-9,
+                "t_inv({p}, {nu}) = {got}, want {want}"
+            );
+            // symmetry of the lower quantile
+            assert!((t_inv(1.0 - p, nu) + got).abs() < 1e-9 * want);
+        }
+    }
+
+    #[test]
+    fn t_inv_boundaries_are_infinite_not_nan() {
+        for &nu in &[1.0, 2.0, 3.0, 100.0] {
+            assert_eq!(t_inv(1.0, nu), f64::INFINITY);
+            assert_eq!(t_inv(0.0, nu), f64::NEG_INFINITY);
+            // a first sequential-test stage at m = 2 (nu = 1) with a tiny
+            // eps must produce a finite, non-NaN threshold
+            let thr = t_inv(1.0 - 1e-12, nu);
+            assert!(thr.is_finite() && thr > 0.0, "nu={nu}: {thr}");
         }
     }
 

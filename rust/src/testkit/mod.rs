@@ -1,9 +1,15 @@
-//! Minimal property-testing harness (offline substitute for proptest).
+//! Test harnesses: a minimal property tester (offline substitute for
+//! proptest) and a statistical-validation toolkit for checking that
+//! sampler output actually targets the posterior it claims to.
 //!
-//! The vendored crate set does not include proptest, so invariants are
-//! checked with this deterministic mini-harness: seeded case generation,
-//! a fixed case budget, and first-failure reporting with the seed so any
-//! failure is reproducible by construction. See DESIGN.md §Substitutions.
+//! * `forall` — seeded case generation, a fixed case budget, and
+//!   first-failure reporting with the seed so any failure is
+//!   reproducible by construction (see DESIGN.md §Substitutions);
+//! * `validate` — chi-square goodness-of-fit of histogrammed samples
+//!   against an analytic CDF, and z-score moment checks, both with
+//!   deterministic seeded thresholds;
+//! * `models` — analytically solvable targets (the conjugate Gaussian
+//!   mean model) to validate acceptance rules end to end.
 //!
 //! ```ignore
 //! forall(128, |rng| {
@@ -76,6 +82,169 @@ pub mod gen {
     }
 }
 
+/// Statistical validation: exact-chain-vs-analytic-posterior checks.
+pub mod validate {
+    use crate::stats::gamma::chi2_sf;
+    use crate::stats::welford::Welford;
+    use crate::stats::Histogram;
+
+    /// Result of a chi-square goodness-of-fit test.
+    #[derive(Clone, Copy, Debug)]
+    pub struct GofReport {
+        pub stat: f64,
+        pub dof: usize,
+        pub p_value: f64,
+        /// Cells after merging low-expectation bins.
+        pub cells: usize,
+    }
+
+    /// Pearson chi-square of a histogram against an analytic CDF.
+    ///
+    /// Edge bins absorb the tail mass (mirroring `Histogram`'s clamping
+    /// of out-of-range samples), and adjacent bins are merged until each
+    /// cell expects at least 5 counts — the usual validity rule. The
+    /// p-value assumes (near-)independent draws; thin MCMC output until
+    /// autocorrelation is negligible before testing, or divide the
+    /// counts' weight by the integrated autocorrelation time.
+    pub fn chi_square_hist<F: Fn(f64) -> f64>(h: &Histogram, cdf: F) -> GofReport {
+        let total = h.total() as f64;
+        assert!(total > 0.0, "empty histogram");
+        let bins = h.bins();
+        let w = h.bin_width();
+        let mut expected = Vec::with_capacity(bins);
+        for i in 0..bins {
+            let lo = if i == 0 { 0.0 } else { cdf(h.center(i) - 0.5 * w) };
+            let hi = if i == bins - 1 { 1.0 } else { cdf(h.center(i) + 0.5 * w) };
+            expected.push((hi - lo).max(0.0) * total);
+        }
+        // merge forward until every cell expects >= 5 counts; fold any
+        // leftover tail into the final cell
+        let mut merged: Vec<(f64, f64)> = Vec::new();
+        let (mut o, mut e) = (0.0, 0.0);
+        for i in 0..bins {
+            o += h.count(i) as f64;
+            e += expected[i];
+            if e >= 5.0 {
+                merged.push((o, e));
+                o = 0.0;
+                e = 0.0;
+            }
+        }
+        if e > 0.0 || o > 0.0 {
+            if let Some(last) = merged.last_mut() {
+                last.0 += o;
+                last.1 += e;
+            } else {
+                merged.push((o, e));
+            }
+        }
+        assert!(
+            merged.len() >= 2,
+            "chi-square needs >= 2 cells with expected mass; got {} (histogram range too wide?)",
+            merged.len()
+        );
+        let stat: f64 = merged.iter().map(|&(o, e)| (o - e) * (o - e) / e).sum();
+        let dof = merged.len() - 1;
+        GofReport { stat, dof, p_value: chi2_sf(stat, dof as f64), cells: merged.len() }
+    }
+
+    /// z-scores of the accumulated sample mean and variance against an
+    /// analytic `N(mean, var)` target. `n_eff` is the effective sample
+    /// size — pass `w.n()` for independent draws, or the ESS for
+    /// autocorrelated MCMC output.
+    #[derive(Clone, Copy, Debug)]
+    pub struct MomentReport {
+        pub mean_z: f64,
+        pub var_z: f64,
+        pub n_eff: f64,
+    }
+
+    pub fn moment_z(w: &Welford, mean: f64, var: f64, n_eff: f64) -> MomentReport {
+        assert!(var > 0.0 && n_eff > 1.0);
+        let mean_z = (w.mean() - mean) / (var / n_eff).sqrt();
+        // Var(s^2) = 2 sigma^4 / (n - 1) for Gaussian samples
+        let var_z = (w.var_sample() - var) / (var * (2.0 / (n_eff - 1.0)).sqrt());
+        MomentReport { mean_z, var_z, n_eff }
+    }
+}
+
+/// Analytically solvable targets for end-to-end sampler validation.
+pub mod models {
+    use crate::models::traits::{LlDiffModel, Proposal};
+    use crate::stats::normal::phi_cdf;
+    use crate::stats::Pcg64;
+
+    /// Conjugate Gaussian mean model: `x_i ~ N(theta, noise_var)` with a
+    /// `N(prior_mean, prior_var)` prior on `theta`, so the posterior is
+    /// Gaussian in closed form — the reference target of the
+    /// statistical-validation tests.
+    pub struct ConjugateGaussian {
+        xs: Vec<f64>,
+        pub noise_var: f64,
+        pub prior_mean: f64,
+        pub prior_var: f64,
+    }
+
+    impl ConjugateGaussian {
+        pub fn new(xs: Vec<f64>, noise_var: f64, prior_mean: f64, prior_var: f64) -> Self {
+            assert!(!xs.is_empty() && noise_var > 0.0 && prior_var > 0.0);
+            ConjugateGaussian { xs, noise_var, prior_mean, prior_var }
+        }
+
+        /// Seeded synthetic dataset of `n` points at `true_mean`.
+        pub fn synthetic(
+            n: usize,
+            true_mean: f64,
+            noise_sd: f64,
+            prior_mean: f64,
+            prior_sd: f64,
+            seed: u64,
+        ) -> Self {
+            let mut rng = Pcg64::new(seed, 17);
+            let xs = (0..n).map(|_| true_mean + noise_sd * rng.normal()).collect();
+            Self::new(xs, noise_sd * noise_sd, prior_mean, prior_sd * prior_sd)
+        }
+
+        pub fn posterior_var(&self) -> f64 {
+            1.0 / (1.0 / self.prior_var + self.xs.len() as f64 / self.noise_var)
+        }
+
+        pub fn posterior_mean(&self) -> f64 {
+            let sum: f64 = self.xs.iter().sum();
+            self.posterior_var() * (self.prior_mean / self.prior_var + sum / self.noise_var)
+        }
+
+        pub fn posterior_cdf(&self, x: f64) -> f64 {
+            phi_cdf((x - self.posterior_mean()) / self.posterior_var().sqrt())
+        }
+
+        /// Symmetric random-walk proposal with the prior folded into
+        /// `log_correction` (`log rho(cur) - log rho(prop)`).
+        pub fn rw_proposal(&self, sigma: f64) -> impl Fn(&f64, &mut Pcg64) -> Proposal<f64> + Sync {
+            let (m, v) = (self.prior_mean, self.prior_var);
+            move |cur: &f64, rng: &mut Pcg64| {
+                let prop = cur + sigma * rng.normal();
+                let log_correction = ((prop - m) * (prop - m) - (cur - m) * (cur - m)) / (2.0 * v);
+                Proposal { param: prop, log_correction }
+            }
+        }
+    }
+
+    impl LlDiffModel for ConjugateGaussian {
+        type Param = f64;
+
+        fn n(&self) -> usize {
+            self.xs.len()
+        }
+
+        fn lldiff(&self, i: usize, cur: &f64, prop: &f64) -> f64 {
+            let x = self.xs[i];
+            let (rc, rp) = (x - cur, x - prop);
+            (rc * rc - rp * rp) / (2.0 * self.noise_var)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,5 +277,69 @@ mod tests {
             let m = gen::mask(rng, n, 0.3);
             assert!(m.iter().any(|&b| b));
         });
+    }
+
+    #[test]
+    fn chi_square_accepts_the_true_distribution() {
+        let mut rng = Pcg64::seeded(0);
+        let mut h = crate::stats::Histogram::new(-4.0, 4.0, 32);
+        for _ in 0..20_000 {
+            h.add(rng.normal());
+        }
+        let rep = validate::chi_square_hist(&h, crate::stats::normal::phi_cdf);
+        assert!(rep.p_value > 1e-4, "{rep:?}");
+        assert!(rep.cells >= 10 && rep.dof == rep.cells - 1, "{rep:?}");
+    }
+
+    #[test]
+    fn chi_square_rejects_a_shifted_distribution() {
+        let mut rng = Pcg64::seeded(1);
+        let mut h = crate::stats::Histogram::new(-4.0, 4.0, 32);
+        for _ in 0..20_000 {
+            h.add(0.15 + rng.normal());
+        }
+        let rep =
+            validate::chi_square_hist(&h, crate::stats::normal::phi_cdf);
+        assert!(rep.p_value < 1e-6, "a 0.15-sigma shift must be detected: {rep:?}");
+    }
+
+    #[test]
+    fn moment_z_scores_are_calibrated() {
+        let mut rng = Pcg64::seeded(2);
+        let mut w = crate::stats::Welford::new();
+        for _ in 0..50_000 {
+            w.add(2.0 + 0.5 * rng.normal());
+        }
+        let rep = validate::moment_z(&w, 2.0, 0.25, w.n() as f64);
+        assert!(rep.mean_z.abs() < 4.0, "{rep:?}");
+        assert!(rep.var_z.abs() < 4.0, "{rep:?}");
+        // a wrong variance target must blow up the z-score
+        let bad = validate::moment_z(&w, 2.0, 0.30, w.n() as f64);
+        assert!(bad.var_z.abs() > 10.0, "{bad:?}");
+    }
+
+    #[test]
+    fn conjugate_gaussian_posterior_closed_form() {
+        let m = models::ConjugateGaussian::new(vec![1.0, 3.0], 2.0, 0.0, 8.0);
+        // precision = 1/8 + 2/2 = 1.125; mean = (0 + 4/2) / 1.125
+        assert!((m.posterior_var() - 1.0 / 1.125).abs() < 1e-12);
+        assert!((m.posterior_mean() - 2.0 / 1.125).abs() < 1e-12);
+        assert!((m.posterior_cdf(m.posterior_mean()) - 0.5).abs() < 1e-12);
+        // lldiff really is the pointwise log-likelihood difference
+        use crate::models::traits::LlDiffModel;
+        let ll = |x: f64, t: f64| -(x - t) * (x - t) / (2.0 * 2.0);
+        let want = ll(1.0, 0.7) - ll(1.0, 0.2);
+        assert!((m.lldiff(0, &0.2, &0.7) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conjugate_gaussian_correction_is_prior_ratio() {
+        let m = models::ConjugateGaussian::synthetic(50, 1.0, 1.0, 0.5, 3.0, 9);
+        let kernel = m.rw_proposal(0.3);
+        let mut rng = Pcg64::seeded(4);
+        let p = crate::models::traits::ProposalKernel::propose(&kernel, &1.2, &mut rng);
+        let lp = |t: f64| -(t - 0.5) * (t - 0.5) / (2.0 * 9.0);
+        let want = lp(1.2) - lp(p.param);
+        assert!((p.log_correction - want).abs() < 1e-12);
     }
 }

@@ -1,0 +1,87 @@
+//! Zero-allocation regression for the cached MH hot path, for every
+//! acceptance rule.
+//!
+//! This file must contain exactly ONE test: it installs a counting
+//! global allocator, and a single-test binary is the only way to
+//! guarantee no other test thread allocates during the measured window.
+//! (That is why this assertion does not live in `integration_accept.rs`
+//! with the rest of the acceptance-layer suite.)
+//!
+//! The measured region is the steady state: scratch, caches and the
+//! Barker correction table are built (and capacities warmed) beforehand;
+//! 300 proposal + `mh_step_cached` iterations must then perform zero
+//! heap allocations. The model is the scalar-parameter `LinRegModel`, so
+//! proposals themselves are allocation-free and the assertion covers the
+//! full step, not just the decision.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use austerity::coordinator::{mh_step_cached, MhMode, MhScratch};
+use austerity::data::synthetic::linreg_toy;
+use austerity::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
+use austerity::models::LinRegModel;
+use austerity::samplers::ScalarRandomWalk;
+use austerity::stats::Pcg64;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn cached_hot_path_steady_state_allocates_nothing() {
+    let model = LinRegModel::new(linreg_toy(5_000, 0), 3.0, 4950.0);
+    let kernel = ScalarRandomWalk { sigma: 0.004, log_prior: |t: f64| -4950.0 * t.abs() };
+    let modes = [
+        ("exact", MhMode::Exact),
+        ("austerity", MhMode::approx(0.05, 400)),
+        ("barker", MhMode::barker(1.0, 400)),
+        ("confidence", MhMode::confidence(0.05, 400)),
+    ];
+    for (name, mode) in modes {
+        let mut rng = Pcg64::new(3, 9);
+        let mut scratch = MhScratch::new(model.n());
+        // pre-warm capacities a long confidence/exhaustion decision could
+        // otherwise grow mid-measurement
+        scratch.idx_buf.reserve(model.n());
+        scratch.trace.reserve(64);
+        let mut cur = 0.45f64;
+        let mut cache = model.init_cache(&cur);
+        for _ in 0..200 {
+            let p = kernel.propose(&cur, &mut rng);
+            mh_step_cached(&model, &mut cur, &mut cache, p, &mode, &mut scratch, &mut rng);
+        }
+
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..300 {
+            let p = kernel.propose(&cur, &mut rng);
+            mh_step_cached(&model, &mut cur, &mut cache, p, &mode, &mut scratch, &mut rng);
+        }
+        let delta = ALLOCS.load(Ordering::SeqCst) - before;
+        assert_eq!(delta, 0, "rule {name}: {delta} heap allocations on the cached hot path");
+    }
+}
