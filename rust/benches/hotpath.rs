@@ -3,8 +3,14 @@
 //! median-of-runs harness (criterion is not in the offline crate set).
 //!
 //! Layers:
-//!   L3 moments kernels  — naive per-index loop vs fused dual-dot pass
-//!                         vs the cached-activation fast path
+//!   L3 moments kernels  — naive per-index loop vs the retained
+//!                         row-major reference vs the lane-blocked SoA
+//!                         kernels (gathered + cached)
+//!   L3 SoA @ 50k        — the acceptance workload: SoA vs row-major
+//!                         reference on a logistic N = 50k population
+//!                         (`speedup_soa_vs_fused_x`), plus the
+//!                         deterministic parallel exact scan at 1 and 4
+//!                         workers (`full_scan_par_t{1,4}`)
 //!   L3 sequential test  — one full approximate MH decision
 //!   L3 mh_step          — end-to-end step, uncached vs cached
 //!   L3 engine           — K-chain throughput scaling on the worker pool
@@ -23,7 +29,10 @@ use austerity::coordinator::engine::{run_engine_cached, run_engine_kernel, Engin
 use austerity::coordinator::scheduler::MinibatchScheduler;
 use austerity::coordinator::{mh_step, mh_step_cached, Budget, MhMode, MhScratch};
 use austerity::data::synthetic::linreg_toy;
-use austerity::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
+use austerity::models::traits::{
+    full_scan_moments_par, CachedLlDiff, LlDiffModel, ProposalKernel, ScanScratch,
+    FULL_SCAN_CHUNK,
+};
 use austerity::models::{LinRegModel, MrfModel};
 use austerity::runtime::{PjrtLogistic, PjrtRuntime};
 use austerity::samplers::gibbs::{GibbsMode, GibbsSweepKernel};
@@ -99,7 +108,7 @@ fn main() {
     let mut rng = Pcg64::seeded(0);
     let theta = model.map_estimate(60);
     let theta_p: Vec<f64> = theta.iter().map(|t| t + 0.01 * rng.normal()).collect();
-    let idx: Vec<usize> = (0..500).map(|_| rng.below(n)).collect();
+    let idx: Vec<u32> = (0..500).map(|_| rng.below(n) as u32).collect();
 
     println!("\n-- L3 moments kernels (N = {n}, D = 50, m = 500) --");
     let t_naive = rec.bench("lldiff_moments_naive", 200, || {
@@ -107,13 +116,18 @@ fn main() {
         // unblocked dot products per row
         let (mut s, mut s2) = (0.0, 0.0);
         for &i in &idx {
-            let l = model.lldiff(i, &theta, &theta_p);
+            let l = model.lldiff(i as usize, &theta, &theta_p);
             s += l;
             s2 += l * l;
         }
         std::hint::black_box((s, s2));
     });
+    // the retained row-major scalar reference (pre-SoA "fused" kernel)
     let t_fused = rec.bench("lldiff_moments_fused", 200, || {
+        std::hint::black_box(model.lldiff_moments_ref(&idx, &theta, &theta_p));
+    });
+    // the production lane-blocked SoA kernel on the same minibatch
+    let t_soa_batch = rec.bench("lldiff_moments_soa_batch", 200, || {
         std::hint::black_box(model.lldiff_moments(&idx, &theta, &theta_p));
     });
     let mut cache = model.init_cache(&theta);
@@ -123,27 +137,70 @@ fn main() {
     });
     println!(
         "{:<44} {:>9.2} Melem/s",
-        "  -> fused throughput",
-        500.0 * 50.0 / t_fused / 1e6
+        "  -> soa batch throughput",
+        500.0 * 50.0 / t_soa_batch / 1e6
     );
     let fused_speedup = t_naive / t_fused;
     let cached_speedup = t_naive / t_cached;
     rec.record("speedup_fused_vs_naive_x", fused_speedup);
     rec.record("speedup_cached_vs_naive_x", cached_speedup);
     println!(
-        "  -> speedup vs naive: fused {fused_speedup:.2}x, cached {cached_speedup:.2}x ({})",
+        "  -> speedup vs naive: fused-ref {fused_speedup:.2}x, cached {cached_speedup:.2}x ({})",
         if cached_speedup >= 1.5 { "PASS >= 1.5x" } else { "FAIL < 1.5x" }
+    );
+
+    // -- the acceptance workload: logistic N = 50k ------------------------
+    let n50 = 50_000usize;
+    let big = austerity::exp::population::mnist_like_model(n50, 7);
+    let theta50: Vec<f64> = (0..50).map(|_| 0.1 * rng.normal()).collect();
+    let theta50_p: Vec<f64> = theta50.iter().map(|t| t + 0.01 * rng.normal()).collect();
+    // the exact-scan work unit: one FULL_SCAN_CHUNK of consecutive rows
+    let chunk: Vec<u32> = (0..FULL_SCAN_CHUNK as u32).collect();
+    println!("\n-- L3 SoA kernels (N = {n50}, D = 50, chunk = {FULL_SCAN_CHUNK}) --");
+    let t_fused50 = rec.bench("lldiff_moments_fused_50k", 200, || {
+        std::hint::black_box(big.lldiff_moments_ref(&chunk, &theta50, &theta50_p));
+    });
+    let t_soa50 = rec.bench("lldiff_moments_soa", 200, || {
+        std::hint::black_box(big.lldiff_range_moments(0, FULL_SCAN_CHUNK, &theta50, &theta50_p));
+    });
+    let mut cache50 = big.init_cache(&theta50);
+    big.begin_step(&mut cache50);
+    let t_soa50_cached = rec.bench("lldiff_moments_soa_cached", 200, || {
+        std::hint::black_box(big.cached_moments(&mut cache50, &chunk, &theta50_p));
+    });
+    let soa_speedup = t_fused50 / t_soa50;
+    let soa_cached_speedup = t_fused50 / t_soa50_cached;
+    rec.record("speedup_soa_vs_fused_x", soa_speedup);
+    rec.record("speedup_soa_cached_vs_fused_x", soa_cached_speedup);
+    println!(
+        "  -> SoA vs fused-ref: uncached {soa_speedup:.2}x, cached {soa_cached_speedup:.2}x ({})",
+        if soa_speedup >= 1.5 { "PASS >= 1.5x" } else { "FAIL < 1.5x" }
+    );
+
+    // deterministic parallel exact scan, K = 1 chain with spare workers
+    let mut t_scan = [0.0f64; 2];
+    for (slot, threads) in [(0usize, 1usize), (1, 4)] {
+        let mut scan = ScanScratch::new(threads, n50);
+        let t = rec.bench(&format!("full_scan_par_t{threads}"), 20, || {
+            std::hint::black_box(full_scan_moments_par(n50, &mut scan, |a, b| {
+                big.lldiff_range_moments(a, b, &theta50, &theta50_p)
+            }));
+        });
+        t_scan[slot] = t;
+    }
+    let scan_scaling = t_scan[0] / t_scan[1];
+    rec.record("full_scan_par_scaling_x", scan_scaling);
+    println!(
+        "  -> parallel exact scan 1 -> 4 workers: {scan_scaling:.2}x ({})",
+        if scan_scaling > 1.0 { "PASS > 1x" } else { "FAIL <= 1x" }
     );
 
     println!("\n-- L3 sequential test + steps --");
     let cfg = SeqTestConfig::new(0.05, 500);
     let mut sched = MinibatchScheduler::new(n);
-    let mut buf = Vec::new();
     rec.bench("seq_mh_test", 100, || {
         let mu0 = (rng.uniform_pos().ln()) / n as f64;
-        std::hint::black_box(seq_mh_test(
-            &model, &theta, &theta_p, mu0, &cfg, &mut sched, &mut rng, &mut buf,
-        ));
+        std::hint::black_box(seq_mh_test(&model, &theta, &theta_p, mu0, &cfg, &mut sched, &mut rng));
     });
 
     let mode = MhMode::approx(0.05, 500);
@@ -293,6 +350,13 @@ fn main() {
         );
     } else {
         println!("\n(run `make artifacts` to bench the PJRT path)");
+    }
+
+    println!("\n-- speedup summary --");
+    for (k, v) in &rec.rows {
+        if k.starts_with("speedup_") || k.starts_with("full_scan_par") || k.starts_with("engine_scaling") {
+            println!("{k:<44} {v:>9.3}");
+        }
     }
 
     rec.write_json("BENCH_hotpath.json");

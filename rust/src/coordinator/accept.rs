@@ -4,7 +4,7 @@
 //! The paper's sequential t-test is one member of a family of budgeted
 //! approximations to the exact N-point Metropolis-Hastings decision.
 //! `AcceptanceTest` is that family's contract: given the proposal's
-//! `log_correction`, a mini-batch moments source over the population of
+//! `log_correction`, a `MomentsSource` over the population of
 //! log-likelihood differences, a without-replacement scheduler and scratch
 //! buffers, decide accept/reject, report the datapoints consumed and a
 //! per-stage trace. The four members:
@@ -19,18 +19,23 @@
 //! **RNG contract.** Each rule consumes the per-chain stream in a fixed
 //! order. `ExactTest` draws only the MH uniform `u`; `AusterityTest`
 //! draws `u` then the scheduler's batch draws — exactly the order of the
-//! pre-refactor `mh_step`, so both are bit-identical to the historical
-//! code under the same seeds (regression-tested in
+//! pre-refactor `mh_step` (regression-tested in
 //! `tests/integration_accept.rs`). `ConfidenceTest` draws `u` then batch
 //! draws; `BarkerTest` draws no `u` (the logistic noise replaces it):
 //! batch draws, then the top-up normal, then `X_corr`.
 //!
-//! **Bit-identity.** The moments source is the same closure the cached
-//! and uncached step paths already share (`lldiff_moments` /
-//! `cached_moments`), and `ExactTest` streams it through
-//! `full_scan_moments` with the same chunking as `full_moments_buf` — so
-//! a cached chain still makes decisions bit-identical to an uncached one
-//! for every rule.
+//! **Index protocol.** Sequential rules feed the scheduler's drawn
+//! `&[u32]` slice to `MomentsSource::batch` directly — no widening copy,
+//! no staging buffer. `ExactTest` calls `MomentsSource::full_scan`,
+//! which model-backed sources serve with range-based chunked scans
+//! (serial or deterministically parallel — `models::traits`); closure
+//! sources fall back to the gathered chunk scan through `idx_buf`.
+//! Both produce identical bits by the `lldiff_range_moments` contract.
+//!
+//! **Bit-identity.** The cached and uncached step paths wrap the same
+//! kernels (`ModelMoments` / `CachedMoments` in `coordinator::mh`), so a
+//! cached chain makes decisions bit-identical to an uncached one for
+//! every rule, at every scan thread count.
 
 #![allow(clippy::too_many_arguments)]
 
@@ -42,6 +47,30 @@ use crate::models::traits::full_scan_moments;
 use crate::stats::logistic_corr::LogisticCorrection;
 use crate::stats::welford::MomentAccumulator;
 use crate::stats::Pcg64;
+
+/// The population of log-likelihood differences as the acceptance rules
+/// see it: gathered mini-batch moments plus a full-population scan.
+/// Implemented by the model-backed sources in `coordinator::mh` (which
+/// route full scans through the deterministic chunk-parallel drivers)
+/// and by any `FnMut(&[u32]) -> (f64, f64)` closure (serial fallback).
+pub trait MomentsSource {
+    /// `(sum_i l_i, sum_i l_i^2)` over the drawn indices.
+    fn batch(&mut self, idx: &[u32]) -> (f64, f64);
+
+    /// Full-population moments in `FULL_SCAN_CHUNK` chunks reduced in
+    /// chunk order. The default streams chunk index sets through
+    /// `idx_buf` into `batch`; model-backed sources override with
+    /// range-based (possibly parallel) scans that return identical bits.
+    fn full_scan(&mut self, n_total: usize, idx_buf: &mut Vec<u32>) -> (f64, f64) {
+        full_scan_moments(n_total, idx_buf, |idx| self.batch(idx))
+    }
+}
+
+impl<F: FnMut(&[u32]) -> (f64, f64)> MomentsSource for F {
+    fn batch(&mut self, idx: &[u32]) -> (f64, f64) {
+        self(idx)
+    }
+}
 
 /// One recorded stage of a decision: how much data had been consumed and
 /// the rule-specific statistic/threshold pair that was compared.
@@ -88,23 +117,23 @@ impl AcceptOutcome {
 
 /// A budgeted accept/reject rule for one proposed MH move.
 ///
-/// `moments(idx)` returns `(sum_i l_i, sum_i l_i^2)` over the requested
-/// indices — the same closure for the cached and uncached step paths.
-/// Implementations must clear and then fill `trace` (one entry per
-/// stage) and draw from `rng` in a fixed, documented order.
+/// `moments` serves the population `(sum l, sum l^2)` — the same source
+/// type for the cached and uncached step paths. Implementations must
+/// clear and then fill `trace` (one entry per stage) and draw from `rng`
+/// in a fixed, documented order.
 pub trait AcceptanceTest {
     /// Short label for experiment CSVs and benches.
     fn name(&self) -> &'static str;
 
     /// Decide accept/reject for a proposal over a population of
     /// `n_total` log-likelihood differences.
-    fn decide<F: FnMut(&[usize]) -> (f64, f64)>(
+    fn decide<S: MomentsSource>(
         &self,
         n_total: usize,
         log_correction: f64,
-        moments: F,
+        moments: S,
         sched: &mut MinibatchScheduler,
-        idx_buf: &mut Vec<usize>,
+        idx_buf: &mut Vec<u32>,
         trace: &mut Vec<StageTrace>,
         rng: &mut Pcg64,
     ) -> AcceptOutcome;
@@ -122,13 +151,13 @@ impl AcceptanceTest for ExactTest {
         "exact"
     }
 
-    fn decide<F: FnMut(&[usize]) -> (f64, f64)>(
+    fn decide<S: MomentsSource>(
         &self,
         n_total: usize,
         log_correction: f64,
-        moments: F,
+        mut moments: S,
         _sched: &mut MinibatchScheduler,
-        idx_buf: &mut Vec<usize>,
+        idx_buf: &mut Vec<u32>,
         trace: &mut Vec<StageTrace>,
         rng: &mut Pcg64,
     ) -> AcceptOutcome {
@@ -139,10 +168,9 @@ impl AcceptanceTest for ExactTest {
         }
         let n = n_total as f64;
         let mu0 = (u.ln() + log_correction) / n;
-        // chunked full scan through the reusable buffer: identical
-        // chunking/accumulation order to `full_moments_buf`, no
-        // length-N index vector, no per-step allocation
-        let (s, _) = full_scan_moments(n_total, idx_buf, moments);
+        // chunked full scan (serial or deterministically parallel —
+        // the source decides; results are bit-identical either way)
+        let (s, _) = moments.full_scan(n_total, idx_buf);
         let mean = s / n;
         let accept = mean > mu0;
         trace.push(StageTrace { n_used: n_total, stat: mean - mu0, threshold: 0.0 });
@@ -173,13 +201,13 @@ impl AcceptanceTest for AusterityTest {
         "austerity"
     }
 
-    fn decide<F: FnMut(&[usize]) -> (f64, f64)>(
+    fn decide<S: MomentsSource>(
         &self,
         n_total: usize,
         log_correction: f64,
-        moments: F,
+        mut moments: S,
         sched: &mut MinibatchScheduler,
-        idx_buf: &mut Vec<usize>,
+        _idx_buf: &mut Vec<u32>,
         trace: &mut Vec<StageTrace>,
         rng: &mut Pcg64,
     ) -> AcceptOutcome {
@@ -189,8 +217,7 @@ impl AcceptanceTest for AusterityTest {
             return AcceptOutcome::rejected_free();
         }
         let mu0 = (u.ln() + log_correction) / n_total as f64;
-        let out =
-            seq_test_core(n_total, moments, mu0, &self.cfg, sched, rng, idx_buf, Some(trace));
+        let out = seq_test_core(n_total, &mut moments, mu0, &self.cfg, sched, rng, Some(trace));
         AcceptOutcome {
             accept: out.accept,
             n_used: out.n_used,
@@ -242,13 +269,13 @@ impl AcceptanceTest for BarkerTest {
         "barker"
     }
 
-    fn decide<F: FnMut(&[usize]) -> (f64, f64)>(
+    fn decide<S: MomentsSource>(
         &self,
         n_total: usize,
         log_correction: f64,
-        mut moments: F,
+        mut moments: S,
         sched: &mut MinibatchScheduler,
-        idx_buf: &mut Vec<usize>,
+        _idx_buf: &mut Vec<u32>,
         trace: &mut Vec<StageTrace>,
         rng: &mut Pcg64,
     ) -> AcceptOutcome {
@@ -261,9 +288,10 @@ impl AcceptanceTest for BarkerTest {
         let mut acc = MomentAccumulator::new();
         let mut stages = 0usize;
         loop {
-            let drawn = sched.next_batch_into(self.batch_size, idx_buf, rng);
+            let batch = sched.next_batch(self.batch_size, rng);
+            let drawn = batch.len();
             debug_assert!(drawn > 0, "population exhausted without decision");
-            let (s, s2) = moments(idx_buf);
+            let (s, s2) = moments.batch(batch);
             acc.add_batch(s, s2, drawn);
             stages += 1;
 
@@ -349,13 +377,13 @@ impl AcceptanceTest for ConfidenceTest {
         "confidence"
     }
 
-    fn decide<F: FnMut(&[usize]) -> (f64, f64)>(
+    fn decide<S: MomentsSource>(
         &self,
         n_total: usize,
         log_correction: f64,
-        mut moments: F,
+        mut moments: S,
         sched: &mut MinibatchScheduler,
-        idx_buf: &mut Vec<usize>,
+        _idx_buf: &mut Vec<u32>,
         trace: &mut Vec<StageTrace>,
         rng: &mut Pcg64,
     ) -> AcceptOutcome {
@@ -371,9 +399,10 @@ impl AcceptanceTest for ConfidenceTest {
         let mut stages = 0usize;
         let mut want = self.cfg.batch_size;
         loop {
-            let drawn = sched.next_batch_into(want, idx_buf, rng);
+            let batch = sched.next_batch(want, rng);
+            let drawn = batch.len();
             debug_assert!(drawn > 0, "population exhausted without decision");
-            let (s, s2) = moments(idx_buf);
+            let (s, s2) = moments.batch(batch);
             acc.add_batch(s, s2, drawn);
             stages += 1;
 
@@ -426,13 +455,13 @@ mod tests {
         log_correction: f64,
         rng: &mut Pcg64,
         sched: &mut MinibatchScheduler,
-        buf: &mut Vec<usize>,
+        buf: &mut Vec<u32>,
         trace: &mut Vec<StageTrace>,
     ) -> AcceptOutcome {
         test.decide(
             model.n(),
             log_correction,
-            |idx| model.lldiff_moments(idx, &(), &()),
+            |idx: &[u32]| model.lldiff_moments(idx, &(), &()),
             sched,
             buf,
             trace,
@@ -440,7 +469,7 @@ mod tests {
         )
     }
 
-    fn harness(n: usize) -> (MinibatchScheduler, Vec<usize>, Vec<StageTrace>) {
+    fn harness(n: usize) -> (MinibatchScheduler, Vec<u32>, Vec<StageTrace>) {
         (MinibatchScheduler::new(n), Vec::new(), Vec::new())
     }
 
@@ -517,10 +546,7 @@ mod tests {
             let u = rng_b.uniform_pos();
             let mu0 = (u.ln() + 0.3) / n as f64;
             let mut sched_b = MinibatchScheduler::new(n);
-            let mut buf_b = Vec::new();
-            let out_b = seq_mh_test(
-                &model, &(), &(), mu0, &test.cfg, &mut sched_b, &mut rng_b, &mut buf_b,
-            );
+            let out_b = seq_mh_test(&model, &(), &(), mu0, &test.cfg, &mut sched_b, &mut rng_b);
             assert_eq!(out_a.accept, out_b.accept, "seed {seed}");
             assert_eq!(out_a.n_used, out_b.n_used, "seed {seed}");
             assert_eq!(out_a.stages, out_b.stages, "seed {seed}");

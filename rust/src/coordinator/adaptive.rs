@@ -68,7 +68,7 @@ pub struct AdaptiveScratch {
 
 impl<M, K> TransitionKernel for AdaptiveMhKernel<'_, M, K>
 where
-    M: LlDiffModel,
+    M: LlDiffModel + Sync,
     K: ProposalKernel<M::Param>,
 {
     type State = M::Param;
@@ -76,6 +76,13 @@ where
 
     fn scratch(&self, _init: &M::Param) -> AdaptiveScratch {
         AdaptiveScratch { mh: MhScratch::new(self.model.n()), step: 0 }
+    }
+
+    fn scratch_par(&self, _init: &M::Param, intra_threads: usize) -> AdaptiveScratch {
+        AdaptiveScratch {
+            mh: MhScratch::with_scan_threads(self.model.n(), intra_threads),
+            step: 0,
+        }
     }
 
     fn step(
@@ -107,7 +114,7 @@ pub fn run_adaptive_chain<M, K, F>(
     rng: &mut Pcg64,
 ) -> (Vec<Sample>, ChainStats)
 where
-    M: LlDiffModel,
+    M: LlDiffModel + Sync,
     K: ProposalKernel<M::Param>,
     F: FnMut(&M::Param) -> f64,
 {

@@ -4,7 +4,7 @@
 //! differences, stopping as soon as the Student-t tail probability
 //! `delta = 1 - F_{n-1}(|t|)` drops below the knob `epsilon`.
 
-use crate::coordinator::accept::StageTrace;
+use crate::coordinator::accept::{MomentsSource, StageTrace};
 use crate::coordinator::scheduler::MinibatchScheduler;
 use crate::models::traits::{CachedLlDiff, LlDiffModel};
 use crate::stats::student_t::{t_sf, t_inv};
@@ -84,7 +84,9 @@ pub struct SeqTestOutcome {
 ///
 /// `mu0` is the threshold from Eqn. 2 (computed by the caller from u, the
 /// prior ratio and the proposal ratio). The scheduler must belong to the
-/// same population as `model` (same N) and is reset here.
+/// same population as `model` (same N) and is reset here. The kernels
+/// consume the scheduler's drawn `&[u32]` slice directly — no index
+/// staging buffer exists on this path.
 pub fn seq_mh_test<M: LlDiffModel>(
     model: &M,
     cur: &M::Param,
@@ -93,17 +95,15 @@ pub fn seq_mh_test<M: LlDiffModel>(
     cfg: &SeqTestConfig,
     sched: &mut MinibatchScheduler,
     rng: &mut Pcg64,
-    idx_buf: &mut Vec<usize>,
 ) -> SeqTestOutcome {
     debug_assert_eq!(model.n(), sched.n());
     seq_test_core(
         model.n(),
-        |idx| model.lldiff_moments(idx, cur, prop),
+        &mut |idx: &[u32]| model.lldiff_moments(idx, cur, prop),
         mu0,
         cfg,
         sched,
         rng,
-        idx_buf,
         None,
     )
 }
@@ -122,17 +122,15 @@ pub fn seq_mh_test_cached<M: CachedLlDiff>(
     cfg: &SeqTestConfig,
     sched: &mut MinibatchScheduler,
     rng: &mut Pcg64,
-    idx_buf: &mut Vec<usize>,
 ) -> SeqTestOutcome {
     debug_assert_eq!(model.n(), sched.n());
     seq_test_core(
         model.n(),
-        |idx| model.cached_moments(cache, idx, prop),
+        &mut |idx: &[u32]| model.cached_moments(cache, idx, prop),
         mu0,
         cfg,
         sched,
         rng,
-        idx_buf,
         None,
     )
 }
@@ -144,14 +142,13 @@ pub fn seq_mh_test_cached<M: CachedLlDiff>(
 /// records one `(n, delta, eps_j)` entry per stage; it never influences
 /// the decision or the RNG stream.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn seq_test_core<F: FnMut(&[usize]) -> (f64, f64)>(
+pub(crate) fn seq_test_core<S: MomentsSource>(
     n_total: usize,
-    mut moments: F,
+    moments: &mut S,
     mu0: f64,
     cfg: &SeqTestConfig,
     sched: &mut MinibatchScheduler,
     rng: &mut Pcg64,
-    idx_buf: &mut Vec<usize>,
     mut trace: Option<&mut Vec<StageTrace>>,
 ) -> SeqTestOutcome {
     sched.reset();
@@ -159,9 +156,10 @@ pub(crate) fn seq_test_core<F: FnMut(&[usize]) -> (f64, f64)>(
     let mut stages = 0usize;
 
     loop {
-        let drawn = sched.next_batch_into(cfg.batch_size, idx_buf, rng);
+        let batch = sched.next_batch(cfg.batch_size, rng);
+        let drawn = batch.len();
         debug_assert!(drawn > 0, "population exhausted without decision");
-        let (s, s2) = moments(idx_buf);
+        let (s, s2) = moments.batch(batch);
         acc.add_batch(s, s2, drawn);
         stages += 1;
 
@@ -209,17 +207,7 @@ mod tests {
         let model = FixedPopulation { ls };
         let mut sched = MinibatchScheduler::new(model.n());
         let mut rng = Pcg64::seeded(seed);
-        let mut buf = Vec::new();
-        seq_mh_test(
-            &model,
-            &(),
-            &(),
-            mu0,
-            &SeqTestConfig::new(eps, m),
-            &mut sched,
-            &mut rng,
-            &mut buf,
-        )
+        seq_mh_test(&model, &(), &(), mu0, &SeqTestConfig::new(eps, m), &mut sched, &mut rng)
     }
 
     #[test]
@@ -263,17 +251,8 @@ mod tests {
             let mu0 = mean + 1e-12;
             let model = FixedPopulation { ls };
             let mut sched = MinibatchScheduler::new(n);
-            let mut buf = Vec::new();
-            let out = seq_mh_test(
-                &model,
-                &(),
-                &(),
-                mu0,
-                &SeqTestConfig::new(1e-9, 100),
-                &mut sched,
-                rng,
-                &mut buf,
-            );
+            let out =
+                seq_mh_test(&model, &(), &(), mu0, &SeqTestConfig::new(1e-9, 100), &mut sched, rng);
             assert_eq!(out.n_used, n);
             assert_eq!(out.accept, mean > mu0, "exact decision mismatch");
         });
@@ -301,7 +280,6 @@ mod tests {
                 let model = FixedPopulation { ls: ls.clone() };
                 let mut sched = MinibatchScheduler::new(n);
                 let mut r = Pcg64::seeded(seed);
-                let mut buf = Vec::new();
                 let out = seq_mh_test(
                     &model,
                     &(),
@@ -310,7 +288,6 @@ mod tests {
                     &SeqTestConfig::new(eps, 400),
                     &mut sched,
                     &mut r,
-                    &mut buf,
                 );
                 used.push(out.n_used);
             }
@@ -329,7 +306,6 @@ mod tests {
         let exact = mean > 0.0;
         let model = FixedPopulation { ls };
         let mut sched = MinibatchScheduler::new(n);
-        let mut buf = Vec::new();
         let mut wrong = 0;
         let trials = 200;
         for s in 0..trials {
@@ -342,7 +318,6 @@ mod tests {
                 &SeqTestConfig::new(0.05, 500),
                 &mut sched,
                 &mut r,
-                &mut buf,
             );
             if out.accept != exact {
                 wrong += 1;
@@ -421,13 +396,11 @@ mod tests {
                     let mu0 = mean + side * margin;
                     let exact = mean > mu0;
                     let mut sched = MinibatchScheduler::new(n);
-                    let mut buf = Vec::new();
                     let mut wrong = 0usize;
                     for s in 0..trials {
                         let mut rng = Pcg64::new(7_000 + s, 3);
-                        let out = seq_mh_test(
-                            &model, &(), &(), mu0, &cfg, &mut sched, &mut rng, &mut buf,
-                        );
+                        let out =
+                            seq_mh_test(&model, &(), &(), mu0, &cfg, &mut sched, &mut rng);
                         wrong += (out.accept != exact) as usize;
                     }
                     let frac = wrong as f64 / trials as f64;

@@ -75,15 +75,38 @@ pub fn drive_chain<T, F>(
     budget: Budget,
     burn_in: usize,
     thin: usize,
-    mut f: F,
+    f: F,
     rng: &mut Pcg64,
 ) -> (Vec<Sample>, ChainStats)
 where
     T: TransitionKernel,
     F: FnMut(&T::State) -> f64,
 {
+    drive_chain_par(kernel, init, budget, burn_in, thin, f, rng, 1)
+}
+
+/// `drive_chain` for a chain allowed to spend `intra_threads` worker
+/// threads inside a step (the engine's spare-worker path when
+/// `threads > chains`). Intra-step parallelism is deterministic by
+/// construction — samples are bit-identical to `drive_chain` — so this
+/// only changes wall time.
+#[allow(clippy::too_many_arguments)]
+pub fn drive_chain_par<T, F>(
+    kernel: &T,
+    init: T::State,
+    budget: Budget,
+    burn_in: usize,
+    thin: usize,
+    mut f: F,
+    rng: &mut Pcg64,
+    intra_threads: usize,
+) -> (Vec<Sample>, ChainStats)
+where
+    T: TransitionKernel,
+    F: FnMut(&T::State) -> f64,
+{
     assert!(thin >= 1);
-    let mut scratch = kernel.scratch(&init);
+    let mut scratch = kernel.scratch_par(&init, intra_threads.max(1));
     let mut cur = init;
     let mut stats = ChainStats::default();
     let mut samples = Vec::new();
@@ -139,7 +162,7 @@ pub fn run_chain<M, K, T, F>(
     rng: &mut Pcg64,
 ) -> (Vec<Sample>, ChainStats)
 where
-    M: LlDiffModel,
+    M: LlDiffModel + Sync,
     K: ProposalKernel<M::Param>,
     T: AcceptanceTest,
     F: FnMut(&M::Param) -> f64,
@@ -172,7 +195,7 @@ pub fn run_chain_cached<M, K, T, F>(
     rng: &mut Pcg64,
 ) -> (Vec<Sample>, ChainStats)
 where
-    M: CachedLlDiff,
+    M: CachedLlDiff + Sync,
     K: ProposalKernel<M::Param>,
     T: AcceptanceTest,
     F: FnMut(&M::Param) -> f64,

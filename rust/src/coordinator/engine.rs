@@ -17,7 +17,7 @@
 //!   second pass over samples.
 
 use crate::coordinator::accept::AcceptanceTest;
-use crate::coordinator::chain::{drive_chain, Budget, ChainStats, Sample};
+use crate::coordinator::chain::{drive_chain_par, Budget, ChainStats, Sample};
 use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
 use crate::metrics::convergence::{cross_chain, Convergence};
 use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
@@ -171,6 +171,13 @@ where
 /// from a clone of `init` and steps on `Pcg64::new(base_seed,
 /// STREAM_BASE + c)`, so a launch is bit-reproducible for any pool size
 /// (for step and data budgets).
+///
+/// When the pool has more workers than chains (`threads > chains`), the
+/// spare capacity is handed to the chains as *intra-step* workers
+/// (`threads / chains` each) — kernels with a parallelizable step (the
+/// MH exact-rule full scan) use them through `scratch_par`. Intra-step
+/// parallelism is deterministic by construction, so this keeps the
+/// bit-reproducibility guarantee while filling the pool at K = 1.
 pub fn run_engine_kernel<T, OF, O>(
     kernel: &T,
     init: T::State,
@@ -184,12 +191,13 @@ where
     O: ChainObserver<T::State>,
 {
     assert!(cfg.chains >= 1, "need at least one chain");
+    let intra = if cfg.threads > cfg.chains { cfg.threads / cfg.chains } else { 1 };
     let init = &init;
     let start = std::time::Instant::now();
     let pairs = parallel_map(cfg.chains, cfg.threads, |c| {
         let mut rng = Pcg64::new(cfg.base_seed, STREAM_BASE + c as u64);
         let mut obs = make_observer(c);
-        let (samples, stats) = drive_chain(
+        let (samples, stats) = drive_chain_par(
             kernel,
             init.clone(),
             cfg.budget,
@@ -197,6 +205,7 @@ where
             cfg.thin,
             |p| obs.observe(p),
             &mut rng,
+            intra,
         );
         (ChainRun { chain: c, samples, stats }, obs)
     });

@@ -51,6 +51,17 @@ pub trait TransitionKernel {
     /// (schedulers, buffers, likelihood caches seeded from the state).
     fn scratch(&self, init: &Self::State) -> Self::Scratch;
 
+    /// `scratch` for a chain that may spend up to `intra_threads` worker
+    /// threads *inside* a step (the engine passes `threads / chains`
+    /// when it has more workers than chains). Kernels with a
+    /// parallelizable step (the MH families' exact-rule full scan)
+    /// override this; the default ignores the hint — intra-step
+    /// parallelism never changes results, only wall time.
+    fn scratch_par(&self, init: &Self::State, intra_threads: usize) -> Self::Scratch {
+        let _ = intra_threads;
+        self.scratch(init)
+    }
+
     /// Perform one transition, mutating `state` in place.
     fn step(
         &self,
@@ -73,7 +84,7 @@ pub struct MhKernel<'a, M, K, T = MhMode> {
 
 impl<M, K, T> TransitionKernel for MhKernel<'_, M, K, T>
 where
-    M: LlDiffModel,
+    M: LlDiffModel + Sync,
     K: ProposalKernel<M::Param>,
     T: AcceptanceTest,
 {
@@ -82,6 +93,10 @@ where
 
     fn scratch(&self, _init: &M::Param) -> MhScratch {
         MhScratch::new(self.model.n())
+    }
+
+    fn scratch_par(&self, _init: &M::Param, intra_threads: usize) -> MhScratch {
+        MhScratch::with_scan_threads(self.model.n(), intra_threads)
     }
 
     fn step(&self, state: &mut M::Param, scratch: &mut MhScratch, rng: &mut Pcg64) -> StepOutcome {
@@ -111,7 +126,7 @@ pub struct CachedMhKernel<'a, M, K, T = MhMode> {
 
 impl<M, K, T> TransitionKernel for CachedMhKernel<'_, M, K, T>
 where
-    M: CachedLlDiff,
+    M: CachedLlDiff + Sync,
     K: ProposalKernel<M::Param>,
     T: AcceptanceTest,
 {
@@ -120,6 +135,13 @@ where
 
     fn scratch(&self, init: &M::Param) -> CachedMhScratch<M> {
         CachedMhScratch { mh: MhScratch::new(self.model.n()), cache: self.model.init_cache(init) }
+    }
+
+    fn scratch_par(&self, init: &M::Param, intra_threads: usize) -> CachedMhScratch<M> {
+        CachedMhScratch {
+            mh: MhScratch::with_scan_threads(self.model.n(), intra_threads),
+            cache: self.model.init_cache(init),
+        }
     }
 
     fn step(

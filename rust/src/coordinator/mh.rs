@@ -2,14 +2,24 @@
 //! pluggable acceptance-test layer (`coordinator::accept`), with the
 //! exact O(N) rule, the paper's sequential test, the minibatch Barker
 //! test and the confidence sampler behind one `MhMode` enum.
+//!
+//! The step drivers wrap the model in a `MomentsSource`
+//! (`ModelMoments` uncached / `CachedMoments` cached) so acceptance
+//! rules see one population interface: gathered mini-batch moments fed
+//! straight from the scheduler's `&[u32]` slice, plus a full-population
+//! scan that runs the deterministic chunk-parallel driver when the
+//! chain's scratch carries spare worker threads (`scan_threads > 1`,
+//! wired up by the engine when `threads > chains`).
 
 use crate::coordinator::accept::{
     AcceptanceTest, AusterityTest, BarkerTest, ConfidenceConfig, ConfidenceTest, ExactTest,
-    StageTrace,
+    MomentsSource, StageTrace,
 };
 use crate::coordinator::austerity::SeqTestConfig;
 use crate::coordinator::scheduler::MinibatchScheduler;
-use crate::models::traits::{CachedLlDiff, LlDiffModel, Proposal};
+use crate::models::traits::{
+    full_scan_moments_par, CachedLlDiff, LlDiffModel, Proposal, ScanScratch,
+};
 use crate::stats::Pcg64;
 
 /// Which accept/reject rule to run. A closed enum over the four
@@ -69,13 +79,13 @@ impl AcceptanceTest for MhMode {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn decide<F: FnMut(&[usize]) -> (f64, f64)>(
+    fn decide<S: MomentsSource>(
         &self,
         n_total: usize,
         log_correction: f64,
-        moments: F,
+        moments: S,
         sched: &mut MinibatchScheduler,
-        idx_buf: &mut Vec<usize>,
+        idx_buf: &mut Vec<u32>,
         trace: &mut Vec<StageTrace>,
         rng: &mut Pcg64,
     ) -> crate::coordinator::accept::AcceptOutcome {
@@ -105,23 +115,81 @@ pub struct StepInfo {
 }
 
 /// Reusable per-chain scratch (avoids per-step allocation): the
-/// without-replacement scheduler, the chunked-scan index buffer, and the
-/// per-stage trace of the last decision.
+/// without-replacement scheduler, the chunk index buffer for
+/// closure-backed full scans, the per-stage trace of the last decision,
+/// and the deterministic-scan workspace (worker count + per-chunk
+/// partials).
 pub struct MhScratch {
     pub sched: MinibatchScheduler,
-    pub idx_buf: Vec<usize>,
+    pub idx_buf: Vec<u32>,
     /// Stage-by-stage record of the most recent decision (capacity is
     /// reused; cleared by every `decide`).
     pub trace: Vec<StageTrace>,
+    /// Full-scan workspace; `scan.threads() > 1` enables the
+    /// deterministic intra-step parallel scan on the exact path.
+    pub scan: ScanScratch,
 }
 
 impl MhScratch {
     pub fn new(n: usize) -> Self {
+        Self::with_scan_threads(n, 1)
+    }
+
+    /// Scratch whose exact-rule full scans may use up to `scan_threads`
+    /// worker threads (bit-identical to serial for any value).
+    pub fn with_scan_threads(n: usize, scan_threads: usize) -> Self {
         MhScratch {
             sched: MinibatchScheduler::new(n),
             idx_buf: Vec::new(),
             trace: Vec::new(),
+            scan: ScanScratch::new(scan_threads, n),
         }
+    }
+}
+
+/// The uncached model as a `MomentsSource`: gathered batches go straight
+/// to `lldiff_moments`; full scans run the range-based chunked driver
+/// (parallel when `scan` carries workers), bit-identical to the serial
+/// gathered scan by the `lldiff_range_moments` contract.
+pub struct ModelMoments<'a, M: LlDiffModel> {
+    pub model: &'a M,
+    pub cur: &'a M::Param,
+    pub prop: &'a M::Param,
+    pub scan: &'a mut ScanScratch,
+}
+
+impl<M: LlDiffModel + Sync> MomentsSource for ModelMoments<'_, M> {
+    fn batch(&mut self, idx: &[u32]) -> (f64, f64) {
+        self.model.lldiff_moments(idx, self.cur, self.prop)
+    }
+
+    fn full_scan(&mut self, n_total: usize, _idx_buf: &mut Vec<u32>) -> (f64, f64) {
+        let (model, cur, prop) = (self.model, self.cur, self.prop);
+        full_scan_moments_par(n_total, self.scan, |a, b| {
+            model.lldiff_range_moments(a, b, cur, prop)
+        })
+    }
+}
+
+/// The cached model as a `MomentsSource` (proposal side computed,
+/// current side served from the per-chain cache); full scans go through
+/// `CachedLlDiff::cached_full_scan`, which splits the cache into
+/// chunk-aligned lanes for the parallel driver.
+pub struct CachedMoments<'a, M: CachedLlDiff> {
+    pub model: &'a M,
+    pub cache: &'a mut M::Cache,
+    pub prop: &'a M::Param,
+    pub scan: &'a mut ScanScratch,
+}
+
+impl<M: CachedLlDiff + Sync> MomentsSource for CachedMoments<'_, M> {
+    fn batch(&mut self, idx: &[u32]) -> (f64, f64) {
+        self.model.cached_moments(self.cache, idx, self.prop)
+    }
+
+    fn full_scan(&mut self, n_total: usize, _idx_buf: &mut Vec<u32>) -> (f64, f64) {
+        debug_assert_eq!(n_total, self.model.n());
+        self.model.cached_full_scan(self.cache, self.prop, self.scan)
     }
 }
 
@@ -141,17 +209,18 @@ pub fn mh_step<M, T>(
     rng: &mut Pcg64,
 ) -> StepInfo
 where
-    M: LlDiffModel,
+    M: LlDiffModel + Sync,
     T: AcceptanceTest,
 {
+    let MhScratch { sched, idx_buf, trace, scan } = scratch;
     let cur_ref: &M::Param = cur;
     let out = mode.decide(
         model.n(),
         proposal.log_correction,
-        |idx| model.lldiff_moments(idx, cur_ref, &proposal.param),
-        &mut scratch.sched,
-        &mut scratch.idx_buf,
-        &mut scratch.trace,
+        ModelMoments { model, cur: cur_ref, prop: &proposal.param, scan },
+        sched,
+        idx_buf,
+        trace,
         rng,
     );
     if out.accept {
@@ -164,7 +233,7 @@ where
 /// statistics live in `cache` across steps, so each decision computes
 /// only the proposal side (and a rejected step leaves the cache valid
 /// for free). Decisions are bit-identical to `mh_step` under the same
-/// RNG stream for every acceptance rule — the moments closure is the
+/// RNG stream for every acceptance rule — the moments source is the
 /// only thing that differs, and the `CachedLlDiff` contract makes it
 /// return identical bits. Regression-tested in
 /// `tests/integration_engine.rs` and `tests/integration_accept.rs`.
@@ -178,18 +247,18 @@ pub fn mh_step_cached<M, T>(
     rng: &mut Pcg64,
 ) -> StepInfo
 where
-    M: CachedLlDiff,
+    M: CachedLlDiff + Sync,
     T: AcceptanceTest,
 {
     model.begin_step(cache);
-    let cache_ref = &mut *cache;
+    let MhScratch { sched, idx_buf, trace, scan } = scratch;
     let out = mode.decide(
         model.n(),
         proposal.log_correction,
-        |idx| model.cached_moments(cache_ref, idx, &proposal.param),
-        &mut scratch.sched,
-        &mut scratch.idx_buf,
-        &mut scratch.trace,
+        CachedMoments { model, cache: &mut *cache, prop: &proposal.param, scan },
+        sched,
+        idx_buf,
+        trace,
         rng,
     );
     model.end_step(cache, &proposal.param, out.accept);
@@ -378,6 +447,46 @@ mod tests {
                 assert_eq!(cur_a.to_bits(), cur_b.to_bits(), "mode {mode:?} step {step}");
             }
         }
+    }
+
+    #[test]
+    fn scan_threads_do_not_change_step_decisions() {
+        // the deterministic parallel scan: exact-rule chains with 1, 2
+        // and 8 scan workers make bit-identical decisions, cached and
+        // uncached
+        use crate::data::synthetic::linreg_toy;
+        use crate::models::LinRegModel;
+
+        let model = LinRegModel::new(linreg_toy(3_000, 0), 3.0, 4950.0);
+        let kernel = |cur: &f64, rng: &mut Pcg64| Proposal {
+            param: cur + rng.normal_scaled(0.0, 0.005),
+            log_correction: 0.0,
+        };
+        let run = |threads: usize, cached: bool| {
+            let mut rng = Pcg64::new(5, 6);
+            let mut scratch = MhScratch::with_scan_threads(model.n(), threads);
+            let mut cur = 0.45f64;
+            let mut cache = model.init_cache(&cur);
+            let mut trail = Vec::new();
+            for _ in 0..40 {
+                let p = kernel.propose(&cur, &mut rng);
+                let info = if cached {
+                    mh_step_cached(
+                        &model, &mut cur, &mut cache, p, &MhMode::Exact, &mut scratch, &mut rng,
+                    )
+                } else {
+                    mh_step(&model, &mut cur, p, &MhMode::Exact, &mut scratch, &mut rng)
+                };
+                trail.push((info.accepted, cur.to_bits()));
+            }
+            trail
+        };
+        let base = run(1, false);
+        for threads in [2usize, 8] {
+            assert_eq!(run(threads, false), base, "uncached threads {threads}");
+            assert_eq!(run(threads, true), base, "cached threads {threads}");
+        }
+        assert_eq!(run(1, true), base);
     }
 
     #[test]

@@ -35,11 +35,13 @@ pub mod scheduler;
 
 pub use accept::{
     AcceptOutcome, AcceptanceTest, AusterityTest, BarkerTest, ConfidenceConfig, ConfidenceTest,
-    ExactTest, StageTrace,
+    ExactTest, MomentsSource, StageTrace,
 };
 pub use adaptive::{run_adaptive_chain, AdaptiveMhKernel, EpsSchedule};
 pub use austerity::{seq_mh_test, seq_mh_test_cached, BoundSeq, SeqTestConfig, SeqTestOutcome};
-pub use chain::{drive_chain, run_chain, run_chain_cached, Budget, ChainStats, Sample};
+pub use chain::{
+    drive_chain, drive_chain_par, run_chain, run_chain_cached, Budget, ChainStats, Sample,
+};
 pub use delta::{PairStats, SeqTestTable};
 pub use design::{average_design, wang_tsiatis_design, worst_case_design, DesignChoice, DesignGrid, WtChoice};
 pub use dp::{analyze_pocock, analyze_walk, simulate_walk, uniform_pis, SeqAnalysis};
@@ -48,5 +50,5 @@ pub use engine::{
     EngineConfig, EngineResult,
 };
 pub use kernel::{CachedMhKernel, CachedMhScratch, MhKernel, StepOutcome, TransitionKernel};
-pub use mh::{mh_step, mh_step_cached, MhMode, MhScratch, StepInfo};
+pub use mh::{mh_step, mh_step_cached, CachedMoments, MhMode, MhScratch, ModelMoments, StepInfo};
 pub use scheduler::MinibatchScheduler;

@@ -9,6 +9,10 @@
 //! each step's prefix is re-randomized against the whole buffer, every
 //! step sees an exchangeable uniform without-replacement sample no matter
 //! what earlier steps consumed.
+//!
+//! The drawn `&[u32]` slice is the exact index type the moments kernels
+//! take (`LlDiffModel::lldiff_moments`), so acceptance rules feed it to
+//! the kernels directly — there is no per-stage widening copy anywhere.
 
 use crate::stats::Pcg64;
 
@@ -60,24 +64,6 @@ impl MinibatchScheduler {
     pub fn consumed_slice(&self) -> &[u32] {
         &self.indices[..self.pos]
     }
-
-    /// Draw the next mini-batch of up to `m` fresh indices into `buf` as
-    /// usize (clears `buf`; allocation-free once `buf` has capacity).
-    /// Returns the number drawn — 0 once the population is exhausted.
-    /// This is the one draw-and-convert protocol every sequential
-    /// acceptance rule shares; keeping it here means the rules cannot
-    /// silently diverge.
-    pub fn next_batch_into(&mut self, m: usize, buf: &mut Vec<usize>, rng: &mut Pcg64) -> usize {
-        let batch = self.next_batch(m, rng);
-        buf.clear();
-        buf.extend(batch.iter().map(|&i| i as usize));
-        buf.len()
-    }
-}
-
-/// Convenience: the consumed prefix as usize indices (allocates).
-pub fn to_usize(ix: &[u32]) -> Vec<usize> {
-    ix.iter().map(|&i| i as usize).collect()
 }
 
 #[cfg(test)]
@@ -108,24 +94,15 @@ mod tests {
     }
 
     #[test]
-    fn next_batch_into_matches_next_batch() {
-        let mut a = MinibatchScheduler::new(50);
-        let mut b = MinibatchScheduler::new(50);
-        let mut rng_a = Pcg64::seeded(3);
-        let mut rng_b = Pcg64::seeded(3);
-        let mut buf = Vec::new();
-        a.reset();
-        b.reset();
-        loop {
-            let va: Vec<usize> =
-                a.next_batch(7, &mut rng_a).iter().map(|&i| i as usize).collect();
-            let n = b.next_batch_into(7, &mut buf, &mut rng_b);
-            assert_eq!(va, buf);
-            assert_eq!(n, va.len());
-            if n == 0 {
-                break;
-            }
-        }
+    fn consumed_slice_is_the_draw_prefix() {
+        let mut sched = MinibatchScheduler::new(50);
+        let mut rng = Pcg64::seeded(3);
+        sched.reset();
+        let first: Vec<u32> = sched.next_batch(7, &mut rng).to_vec();
+        let second: Vec<u32> = sched.next_batch(5, &mut rng).to_vec();
+        let prefix: Vec<u32> = first.iter().chain(&second).copied().collect();
+        assert_eq!(sched.consumed_slice(), &prefix[..]);
+        assert_eq!(sched.consumed(), 12);
     }
 
     #[test]

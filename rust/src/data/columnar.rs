@@ -1,0 +1,314 @@
+//! Feature-major (structure-of-arrays) dataset storage and the
+//! lane-blocked dot-product building blocks of the likelihood hot path.
+//!
+//! The row-major `Dataset` keeps datapoint `i` as `d` consecutive
+//! doubles; computing `x_i . theta` there is a per-row dot product that
+//! ends in a horizontal reduction, and a full-population scan walks N
+//! such reductions. `Columnar` transposes the storage: feature `j` is
+//! one contiguous, lane-padded column, so a scan processes `LANES`
+//! *rows at a time* — each lane owns an independent accumulator chain,
+//! the inner loop is a pure mul-add per lane the compiler can keep in
+//! vector registers, and sequential chunks (the exact-rule scan) read
+//! every column at unit stride.
+//!
+//! **Bit-reproducibility contract.** Every helper here accumulates a
+//! row's dot product the same way: `z = 0; for j in 0..d { z += x[i][j]
+//! * t[j] }` — one scalar FP addition chain per (row, parameter) pair in
+//! feature order. The sequential-block, gathered-block and single-row
+//! variants therefore return *identical bits* for the same row, which is
+//! what lets the fused uncached kernel, the cached proposal-side kernel
+//! and the stale-entry recompute path share one numerical definition
+//! (see DESIGN.md §Data layout). Lane blocking only changes how the
+//! *population* sums `sum l` / `sum l^2` are associated, never a row's
+//! `z`.
+
+use crate::data::Dataset;
+
+/// Rows per lane block. Eight f64 lanes = two AVX2 / one AVX-512 vector
+/// per accumulator array; also the padding quantum of every column.
+pub const LANES: usize = 8;
+
+/// Feature-major dataset: `d` columns of `padded_n` doubles each
+/// (`n` real values, zero-padded up to the lane quantum), labels packed
+/// separately. Built once from the row-major `Dataset`; the models keep
+/// both views (row-major for gradients/predictions, columnar for the
+/// moments hot path).
+#[derive(Clone, Debug)]
+pub struct Columnar {
+    /// `d * padded_n` doubles; column `j` occupies
+    /// `[j * padded_n, (j + 1) * padded_n)`.
+    cols: Vec<f64>,
+    /// Labels (classification: ±1; regression: targets), length `n`.
+    y: Vec<f64>,
+    n: usize,
+    d: usize,
+    padded_n: usize,
+}
+
+impl Columnar {
+    /// Transpose a row-major dataset into lane-padded columns.
+    pub fn from_dataset(data: &Dataset) -> Self {
+        let (n, d) = (data.n(), data.d());
+        assert!(n <= u32::MAX as usize, "columnar indices are u32");
+        let padded_n = n.div_ceil(LANES) * LANES;
+        let mut cols = vec![0.0; d * padded_n];
+        for i in 0..n {
+            let row = data.row(i);
+            for j in 0..d {
+                cols[j * padded_n + i] = row[j];
+            }
+        }
+        Columnar { cols, y: data.labels().to_vec(), n, d, padded_n }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Column length including lane padding.
+    #[inline]
+    pub fn padded_n(&self) -> usize {
+        self.padded_n
+    }
+
+    /// Feature column `j` (padded to `padded_n`).
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.cols[j * self.padded_n..(j + 1) * self.padded_n]
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> f64 {
+        self.y[i]
+    }
+
+    #[inline]
+    pub fn labels(&self) -> &[f64] {
+        &self.y
+    }
+
+    /// Feature value `(i, j)`.
+    #[inline]
+    pub fn value(&self, i: usize, j: usize) -> f64 {
+        self.cols[j * self.padded_n + i]
+    }
+
+    /// Single-row dot product `x_i . t` (sequential over features — the
+    /// canonical accumulation order every block variant reproduces).
+    #[inline]
+    pub fn row_dot(&self, i: usize, t: &[f64]) -> f64 {
+        let pn = self.padded_n;
+        let mut z = 0.0;
+        for (j, &tj) in t.iter().enumerate() {
+            z += self.cols[j * pn + i] * tj;
+        }
+        z
+    }
+
+    /// Single-row dual dot product against two parameter vectors in one
+    /// data pass; each side bit-identical to `row_dot`.
+    #[inline]
+    pub fn row_dot2(&self, i: usize, a: &[f64], b: &[f64]) -> (f64, f64) {
+        let pn = self.padded_n;
+        let (mut z0, mut z1) = (0.0, 0.0);
+        for (j, (&ta, &tb)) in a.iter().zip(b).enumerate() {
+            let x = self.cols[j * pn + i];
+            z0 += x * ta;
+            z1 += x * tb;
+        }
+        (z0, z1)
+    }
+
+    /// Dual dot products for `LANES` consecutive rows starting at
+    /// `base`: contiguous column loads, one independent accumulator
+    /// chain per lane (the full-scan fast path).
+    #[inline]
+    pub fn block_dot2_seq(
+        &self,
+        base: usize,
+        a: &[f64],
+        b: &[f64],
+        z0: &mut [f64; LANES],
+        z1: &mut [f64; LANES],
+    ) {
+        debug_assert!(base + LANES <= self.padded_n);
+        *z0 = [0.0; LANES];
+        *z1 = [0.0; LANES];
+        let pn = self.padded_n;
+        for (j, (&ta, &tb)) in a.iter().zip(b).enumerate() {
+            let col = &self.cols[j * pn + base..j * pn + base + LANES];
+            for k in 0..LANES {
+                z0[k] += col[k] * ta;
+                z1[k] += col[k] * tb;
+            }
+        }
+    }
+
+    /// Dual dot products for the first `LANES` gathered rows of `idx`
+    /// (the minibatch path); per-row bits identical to `block_dot2_seq`.
+    #[inline]
+    pub fn block_dot2_gather(
+        &self,
+        idx: &[u32],
+        a: &[f64],
+        b: &[f64],
+        z0: &mut [f64; LANES],
+        z1: &mut [f64; LANES],
+    ) {
+        debug_assert!(idx.len() >= LANES);
+        *z0 = [0.0; LANES];
+        *z1 = [0.0; LANES];
+        let pn = self.padded_n;
+        for (j, (&ta, &tb)) in a.iter().zip(b).enumerate() {
+            let col = &self.cols[j * pn..(j + 1) * pn];
+            for k in 0..LANES {
+                let x = col[idx[k] as usize];
+                z0[k] += x * ta;
+                z1[k] += x * tb;
+            }
+        }
+    }
+
+    /// Single-parameter variant of `block_dot2_seq` (cached path:
+    /// proposal side only).
+    #[inline]
+    pub fn block_dot_seq(&self, base: usize, t: &[f64], z: &mut [f64; LANES]) {
+        debug_assert!(base + LANES <= self.padded_n);
+        *z = [0.0; LANES];
+        let pn = self.padded_n;
+        for (j, &tj) in t.iter().enumerate() {
+            let col = &self.cols[j * pn + base..j * pn + base + LANES];
+            for k in 0..LANES {
+                z[k] += col[k] * tj;
+            }
+        }
+    }
+
+    /// Single-parameter variant of `block_dot2_gather`.
+    #[inline]
+    pub fn block_dot_gather(&self, idx: &[u32], t: &[f64], z: &mut [f64; LANES]) {
+        debug_assert!(idx.len() >= LANES);
+        *z = [0.0; LANES];
+        let pn = self.padded_n;
+        for (j, &tj) in t.iter().enumerate() {
+            let col = &self.cols[j * pn..(j + 1) * pn];
+            for k in 0..LANES {
+                z[k] += col[idx[k] as usize] * tj;
+            }
+        }
+    }
+}
+
+/// Fixed-order reduction of one lane-accumulator array:
+/// `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))`. Every kernel that blocks
+/// its population sums over `LANES` lanes must fold them through this
+/// one function so cached/uncached and serial/parallel paths associate
+/// identically.
+#[inline]
+pub fn reduce_lanes(acc: &[f64; LANES]) -> f64 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Pcg64;
+
+    fn random_dataset(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg64::seeded(seed);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 }).collect();
+        Dataset::new(x, y, n, d)
+    }
+
+    #[test]
+    fn transpose_round_trips_values_and_pads_with_zeros() {
+        let data = random_dataset(13, 5, 0);
+        let cols = Columnar::from_dataset(&data);
+        assert_eq!(cols.n(), 13);
+        assert_eq!(cols.d(), 5);
+        assert_eq!(cols.padded_n(), 16);
+        for i in 0..13 {
+            let row = data.row(i);
+            for j in 0..5 {
+                assert_eq!(cols.value(i, j).to_bits(), row[j].to_bits());
+            }
+            assert_eq!(cols.label(i), data.label(i));
+        }
+        for j in 0..5 {
+            assert_eq!(&cols.col(j)[13..], &[0.0; 3]);
+        }
+    }
+
+    #[test]
+    fn row_dot_matches_reference_sum() {
+        let data = random_dataset(40, 7, 1);
+        let cols = Columnar::from_dataset(&data);
+        let mut rng = Pcg64::seeded(2);
+        let t: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+        for i in [0usize, 17, 39] {
+            let mut want = 0.0;
+            for j in 0..7 {
+                want += data.row(i)[j] * t[j];
+            }
+            assert_eq!(cols.row_dot(i, &t).to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn block_variants_are_bit_identical_to_row_dots() {
+        let data = random_dataset(64, 11, 3);
+        let cols = Columnar::from_dataset(&data);
+        let mut rng = Pcg64::seeded(4);
+        let a: Vec<f64> = (0..11).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..11).map(|_| rng.normal()).collect();
+        let (mut z0, mut z1) = ([0.0; LANES], [0.0; LANES]);
+
+        // sequential block
+        cols.block_dot2_seq(16, &a, &b, &mut z0, &mut z1);
+        for k in 0..LANES {
+            let (w0, w1) = cols.row_dot2(16 + k, &a, &b);
+            assert_eq!(z0[k].to_bits(), w0.to_bits());
+            assert_eq!(z1[k].to_bits(), w1.to_bits());
+            assert_eq!(w0.to_bits(), cols.row_dot(16 + k, &a).to_bits());
+        }
+
+        // gathered block over the same rows must match the sequential one
+        let idx: Vec<u32> = (16u32..24).collect();
+        let (mut g0, mut g1) = ([0.0; LANES], [0.0; LANES]);
+        cols.block_dot2_gather(&idx, &a, &b, &mut g0, &mut g1);
+        assert_eq!(z0.map(f64::to_bits), g0.map(f64::to_bits));
+        assert_eq!(z1.map(f64::to_bits), g1.map(f64::to_bits));
+
+        // scattered gather agrees with per-row dots
+        let scat: Vec<u32> = vec![5, 63, 0, 31, 8, 41, 2, 57];
+        cols.block_dot2_gather(&scat, &a, &b, &mut g0, &mut g1);
+        let mut s = [0.0; LANES];
+        cols.block_dot_gather(&scat, &b, &mut s);
+        for k in 0..LANES {
+            let (w0, w1) = cols.row_dot2(scat[k] as usize, &a, &b);
+            assert_eq!(g0[k].to_bits(), w0.to_bits());
+            assert_eq!(g1[k].to_bits(), w1.to_bits());
+            assert_eq!(s[k].to_bits(), w1.to_bits());
+        }
+
+        let mut sq = [0.0; LANES];
+        cols.block_dot_seq(16, &b, &mut sq);
+        assert_eq!(sq.map(f64::to_bits), z1.map(f64::to_bits));
+    }
+
+    #[test]
+    fn reduce_lanes_is_the_documented_tree() {
+        let acc = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+        assert_eq!(reduce_lanes(&acc), 255.0);
+        let acc = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
+        let want = ((0.1 + 0.2) + (0.3 + 0.4)) + ((0.5 + 0.6) + (0.7 + 0.8));
+        assert_eq!(reduce_lanes(&acc).to_bits(), want.to_bits());
+    }
+}

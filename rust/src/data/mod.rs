@@ -1,8 +1,10 @@
 //! Datasets and the small linear-algebra kit the models sit on.
 
+pub mod columnar;
 pub mod dataset;
 pub mod linalg;
 pub mod synthetic;
 
+pub use columnar::{Columnar, LANES};
 pub use dataset::{Dataset, Unsupervised};
 pub use linalg::Mat;

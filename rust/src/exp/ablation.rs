@@ -94,10 +94,9 @@ pub fn ablation_replacement(scale: Scale) -> (f64, f64) {
     let cfg = SeqTestConfig::new(0.05, m);
     let mut sched = MinibatchScheduler::new(n);
     let mut rng = Pcg64::seeded(11);
-    let mut buf = Vec::new();
     let mut used_wo = 0u64;
     for _ in 0..trials {
-        let o = seq_mh_test(&fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng, &mut buf);
+        let o = seq_mh_test(&fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng);
         used_wo += o.n_used as u64;
     }
 

@@ -42,12 +42,10 @@ pub fn run_fig1_and_fig10(scale: Scale) {
             let fixed = FixedLs(&pop.ls);
             let mut sched = MinibatchScheduler::new(n);
             let mut rng = Pcg64::new(1000 + (eps * 1e4) as u64, mu_std.to_bits());
-            let mut buf = Vec::new();
             let mut wrong = 0usize;
             let mut used = 0u64;
             for _ in 0..trials {
-                let out =
-                    seq_mh_test(&fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng, &mut buf);
+                let out = seq_mh_test(&fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng);
                 used += out.n_used as u64;
                 if mu_std == 0.0 {
                     // worst case: any early decision counts half (Eqn. 21)

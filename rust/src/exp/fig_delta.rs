@@ -49,13 +49,12 @@ pub fn run_fig11_and_fig12(scale: Scale) -> Vec<DeltaPoint> {
         // measured: run the actual sequential test with fresh u each time
         let fixed = FixedLs(&pop.ls);
         let mut sched = MinibatchScheduler::new(n);
-        let mut buf = Vec::new();
         let mut accepts = 0usize;
         for _ in 0..trials {
             let u = rng.uniform_pos();
             let mu0 = (u.ln() + pop.log_correction) / n as f64;
             let o = crate::coordinator::austerity::seq_mh_test(
-                &fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng, &mut buf,
+                &fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng,
             );
             accepts += o.accept as usize;
         }

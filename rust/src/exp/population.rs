@@ -83,10 +83,10 @@ impl LlDiffModel for FixedLs<'_> {
         self.0[i]
     }
 
-    fn lldiff_moments(&self, idx: &[usize], _: &(), _: &()) -> (f64, f64) {
+    fn lldiff_moments(&self, idx: &[u32], _: &(), _: &()) -> (f64, f64) {
         let (mut s, mut s2) = (0.0, 0.0);
         for &i in idx {
-            let l = self.0[i];
+            let l = self.0[i as usize];
             s += l;
             s2 += l * l;
         }

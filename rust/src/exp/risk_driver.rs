@@ -49,7 +49,7 @@ fn run_one_chain<M, K, F>(
     seed: u64,
 ) -> (Vec<f64>, f64, f64, f64)
 where
-    M: LlDiffModel,
+    M: LlDiffModel + Sync,
     K: ProposalKernel<M::Param>,
     F: Fn(&M::Param) -> Vec<f64>,
 {

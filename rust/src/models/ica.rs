@@ -70,14 +70,34 @@ impl LlDiffModel for IcaModel {
         (ld_prop - ld_cur) + self.cosh_part(i, prop) - self.cosh_part(i, cur)
     }
 
-    fn lldiff_moments(&self, idx: &[usize], cur: &Mat, prop: &Mat) -> (f64, f64) {
+    fn lldiff_moments(&self, idx: &[u32], cur: &Mat, prop: &Mat) -> (f64, f64) {
         // slogdet once per call, fused cosh pass per row.
+        self.fused_moments(idx.iter().map(|&i| i as usize), cur, prop)
+    }
+
+    fn lldiff_range_moments(&self, start: usize, end: usize, cur: &Mat, prop: &Mat) -> (f64, f64) {
+        // same fused body over the contiguous range, so the exact path
+        // keeps the gathered kernel's cost and bits
+        self.fused_moments(start..end, cur, prop)
+    }
+}
+
+impl IcaModel {
+    /// The fused per-row pass shared by the gathered and range moments
+    /// kernels (slogdet once per call): identical arithmetic per row, so
+    /// the two entry points are bit-identical on the same index sets.
+    fn fused_moments(
+        &self,
+        rows: impl Iterator<Item = usize>,
+        cur: &Mat,
+        prop: &Mat,
+    ) -> (f64, f64) {
         let (_, ld_cur) = cur.slogdet();
         let (_, ld_prop) = prop.slogdet();
         let const_shift = ld_prop - ld_cur;
         let d = self.d();
         let (mut s, mut s2) = (0.0, 0.0);
-        for &i in idx {
+        for i in rows {
             let x = self.data.row(i);
             let mut l = const_shift;
             for j in 0..d {
@@ -155,11 +175,11 @@ mod tests {
             let w = random_orthonormal(4, rng);
             let wp = w.matmul(&random_skew(4, 0.05, rng).expm());
             let k = rng.below(80) + 1;
-            let idx: Vec<usize> = (0..k).map(|_| rng.below(300)).collect();
+            let idx: Vec<u32> = (0..k).map(|_| rng.below(300) as u32).collect();
             let (s, s2) = m.lldiff_moments(&idx, &w, &wp);
             let (mut ws, mut ws2) = (0.0, 0.0);
             for &i in &idx {
-                let l = m.lldiff(i, &w, &wp);
+                let l = m.lldiff(i as usize, &w, &wp);
                 ws += l;
                 ws2 += l * l;
             }
@@ -201,7 +221,7 @@ mod tests {
         let m = IcaModel::new(obs);
         let mut rng = Pcg64::seeded(6);
         let wr = random_orthonormal(4, &mut rng);
-        let idx: Vec<usize> = (0..2000).collect();
+        let idx: Vec<u32> = (0..2000).collect();
         // mean lldiff from random W to true W0 should be positive
         let (s, _) = m.lldiff_moments(&idx, &wr, &w0);
         assert!(s > 0.0, "sum lldiff {s}");

@@ -4,12 +4,25 @@
 //! p(theta) ~ exp(-lam0 |theta|). The paper uses lam = 3, lam0 = 4950 so
 //! the prior spike at 0 competes with the likelihood mode near 0.5,
 //! creating the low-density valley that throws uncorrected SGLD off.
+//!
+//! The moments kernels follow the same `LANES`-blocked SoA skeleton as
+//! the logistic model (d = 1: one feature column + the target column):
+//! 8 independent lane chains for the per-point terms, population sums in
+//! lane partials folded through `reduce_lanes`, scalar tail after the
+//! reduction. Gathered/range/cached variants are bit-identical by
+//! construction; the pre-SoA scalar loop is retained as
+//! `lldiff_moments_ref`.
 
+use crate::data::columnar::{reduce_lanes, Columnar, LANES};
 use crate::data::Dataset;
-use crate::models::traits::{CachedLlDiff, LlDiffModel};
+use crate::models::traits::{
+    cached_scan_par, CacheLanes, CachedLlDiff, LlDiffModel, ScanScratch,
+};
 
 pub struct LinRegModel {
     data: Dataset,
+    /// Columnar mirror (single feature column + targets).
+    cols: Columnar,
     /// Gaussian noise precision lambda (paper: 3).
     pub lam: f64,
     /// Laplace prior rate lambda_0 (paper: 4950).
@@ -19,7 +32,8 @@ pub struct LinRegModel {
 impl LinRegModel {
     pub fn new(data: Dataset, lam: f64, lam0: f64) -> Self {
         assert_eq!(data.d(), 1, "toy model is 1-d");
-        LinRegModel { data, lam, lam0 }
+        let cols = Columnar::from_dataset(&data);
+        LinRegModel { data, cols, lam, lam0 }
     }
 
     pub fn data(&self) -> &Dataset {
@@ -75,6 +89,130 @@ impl LinRegModel {
         }
         (grid, dens.iter().map(|d| d / z).collect())
     }
+
+    /// Retained pre-SoA scalar kernel: correctness baseline for the
+    /// lane-blocked kernels (≤ 1e-12 relative) and bench denominator.
+    pub fn lldiff_moments_ref(&self, idx: &[u32], cur: f64, prop: f64) -> (f64, f64) {
+        let (mut s, mut s2) = (0.0, 0.0);
+        let half_lam = 0.5 * self.lam;
+        for &i in idx {
+            let x = self.data.row(i as usize)[0];
+            let y = self.data.label(i as usize);
+            let (rc, rp) = (y - cur * x, y - prop * x);
+            let l = -half_lam * (rp * rp - rc * rc);
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
+
+    /// The per-point term with pre-squared residuals — the one
+    /// arithmetic definition every kernel variant (and the cache, which
+    /// stores the squares) shares.
+    #[inline]
+    fn l_from_squares(&self, sq_prop: f64, sq_cur: f64) -> f64 {
+        -(0.5 * self.lam) * (sq_prop - sq_cur)
+    }
+
+    /// One row of the cached kernels — THE single definition of the
+    /// lazy-revalidation step (read-or-recompute the current-side
+    /// squared residual, record the proposal square + stamp, return
+    /// `l`). Every cached call site goes through here, so the
+    /// revalidation rule cannot diverge between the gathered and
+    /// chunked-scan paths.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn cached_row(
+        &self,
+        x: f64,
+        y: f64,
+        sq_cur: &mut f64,
+        ver_cur: &mut u64,
+        sq_prop: &mut f64,
+        stamp: &mut u64,
+        theta_cur: f64,
+        prop: f64,
+        version: u64,
+        step: u64,
+    ) -> f64 {
+        let sq_c = if *ver_cur == version {
+            *sq_cur
+        } else {
+            let rc = y - theta_cur * x;
+            let sq = rc * rc;
+            *sq_cur = sq;
+            *ver_cur = version;
+            sq
+        };
+        let rp = y - prop * x;
+        let sq_p = rp * rp;
+        *sq_prop = sq_p;
+        *stamp = step;
+        self.l_from_squares(sq_p, sq_c)
+    }
+
+    /// One chunk of the cached kernels: proposal-side squared residuals
+    /// computed fresh, current side served from the cache lanes
+    /// (recomputed when stale). `lanes` index 0 is population index
+    /// `start`.
+    #[allow(clippy::too_many_arguments)]
+    fn cached_chunk(
+        &self,
+        start: usize,
+        end: usize,
+        lanes: &mut CacheLanes<'_>,
+        theta_cur: f64,
+        prop: f64,
+        version: u64,
+        step: u64,
+    ) -> (f64, f64) {
+        let xs = self.cols.col(0);
+        let ys = self.cols.labels();
+        let mut sa = [0.0f64; LANES];
+        let mut s2a = [0.0f64; LANES];
+        let mut base = start;
+        while base + LANES <= end {
+            for k in 0..LANES {
+                let i = base + k;
+                let o = i - start;
+                let l = self.cached_row(
+                    xs[i],
+                    ys[i],
+                    &mut lanes.val_cur[o],
+                    &mut lanes.ver_cur[o],
+                    &mut lanes.val_prop[o],
+                    &mut lanes.stamp[o],
+                    theta_cur,
+                    prop,
+                    version,
+                    step,
+                );
+                sa[k] += l;
+                s2a[k] += l * l;
+            }
+            base += LANES;
+        }
+        let mut s = reduce_lanes(&sa);
+        let mut s2 = reduce_lanes(&s2a);
+        for i in base..end {
+            let o = i - start;
+            let l = self.cached_row(
+                xs[i],
+                ys[i],
+                &mut lanes.val_cur[o],
+                &mut lanes.ver_cur[o],
+                &mut lanes.val_prop[o],
+                &mut lanes.stamp[o],
+                theta_cur,
+                prop,
+                version,
+                step,
+            );
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
 }
 
 impl LlDiffModel for LinRegModel {
@@ -88,17 +226,63 @@ impl LlDiffModel for LinRegModel {
         let x = self.data.row(i)[0];
         let y = self.data.label(i);
         let (rc, rp) = (y - cur * x, y - prop * x);
-        -0.5 * self.lam * (rp * rp - rc * rc)
+        self.l_from_squares(rp * rp, rc * rc)
     }
 
-    fn lldiff_moments(&self, idx: &[usize], cur: &f64, prop: &f64) -> (f64, f64) {
-        let (mut s, mut s2) = (0.0, 0.0);
-        let half_lam = 0.5 * self.lam;
-        for &i in idx {
-            let x = self.data.row(i)[0];
-            let y = self.data.label(i);
+    fn lldiff_moments(&self, idx: &[u32], cur: &f64, prop: &f64) -> (f64, f64) {
+        let xs = self.cols.col(0);
+        let ys = self.cols.labels();
+        let mut sa = [0.0f64; LANES];
+        let mut s2a = [0.0f64; LANES];
+        let mut blocks = idx.chunks_exact(LANES);
+        for block in &mut blocks {
+            for k in 0..LANES {
+                let i = block[k] as usize;
+                let (x, y) = (xs[i], ys[i]);
+                let (rc, rp) = (y - cur * x, y - prop * x);
+                let l = self.l_from_squares(rp * rp, rc * rc);
+                sa[k] += l;
+                s2a[k] += l * l;
+            }
+        }
+        let mut s = reduce_lanes(&sa);
+        let mut s2 = reduce_lanes(&s2a);
+        for &iu in blocks.remainder() {
+            let i = iu as usize;
+            let (x, y) = (xs[i], ys[i]);
             let (rc, rp) = (y - cur * x, y - prop * x);
-            let l = -half_lam * (rp * rp - rc * rc);
+            let l = self.l_from_squares(rp * rp, rc * rc);
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
+
+    fn lldiff_range_moments(&self, start: usize, end: usize, cur: &f64, prop: &f64) -> (f64, f64) {
+        // contiguous-load twin of the gathered kernel; bit-identical on
+        // the same indices
+        let xs = self.cols.col(0);
+        let ys = self.cols.labels();
+        let mut sa = [0.0f64; LANES];
+        let mut s2a = [0.0f64; LANES];
+        let mut base = start;
+        while base + LANES <= end {
+            for k in 0..LANES {
+                let i = base + k;
+                let (x, y) = (xs[i], ys[i]);
+                let (rc, rp) = (y - cur * x, y - prop * x);
+                let l = self.l_from_squares(rp * rp, rc * rc);
+                sa[k] += l;
+                s2a[k] += l * l;
+            }
+            base += LANES;
+        }
+        let mut s = reduce_lanes(&sa);
+        let mut s2 = reduce_lanes(&s2a);
+        for i in base..end {
+            let (x, y) = (xs[i], ys[i]);
+            let (rc, rp) = (y - cur * x, y - prop * x);
+            let l = self.l_from_squares(rp * rp, rc * rc);
             s += l;
             s2 += l * l;
         }
@@ -141,33 +325,69 @@ impl CachedLlDiff for LinRegModel {
         cache.step += 1;
     }
 
-    fn cached_moments(&self, cache: &mut LinRegCache, idx: &[usize], prop: &f64) -> (f64, f64) {
-        let half_lam = 0.5 * self.lam;
-        let step = cache.step;
-        let version = cache.version;
-        let theta_cur = cache.theta_cur;
-        let (mut s, mut s2) = (0.0, 0.0);
-        for &i in idx {
-            let x = self.data.row(i)[0];
-            let y = self.data.label(i);
-            let sq_c = if cache.cur_ver[i] == version {
-                cache.sq_cur[i]
-            } else {
-                let rc = y - theta_cur * x;
-                let sq = rc * rc;
-                cache.sq_cur[i] = sq;
-                cache.cur_ver[i] = version;
-                sq
-            };
-            let rp = y - prop * x;
-            let sq_p = rp * rp;
-            cache.sq_prop[i] = sq_p;
-            cache.stamp[i] = step;
-            let l = -half_lam * (sq_p - sq_c);
+    fn cached_moments(&self, cache: &mut LinRegCache, idx: &[u32], prop: &f64) -> (f64, f64) {
+        let xs = self.cols.col(0);
+        let ys = self.cols.labels();
+        let prop = *prop;
+        let LinRegCache { theta_cur, sq_cur, cur_ver, version, sq_prop, stamp, step } = cache;
+        let (theta_cur, version, step) = (*theta_cur, *version, *step);
+        let mut sa = [0.0f64; LANES];
+        let mut s2a = [0.0f64; LANES];
+        let mut blocks = idx.chunks_exact(LANES);
+        for block in &mut blocks {
+            for k in 0..LANES {
+                let i = block[k] as usize;
+                let l = self.cached_row(
+                    xs[i],
+                    ys[i],
+                    &mut sq_cur[i],
+                    &mut cur_ver[i],
+                    &mut sq_prop[i],
+                    &mut stamp[i],
+                    theta_cur,
+                    prop,
+                    version,
+                    step,
+                );
+                sa[k] += l;
+                s2a[k] += l * l;
+            }
+        }
+        let mut s = reduce_lanes(&sa);
+        let mut s2 = reduce_lanes(&s2a);
+        for &iu in blocks.remainder() {
+            let i = iu as usize;
+            let l = self.cached_row(
+                xs[i],
+                ys[i],
+                &mut sq_cur[i],
+                &mut cur_ver[i],
+                &mut sq_prop[i],
+                &mut stamp[i],
+                theta_cur,
+                prop,
+                version,
+                step,
+            );
             s += l;
             s2 += l * l;
         }
         (s, s2)
+    }
+
+    fn cached_full_scan(
+        &self,
+        cache: &mut LinRegCache,
+        prop: &f64,
+        scan: &mut ScanScratch,
+    ) -> (f64, f64) {
+        let prop = *prop;
+        let LinRegCache { theta_cur, sq_cur, cur_ver, version, sq_prop, stamp, step } = cache;
+        let (theta_cur, version, step) = (*theta_cur, *version, *step);
+        let lanes = CacheLanes { val_cur: sq_cur, ver_cur: cur_ver, val_prop: sq_prop, stamp };
+        cached_scan_par(self.n(), scan, lanes, |start, end, mut sub| {
+            self.cached_chunk(start, end, &mut sub, theta_cur, prop, version, step)
+        })
     }
 
     fn end_step(&self, cache: &mut LinRegCache, prop: &f64, accepted: bool) {
@@ -214,16 +434,47 @@ mod tests {
             let cur = rng.normal_scaled(0.3, 0.2);
             let prop = rng.normal_scaled(0.3, 0.2);
             let k = rng.below(200) + 1;
-            let idx: Vec<usize> = (0..k).map(|_| rng.below(2000)).collect();
+            let idx: Vec<u32> = (0..k).map(|_| rng.below(2000) as u32).collect();
             let (s, s2) = m.lldiff_moments(&idx, &cur, &prop);
             let (mut ws, mut ws2) = (0.0, 0.0);
             for &i in &idx {
-                let l = m.lldiff(i, &cur, &prop);
+                let l = m.lldiff(i as usize, &cur, &prop);
                 ws += l;
                 ws2 += l * l;
             }
             assert!((s - ws).abs() < 1e-9);
             assert!((s2 - ws2).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn soa_moments_match_scalar_reference() {
+        let m = model();
+        testkit::forall(32, |rng| {
+            let cur = rng.normal_scaled(0.3, 0.2);
+            let prop = rng.normal_scaled(0.3, 0.2);
+            let k = rng.below(300) + 1;
+            let idx: Vec<u32> = (0..k).map(|_| rng.below(10_000) as u32).collect();
+            let (s, s2) = m.lldiff_moments(&idx, &cur, &prop);
+            let (rs, rs2) = m.lldiff_moments_ref(&idx, cur, prop);
+            assert!((s - rs).abs() <= 1e-12 * rs.abs().max(1.0), "{s} vs {rs}");
+            assert!((s2 - rs2).abs() <= 1e-12 * rs2.abs().max(1.0), "{s2} vs {rs2}");
+        });
+    }
+
+    #[test]
+    fn range_kernel_bit_identical_to_gathered() {
+        let m = model();
+        testkit::forall(16, |rng| {
+            let cur = rng.normal_scaled(0.3, 0.2);
+            let prop = rng.normal_scaled(0.3, 0.2);
+            let a = rng.below(9_000);
+            let b = a + rng.below(600) + 1;
+            let idx: Vec<u32> = (a as u32..b as u32).collect();
+            let g = m.lldiff_moments(&idx, &cur, &prop);
+            let r = m.lldiff_range_moments(a, b, &cur, &prop);
+            assert_eq!(g.0.to_bits(), r.0.to_bits());
+            assert_eq!(g.1.to_bits(), r.1.to_bits());
         });
     }
 
@@ -234,7 +485,7 @@ mod tests {
             let cur = rng.normal_scaled(0.3, 0.2);
             let prop = rng.normal_scaled(0.3, 0.2);
             let k = rng.below(200) + 1;
-            let idx: Vec<usize> = (0..k).map(|_| rng.below(2000)).collect();
+            let idx: Vec<u32> = (0..k).map(|_| rng.below(2000) as u32).collect();
             let mut cache = m.init_cache(&cur);
             m.begin_step(&mut cache);
             let cached = m.cached_moments(&mut cache, &idx, &prop);
@@ -244,7 +495,7 @@ mod tests {
             // accept, then a full-population probe must still be
             // bit-identical to the uncached pass from the new parameter
             m.end_step(&mut cache, &prop, true);
-            let all: Vec<usize> = (0..m.n()).collect();
+            let all: Vec<u32> = (0..m.n() as u32).collect();
             let probe = prop + 0.01;
             m.begin_step(&mut cache);
             let cached = m.cached_moments(&mut cache, &all, &probe);
@@ -252,6 +503,20 @@ mod tests {
             assert_eq!(cached.0.to_bits(), plain.0.to_bits());
             assert_eq!(cached.1.to_bits(), plain.1.to_bits());
         });
+    }
+
+    #[test]
+    fn cached_full_scan_bit_identical_to_full_moments() {
+        let m = model();
+        let want = m.full_moments(&0.45, &0.47);
+        for threads in [1usize, 2, 8] {
+            let mut cache = m.init_cache(&0.45);
+            m.begin_step(&mut cache);
+            let mut scan = ScanScratch::new(threads, m.n());
+            let got = m.cached_full_scan(&mut cache, &0.47, &mut scan);
+            assert_eq!(got.0.to_bits(), want.0.to_bits(), "threads {threads}");
+            assert_eq!(got.1.to_bits(), want.1.to_bits(), "threads {threads}");
+        }
     }
 
     #[test]

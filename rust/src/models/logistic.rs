@@ -2,9 +2,26 @@
 //!
 //! Model: p(y_i | x_i, theta) = sigmoid(y_i x_i^T theta), y_i in {-1, +1},
 //! spherical Gaussian prior N(0, I / precision).
+//!
+//! The moments hot path runs on the columnar (feature-major) view of the
+//! dataset with `LANES`-blocked kernels: per block of 8 rows the
+//! activations `z = x_i . theta` are accumulated feature-by-feature into
+//! 8 independent lane chains (vectorizable mul-adds, contiguous column
+//! loads on the full-scan path), then `l_i` and the population sums
+//! `(sum l, sum l^2)` accumulate in 8 lane partials folded through
+//! `reduce_lanes`. The gathered (minibatch), range (full-scan), cached
+//! and uncached kernels all share this one skeleton, which is what makes
+//! their results bit-identical — see DESIGN.md §Data layout. Note the
+//! lane-blocked population sums associate differently from a plain
+//! scalar loop, so same-seed decision sequences differ from the
+//! pre-SoA scalar kernels (documented there; the scalar reference is
+//! retained as `lldiff_moments_ref` for benches and tolerance tests).
 
+use crate::data::columnar::{reduce_lanes, Columnar, LANES};
 use crate::data::Dataset;
-use crate::models::traits::{CachedLlDiff, LlDiffModel};
+use crate::models::traits::{
+    cached_scan_par, CacheLanes, CachedLlDiff, LlDiffModel, ScanScratch,
+};
 
 /// Stable log sigmoid: log sig(z) = -softplus(-z).
 #[inline]
@@ -15,17 +32,26 @@ pub fn log_sigmoid(z: f64) -> f64 {
 /// Logistic-regression posterior target over a dataset.
 pub struct LogisticModel {
     data: Dataset,
+    /// Feature-major, lane-padded mirror of `data` — the moments hot
+    /// path (gradients/predictions stay row-major).
+    cols: Columnar,
     /// Gaussian prior precision (paper uses 10).
     pub prior_precision: f64,
 }
 
 impl LogisticModel {
     pub fn new(data: Dataset, prior_precision: f64) -> Self {
-        LogisticModel { data, prior_precision }
+        let cols = Columnar::from_dataset(&data);
+        LogisticModel { data, cols, prior_precision }
     }
 
     pub fn data(&self) -> &Dataset {
         &self.data
+    }
+
+    /// The columnar view the moments kernels run on.
+    pub fn columns(&self) -> &Columnar {
+        &self.cols
     }
 
     pub fn d(&self) -> usize {
@@ -115,6 +141,151 @@ impl LogisticModel {
         let z: f64 = x.iter().zip(theta).map(|(a, b)| a * b).sum();
         sigmoid(z)
     }
+
+    /// Retained row-major scalar reference kernel (the pre-SoA fused
+    /// dual-dot pass): the correctness baseline the SoA kernels are
+    /// checked against (≤ 1e-12 relative) and the denominator of the
+    /// `speedup_soa_vs_fused_x` bench ratio. Not on any production path.
+    pub fn lldiff_moments_ref(&self, idx: &[u32], cur: &[f64], prop: &[f64]) -> (f64, f64) {
+        let d = self.d();
+        let cur = &cur[..d];
+        let prop = &prop[..d];
+        let (mut s, mut s2) = (0.0, 0.0);
+        for &i in idx {
+            let (z0, z1) = dot2_chunked(self.data.row(i as usize), cur, prop);
+            let y = self.data.label(i as usize);
+            let l = log_sigmoid(y * z1) - log_sigmoid(y * z0);
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
+
+    /// One lane block of the uncached kernel: l for 8 rows with known
+    /// activations, folded into the lane partials.
+    #[inline]
+    fn accum_block(
+        &self,
+        rows: impl Fn(usize) -> usize,
+        z0: &[f64; LANES],
+        z1: &[f64; LANES],
+        sa: &mut [f64; LANES],
+        s2a: &mut [f64; LANES],
+    ) {
+        for k in 0..LANES {
+            let y = self.cols.label(rows(k));
+            let l = log_sigmoid(y * z1[k]) - log_sigmoid(y * z0[k]);
+            sa[k] += l;
+            s2a[k] += l * l;
+        }
+    }
+
+    /// Scalar tail of every kernel: rows past the last full lane block,
+    /// accumulated after the lane reduction (same order in all paths).
+    #[inline]
+    fn tail_uncached(&self, i: usize, cur: &[f64], prop: &[f64], s: &mut f64, s2: &mut f64) {
+        let (z0, z1) = self.cols.row_dot2(i, cur, prop);
+        let y = self.cols.label(i);
+        let l = log_sigmoid(y * z1) - log_sigmoid(y * z0);
+        *s += l;
+        *s2 += l * l;
+    }
+
+    /// One row of the cached kernels — THE single definition of the
+    /// lazy-revalidation step (read-or-recompute `z_cur`, record the
+    /// proposal activation + stamp, return `l`). Every cached call site
+    /// (gathered lane blocks and tails, chunked scan lane blocks and
+    /// tails) goes through here, so the revalidation rule cannot
+    /// diverge between them.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn cached_row(
+        &self,
+        i: usize,
+        z1: f64,
+        z_cur: &mut f64,
+        ver_cur: &mut u64,
+        z_prop: &mut f64,
+        stamp: &mut u64,
+        theta_cur: &[f64],
+        version: u64,
+        step: u64,
+    ) -> f64 {
+        let z0 = if *ver_cur == version {
+            *z_cur
+        } else {
+            let z = self.cols.row_dot(i, theta_cur);
+            *z_cur = z;
+            *ver_cur = version;
+            z
+        };
+        *z_prop = z1;
+        *stamp = step;
+        let y = self.cols.label(i);
+        log_sigmoid(y * z1) - log_sigmoid(y * z0)
+    }
+
+    /// One chunk of the cached scan/minibatch kernels: proposal-side
+    /// activations computed lane-blocked, current side served from the
+    /// cache lanes (recomputed and cached when stale). `lanes` index 0
+    /// is population index `start`.
+    #[allow(clippy::too_many_arguments)]
+    fn cached_chunk(
+        &self,
+        start: usize,
+        end: usize,
+        lanes: &mut CacheLanes<'_>,
+        theta_cur: &[f64],
+        prop: &[f64],
+        version: u64,
+        step: u64,
+    ) -> (f64, f64) {
+        let mut sa = [0.0f64; LANES];
+        let mut s2a = [0.0f64; LANES];
+        let mut z1 = [0.0f64; LANES];
+        let mut base = start;
+        while base + LANES <= end {
+            self.cols.block_dot_seq(base, prop, &mut z1);
+            for k in 0..LANES {
+                let i = base + k;
+                let o = i - start;
+                let l = self.cached_row(
+                    i,
+                    z1[k],
+                    &mut lanes.val_cur[o],
+                    &mut lanes.ver_cur[o],
+                    &mut lanes.val_prop[o],
+                    &mut lanes.stamp[o],
+                    theta_cur,
+                    version,
+                    step,
+                );
+                sa[k] += l;
+                s2a[k] += l * l;
+            }
+            base += LANES;
+        }
+        let mut s = reduce_lanes(&sa);
+        let mut s2 = reduce_lanes(&s2a);
+        for i in base..end {
+            let o = i - start;
+            let zp = self.cols.row_dot(i, prop);
+            let l = self.cached_row(
+                i,
+                zp,
+                &mut lanes.val_cur[o],
+                &mut lanes.ver_cur[o],
+                &mut lanes.val_prop[o],
+                &mut lanes.stamp[o],
+                theta_cur,
+                version,
+                step,
+            );
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
 }
 
 #[inline]
@@ -127,32 +298,10 @@ pub fn sigmoid(z: f64) -> f64 {
     }
 }
 
-/// Blocked single dot product: exact-sized slices + 4-wide partial sums
-/// so LLVM drops the bounds checks and vectorizes. The lane structure and
-/// final reduction order are *identical* to the per-side accumulation of
-/// `dot2_chunked`, which is what makes the activation cache bit-identical
-/// to the fused uncached pass.
+/// Blocked dual dot product (row-major reference path only; the
+/// production kernels live on `Columnar`).
 #[inline]
-pub(crate) fn dot_chunked(row: &[f64], v: &[f64]) -> f64 {
-    let mut acc = [0.0f64; 4];
-    let mut cr = row.chunks_exact(4);
-    let mut cv = v.chunks_exact(4);
-    for (r, c) in (&mut cr).zip(&mut cv) {
-        for k in 0..4 {
-            acc[k] += r[k] * c[k];
-        }
-    }
-    let mut z = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for (r, c) in cr.remainder().iter().zip(cv.remainder()) {
-        z += r * c;
-    }
-    z
-}
-
-/// Blocked dual dot product: one traversal of `row` against two
-/// parameter vectors (current + proposal), the uncached hot-path kernel.
-#[inline]
-pub(crate) fn dot2_chunked(row: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
+fn dot2_chunked(row: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
     let mut a0 = [0.0f64; 4];
     let mut a1 = [0.0f64; 4];
     let mut cr = row.chunks_exact(4);
@@ -180,7 +329,7 @@ pub(crate) fn dot2_chunked(row: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
 
 /// Per-chain activation cache: `z_cur[i] = x_i . theta_cur` persists
 /// across MH steps with *lazy* revalidation, so each sequential-test
-/// stage computes one dot product per fresh index (vs two uncached) and
+/// stage computes one activation per fresh index (vs two uncached) and
 /// an accepted step costs only an O(N) stamp sweep — never a bulk
 /// recomputation of untouched activations.
 pub struct LogisticCache {
@@ -216,19 +365,56 @@ impl LlDiffModel for LogisticModel {
         log_sigmoid(y * z1) - log_sigmoid(y * z0)
     }
 
-    fn lldiff_moments(&self, idx: &[usize], cur: &Vec<f64>, prop: &Vec<f64>) -> (f64, f64) {
-        // Fused pass: both dot products in one traversal per row, no
-        // allocation (see EXPERIMENTS §Perf for the measured effect).
+    fn lldiff_moments(&self, idx: &[u32], cur: &Vec<f64>, prop: &Vec<f64>) -> (f64, f64) {
+        // SoA gathered kernel: lane blocks of 8 rows, both activations
+        // in one column pass, lane-partial population sums.
         let d = self.d();
         let cur = &cur[..d];
         let prop = &prop[..d];
-        let (mut s, mut s2) = (0.0, 0.0);
-        for &i in idx {
-            let (z0, z1) = dot2_chunked(self.data.row(i), cur, prop);
-            let y = self.data.label(i);
-            let l = log_sigmoid(y * z1) - log_sigmoid(y * z0);
-            s += l;
-            s2 += l * l;
+        let mut sa = [0.0f64; LANES];
+        let mut s2a = [0.0f64; LANES];
+        let mut z0 = [0.0f64; LANES];
+        let mut z1 = [0.0f64; LANES];
+        let mut blocks = idx.chunks_exact(LANES);
+        for block in &mut blocks {
+            self.cols.block_dot2_gather(block, cur, prop, &mut z0, &mut z1);
+            self.accum_block(|k| block[k] as usize, &z0, &z1, &mut sa, &mut s2a);
+        }
+        let mut s = reduce_lanes(&sa);
+        let mut s2 = reduce_lanes(&s2a);
+        for &i in blocks.remainder() {
+            self.tail_uncached(i as usize, cur, prop, &mut s, &mut s2);
+        }
+        (s, s2)
+    }
+
+    fn lldiff_range_moments(
+        &self,
+        start: usize,
+        end: usize,
+        cur: &Vec<f64>,
+        prop: &Vec<f64>,
+    ) -> (f64, f64) {
+        // SoA range kernel: same skeleton as the gathered kernel with
+        // contiguous column loads — bit-identical to
+        // `lldiff_moments(&[start..end])` by construction.
+        let d = self.d();
+        let cur = &cur[..d];
+        let prop = &prop[..d];
+        let mut sa = [0.0f64; LANES];
+        let mut s2a = [0.0f64; LANES];
+        let mut z0 = [0.0f64; LANES];
+        let mut z1 = [0.0f64; LANES];
+        let mut base = start;
+        while base + LANES <= end {
+            self.cols.block_dot2_seq(base, cur, prop, &mut z0, &mut z1);
+            self.accum_block(|k| base + k, &z0, &z1, &mut sa, &mut s2a);
+            base += LANES;
+        }
+        let mut s = reduce_lanes(&sa);
+        let mut s2 = reduce_lanes(&s2a);
+        for i in base..end {
+            self.tail_uncached(i, cur, prop, &mut s, &mut s2);
         }
         (s, s2)
     }
@@ -260,36 +446,79 @@ impl CachedLlDiff for LogisticModel {
     fn cached_moments(
         &self,
         cache: &mut LogisticCache,
-        idx: &[usize],
+        idx: &[u32],
         prop: &Vec<f64>,
     ) -> (f64, f64) {
-        // Fresh current-side activations come from the cache (one dot
-        // product per row instead of two); stale ones are recomputed on
-        // read and cached — amortized never worse than the fused pass.
+        // Fresh current-side activations come from the cache (one
+        // activation per row instead of two); stale ones are recomputed
+        // on read and cached — amortized never worse than the fused
+        // pass. Same lane skeleton as `lldiff_moments`, so the bits
+        // match it exactly.
         let d = self.d();
         let prop = &prop[..d];
-        let step = cache.step;
-        let version = cache.version;
-        let (mut s, mut s2) = (0.0, 0.0);
-        for &i in idx {
-            let row = self.data.row(i);
-            let z0 = if cache.cur_ver[i] == version {
-                cache.z_cur[i]
-            } else {
-                let z = dot_chunked(row, &cache.theta_cur);
-                cache.z_cur[i] = z;
-                cache.cur_ver[i] = version;
-                z
-            };
-            let z1 = dot_chunked(row, prop);
-            cache.z_prop[i] = z1;
-            cache.stamp[i] = step;
-            let y = self.data.label(i);
-            let l = log_sigmoid(y * z1) - log_sigmoid(y * z0);
+        let LogisticCache { theta_cur, z_cur, cur_ver, version, z_prop, stamp, step } = cache;
+        let theta_cur: &[f64] = theta_cur;
+        let (version, step) = (*version, *step);
+        let mut sa = [0.0f64; LANES];
+        let mut s2a = [0.0f64; LANES];
+        let mut z1 = [0.0f64; LANES];
+        let mut blocks = idx.chunks_exact(LANES);
+        for block in &mut blocks {
+            self.cols.block_dot_gather(block, prop, &mut z1);
+            for k in 0..LANES {
+                let i = block[k] as usize;
+                let l = self.cached_row(
+                    i,
+                    z1[k],
+                    &mut z_cur[i],
+                    &mut cur_ver[i],
+                    &mut z_prop[i],
+                    &mut stamp[i],
+                    theta_cur,
+                    version,
+                    step,
+                );
+                sa[k] += l;
+                s2a[k] += l * l;
+            }
+        }
+        let mut s = reduce_lanes(&sa);
+        let mut s2 = reduce_lanes(&s2a);
+        for &iu in blocks.remainder() {
+            let i = iu as usize;
+            let zp = self.cols.row_dot(i, prop);
+            let l = self.cached_row(
+                i,
+                zp,
+                &mut z_cur[i],
+                &mut cur_ver[i],
+                &mut z_prop[i],
+                &mut stamp[i],
+                theta_cur,
+                version,
+                step,
+            );
             s += l;
             s2 += l * l;
         }
         (s, s2)
+    }
+
+    fn cached_full_scan(
+        &self,
+        cache: &mut LogisticCache,
+        prop: &Vec<f64>,
+        scan: &mut ScanScratch,
+    ) -> (f64, f64) {
+        let d = self.d();
+        let prop = &prop[..d];
+        let LogisticCache { theta_cur, z_cur, cur_ver, version, z_prop, stamp, step } = cache;
+        let theta_cur: &[f64] = theta_cur;
+        let (version, step) = (*version, *step);
+        let lanes = CacheLanes { val_cur: z_cur, ver_cur: cur_ver, val_prop: z_prop, stamp };
+        cached_scan_par(self.n(), scan, lanes, |start, end, mut sub| {
+            self.cached_chunk(start, end, &mut sub, theta_cur, prop, version, step)
+        })
     }
 
     fn end_step(&self, cache: &mut LogisticCache, prop: &Vec<f64>, accepted: bool) {
@@ -298,8 +527,9 @@ impl CachedLlDiff for LogisticModel {
         }
         // Accept: proposal activations computed this step become current;
         // everything else is invalidated by the version bump and will be
-        // recomputed lazily if and when it is read. No dot products here
-        // — an accepted austere step stays O(touched) + O(N) stamp sweep.
+        // recomputed lazily if and when it is read. No activation work
+        // here — an accepted austere step stays O(touched) + O(N) stamp
+        // sweep.
         let d = self.d();
         cache.theta_cur.copy_from_slice(&prop[..d]);
         cache.version += 1;
@@ -354,17 +584,17 @@ mod tests {
     }
 
     #[test]
-    fn fused_moments_match_default_loop() {
+    fn soa_moments_match_default_loop() {
         let m = model();
         testkit::forall(32, |rng| {
             let cur: Vec<f64> = (0..8).map(|_| 0.2 * rng.normal()).collect();
             let prop: Vec<f64> = (0..8).map(|_| 0.2 * rng.normal()).collect();
             let k = rng.below(100) + 1;
-            let idx: Vec<usize> = (0..k).map(|_| rng.below(500)).collect();
+            let idx: Vec<u32> = (0..k).map(|_| rng.below(500) as u32).collect();
             let (s, s2) = m.lldiff_moments(&idx, &cur, &prop);
             let (mut ws, mut ws2) = (0.0, 0.0);
             for &i in &idx {
-                let l = m.lldiff(i, &cur, &prop);
+                let l = m.lldiff(i as usize, &cur, &prop);
                 ws += l;
                 ws2 += l * l;
             }
@@ -374,13 +604,46 @@ mod tests {
     }
 
     #[test]
-    fn cached_moments_bit_identical_to_fused() {
+    fn soa_moments_match_rowmajor_reference() {
+        // the retained scalar reference agrees to tight relative error
+        // (not bitwise: the lane-blocked sums associate differently)
+        let m = model();
+        testkit::forall(32, |rng| {
+            let cur: Vec<f64> = (0..8).map(|_| 0.3 * rng.normal()).collect();
+            let prop: Vec<f64> = (0..8).map(|_| 0.3 * rng.normal()).collect();
+            let k = rng.below(200) + 1;
+            let idx: Vec<u32> = (0..k).map(|_| rng.below(500) as u32).collect();
+            let (s, s2) = m.lldiff_moments(&idx, &cur, &prop);
+            let (rs, rs2) = m.lldiff_moments_ref(&idx, &cur, &prop);
+            assert!((s - rs).abs() <= 1e-12 * rs.abs().max(1.0), "{s} vs {rs}");
+            assert!((s2 - rs2).abs() <= 1e-12 * rs2.abs().max(1.0), "{s2} vs {rs2}");
+        });
+    }
+
+    #[test]
+    fn range_kernel_bit_identical_to_gathered() {
+        let m = model();
+        testkit::forall(16, |rng| {
+            let cur: Vec<f64> = (0..8).map(|_| 0.2 * rng.normal()).collect();
+            let prop: Vec<f64> = (0..8).map(|_| 0.2 * rng.normal()).collect();
+            let a = rng.below(400);
+            let b = a + rng.below(100) + 1;
+            let idx: Vec<u32> = (a as u32..b as u32).collect();
+            let g = m.lldiff_moments(&idx, &cur, &prop);
+            let r = m.lldiff_range_moments(a, b, &cur, &prop);
+            assert_eq!(g.0.to_bits(), r.0.to_bits());
+            assert_eq!(g.1.to_bits(), r.1.to_bits());
+        });
+    }
+
+    #[test]
+    fn cached_moments_bit_identical_to_uncached() {
         let m = model();
         testkit::forall(32, |rng| {
             let cur: Vec<f64> = (0..8).map(|_| 0.2 * rng.normal()).collect();
             let prop: Vec<f64> = (0..8).map(|_| 0.2 * rng.normal()).collect();
             let k = rng.below(100) + 1;
-            let idx: Vec<usize> = (0..k).map(|_| rng.below(500)).collect();
+            let idx: Vec<u32> = (0..k).map(|_| rng.below(500) as u32).collect();
             let mut cache = m.init_cache(&cur);
             m.begin_step(&mut cache);
             let cached = m.cached_moments(&mut cache, &idx, &prop);
@@ -392,18 +655,40 @@ mod tests {
     }
 
     #[test]
+    fn cached_full_scan_bit_identical_to_full_moments() {
+        let m = model();
+        let mut rng = Pcg64::seeded(7);
+        let cur: Vec<f64> = (0..8).map(|_| 0.2 * rng.normal()).collect();
+        let prop: Vec<f64> = (0..8).map(|_| 0.2 * rng.normal()).collect();
+        let want = m.full_moments(&cur, &prop);
+        for threads in [1usize, 2, 4] {
+            let mut cache = m.init_cache(&cur);
+            m.begin_step(&mut cache);
+            let mut scan = ScanScratch::new(threads, m.n());
+            let got = m.cached_full_scan(&mut cache, &prop, &mut scan);
+            assert_eq!(got.0.to_bits(), want.0.to_bits(), "threads {threads}");
+            assert_eq!(got.1.to_bits(), want.1.to_bits(), "threads {threads}");
+            // a second scan served from the now-warm cache still agrees
+            m.end_step(&mut cache, &prop, false);
+            m.begin_step(&mut cache);
+            let again = m.cached_full_scan(&mut cache, &prop, &mut scan);
+            assert_eq!(again.0.to_bits(), want.0.to_bits());
+        }
+    }
+
+    #[test]
     fn cache_tracks_accept_reject_sequence() {
         let m = model();
         let mut rng = Pcg64::seeded(5);
         let mut cur: Vec<f64> = (0..8).map(|_| 0.1 * rng.normal()).collect();
         let mut cache = m.init_cache(&cur);
-        let all: Vec<usize> = (0..m.n()).collect();
+        let all: Vec<u32> = (0..m.n() as u32).collect();
         for step in 0..20 {
             let prop: Vec<f64> = cur.iter().map(|t| t + 0.05 * rng.normal()).collect();
             m.begin_step(&mut cache);
             // touch a random subset, as the sequential test would
             let k = rng.below(200) + 1;
-            let idx: Vec<usize> = (0..k).map(|_| rng.below(500)).collect();
+            let idx: Vec<u32> = (0..k).map(|_| rng.below(500) as u32).collect();
             let cached = m.cached_moments(&mut cache, &idx, &prop);
             let plain = m.lldiff_moments(&idx, &cur, &prop);
             assert_eq!(cached.0.to_bits(), plain.0.to_bits(), "step {step}");

@@ -15,4 +15,4 @@ pub use logistic::{LogisticCache, LogisticModel};
 pub use mrf::MrfModel;
 pub use potts::PottsModel;
 pub use rjlogistic::{RjLogisticModel, RjState};
-pub use traits::{CachedLlDiff, LlDiffModel, Proposal, ProposalKernel};
+pub use traits::{CachedLlDiff, LlDiffModel, Proposal, ProposalKernel, ScanScratch};

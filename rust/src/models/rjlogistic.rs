@@ -112,11 +112,11 @@ impl LlDiffModel for RjLogisticModel {
         log_sigmoid(y * prop.logit(row)) - log_sigmoid(y * cur.logit(row))
     }
 
-    fn lldiff_moments(&self, idx: &[usize], cur: &RjState, prop: &RjState) -> (f64, f64) {
+    fn lldiff_moments(&self, idx: &[u32], cur: &RjState, prop: &RjState) -> (f64, f64) {
         let (mut s, mut s2) = (0.0, 0.0);
         for &i in idx {
-            let row = self.data.row(i);
-            let y = self.data.label(i);
+            let row = self.data.row(i as usize);
+            let y = self.data.label(i as usize);
             let l = log_sigmoid(y * prop.logit(row)) - log_sigmoid(y * cur.logit(row));
             s += l;
             s2 += l * l;
@@ -156,7 +156,7 @@ mod tests {
     fn lldiff_zero_for_same_state() {
         let (m, _) = model();
         let s = RjState::with_active(11, &[0, 2], &[0.5, -0.3]);
-        let idx: Vec<usize> = (0..100).collect();
+        let idx: Vec<u32> = (0..100).collect();
         let (sum, sum2) = m.lldiff_moments(&idx, &s, &s);
         assert_eq!(sum, 0.0);
         assert_eq!(sum2, 0.0);
@@ -170,7 +170,7 @@ mod tests {
         let values: Vec<f64> = active.iter().map(|&j| beta_true[j]).collect();
         let truth = RjState::with_active(11, &active, &values);
         let null = RjState::with_active(11, &[0], &[0.0]);
-        let idx: Vec<usize> = (0..m.n()).collect();
+        let idx: Vec<u32> = (0..m.n() as u32).collect();
         let (s, _) = m.lldiff_moments(&idx, &null, &truth);
         assert!(s > 0.0, "truth should beat empty model: {s}");
     }

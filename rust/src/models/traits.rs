@@ -6,33 +6,234 @@
 //! moments `(sum l, sum l^2)`. `LlDiffModel` is exactly that interface;
 //! backends (pure Rust here, PJRT-executed Pallas in `runtime`) provide
 //! the `lldiff_moments` implementation.
+//!
+//! Index protocol: mini-batch indices are `&[u32]` — the exact slice the
+//! without-replacement scheduler hands out — so the kernels gather
+//! directly from the drawn batch and no per-stage `u32 -> usize`
+//! widening copy exists anywhere on the hot path. Full-population scans
+//! are *range-based* (`lldiff_range_moments`) and never materialize an
+//! index vector at all.
 
 /// Chunk length for full-population scans. Matches the batch capacity of
 /// the AOT Pallas kernels so the chunked scan maps 1:1 onto kernel
-/// dispatches on the PJRT backend, and keeps the index buffer small
-/// enough to stay resident in L1.
+/// dispatches on the PJRT backend, keeps per-chunk state L1-resident,
+/// and is the work quantum of the deterministic parallel scan (worker
+/// spans are chunk-aligned; per-chunk moments are reduced in chunk-index
+/// order, so the thread count never changes a result bit).
 pub const FULL_SCAN_CHUNK: usize = 512;
 
-/// Chunked full-population scan shared by the cached and uncached exact
-/// paths: streams `0..n` through `buf` in `FULL_SCAN_CHUNK` pieces and
-/// sums the per-chunk moments. Both paths MUST go through this one
-/// driver — identical chunking and accumulation order is what makes
-/// their results bit-identical by construction.
-pub fn full_scan_moments<F: FnMut(&[usize]) -> (f64, f64)>(
+/// Chunked full-population scan over a *gathered* moments closure:
+/// streams `0..n` through `buf` in `FULL_SCAN_CHUNK` pieces and sums the
+/// per-chunk moments in chunk order. This is the generic fallback for
+/// moments sources that only expose batch evaluation (fixed-population
+/// tests, ad-hoc closures); model-backed paths use the range-based
+/// `full_scan_moments_par`, which is bit-identical by the
+/// `lldiff_range_moments` contract.
+pub fn full_scan_moments<F: FnMut(&[u32]) -> (f64, f64)>(
     n: usize,
-    buf: &mut Vec<usize>,
+    buf: &mut Vec<u32>,
     mut moments: F,
 ) -> (f64, f64) {
+    assert!(n <= u32::MAX as usize);
     let (mut s, mut s2) = (0.0, 0.0);
     let mut start = 0usize;
     while start < n {
         let take = FULL_SCAN_CHUNK.min(n - start);
         buf.clear();
-        buf.extend(start..start + take);
+        buf.extend(start as u32..(start + take) as u32);
         let (bs, bs2) = moments(buf);
         s += bs;
         s2 += bs2;
         start += take;
+    }
+    (s, s2)
+}
+
+/// Reusable workspace of the deterministic (possibly parallel) full
+/// scan: the configured intra-step worker count and the per-chunk
+/// partial-moments buffer. Owned per chain (inside `MhScratch`), so the
+/// steady state allocates nothing.
+pub struct ScanScratch {
+    threads: usize,
+    /// Per-chunk `(sum l, sum l^2)`, written by whichever worker owns
+    /// the chunk and reduced serially in chunk-index order.
+    partials: Vec<(f64, f64)>,
+}
+
+impl ScanScratch {
+    /// Workspace for scans over an `n`-point population using up to
+    /// `threads` intra-step workers (0 or 1 = serial). Parallel scratch
+    /// pre-reserves the per-chunk buffer so later scans never
+    /// reallocate; the serial fast path never touches it, so serial
+    /// scratch stays empty.
+    pub fn new(threads: usize, n: usize) -> Self {
+        let threads = threads.max(1);
+        let cap = if threads > 1 { n.div_ceil(FULL_SCAN_CHUNK) } else { 0 };
+        ScanScratch { threads, partials: Vec::with_capacity(cap) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+/// Deterministic full-population scan over a range-based chunk
+/// evaluator: the population splits on `FULL_SCAN_CHUNK` boundaries,
+/// each chunk is evaluated exactly once (concurrently when
+/// `scratch.threads() > 1`, with contiguous chunk spans per worker), and
+/// the per-chunk moments are reduced serially in chunk-index order.
+/// Because a chunk's value depends only on the chunk and the reduction
+/// order is fixed, the result is bit-identical on 1 or 16 threads — and
+/// bit-identical to the serial `eval`-in-a-loop scan.
+pub fn full_scan_moments_par<E>(n: usize, scratch: &mut ScanScratch, eval: E) -> (f64, f64)
+where
+    E: Fn(usize, usize) -> (f64, f64) + Sync,
+{
+    let n_chunks = n.div_ceil(FULL_SCAN_CHUNK);
+    let workers = scratch.threads.min(n_chunks);
+    if workers <= 1 {
+        let (mut s, mut s2) = (0.0, 0.0);
+        for c in 0..n_chunks {
+            let start = c * FULL_SCAN_CHUNK;
+            let (bs, bs2) = eval(start, (start + FULL_SCAN_CHUNK).min(n));
+            s += bs;
+            s2 += bs2;
+        }
+        return (s, s2);
+    }
+    scratch.partials.clear();
+    scratch.partials.resize(n_chunks, (0.0, 0.0));
+    {
+        // contiguous chunk spans per worker: determinism comes from the
+        // per-chunk evaluation + ordered reduction, not the assignment,
+        // but contiguous spans keep each worker's column reads streaming
+        let mut rest: &mut [(f64, f64)] = &mut scratch.partials;
+        let mut next_chunk = 0usize;
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let span = n_chunks / workers + usize::from(w < n_chunks % workers);
+                let (mine, tail) = std::mem::take(&mut rest).split_at_mut(span);
+                rest = tail;
+                let first = next_chunk;
+                next_chunk += span;
+                let eval = &eval;
+                scope.spawn(move || {
+                    for (off, slot) in mine.iter_mut().enumerate() {
+                        let start = (first + off) * FULL_SCAN_CHUNK;
+                        *slot = eval(start, (start + FULL_SCAN_CHUNK).min(n));
+                    }
+                });
+            }
+        });
+    }
+    let (mut s, mut s2) = (0.0, 0.0);
+    for &(bs, bs2) in &scratch.partials {
+        s += bs;
+        s2 += bs2;
+    }
+    (s, s2)
+}
+
+/// The per-index arrays of a likelihood cache, borrowed mutably for a
+/// full scan so chunk-aligned disjoint regions can be handed to
+/// concurrent workers (current-side value, current-side version,
+/// proposal-side value, step stamp — the shape `LogisticCache` and
+/// `LinRegCache` share).
+pub struct CacheLanes<'a> {
+    pub val_cur: &'a mut [f64],
+    pub ver_cur: &'a mut [u64],
+    pub val_prop: &'a mut [f64],
+    pub stamp: &'a mut [u64],
+}
+
+impl<'a> CacheLanes<'a> {
+    /// Reborrow the sub-range `[start, end)` (indices relative to these
+    /// lanes).
+    fn slice_mut(&mut self, start: usize, end: usize) -> CacheLanes<'_> {
+        CacheLanes {
+            val_cur: &mut self.val_cur[start..end],
+            ver_cur: &mut self.ver_cur[start..end],
+            val_prop: &mut self.val_prop[start..end],
+            stamp: &mut self.stamp[start..end],
+        }
+    }
+
+    /// Split into `[0, mid)` and `[mid, len)`.
+    fn split_at_mut(self, mid: usize) -> (CacheLanes<'a>, CacheLanes<'a>) {
+        let (vc0, vc1) = self.val_cur.split_at_mut(mid);
+        let (cv0, cv1) = self.ver_cur.split_at_mut(mid);
+        let (vp0, vp1) = self.val_prop.split_at_mut(mid);
+        let (st0, st1) = self.stamp.split_at_mut(mid);
+        (
+            CacheLanes { val_cur: vc0, ver_cur: cv0, val_prop: vp0, stamp: st0 },
+            CacheLanes { val_cur: vc1, ver_cur: cv1, val_prop: vp1, stamp: st1 },
+        )
+    }
+}
+
+/// `full_scan_moments_par` for cached models: identical chunking,
+/// worker-span and chunk-ordered reduction scheme, but each chunk
+/// evaluation also receives the mutable cache lanes of exactly that
+/// chunk (`eval(start, end, lanes)` with `lanes` rebased so local index
+/// 0 is population index `start`). Chunk regions are disjoint, so the
+/// scan is race-free by construction and bit-identical for any worker
+/// count.
+pub fn cached_scan_par<E>(
+    n: usize,
+    scratch: &mut ScanScratch,
+    mut lanes: CacheLanes<'_>,
+    eval: E,
+) -> (f64, f64)
+where
+    E: Fn(usize, usize, CacheLanes<'_>) -> (f64, f64) + Sync,
+{
+    debug_assert_eq!(lanes.val_cur.len(), n);
+    let n_chunks = n.div_ceil(FULL_SCAN_CHUNK);
+    let workers = scratch.threads.min(n_chunks);
+    if workers <= 1 {
+        let (mut s, mut s2) = (0.0, 0.0);
+        for c in 0..n_chunks {
+            let start = c * FULL_SCAN_CHUNK;
+            let end = (start + FULL_SCAN_CHUNK).min(n);
+            let (bs, bs2) = eval(start, end, lanes.slice_mut(start, end));
+            s += bs;
+            s2 += bs2;
+        }
+        return (s, s2);
+    }
+    scratch.partials.clear();
+    scratch.partials.resize(n_chunks, (0.0, 0.0));
+    {
+        let mut rest: &mut [(f64, f64)] = &mut scratch.partials;
+        let mut rest_lanes = lanes;
+        let mut next_chunk = 0usize;
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let span = n_chunks / workers + usize::from(w < n_chunks % workers);
+                let first = next_chunk;
+                next_chunk += span;
+                let span_start = first * FULL_SCAN_CHUNK;
+                let span_end = (span_start + span * FULL_SCAN_CHUNK).min(n);
+                let (mine, tail) = std::mem::take(&mut rest).split_at_mut(span);
+                rest = tail;
+                let (mut my_lanes, lane_tail) = rest_lanes.split_at_mut(span_end - span_start);
+                rest_lanes = lane_tail;
+                let eval = &eval;
+                scope.spawn(move || {
+                    for (off, slot) in mine.iter_mut().enumerate() {
+                        let start = (first + off) * FULL_SCAN_CHUNK;
+                        let end = (start + FULL_SCAN_CHUNK).min(n);
+                        let sub = my_lanes.slice_mut(start - span_start, end - span_start);
+                        *slot = eval(start, end, sub);
+                    }
+                });
+            }
+        });
+    }
+    let (mut s, mut s2) = (0.0, 0.0);
+    for &(bs, bs2) in &scratch.partials {
+        s += bs;
+        s2 += bs2;
     }
     (s, s2)
 }
@@ -49,14 +250,39 @@ pub trait LlDiffModel {
     /// `l_i = log p(x_i; prop) - log p(x_i; cur)`.
     fn lldiff(&self, i: usize, cur: &Self::Param, prop: &Self::Param) -> f64;
 
-    /// Mini-batch moments `(sum_i l_i, sum_i l_i^2)` over `idx`.
+    /// Mini-batch moments `(sum_i l_i, sum_i l_i^2)` over the drawn
+    /// indices (the scheduler's slice, fed to the kernel directly).
     ///
     /// The default loops `lldiff`; models override with fused batch code
-    /// (one dot-product pass, the Pallas kernel, ...) — this is the hot
-    /// path of the whole system.
-    fn lldiff_moments(&self, idx: &[usize], cur: &Self::Param, prop: &Self::Param) -> (f64, f64) {
+    /// (the lane-blocked SoA kernels, the Pallas kernel, ...) — this is
+    /// the hot path of the whole system.
+    fn lldiff_moments(&self, idx: &[u32], cur: &Self::Param, prop: &Self::Param) -> (f64, f64) {
         let (mut s, mut s2) = (0.0, 0.0);
         for &i in idx {
+            let l = self.lldiff(i as usize, cur, prop);
+            s += l;
+            s2 += l * l;
+        }
+        (s, s2)
+    }
+
+    /// Moments over the contiguous index range `[start, end)` — the
+    /// building block of full-population scans, which therefore never
+    /// materialize an index vector.
+    ///
+    /// **Contract:** must return exactly the bits of
+    /// `lldiff_moments(&[start..end], ..)`; overriding models keep the
+    /// same per-row arithmetic and lane-accumulation skeleton in both
+    /// kernels (regression-tested in `tests/integration_scan.rs`).
+    fn lldiff_range_moments(
+        &self,
+        start: usize,
+        end: usize,
+        cur: &Self::Param,
+        prop: &Self::Param,
+    ) -> (f64, f64) {
+        let (mut s, mut s2) = (0.0, 0.0);
+        for i in start..end {
             let l = self.lldiff(i, cur, prop);
             s += l;
             s2 += l * l;
@@ -64,32 +290,36 @@ pub trait LlDiffModel {
         (s, s2)
     }
 
-    /// Full-population moments, streamed through `buf` in
-    /// `FULL_SCAN_CHUNK`-sized chunks so the exact-MH path never
-    /// materializes a length-N index vector. Callers on the hot path
-    /// (`MhScratch`) reuse one buffer across steps, so the steady state
-    /// allocates nothing.
-    fn full_moments_buf(
-        &self,
-        cur: &Self::Param,
-        prop: &Self::Param,
-        buf: &mut Vec<usize>,
-    ) -> (f64, f64) {
-        full_scan_moments(self.n(), buf, |idx| self.lldiff_moments(idx, cur, prop))
+    /// Full-population moments: serial chunked range scan
+    /// (`FULL_SCAN_CHUNK` pieces, summed in chunk order) — allocation
+    /// free, and bit-identical to `full_scan_moments_par` at any thread
+    /// count.
+    fn full_moments(&self, cur: &Self::Param, prop: &Self::Param) -> (f64, f64) {
+        let n = self.n();
+        let (mut s, mut s2) = (0.0, 0.0);
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + FULL_SCAN_CHUNK).min(n);
+            let (bs, bs2) = self.lldiff_range_moments(start, end, cur, prop);
+            s += bs;
+            s2 += bs2;
+            start = end;
+        }
+        (s, s2)
     }
 
-    /// Population mean `mu = (1/N) sum_i l_i` (exact MH path).
+    /// Population mean `mu = (1/N) sum_i l_i` (exact MH path). Chunked
+    /// range scan: no scratch buffer, no allocation.
     fn full_mean(&self, cur: &Self::Param, prop: &Self::Param) -> f64 {
-        let mut buf = Vec::with_capacity(FULL_SCAN_CHUNK.min(self.n()));
-        let (s, _) = self.full_moments_buf(cur, prop, &mut buf);
+        let (s, _) = self.full_moments(cur, prop);
         s / self.n() as f64
     }
 
     /// Population std sigma_l of the l_i (used by the error analysis /
-    /// test design, not by the sampler itself).
+    /// test design, not by the sampler itself). Allocation-free like
+    /// `full_mean`.
     fn full_std(&self, cur: &Self::Param, prop: &Self::Param) -> f64 {
-        let mut buf = Vec::with_capacity(FULL_SCAN_CHUNK.min(self.n()));
-        let (s, s2) = self.full_moments_buf(cur, prop, &mut buf);
+        let (s, s2) = self.full_moments(cur, prop);
         let n = self.n() as f64;
         let mean = s / n;
         ((s2 / n - mean * mean).max(0.0)).sqrt()
@@ -104,15 +334,17 @@ pub trait LlDiffModel {
 /// Step protocol (enforced by `mh_step_cached` / `run_chain_cached`):
 ///
 /// 1. `init_cache(theta_init)` once per chain;
-/// 2. per MH step: `begin_step`, then any number of `cached_moments`
-///    calls over disjoint index sets (the proposal is fixed within a
-///    step), then exactly one `end_step` with the decision;
+/// 2. per MH step: `begin_step`, then any number of `cached_moments` /
+///    one `cached_full_scan` call over disjoint index sets (the proposal
+///    is fixed within a step), then exactly one `end_step` with the
+///    decision;
 /// 3. after an accepted step the cache reflects `prop` as the new
 ///    current parameter; after a reject it is unchanged (the win: a
 ///    rejected step costs nothing beyond the proposal-side evaluations).
 ///
 /// Contract: for identical inputs, `cached_moments` must return exactly
-/// the same bits as `lldiff_moments`, so a cached chain makes decisions
+/// the same bits as `lldiff_moments`, and `cached_full_scan` exactly the
+/// bits of `full_moments`, so a cached chain makes decisions
 /// bit-identical to an uncached one (regression-tested).
 pub trait CachedLlDiff: LlDiffModel {
     /// Per-chain cache state (owned by the chain, not the model, so
@@ -131,8 +363,21 @@ pub trait CachedLlDiff: LlDiffModel {
     fn cached_moments(
         &self,
         cache: &mut Self::Cache,
-        idx: &[usize],
+        idx: &[u32],
         prop: &Self::Param,
+    ) -> (f64, f64);
+
+    /// Full-population moments against the cache: the exact-rule fast
+    /// path. Must return the bits of `full_moments` and leave the cache
+    /// exactly as a chunked `cached_moments` sweep would (every index
+    /// stamped this step). Implementations run the deterministic
+    /// chunk-parallel scan (`cached_scan_par`) when `scan` carries
+    /// spare workers.
+    fn cached_full_scan(
+        &self,
+        cache: &mut Self::Cache,
+        prop: &Self::Param,
+        scan: &mut ScanScratch,
     ) -> (f64, f64);
 
     /// Close the step: on accept, swap in proposal-side statistics for
@@ -202,6 +447,17 @@ mod tests {
     }
 
     #[test]
+    fn default_range_moments_match_gathered() {
+        let mut rng = crate::stats::Pcg64::seeded(3);
+        let m = FixedPopulation { ls: (0..700).map(|_| rng.normal()).collect() };
+        let idx: Vec<u32> = (100u32..400).collect();
+        let g = m.lldiff_moments(&idx, &(), &());
+        let r = m.lldiff_range_moments(100, 400, &(), &());
+        assert_eq!(g.0.to_bits(), r.0.to_bits());
+        assert_eq!(g.1.to_bits(), r.1.to_bits());
+    }
+
+    #[test]
     fn full_mean_and_std() {
         let m = FixedPopulation { ls: vec![1.0, 3.0] };
         assert!((m.full_mean(&(), &()) - 2.0).abs() < 1e-12);
@@ -217,12 +473,70 @@ mod tests {
         let want_s: f64 = ls.iter().sum();
         let want_s2: f64 = ls.iter().map(|l| l * l).sum();
         let m = FixedPopulation { ls };
-        let mut buf = Vec::new();
-        let (s, s2) = m.full_moments_buf(&(), &(), &mut buf);
+        let (s, s2) = m.full_moments(&(), &());
         assert!((s - want_s).abs() < 1e-9, "{s} vs {want_s}");
         assert!((s2 - want_s2).abs() < 1e-9);
-        assert!(buf.len() <= FULL_SCAN_CHUNK, "buffer stays chunk-sized");
         assert!((m.full_mean(&(), &()) - want_s / m.n() as f64).abs() < 1e-12);
+
+        // the gathered-closure scan agrees bit for bit (same chunking)
+        let mut buf = Vec::new();
+        let (gs, gs2) = full_scan_moments(m.n(), &mut buf, |idx| m.lldiff_moments(idx, &(), &()));
+        assert_eq!(gs.to_bits(), s.to_bits());
+        assert_eq!(gs2.to_bits(), s2.to_bits());
+        assert!(buf.len() <= FULL_SCAN_CHUNK, "buffer stays chunk-sized");
+    }
+
+    #[test]
+    fn parallel_scan_matches_serial_for_every_worker_count() {
+        let mut rng = crate::stats::Pcg64::seeded(11);
+        let n = 5 * FULL_SCAN_CHUNK + 123;
+        let m = FixedPopulation { ls: (0..n).map(|_| rng.normal()).collect() };
+        let serial = m.full_moments(&(), &());
+        for threads in [1usize, 2, 3, 8, 32] {
+            let mut scan = ScanScratch::new(threads, n);
+            let par = full_scan_moments_par(n, &mut scan, |a, b| {
+                m.lldiff_range_moments(a, b, &(), &())
+            });
+            assert_eq!(par.0.to_bits(), serial.0.to_bits(), "threads {threads}");
+            assert_eq!(par.1.to_bits(), serial.1.to_bits(), "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn cached_scan_par_visits_every_chunk_once_with_its_own_lanes() {
+        // chunk evaluator stamps its lanes; afterwards every index must
+        // be stamped exactly once with its owning chunk id, for any
+        // worker count.
+        let n = 3 * FULL_SCAN_CHUNK + 10;
+        for threads in [1usize, 2, 5] {
+            let mut scan = ScanScratch::new(threads, n);
+            let mut val_cur = vec![0.0; n];
+            let mut ver_cur = vec![0u64; n];
+            let mut val_prop = vec![0.0; n];
+            let mut stamp = vec![0u64; n];
+            let lanes = CacheLanes {
+                val_cur: &mut val_cur,
+                ver_cur: &mut ver_cur,
+                val_prop: &mut val_prop,
+                stamp: &mut stamp,
+            };
+            let (s, s2) = cached_scan_par(n, &mut scan, lanes, |start, end, sub| {
+                assert_eq!(sub.stamp.len(), end - start);
+                let chunk = (start / FULL_SCAN_CHUNK) as u64 + 1;
+                for t in sub.stamp.iter_mut() {
+                    *t += chunk;
+                }
+                ((end - start) as f64, start as f64)
+            });
+            assert_eq!(s, n as f64, "threads {threads}");
+            let want_s2: f64 = (0..n.div_ceil(FULL_SCAN_CHUNK))
+                .map(|c| (c * FULL_SCAN_CHUNK) as f64)
+                .sum();
+            assert_eq!(s2, want_s2);
+            for (i, &t) in stamp.iter().enumerate() {
+                assert_eq!(t, (i / FULL_SCAN_CHUNK) as u64 + 1, "index {i} threads {threads}");
+            }
+        }
     }
 
     #[test]

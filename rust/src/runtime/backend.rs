@@ -89,7 +89,7 @@ impl<'a> PjrtLogistic<'a> {
     /// One kernel execution over up to `batch_cap` rows.
     fn exec_chunk(
         &self,
-        idx: &[usize],
+        idx: &[u32],
         theta: &[f32],
         theta_p: &[f32],
     ) -> (f64, f64) {
@@ -99,6 +99,7 @@ impl<'a> PjrtLogistic<'a> {
         let inner = &mut *inner;
         // gather rows from the pre-converted f32 matrix (memcpy per row)
         for (r, &i) in idx.iter().enumerate() {
+            let i = i as usize;
             inner.x[r * dc..(r + 1) * dc]
                 .copy_from_slice(&self.x_f32[i * dc..(i + 1) * dc]);
             inner.y[r] = self.y_f32[i];
@@ -129,7 +130,7 @@ impl LlDiffModel for PjrtLogistic<'_> {
         self.model.lldiff(i, cur, prop)
     }
 
-    fn lldiff_moments(&self, idx: &[usize], cur: &Vec<f64>, prop: &Vec<f64>) -> (f64, f64) {
+    fn lldiff_moments(&self, idx: &[u32], cur: &Vec<f64>, prop: &Vec<f64>) -> (f64, f64) {
         let theta = self.pad_theta(cur);
         let theta_p = self.pad_theta(prop);
         let (mut s, mut s2) = (0.0, 0.0);
@@ -139,6 +140,21 @@ impl LlDiffModel for PjrtLogistic<'_> {
             s2 += cs2;
         }
         (s, s2)
+    }
+
+    fn lldiff_range_moments(
+        &self,
+        start: usize,
+        end: usize,
+        cur: &Vec<f64>,
+        prop: &Vec<f64>,
+    ) -> (f64, f64) {
+        // full scans must keep hitting the AOT kernel (and match the
+        // gathered path bit for bit), so route the range through the
+        // same chunked dispatch; the small index staging Vec is noise
+        // next to a PJRT execution
+        let idx: Vec<u32> = (start as u32..end as u32).collect();
+        self.lldiff_moments(&idx, cur, prop)
     }
 }
 
@@ -171,13 +187,13 @@ impl<'a> PjrtIca<'a> {
         m.a.iter().map(|&v| v as f32).collect()
     }
 
-    fn exec_chunk(&self, idx: &[usize], w: &[f32], w_p: &[f32], const_shift: f32) -> (f64, f64) {
+    fn exec_chunk(&self, idx: &[u32], w: &[f32], w_p: &[f32], const_shift: f32) -> (f64, f64) {
         debug_assert!(idx.len() <= self.batch_cap);
         let (bc, d) = (self.batch_cap, self.d);
         let mut x = vec![0f32; bc * d];
         let mut mask = vec![0f32; bc];
         for (r, &i) in idx.iter().enumerate() {
-            for (j, &v) in self.model.data().row(i).iter().enumerate() {
+            for (j, &v) in self.model.data().row(i as usize).iter().enumerate() {
                 x[r * d + j] = v as f32;
             }
             mask[r] = 1.0;
@@ -202,7 +218,19 @@ impl LlDiffModel for PjrtIca<'_> {
         self.model.lldiff(i, cur, prop)
     }
 
-    fn lldiff_moments(&self, idx: &[usize], cur: &Self::Param, prop: &Self::Param) -> (f64, f64) {
+    fn lldiff_range_moments(
+        &self,
+        start: usize,
+        end: usize,
+        cur: &Self::Param,
+        prop: &Self::Param,
+    ) -> (f64, f64) {
+        // same chunked kernel dispatch as the gathered path (bit-equal)
+        let idx: Vec<u32> = (start as u32..end as u32).collect();
+        self.lldiff_moments(&idx, cur, prop)
+    }
+
+    fn lldiff_moments(&self, idx: &[u32], cur: &Self::Param, prop: &Self::Param) -> (f64, f64) {
         let w = self.mat_f32(cur);
         let w_p = self.mat_f32(prop);
         // logdet difference computed host-side (the artifact takes it as

@@ -92,8 +92,18 @@ impl LlDiffModel for PjrtLogistic<'_> {
         self.model.lldiff(i, cur, prop)
     }
 
-    fn lldiff_moments(&self, idx: &[usize], cur: &Vec<f64>, prop: &Vec<f64>) -> (f64, f64) {
+    fn lldiff_moments(&self, idx: &[u32], cur: &Vec<f64>, prop: &Vec<f64>) -> (f64, f64) {
         self.model.lldiff_moments(idx, cur, prop)
+    }
+
+    fn lldiff_range_moments(
+        &self,
+        start: usize,
+        end: usize,
+        cur: &Vec<f64>,
+        prop: &Vec<f64>,
+    ) -> (f64, f64) {
+        self.model.lldiff_range_moments(start, end, cur, prop)
     }
 }
 
@@ -119,8 +129,18 @@ impl LlDiffModel for PjrtIca<'_> {
         self.model.lldiff(i, cur, prop)
     }
 
-    fn lldiff_moments(&self, idx: &[usize], cur: &Self::Param, prop: &Self::Param) -> (f64, f64) {
+    fn lldiff_moments(&self, idx: &[u32], cur: &Self::Param, prop: &Self::Param) -> (f64, f64) {
         self.model.lldiff_moments(idx, cur, prop)
+    }
+
+    fn lldiff_range_moments(
+        &self,
+        start: usize,
+        end: usize,
+        cur: &Self::Param,
+        prop: &Self::Param,
+    ) -> (f64, f64) {
+        self.model.lldiff_range_moments(start, end, cur, prop)
     }
 }
 

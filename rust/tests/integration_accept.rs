@@ -37,7 +37,9 @@ fn model() -> LogisticModel {
 
 /// The pre-refactor `mh_step` shape, byte for byte: draw u, resolve an
 /// infinite correction without data, then either a chunked full scan or
-/// the standalone sequential test.
+/// the standalone sequential test. The exact arm streams the *gathered*
+/// chunk scan — the production path is range-based, so agreement here
+/// also regression-tests the `lldiff_range_moments` bit contract.
 enum OracleMode {
     Exact,
     Approx(SeqTestConfig),
@@ -50,7 +52,7 @@ fn oracle_step<M: LlDiffModel>(
     proposal: Proposal<M::Param>,
     mode: &OracleMode,
     sched: &mut MinibatchScheduler,
-    idx_buf: &mut Vec<usize>,
+    idx_buf: &mut Vec<u32>,
     rng: &mut Pcg64,
 ) -> (bool, usize, usize) {
     let n = model.n() as f64;
@@ -59,14 +61,16 @@ fn oracle_step<M: LlDiffModel>(
         return (false, 0, 0);
     }
     let mu0 = (u.ln() + proposal.log_correction) / n;
+    let cur_ref: &M::Param = cur;
     let (accepted, used, stages) = match mode {
         OracleMode::Exact => {
-            let (s, _) = model.full_moments_buf(cur, &proposal.param, idx_buf);
+            let (s, _) = full_scan_moments(model.n(), idx_buf, |idx| {
+                model.lldiff_moments(idx, cur_ref, &proposal.param)
+            });
             (s / n > mu0, model.n(), 1)
         }
         OracleMode::Approx(cfg) => {
-            let out =
-                seq_mh_test(model, cur, &proposal.param, mu0, cfg, sched, rng, idx_buf);
+            let out = seq_mh_test(model, cur_ref, &proposal.param, mu0, cfg, sched, rng);
             (out.accept, out.n_used, out.stages)
         }
     };
@@ -86,7 +90,7 @@ fn oracle_step_cached<M: CachedLlDiff>(
     proposal: Proposal<M::Param>,
     mode: &OracleMode,
     sched: &mut MinibatchScheduler,
-    idx_buf: &mut Vec<usize>,
+    idx_buf: &mut Vec<u32>,
     rng: &mut Pcg64,
 ) -> (bool, usize, usize) {
     let n = model.n() as f64;
@@ -104,9 +108,7 @@ fn oracle_step_cached<M: CachedLlDiff>(
             (s / n > mu0, model.n(), 1)
         }
         OracleMode::Approx(cfg) => {
-            let out = seq_mh_test_cached(
-                model, cache, &proposal.param, mu0, cfg, sched, rng, idx_buf,
-            );
+            let out = seq_mh_test_cached(model, cache, &proposal.param, mu0, cfg, sched, rng);
             (out.accept, out.n_used, out.stages)
         }
     };
@@ -130,7 +132,7 @@ fn ported_tests_match_prerefactor_oracle_uncached() {
         let mut rng_b = Pcg64::new(7, 3);
         let mut scratch = MhScratch::new(model.n());
         let mut sched = MinibatchScheduler::new(model.n());
-        let mut buf = Vec::new();
+        let mut buf: Vec<u32> = Vec::new();
         let mut cur_a = init.clone();
         let mut cur_b = init.clone();
         for step in 0..200 {
@@ -163,7 +165,7 @@ fn ported_tests_match_prerefactor_oracle_cached() {
         let mut rng_b = Pcg64::new(21, 8);
         let mut scratch = MhScratch::new(model.n());
         let mut sched = MinibatchScheduler::new(model.n());
-        let mut buf = Vec::new();
+        let mut buf: Vec<u32> = Vec::new();
         let mut cur_a = init.clone();
         let mut cur_b = init.clone();
         let mut cache_a = model.init_cache(&cur_a);

@@ -29,10 +29,9 @@ fn dp_predicts_real_test_error_and_usage() {
         let fixed = FixedLs(&pop.ls);
         let mut sched = MinibatchScheduler::new(n);
         let mut rng = Pcg64::new(50, mu_std.to_bits());
-        let mut buf = Vec::new();
         let (mut wrong, mut used) = (0usize, 0u64);
         for _ in 0..trials {
-            let o = seq_mh_test(&fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng, &mut buf);
+            let o = seq_mh_test(&fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng);
             wrong += (!o.accept) as usize; // truth: mu > mu0
             used += o.n_used as u64;
         }
@@ -72,12 +71,11 @@ fn table_interpolation_matches_measured_acceptance() {
         let fixed = FixedLs(&pop.ls);
         let mut sched = MinibatchScheduler::new(n);
         let mut rng = Pcg64::seeded(stats.mu.to_bits());
-        let mut buf = Vec::new();
         let mut acc = 0usize;
         for _ in 0..trials {
             let u = rng.uniform_pos();
             let mu0 = (u.ln() + pop.log_correction) / n as f64;
-            let o = seq_mh_test(&fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng, &mut buf);
+            let o = seq_mh_test(&fixed, &(), &(), mu0, &cfg, &mut sched, &mut rng);
             acc += o.accept as usize;
         }
         let measured = acc as f64 / trials as f64;

@@ -39,7 +39,7 @@ fn pjrt_moments_match_native() {
         let theta_p: Vec<f64> =
             theta.iter().map(|t| t + 0.01 * rng.normal()).collect();
         let k = rng.below(1500) + 1;
-        let idx: Vec<usize> = (0..k).map(|_| rng.below(12_214)).collect();
+        let idx: Vec<u32> = (0..k).map(|_| rng.below(12_214) as u32).collect();
 
         let (ns, ns2) = native.lldiff_moments(&idx, &theta, &theta_p);
         let (ps, ps2) = pjrt.lldiff_moments(&idx, &theta, &theta_p);
@@ -155,7 +155,7 @@ fn pjrt_ica_moments_match_native() {
         let w = random_orthonormal(4, &mut rng);
         let wp = w.matmul(&random_skew(4, 0.05, &mut rng).expm());
         let k = rng.below(1_200) + 1;
-        let idx: Vec<usize> = (0..k).map(|_| rng.below(5_000)).collect();
+        let idx: Vec<u32> = (0..k).map(|_| rng.below(5_000) as u32).collect();
         let (ns, ns2) = native.lldiff_moments(&idx, &w, &wp);
         let (ps, ps2) = pjrt.lldiff_moments(&idx, &w, &wp);
         let tol = 2e-4 * (k as f64).sqrt().max(1.0);

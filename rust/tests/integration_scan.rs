@@ -1,0 +1,183 @@
+//! Integration tests for the columnar (SoA) likelihood backend and the
+//! deterministic intra-step parallel full scan:
+//!
+//! * parallel full-scan moments are bit-identical across `threads =
+//!   1/2/8` and equal to the serial chunked scan, for the uncached and
+//!   cached paths of both SoA models;
+//! * the lane-blocked SoA kernels agree with the retained row-major
+//!   scalar reference (`lldiff_moments_ref`) to ≤ 1e-12 relative error
+//!   on random logistic/linreg instances;
+//! * the gathered and range kernels are bit-identical on the same index
+//!   sets (the contract `ExactTest`'s range-based scan rests on);
+//! * at the engine level, a K = 1 exact-rule launch with spare workers
+//!   (`threads > chains` ⇒ intra-step parallel scans) reproduces the
+//!   single-threaded launch bit for bit.
+
+use austerity::coordinator::engine::{run_engine, run_engine_cached, EngineConfig};
+use austerity::coordinator::Budget;
+use austerity::coordinator::MhMode;
+use austerity::data::synthetic::{linreg_toy, two_class_gaussian};
+use austerity::models::traits::{full_scan_moments_par, CachedLlDiff, LlDiffModel, ScanScratch};
+use austerity::models::{LinRegModel, LogisticModel};
+use austerity::samplers::{GaussianRandomWalk, ScalarRandomWalk};
+use austerity::stats::Pcg64;
+
+fn logistic(n: usize) -> LogisticModel {
+    LogisticModel::new(two_class_gaussian(n, 12, 1.2, 3), 10.0)
+}
+
+fn linreg(n: usize) -> LinRegModel {
+    LinRegModel::new(linreg_toy(n, 0), 3.0, 4950.0)
+}
+
+#[test]
+fn parallel_scan_bit_identical_across_thread_counts_logistic() {
+    // population deliberately not a multiple of the chunk or lane size
+    let model = logistic(5 * 512 + 391);
+    let mut rng = Pcg64::seeded(1);
+    let cur: Vec<f64> = (0..12).map(|_| 0.2 * rng.normal()).collect();
+    let prop: Vec<f64> = (0..12).map(|_| 0.2 * rng.normal()).collect();
+    let serial = model.full_moments(&cur, &prop);
+    for threads in [1usize, 2, 8] {
+        let mut scan = ScanScratch::new(threads, model.n());
+        let par = full_scan_moments_par(model.n(), &mut scan, |a, b| {
+            model.lldiff_range_moments(a, b, &cur, &prop)
+        });
+        assert_eq!(par.0.to_bits(), serial.0.to_bits(), "threads {threads}");
+        assert_eq!(par.1.to_bits(), serial.1.to_bits(), "threads {threads}");
+
+        // cached scan: same bits from a cold cache and a warm cache
+        let mut cache = model.init_cache(&cur);
+        model.begin_step(&mut cache);
+        let cold = model.cached_full_scan(&mut cache, &prop, &mut scan);
+        assert_eq!(cold.0.to_bits(), serial.0.to_bits(), "cached cold threads {threads}");
+        assert_eq!(cold.1.to_bits(), serial.1.to_bits(), "cached cold threads {threads}");
+        model.end_step(&mut cache, &prop, false);
+        model.begin_step(&mut cache);
+        let warm = model.cached_full_scan(&mut cache, &prop, &mut scan);
+        assert_eq!(warm.0.to_bits(), serial.0.to_bits(), "cached warm threads {threads}");
+    }
+}
+
+#[test]
+fn parallel_scan_bit_identical_across_thread_counts_linreg() {
+    let model = linreg(4 * 512 + 77);
+    let serial = model.full_moments(&0.44, &0.46);
+    for threads in [1usize, 2, 8] {
+        let mut scan = ScanScratch::new(threads, model.n());
+        let par = full_scan_moments_par(model.n(), &mut scan, |a, b| {
+            model.lldiff_range_moments(a, b, &0.44, &0.46)
+        });
+        assert_eq!(par.0.to_bits(), serial.0.to_bits(), "threads {threads}");
+        assert_eq!(par.1.to_bits(), serial.1.to_bits(), "threads {threads}");
+
+        let mut cache = model.init_cache(&0.44);
+        model.begin_step(&mut cache);
+        let cached = model.cached_full_scan(&mut cache, &0.46, &mut scan);
+        assert_eq!(cached.0.to_bits(), serial.0.to_bits(), "cached threads {threads}");
+        assert_eq!(cached.1.to_bits(), serial.1.to_bits(), "cached threads {threads}");
+    }
+}
+
+#[test]
+fn soa_kernels_agree_with_scalar_reference() {
+    let model = logistic(3_000);
+    let toy = linreg(10_000);
+    let mut rng = Pcg64::seeded(4);
+    for trial in 0..24 {
+        let cur: Vec<f64> = (0..12).map(|_| 0.3 * rng.normal()).collect();
+        let prop: Vec<f64> = cur.iter().map(|t| t + 0.05 * rng.normal()).collect();
+        let k = rng.below(800) + 1;
+        let idx: Vec<u32> = (0..k).map(|_| rng.below(3_000) as u32).collect();
+        let (s, s2) = model.lldiff_moments(&idx, &cur, &prop);
+        let (rs, rs2) = model.lldiff_moments_ref(&idx, &cur, &prop);
+        assert!(
+            (s - rs).abs() <= 1e-12 * rs.abs().max(1.0),
+            "logistic trial {trial}: {s} vs {rs}"
+        );
+        assert!(
+            (s2 - rs2).abs() <= 1e-12 * rs2.abs().max(1.0),
+            "logistic trial {trial}: {s2} vs {rs2}"
+        );
+
+        let tc = rng.normal_scaled(0.3, 0.2);
+        let tp = rng.normal_scaled(0.3, 0.2);
+        let lidx: Vec<u32> = (0..k).map(|_| rng.below(10_000) as u32).collect();
+        let (ls, ls2) = toy.lldiff_moments(&lidx, &tc, &tp);
+        let (lrs, lrs2) = toy.lldiff_moments_ref(&lidx, tc, tp);
+        assert!(
+            (ls - lrs).abs() <= 1e-12 * lrs.abs().max(1.0),
+            "linreg trial {trial}: {ls} vs {lrs}"
+        );
+        assert!(
+            (ls2 - lrs2).abs() <= 1e-12 * lrs2.abs().max(1.0),
+            "linreg trial {trial}: {ls2} vs {lrs2}"
+        );
+    }
+}
+
+#[test]
+fn gathered_and_range_kernels_share_bits() {
+    let model = logistic(2_000);
+    let mut rng = Pcg64::seeded(5);
+    let cur: Vec<f64> = (0..12).map(|_| 0.2 * rng.normal()).collect();
+    let prop: Vec<f64> = (0..12).map(|_| 0.2 * rng.normal()).collect();
+    for _ in 0..16 {
+        let a = rng.below(1_500);
+        let b = a + rng.below(500) + 1;
+        let idx: Vec<u32> = (a as u32..b as u32).collect();
+        let g = model.lldiff_moments(&idx, &cur, &prop);
+        let r = model.lldiff_range_moments(a, b, &cur, &prop);
+        assert_eq!(g.0.to_bits(), r.0.to_bits(), "[{a}, {b})");
+        assert_eq!(g.1.to_bits(), r.1.to_bits(), "[{a}, {b})");
+    }
+}
+
+#[test]
+fn engine_exact_rule_identical_with_spare_intra_step_workers() {
+    // K = 1 chain, threads ∈ {1, 4, 8}: threads > chains hands the chain
+    // intra-step scan workers; samples must not change by a bit.
+    let model = logistic(4_000);
+    let init = model.map_estimate(30);
+    let kernel = GaussianRandomWalk::new(0.02, 10.0);
+    let launch = |threads: usize, cached: bool| {
+        let cfg = EngineConfig::new(1, 77, Budget::Steps(60)).threads(threads);
+        let res = if cached {
+            run_engine_cached(&model, &kernel, &MhMode::Exact, init.clone(), &cfg, |_c| {
+                |t: &Vec<f64>| t[0]
+            })
+        } else {
+            run_engine(&model, &kernel, &MhMode::Exact, init.clone(), &cfg, |_c| {
+                |t: &Vec<f64>| t[0]
+            })
+        };
+        res.runs[0].samples.iter().map(|s| s.value.to_bits()).collect::<Vec<u64>>()
+    };
+    let base = launch(1, false);
+    assert_eq!(base.len(), 60);
+    for threads in [4usize, 8] {
+        assert_eq!(launch(threads, false), base, "uncached threads {threads}");
+        assert_eq!(launch(threads, true), base, "cached threads {threads}");
+    }
+    assert_eq!(launch(1, true), base, "cached serial");
+}
+
+#[test]
+fn engine_exact_rule_identical_with_spare_workers_linreg_cached() {
+    let model = linreg(6_000);
+    let kernel = ScalarRandomWalk { sigma: 0.004, log_prior: |t: f64| -4950.0 * t.abs() };
+    let launch = |threads: usize| {
+        let cfg = EngineConfig::new(2, 13, Budget::Steps(50)).threads(threads);
+        let res = run_engine_cached(&model, &kernel, &MhMode::Exact, 0.45f64, &cfg, |_c| {
+            |t: &f64| *t
+        });
+        res.runs
+            .iter()
+            .map(|r| r.samples.iter().map(|s| s.value.to_bits()).collect::<Vec<u64>>())
+            .collect::<Vec<_>>()
+    };
+    let base = launch(2); // one worker per chain, no spare
+    for threads in [1usize, 6, 9] {
+        assert_eq!(launch(threads), base, "threads {threads}");
+    }
+}
