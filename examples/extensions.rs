@@ -1,13 +1,13 @@
 //! The beyond-the-paper extensions in one tour — every one a
-//! `TransitionKernel` on the multi-chain engine:
+//! `TransitionKernel` driven through the session front-end:
 //!   1. adaptive epsilon (paper §7 future work): anneal the bias knob
 //!   2. the pseudo-marginal baseline the paper argues against (§4)
 //!   3. multi-valued Gibbs via Gumbel-max tournaments (supp. F extension)
 //!
 //! Run: cargo run --release --example extensions
 
-use austerity::coordinator::adaptive::{run_adaptive_chain, EpsSchedule};
-use austerity::coordinator::{run_engine_cached, run_engine_kernel, Budget, EngineConfig, MhMode};
+use austerity::coordinator::adaptive::{AdaptiveMhKernel, EpsSchedule};
+use austerity::coordinator::{Budget, KernelSession, MhMode, ScalarFn, Session};
 use austerity::models::{LlDiffModel, PottsModel};
 use austerity::samplers::gibbs_potts::{PottsMode, PottsSweepKernel};
 use austerity::samplers::pseudo_marginal::{PmKernel, PmPathology, PoissonEstimator};
@@ -26,15 +26,21 @@ fn main() {
         ("fixed 0.1 ", EpsSchedule::Fixed(0.1)),
         ("annealed  ", EpsSchedule::default_anneal()),
     ] {
-        let mut rng = Pcg64::seeded(1);
-        let (_, stats) = run_adaptive_chain(
-            &model, &kernel, &sched, 500, init.clone(),
-            Budget::Steps(2_000), 200, 1, |t| t[0], &mut rng,
-        );
+        let adaptive =
+            AdaptiveMhKernel { model: &model, proposal: &kernel, schedule: &sched, batch: 500 };
+        let report = KernelSession::new(&adaptive)
+            .label("adaptive")
+            .data_size(model.n())
+            .seed(1)
+            .budget(Budget::Steps(2_000))
+            .burn_in(200)
+            .record(ScalarFn::new(|t: &Vec<f64>| t[0]))
+            .init(init.clone())
+            .run();
         println!(
             "   {label}: data/test {:.3}, accept {:.2}",
-            stats.mean_data_fraction(model.n()),
-            stats.acceptance_rate()
+            report.mean_data_fraction(),
+            report.acceptance_rate()
         );
     }
 
@@ -42,32 +48,32 @@ fn main() {
     println!("\n2. pseudo-marginal (Poisson estimator) vs sequential test");
     let est = PoissonEstimator { batch: 100, lambda: 3.0, center: 0.0 };
     let pm_kernel = PmKernel::new(&model, &kernel, &est, init.clone());
-    let pm_res = run_engine_kernel(
-        &pm_kernel,
-        pm_kernel.init_state(),
-        &EngineConfig::new(1, 2, Budget::Steps(400)),
-        |_c| PmPathology::default(),
-    );
-    let pm = &pm_res.merged;
+    let pm_res = KernelSession::new(&pm_kernel)
+        .label("pseudo-marginal")
+        .data_size(model.n())
+        .seed(2)
+        .budget(Budget::Steps(400))
+        .record_with(|_c| PmPathology::default())
+        .init(pm_kernel.init_state())
+        .run();
     let path = &pm_res.observers[0];
-    let seq_res = run_engine_cached(
-        &model,
-        &kernel,
-        &MhMode::approx(0.05, 500),
-        init,
-        &EngineConfig::new(1, 2, Budget::Steps(400)),
-        |_c| |_: &Vec<f64>| 0.0,
-    );
-    let seq = seq_res.merged;
+    let seq_res = Session::new(&model)
+        .kernel(&kernel)
+        .rule(MhMode::approx(0.05, 500))
+        .seed(2)
+        .budget(Budget::Steps(400))
+        .record(ScalarFn::new(|_: &Vec<f64>| 0.0))
+        .init(init)
+        .run();
     println!(
         "   pseudo-marginal: accept {:.2}, longest stuck run {} steps, {:.0}% estimates clamped",
-        pm.acceptance_rate(),
+        pm_res.acceptance_rate(),
         path.longest_stuck,
-        100.0 * path.clamped as f64 / pm.steps as f64,
+        100.0 * path.clamped as f64 / pm_res.merged.steps as f64,
     );
     println!(
         "   sequential test: accept {:.2} — exact-but-stuck vs biased-but-mixing (paper §4)",
-        seq.acceptance_rate()
+        seq_res.acceptance_rate()
     );
 
     // ---- 3. multi-valued Gibbs ------------------------------------------
@@ -80,16 +86,20 @@ fn main() {
         ("approx e=.1", PottsMode::Approx { eps: 0.1, batch: 300 }),
     ] {
         let sweep_kernel = PottsSweepKernel { model: &potts, mode };
-        let res = run_engine_kernel(
-            &sweep_kernel,
-            x0.clone(),
-            &EngineConfig::new(2, 3, Budget::Steps(25)),
-            |_c| |x: &Vec<usize>| x.iter().filter(|&&s| s == 0).count() as f64 / x.len() as f64,
-        );
+        let report = KernelSession::new(&sweep_kernel)
+            .label("potts")
+            .chains(2)
+            .seed(3)
+            .budget(Budget::Steps(25))
+            .record(ScalarFn::new(|x: &Vec<usize>| {
+                x.iter().filter(|&&s| s == 0).count() as f64 / x.len() as f64
+            }))
+            .init(x0.clone())
+            .run();
         println!(
             "   {label}: {:.1} sweeps/s, {:.0} pair-evals/update",
-            res.steps_per_sec(),
-            res.merged.data_used as f64 / (res.merged.steps * potts.d()) as f64,
+            report.steps_per_sec(),
+            report.merged.data_used as f64 / (report.merged.steps * potts.d()) as f64,
         );
     }
 }

@@ -1,12 +1,13 @@
 //! Paper supp. F: approximate Gibbs sampling on a dense binary MRF with
 //! C(D,3) triple potentials. Each conditional flip needs 4851 potential
 //! pairs at D = 100; the sequential test decides from a few hundred.
-//! Each mode runs as a `GibbsSweepKernel` launch on the multi-chain
-//! engine (2 chains in parallel, cross-chain R-hat for free).
+//! Each mode runs as a `GibbsSweepKernel` launch through the
+//! `KernelSession` front-end (2 chains in parallel, cross-chain R-hat
+//! for free).
 //!
 //! Run: cargo run --release --example gibbs_mrf [-- D]
 
-use austerity::coordinator::{run_engine_kernel, Budget, EngineConfig};
+use austerity::coordinator::{Budget, KernelSession, ScalarFn};
 use austerity::models::MrfModel;
 use austerity::samplers::gibbs::{GibbsMode, GibbsSweepKernel};
 use austerity::stats::Pcg64;
@@ -33,16 +34,22 @@ fn main() {
         ("approx e=.20", GibbsMode::Approx { eps: 0.2, batch: 500 }),
     ] {
         let kernel = GibbsSweepKernel { model: &model, mode };
-        let cfg = EngineConfig::new(chains, 2, Budget::Steps(sweeps_per_chain));
-        let res = run_engine_kernel(&kernel, x0.clone(), &cfg, |_c| {
-            |x: &Vec<bool>| x.iter().filter(|&&b| b).count() as f64 / x.len() as f64
-        });
+        let report = KernelSession::new(&kernel)
+            .label("gibbs")
+            .chains(chains)
+            .seed(2)
+            .budget(Budget::Steps(sweeps_per_chain))
+            .record(ScalarFn::new(|x: &Vec<bool>| {
+                x.iter().filter(|&&b| b).count() as f64 / x.len() as f64
+            }))
+            .init(x0.clone())
+            .run();
         println!(
             "{label}  {:>7.1}    {:>8.0}       {:.3}      {:.2}",
-            res.steps_per_sec(),
-            res.merged.data_used as f64 / (res.merged.steps * d) as f64,
-            res.convergence.pooled_mean,
-            res.convergence.rhat,
+            report.steps_per_sec(),
+            report.merged.data_used as f64 / (report.merged.steps * d) as f64,
+            report.pooled_mean(),
+            report.rhat(),
         );
     }
 }

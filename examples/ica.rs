@@ -1,17 +1,16 @@
 //! Paper §6.2: posterior sampling of an ICA unmixing matrix on the
 //! Stiefel manifold, exact vs approximate MH, measured by the Amari
-//! distance to the true unmixing matrix. Chains run in parallel on the
-//! multi-chain engine.
+//! distance to the true unmixing matrix. Chains run in parallel through
+//! the `Session` front-end.
 //!
 //! Run: cargo run --release --example ica [-- N]
 
-use austerity::coordinator::{run_engine, Budget, EngineConfig, MhMode};
+use austerity::coordinator::{Budget, MhMode, ScalarFn, Session};
 use austerity::data::synthetic::ica_mixture;
 use austerity::data::Mat;
 use austerity::models::ica::amari_distance;
-use austerity::models::{IcaModel, LlDiffModel};
+use austerity::models::IcaModel;
 use austerity::samplers::StiefelRandomWalk;
-use austerity::stats::welford::Welford;
 
 fn main() {
     let n: usize = std::env::args()
@@ -27,29 +26,25 @@ fn main() {
     let steps_per_chain = 300;
     println!("\neps    E[amari]  +-      accept  data/test  steps/s  R-hat");
     for eps in [0.0, 0.01, 0.05, 0.1] {
-        let mode = MhMode::approx(eps, 600);
-        let t0 = std::time::Instant::now();
-        let cfg = EngineConfig::new(chains, 4, Budget::Steps(steps_per_chain))
-            .burn_in(steps_per_chain / 5);
-        let res = run_engine(&model, &kernel, &mode, w0.clone(), &cfg, |_c| {
-            let w0c = w0.clone();
-            move |w: &Mat| amari_distance(w, &w0c)
-        });
-        let secs = t0.elapsed().as_secs_f64();
-        let mut w = Welford::new();
-        for run in &res.runs {
-            for s in &run.samples {
-                w.add(s.value);
-            }
-        }
+        let w0c = w0.clone();
+        let report = Session::new(&model)
+            .kernel(&kernel)
+            .rule(MhMode::approx(eps, 600))
+            .chains(chains)
+            .seed(4)
+            .budget(Budget::Steps(steps_per_chain))
+            .burn_in(steps_per_chain / 5)
+            .record(ScalarFn::new(move |w: &Mat| amari_distance(w, &w0c)))
+            .init(w0.clone())
+            .run();
         println!(
             "{eps:<5}  {:.4}   {:.4}  {:.2}    {:.3}      {:.1}    {:.3}",
-            w.mean(),
-            w.std_sample(),
-            res.merged.acceptance_rate(),
-            res.merged.mean_data_fraction(model.n()),
-            res.merged.steps as f64 / secs,
-            res.convergence.rhat,
+            report.pooled_mean(),
+            report.pooled_std(),
+            report.acceptance_rate(),
+            report.mean_data_fraction(),
+            report.steps_per_sec(),
+            report.rhat(),
         );
     }
     println!(

@@ -1,32 +1,19 @@
 //! Paper §6.1: random-walk MH on a logistic-regression posterior with an
 //! epsilon sweep — the risk/variance trade-off of Fig. 2 in miniature,
-//! run on the parallel multi-chain engine, including the three-layer
-//! PJRT backend if artifacts are built.
+//! run through the `Session` front-end (cached fast path picked
+//! automatically for the native model), including the three-layer PJRT
+//! backend if artifacts are built.
 //!
 //! Run: make artifacts && cargo run --release --example logistic_regression
 
-use austerity::coordinator::{run_engine, Budget, ChainObserver, EngineConfig, MhMode};
-use austerity::metrics::PredictiveMean;
+use austerity::coordinator::{Budget, MhMode, Session, VecMean};
 use austerity::models::{LlDiffModel, LogisticModel};
 use austerity::runtime::{PjrtLogistic, PjrtRuntime};
 use austerity::samplers::GaussianRandomWalk;
 
-/// Per-chain predictive-mean accumulator over a held-out panel.
-struct PmObs<'a> {
-    test: &'a LogisticModel,
-    pm: PredictiveMean,
-}
-
-impl<'a> ChainObserver<Vec<f64>> for PmObs<'a> {
-    fn observe(&mut self, theta: &Vec<f64>) -> f64 {
-        let probs: Vec<f64> = (0..self.test.n())
-            .map(|i| self.test.predict(self.test.data().row(i), theta))
-            .collect();
-        self.pm.add(&probs);
-        0.0
-    }
-}
-
+/// One epsilon: run 2 chains, stream the held-out predictive panel into
+/// a per-chain `VecMean`, merge, and report (estimate, data fraction,
+/// steps/sec).
 fn run_eps<M>(
     model: &M,
     test: &LogisticModel,
@@ -38,25 +25,26 @@ where
     M: LlDiffModel<Param = Vec<f64>> + Sync,
 {
     let kernel = GaussianRandomWalk::new(0.01, 10.0);
-    let mode = MhMode::approx(eps, 500);
     let chains = 2usize;
     let per_chain = (steps / chains).max(1);
-    let cfg = EngineConfig::new(chains, 7, Budget::Steps(per_chain)).burn_in(per_chain / 5);
-    let t0 = std::time::Instant::now();
-    let res = run_engine(model, &kernel, &mode, init.to_vec(), &cfg, |_c| PmObs {
-        test,
-        pm: PredictiveMean::new(test.n()),
-    });
-    let secs = t0.elapsed().as_secs_f64();
-    let mut pm = PredictiveMean::new(test.n());
-    for o in &res.observers {
-        pm.merge(&o.pm);
-    }
-    (
-        pm.mean(),
-        res.merged.data_used as f64 / (res.merged.steps as f64 * model.n() as f64),
-        res.merged.steps as f64 / secs,
-    )
+    let report = Session::new(model)
+        .kernel(&kernel)
+        .rule(MhMode::approx(eps, 500))
+        .chains(chains)
+        .seed(7)
+        .budget(Budget::Steps(per_chain))
+        .burn_in(per_chain / 5)
+        .record_with(|_c| {
+            VecMean::new(test.n(), |theta: &Vec<f64>| {
+                (0..test.n())
+                    .map(|i| test.predict(test.data().row(i), theta))
+                    .collect()
+            })
+        })
+        .init(init.to_vec())
+        .run();
+    let pm = VecMean::merged(&report.observers);
+    (pm.mean(), report.mean_data_fraction(), report.steps_per_sec())
 }
 
 fn main() {

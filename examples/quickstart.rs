@@ -1,20 +1,21 @@
 //! Quickstart: budgeted Metropolis-Hastings in five minutes.
 //!
 //! Builds a small logistic-regression posterior and runs all four
-//! acceptance rules on the parallel multi-chain engine — the exact
+//! acceptance rules through the `Session` front-end — the exact
 //! full-data test, the paper's sequential (austerity) test, the
 //! minibatch Barker test and the confidence sampler — K chains on K
-//! cores, per-datapoint activations cached across steps, cross-chain
-//! R-hat for free. The headline numbers: matching posteriors, a fraction
-//! of the data touched per decision, and more samples per second.
+//! cores. The cached fast path is picked automatically (the model keeps
+//! per-datapoint activations alive across steps), and cross-chain R-hat
+//! comes back in the same `RunReport`. The headline numbers: matching
+//! posteriors, a fraction of the data touched per decision, and more
+//! samples per second.
 //!
 //! Run: cargo run --release --example quickstart
 
-use austerity::coordinator::{run_engine_cached, Budget, EngineConfig, MhMode};
+use austerity::coordinator::{Budget, MhMode, Param, Session};
 use austerity::data::synthetic::two_class_gaussian;
-use austerity::models::{LlDiffModel, LogisticModel};
+use austerity::models::LogisticModel;
 use austerity::samplers::GaussianRandomWalk;
-use austerity::stats::welford::Welford;
 
 fn main() {
     // 1. A posterior over 12214 datapoints (synthetic stand-in for the
@@ -33,29 +34,27 @@ fn main() {
         ("barker     (sigma = 1) ", MhMode::barker(1.0, 500)),
         ("confidence (delta=0.05)", MhMode::confidence(0.05, 500)),
     ] {
-        let t0 = std::time::Instant::now();
-        let cfg = EngineConfig::new(chains, 1, Budget::Steps(steps_per_chain)).burn_in(100);
-        let res = run_engine_cached(&model, &kernel, &mode, init.clone(), &cfg, |_c| {
-            |theta: &Vec<f64>| theta[0] // posterior of the first coefficient
-        });
-        let secs = t0.elapsed().as_secs_f64();
-        let mut w = Welford::new();
-        for run in &res.runs {
-            for s in &run.samples {
-                w.add(s.value);
-            }
-        }
+        let report = Session::new(&model)
+            .kernel(&kernel)
+            .rule(mode)
+            .chains(chains)
+            .seed(1)
+            .budget(Budget::Steps(steps_per_chain))
+            .burn_in(100)
+            .record(Param::index(0)) // posterior of the first coefficient
+            .init(init.clone())
+            .run();
         println!(
             "{label}: E[theta_0] = {:+.4} +- {:.4} | accept {:.2} | \
              data/test {:.3} | {:.0} steps/s | R-hat {:.3}",
-            w.mean(),
-            w.std_sample(),
-            res.merged.acceptance_rate(),
-            res.merged.mean_data_fraction(model.n()),
-            res.merged.steps as f64 / secs,
-            res.convergence.rhat,
+            report.pooled_mean(),
+            report.pooled_std(),
+            report.acceptance_rate(),
+            report.mean_data_fraction(),
+            report.steps_per_sec(),
+            report.rhat(),
         );
-        results.push((w.mean(), res.merged.mean_data_fraction(model.n())));
+        results.push((report.pooled_mean(), report.mean_data_fraction()));
     }
 
     // 3. The point of the whole family in two lines:

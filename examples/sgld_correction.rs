@@ -1,24 +1,16 @@
 //! Paper §6.4: the SGLD pitfall and its repair by the approximate MH
-//! test, run as `SgldKernel` chains on the parallel multi-chain engine.
-//! Prints the true posterior moments and the empirical moments of the
-//! uncorrected vs corrected samplers, plus cross-chain R-hat / ESS.
+//! test, run as `SgldKernel` chains through the `KernelSession` front-end
+//! (the generic-kernel sibling of `Session`). Prints the true posterior
+//! moments and the empirical moments of the uncorrected vs corrected
+//! samplers, plus cross-chain R-hat / ESS.
 //!
 //! Run: cargo run --release --example sgld_correction
 
 use austerity::coordinator::austerity::SeqTestConfig;
-use austerity::coordinator::{run_engine_kernel, Budget, EngineConfig};
+use austerity::coordinator::{Budget, KernelSession};
 use austerity::data::synthetic::linreg_toy;
-use austerity::models::LinRegModel;
+use austerity::models::{LinRegModel, LlDiffModel};
 use austerity::samplers::sgld::{SgldConfig, SgldKernel};
-use austerity::stats::welford::Welford;
-
-fn moments(xs: &[f64]) -> (f64, f64) {
-    let mut w = Welford::new();
-    for &x in xs {
-        w.add(x);
-    }
-    (w.mean(), w.var_pop().sqrt())
-}
 
 fn main() {
     let model = LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0);
@@ -38,30 +30,36 @@ fn main() {
             model: &model,
             cfg: SgldConfig { alpha: 5e-6, grad_batch: 50, correction },
         };
-        let cfg = EngineConfig::new(chains, seed, Budget::Steps(steps_per_chain))
-            .burn_in(steps_per_chain / 5);
-        run_engine_kernel(&kernel, t_mean, &cfg, |_c| |t: &f64| *t)
+        KernelSession::new(&kernel)
+            .label("sgld")
+            .data_size(model.n())
+            .chains(chains)
+            .seed(seed)
+            .budget(Budget::Steps(steps_per_chain))
+            .burn_in(steps_per_chain / 5)
+            .init(t_mean)
+            .run()
     };
 
     let res_un = run(None, 0);
-    let s_un: Vec<f64> = res_un.values().into_iter().flatten().collect();
-    let (m, s) = moments(&s_un);
     println!(
-        "uncorrected SGLD: mean {m:.4}, std {s:.5}  <- {:.1}x too wide (rhat {:.2})",
-        s / t_std,
-        res_un.convergence.rhat,
+        "uncorrected SGLD: mean {:.4}, std {:.5}  <- {:.1}x too wide (rhat {:.2})",
+        res_un.pooled_mean(),
+        res_un.pooled_std(),
+        res_un.pooled_std() / t_std,
+        res_un.rhat(),
     );
 
     let res_co = run(Some(SeqTestConfig::new(0.5, 500)), 1);
-    let s_co: Vec<f64> = res_co.values().into_iter().flatten().collect();
-    let (m, s) = moments(&s_co);
     println!(
-        "corrected  SGLD: mean {m:.4}, std {s:.5}  (accept {:.2}, {} data pts/step, \
+        "corrected  SGLD: mean {:.4}, std {:.5}  (accept {:.2}, {} data pts/step, \
          rhat {:.2}, ess {:.0})",
-        res_co.merged.acceptance_rate(),
+        res_co.pooled_mean(),
+        res_co.pooled_std(),
+        res_co.acceptance_rate(),
         res_co.merged.data_used / res_co.merged.steps as u64,
-        res_co.convergence.rhat,
-        res_co.convergence.ess,
+        res_co.rhat(),
+        res_co.ess(),
     );
     println!(
         "\nwith eps = 0.5 the test decides from the first mini-batch \

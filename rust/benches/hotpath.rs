@@ -25,9 +25,10 @@ use std::time::Instant;
 
 use austerity::coordinator::austerity::{seq_mh_test, SeqTestConfig};
 use austerity::coordinator::dp::analyze_pocock;
-use austerity::coordinator::engine::{run_engine_cached, run_engine_kernel, EngineConfig};
 use austerity::coordinator::scheduler::MinibatchScheduler;
-use austerity::coordinator::{mh_step, mh_step_cached, Budget, MhMode, MhScratch};
+use austerity::coordinator::{
+    mh_step, mh_step_cached, Budget, KernelSession, MhMode, MhScratch, ScalarFn, Session,
+};
 use austerity::data::synthetic::linreg_toy;
 use austerity::models::traits::{
     full_scan_moments_par, CachedLlDiff, LlDiffModel, ProposalKernel, ScanScratch,
@@ -260,15 +261,21 @@ fn main() {
     rec.record("cores", cores as f64);
     let mut sps_k1 = 0.0f64;
     for k in [1usize, 2, 4] {
-        let ecfg = EngineConfig::new(k, 99, Budget::Steps(400));
+        let launch = || {
+            // Session rides the cached fast path for the logistic model
+            Session::new(&model)
+                .kernel(&kernel)
+                .rule(mode.clone())
+                .chains(k)
+                .seed(99)
+                .budget(Budget::Steps(400))
+                .init(theta.clone())
+                .run()
+        };
         // warmup run keeps page faults and turbo ramp out of the timing
-        let _ = run_engine_cached(&model, &kernel, &mode, theta.clone(), &ecfg, |_c| {
-            |t: &Vec<f64>| t[0]
-        });
+        let _ = launch();
         let t0 = Instant::now();
-        let res = run_engine_cached(&model, &kernel, &mode, theta.clone(), &ecfg, |_c| {
-            |t: &Vec<f64>| t[0]
-        });
+        let res = launch();
         let wall = t0.elapsed().as_secs_f64();
         let sps = res.merged.steps as f64 / wall;
         if k == 1 {
@@ -300,10 +307,18 @@ fn main() {
         },
     };
     for k in [1usize, 4] {
-        let ecfg = EngineConfig::new(k, 23, Budget::Steps(400));
-        let _ = run_engine_kernel(&sgld_kernel, 0.45f64, &ecfg, |_c| |t: &f64| *t);
+        let launch = || {
+            KernelSession::new(&sgld_kernel)
+                .label("sgld")
+                .chains(k)
+                .seed(23)
+                .budget(Budget::Steps(400))
+                .init(0.45f64)
+                .run()
+        };
+        let _ = launch();
         let t0 = Instant::now();
-        let res = run_engine_kernel(&sgld_kernel, 0.45f64, &ecfg, |_c| |t: &f64| *t);
+        let res = launch();
         let sps = res.merged.steps as f64 / t0.elapsed().as_secs_f64();
         rec.record(&format!("engine_steps_per_sec_sgld_k{k}"), sps);
         println!("sgld  k={k}: {sps:>9.1} steps/s");
@@ -315,10 +330,19 @@ fn main() {
     let frac_ones = |x: &Vec<bool>| x.iter().filter(|&&b| b).count() as f64 / x.len() as f64;
     let x0: Vec<bool> = (0..60).map(|i| i % 2 == 0).collect();
     for k in [1usize, 4] {
-        let ecfg = EngineConfig::new(k, 24, Budget::Steps(40));
-        let _ = run_engine_kernel(&gibbs_kernel, x0.clone(), &ecfg, |_c| frac_ones);
+        let launch = || {
+            KernelSession::new(&gibbs_kernel)
+                .label("gibbs")
+                .chains(k)
+                .seed(24)
+                .budget(Budget::Steps(40))
+                .record(ScalarFn::new(frac_ones))
+                .init(x0.clone())
+                .run()
+        };
+        let _ = launch();
         let t0 = Instant::now();
-        let res = run_engine_kernel(&gibbs_kernel, x0.clone(), &ecfg, |_c| frac_ones);
+        let res = launch();
         let sps = res.merged.steps as f64 / t0.elapsed().as_secs_f64();
         rec.record(&format!("engine_steps_per_sec_gibbs_k{k}"), sps);
         println!("gibbs k={k}: {sps:>9.1} sweeps/s");

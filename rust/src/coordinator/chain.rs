@@ -146,9 +146,14 @@ where
     (samples, stats)
 }
 
-/// Run an MH chain under any acceptance rule (`&MhMode` or a concrete
-/// `AcceptanceTest`); `f` maps the current parameter to the scalar test
-/// function recorded every `thin` steps after `burn_in` steps.
+/// Internal: run one MH chain under any acceptance rule (`&MhMode` or a
+/// concrete `AcceptanceTest`); `f` maps the current parameter to the
+/// scalar test function recorded every `thin` steps after `burn_in`
+/// steps. A `session::Session` launch with K = 1 replays this bit for
+/// bit (chain 0 steps on `Pcg64::new(seed, STREAM_BASE)`); kept `pub`
+/// (hidden) as the same-seed bit-identity oracle for the integration
+/// tests.
+#[doc(hidden)]
 #[allow(clippy::too_many_arguments)]
 pub fn run_chain<M, K, T, F>(
     model: &M,
@@ -178,10 +183,14 @@ where
     )
 }
 
-/// `run_chain` on the state-caching fast path: per-datapoint statistics
-/// of the current parameter persist across steps in a model-provided
-/// cache, so each MH test only evaluates the proposal side. Produces
-/// bit-identical samples to `run_chain` under the same RNG stream.
+/// Internal: `run_chain` on the state-caching fast path — per-datapoint
+/// statistics of the current parameter persist across steps in a
+/// model-provided cache, so each MH test only evaluates the proposal
+/// side. Produces bit-identical samples to `run_chain` under the same
+/// RNG stream. Kept `pub` (hidden) as the bit-identity oracle; use
+/// `session::Session`, which picks this path automatically for cached
+/// models.
+#[doc(hidden)]
 #[allow(clippy::too_many_arguments)]
 pub fn run_chain_cached<M, K, T, F>(
     model: &M,

@@ -113,13 +113,27 @@ impl<O> EngineResult<O> {
             .collect()
     }
 
-    /// Aggregate steps per wall-clock second of the launch.
+    /// Aggregate steps per wall-clock second of the launch (NaN for a
+    /// zero-duration launch, rather than a misleading 0).
     pub fn steps_per_sec(&self) -> f64 {
         let secs = self.wall.as_secs_f64();
         if secs > 0.0 {
             self.merged.steps as f64 / secs
         } else {
-            0.0
+            f64::NAN
+        }
+    }
+
+    /// Aggregate datapoint evaluations per wall-clock second — the
+    /// throughput axis of `Budget::Data` runs, which budget in
+    /// evaluations rather than steps (`merged.data_used` is the amount
+    /// consumed; reports surface both).
+    pub fn data_per_sec(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs > 0.0 {
+            self.merged.data_used as f64 / secs
+        } else {
+            f64::NAN
         }
     }
 }
@@ -166,8 +180,10 @@ where
         .collect()
 }
 
-/// Run K chains of any `TransitionKernel`, one observer per chain —
-/// the engine entry point every sampler family shares. Chain `c` starts
+/// Internal: run K chains of any `TransitionKernel`, one observer per
+/// chain — the engine path behind `session::KernelSession`, which is
+/// the public front door. Kept `pub` (hidden) so the integration tests
+/// can use it as the same-seed bit-identity oracle. Chain `c` starts
 /// from a clone of `init` and steps on `Pcg64::new(base_seed,
 /// STREAM_BASE + c)`, so a launch is bit-reproducible for any pool size
 /// (for step and data budgets).
@@ -178,6 +194,7 @@ where
 /// MH exact-rule full scan) use them through `scratch_par`. Intra-step
 /// parallelism is deterministic by construction, so this keeps the
 /// bit-reproducibility guarantee while filling the pool at K = 1.
+#[doc(hidden)]
 pub fn run_engine_kernel<T, OF, O>(
     kernel: &T,
     init: T::State,
@@ -212,8 +229,12 @@ where
     finish(pairs, start.elapsed())
 }
 
-/// Run K MH chains of `model` under `mode` — any `AcceptanceTest`
-/// (`&MhMode` or a concrete rule) — one observer per chain.
+/// Internal: run K MH chains of `model` under `mode` — any
+/// `AcceptanceTest` (`&MhMode` or a concrete rule) — one observer per
+/// chain. This is the uncached launch behind `session::Session`, which
+/// is the public front door; kept `pub` (hidden) as the bit-identity
+/// oracle for `tests/integration_session.rs`.
+#[doc(hidden)]
 pub fn run_engine<M, K, T, OF, O>(
     model: &M,
     kernel: &K,
@@ -232,8 +253,11 @@ where
     run_engine_kernel(&MhKernel { model, proposal: kernel, mode }, init, cfg, make_observer)
 }
 
-/// `run_engine` on the state-caching fast path: each chain owns a
-/// model cache (`CachedLlDiff`), halving hot-path FLOPs per decision.
+/// Internal: `run_engine` on the state-caching fast path — each chain
+/// owns a model cache (`CachedLlDiff`), halving hot-path FLOPs per
+/// decision. `session::Session` selects this path automatically for
+/// cached models; kept `pub` (hidden) as the bit-identity oracle.
+#[doc(hidden)]
 pub fn run_engine_cached<M, K, T, OF, O>(
     model: &M,
     kernel: &K,

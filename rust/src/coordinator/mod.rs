@@ -1,5 +1,12 @@
 //! The Layer-3 coordinator: the paper's contribution.
 //!
+//! * `session` — **the front door**: the `Session` / `KernelSession`
+//!   builders configuring a multi-chain launch (model, proposal kernel,
+//!   acceptance rule, budget, recording) and returning one typed
+//!   `RunReport` with JSON serialization
+//! * `record` — built-in per-chain observers (`Param`, `ScalarFn`,
+//!   `VecMean`, `Thinned`) and the `RecordSpec` factories behind
+//!   `Session::record`
 //! * `accept` — the pluggable acceptance-test layer: one trait
 //!   (`AcceptanceTest`) behind the exact scan, the paper's sequential
 //!   test, the minibatch Barker test and the confidence sampler
@@ -12,9 +19,12 @@
 //!   driver and one engine serve them all
 //! * `chain` — generic single-chain driver (`drive_chain`) with step /
 //!   wall / datapoint budgets and thinning
-//! * `engine` — parallel multi-chain engine over any kernel
-//!   (`run_engine_kernel`): worker pool, per-chain RNG streams and
-//!   observers, merged stats, split R-hat / ESS
+//! * `engine` — parallel multi-chain engine over any kernel: worker
+//!   pool, per-chain RNG streams and observers, merged stats, split
+//!   R-hat / ESS. Its `run_engine*` launchers (and `chain`'s
+//!   `run_chain*`) are internal — `Session` dispatches to them and
+//!   replays them bit for bit; they stay exported only as the same-seed
+//!   oracle for the integration tests
 //! * `adaptive` — adaptive-epsilon MH kernel (paper §7 future work)
 //! * `scheduler` — without-replacement mini-batch scheduling
 //! * `dp` — Gaussian-random-walk error/usage dynamic program (§5.1)
@@ -31,7 +41,9 @@ pub mod dp;
 pub mod engine;
 pub mod kernel;
 pub mod mh;
+pub mod record;
 pub mod scheduler;
+pub mod session;
 
 pub use accept::{
     AcceptOutcome, AcceptanceTest, AusterityTest, BarkerTest, ConfidenceConfig, ConfidenceTest,
@@ -39,16 +51,24 @@ pub use accept::{
 };
 pub use adaptive::{run_adaptive_chain, AdaptiveMhKernel, EpsSchedule};
 pub use austerity::{seq_mh_test, seq_mh_test_cached, BoundSeq, SeqTestConfig, SeqTestOutcome};
-pub use chain::{
-    drive_chain, drive_chain_par, run_chain, run_chain_cached, Budget, ChainStats, Sample,
-};
+pub use chain::{drive_chain, drive_chain_par, Budget, ChainStats, Sample};
 pub use delta::{PairStats, SeqTestTable};
 pub use design::{average_design, wang_tsiatis_design, worst_case_design, DesignChoice, DesignGrid, WtChoice};
 pub use dp::{analyze_pocock, analyze_walk, simulate_walk, uniform_pis, SeqAnalysis};
-pub use engine::{
-    parallel_map, run_engine, run_engine_cached, run_engine_kernel, ChainObserver, ChainRun,
-    EngineConfig, EngineResult,
-};
+pub use engine::{parallel_map, ChainObserver, ChainRun, EngineConfig, EngineResult};
 pub use kernel::{CachedMhKernel, CachedMhScratch, MhKernel, StepOutcome, TransitionKernel};
 pub use mh::{mh_step, mh_step_cached, CachedMoments, MhMode, MhScratch, ModelMoments, StepInfo};
+pub use record::{
+    Components, Param, PerChain, RecordDefault, RecordSpec, Replicate, ScalarFn, Thinned, VecMean,
+};
 pub use scheduler::MinibatchScheduler;
+pub use session::{KernelSession, NoProposal, RunReport, Session};
+
+// Legacy launch entry points, demoted to internal shims behind
+// `Session` / `KernelSession`: re-exported (hidden) solely so the
+// integration tests can replay them as the same-seed bit-identity
+// oracle of the front-end.
+#[doc(hidden)]
+pub use chain::{run_chain, run_chain_cached};
+#[doc(hidden)]
+pub use engine::{run_engine, run_engine_cached, run_engine_kernel};

@@ -1,0 +1,348 @@
+//! Built-in observer library for the `Session` front-end: the common
+//! per-chain test functions callers used to hand-roll against
+//! `ChainObserver`, packaged as small reusable structs.
+//!
+//! * [`Param`] — record a parameter component (or the full vector) of
+//!   every retained draw;
+//! * [`ScalarFn`] — a named wrapper around an arbitrary scalar test
+//!   function `f(&state) -> f64`;
+//! * [`VecMean`] — stream a vector-valued test function (a predictive
+//!   panel, say) into a running mean, mergeable across chains;
+//! * [`Thinned`] — run a heavyweight inner observer only every k-th
+//!   retained draw.
+//!
+//! A `Session` turns one of these into K per-chain observers through
+//! [`RecordSpec`]: [`Replicate`] clones a prototype per chain
+//! (`Session::record`), [`PerChain`] calls a factory with the chain
+//! index (`Session::record_with`), and [`RecordDefault`] falls back to
+//! `Param::index(0)` when the caller never asked for anything else.
+
+use crate::coordinator::engine::ChainObserver;
+use crate::metrics::predictive::PredictiveMean;
+
+/// Chain states whose coordinates can be read as `f64` — what the
+/// default recorders operate on. Implemented for the scalar and
+/// `Vec<f64>` parameter types of the MH model zoo; states with richer
+/// structure (`RjState`, spin configurations, Stiefel matrices) are
+/// recorded through [`ScalarFn`] / [`VecMean`] / custom observers
+/// instead.
+pub trait Components {
+    /// Number of recordable coordinates.
+    fn n_components(&self) -> usize;
+
+    /// Coordinate `j` (callers keep `j < n_components()`).
+    fn component(&self, j: usize) -> f64;
+
+    /// All coordinates as an owned vector.
+    fn to_vec(&self) -> Vec<f64> {
+        (0..self.n_components()).map(|j| self.component(j)).collect()
+    }
+}
+
+impl Components for f64 {
+    fn n_components(&self) -> usize {
+        1
+    }
+
+    fn component(&self, _j: usize) -> f64 {
+        *self
+    }
+}
+
+impl Components for Vec<f64> {
+    fn n_components(&self) -> usize {
+        self.len()
+    }
+
+    fn component(&self, j: usize) -> f64 {
+        self[j]
+    }
+
+    fn to_vec(&self) -> Vec<f64> {
+        self.clone()
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum ParamMode {
+    Index(usize),
+    All,
+}
+
+/// Record parameter coordinates of every retained draw.
+///
+/// * `Param::index(j)` — the recorded scalar stream (and so the engine's
+///   R-hat / ESS) is coordinate `j`;
+/// * `Param::all()` — additionally stores the full parameter vector per
+///   retained draw (`draws()`), with coordinate 0 as the scalar stream.
+#[derive(Clone, Debug)]
+pub struct Param {
+    mode: ParamMode,
+    draws: Vec<Vec<f64>>,
+}
+
+impl Param {
+    /// Record coordinate `j` as the scalar stream.
+    pub fn index(j: usize) -> Param {
+        Param { mode: ParamMode::Index(j), draws: Vec::new() }
+    }
+
+    /// Record the full parameter vector of every retained draw.
+    pub fn all() -> Param {
+        Param { mode: ParamMode::All, draws: Vec::new() }
+    }
+
+    /// Full vectors recorded by `Param::all` (empty for `Param::index`).
+    pub fn draws(&self) -> &[Vec<f64>] {
+        &self.draws
+    }
+
+    /// Consume the observer, returning the recorded vectors.
+    pub fn into_draws(self) -> Vec<Vec<f64>> {
+        self.draws
+    }
+}
+
+impl<P: Components> ChainObserver<P> for Param {
+    fn observe(&mut self, p: &P) -> f64 {
+        match self.mode {
+            ParamMode::Index(j) => p.component(j),
+            ParamMode::All => {
+                self.draws.push(p.to_vec());
+                p.component(0)
+            }
+        }
+    }
+}
+
+/// A named scalar test-function observer: records `f(&state)` for every
+/// retained draw. Equivalent to passing the bare closure, but clonable
+/// composition (`Session::record`, [`Thinned`]) gets a nameable type.
+#[derive(Clone, Debug)]
+pub struct ScalarFn<F>(F);
+
+impl<F> ScalarFn<F> {
+    pub fn new(f: F) -> Self {
+        ScalarFn(f)
+    }
+}
+
+impl<P, F: FnMut(&P) -> f64 + Send> ChainObserver<P> for ScalarFn<F> {
+    fn observe(&mut self, p: &P) -> f64 {
+        (self.0)(p)
+    }
+}
+
+/// Streams a vector-valued test function into a running per-coordinate
+/// mean (a [`PredictiveMean`]): the predictive-panel observer of the
+/// risk figures. Per-chain accumulators merge across the engine's
+/// chains via [`VecMean::merged`]. The recorded scalar stream is 0 — use
+/// a second launch (or a custom observer) when cross-chain diagnostics
+/// of a scalar are also needed.
+#[derive(Clone, Debug)]
+pub struct VecMean<F> {
+    f: F,
+    acc: PredictiveMean,
+}
+
+impl<F> VecMean<F> {
+    /// Accumulate the running mean of `f(&state)` over `dim`-point
+    /// vectors.
+    pub fn new(dim: usize, f: F) -> Self {
+        VecMean { f, acc: PredictiveMean::new(dim) }
+    }
+
+    /// This chain's accumulator.
+    pub fn accumulator(&self) -> &PredictiveMean {
+        &self.acc
+    }
+
+    /// Merge the per-chain accumulators an engine launch handed back
+    /// into one pooled estimate.
+    pub fn merged(observers: &[VecMean<F>]) -> PredictiveMean {
+        let dim = observers.first().map(|o| o.acc.len()).unwrap_or(0);
+        let mut pm = PredictiveMean::new(dim);
+        for o in observers {
+            pm.merge(&o.acc);
+        }
+        pm
+    }
+}
+
+impl<P, F: FnMut(&P) -> Vec<f64> + Send> ChainObserver<P> for VecMean<F> {
+    fn observe(&mut self, p: &P) -> f64 {
+        let v = (self.f)(p);
+        self.acc.add(&v);
+        0.0
+    }
+}
+
+/// Runs a heavyweight inner observer every `every`-th retained draw
+/// (e.g. a `VecMean` over a large predictive panel). Between refreshes
+/// the recorded scalar repeats the last computed value — prefer the
+/// engine-level `Session::thin` when the scalar stream itself should be
+/// thinned; `Thinned` is for decoupling an expensive accumulator from
+/// the retention rate.
+#[derive(Clone, Debug)]
+pub struct Thinned<O> {
+    inner: O,
+    every: usize,
+    seen: usize,
+    last: f64,
+}
+
+impl<O> Thinned<O> {
+    pub fn new(inner: O, every: usize) -> Self {
+        assert!(every >= 1, "Thinned: every must be >= 1");
+        Thinned { inner, every, seen: 0, last: f64::NAN }
+    }
+
+    pub fn inner(&self) -> &O {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> O {
+        self.inner
+    }
+}
+
+impl<P, O: ChainObserver<P>> ChainObserver<P> for Thinned<O> {
+    fn observe(&mut self, p: &P) -> f64 {
+        if self.seen % self.every == 0 {
+            self.last = self.inner.observe(p);
+        }
+        self.seen += 1;
+        self.last
+    }
+}
+
+/// How a `Session` builds one observer per chain.
+pub trait RecordSpec<P> {
+    type Observer: ChainObserver<P>;
+
+    /// Build chain `chain`'s observer.
+    fn make(&self, chain: usize) -> Self::Observer;
+}
+
+/// Clone one observer prototype per chain (`Session::record`).
+pub struct Replicate<O>(pub O);
+
+impl<P, O: ChainObserver<P> + Clone> RecordSpec<P> for Replicate<O> {
+    type Observer = O;
+
+    fn make(&self, _chain: usize) -> O {
+        self.0.clone()
+    }
+}
+
+/// Build each chain's observer from a `Fn(chain) -> observer` factory
+/// (`Session::record_with`).
+pub struct PerChain<F>(pub F);
+
+impl<P, O, F> RecordSpec<P> for PerChain<F>
+where
+    O: ChainObserver<P>,
+    F: Fn(usize) -> O,
+{
+    type Observer = O;
+
+    fn make(&self, chain: usize) -> O {
+        (self.0)(chain)
+    }
+}
+
+/// The recorder a `Session` uses when the caller never set one: record
+/// coordinate 0 of the chain state.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecordDefault;
+
+impl<P: Components> RecordSpec<P> for RecordDefault {
+    type Observer = Param;
+
+    fn make(&self, _chain: usize) -> Param {
+        Param::index(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn observe_all<O: ChainObserver<Vec<f64>>>(obs: &mut O, states: &[Vec<f64>]) -> Vec<f64> {
+        states.iter().map(|s| obs.observe(s)).collect()
+    }
+
+    #[test]
+    fn param_index_records_component() {
+        let mut p = Param::index(1);
+        let vals = observe_all(&mut p, &[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(vals, vec![2.0, 4.0]);
+        assert!(p.draws().is_empty());
+    }
+
+    #[test]
+    fn param_all_keeps_full_vectors() {
+        let mut p = Param::all();
+        let vals = observe_all(&mut p, &[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(vals, vec![1.0, 3.0]); // scalar stream is component 0
+        assert_eq!(p.draws(), &[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(p.into_draws().len(), 2);
+    }
+
+    #[test]
+    fn scalar_components() {
+        let x = 2.5f64;
+        assert_eq!(x.n_components(), 1);
+        assert_eq!(x.component(0), 2.5);
+        assert_eq!(Components::to_vec(&x), vec![2.5]);
+        let mut p = Param::index(0);
+        assert_eq!(p.observe(&x), 2.5);
+    }
+
+    #[test]
+    fn scalar_fn_wraps_closure() {
+        let mut s = ScalarFn::new(|v: &Vec<f64>| v.iter().sum());
+        assert_eq!(s.observe(&vec![1.0, 2.0, 3.0]), 6.0);
+    }
+
+    #[test]
+    fn vec_mean_accumulates_and_merges() {
+        let mk = || VecMean::new(2, |v: &Vec<f64>| vec![v[0], 2.0 * v[0]]);
+        let mut a = mk();
+        let mut b = mk();
+        a.observe(&vec![1.0]);
+        a.observe(&vec![3.0]);
+        b.observe(&vec![5.0]);
+        let pooled = VecMean::merged(&[a, b]);
+        assert_eq!(pooled.count(), 3);
+        let m = pooled.mean();
+        assert!((m[0] - 3.0).abs() < 1e-12);
+        assert!((m[1] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn thinned_runs_inner_every_kth() {
+        let mut t = Thinned::new(Param::all(), 3);
+        for i in 0..7 {
+            let v = t.observe(&vec![i as f64]);
+            // refreshed at draws 0, 3, 6; repeats in between
+            assert_eq!(v, ((i / 3) * 3) as f64, "draw {i}");
+        }
+        assert_eq!(t.inner().draws().len(), 3);
+        assert_eq!(t.into_inner().into_draws(), vec![vec![0.0], vec![3.0], vec![6.0]]);
+    }
+
+    #[test]
+    fn record_specs_build_observers() {
+        let rep = Replicate(Param::index(0));
+        let mut o: Param = RecordSpec::<Vec<f64>>::make(&rep, 3);
+        assert_eq!(o.observe(&vec![7.0]), 7.0);
+
+        let per = PerChain(|c: usize| ScalarFn::new(move |_: &Vec<f64>| c as f64));
+        let mut o = RecordSpec::<Vec<f64>>::make(&per, 2);
+        assert_eq!(o.observe(&vec![0.0]), 2.0);
+
+        let mut o: Param = RecordSpec::<Vec<f64>>::make(&RecordDefault, 0);
+        assert_eq!(o.observe(&vec![9.0, 1.0]), 9.0);
+    }
+}

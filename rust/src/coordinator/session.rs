@@ -1,0 +1,809 @@
+//! The unified front-end of the sampling stack: one builder
+//! ([`Session`] for Metropolis-Hastings over a model, [`KernelSession`]
+//! for any [`TransitionKernel`]) that configures a multi-chain launch
+//! and returns one typed [`RunReport`].
+//!
+//! `Session::run` picks the engine path itself: models with a
+//! per-datapoint likelihood cache (`CachedLlDiff` — e.g. the logistic
+//! and linear-regression workloads) run the cached fast path, everything
+//! else the uncached kernel, through the model-side
+//! `LlDiffModel::session_launch` hook. The choice never changes results:
+//! cached and uncached decisions are bit-identical by contract, and a
+//! `Session` launch replays the legacy `run_engine*` / `run_chain*`
+//! entry points bit for bit under the same seed (the oracle contract of
+//! `tests/integration_session.rs`).
+//!
+//! ```text
+//! let report = Session::new(&model)
+//!     .kernel(&proposal)
+//!     .rule(MhMode::confidence(0.05, 500))
+//!     .chains(4)
+//!     .seed(7)
+//!     .budget(Budget::Data(5_000_000))
+//!     .burn_in(100)
+//!     .thin(2)
+//!     .record(Param::all())
+//!     .init(theta0)
+//!     .run();
+//! println!("{}", report.to_json());
+//! ```
+
+use std::time::Duration;
+
+use crate::coordinator::accept::AcceptanceTest;
+use crate::coordinator::chain::{Budget, ChainStats};
+use crate::coordinator::engine::{run_engine_kernel, ChainRun, EngineConfig, EngineResult};
+use crate::coordinator::kernel::TransitionKernel;
+use crate::coordinator::mh::MhMode;
+use crate::coordinator::record::{PerChain, RecordDefault, RecordSpec, Replicate};
+use crate::metrics::convergence::Convergence;
+use crate::models::traits::{LlDiffModel, ProposalKernel};
+use crate::stats::welford::Welford;
+
+/// Placeholder proposal-kernel type of a freshly built [`Session`]; it
+/// implements no `ProposalKernel`, so `run()` only compiles once
+/// `Session::kernel` has been called.
+pub struct NoProposal;
+
+/// Shared launch configuration of both session flavours.
+#[derive(Clone, Debug)]
+struct LaunchCfg {
+    chains: usize,
+    threads: usize,
+    seed: u64,
+    budget: Option<Budget>,
+    burn_in: usize,
+    thin: usize,
+}
+
+impl LaunchCfg {
+    fn new() -> Self {
+        LaunchCfg { chains: 1, threads: 0, seed: 0, budget: None, burn_in: 0, thin: 1 }
+    }
+
+    fn engine_config(&self, who: &'static str) -> EngineConfig {
+        let budget = self
+            .budget
+            .unwrap_or_else(|| panic!("{who}: call .budget(..) before .run()"));
+        EngineConfig {
+            chains: self.chains,
+            threads: self.threads,
+            base_seed: self.seed,
+            budget,
+            burn_in: self.burn_in,
+            thin: self.thin,
+        }
+    }
+}
+
+/// Builder for a multi-chain Metropolis-Hastings launch over an
+/// [`LlDiffModel`]: pick a proposal kernel and an acceptance rule, set
+/// the budget, run, get a [`RunReport`]. See the module docs for the
+/// shape; defaults are 1 chain, seed 0, no burn-in, no thinning, one
+/// worker per chain, and recording coordinate 0 of the chain state.
+pub struct Session<'a, M: LlDiffModel, K = NoProposal, T = MhMode, R = RecordDefault> {
+    model: &'a M,
+    proposal: Option<&'a K>,
+    rule: T,
+    record: R,
+    init: Option<M::Param>,
+    cfg: LaunchCfg,
+}
+
+impl<'a, M: LlDiffModel> Session<'a, M> {
+    /// Start configuring a launch over `model` (exact rule until
+    /// [`Session::rule`] picks another).
+    pub fn new(model: &'a M) -> Self {
+        Session {
+            model,
+            proposal: None,
+            rule: MhMode::Exact,
+            record: RecordDefault,
+            init: None,
+            cfg: LaunchCfg::new(),
+        }
+    }
+}
+
+impl<'a, M: LlDiffModel, K, T, R> Session<'a, M, K, T, R> {
+    /// Set the proposal kernel (required before `run`).
+    pub fn kernel<K2>(self, proposal: &'a K2) -> Session<'a, M, K2, T, R> {
+        Session {
+            model: self.model,
+            proposal: Some(proposal),
+            rule: self.rule,
+            record: self.record,
+            init: self.init,
+            cfg: self.cfg,
+        }
+    }
+
+    /// Set the acceptance rule — an [`MhMode`] or any custom
+    /// [`AcceptanceTest`].
+    pub fn rule<T2>(self, rule: T2) -> Session<'a, M, K, T2, R> {
+        Session {
+            model: self.model,
+            proposal: self.proposal,
+            rule,
+            record: self.record,
+            init: self.init,
+            cfg: self.cfg,
+        }
+    }
+
+    /// Record via a cloned per-chain prototype observer (e.g.
+    /// `record::Param::all()`, `record::ScalarFn::new(..)`).
+    pub fn record<O: Clone>(self, prototype: O) -> Session<'a, M, K, T, Replicate<O>> {
+        Session {
+            model: self.model,
+            proposal: self.proposal,
+            rule: self.rule,
+            record: Replicate(prototype),
+            init: self.init,
+            cfg: self.cfg,
+        }
+    }
+
+    /// Record via a `Fn(chain) -> observer` factory (for observers that
+    /// are not `Clone`, or that need the chain index).
+    pub fn record_with<F>(self, factory: F) -> Session<'a, M, K, T, PerChain<F>> {
+        Session {
+            model: self.model,
+            proposal: self.proposal,
+            rule: self.rule,
+            record: PerChain(factory),
+            init: self.init,
+            cfg: self.cfg,
+        }
+    }
+
+    /// Initial chain state (required before `run`; every chain starts
+    /// from a clone).
+    pub fn init(mut self, init: M::Param) -> Self {
+        self.init = Some(init);
+        self
+    }
+
+    /// Number of independent chains K (default 1).
+    pub fn chains(mut self, chains: usize) -> Self {
+        self.cfg.chains = chains;
+        self
+    }
+
+    /// Base RNG seed; chain `c` draws from stream `STREAM_BASE + c`.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Per-chain stop condition (required before `run`).
+    pub fn budget(mut self, budget: Budget) -> Self {
+        self.cfg.budget = Some(budget);
+        self
+    }
+
+    /// Steps discarded before recording starts (default 0).
+    pub fn burn_in(mut self, burn_in: usize) -> Self {
+        self.cfg.burn_in = burn_in;
+        self
+    }
+
+    /// Record every `thin`-th post-burn-in step (default 1).
+    pub fn thin(mut self, thin: usize) -> Self {
+        assert!(thin >= 1);
+        self.cfg.thin = thin;
+        self
+    }
+
+    /// Worker threads (default 0 = one per chain; more than `chains`
+    /// hands the spare workers to the chains' intra-step scans).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+}
+
+impl<'a, M, K, T, R> Session<'a, M, K, T, R>
+where
+    M: LlDiffModel + Sync,
+    K: ProposalKernel<M::Param> + Sync,
+    T: AcceptanceTest + Sync,
+    R: RecordSpec<M::Param> + Sync,
+{
+    /// Launch the chains and collect the typed report. Dispatches to the
+    /// cached engine path automatically when the model implements
+    /// `CachedLlDiff` (via `LlDiffModel::session_launch`); results are
+    /// bit-identical either way.
+    pub fn run(self) -> RunReport<R::Observer> {
+        let Session { model, proposal, rule, record, init, cfg } = self;
+        let proposal = proposal.expect("Session: call .kernel(..) before .run()");
+        let init = init.expect("Session: call .init(..) before .run()");
+        let ecfg = cfg.engine_config("Session");
+        let result = model.session_launch(proposal, &rule, init, &ecfg, |c| record.make(c));
+        RunReport::from_engine(result, rule.name(), model.session_backend(), Some(model.n()), &ecfg)
+    }
+}
+
+/// Builder for a multi-chain launch of any [`TransitionKernel`] (SGLD,
+/// Gibbs / Potts sweeps, pseudo-marginal, adaptive-epsilon, ...): the
+/// same configuration surface and [`RunReport`] as [`Session`], minus
+/// the model/rule split the MH families have. Chain states without
+/// [`crate::coordinator::record::Components`] must set a recorder
+/// explicitly.
+pub struct KernelSession<'a, T: TransitionKernel, R = RecordDefault> {
+    kernel: &'a T,
+    label: &'static str,
+    record: R,
+    init: Option<T::State>,
+    n_data: Option<usize>,
+    cfg: LaunchCfg,
+}
+
+impl<'a, T: TransitionKernel> KernelSession<'a, T> {
+    /// Start configuring a launch of `kernel`.
+    pub fn new(kernel: &'a T) -> Self {
+        KernelSession {
+            kernel,
+            label: "kernel",
+            record: RecordDefault,
+            init: None,
+            n_data: None,
+            cfg: LaunchCfg::new(),
+        }
+    }
+}
+
+impl<'a, T: TransitionKernel, R> KernelSession<'a, T, R> {
+    /// Name the launch in the report (`report.rule`; default
+    /// `"kernel"`).
+    pub fn label(mut self, label: &'static str) -> Self {
+        self.label = label;
+        self
+    }
+
+    /// Dataset size N for `mean_data_fraction` accounting (the generic
+    /// kernel hides its model, so the report cannot infer it).
+    pub fn data_size(mut self, n: usize) -> Self {
+        self.n_data = Some(n);
+        self
+    }
+
+    /// Record via a cloned per-chain prototype observer.
+    pub fn record<O: Clone>(self, prototype: O) -> KernelSession<'a, T, Replicate<O>> {
+        KernelSession {
+            kernel: self.kernel,
+            label: self.label,
+            record: Replicate(prototype),
+            init: self.init,
+            n_data: self.n_data,
+            cfg: self.cfg,
+        }
+    }
+
+    /// Record via a `Fn(chain) -> observer` factory.
+    pub fn record_with<F>(self, factory: F) -> KernelSession<'a, T, PerChain<F>> {
+        KernelSession {
+            kernel: self.kernel,
+            label: self.label,
+            record: PerChain(factory),
+            init: self.init,
+            n_data: self.n_data,
+            cfg: self.cfg,
+        }
+    }
+
+    /// Initial chain state (required before `run`).
+    pub fn init(mut self, init: T::State) -> Self {
+        self.init = Some(init);
+        self
+    }
+
+    /// Number of independent chains K (default 1).
+    pub fn chains(mut self, chains: usize) -> Self {
+        self.cfg.chains = chains;
+        self
+    }
+
+    /// Base RNG seed; chain `c` draws from stream `STREAM_BASE + c`.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Per-chain stop condition (required before `run`).
+    pub fn budget(mut self, budget: Budget) -> Self {
+        self.cfg.budget = Some(budget);
+        self
+    }
+
+    /// Steps discarded before recording starts (default 0).
+    pub fn burn_in(mut self, burn_in: usize) -> Self {
+        self.cfg.burn_in = burn_in;
+        self
+    }
+
+    /// Record every `thin`-th post-burn-in step (default 1).
+    pub fn thin(mut self, thin: usize) -> Self {
+        assert!(thin >= 1);
+        self.cfg.thin = thin;
+        self
+    }
+
+    /// Worker threads (default 0 = one per chain).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+}
+
+impl<'a, T, R> KernelSession<'a, T, R>
+where
+    T: TransitionKernel + Sync,
+    T::State: Sync,
+    R: RecordSpec<T::State> + Sync,
+{
+    /// Launch the chains over the generic-kernel engine path and collect
+    /// the typed report.
+    pub fn run(self) -> RunReport<R::Observer> {
+        let KernelSession { kernel, label, record, init, n_data, cfg } = self;
+        let init = init.expect("KernelSession: call .init(..) before .run()");
+        let ecfg = cfg.engine_config("KernelSession");
+        let result = run_engine_kernel(kernel, init, &ecfg, |c| record.make(c));
+        RunReport::from_engine(result, label, "kernel", n_data, &ecfg)
+    }
+}
+
+/// Everything one session launch produced, typed: per-chain draws and
+/// counters, the pooled statistics, cross-chain convergence diagnostics,
+/// and the budget accounting — plus [`RunReport::to_json`] for
+/// machine-readable output (`austerity sample --json`).
+pub struct RunReport<O> {
+    /// Acceptance-rule (or kernel label) of the launch.
+    pub rule: &'static str,
+    /// Engine path taken: `"cached"`, `"uncached"`, `"pjrt"` (uncached
+    /// engine over the AOT Pallas backend) or `"kernel"`.
+    pub backend: &'static str,
+    /// Dataset size N, when known (MH sessions always know it).
+    pub n_data: Option<usize>,
+    /// Number of chains launched.
+    pub chains: usize,
+    /// Base seed of the launch.
+    pub seed: u64,
+    /// Per-chain stop condition the launch ran under.
+    pub budget: Budget,
+    /// Burn-in steps per chain.
+    pub burn_in: usize,
+    /// Thinning interval.
+    pub thin: usize,
+    /// Per-chain samples and statistics, in chain order.
+    pub runs: Vec<ChainRun>,
+    /// Per-chain observers, in chain order.
+    pub observers: Vec<O>,
+    /// Chain-summed counters (`wall` is the slowest single chain).
+    pub merged: ChainStats,
+    /// Wall-clock duration of the whole launch.
+    pub wall: Duration,
+    /// Cross-chain split R-hat / ESS over the recorded scalar stream.
+    pub convergence: Convergence,
+}
+
+impl<O> RunReport<O> {
+    fn from_engine(
+        result: EngineResult<O>,
+        rule: &'static str,
+        backend: &'static str,
+        n_data: Option<usize>,
+        cfg: &EngineConfig,
+    ) -> Self {
+        let EngineResult { runs, observers, merged, wall, convergence } = result;
+        RunReport {
+            rule,
+            backend,
+            n_data,
+            chains: cfg.chains,
+            seed: cfg.base_seed,
+            budget: cfg.budget,
+            burn_in: cfg.burn_in,
+            thin: cfg.thin,
+            runs,
+            observers,
+            merged,
+            wall,
+            convergence,
+        }
+    }
+
+    /// Recorded scalar values per chain.
+    pub fn values(&self) -> Vec<Vec<f64>> {
+        self.runs
+            .iter()
+            .map(|r| r.samples.iter().map(|s| s.value).collect())
+            .collect()
+    }
+
+    /// Pooled acceptance rate over all chains.
+    pub fn acceptance_rate(&self) -> f64 {
+        self.merged.acceptance_rate()
+    }
+
+    /// Mean fraction of the dataset consumed per decision (NaN when the
+    /// dataset size is unknown — see [`KernelSession::data_size`]).
+    pub fn mean_data_fraction(&self) -> f64 {
+        match self.n_data {
+            Some(n) if n > 0 => self.merged.mean_data_fraction(n),
+            _ => f64::NAN,
+        }
+    }
+
+    /// Aggregate steps per wall-clock second of the launch.
+    pub fn steps_per_sec(&self) -> f64 {
+        per_sec(self.merged.steps as f64, self.wall)
+    }
+
+    /// Aggregate datapoint evaluations per second — the throughput axis
+    /// of `Budget::Data` runs.
+    pub fn data_per_sec(&self) -> f64 {
+        per_sec(self.merged.data_used as f64, self.wall)
+    }
+
+    /// Fraction of the configured per-chain budget actually consumed
+    /// (steps for `Budget::Steps`, datapoint evaluations for
+    /// `Budget::Data` — both summed over chains and divided by `chains ×
+    /// target`; the slowest single chain's own wall time for
+    /// `Budget::Wall`, since chains sharing workers stretch the launch
+    /// wall without any chain exceeding its budget). Slightly above 1 is
+    /// normal: the step that crosses a budget completes.
+    pub fn budget_consumed(&self) -> f64 {
+        let k = self.chains.max(1) as f64;
+        match self.budget {
+            Budget::Steps(s) if s > 0 => self.merged.steps as f64 / (s as f64 * k),
+            Budget::Data(d) if d > 0 => self.merged.data_used as f64 / (d as f64 * k),
+            Budget::Wall(d) if d.as_secs_f64() > 0.0 => {
+                self.merged.wall.as_secs_f64() / d.as_secs_f64()
+            }
+            _ => f64::NAN,
+        }
+    }
+
+    /// Cross-chain split R-hat of the recorded scalar stream.
+    pub fn rhat(&self) -> f64 {
+        self.convergence.rhat
+    }
+
+    /// Total effective sample size across chains.
+    pub fn ess(&self) -> f64 {
+        self.convergence.ess
+    }
+
+    /// Mean of all recorded scalar values.
+    pub fn pooled_mean(&self) -> f64 {
+        self.convergence.pooled_mean
+    }
+
+    /// Sample standard deviation of all recorded scalar values (NaN with
+    /// fewer than two draws).
+    pub fn pooled_std(&self) -> f64 {
+        let mut w = Welford::new();
+        for r in &self.runs {
+            for s in &r.samples {
+                w.add(s.value);
+            }
+        }
+        w.std_sample()
+    }
+
+    /// Serialize the report (configuration, totals, convergence, budget
+    /// accounting, per-chain counters and draws) as a JSON object, via
+    /// the crate's hand-rolled writer — no serde. Non-finite numbers
+    /// serialize as `null`.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024 + 16 * self.convergence.n_samples);
+        s.push('{');
+        s.push_str(&format!(
+            "\"rule\":{},\"backend\":{},",
+            json_str(self.rule),
+            json_str(self.backend)
+        ));
+        match self.n_data {
+            Some(n) => s.push_str(&format!("\"n_data\":{n},")),
+            None => s.push_str("\"n_data\":null,"),
+        }
+        s.push_str(&format!(
+            "\"chains\":{},\"seed\":{},\"burn_in\":{},\"thin\":{},",
+            self.chains, self.seed, self.burn_in, self.thin
+        ));
+        let (kind, per_chain) = match self.budget {
+            Budget::Steps(k) => ("steps", k as f64),
+            Budget::Wall(d) => ("wall_secs", d.as_secs_f64()),
+            Budget::Data(d) => ("data", d as f64),
+        };
+        s.push_str(&format!(
+            "\"budget\":{{\"kind\":\"{kind}\",\"per_chain\":{},\"consumed_fraction\":{}}},",
+            json_num(per_chain),
+            json_num(self.budget_consumed())
+        ));
+        s.push_str(&format!(
+            "\"totals\":{{\"steps\":{},\"accepted\":{},\"data_used\":{},\"wall_secs\":{},\
+             \"acceptance_rate\":{},\"mean_data_fraction\":{},\"steps_per_sec\":{},\
+             \"data_per_sec\":{}}},",
+            self.merged.steps,
+            self.merged.accepted,
+            self.merged.data_used,
+            json_num(self.wall.as_secs_f64()),
+            json_num(self.acceptance_rate()),
+            json_num(self.mean_data_fraction()),
+            json_num(self.steps_per_sec()),
+            json_num(self.data_per_sec())
+        ));
+        s.push_str(&format!(
+            "\"convergence\":{{\"rhat\":{},\"ess\":{},\"pooled_mean\":{},\"n_samples\":{}}},",
+            json_num(self.convergence.rhat),
+            json_num(self.convergence.ess),
+            json_num(self.convergence.pooled_mean),
+            self.convergence.n_samples
+        ));
+        s.push_str("\"per_chain\":[");
+        for (i, run) in self.runs.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"chain\":{},\"steps\":{},\"accepted\":{},\"data_used\":{},\
+                 \"wall_secs\":{},\"draws\":[",
+                run.chain,
+                run.stats.steps,
+                run.stats.accepted,
+                run.stats.data_used,
+                json_num(run.stats.wall.as_secs_f64())
+            ));
+            for (j, smp) in run.samples.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                s.push_str(&json_num(smp.value));
+            }
+            s.push_str("]}");
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+/// A finite `f64` as its shortest round-trip decimal (Rust's `Display`
+/// never emits exponents, so the result is always a valid JSON number);
+/// NaN / infinities become `null`.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// A string as a quoted JSON string literal. Rule labels are
+/// caller-supplied (`KernelSession::label`, custom `AcceptanceTest`
+/// names), so quotes, backslashes and control characters must be
+/// escaped for the report to stay parseable.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn per_sec(count: f64, wall: Duration) -> f64 {
+    let secs = wall.as_secs_f64();
+    if secs > 0.0 {
+        count / secs
+    } else {
+        f64::NAN
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::record::{Param, ScalarFn};
+    use crate::models::traits::Proposal;
+    use crate::stats::Pcg64;
+
+    /// 1-d Gaussian posterior split over N identical "datapoints" (the
+    /// engine's own test target).
+    struct GaussTarget {
+        n: usize,
+    }
+
+    impl LlDiffModel for GaussTarget {
+        type Param = f64;
+
+        fn n(&self) -> usize {
+            self.n
+        }
+
+        fn lldiff(&self, _i: usize, cur: &f64, prop: &f64) -> f64 {
+            (0.5 * (cur * cur - prop * prop)) / self.n as f64
+        }
+    }
+
+    fn rw_kernel(sigma: f64) -> impl Fn(&f64, &mut Pcg64) -> Proposal<f64> + Sync {
+        move |cur: &f64, rng: &mut Pcg64| Proposal {
+            param: cur + rng.normal_scaled(0.0, sigma),
+            log_correction: 0.0,
+        }
+    }
+
+    #[test]
+    fn session_matches_legacy_engine_bitwise() {
+        let model = GaussTarget { n: 50 };
+        let kernel = rw_kernel(1.0);
+        let cfg = EngineConfig::new(3, 42, Budget::Steps(200)).burn_in(20).thin(2);
+        let legacy = crate::coordinator::engine::run_engine(
+            &model,
+            &kernel,
+            &MhMode::Exact,
+            0.0,
+            &cfg,
+            |_c| |p: &f64| *p,
+        );
+        let report = Session::new(&model)
+            .kernel(&kernel)
+            .chains(3)
+            .seed(42)
+            .budget(Budget::Steps(200))
+            .burn_in(20)
+            .thin(2)
+            .init(0.0)
+            .run();
+        assert_eq!(report.rule, "exact");
+        assert_eq!(report.backend, "uncached");
+        assert_eq!(report.chains, 3);
+        assert_eq!(report.merged.steps, legacy.merged.steps);
+        assert_eq!(report.merged.accepted, legacy.merged.accepted);
+        assert_eq!(report.merged.data_used, legacy.merged.data_used);
+        for (a, b) in report.runs.iter().zip(&legacy.runs) {
+            let va: Vec<u64> = a.samples.iter().map(|s| s.value.to_bits()).collect();
+            let vb: Vec<u64> = b.samples.iter().map(|s| s.value.to_bits()).collect();
+            assert_eq!(va, vb);
+        }
+    }
+
+    #[test]
+    fn session_default_record_is_component_zero() {
+        let model = GaussTarget { n: 30 };
+        let kernel = rw_kernel(1.0);
+        let run = |explicit: bool| {
+            let s = Session::new(&model)
+                .kernel(&kernel)
+                .chains(2)
+                .seed(5)
+                .budget(Budget::Steps(100));
+            if explicit {
+                s.record(Param::index(0)).init(0.0).run().values()
+            } else {
+                s.init(0.0).run().values()
+            }
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn report_accounting_and_budget_fraction() {
+        let model = GaussTarget { n: 25 };
+        let kernel = rw_kernel(1.0);
+        let report = Session::new(&model)
+            .kernel(&kernel)
+            .chains(2)
+            .seed(9)
+            .budget(Budget::Data(25 * 40))
+            .init(0.0)
+            .run();
+        // exact rule consumes N per step: 40 steps per chain, exactly
+        assert_eq!(report.merged.steps, 80);
+        assert_eq!(report.merged.data_used, 2 * 25 * 40);
+        assert!((report.budget_consumed() - 1.0).abs() < 1e-12);
+        assert!((report.mean_data_fraction() - 1.0).abs() < 1e-12);
+        assert!(report.steps_per_sec() > 0.0);
+        assert!(report.data_per_sec() > report.steps_per_sec());
+        assert_eq!(report.n_data, Some(25));
+    }
+
+    #[test]
+    fn kernel_session_runs_transition_kernels() {
+        struct Counter;
+        impl TransitionKernel for Counter {
+            type State = f64;
+            type Scratch = ();
+
+            fn scratch(&self, _: &f64) {}
+
+            fn step(
+                &self,
+                state: &mut f64,
+                _: &mut (),
+                _: &mut Pcg64,
+            ) -> crate::coordinator::kernel::StepOutcome {
+                *state += 1.0;
+                crate::coordinator::kernel::StepOutcome { accepted: true, data_used: 5 }
+            }
+        }
+        let report = KernelSession::new(&Counter)
+            .label("counter")
+            .data_size(5)
+            .chains(2)
+            .budget(Budget::Steps(10))
+            .record(ScalarFn::new(|s: &f64| *s))
+            .init(0.0)
+            .run();
+        assert_eq!(report.rule, "counter");
+        assert_eq!(report.backend, "kernel");
+        assert_eq!(report.merged.steps, 20);
+        assert_eq!(report.merged.data_used, 100);
+        assert!((report.mean_data_fraction() - 1.0).abs() < 1e-12);
+        assert_eq!(report.values()[0].last().copied(), Some(10.0));
+    }
+
+    #[test]
+    fn json_report_is_well_formed() {
+        let model = GaussTarget { n: 20 };
+        let kernel = rw_kernel(1.0);
+        let report = Session::new(&model)
+            .kernel(&kernel)
+            .rule(MhMode::Exact)
+            .chains(2)
+            .seed(3)
+            .budget(Budget::Steps(12))
+            .burn_in(2)
+            .init(0.0)
+            .run();
+        let json = report.to_json();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        for key in [
+            "\"rule\":\"exact\"",
+            "\"backend\":\"uncached\"",
+            "\"n_data\":20",
+            "\"budget\":{\"kind\":\"steps\",\"per_chain\":12",
+            "\"totals\":{\"steps\":24",
+            "\"convergence\":{",
+            "\"per_chain\":[{\"chain\":0",
+            "\"draws\":[",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(!json.contains("NaN") && !json.contains("inf"), "{json}");
+        // balanced braces/brackets (the writer is hand-rolled)
+        let depth = json.chars().fold((0i64, 0i64), |(b, k), c| match c {
+            '{' => (b + 1, k),
+            '}' => (b - 1, k),
+            '[' => (b, k + 1),
+            ']' => (b, k - 1),
+            _ => (b, k),
+        });
+        assert_eq!(depth, (0, 0));
+    }
+
+    #[test]
+    fn json_num_handles_non_finite() {
+        assert_eq!(json_num(1.5), "1.5");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn json_str_escapes_labels() {
+        assert_eq!(json_str("exact"), "\"exact\"");
+        assert_eq!(json_str("my \"fast\" run"), "\"my \\\"fast\\\" run\"");
+        assert_eq!(json_str("a\\b\nc"), "\"a\\\\b\\nc\"");
+        assert_eq!(json_str("\u{1}"), "\"\\u0001\"");
+    }
+}

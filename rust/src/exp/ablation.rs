@@ -13,9 +13,10 @@
 use crate::coordinator::adaptive::{run_adaptive_chain, EpsSchedule};
 use crate::coordinator::austerity::{seq_mh_test, SeqTestConfig};
 use crate::coordinator::chain::Budget;
-use crate::coordinator::engine::{run_engine_cached, run_engine_kernel, EngineConfig};
 use crate::coordinator::dp::{analyze_walk, uniform_pis};
 use crate::coordinator::mh::MhMode;
+use crate::coordinator::record::{Param, ScalarFn};
+use crate::coordinator::session::{KernelSession, Session};
 use crate::coordinator::scheduler::MinibatchScheduler;
 use crate::exp::common::{FigureSink, Scale};
 use crate::exp::population::{harvest_pairs, mnist_like_model, FixedLs};
@@ -145,19 +146,18 @@ pub fn ablation_adaptive(scale: Scale) -> Vec<(String, f64, f64)> {
     let kernel = GaussianRandomWalk::new(0.01, model.prior_precision);
     let steps = scale.steps(20_000);
 
-    // truth from parallel exact chains on the cached fast path (same
-    // total step budget as the old single long run)
-    let truth_cfg =
-        EngineConfig::new(2, 1, Budget::Steps(steps)).burn_in(steps / 10);
-    let truth_res = run_engine_cached(
-        &model,
-        &kernel,
-        &MhMode::Exact,
-        init.clone(),
-        &truth_cfg,
-        |_c| |t: &Vec<f64>| t[0],
-    );
-    let truth = truth_res.convergence.pooled_mean;
+    // truth from parallel exact chains (Session picks the cached fast
+    // path; same total step budget as the old single long run)
+    let truth_res = Session::new(&model)
+        .kernel(&kernel)
+        .chains(2)
+        .seed(1)
+        .budget(Budget::Steps(steps))
+        .burn_in(steps / 10)
+        .record(Param::index(0))
+        .init(init.clone())
+        .run();
+    let truth = truth_res.pooled_mean();
 
     let mut sink = FigureSink::new("ablation_adaptive");
     sink.header(&["schedule", "sq_error", "data_fraction"]);
@@ -203,23 +203,25 @@ pub fn ablation_pseudo_marginal(scale: Scale) -> (f64, f64, usize) {
 
     let est = PoissonEstimator { batch: 100.min(n / 8).max(8), lambda: 3.0, center: 0.0 };
     let pm_kernel = PmKernel::new(&model, &kernel, &est, init.clone());
-    let pm_res = run_engine_kernel(
-        &pm_kernel,
-        pm_kernel.init_state(),
-        &EngineConfig::new(1, 3, Budget::Steps(steps)),
-        |_c| PmPathology::default(),
-    );
+    let pm_res = KernelSession::new(&pm_kernel)
+        .label("pseudo-marginal")
+        .data_size(n)
+        .seed(3)
+        .budget(Budget::Steps(steps))
+        .record_with(|_c| PmPathology::default())
+        .init(pm_kernel.init_state())
+        .run();
     let pm = &pm_res.merged;
     let path = &pm_res.observers[0];
 
-    let seq_res = run_engine_cached(
-        &model,
-        &kernel,
-        &MhMode::approx(0.05, 500.min(n / 4).max(16)),
-        init,
-        &EngineConfig::new(1, 3, Budget::Steps(steps)),
-        |_c| |_: &Vec<f64>| 0.0,
-    );
+    let seq_res = Session::new(&model)
+        .kernel(&kernel)
+        .rule(MhMode::approx(0.05, 500.min(n / 4).max(16)))
+        .seed(3)
+        .budget(Budget::Steps(steps))
+        .record(ScalarFn::new(|_: &Vec<f64>| 0.0))
+        .init(init)
+        .run();
     let seq = &seq_res.merged;
 
     let pm_acc = pm.acceptance_rate();

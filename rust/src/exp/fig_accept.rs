@@ -12,8 +12,9 @@
 
 use crate::coordinator::accept::AcceptanceTest;
 use crate::coordinator::chain::Budget;
-use crate::coordinator::engine::{run_engine_cached, EngineConfig};
 use crate::coordinator::mh::MhMode;
+use crate::coordinator::record::Param;
+use crate::coordinator::session::Session;
 use crate::exp::common::{FigureSink, Scale};
 use crate::exp::population::mnist_like_model;
 use crate::samplers::GaussianRandomWalk;
@@ -41,12 +42,17 @@ pub fn run_fig_accept(scale: Scale) -> Vec<RuleRisk> {
     let kernel = GaussianRandomWalk::new(0.01, model.prior_precision);
     let batch = 500.min(n / 4).max(16);
 
-    // ground truth: long exact run on K = 4 chains
-    let gt_cfg = EngineConfig::new(4, 5, Budget::Steps(scale.steps(4_000)))
-        .burn_in(scale.steps(400));
-    let gt = run_engine_cached(&model, &kernel, &MhMode::Exact, map.clone(), &gt_cfg, |_c| {
-        |t: &Vec<f64>| t[0]
-    });
+    // ground truth: long exact run on K = 4 chains (Session picks the
+    // cached fast path for the logistic model)
+    let gt = Session::new(&model)
+        .kernel(&kernel)
+        .chains(4)
+        .seed(5)
+        .budget(Budget::Steps(scale.steps(4_000)))
+        .burn_in(scale.steps(400))
+        .record(Param::index(0))
+        .init(map.clone())
+        .run();
     let truth = {
         let (mut s, mut k) = (0.0, 0usize);
         for run in &gt.runs {
@@ -77,11 +83,16 @@ pub fn run_fig_accept(scale: Scale) -> Vec<RuleRisk> {
         let mut risk = Vec::with_capacity(budgets.len());
         let (mut last_frac, mut last_acc) = (0.0, 0.0);
         for (bi, &b) in budgets.iter().enumerate() {
-            let cfg = EngineConfig::new(4, 900 + bi as u64, Budget::Data(b)).burn_in(burn_in);
-            let res =
-                run_engine_cached(&model, &kernel, mode, map.clone(), &cfg, |_c| {
-                    |t: &Vec<f64>| t[0]
-                });
+            let res = Session::new(&model)
+                .kernel(&kernel)
+                .rule(mode.clone())
+                .chains(4)
+                .seed(900 + bi as u64)
+                .budget(Budget::Data(b))
+                .burn_in(burn_in)
+                .record(Param::index(0))
+                .init(map.clone())
+                .run();
             let mut sq = 0.0;
             let mut chains = 0usize;
             for run in &res.runs {

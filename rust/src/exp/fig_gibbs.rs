@@ -10,7 +10,8 @@
 use std::time::{Duration, Instant};
 
 use crate::coordinator::chain::Budget;
-use crate::coordinator::engine::{run_engine_kernel, ChainObserver, EngineConfig};
+use crate::coordinator::engine::ChainObserver;
+use crate::coordinator::session::KernelSession;
 use crate::exp::common::{FigureSink, Scale};
 use crate::models::MrfModel;
 use crate::samplers::gibbs::{
@@ -177,10 +178,15 @@ pub fn run_fig15(scale: Scale) -> Vec<(f64, f64)> {
     let gt_sweeps = scale.steps(4_000).max(300);
     let per_chain = (gt_sweeps / 2).max(10);
     let gt_kernel = GibbsSweepKernel { model: &model, mode: GibbsMode::Exact };
-    let gt_cfg =
-        EngineConfig::new(2, 1500, Budget::Steps(per_chain)).burn_in(per_chain / 10);
-    let gt_res =
-        run_engine_kernel(&gt_kernel, x0.clone(), &gt_cfg, |_c| MarginalObserver::new(&subsets));
+    let gt_res = KernelSession::new(&gt_kernel)
+        .label("gibbs-exact")
+        .chains(2)
+        .seed(1500)
+        .budget(Budget::Steps(per_chain))
+        .burn_in(per_chain / 10)
+        .record_with(|_c| MarginalObserver::new(&subsets))
+        .init(x0.clone())
+        .run();
     let mut truth_marginals: Vec<SubsetMarginal> =
         subsets.iter().map(|s| SubsetMarginal::new(s.clone())).collect();
     for obs in &gt_res.observers {
@@ -208,14 +214,13 @@ pub fn run_fig15(scale: Scale) -> Vec<(f64, f64)> {
 
     for (eps, mode) in &modes {
         let kernel = GibbsSweepKernel { model: &model, mode: mode.clone() };
-        let cfg = EngineConfig::new(
-            1,
-            150 + (eps * 1e4) as u64,
-            Budget::Wall(Duration::from_secs_f64(budget_secs)),
-        );
-        let res = run_engine_kernel(&kernel, x0.clone(), &cfg, |_c| {
-            CheckpointObserver::new(&subsets, &truth, &checkpoints)
-        });
+        let res = KernelSession::new(&kernel)
+            .label("gibbs")
+            .seed(150 + (eps * 1e4) as u64)
+            .budget(Budget::Wall(Duration::from_secs_f64(budget_secs)))
+            .record_with(|_c| CheckpointObserver::new(&subsets, &truth, &checkpoints))
+            .init(x0.clone())
+            .run();
         let run = res.runs.into_iter().next().expect("one chain");
         let mut obs = res.observers.into_iter().next().expect("one chain");
         obs.flush(run.stats.wall.as_secs_f64());

@@ -10,35 +10,18 @@
 use std::time::Duration;
 
 use crate::coordinator::chain::Budget;
-use crate::coordinator::engine::{run_engine, run_engine_cached, ChainObserver, EngineConfig};
-use crate::coordinator::mh::MhMode;
+use crate::coordinator::record::{ScalarFn, VecMean};
+use crate::coordinator::session::Session;
 use crate::data::linalg::Mat;
 use crate::data::synthetic::{ica_mixture, sparse_logistic};
 use crate::exp::common::{FigureSink, Scale};
 use crate::exp::population::mnist_like_model;
 use crate::exp::risk_driver::{risk_vs_time, RiskConfig};
-use crate::metrics::predictive::PredictiveMean;
 use crate::models::ica::amari_distance;
 use crate::models::rjlogistic::{RjLogisticModel, RjState};
 use crate::models::{IcaModel, LlDiffModel};
 use crate::samplers::{GaussianRandomWalk, RjKernel, StiefelRandomWalk};
 use crate::stats::Pcg64;
-
-/// Per-chain observer streaming a vector test function into a
-/// `PredictiveMean`; the engine hands the observers back and the chains'
-/// panels merge into one ground-truth estimate.
-struct PredObs<F> {
-    f: F,
-    pm: PredictiveMean,
-}
-
-impl<P, F: FnMut(&P) -> Vec<f64> + Send> ChainObserver<P> for PredObs<F> {
-    fn observe(&mut self, p: &P) -> f64 {
-        let v = (self.f)(p);
-        self.pm.add(&v);
-        0.0
-    }
-}
 
 fn emit(sink: &mut FigureSink, results: &[crate::exp::risk_driver::EpsRisk]) {
     sink.header(&["eps", "t_secs", "risk", "chains", "data_fraction", "acceptance", "steps_per_sec"]);
@@ -70,20 +53,21 @@ pub fn run_fig2(scale: Scale) -> Vec<(f64, f64)> {
         (0..test.n()).map(|i| test.predict(test.data().row(i), theta)).collect()
     };
 
-    // ground truth: parallel exact chains on the cached fast path
-    // (stands in for the paper's HMC run)
+    // ground truth: parallel exact chains (the Session picks the cached
+    // fast path for the logistic model; stands in for the paper's HMC
+    // run)
     let gt_secs = scale.secs(60.0);
-    let gt_cfg = EngineConfig::new(2, 5, Budget::Wall(Duration::from_secs_f64(gt_secs)))
+    let gt = Session::new(&model)
+        .kernel(&kernel)
+        .chains(2)
+        .seed(5)
+        .budget(Budget::Wall(Duration::from_secs_f64(gt_secs)))
         .burn_in(50)
-        .thin(2);
-    let gt = run_engine_cached(&model, &kernel, &MhMode::Exact, map.clone(), &gt_cfg, |_c| {
-        PredObs { f: &predict, pm: PredictiveMean::new(test.n()) }
-    });
-    let mut pm = PredictiveMean::new(test.n());
-    for obs in &gt.observers {
-        pm.merge(&obs.pm);
-    }
-    let truth = pm.mean();
+        .thin(2)
+        .record_with(|_c| VecMean::new(test.n(), &predict))
+        .init(map.clone())
+        .run();
+    let truth = VecMean::merged(&gt.observers).mean();
 
     let cfg = RiskConfig {
         eps_values: vec![0.0, 0.01, 0.05, 0.1, 0.2],
@@ -119,13 +103,17 @@ pub fn run_fig3(scale: Scale) -> Vec<(f64, f64)> {
 
     // ground truth E[amari] from parallel exact chains
     let gt_secs = scale.secs(120.0);
-    let gt_cfg =
-        EngineConfig::new(2, 6, Budget::Wall(Duration::from_secs_f64(gt_secs))).burn_in(20);
-    let gt = run_engine(&model, &kernel, &MhMode::Exact, init.clone(), &gt_cfg, |_c| {
-        let w0c = w0.clone();
-        move |w: &Mat| amari_distance(w, &w0c)
-    });
-    let truth = vec![if gt.convergence.n_samples > 0 { gt.convergence.pooled_mean } else { 0.0 }];
+    let w0c = w0.clone();
+    let gt = Session::new(&model)
+        .kernel(&kernel)
+        .chains(2)
+        .seed(6)
+        .budget(Budget::Wall(Duration::from_secs_f64(gt_secs)))
+        .burn_in(20)
+        .record(ScalarFn::new(move |w: &Mat| amari_distance(w, &w0c)))
+        .init(init.clone())
+        .run();
+    let truth = vec![if gt.convergence.n_samples > 0 { gt.pooled_mean() } else { 0.0 }];
 
     let cfg = RiskConfig {
         eps_values: vec![0.0, 0.01, 0.05, 0.1, 0.2],
@@ -163,17 +151,17 @@ pub fn run_fig4(scale: Scale) -> Vec<(f64, f64)> {
     };
 
     let gt_secs = scale.secs(90.0);
-    let gt_cfg = EngineConfig::new(2, 10, Budget::Wall(Duration::from_secs_f64(gt_secs)))
+    let gt = Session::new(&model)
+        .kernel(&kernel)
+        .chains(2)
+        .seed(10)
+        .budget(Budget::Wall(Duration::from_secs_f64(gt_secs)))
         .burn_in(100)
-        .thin(2);
-    let gt = run_engine(&model, &kernel, &MhMode::Exact, init.clone(), &gt_cfg, |_c| {
-        PredObs { f: &predict, pm: PredictiveMean::new(n_test) }
-    });
-    let mut pm = PredictiveMean::new(n_test);
-    for obs in &gt.observers {
-        pm.merge(&obs.pm);
-    }
-    let truth = pm.mean();
+        .thin(2)
+        .record_with(|_c| VecMean::new(n_test, &predict))
+        .init(init.clone())
+        .run();
+    let truth = VecMean::merged(&gt.observers).mean();
 
     let cfg = RiskConfig {
         eps_values: vec![0.0, 0.01, 0.05, 0.1],

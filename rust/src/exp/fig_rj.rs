@@ -5,8 +5,9 @@
 //! k, so cross-chain R-hat / ESS come out of the same launch.
 
 use crate::coordinator::chain::Budget;
-use crate::coordinator::engine::{run_engine, ChainObserver, EngineConfig};
+use crate::coordinator::engine::ChainObserver;
 use crate::coordinator::mh::MhMode;
+use crate::coordinator::session::Session;
 use crate::data::synthetic::sparse_logistic;
 use crate::exp::common::{FigureSink, Scale};
 use crate::metrics::convergence::Convergence;
@@ -50,11 +51,16 @@ fn inclusion_probs(
     let d = model.d();
     let chains = 2usize;
     let per_chain = (steps / chains).max(1);
-    let cfg = EngineConfig::new(chains, seed, Budget::Steps(per_chain)).burn_in(per_chain / 5);
-    let res = run_engine(model, &kernel, mode, init, &cfg, |_c| InclObserver {
-        incl: vec![0; d],
-        count: 0,
-    });
+    let res = Session::new(model)
+        .kernel(&kernel)
+        .rule(mode.clone())
+        .chains(chains)
+        .seed(seed)
+        .budget(Budget::Steps(per_chain))
+        .burn_in(per_chain / 5)
+        .record_with(|_c| InclObserver { incl: vec![0; d], count: 0 })
+        .init(init)
+        .run();
     let mut incl = vec![0u64; d];
     let mut count = 0u64;
     for o in &res.observers {

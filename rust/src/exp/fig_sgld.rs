@@ -14,7 +14,8 @@
 
 use crate::coordinator::austerity::SeqTestConfig;
 use crate::coordinator::chain::Budget;
-use crate::coordinator::engine::{run_engine_kernel, EngineConfig, EngineResult};
+use crate::coordinator::record::Param;
+use crate::coordinator::session::{KernelSession, RunReport};
 use crate::data::synthetic::linreg_toy;
 use crate::exp::common::{FigureSink, Scale};
 use crate::models::LinRegModel;
@@ -38,7 +39,8 @@ pub struct Fig5Summary {
     pub ess_corrected: f64,
 }
 
-/// 2-chain engine launch of the SGLD kernel; observers record theta.
+/// 2-chain `KernelSession` launch of the SGLD kernel; the default
+/// recorder streams theta (the scalar chain state).
 fn run_sgld_engine(
     model: &LinRegModel,
     cfg: SgldConfig,
@@ -46,12 +48,17 @@ fn run_sgld_engine(
     steps: usize,
     burn_in: usize,
     seed: u64,
-) -> EngineResult<impl FnMut(&f64) -> f64> {
+) -> RunReport<Param> {
     let chains = 2usize;
     let kernel = SgldKernel { model, cfg };
-    let ecfg = EngineConfig::new(chains, seed, Budget::Steps((steps / chains).max(1)))
-        .burn_in(burn_in / chains);
-    run_engine_kernel(&kernel, init, &ecfg, |_c| |t: &f64| *t)
+    KernelSession::new(&kernel)
+        .label("sgld")
+        .chains(chains)
+        .seed(seed)
+        .budget(Budget::Steps((steps / chains).max(1)))
+        .burn_in(burn_in / chains)
+        .init(init)
+        .run()
 }
 
 pub fn run_fig5(scale: Scale) -> Fig5Summary {

@@ -4,18 +4,18 @@
 //!   austerity info                         runtime + artifact inventory
 //!   austerity fig <name|all> [--scale S]   regenerate paper figures
 //!   austerity design --n N --tol T         optimal sequential test design
-//!   austerity sample [--eps E] [--steps K] [--pjrt]
-//!                                          run a logistic RW-MH chain
+//!   austerity sample [--eps E] [--steps K] [--chains C] [--json] [--pjrt]
+//!                                          run logistic RW-MH chains on
+//!                                          the Session front-end
 
 use std::process::ExitCode;
 
 use austerity::coordinator::design::{worst_case_design, DesignGrid};
-use austerity::coordinator::{mh_step, MhMode, MhScratch};
+use austerity::coordinator::{Budget, MhMode, Session};
 use austerity::exp::{run_figure, Scale, ALL_FIGURES};
-use austerity::models::traits::ProposalKernel;
+use austerity::models::LlDiffModel;
 use austerity::runtime::{PjrtLogistic, PjrtRuntime};
 use austerity::samplers::GaussianRandomWalk;
-use austerity::stats::Pcg64;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -32,7 +32,8 @@ fn main() -> ExitCode {
                  fig <name|all> [--scale S]    regenerate figure CSVs (fig1..fig15, fig_accept)\n\
                  design --n N --tol T          worst-case sequential test design\n\
                  sample [--rule exact|austerity|barker|confidence]\n\
-                        [--eps E] [--sigma S] [--delta D] [--steps K] [--n N] [--pjrt]\n\
+                        [--eps E] [--sigma S] [--delta D] [--steps K] [--n N]\n\
+                        [--chains C] [--seed S] [--json] [--pjrt]\n\
                  \n\
                  figures: {}",
                 ALL_FIGURES.join(" ")
@@ -119,6 +120,47 @@ fn design(args: &[String]) -> ExitCode {
     }
 }
 
+/// Run a sample launch on the `Session` front-end and print either the
+/// human-readable summary or the machine-readable `RunReport` JSON.
+#[allow(clippy::too_many_arguments)]
+fn run_sample<M>(
+    model: &M,
+    kernel: &GaussianRandomWalk,
+    mode: &MhMode,
+    init: Vec<f64>,
+    steps: usize,
+    chains: usize,
+    seed: u64,
+    json: bool,
+) where
+    M: LlDiffModel<Param = Vec<f64>> + Sync,
+{
+    let report = Session::new(model)
+        .kernel(kernel)
+        .rule(mode.clone())
+        .chains(chains)
+        .seed(seed)
+        .budget(Budget::Steps(steps))
+        .init(init)
+        .run();
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        println!(
+            "rule={} chains={} steps={} accept={:.2} mean-data-fraction={:.4} \
+             steps/sec={:.1} data/sec={:.3e} rhat={:.3}",
+            report.rule,
+            report.chains,
+            report.merged.steps,
+            report.acceptance_rate(),
+            report.mean_data_fraction(),
+            report.steps_per_sec(),
+            report.data_per_sec(),
+            report.rhat(),
+        );
+    }
+}
+
 fn sample(args: &[String]) -> ExitCode {
     let eps: f64 = flag_value(args, "--eps").and_then(|s| s.parse().ok()).unwrap_or(0.05);
     let sigma: f64 =
@@ -129,8 +171,12 @@ fn sample(args: &[String]) -> ExitCode {
         flag_value(args, "--steps").and_then(|s| s.parse().ok()).unwrap_or(200);
     let n: usize =
         flag_value(args, "--n").and_then(|s| s.parse().ok()).unwrap_or(12_214);
+    let chains: usize =
+        flag_value(args, "--chains").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
+    let seed: u64 = flag_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(1);
     let rule = flag_value(args, "--rule").unwrap_or_else(|| "austerity".into());
     let use_pjrt = args.iter().any(|a| a == "--pjrt");
+    let json = args.iter().any(|a| a == "--json");
 
     let model = austerity::exp::population::mnist_like_model(n, 42);
     let kernel = GaussianRandomWalk::new(0.01, model.prior_precision);
@@ -160,28 +206,6 @@ fn sample(args: &[String]) -> ExitCode {
     };
     let init = model.map_estimate(60);
 
-    // generic over backend via a per-step closure
-    let run = |step: &mut dyn FnMut(&mut Vec<f64>, &mut MhScratch, &mut Pcg64) -> (bool, usize)| {
-        let mut cur = init.clone();
-        let mut scratch = MhScratch::new(n);
-        let mut rng = Pcg64::seeded(1);
-        let mut accepted = 0usize;
-        let mut used = 0u64;
-        let t0 = std::time::Instant::now();
-        for _ in 0..steps {
-            let (acc, nu) = step(&mut cur, &mut scratch, &mut rng);
-            accepted += acc as usize;
-            used += nu as u64;
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        println!(
-            "steps={steps} accept={:.2} mean-data-fraction={:.4} steps/sec={:.1}",
-            accepted as f64 / steps as f64,
-            used as f64 / (steps as f64 * n as f64),
-            steps as f64 / dt
-        );
-    };
-
     if use_pjrt {
         let rt = match PjrtRuntime::new(&PjrtRuntime::default_dir()) {
             Ok(rt) => rt,
@@ -197,19 +221,15 @@ fn sample(args: &[String]) -> ExitCode {
                 return ExitCode::FAILURE;
             }
         };
-        println!("backend: pjrt (AOT Pallas kernel), N={n}, rule={rule}");
-        run(&mut |cur, scratch, rng| {
-            let prop = kernel.propose(cur, rng);
-            let info = mh_step(&pjrt, cur, prop, &mode, scratch, rng);
-            (info.accepted, info.n_used)
-        });
+        if !json {
+            println!("backend: pjrt (AOT Pallas kernel), N={n}, rule={rule}");
+        }
+        run_sample(&pjrt, &kernel, &mode, init, steps, chains, seed, json);
     } else {
-        println!("backend: native, N={n}, rule={rule}");
-        run(&mut |cur, scratch, rng| {
-            let prop = kernel.propose(cur, rng);
-            let info = mh_step(&model, cur, prop, &mode, scratch, rng);
-            (info.accepted, info.n_used)
-        });
+        if !json {
+            println!("backend: native, N={n}, rule={rule}");
+        }
+        run_sample(&model, &kernel, &mode, init, steps, chains, seed, json);
     }
     ExitCode::SUCCESS
 }

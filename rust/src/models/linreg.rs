@@ -288,6 +288,10 @@ impl LlDiffModel for LinRegModel {
         }
         (s, s2)
     }
+
+    // Session dispatch: residuals are cached across steps, so launches
+    // ride the cached fast path.
+    crate::models::traits::cached_session_dispatch!();
 }
 
 /// Per-chain cache of the squared residuals `(y_i - theta_cur x_i)^2`

@@ -418,6 +418,10 @@ impl LlDiffModel for LogisticModel {
         }
         (s, s2)
     }
+
+    // Session dispatch: this model keeps per-datapoint activations
+    // alive across steps, so launches ride the cached fast path.
+    crate::models::traits::cached_session_dispatch!();
 }
 
 impl CachedLlDiff for LogisticModel {

@@ -324,6 +324,42 @@ pub trait LlDiffModel {
         let mean = s / n;
         ((s2 / n - mean * mean).max(0.0)).sqrt()
     }
+
+    /// Engine-dispatch hook of the `Session` front-end
+    /// (`coordinator::session`): launch K MH chains of this model. The
+    /// default drives the uncached `MhKernel`; models with a
+    /// per-datapoint likelihood cache ([`CachedLlDiff`]) override it to
+    /// route the identical launch through `CachedMhKernel` — decisions
+    /// are bit-identical by the cache contract, so the override is a
+    /// pure speedup. The hook lives on the model because that is where
+    /// the capability is known; callers go through `Session`, never
+    /// call this directly.
+    #[doc(hidden)]
+    fn session_launch<K, T, OF, O>(
+        &self,
+        proposal: &K,
+        rule: &T,
+        init: Self::Param,
+        cfg: &crate::coordinator::engine::EngineConfig,
+        make_observer: OF,
+    ) -> crate::coordinator::engine::EngineResult<O>
+    where
+        Self: Sized + Sync,
+        K: ProposalKernel<Self::Param> + Sync,
+        T: crate::coordinator::accept::AcceptanceTest + Sync,
+        OF: Fn(usize) -> O + Sync,
+        O: crate::coordinator::engine::ChainObserver<Self::Param>,
+    {
+        crate::coordinator::engine::run_engine(self, proposal, rule, init, cfg, make_observer)
+    }
+
+    /// Which engine path `session_launch` takes: `"uncached"` unless the
+    /// model overrides the hook (cached models report `"cached"` via
+    /// `cached_session_dispatch!`; the PJRT backend reports `"pjrt"`).
+    #[doc(hidden)]
+    fn session_backend(&self) -> &'static str {
+        "uncached"
+    }
 }
 
 /// State-caching fast path: models that can keep per-datapoint sufficient
@@ -385,6 +421,45 @@ pub trait CachedLlDiff: LlDiffModel {
     /// do nothing.
     fn end_step(&self, cache: &mut Self::Cache, prop: &Self::Param, accepted: bool);
 }
+
+/// Expands to the cached-fast-path `session_launch` / `session_backend`
+/// overrides inside an `impl LlDiffModel for $model` block, so every
+/// `CachedLlDiff` model opts into the `Session` cached dispatch with one
+/// line instead of a copied method body (decisions stay bit-identical to
+/// the uncached path by the cache contract).
+macro_rules! cached_session_dispatch {
+    () => {
+        fn session_launch<K, T, OF, O>(
+            &self,
+            proposal: &K,
+            rule: &T,
+            init: Self::Param,
+            cfg: &crate::coordinator::engine::EngineConfig,
+            make_observer: OF,
+        ) -> crate::coordinator::engine::EngineResult<O>
+        where
+            Self: Sized + Sync,
+            K: crate::models::traits::ProposalKernel<Self::Param> + Sync,
+            T: crate::coordinator::accept::AcceptanceTest + Sync,
+            OF: Fn(usize) -> O + Sync,
+            O: crate::coordinator::engine::ChainObserver<Self::Param>,
+        {
+            crate::coordinator::engine::run_engine_cached(
+                self,
+                proposal,
+                rule,
+                init,
+                cfg,
+                make_observer,
+            )
+        }
+
+        fn session_backend(&self) -> &'static str {
+            "cached"
+        }
+    };
+}
+pub(crate) use cached_session_dispatch;
 
 /// A proposed move plus the proposal/prior correction that enters mu_0:
 /// `log_correction = log[ rho(cur) q(prop|cur) / (rho(prop) q(cur|prop)) ]`

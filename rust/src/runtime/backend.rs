@@ -156,6 +156,12 @@ impl LlDiffModel for PjrtLogistic<'_> {
         let idx: Vec<u32> = (start as u32..end as u32).collect();
         self.lldiff_moments(&idx, cur, prop)
     }
+
+    fn session_backend(&self) -> &'static str {
+        // uncached engine path, but the likelihood is served by the AOT
+        // Pallas kernel — label reports (and `sample --json`) accordingly
+        "pjrt"
+    }
 }
 
 /// ICA population served by the PJRT runtime (`ica_lldiff` artifact).

@@ -105,6 +105,12 @@ impl LlDiffModel for PjrtLogistic<'_> {
     ) -> (f64, f64) {
         self.model.lldiff_range_moments(start, end, cur, prop)
     }
+
+    fn session_backend(&self) -> &'static str {
+        // mirror the real backend's label (the stub is never
+        // constructible, but the API must match)
+        "pjrt"
+    }
 }
 
 /// Stub ICA backend; delegates to the native model.

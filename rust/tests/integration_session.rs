@@ -1,0 +1,260 @@
+//! Same-seed bit-identity oracle for the `Session` front-end.
+//!
+//! The API redesign demoted the five legacy launch entry points
+//! (`run_engine`, `run_engine_cached`, `run_engine_kernel`, `run_chain`,
+//! `run_chain_cached`) to internal shims behind `Session` /
+//! `KernelSession`. These tests are the reason they still exist: every
+//! front-end launch must replay the corresponding legacy path **bit for
+//! bit** under the same seed — exact, austerity and confidence rules
+//! (plus Barker on the engine path), cached and uncached, multi-chain
+//! and single-chain.
+
+use austerity::coordinator::engine::{
+    run_engine, run_engine_cached, run_engine_kernel, EngineConfig, STREAM_BASE,
+};
+use austerity::coordinator::{
+    run_chain, run_chain_cached, AcceptanceTest, Budget, ChainRun, KernelSession, MhMode, Param,
+    Sample, Session, Thinned,
+};
+use austerity::data::synthetic::{linreg_toy, two_class_gaussian};
+use austerity::models::traits::Proposal;
+use austerity::models::{LinRegModel, LlDiffModel, LogisticModel};
+use austerity::samplers::sgld::{SgldConfig, SgldKernel};
+use austerity::samplers::GaussianRandomWalk;
+use austerity::stats::Pcg64;
+use austerity::testkit::models::ConjugateGaussian;
+
+fn bits(samples: &[Sample]) -> Vec<u64> {
+    samples.iter().map(|s| s.value.to_bits()).collect()
+}
+
+/// Chain-by-chain equality of draws (bitwise) and counters.
+fn assert_runs_identical(a: &[ChainRun], b: &[ChainRun], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: chain count");
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.chain, rb.chain, "{label}");
+        assert_eq!(ra.stats.steps, rb.stats.steps, "{label} chain {}", ra.chain);
+        assert_eq!(ra.stats.accepted, rb.stats.accepted, "{label} chain {}", ra.chain);
+        assert_eq!(ra.stats.data_used, rb.stats.data_used, "{label} chain {}", ra.chain);
+        assert_eq!(bits(&ra.samples), bits(&rb.samples), "{label} chain {}", ra.chain);
+    }
+}
+
+fn mh_modes(batch: usize) -> Vec<MhMode> {
+    vec![
+        MhMode::Exact,
+        MhMode::approx(0.05, batch),
+        MhMode::confidence(0.05, batch),
+        MhMode::barker(1.0, batch),
+    ]
+}
+
+#[test]
+fn session_replays_cached_engine_bitwise_for_every_rule() {
+    let model = LogisticModel::new(two_class_gaussian(1_200, 5, 1.2, 0), 10.0);
+    let init = model.map_estimate(40);
+    let kernel = GaussianRandomWalk::new(0.02, 10.0);
+    for mode in mh_modes(100) {
+        let cfg = EngineConfig::new(3, 42, Budget::Steps(120)).burn_in(10).thin(2);
+        let legacy =
+            run_engine_cached(&model, &kernel, &mode, init.clone(), &cfg, |_c| {
+                |t: &Vec<f64>| t[0]
+            });
+        let report = Session::new(&model)
+            .kernel(&kernel)
+            .rule(mode.clone())
+            .chains(3)
+            .seed(42)
+            .budget(Budget::Steps(120))
+            .burn_in(10)
+            .thin(2)
+            .record(Param::index(0))
+            .init(init.clone())
+            .run();
+        assert_eq!(report.backend, "cached", "logistic model rides the cached path");
+        assert_runs_identical(&report.runs, &legacy.runs, &format!("cached {mode:?}"));
+
+        // cross-path oracle: the uncached legacy launch makes the same
+        // decisions (the CachedLlDiff contract), so the Session output
+        // is pinned against both engines at once.
+        let uncached =
+            run_engine(&model, &kernel, &mode, init.clone(), &cfg, |_c| |t: &Vec<f64>| t[0]);
+        assert_runs_identical(&report.runs, &uncached.runs, &format!("uncached {mode:?}"));
+    }
+}
+
+#[test]
+fn session_replays_uncached_engine_for_conjugate_gaussian() {
+    let model = ConjugateGaussian::synthetic(900, 0.3, 1.0, 0.0, 2.0, 7);
+    let proposal = model.rw_proposal(0.4);
+    for mode in mh_modes(64) {
+        let cfg = EngineConfig::new(2, 11, Budget::Steps(150)).burn_in(20);
+        let legacy = run_engine(&model, &proposal, &mode, 0.0f64, &cfg, |_c| |p: &f64| *p);
+        let report = Session::new(&model)
+            .kernel(&proposal)
+            .rule(mode.clone())
+            .chains(2)
+            .seed(11)
+            .budget(Budget::Steps(150))
+            .burn_in(20)
+            .init(0.0)
+            .run();
+        assert_eq!(report.backend, "uncached");
+        assert_eq!(report.rule, mode.name());
+        assert_runs_identical(&report.runs, &legacy.runs, &format!("{mode:?}"));
+    }
+}
+
+#[test]
+fn single_chain_session_replays_run_chain_and_cached_variant() {
+    let model = LinRegModel::new(linreg_toy(2_000, 0), 3.0, 4950.0);
+    let kernel = |cur: &f64, rng: &mut Pcg64| Proposal {
+        param: cur + rng.normal_scaled(0.0, 0.005),
+        log_correction: 0.0,
+    };
+    for mode in [MhMode::Exact, MhMode::approx(0.05, 200), MhMode::confidence(0.05, 200)] {
+        let run_legacy = |cached: bool| {
+            // chain 0 of a seed-5 launch steps on stream STREAM_BASE
+            let mut rng = Pcg64::new(5, STREAM_BASE);
+            if cached {
+                run_chain_cached(
+                    &model,
+                    &kernel,
+                    &mode,
+                    0.45f64,
+                    Budget::Steps(100),
+                    5,
+                    3,
+                    |&p| p,
+                    &mut rng,
+                )
+            } else {
+                run_chain(
+                    &model,
+                    &kernel,
+                    &mode,
+                    0.45f64,
+                    Budget::Steps(100),
+                    5,
+                    3,
+                    |&p| p,
+                    &mut rng,
+                )
+            }
+        };
+        let (samples_cached, stats_cached) = run_legacy(true);
+        let (samples_uncached, stats_uncached) = run_legacy(false);
+        let report = Session::new(&model)
+            .kernel(&kernel)
+            .rule(mode.clone())
+            .chains(1)
+            .seed(5)
+            .budget(Budget::Steps(100))
+            .burn_in(5)
+            .thin(3)
+            .init(0.45)
+            .run();
+        assert_eq!(report.backend, "cached", "linreg model rides the cached path");
+        assert_eq!(report.runs.len(), 1);
+        assert_eq!(report.merged.steps, stats_cached.steps);
+        assert_eq!(report.merged.accepted, stats_cached.accepted);
+        assert_eq!(report.merged.data_used, stats_cached.data_used);
+        assert_eq!(bits(&report.runs[0].samples), bits(&samples_cached), "{mode:?}");
+        // and the uncached single-chain path agrees bit for bit too
+        assert_eq!(bits(&samples_cached), bits(&samples_uncached), "{mode:?}");
+        assert_eq!(stats_cached.accepted, stats_uncached.accepted);
+    }
+}
+
+#[test]
+fn kernel_session_replays_run_engine_kernel() {
+    let model = LinRegModel::new(linreg_toy(2_000, 0), 3.0, 4950.0);
+    let kernel = SgldKernel {
+        model: &model,
+        cfg: SgldConfig { alpha: 5e-6, grad_batch: 50, correction: None },
+    };
+    let cfg = EngineConfig::new(2, 9, Budget::Steps(300)).burn_in(30);
+    let legacy = run_engine_kernel(&kernel, 0.45f64, &cfg, |_c| |t: &f64| *t);
+    let report = KernelSession::new(&kernel)
+        .label("sgld")
+        .data_size(model.n())
+        .chains(2)
+        .seed(9)
+        .budget(Budget::Steps(300))
+        .burn_in(30)
+        .init(0.45)
+        .run();
+    assert_eq!(report.backend, "kernel");
+    assert_eq!(report.rule, "sgld");
+    assert_runs_identical(&report.runs, &legacy.runs, "sgld");
+    let frac_gap = report.mean_data_fraction() - legacy.merged.mean_data_fraction(model.n());
+    assert!(frac_gap.abs() < 1e-15, "frac gap {frac_gap}");
+}
+
+#[test]
+fn data_budget_runs_surface_consumption_in_report_and_json() {
+    let model = LogisticModel::new(two_class_gaussian(1_000, 5, 1.2, 0), 10.0);
+    let init = model.map_estimate(40);
+    let kernel = GaussianRandomWalk::new(0.02, 10.0);
+    let budget = 40 * model.n() as u64; // 40 full-scan equivalents per chain
+    let report = Session::new(&model)
+        .kernel(&kernel)
+        .rule(MhMode::approx(0.05, 100))
+        .chains(2)
+        .seed(13)
+        .budget(Budget::Data(budget))
+        .init(init)
+        .run();
+    // the budget axis is datapoint evaluations: consumed amount is
+    // reported and the consumed fraction covers the target (the step
+    // crossing the budget completes, so slightly over 1 is fine)
+    assert!(report.merged.data_used >= 2 * budget);
+    let consumed = report.budget_consumed();
+    assert!(consumed >= 1.0 && consumed < 1.5, "consumed {consumed}");
+    assert!(report.data_per_sec() > 0.0);
+    let frac = report.mean_data_fraction();
+    assert!(frac > 0.0 && frac <= 1.0, "frac {frac}");
+    let json = report.to_json();
+    for key in [
+        "\"budget\":{\"kind\":\"data\"",
+        "\"consumed_fraction\":",
+        "\"data_used\":",
+        "\"data_per_sec\":",
+        "\"rule\":\"austerity\"",
+        "\"backend\":\"cached\"",
+    ] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+}
+
+#[test]
+fn record_library_matches_scalar_stream() {
+    let model = ConjugateGaussian::synthetic(600, -0.2, 1.0, 0.0, 2.0, 3);
+    let proposal = model.rw_proposal(0.4);
+    let session = || {
+        Session::new(&model)
+            .kernel(&proposal)
+            .chains(2)
+            .seed(21)
+            .budget(Budget::Steps(90))
+            .burn_in(10)
+    };
+    // Param::all keeps one full vector per retained draw, whose first
+    // component is exactly the recorded scalar stream
+    let full = session().record(Param::all()).init(0.1).run();
+    for (run, obs) in full.runs.iter().zip(&full.observers) {
+        assert_eq!(obs.draws().len(), run.samples.len());
+        for (draw, sample) in obs.draws().iter().zip(&run.samples) {
+            assert_eq!(draw.len(), 1);
+            assert_eq!(draw[0].to_bits(), sample.value.to_bits());
+        }
+    }
+    // the default recorder is Param::index(0): same draws, same bits
+    let default_run = session().init(0.1).run();
+    assert_runs_identical(&default_run.runs, &full.runs, "default vs Param::all");
+    // Thinned keeps every 2nd retained draw in the inner observer
+    let thinned = session().record(Thinned::new(Param::all(), 2)).init(0.1).run();
+    for (run, obs) in thinned.runs.iter().zip(&thinned.observers) {
+        assert_eq!(obs.inner().draws().len(), run.samples.len().div_ceil(2));
+    }
+}
