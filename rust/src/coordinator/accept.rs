@@ -99,6 +99,9 @@ pub struct AcceptOutcome {
     /// Rule-specific final statistic (t for austerity, `Delta_hat` for
     /// barker, `mean - mu0` for exact/confidence).
     pub stat: f64,
+    /// Stages whose moments tripped a numerical guard (always 0 from the
+    /// bare rules; `coordinator::guard::Guarded` fills it in).
+    pub guard_trips: u32,
 }
 
 impl AcceptOutcome {
@@ -111,6 +114,7 @@ impl AcceptOutcome {
             stages: 0,
             mean: f64::NAN,
             stat: f64::NEG_INFINITY,
+            guard_trips: 0,
         }
     }
 }
@@ -174,7 +178,7 @@ impl AcceptanceTest for ExactTest {
         let mean = s / n;
         let accept = mean > mu0;
         trace.push(StageTrace { n_used: n_total, stat: mean - mu0, threshold: 0.0 });
-        AcceptOutcome { accept, n_used: n_total, stages: 1, mean, stat: mean - mu0 }
+        AcceptOutcome { accept, n_used: n_total, stages: 1, mean, stat: mean - mu0, guard_trips: 0 }
     }
 }
 
@@ -224,6 +228,7 @@ impl AcceptanceTest for AusterityTest {
             stages: out.stages,
             mean: out.mean,
             stat: out.t_stat,
+            guard_trips: 0,
         }
     }
 }
@@ -312,6 +317,7 @@ impl AcceptanceTest for BarkerTest {
                     stages,
                     mean: acc.mean(),
                     stat: delta_hat,
+                    guard_trips: 0,
                 };
             }
         }
@@ -417,6 +423,7 @@ impl AcceptanceTest for ConfidenceTest {
                     stages,
                     mean,
                     stat: mean - mu0,
+                    guard_trips: 0,
                 };
             }
             let sigma_hat = acc.sample_std();
@@ -434,6 +441,7 @@ impl AcceptanceTest for ConfidenceTest {
                     stages,
                     mean,
                     stat: mean - mu0,
+                    guard_trips: 0,
                 };
             }
             want = (want as f64 * self.cfg.grow).ceil() as usize;

@@ -17,7 +17,8 @@
 //! epsilons against the schedule on the logistic risk curve.
 
 use crate::coordinator::chain::{drive_chain, Budget, ChainStats, Sample};
-use crate::coordinator::kernel::{StepOutcome, TransitionKernel};
+use crate::coordinator::checkpoint::{BinReader, BinWriter, CkptError, Persist};
+use crate::coordinator::kernel::{restore_sched, StepOutcome, TransitionKernel};
 use crate::coordinator::mh::{mh_step, MhMode, MhScratch};
 use crate::models::traits::{LlDiffModel, ProposalKernel};
 use crate::stats::Pcg64;
@@ -95,7 +96,28 @@ where
         scratch.step += 1;
         let proposal = self.proposal.propose(state, rng);
         let info = mh_step(self.model, state, proposal, &mode, &mut scratch.mh, rng);
-        StepOutcome { accepted: info.accepted, data_used: info.n_used as u64 }
+        StepOutcome {
+            accepted: info.accepted,
+            data_used: info.n_used as u64,
+            guard_trips: info.guard_trips,
+        }
+    }
+
+    // The annealing step counter drives the epsilon schedule, so a
+    // resumed chain must pick the schedule up exactly where it stopped.
+    fn save_scratch(&self, scratch: &AdaptiveScratch, w: &mut BinWriter) {
+        scratch.mh.sched.persist(w);
+        w.put_usize(scratch.step);
+    }
+
+    fn restore_scratch(
+        &self,
+        scratch: &mut AdaptiveScratch,
+        r: &mut BinReader<'_>,
+    ) -> Result<(), CkptError> {
+        restore_sched(&mut scratch.mh.sched, self.model.n(), r)?;
+        scratch.step = r.usize_()?;
+        Ok(())
     }
 }
 

@@ -3,12 +3,42 @@
 //! acceptance and data-use statistics — the harness every experiment in
 //! §6 (and supp. E/F) runs on.
 
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::accept::AcceptanceTest;
+use crate::coordinator::checkpoint::{
+    BinReader, BinWriter, ChainCheckpoint, CheckpointSpec, Persist,
+};
 use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
 use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
 use crate::stats::Pcg64;
+
+thread_local! {
+    static CHAIN_CTX: Cell<(usize, usize)> = const { Cell::new((usize::MAX, usize::MAX)) };
+}
+
+/// The `(chain, step)` coordinate the current thread's chain driver is
+/// executing, or `(usize::MAX, usize::MAX)` outside a driver loop. Steps
+/// are 0-based (step `s` is the `s+1`-th transition); the engine sets the
+/// chain id per task, the drivers update the step every iteration.
+/// `testkit::FaultyModel` reads this to place scripted faults; a
+/// standalone `drive_chain` (no engine) reports chain `usize::MAX`.
+pub fn current_chain_step() -> (usize, usize) {
+    CHAIN_CTX.with(|c| c.get())
+}
+
+pub(crate) fn set_current_chain(chain: usize) {
+    CHAIN_CTX.with(|c| c.set((chain, usize::MAX)));
+}
+
+fn set_current_step(step: usize) {
+    CHAIN_CTX.with(|c| {
+        let (chain, _) = c.get();
+        c.set((chain, step));
+    });
+}
 
 /// Summary statistics of one chain run.
 #[derive(Clone, Debug, Default)]
@@ -18,6 +48,9 @@ pub struct ChainStats {
     /// Total datapoint likelihood (or potential-pair) evaluations
     /// consumed by the kernel's decisions.
     pub data_used: u64,
+    /// Steps whose decision tripped a numerical guard (non-finite
+    /// log-likelihood moments; see `coordinator::guard`).
+    pub guard_trips: u64,
     pub wall: Duration,
 }
 
@@ -97,7 +130,7 @@ pub fn drive_chain_par<T, F>(
     budget: Budget,
     burn_in: usize,
     thin: usize,
-    mut f: F,
+    f: F,
     rng: &mut Pcg64,
     intra_threads: usize,
 ) -> (Vec<Sample>, ChainStats)
@@ -105,13 +138,71 @@ where
     T: TransitionKernel,
     F: FnMut(&T::State) -> f64,
 {
-    assert!(thin >= 1);
     let mut scratch = kernel.scratch_par(&init, intra_threads.max(1));
     let mut cur = init;
     let mut stats = ChainStats::default();
     let mut samples = Vec::new();
-    let start = Instant::now();
+    drive_loop(
+        kernel,
+        &mut cur,
+        &mut scratch,
+        &mut stats,
+        &mut samples,
+        budget,
+        burn_in,
+        thin,
+        f,
+        rng,
+        Duration::ZERO,
+        None,
+        |_, _, _, _, _, _| {},
+    );
+    (samples, stats)
+}
 
+/// Engine-side options of the resumable chain driver
+/// (`drive_chain_ckpt`): the plain budget knobs plus checkpoint writing,
+/// a checkpoint to resume from, and a progress slot for panic forensics.
+pub(crate) struct DriveCfg<'a> {
+    pub budget: Budget,
+    pub burn_in: usize,
+    pub thin: usize,
+    pub intra_threads: usize,
+    /// `(spec, chain id, base seed)` when checkpoint writing is on.
+    pub checkpoint: Option<(&'a CheckpointSpec, usize, u64)>,
+    /// A previously captured checkpoint to continue from.
+    pub resume: Option<ChainCheckpoint>,
+    /// Published before every step: the 0-based index of the step being
+    /// executed, read by the engine when the chain dies mid-step.
+    pub progress: Option<&'a AtomicU64>,
+}
+
+/// The chain loop every driver shares: budget check, step, stat
+/// accumulation, burn-in/thinned recording, then the `after_step` hook
+/// (a no-op for the plain drivers, the checkpoint writer for the
+/// resumable one). `prior` offsets the clock for resumed chains.
+#[allow(clippy::too_many_arguments)]
+fn drive_loop<T, F, C>(
+    kernel: &T,
+    cur: &mut T::State,
+    scratch: &mut T::Scratch,
+    stats: &mut ChainStats,
+    samples: &mut Vec<Sample>,
+    budget: Budget,
+    burn_in: usize,
+    thin: usize,
+    mut f: F,
+    rng: &mut Pcg64,
+    prior: Duration,
+    progress: Option<&AtomicU64>,
+    mut after_step: C,
+) where
+    T: TransitionKernel,
+    F: FnMut(&T::State) -> f64,
+    C: FnMut(&T::State, &T::Scratch, &Pcg64, &ChainStats, &[Sample], Duration),
+{
+    assert!(thin >= 1);
+    let start = Instant::now();
     loop {
         match budget {
             Budget::Steps(s) => {
@@ -120,7 +211,7 @@ where
                 }
             }
             Budget::Wall(d) => {
-                if start.elapsed() >= d {
+                if prior + start.elapsed() >= d {
                     break;
                 }
             }
@@ -130,19 +221,117 @@ where
                 }
             }
         }
-        let outcome = kernel.step(&mut cur, &mut scratch, rng);
+        if let Some(p) = progress {
+            p.store(stats.steps as u64, Ordering::Relaxed);
+        }
+        set_current_step(stats.steps);
+        let outcome = kernel.step(cur, scratch, rng);
         stats.steps += 1;
         stats.accepted += outcome.accepted as usize;
         stats.data_used += outcome.data_used;
+        stats.guard_trips += outcome.guard_trips as u64;
         if stats.steps > burn_in && (stats.steps - burn_in) % thin == 0 {
             samples.push(Sample {
-                value: f(&cur),
-                at_secs: start.elapsed().as_secs_f64(),
+                value: f(cur),
+                at_secs: (prior + start.elapsed()).as_secs_f64(),
                 at_data: stats.data_used,
             });
         }
+        after_step(cur, scratch, rng, stats, samples, prior + start.elapsed());
     }
-    stats.wall = start.elapsed();
+    stats.wall = prior + start.elapsed();
+}
+
+/// `drive_chain_par` with checkpoint/resume: restores state, stats,
+/// samples, RNG position and cross-step scratch from `cfg.resume`, then
+/// continues the loop, writing an atomic [`ChainCheckpoint`] every
+/// `spec.every` completed steps. A resumed chain replays the uninterrupted
+/// run bit for bit (draw values, acceptance counters, data accounting);
+/// wall-clock fields are offset by the checkpoint's elapsed time but are
+/// inherently timing-dependent. Corrupt or mismatched payloads panic,
+/// which the engine's per-chain isolation reports as a failed chain.
+pub(crate) fn drive_chain_ckpt<T, F>(
+    kernel: &T,
+    init: T::State,
+    cfg: DriveCfg<'_>,
+    f: F,
+    rng: &mut Pcg64,
+) -> (Vec<Sample>, ChainStats)
+where
+    T: TransitionKernel,
+    T::State: Persist,
+    F: FnMut(&T::State) -> f64,
+{
+    let DriveCfg { budget, burn_in, thin, intra_threads, checkpoint, resume, progress } = cfg;
+    let (mut cur, mut stats, mut samples, prior, scratch_bytes) = match resume {
+        Some(ck) => {
+            let mut r = BinReader::new(&ck.state);
+            let cur = T::State::restore(&mut r)
+                .and_then(|s| r.finish().map(|_| s))
+                .unwrap_or_else(|e| panic!("corrupt checkpoint state: {e}"));
+            let stats = ChainStats {
+                steps: ck.steps,
+                accepted: ck.accepted,
+                data_used: ck.data_used,
+                guard_trips: ck.guard_trips,
+                wall: Duration::from_secs_f64(ck.wall_secs),
+            };
+            *rng = Pcg64::from_parts(ck.rng);
+            (cur, stats, ck.samples, Duration::from_secs_f64(ck.wall_secs), Some(ck.scratch))
+        }
+        None => (init, ChainStats::default(), Vec::new(), Duration::ZERO, None),
+    };
+    // scratch is rebuilt from the (restored) state — this is what
+    // regenerates the cached path's likelihood cache — then the
+    // cross-step pieces (scheduler permutations, counters) are restored
+    let mut scratch = kernel.scratch_par(&cur, intra_threads.max(1));
+    if let Some(bytes) = scratch_bytes {
+        let mut r = BinReader::new(&bytes);
+        kernel
+            .restore_scratch(&mut scratch, &mut r)
+            .and_then(|_| r.finish())
+            .unwrap_or_else(|e| panic!("corrupt checkpoint scratch: {e}"));
+    }
+    drive_loop(
+        kernel,
+        &mut cur,
+        &mut scratch,
+        &mut stats,
+        &mut samples,
+        budget,
+        burn_in,
+        thin,
+        f,
+        rng,
+        prior,
+        progress,
+        |state, scratch, rng, stats, samples, elapsed| {
+            if let Some((spec, chain, base_seed)) = checkpoint {
+                if spec.every > 0 && stats.steps % spec.every == 0 {
+                    let mut sw = BinWriter::new();
+                    state.persist(&mut sw);
+                    let mut kw = BinWriter::new();
+                    kernel.save_scratch(scratch, &mut kw);
+                    let ck = ChainCheckpoint {
+                        chain,
+                        base_seed,
+                        steps: stats.steps,
+                        accepted: stats.accepted,
+                        data_used: stats.data_used,
+                        guard_trips: stats.guard_trips,
+                        wall_secs: elapsed.as_secs_f64(),
+                        rng: rng.state_parts(),
+                        samples: samples.to_vec(),
+                        state: sw.into_bytes(),
+                        scratch: kw.into_bytes(),
+                    };
+                    ck.write_atomic(&spec.dir).unwrap_or_else(|e| {
+                        panic!("chain {chain}: checkpoint write failed: {e}")
+                    });
+                }
+            }
+        },
+    );
     (samples, stats)
 }
 

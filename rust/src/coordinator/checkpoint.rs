@@ -1,0 +1,596 @@
+//! Chain checkpoint/resume: versioned snapshots with bit-identical replay.
+//!
+//! A [`ChainCheckpoint`] captures everything a chain needs to continue as
+//! if it had never stopped: the kernel `State`, the PCG64 stream position,
+//! the kernel's cross-step scratch (minibatch-scheduler permutations,
+//! annealing counters — serialized through
+//! `TransitionKernel::save_scratch`), the budget consumed so far and the
+//! samples recorded so far. Everything except wall-clock time is exact,
+//! so a resumed chain produces draws, acceptance counters and data
+//! accounting bit-identical to an uninterrupted same-seed run (`Wall`
+//! budgets terminate at a timing-dependent step and are therefore the one
+//! budget kind without a bit-identity guarantee).
+//!
+//! **Format.** One file per chain, `chain-<c>.ckpt`, in a compact
+//! little-endian binary framing ([`BinWriter`]/[`BinReader`]) headed by a
+//! magic word and a format version; unknown versions are rejected, never
+//! reinterpreted. Files are written atomically (temp file + rename) so a
+//! crash mid-write leaves the previous checkpoint intact. A human-readable
+//! `manifest.json` (hand-rolled writer, same dialect as
+//! `RunReport::to_json`) records the launch configuration for
+//! observability; resume reads only the binary files, which are
+//! self-contained.
+//!
+//! The cached MH path deliberately does **not** serialize its per-datapoint
+//! cache: `CachedLlDiff::init_cache` rebuilds it from the restored state,
+//! and the cached-vs-uncached bit-identity contract makes the rebuilt
+//! cache equivalent to the persisted one at a fraction of the disk cost.
+
+use std::fmt;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::chain::{Budget, Sample};
+
+/// File magic of a chain checkpoint ("AUCK" little-endian).
+pub const CKPT_MAGIC: u32 = 0x4b43_5541;
+/// Current checkpoint format version.
+pub const CKPT_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// Errors
+
+/// Why a checkpoint could not be written or restored.
+#[derive(Debug)]
+pub enum CkptError {
+    Io(std::io::Error),
+    /// Truncated or malformed payload.
+    Corrupt(&'static str),
+    /// A checkpoint from an unknown format version.
+    Version { found: u32 },
+    /// A structurally valid checkpoint that does not match the run
+    /// (wrong chain id, seed, or model size).
+    Mismatch(String),
+}
+
+impl fmt::Display for CkptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CkptError::Io(e) => write!(f, "checkpoint I/O error: {e}"),
+            CkptError::Corrupt(what) => write!(f, "corrupt checkpoint: {what}"),
+            CkptError::Version { found } => {
+                write!(f, "unsupported checkpoint version {found} (expected {CKPT_VERSION})")
+            }
+            CkptError::Mismatch(what) => write!(f, "checkpoint mismatch: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CkptError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CkptError {
+    fn from(e: std::io::Error) -> Self {
+        CkptError::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary framing
+
+/// Little-endian binary encoder for checkpoint payloads.
+#[derive(Default)]
+pub struct BinWriter {
+    buf: Vec<u8>,
+}
+
+impl BinWriter {
+    pub fn new() -> Self {
+        BinWriter { buf: Vec::new() }
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Exact bit pattern — NaN payloads and signed zeros survive.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    /// Length-prefixed byte block (for nested payloads).
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Little-endian binary decoder; every read is bounds-checked.
+pub struct BinReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BinReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CkptError> {
+        let end = self.pos.checked_add(n).ok_or(CkptError::Corrupt("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(CkptError::Corrupt("truncated payload"));
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, CkptError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, CkptError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize_(&mut self) -> Result<usize, CkptError> {
+        usize::try_from(self.u64()?).map_err(|_| CkptError::Corrupt("usize overflow"))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, CkptError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn bool_(&mut self) -> Result<bool, CkptError> {
+        match self.take(1)?[0] {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(CkptError::Corrupt("invalid bool byte")),
+        }
+    }
+
+    /// Length-prefixed byte block.
+    pub fn bytes(&mut self) -> Result<&'a [u8], CkptError> {
+        let len = self.usize_()?;
+        self.take(len)
+    }
+
+    /// Assert the payload was consumed exactly.
+    pub fn finish(&self) -> Result<(), CkptError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(CkptError::Corrupt("trailing bytes"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persist
+
+/// Binary serialization of kernel states (and their building blocks) for
+/// checkpointing. Round-tripping must be exact: `restore(persist(x)) == x`
+/// down to float bit patterns, so a resumed chain replays bit-identically.
+pub trait Persist: Sized {
+    fn persist(&self, w: &mut BinWriter);
+    fn restore(r: &mut BinReader<'_>) -> Result<Self, CkptError>;
+}
+
+impl Persist for () {
+    fn persist(&self, _w: &mut BinWriter) {}
+    fn restore(_r: &mut BinReader<'_>) -> Result<Self, CkptError> {
+        Ok(())
+    }
+}
+
+impl Persist for bool {
+    fn persist(&self, w: &mut BinWriter) {
+        w.put_bool(*self);
+    }
+    fn restore(r: &mut BinReader<'_>) -> Result<Self, CkptError> {
+        r.bool_()
+    }
+}
+
+impl Persist for u32 {
+    fn persist(&self, w: &mut BinWriter) {
+        w.put_u32(*self);
+    }
+    fn restore(r: &mut BinReader<'_>) -> Result<Self, CkptError> {
+        r.u32()
+    }
+}
+
+impl Persist for u64 {
+    fn persist(&self, w: &mut BinWriter) {
+        w.put_u64(*self);
+    }
+    fn restore(r: &mut BinReader<'_>) -> Result<Self, CkptError> {
+        r.u64()
+    }
+}
+
+impl Persist for usize {
+    fn persist(&self, w: &mut BinWriter) {
+        w.put_usize(*self);
+    }
+    fn restore(r: &mut BinReader<'_>) -> Result<Self, CkptError> {
+        r.usize_()
+    }
+}
+
+impl Persist for f64 {
+    fn persist(&self, w: &mut BinWriter) {
+        w.put_f64(*self);
+    }
+    fn restore(r: &mut BinReader<'_>) -> Result<Self, CkptError> {
+        r.f64()
+    }
+}
+
+impl<T: Persist> Persist for Vec<T> {
+    fn persist(&self, w: &mut BinWriter) {
+        w.put_usize(self.len());
+        for x in self {
+            x.persist(w);
+        }
+    }
+    fn restore(r: &mut BinReader<'_>) -> Result<Self, CkptError> {
+        let len = r.usize_()?;
+        // guard against a corrupt length amplifying into a huge alloc:
+        // each element consumes at least one byte of payload
+        if len > r.buf.len() {
+            return Err(CkptError::Corrupt("vec length exceeds payload"));
+        }
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(T::restore(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl Persist for Sample {
+    fn persist(&self, w: &mut BinWriter) {
+        w.put_f64(self.value);
+        w.put_f64(self.at_secs);
+        w.put_u64(self.at_data);
+    }
+    fn restore(r: &mut BinReader<'_>) -> Result<Self, CkptError> {
+        Ok(Sample { value: r.f64()?, at_secs: r.f64()?, at_data: r.u64()? })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chain checkpoint
+
+/// Everything one chain needs to resume bit-identically: budget
+/// accounting, recorded samples, RNG stream position, and the
+/// kernel-encoded state and scratch payloads.
+#[derive(Clone, Debug)]
+pub struct ChainCheckpoint {
+    /// Engine chain index (stream `STREAM_BASE + chain`).
+    pub chain: usize,
+    /// Engine base seed; resuming under a different seed is refused.
+    pub base_seed: u64,
+    pub steps: usize,
+    pub accepted: usize,
+    pub data_used: u64,
+    pub guard_trips: u64,
+    /// Wall seconds consumed before the checkpoint (resumed chains offset
+    /// their clocks by this; the one inexact field).
+    pub wall_secs: f64,
+    /// PCG64 stream position (`Pcg64::state_parts`).
+    pub rng: [u64; 4],
+    pub samples: Vec<Sample>,
+    /// `Persist`-encoded kernel state.
+    pub state: Vec<u8>,
+    /// `TransitionKernel::save_scratch` payload (scheduler permutations,
+    /// annealing counters, ...).
+    pub scratch: Vec<u8>,
+}
+
+impl ChainCheckpoint {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = BinWriter::new();
+        w.put_u32(CKPT_MAGIC);
+        w.put_u32(CKPT_VERSION);
+        w.put_usize(self.chain);
+        w.put_u64(self.base_seed);
+        w.put_usize(self.steps);
+        w.put_usize(self.accepted);
+        w.put_u64(self.data_used);
+        w.put_u64(self.guard_trips);
+        w.put_f64(self.wall_secs);
+        for part in self.rng {
+            w.put_u64(part);
+        }
+        self.samples.persist(&mut w);
+        w.put_bytes(&self.state);
+        w.put_bytes(&self.scratch);
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Self, CkptError> {
+        let mut r = BinReader::new(bytes);
+        if r.u32()? != CKPT_MAGIC {
+            return Err(CkptError::Corrupt("bad magic"));
+        }
+        let version = r.u32()?;
+        if version != CKPT_VERSION {
+            return Err(CkptError::Version { found: version });
+        }
+        let ck = ChainCheckpoint {
+            chain: r.usize_()?,
+            base_seed: r.u64()?,
+            steps: r.usize_()?,
+            accepted: r.usize_()?,
+            data_used: r.u64()?,
+            guard_trips: r.u64()?,
+            wall_secs: r.f64()?,
+            rng: [r.u64()?, r.u64()?, r.u64()?, r.u64()?],
+            samples: Vec::restore(&mut r)?,
+            state: r.bytes()?.to_vec(),
+            scratch: r.bytes()?.to_vec(),
+        };
+        r.finish()?;
+        Ok(ck)
+    }
+
+    /// Write `chain-<c>.ckpt` into `dir` atomically: the payload goes to a
+    /// temp file first and is renamed over the target, so an interrupted
+    /// write never destroys the previous checkpoint.
+    pub fn write_atomic(&self, dir: &Path) -> Result<(), CkptError> {
+        let tmp = dir.join(format!("chain-{}.ckpt.tmp", self.chain));
+        let bytes = self.encode();
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+        drop(f);
+        fs::rename(&tmp, chain_path(dir, self.chain))?;
+        Ok(())
+    }
+
+    /// Load chain `c`'s checkpoint from `dir`. `Ok(None)` when the file
+    /// does not exist (the chain never reached a checkpoint boundary —
+    /// it resumes from scratch); decode failures are errors.
+    pub fn load(dir: &Path, chain: usize) -> Result<Option<Self>, CkptError> {
+        match fs::read(chain_path(dir, chain)) {
+            Ok(bytes) => Self::decode(&bytes).map(Some),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(CkptError::Io(e)),
+        }
+    }
+}
+
+/// Checkpoint file of chain `c` under `dir`.
+pub fn chain_path(dir: &Path, chain: usize) -> PathBuf {
+    dir.join(format!("chain-{chain}.ckpt"))
+}
+
+/// Where and how often to checkpoint: every `every` completed steps, one
+/// file per chain under `dir`.
+#[derive(Clone, Debug)]
+pub struct CheckpointSpec {
+    pub every: usize,
+    pub dir: PathBuf,
+}
+
+// ---------------------------------------------------------------------------
+// Manifest (observability only — resume reads the binary files)
+
+/// Render a float as JSON (`null` for non-finite values).
+pub(crate) fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Escape a string into a JSON literal.
+pub(crate) fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Write `manifest.json` describing a checkpointing launch (atomically,
+/// like the chain files). Purely informational: resume never parses it.
+pub(crate) fn write_manifest(
+    dir: &Path,
+    chains: usize,
+    base_seed: u64,
+    burn_in: usize,
+    thin: usize,
+    every: usize,
+    budget: &Budget,
+) -> Result<(), CkptError> {
+    let (kind, per_chain) = match budget {
+        Budget::Steps(s) => ("steps", *s as f64),
+        Budget::Wall(d) => ("wall_secs", d.as_secs_f64()),
+        Budget::Data(d) => ("data", *d as f64),
+    };
+    let json = format!(
+        "{{\"format_version\":{CKPT_VERSION},\"chains\":{chains},\"base_seed\":{base_seed},\
+         \"burn_in\":{burn_in},\"thin\":{thin},\"checkpoint_every\":{every},\
+         \"budget\":{{\"kind\":{},\"per_chain\":{}}}}}\n",
+        json_str(kind),
+        json_num(per_chain),
+    );
+    let tmp = dir.join("manifest.json.tmp");
+    let mut f = fs::File::create(&tmp)?;
+    f.write_all(json.as_bytes())?;
+    f.sync_all()?;
+    drop(f);
+    fs::rename(&tmp, dir.join("manifest.json"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        static UNIQ: AtomicUsize = AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "austerity-ckpt-{tag}-{}-{}",
+            std::process::id(),
+            UNIQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_ckpt() -> ChainCheckpoint {
+        ChainCheckpoint {
+            chain: 2,
+            base_seed: 42,
+            steps: 137,
+            accepted: 55,
+            data_used: 12_345,
+            guard_trips: 3,
+            wall_secs: 0.25,
+            rng: [1, u64::MAX, 3, 0xdead_beef],
+            samples: vec![
+                Sample { value: -0.5, at_secs: 0.1, at_data: 100 },
+                Sample { value: f64::NAN, at_secs: 0.2, at_data: 200 },
+            ],
+            state: vec![9, 8, 7],
+            scratch: vec![],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let ck = sample_ckpt();
+        let back = ChainCheckpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(back.chain, ck.chain);
+        assert_eq!(back.base_seed, ck.base_seed);
+        assert_eq!(back.steps, ck.steps);
+        assert_eq!(back.accepted, ck.accepted);
+        assert_eq!(back.data_used, ck.data_used);
+        assert_eq!(back.guard_trips, ck.guard_trips);
+        assert_eq!(back.wall_secs.to_bits(), ck.wall_secs.to_bits());
+        assert_eq!(back.rng, ck.rng);
+        assert_eq!(back.samples.len(), ck.samples.len());
+        for (a, b) in back.samples.iter().zip(&ck.samples) {
+            // NaN bit patterns included
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+            assert_eq!(a.at_data, b.at_data);
+        }
+        assert_eq!(back.state, ck.state);
+        assert_eq!(back.scratch, ck.scratch);
+    }
+
+    #[test]
+    fn corrupt_payloads_are_rejected_not_panicked() {
+        let bytes = sample_ckpt().encode();
+        // truncations at every prefix length must error, never panic
+        for cut in 0..bytes.len() {
+            assert!(ChainCheckpoint::decode(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(matches!(ChainCheckpoint::decode(&bad), Err(CkptError::Corrupt(_))));
+        // future version
+        let mut vnext = bytes.clone();
+        vnext[4..8].copy_from_slice(&(CKPT_VERSION + 1).to_le_bytes());
+        assert!(matches!(
+            ChainCheckpoint::decode(&vnext),
+            Err(CkptError::Version { found }) if found == CKPT_VERSION + 1
+        ));
+        // trailing garbage
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(ChainCheckpoint::decode(&long).is_err());
+    }
+
+    #[test]
+    fn persist_primitives_roundtrip_bitwise() {
+        let mut w = BinWriter::new();
+        true.persist(&mut w);
+        3.7f64.persist(&mut w);
+        f64::NAN.persist(&mut w);
+        (-0.0f64).persist(&mut w);
+        vec![1u32, 2, 3].persist(&mut w);
+        vec![true, false].persist(&mut w);
+        7usize.persist(&mut w);
+        ().persist(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        assert!(bool::restore(&mut r).unwrap());
+        assert_eq!(f64::restore(&mut r).unwrap(), 3.7);
+        assert_eq!(f64::restore(&mut r).unwrap().to_bits(), f64::NAN.to_bits());
+        assert_eq!(f64::restore(&mut r).unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(Vec::<u32>::restore(&mut r).unwrap(), vec![1, 2, 3]);
+        assert_eq!(Vec::<bool>::restore(&mut r).unwrap(), vec![true, false]);
+        assert_eq!(usize::restore(&mut r).unwrap(), 7);
+        <()>::restore(&mut r).unwrap();
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn atomic_write_then_load() {
+        let dir = temp_dir("atomic");
+        let ck = sample_ckpt();
+        assert!(ChainCheckpoint::load(&dir, 2).unwrap().is_none());
+        ck.write_atomic(&dir).unwrap();
+        let back = ChainCheckpoint::load(&dir, 2).unwrap().expect("present");
+        assert_eq!(back.steps, ck.steps);
+        // no temp droppings left behind
+        assert!(!dir.join("chain-2.ckpt.tmp").exists());
+        // other chains stay absent
+        assert!(ChainCheckpoint::load(&dir, 0).unwrap().is_none());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_is_written_and_valid_jsonish() {
+        let dir = temp_dir("manifest");
+        write_manifest(&dir, 4, 42, 10, 2, 50, &Budget::Steps(1_000)).unwrap();
+        let text = fs::read_to_string(dir.join("manifest.json")).unwrap();
+        assert!(text.contains("\"chains\":4"));
+        assert!(text.contains("\"kind\":\"steps\""));
+        assert_eq!(text.matches('{').count(), text.matches('}').count());
+        fs::remove_dir_all(&dir).ok();
+    }
+}

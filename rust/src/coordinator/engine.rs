@@ -16,8 +16,15 @@
 //!   vector statistics (predictive means, inclusion counts) without a
 //!   second pass over samples.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::coordinator::accept::AcceptanceTest;
-use crate::coordinator::chain::{drive_chain_par, Budget, ChainStats, Sample};
+use crate::coordinator::chain::{
+    drive_chain_ckpt, set_current_chain, Budget, ChainStats, DriveCfg, Sample,
+};
+use crate::coordinator::checkpoint::{write_manifest, ChainCheckpoint, CheckpointSpec, Persist};
 use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
 use crate::metrics::convergence::{cross_chain, Convergence};
 use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
@@ -40,11 +47,25 @@ pub struct EngineConfig {
     pub budget: Budget,
     pub burn_in: usize,
     pub thin: usize,
+    /// Write per-chain checkpoints while running.
+    pub checkpoint: Option<CheckpointSpec>,
+    /// Resume chains from checkpoints in this directory (chains without a
+    /// checkpoint file start fresh).
+    pub resume: Option<PathBuf>,
 }
 
 impl EngineConfig {
     pub fn new(chains: usize, base_seed: u64, budget: Budget) -> Self {
-        EngineConfig { chains, threads: 0, base_seed, budget, burn_in: 0, thin: 1 }
+        EngineConfig {
+            chains,
+            threads: 0,
+            base_seed,
+            budget,
+            burn_in: 0,
+            thin: 1,
+            checkpoint: None,
+            resume: None,
+        }
     }
 
     pub fn burn_in(mut self, burn_in: usize) -> Self {
@@ -60,6 +81,22 @@ impl EngineConfig {
 
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Checkpoint every `every` completed steps into `dir` (see
+    /// `coordinator::checkpoint`).
+    pub fn checkpoint(mut self, every: usize, dir: impl Into<PathBuf>) -> Self {
+        assert!(every >= 1, "checkpoint interval must be at least 1 step");
+        self.checkpoint = Some(CheckpointSpec { every, dir: dir.into() });
+        self
+    }
+
+    /// Resume chains from the checkpoints in `dir`; chains without a
+    /// checkpoint file start fresh, mismatched or corrupt files fail that
+    /// chain.
+    pub fn resume(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.resume = Some(dir.into());
         self
     }
 }
@@ -79,6 +116,20 @@ impl<P, F: FnMut(&P) -> f64 + Send> ChainObserver<P> for F {
     }
 }
 
+/// How one chain of a launch ended. Failures carry the 0-based index of
+/// the step the chain was executing when it died and the panic message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ChainStatus {
+    Completed,
+    Failed { step: usize, reason: String },
+}
+
+impl ChainStatus {
+    pub fn is_failed(&self) -> bool {
+        matches!(self, ChainStatus::Failed { .. })
+    }
+}
+
 /// One chain's output.
 #[derive(Clone, Debug)]
 pub struct ChainRun {
@@ -89,12 +140,17 @@ pub struct ChainRun {
 
 /// Everything one engine launch produced.
 pub struct EngineResult<O> {
-    /// Per-chain samples and statistics, in chain order.
+    /// Samples and statistics of the chains that completed, in chain
+    /// order (`ChainRun::chain` keeps the original index). Equal in
+    /// length to `statuses` only when every chain completed.
     pub runs: Vec<ChainRun>,
-    /// Per-chain observers, in chain order.
+    /// Observers of the completed chains, in `runs` order.
     pub observers: Vec<O>,
-    /// Chain-summed counters; `merged.wall` is the slowest single chain
-    /// (not the launch duration — chains may share workers).
+    /// Per-chain outcome for all K launched chains, in chain order.
+    pub statuses: Vec<ChainStatus>,
+    /// Counters summed over completed chains; `merged.wall` is the
+    /// slowest single chain (not the launch duration — chains may share
+    /// workers).
     pub merged: ChainStats,
     /// Wall-clock duration of the whole launch, spawn to last join.
     /// Equals roughly max(chain walls) when every chain has its own
@@ -105,6 +161,11 @@ pub struct EngineResult<O> {
 }
 
 impl<O> EngineResult<O> {
+    /// Number of launched chains that failed.
+    pub fn failed_chains(&self) -> usize {
+        self.statuses.iter().filter(|s| s.is_failed()).count()
+    }
+
     /// Recorded values per chain (for custom diagnostics).
     pub fn values(&self) -> Vec<Vec<f64>> {
         self.runs
@@ -138,30 +199,54 @@ impl<O> EngineResult<O> {
     }
 }
 
+/// A task of `parallel_map_result` that panicked: which one, and the
+/// panic message.
+#[derive(Clone, Debug)]
+pub struct TaskError {
+    pub task: usize,
+    pub reason: String,
+}
+
+fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
 /// Run `tasks` independent jobs over a worker pool of `threads` threads
-/// (0 = one per task), returning results in task order. Task `i` always
-/// receives index `i`, so any deterministic task function yields
-/// identical results regardless of the pool size.
-pub fn parallel_map<T, F>(tasks: usize, threads: usize, f: F) -> Vec<T>
+/// (0 = one per task), returning per-task results in task order. Task `i`
+/// always receives index `i`, so any deterministic task function yields
+/// identical results regardless of the pool size. A panicking task is
+/// isolated: it becomes `Err(TaskError)` in its own slot and every other
+/// task still runs to completion.
+pub fn parallel_map_result<T, F>(tasks: usize, threads: usize, f: F) -> Vec<Result<T, TaskError>>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    let run_one = |i: usize| -> Result<T, TaskError> {
+        catch_unwind(AssertUnwindSafe(|| f(i)))
+            .map_err(|p| TaskError { task: i, reason: panic_reason(p.as_ref()) })
+    };
     let workers = if threads == 0 { tasks } else { threads.min(tasks) };
     if workers <= 1 {
-        return (0..tasks).map(f).collect();
+        return (0..tasks).map(run_one).collect();
     }
-    let mut slots: Vec<Option<T>> = Vec::with_capacity(tasks);
+    let mut slots: Vec<Option<Result<T, TaskError>>> = Vec::with_capacity(tasks);
     slots.resize_with(tasks, || None);
     std::thread::scope(|scope| {
-        let f = &f;
+        let run_one = &run_one;
         let handles: Vec<_> = (0..workers)
             .map(|w| {
                 scope.spawn(move || {
                     let mut out = Vec::new();
                     let mut i = w;
                     while i < tasks {
-                        out.push((i, f(i)));
+                        out.push((i, run_one(i)));
                         i += workers;
                     }
                     out
@@ -169,15 +254,59 @@ where
             })
             .collect();
         for h in handles {
-            for (i, t) in h.join().expect("engine worker panicked") {
-                slots[i] = Some(t);
+            // catch_unwind shields the worker loop, so a worker join can
+            // only fail on a panic escaping the harness itself; the
+            // affected slots then surface as explicit per-task errors
+            // below instead of poisoning the whole launch.
+            if let Ok(pairs) = h.join() {
+                for (i, t) in pairs {
+                    slots[i] = Some(t);
+                }
             }
         }
     });
     slots
         .into_iter()
-        .map(|s| s.expect("missing engine task result"))
+        .enumerate()
+        .map(|(i, s)| {
+            s.unwrap_or_else(|| {
+                Err(TaskError { task: i, reason: "task result missing (worker died)".into() })
+            })
+        })
         .collect()
+}
+
+/// `parallel_map_result` for infallible tasks; panics naming the failing
+/// task if one of them does panic.
+pub fn parallel_map<T, F>(tasks: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    parallel_map_result(tasks, threads, f)
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|e| panic!("engine task {} panicked: {}", e.task, e.reason)))
+        .collect()
+}
+
+/// Load chain `c`'s checkpoint for a resuming launch; a missing file
+/// means "start fresh", anything unreadable or belonging to a different
+/// run panics (downed by the per-chain isolation, not the launch).
+fn load_resume(dir: &Path, chain: usize, base_seed: u64) -> Option<ChainCheckpoint> {
+    match ChainCheckpoint::load(dir, chain) {
+        Ok(None) => None,
+        Ok(Some(ck)) => {
+            if ck.chain != chain || ck.base_seed != base_seed {
+                panic!(
+                    "chain {chain}: checkpoint belongs to a different run \
+                     (chain {}, base seed {})",
+                    ck.chain, ck.base_seed
+                );
+            }
+            Some(ck)
+        }
+        Err(e) => panic!("chain {chain}: cannot load checkpoint: {e}"),
+    }
 }
 
 /// Internal: run K chains of any `TransitionKernel`, one observer per
@@ -194,6 +323,9 @@ where
 /// MH exact-rule full scan) use them through `scratch_par`. Intra-step
 /// parallelism is deterministic by construction, so this keeps the
 /// bit-reproducibility guarantee while filling the pool at K = 1.
+///
+/// A panicking chain is isolated (`ChainStatus::Failed`); checkpoint
+/// and resume options on `cfg` flow through to `drive_chain_ckpt`.
 #[doc(hidden)]
 pub fn run_engine_kernel<T, OF, O>(
     kernel: &T,
@@ -203,30 +335,74 @@ pub fn run_engine_kernel<T, OF, O>(
 ) -> EngineResult<O>
 where
     T: TransitionKernel + Sync,
-    T::State: Sync,
+    T::State: Sync + Persist,
     OF: Fn(usize) -> O + Sync,
     O: ChainObserver<T::State>,
 {
     assert!(cfg.chains >= 1, "need at least one chain");
     let intra = if cfg.threads > cfg.chains { cfg.threads / cfg.chains } else { 1 };
-    let init = &init;
-    let start = std::time::Instant::now();
-    let pairs = parallel_map(cfg.chains, cfg.threads, |c| {
-        let mut rng = Pcg64::new(cfg.base_seed, STREAM_BASE + c as u64);
-        let mut obs = make_observer(c);
-        let (samples, stats) = drive_chain_par(
-            kernel,
-            init.clone(),
-            cfg.budget,
+    if let Some(spec) = &cfg.checkpoint {
+        std::fs::create_dir_all(&spec.dir)
+            .unwrap_or_else(|e| panic!("cannot create checkpoint dir: {e}"));
+        write_manifest(
+            &spec.dir,
+            cfg.chains,
+            cfg.base_seed,
             cfg.burn_in,
             cfg.thin,
+            spec.every,
+            &cfg.budget,
+        )
+        .unwrap_or_else(|e| panic!("cannot write checkpoint manifest: {e}"));
+    }
+    // 0-based index of the step each chain is executing, published before
+    // every step — read back for `ChainStatus::Failed` forensics when a
+    // chain dies mid-step.
+    let progress: Vec<AtomicU64> = (0..cfg.chains).map(|_| AtomicU64::new(0)).collect();
+    let init = &init;
+    let progress = &progress;
+    let start = std::time::Instant::now();
+    let results = parallel_map_result(cfg.chains, cfg.threads, |c| {
+        set_current_chain(c);
+        let mut rng = Pcg64::new(cfg.base_seed, STREAM_BASE + c as u64);
+        let mut obs = make_observer(c);
+        let resume = cfg
+            .resume
+            .as_deref()
+            .and_then(|dir| load_resume(dir, c, cfg.base_seed));
+        let (samples, stats) = drive_chain_ckpt(
+            kernel,
+            init.clone(),
+            DriveCfg {
+                budget: cfg.budget,
+                burn_in: cfg.burn_in,
+                thin: cfg.thin,
+                intra_threads: intra,
+                checkpoint: cfg.checkpoint.as_ref().map(|spec| (spec, c, cfg.base_seed)),
+                resume,
+                progress: Some(&progress[c]),
+            },
             |p| obs.observe(p),
             &mut rng,
-            intra,
         );
         (ChainRun { chain: c, samples, stats }, obs)
     });
-    finish(pairs, start.elapsed())
+    let wall = start.elapsed();
+    let mut statuses = Vec::with_capacity(cfg.chains);
+    let mut pairs = Vec::with_capacity(cfg.chains);
+    for (c, res) in results.into_iter().enumerate() {
+        match res {
+            Ok(pair) => {
+                statuses.push(ChainStatus::Completed);
+                pairs.push(pair);
+            }
+            Err(e) => {
+                let step = progress[c].load(Ordering::Relaxed) as usize;
+                statuses.push(ChainStatus::Failed { step, reason: e.reason });
+            }
+        }
+    }
+    finish(pairs, statuses, wall)
 }
 
 /// Internal: run K MH chains of `model` under `mode` — any
@@ -245,6 +421,7 @@ pub fn run_engine<M, K, T, OF, O>(
 ) -> EngineResult<O>
 where
     M: LlDiffModel + Sync,
+    M::Param: Persist,
     K: ProposalKernel<M::Param> + Sync,
     T: AcceptanceTest + Sync,
     OF: Fn(usize) -> O + Sync,
@@ -268,6 +445,7 @@ pub fn run_engine_cached<M, K, T, OF, O>(
 ) -> EngineResult<O>
 where
     M: CachedLlDiff + Sync,
+    M::Param: Persist,
     K: ProposalKernel<M::Param> + Sync,
     T: AcceptanceTest + Sync,
     OF: Fn(usize) -> O + Sync,
@@ -281,21 +459,32 @@ where
     )
 }
 
-fn finish<O>(pairs: Vec<(ChainRun, O)>, wall: std::time::Duration) -> EngineResult<O> {
+fn finish<O>(
+    pairs: Vec<(ChainRun, O)>,
+    statuses: Vec<ChainStatus>,
+    wall: std::time::Duration,
+) -> EngineResult<O> {
     let mut merged = ChainStats::default();
     for (run, _) in &pairs {
         merged.steps += run.stats.steps;
         merged.accepted += run.stats.accepted;
         merged.data_used += run.stats.data_used;
+        merged.guard_trips += run.stats.guard_trips;
         merged.wall = merged.wall.max(run.stats.wall);
     }
     let series: Vec<Vec<f64>> = pairs
         .iter()
         .map(|(r, _)| r.samples.iter().map(|s| s.value).collect())
         .collect();
-    let convergence = cross_chain(&series);
+    let mut convergence = cross_chain(&series);
+    // a launch degraded below two chains by failures has no meaningful
+    // cross-chain mixing estimate (a deliberate K=1 launch is different:
+    // split R-hat over one chain's halves is still informative)
+    if statuses.iter().any(ChainStatus::is_failed) && pairs.len() < 2 {
+        convergence.rhat = f64::NAN;
+    }
     let (runs, observers): (Vec<ChainRun>, Vec<O>) = pairs.into_iter().unzip();
-    EngineResult { runs, observers, merged, wall, convergence }
+    EngineResult { runs, observers, statuses, merged, wall, convergence }
 }
 
 #[cfg(test)]
@@ -336,6 +525,38 @@ mod tests {
         }
         assert_eq!(serial[5], 25);
         assert!(parallel_map(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn parallel_map_result_isolates_panics_to_their_slot() {
+        for threads in [1usize, 0, 3] {
+            let res = parallel_map_result(7, threads, |i| {
+                if i == 3 {
+                    panic!("boom {i}");
+                }
+                i * 2
+            });
+            for (i, r) in res.iter().enumerate() {
+                if i == 3 {
+                    let e = r.as_ref().expect_err("task 3 must fail");
+                    assert_eq!(e.task, 3);
+                    assert!(e.reason.contains("boom 3"), "reason: {}", e.reason);
+                } else {
+                    assert_eq!(*r.as_ref().expect("other tasks survive"), i * 2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_map_names_the_failing_task() {
+        let err = std::panic::catch_unwind(|| {
+            parallel_map(4, 2, |i| if i == 1 { panic!("dead") } else { i })
+        })
+        .expect_err("must propagate");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("task 1"), "msg: {msg}");
+        assert!(msg.contains("dead"), "msg: {msg}");
     }
 
     #[test]

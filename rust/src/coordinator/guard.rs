@@ -1,0 +1,226 @@
+//! Numerical guard layer: catch non-finite log-likelihood moments where
+//! they enter the acceptance tests.
+//!
+//! A single NaN or infinite `lldiff` silently poisons every statistic
+//! downstream of a decision — the running mean, the Student-t tail, the
+//! Bernstein bound — and all four rules then limp to population
+//! exhaustion and decide on garbage. [`Guarded`] wraps any
+//! [`AcceptanceTest`] and interposes on its [`MomentsSource`]: every
+//! mini-batch and full-scan moment pair is checked for finiteness, trips
+//! are counted, and a [`GuardPolicy`] decides what a tripped decision
+//! means:
+//!
+//! * [`GuardPolicy::Warn`] — count only; the decision stands (default).
+//! * [`GuardPolicy::RejectProposal`] — force-reject the proposal, so the
+//!   chain stays on its last finite state and keeps running.
+//! * [`GuardPolicy::Abort`] — panic; under the engine's per-chain panic
+//!   isolation this downs exactly one chain (`ChainStatus::Failed`)
+//!   while the rest of the launch completes.
+//!
+//! The wrapper is decision-transparent: it only observes moment values,
+//! so a `Warn`-guarded run makes bit-identical decisions to an unguarded
+//! one (the guard is why `Session` wraps every rule unconditionally).
+//! Trip counts surface per chain as `ChainStats::guard_trips`.
+
+use crate::coordinator::accept::{AcceptOutcome, AcceptanceTest, MomentsSource, StageTrace};
+use crate::coordinator::scheduler::MinibatchScheduler;
+use crate::stats::Pcg64;
+
+/// What to do when a non-finite moment reaches an acceptance test.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GuardPolicy {
+    /// Count the trip and let the decision stand.
+    #[default]
+    Warn,
+    /// Force-reject the proposal that produced non-finite moments.
+    RejectProposal,
+    /// Panic — the engine's panic isolation turns this into a
+    /// `ChainStatus::Failed` for the offending chain only.
+    Abort,
+}
+
+/// `MomentsSource` interposer: delegates, then checks `(sum, sum_sq)`
+/// for finiteness. Full scans stay on the source's own (possibly
+/// parallel, range-based) path, so guarded moments are bit-identical to
+/// unguarded ones.
+struct GuardedSource<'a, S> {
+    inner: S,
+    trips: &'a mut u32,
+}
+
+impl<S> GuardedSource<'_, S> {
+    #[inline]
+    fn check(&mut self, moments: (f64, f64)) -> (f64, f64) {
+        if !moments.0.is_finite() || !moments.1.is_finite() {
+            *self.trips += 1;
+        }
+        moments
+    }
+}
+
+impl<S: MomentsSource> MomentsSource for GuardedSource<'_, S> {
+    fn batch(&mut self, idx: &[u32]) -> (f64, f64) {
+        let m = self.inner.batch(idx);
+        self.check(m)
+    }
+
+    fn full_scan(&mut self, n_total: usize, idx_buf: &mut Vec<u32>) -> (f64, f64) {
+        let m = self.inner.full_scan(n_total, idx_buf);
+        self.check(m)
+    }
+}
+
+/// An acceptance rule wrapped with a numerical guard. Constructed by
+/// `Session` around whatever rule the user picked; usable directly with
+/// the lower-level engine entry points too.
+#[derive(Clone, Debug)]
+pub struct Guarded<T> {
+    pub rule: T,
+    pub policy: GuardPolicy,
+}
+
+impl<T> Guarded<T> {
+    pub fn new(rule: T, policy: GuardPolicy) -> Self {
+        Guarded { rule, policy }
+    }
+}
+
+impl<T: AcceptanceTest> AcceptanceTest for Guarded<T> {
+    fn name(&self) -> &'static str {
+        self.rule.name()
+    }
+
+    fn decide<S: MomentsSource>(
+        &self,
+        n_total: usize,
+        log_correction: f64,
+        moments: S,
+        sched: &mut MinibatchScheduler,
+        idx_buf: &mut Vec<u32>,
+        trace: &mut Vec<StageTrace>,
+        rng: &mut Pcg64,
+    ) -> AcceptOutcome {
+        let mut trips = 0u32;
+        let mut out = self.rule.decide(
+            n_total,
+            log_correction,
+            GuardedSource { inner: moments, trips: &mut trips },
+            sched,
+            idx_buf,
+            trace,
+            rng,
+        );
+        if trips > 0 {
+            match self.policy {
+                GuardPolicy::Warn => {}
+                GuardPolicy::RejectProposal => out.accept = false,
+                GuardPolicy::Abort => panic!(
+                    "numerical guard: non-finite log-likelihood moments reached the {} \
+                     acceptance test ({trips} tripped stage(s))",
+                    self.rule.name()
+                ),
+            }
+        }
+        out.guard_trips = trips;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::accept::{AusterityTest, ExactTest};
+    use crate::models::traits::testutil::FixedPopulation;
+    use crate::models::traits::LlDiffModel;
+
+    fn harness(n: usize) -> (MinibatchScheduler, Vec<u32>, Vec<StageTrace>) {
+        (MinibatchScheduler::new(n), Vec::new(), Vec::new())
+    }
+
+    fn decide<T: AcceptanceTest>(
+        test: &T,
+        model: &FixedPopulation,
+        rng: &mut Pcg64,
+    ) -> AcceptOutcome {
+        let (mut sched, mut buf, mut trace) = harness(model.n());
+        test.decide(
+            model.n(),
+            0.0,
+            |idx: &[u32]| model.lldiff_moments(idx, &(), &()),
+            &mut sched,
+            &mut buf,
+            &mut trace,
+            rng,
+        )
+    }
+
+    #[test]
+    fn finite_population_never_trips_and_matches_unguarded_bits() {
+        let model = FixedPopulation { ls: vec![0.01; 200] };
+        for policy in [GuardPolicy::Warn, GuardPolicy::RejectProposal, GuardPolicy::Abort] {
+            let mut a = Pcg64::seeded(5);
+            let mut b = Pcg64::seeded(5);
+            let plain = decide(&ExactTest, &model, &mut a);
+            let wrapped = decide(&Guarded::new(ExactTest, policy), &model, &mut b);
+            assert_eq!(wrapped.guard_trips, 0);
+            assert_eq!(plain.accept, wrapped.accept);
+            assert_eq!(plain.n_used, wrapped.n_used);
+            assert_eq!(plain.stat.to_bits(), wrapped.stat.to_bits());
+            assert_eq!(a.next_u64(), b.next_u64(), "rng stream position must match");
+        }
+    }
+
+    #[test]
+    fn warn_counts_trips_but_lets_decision_stand() {
+        let mut ls = vec![0.5; 100];
+        ls[17] = f64::NAN;
+        let model = FixedPopulation { ls };
+        let mut rng = Pcg64::seeded(1);
+        let out = decide(&Guarded::new(ExactTest, GuardPolicy::Warn), &model, &mut rng);
+        assert!(out.guard_trips > 0);
+    }
+
+    #[test]
+    fn reject_proposal_forces_rejection() {
+        // a population so favorable the exact rule would always accept
+        let mut ls = vec![1.0; 100];
+        ls[3] = f64::INFINITY;
+        let model = FixedPopulation { ls };
+        for seed in 0..20 {
+            let mut rng = Pcg64::seeded(seed);
+            let out =
+                decide(&Guarded::new(ExactTest, GuardPolicy::RejectProposal), &model, &mut rng);
+            assert!(!out.accept);
+            assert!(out.guard_trips > 0);
+        }
+    }
+
+    #[test]
+    fn abort_panics_with_rule_name() {
+        let mut ls = vec![0.1; 64];
+        ls[0] = f64::NAN;
+        let model = FixedPopulation { ls };
+        let err = std::panic::catch_unwind(|| {
+            let mut rng = Pcg64::seeded(2);
+            let rule = Guarded::new(AusterityTest::new(0.05, 16), GuardPolicy::Abort);
+            decide(&rule, &model, &mut rng)
+        })
+        .expect_err("must panic");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("numerical guard"), "msg: {msg}");
+        assert!(msg.contains("austerity"), "msg: {msg}");
+    }
+
+    #[test]
+    fn sequential_rule_terminates_under_nan_and_counts_stages() {
+        // NaN comparisons are false, so the austerity loop runs to
+        // population exhaustion and still returns — the guard's job is
+        // to notice, not to rescue the decision
+        let model = FixedPopulation { ls: vec![f64::NAN; 128] };
+        let mut rng = Pcg64::seeded(3);
+        let rule = Guarded::new(AusterityTest::new(0.05, 32), GuardPolicy::Warn);
+        let out = decide(&rule, &model, &mut rng);
+        assert_eq!(out.n_used, 128, "must exhaust the population, not hang");
+        assert!(out.guard_trips > 0);
+    }
+}

@@ -25,7 +25,9 @@
 //! `coordinator::adaptive::AdaptiveMhKernel`.
 
 use crate::coordinator::accept::AcceptanceTest;
+use crate::coordinator::checkpoint::{BinReader, BinWriter, CkptError, Persist};
 use crate::coordinator::mh::{mh_step, mh_step_cached, MhMode, MhScratch};
+use crate::coordinator::scheduler::MinibatchScheduler;
 use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
 use crate::stats::Pcg64;
 
@@ -37,6 +39,9 @@ pub struct StepOutcome {
     pub accepted: bool,
     /// Datapoint (or potential-pair) evaluations consumed by this step.
     pub data_used: u64,
+    /// Numerical-guard trips during this step's decision (0 unless the
+    /// kernel routes through `coordinator::guard::Guarded`).
+    pub guard_trips: u32,
 }
 
 /// One sampler family: a Markov transition over `State` with chain-local
@@ -69,6 +74,45 @@ pub trait TransitionKernel {
         scratch: &mut Self::Scratch,
         rng: &mut Pcg64,
     ) -> StepOutcome;
+
+    /// Serialize the scratch state that persists *across* steps (scheduler
+    /// permutations, annealing counters) for a checkpoint. Per-decision
+    /// temporaries (index buffers, traces, rebuildable likelihood caches)
+    /// must be skipped. The default persists nothing — correct only for
+    /// kernels whose scratch carries no cross-step state.
+    fn save_scratch(&self, scratch: &Self::Scratch, w: &mut BinWriter) {
+        let _ = (scratch, w);
+    }
+
+    /// Inverse of `save_scratch`, applied to a freshly built scratch
+    /// (`scratch_par` on the restored state) at resume.
+    fn restore_scratch(
+        &self,
+        scratch: &mut Self::Scratch,
+        r: &mut BinReader<'_>,
+    ) -> Result<(), CkptError> {
+        let _ = (scratch, r);
+        Ok(())
+    }
+}
+
+/// Shared restore guard for the scheduler-carrying kernels: the persisted
+/// scheduler must cover the same population as the model the kernel now
+/// runs against.
+pub(crate) fn restore_sched(
+    sched: &mut MinibatchScheduler,
+    n_expected: usize,
+    r: &mut BinReader<'_>,
+) -> Result<(), CkptError> {
+    let restored = MinibatchScheduler::restore(r)?;
+    if restored.n() != n_expected {
+        return Err(CkptError::Mismatch(format!(
+            "scheduler covers {} datapoints, model has {n_expected}",
+            restored.n()
+        )));
+    }
+    *sched = restored;
+    Ok(())
 }
 
 /// Metropolis-Hastings under any `AcceptanceTest` (exact full-data scan,
@@ -102,7 +146,23 @@ where
     fn step(&self, state: &mut M::Param, scratch: &mut MhScratch, rng: &mut Pcg64) -> StepOutcome {
         let proposal = self.proposal.propose(state, rng);
         let info = mh_step(self.model, state, proposal, self.mode, scratch, rng);
-        StepOutcome { accepted: info.accepted, data_used: info.n_used as u64 }
+        StepOutcome {
+            accepted: info.accepted,
+            data_used: info.n_used as u64,
+            guard_trips: info.guard_trips,
+        }
+    }
+
+    fn save_scratch(&self, scratch: &MhScratch, w: &mut BinWriter) {
+        scratch.sched.persist(w);
+    }
+
+    fn restore_scratch(
+        &self,
+        scratch: &mut MhScratch,
+        r: &mut BinReader<'_>,
+    ) -> Result<(), CkptError> {
+        restore_sched(&mut scratch.sched, self.model.n(), r)
     }
 }
 
@@ -160,7 +220,26 @@ where
             &mut scratch.mh,
             rng,
         );
-        StepOutcome { accepted: info.accepted, data_used: info.n_used as u64 }
+        StepOutcome {
+            accepted: info.accepted,
+            data_used: info.n_used as u64,
+            guard_trips: info.guard_trips,
+        }
+    }
+
+    // The likelihood cache is deliberately NOT serialized: `scratch_par`
+    // rebuilds it from the restored state via `init_cache`, and the
+    // cached-vs-uncached bit-identity contract makes the rebuild exact.
+    fn save_scratch(&self, scratch: &CachedMhScratch<M>, w: &mut BinWriter) {
+        scratch.mh.sched.persist(w);
+    }
+
+    fn restore_scratch(
+        &self,
+        scratch: &mut CachedMhScratch<M>,
+        r: &mut BinReader<'_>,
+    ) -> Result<(), CkptError> {
+        restore_sched(&mut scratch.mh.sched, self.model.n(), r)
     }
 }
 
@@ -183,7 +262,7 @@ mod tests {
 
         fn step(&self, state: &mut u64, _: &mut (), _: &mut Pcg64) -> StepOutcome {
             *state += 1;
-            StepOutcome { accepted: true, data_used: self.cost }
+            StepOutcome { accepted: true, data_used: self.cost, guard_trips: 0 }
         }
     }
 

@@ -112,6 +112,9 @@ pub struct StepInfo {
     pub n_used: usize,
     /// Test stages (1 for exact, 0 for a data-free rejection).
     pub stages: usize,
+    /// Numerical-guard trips in the decision (nonzero only under a
+    /// `coordinator::guard::Guarded` rule).
+    pub guard_trips: u32,
 }
 
 /// Reusable per-chain scratch (avoids per-step allocation): the
@@ -226,7 +229,12 @@ where
     if out.accept {
         *cur = proposal.param;
     }
-    StepInfo { accepted: out.accept, n_used: out.n_used, stages: out.stages }
+    StepInfo {
+        accepted: out.accept,
+        n_used: out.n_used,
+        stages: out.stages,
+        guard_trips: out.guard_trips,
+    }
 }
 
 /// `mh_step` on the state-caching fast path: current-side per-datapoint
@@ -265,7 +273,12 @@ where
     if out.accept {
         *cur = proposal.param;
     }
-    StepInfo { accepted: out.accept, n_used: out.n_used, stages: out.stages }
+    StepInfo {
+        accepted: out.accept,
+        n_used: out.n_used,
+        stages: out.stages,
+        guard_trips: out.guard_trips,
+    }
 }
 
 #[cfg(test)]

@@ -19,6 +19,13 @@
 //!   driver and one engine serve them all
 //! * `chain` — generic single-chain driver (`drive_chain`) with step /
 //!   wall / datapoint budgets and thinning
+//! * `checkpoint` — versioned binary chain checkpoints (`Persist`,
+//!   `ChainCheckpoint`) behind `Session::checkpoint_every` /
+//!   `resume_from`, written atomically for crash-consistent resume with
+//!   bit-identical replay
+//! * `guard` — numerical-guard layer (`GuardPolicy`, `Guarded`)
+//!   screening the log-likelihood moments entering any acceptance test
+//!   for NaN/Inf poisoning
 //! * `engine` — parallel multi-chain engine over any kernel: worker
 //!   pool, per-chain RNG streams and observers, merged stats, split
 //!   R-hat / ESS. Its `run_engine*` launchers (and `chain`'s
@@ -35,10 +42,12 @@ pub mod accept;
 pub mod adaptive;
 pub mod austerity;
 pub mod chain;
+pub mod checkpoint;
 pub mod delta;
 pub mod design;
 pub mod dp;
 pub mod engine;
+pub mod guard;
 pub mod kernel;
 pub mod mh;
 pub mod record;
@@ -51,11 +60,16 @@ pub use accept::{
 };
 pub use adaptive::{run_adaptive_chain, AdaptiveMhKernel, EpsSchedule};
 pub use austerity::{seq_mh_test, seq_mh_test_cached, BoundSeq, SeqTestConfig, SeqTestOutcome};
-pub use chain::{drive_chain, drive_chain_par, Budget, ChainStats, Sample};
+pub use chain::{current_chain_step, drive_chain, drive_chain_par, Budget, ChainStats, Sample};
+pub use checkpoint::{BinReader, BinWriter, ChainCheckpoint, CheckpointSpec, CkptError, Persist};
 pub use delta::{PairStats, SeqTestTable};
 pub use design::{average_design, wang_tsiatis_design, worst_case_design, DesignChoice, DesignGrid, WtChoice};
 pub use dp::{analyze_pocock, analyze_walk, simulate_walk, uniform_pis, SeqAnalysis};
-pub use engine::{parallel_map, ChainObserver, ChainRun, EngineConfig, EngineResult};
+pub use engine::{
+    parallel_map, parallel_map_result, ChainObserver, ChainRun, ChainStatus, EngineConfig,
+    EngineResult, TaskError,
+};
+pub use guard::{GuardPolicy, Guarded};
 pub use kernel::{CachedMhKernel, CachedMhScratch, MhKernel, StepOutcome, TransitionKernel};
 pub use mh::{mh_step, mh_step_cached, CachedMoments, MhMode, MhScratch, ModelMoments, StepInfo};
 pub use record::{

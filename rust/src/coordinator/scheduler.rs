@@ -14,6 +14,7 @@
 //! take (`LlDiffModel::lldiff_moments`), so acceptance rules feed it to
 //! the kernels directly — there is no per-stage widening copy anywhere.
 
+use crate::coordinator::checkpoint::{BinReader, BinWriter, CkptError, Persist};
 use crate::stats::Pcg64;
 
 pub struct MinibatchScheduler {
@@ -63,6 +64,36 @@ impl MinibatchScheduler {
     /// The full prefix consumed so far in this draw.
     pub fn consumed_slice(&self) -> &[u32] {
         &self.indices[..self.pos]
+    }
+}
+
+/// The permutation buffer is chain state, not a temporary: `reset` only
+/// rewinds `pos`, so the buffer order carries across steps and feeds every
+/// future draw. Checkpoints must therefore persist it verbatim —
+/// restoring a freshly shuffled scheduler would break resume bit-identity.
+impl Persist for MinibatchScheduler {
+    fn persist(&self, w: &mut BinWriter) {
+        self.indices.persist(w);
+        w.put_usize(self.pos);
+    }
+
+    fn restore(r: &mut BinReader<'_>) -> Result<Self, CkptError> {
+        let indices = Vec::<u32>::restore(r)?;
+        let pos = r.usize_()?;
+        let n = indices.len();
+        if n == 0 || n > u32::MAX as usize {
+            return Err(CkptError::Corrupt("scheduler population size out of range"));
+        }
+        if pos > n {
+            return Err(CkptError::Corrupt("scheduler position past population"));
+        }
+        let mut seen = vec![false; n];
+        for &i in &indices {
+            if (i as usize) >= n || std::mem::replace(&mut seen[i as usize], true) {
+                return Err(CkptError::Corrupt("scheduler buffer is not a permutation"));
+            }
+        }
+        Ok(MinibatchScheduler { indices, pos })
     }
 }
 
@@ -117,6 +148,54 @@ mod tests {
     }
 
     use crate::stats::Pcg64;
+
+    #[test]
+    fn persist_roundtrip_resumes_identical_draw_sequence() {
+        let mut rng = Pcg64::seeded(7);
+        let mut sched = MinibatchScheduler::new(200);
+        // consume a few steps so the permutation is non-trivial and the
+        // draw is mid-flight
+        for _ in 0..3 {
+            sched.reset();
+            sched.next_batch(37, &mut rng);
+        }
+        let mut w = BinWriter::new();
+        sched.persist(&mut w);
+        let bytes = w.into_bytes();
+        let mut restored = MinibatchScheduler::restore(&mut BinReader::new(&bytes)).unwrap();
+        assert_eq!(restored.n(), sched.n());
+        assert_eq!(restored.consumed(), sched.consumed());
+        let mut rng_b = rng.clone();
+        for _ in 0..5 {
+            sched.reset();
+            restored.reset();
+            let a: Vec<u32> = sched.next_batch(29, &mut rng).to_vec();
+            let b: Vec<u32> = restored.next_batch(29, &mut rng_b).to_vec();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn restore_rejects_non_permutations() {
+        let encode = |indices: &Vec<u32>, pos: usize| {
+            let mut w = BinWriter::new();
+            indices.persist(&mut w);
+            w.put_usize(pos);
+            w.into_bytes()
+        };
+        // duplicate index
+        let bytes = encode(&vec![0, 1, 1, 3], 0);
+        assert!(MinibatchScheduler::restore(&mut BinReader::new(&bytes)).is_err());
+        // out-of-range index
+        let bytes = encode(&vec![0, 1, 9], 0);
+        assert!(MinibatchScheduler::restore(&mut BinReader::new(&bytes)).is_err());
+        // position past the population
+        let bytes = encode(&vec![0, 1, 2], 4);
+        assert!(MinibatchScheduler::restore(&mut BinReader::new(&bytes)).is_err());
+        // empty population
+        let bytes = encode(&vec![], 0);
+        assert!(MinibatchScheduler::restore(&mut BinReader::new(&bytes)).is_err());
+    }
 
     #[test]
     fn draws_are_uniform_across_steps() {

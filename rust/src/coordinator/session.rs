@@ -28,11 +28,16 @@
 //! println!("{}", report.to_json());
 //! ```
 
+use std::path::PathBuf;
 use std::time::Duration;
 
 use crate::coordinator::accept::AcceptanceTest;
 use crate::coordinator::chain::{Budget, ChainStats};
-use crate::coordinator::engine::{run_engine_kernel, ChainRun, EngineConfig, EngineResult};
+use crate::coordinator::checkpoint::{json_num, json_str, CheckpointSpec, Persist};
+use crate::coordinator::engine::{
+    run_engine_kernel, ChainRun, ChainStatus, EngineConfig, EngineResult,
+};
+use crate::coordinator::guard::{GuardPolicy, Guarded};
 use crate::coordinator::kernel::TransitionKernel;
 use crate::coordinator::mh::MhMode;
 use crate::coordinator::record::{PerChain, RecordDefault, RecordSpec, Replicate};
@@ -54,17 +59,37 @@ struct LaunchCfg {
     budget: Option<Budget>,
     burn_in: usize,
     thin: usize,
+    checkpoint_every: Option<usize>,
+    checkpoint_dir: Option<PathBuf>,
+    resume: Option<PathBuf>,
+    guard: GuardPolicy,
 }
 
 impl LaunchCfg {
     fn new() -> Self {
-        LaunchCfg { chains: 1, threads: 0, seed: 0, budget: None, burn_in: 0, thin: 1 }
+        LaunchCfg {
+            chains: 1,
+            threads: 0,
+            seed: 0,
+            budget: None,
+            burn_in: 0,
+            thin: 1,
+            checkpoint_every: None,
+            checkpoint_dir: None,
+            resume: None,
+            guard: GuardPolicy::default(),
+        }
     }
 
     fn engine_config(&self, who: &'static str) -> EngineConfig {
         let budget = self
             .budget
             .unwrap_or_else(|| panic!("{who}: call .budget(..) before .run()"));
+        let checkpoint = match (self.checkpoint_every, &self.checkpoint_dir) {
+            (Some(every), Some(dir)) => Some(CheckpointSpec { every, dir: dir.clone() }),
+            (None, None) => None,
+            _ => panic!("{who}: checkpoint_every and checkpoint_dir must be set together"),
+        };
         EngineConfig {
             chains: self.chains,
             threads: self.threads,
@@ -72,6 +97,8 @@ impl LaunchCfg {
             budget,
             burn_in: self.burn_in,
             thin: self.thin,
+            checkpoint,
+            resume: self.resume.clone(),
         }
     }
 }
@@ -201,11 +228,44 @@ impl<'a, M: LlDiffModel, K, T, R> Session<'a, M, K, T, R> {
         self.cfg.threads = threads;
         self
     }
+
+    /// Checkpoint every `every` completed steps (pair with
+    /// [`Session::checkpoint_dir`]).
+    pub fn checkpoint_every(mut self, every: usize) -> Self {
+        assert!(every >= 1, "checkpoint interval must be at least 1 step");
+        self.cfg.checkpoint_every = Some(every);
+        self
+    }
+
+    /// Directory receiving one `chain-<c>.ckpt` per chain plus a
+    /// `manifest.json` (created if missing).
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Resume chains from the checkpoints in `dir`. Chains without a
+    /// checkpoint file start fresh; a resumed chain replays the
+    /// uninterrupted same-seed run bit for bit (see
+    /// `coordinator::checkpoint`).
+    pub fn resume_from(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.resume = Some(dir.into());
+        self
+    }
+
+    /// Numerical-guard policy applied where log-likelihood moments enter
+    /// the acceptance test (default [`GuardPolicy::Warn`]: count trips in
+    /// `ChainStats::guard_trips`, never alter decisions).
+    pub fn guard(mut self, policy: GuardPolicy) -> Self {
+        self.cfg.guard = policy;
+        self
+    }
 }
 
 impl<'a, M, K, T, R> Session<'a, M, K, T, R>
 where
     M: LlDiffModel + Sync,
+    M::Param: Persist,
     K: ProposalKernel<M::Param> + Sync,
     T: AcceptanceTest + Sync,
     R: RecordSpec<M::Param> + Sync,
@@ -213,12 +273,16 @@ where
     /// Launch the chains and collect the typed report. Dispatches to the
     /// cached engine path automatically when the model implements
     /// `CachedLlDiff` (via `LlDiffModel::session_launch`); results are
-    /// bit-identical either way.
+    /// bit-identical either way. The acceptance rule always runs behind
+    /// the numerical guard ([`Session::guard`]; the default `Warn` policy
+    /// is decision-transparent, so guarded and bare launches match bit
+    /// for bit).
     pub fn run(self) -> RunReport<R::Observer> {
         let Session { model, proposal, rule, record, init, cfg } = self;
         let proposal = proposal.expect("Session: call .kernel(..) before .run()");
         let init = init.expect("Session: call .init(..) before .run()");
         let ecfg = cfg.engine_config("Session");
+        let rule = Guarded::new(rule, cfg.guard);
         let result = model.session_launch(proposal, &rule, init, &ecfg, |c| record.make(c));
         RunReport::from_engine(result, rule.name(), model.session_backend(), Some(model.n()), &ecfg)
     }
@@ -334,12 +398,34 @@ impl<'a, T: TransitionKernel, R> KernelSession<'a, T, R> {
         self.cfg.threads = threads;
         self
     }
+
+    /// Checkpoint every `every` completed steps (pair with
+    /// [`KernelSession::checkpoint_dir`]).
+    pub fn checkpoint_every(mut self, every: usize) -> Self {
+        assert!(every >= 1, "checkpoint interval must be at least 1 step");
+        self.cfg.checkpoint_every = Some(every);
+        self
+    }
+
+    /// Directory receiving one `chain-<c>.ckpt` per chain plus a
+    /// `manifest.json` (created if missing).
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Resume chains from the checkpoints in `dir` (missing files start
+    /// fresh; see `coordinator::checkpoint`).
+    pub fn resume_from(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.resume = Some(dir.into());
+        self
+    }
 }
 
 impl<'a, T, R> KernelSession<'a, T, R>
 where
     T: TransitionKernel + Sync,
-    T::State: Sync,
+    T::State: Sync + Persist,
     R: RecordSpec<T::State> + Sync,
 {
     /// Launch the chains over the generic-kernel engine path and collect
@@ -375,11 +461,16 @@ pub struct RunReport<O> {
     pub burn_in: usize,
     /// Thinning interval.
     pub thin: usize,
-    /// Per-chain samples and statistics, in chain order.
+    /// Samples and statistics of the chains that completed, in chain
+    /// order (`ChainRun::chain` keeps the original index).
     pub runs: Vec<ChainRun>,
-    /// Per-chain observers, in chain order.
+    /// Observers of the completed chains, in `runs` order.
     pub observers: Vec<O>,
-    /// Chain-summed counters (`wall` is the slowest single chain).
+    /// Per-chain outcome for all launched chains, in chain order; failed
+    /// chains carry the step index and panic reason.
+    pub statuses: Vec<ChainStatus>,
+    /// Counters summed over completed chains (`wall` is the slowest
+    /// single chain).
     pub merged: ChainStats,
     /// Wall-clock duration of the whole launch.
     pub wall: Duration,
@@ -395,7 +486,7 @@ impl<O> RunReport<O> {
         n_data: Option<usize>,
         cfg: &EngineConfig,
     ) -> Self {
-        let EngineResult { runs, observers, merged, wall, convergence } = result;
+        let EngineResult { runs, observers, statuses, merged, wall, convergence } = result;
         RunReport {
             rule,
             backend,
@@ -407,6 +498,7 @@ impl<O> RunReport<O> {
             thin: cfg.thin,
             runs,
             observers,
+            statuses,
             merged,
             wall,
             convergence,
@@ -419,6 +511,11 @@ impl<O> RunReport<O> {
             .iter()
             .map(|r| r.samples.iter().map(|s| s.value).collect())
             .collect()
+    }
+
+    /// Number of launched chains that failed (panic or guard abort).
+    pub fn failed_chains(&self) -> usize {
+        self.statuses.iter().filter(|s| s.is_failed()).count()
     }
 
     /// Pooled acceptance rate over all chains.
@@ -523,12 +620,13 @@ impl<O> RunReport<O> {
             json_num(self.budget_consumed())
         ));
         s.push_str(&format!(
-            "\"totals\":{{\"steps\":{},\"accepted\":{},\"data_used\":{},\"wall_secs\":{},\
-             \"acceptance_rate\":{},\"mean_data_fraction\":{},\"steps_per_sec\":{},\
-             \"data_per_sec\":{}}},",
+            "\"totals\":{{\"steps\":{},\"accepted\":{},\"data_used\":{},\"guard_trips\":{},\
+             \"wall_secs\":{},\"acceptance_rate\":{},\"mean_data_fraction\":{},\
+             \"steps_per_sec\":{},\"data_per_sec\":{}}},",
             self.merged.steps,
             self.merged.accepted,
             self.merged.data_used,
+            self.merged.guard_trips,
             json_num(self.wall.as_secs_f64()),
             json_num(self.acceptance_rate()),
             json_num(self.mean_data_fraction()),
@@ -542,6 +640,23 @@ impl<O> RunReport<O> {
             json_num(self.convergence.pooled_mean),
             self.convergence.n_samples
         ));
+        s.push_str(&format!("\"failed_chains\":{},", self.failed_chains()));
+        s.push_str("\"chain_status\":[");
+        for (i, st) in self.statuses.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            match st {
+                ChainStatus::Completed => {
+                    s.push_str(&format!("{{\"chain\":{i},\"status\":\"completed\"}}"));
+                }
+                ChainStatus::Failed { step, reason } => s.push_str(&format!(
+                    "{{\"chain\":{i},\"status\":\"failed\",\"step\":{step},\"reason\":{}}}",
+                    json_str(reason)
+                )),
+            }
+        }
+        s.push_str("],");
         s.push_str("\"per_chain\":[");
         for (i, run) in self.runs.iter().enumerate() {
             if i > 0 {
@@ -549,11 +664,12 @@ impl<O> RunReport<O> {
             }
             s.push_str(&format!(
                 "{{\"chain\":{},\"steps\":{},\"accepted\":{},\"data_used\":{},\
-                 \"wall_secs\":{},\"draws\":[",
+                 \"guard_trips\":{},\"wall_secs\":{},\"draws\":[",
                 run.chain,
                 run.stats.steps,
                 run.stats.accepted,
                 run.stats.data_used,
+                run.stats.guard_trips,
                 json_num(run.stats.wall.as_secs_f64())
             ));
             for (j, smp) in run.samples.iter().enumerate() {
@@ -567,39 +683,6 @@ impl<O> RunReport<O> {
         s.push_str("]}");
         s
     }
-}
-
-/// A finite `f64` as its shortest round-trip decimal (Rust's `Display`
-/// never emits exponents, so the result is always a valid JSON number);
-/// NaN / infinities become `null`.
-fn json_num(v: f64) -> String {
-    if v.is_finite() {
-        format!("{v}")
-    } else {
-        "null".to_string()
-    }
-}
-
-/// A string as a quoted JSON string literal. Rule labels are
-/// caller-supplied (`KernelSession::label`, custom `AcceptanceTest`
-/// names), so quotes, backslashes and control characters must be
-/// escaped for the report to stay parseable.
-fn json_str(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
 }
 
 fn per_sec(count: f64, wall: Duration) -> f64 {
@@ -734,7 +817,11 @@ mod tests {
                 _: &mut Pcg64,
             ) -> crate::coordinator::kernel::StepOutcome {
                 *state += 1.0;
-                crate::coordinator::kernel::StepOutcome { accepted: true, data_used: 5 }
+                crate::coordinator::kernel::StepOutcome {
+                    accepted: true,
+                    data_used: 5,
+                    guard_trips: 0,
+                }
             }
         }
         let report = KernelSession::new(&Counter)

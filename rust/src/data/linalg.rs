@@ -2,11 +2,29 @@
 //! O(D^3) routines are exactly right): matvec, matmul, QR-based random
 //! orthonormal matrices, LU slogdet, skew-symmetric matrix exponential.
 
+use crate::coordinator::checkpoint::{BinReader, BinWriter, CkptError, Persist};
+
 /// Row-major dense square matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
     pub d: usize,
     pub a: Vec<f64>,
+}
+
+impl Persist for Mat {
+    fn persist(&self, w: &mut BinWriter) {
+        w.put_usize(self.d);
+        self.a.persist(w);
+    }
+
+    fn restore(r: &mut BinReader<'_>) -> Result<Self, CkptError> {
+        let d = r.usize_()?;
+        let a = Vec::<f64>::restore(r)?;
+        if a.len() != d * d {
+            return Err(CkptError::Corrupt("matrix payload is not d*d"));
+        }
+        Ok(Mat { d, a })
+    }
 }
 
 impl Mat {

@@ -6,8 +6,12 @@
 //!   austerity design --n N --tol T         optimal sequential test design
 //!   austerity sample [--eps E] [--steps K] [--chains C] [--json] [--pjrt]
 //!                                          run logistic RW-MH chains on
-//!                                          the Session front-end
+//!                                          the Session front-end, with
+//!                                          optional --checkpoint-dir /
+//!                                          --checkpoint-every / --resume
+//!                                          crash recovery
 
+use std::path::PathBuf;
 use std::process::ExitCode;
 
 use austerity::coordinator::design::{worst_case_design, DesignGrid};
@@ -34,6 +38,7 @@ fn main() -> ExitCode {
                  sample [--rule exact|austerity|barker|confidence]\n\
                         [--eps E] [--sigma S] [--delta D] [--steps K] [--n N]\n\
                         [--chains C] [--seed S] [--json] [--pjrt]\n\
+                        [--checkpoint-dir D --checkpoint-every K] [--resume D]\n\
                  \n\
                  figures: {}",
                 ALL_FIGURES.join(" ")
@@ -120,6 +125,13 @@ fn design(args: &[String]) -> ExitCode {
     }
 }
 
+/// Checkpoint/resume flags of the `sample` subcommand.
+struct CkptCli {
+    every: Option<usize>,
+    dir: Option<PathBuf>,
+    resume: Option<PathBuf>,
+}
+
 /// Run a sample launch on the `Session` front-end and print either the
 /// human-readable summary or the machine-readable `RunReport` JSON.
 #[allow(clippy::too_many_arguments)]
@@ -132,17 +144,27 @@ fn run_sample<M>(
     chains: usize,
     seed: u64,
     json: bool,
+    ckpt: &CkptCli,
 ) where
     M: LlDiffModel<Param = Vec<f64>> + Sync,
 {
-    let report = Session::new(model)
+    let mut session = Session::new(model)
         .kernel(kernel)
         .rule(mode.clone())
         .chains(chains)
         .seed(seed)
         .budget(Budget::Steps(steps))
-        .init(init)
-        .run();
+        .init(init);
+    if let Some(every) = ckpt.every {
+        session = session.checkpoint_every(every);
+    }
+    if let Some(dir) = &ckpt.dir {
+        session = session.checkpoint_dir(dir.clone());
+    }
+    if let Some(dir) = &ckpt.resume {
+        session = session.resume_from(dir.clone());
+    }
+    let report = session.run();
     if json {
         println!("{}", report.to_json());
     } else {
@@ -177,6 +199,19 @@ fn sample(args: &[String]) -> ExitCode {
     let rule = flag_value(args, "--rule").unwrap_or_else(|| "austerity".into());
     let use_pjrt = args.iter().any(|a| a == "--pjrt");
     let json = args.iter().any(|a| a == "--json");
+    let ckpt = CkptCli {
+        every: flag_value(args, "--checkpoint-every").and_then(|s| s.parse().ok()),
+        dir: flag_value(args, "--checkpoint-dir").map(PathBuf::from),
+        resume: flag_value(args, "--resume").map(PathBuf::from),
+    };
+    if ckpt.every.is_some() != ckpt.dir.is_some() {
+        eprintln!("--checkpoint-every and --checkpoint-dir must be given together");
+        return ExitCode::from(2);
+    }
+    if ckpt.every == Some(0) {
+        eprintln!("--checkpoint-every must be >= 1");
+        return ExitCode::from(2);
+    }
 
     let model = austerity::exp::population::mnist_like_model(n, 42);
     let kernel = GaussianRandomWalk::new(0.01, model.prior_precision);
@@ -224,12 +259,12 @@ fn sample(args: &[String]) -> ExitCode {
         if !json {
             println!("backend: pjrt (AOT Pallas kernel), N={n}, rule={rule}");
         }
-        run_sample(&pjrt, &kernel, &mode, init, steps, chains, seed, json);
+        run_sample(&pjrt, &kernel, &mode, init, steps, chains, seed, json, &ckpt);
     } else {
         if !json {
             println!("backend: native, N={n}, rule={rule}");
         }
-        run_sample(&model, &kernel, &mode, init, steps, chains, seed, json);
+        run_sample(&model, &kernel, &mode, init, steps, chains, seed, json, &ckpt);
     }
     ExitCode::SUCCESS
 }

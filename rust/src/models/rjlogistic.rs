@@ -3,6 +3,7 @@
 //! prior on active coefficients, a right-truncated Poisson prior on the
 //! model size, and the MiniBooNE-like likelihood.
 
+use crate::coordinator::checkpoint::{BinReader, BinWriter, CkptError, Persist};
 use crate::data::Dataset;
 use crate::models::logistic::log_sigmoid;
 use crate::models::traits::LlDiffModel;
@@ -14,6 +15,17 @@ use crate::stats::student_t::ln_gamma;
 pub struct RjState {
     pub beta: Vec<f64>,
     pub active: Vec<usize>,
+}
+
+impl Persist for RjState {
+    fn persist(&self, w: &mut BinWriter) {
+        self.beta.persist(w);
+        self.active.persist(w);
+    }
+
+    fn restore(r: &mut BinReader<'_>) -> Result<Self, CkptError> {
+        Ok(RjState { beta: Vec::restore(r)?, active: Vec::restore(r)? })
+    }
 }
 
 impl RjState {

@@ -345,6 +345,7 @@ pub trait LlDiffModel {
     ) -> crate::coordinator::engine::EngineResult<O>
     where
         Self: Sized + Sync,
+        Self::Param: crate::coordinator::checkpoint::Persist,
         K: ProposalKernel<Self::Param> + Sync,
         T: crate::coordinator::accept::AcceptanceTest + Sync,
         OF: Fn(usize) -> O + Sync,
@@ -439,6 +440,7 @@ macro_rules! cached_session_dispatch {
         ) -> crate::coordinator::engine::EngineResult<O>
         where
             Self: Sized + Sync,
+            Self::Param: crate::coordinator::checkpoint::Persist,
             K: crate::models::traits::ProposalKernel<Self::Param> + Sync,
             T: crate::coordinator::accept::AcceptanceTest + Sync,
             OF: Fn(usize) -> O + Sync,

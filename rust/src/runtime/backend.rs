@@ -22,6 +22,9 @@ pub struct PjrtLogistic<'a> {
     /// dataset pre-converted to f32, padded row-major to d_cap columns
     /// (gathering a mini-batch is then a memcpy per row — §Perf)
     x_f32: Vec<f32>,
+    /// iota table `0..n` sliced by the full-scan range path, so range
+    /// scans stage no per-chunk index allocation (§Perf)
+    iota: Vec<u32>,
     y_f32: Vec<f32>,
     /// batch capacity of the compiled kernel (manifest `x` leading dim)
     batch_cap: usize,
@@ -71,7 +74,8 @@ impl<'a> PjrtLogistic<'a> {
             y: vec![0f32; batch_cap],
             mask: vec![0f32; batch_cap],
         };
-        Ok(PjrtLogistic { model, inner: Mutex::new(scratch), x_f32, y_f32, batch_cap, d_cap })
+        let iota: Vec<u32> = (0..n as u32).collect();
+        Ok(PjrtLogistic { model, inner: Mutex::new(scratch), x_f32, y_f32, iota, batch_cap, d_cap })
     }
 
     pub fn batch_capacity(&self) -> usize {
@@ -151,10 +155,9 @@ impl LlDiffModel for PjrtLogistic<'_> {
     ) -> (f64, f64) {
         // full scans must keep hitting the AOT kernel (and match the
         // gathered path bit for bit), so route the range through the
-        // same chunked dispatch; the small index staging Vec is noise
-        // next to a PJRT execution
-        let idx: Vec<u32> = (start as u32..end as u32).collect();
-        self.lldiff_moments(&idx, cur, prop)
+        // same chunked dispatch, slicing the precomputed iota table
+        // instead of staging a fresh index Vec per chunk per scan
+        self.lldiff_moments(&self.iota[start..end], cur, prop)
     }
 
     fn session_backend(&self) -> &'static str {
@@ -168,6 +171,9 @@ impl LlDiffModel for PjrtLogistic<'_> {
 pub struct PjrtIca<'a> {
     model: &'a crate::models::IcaModel,
     rt: Mutex<PjrtRuntime>,
+    /// iota table `0..n` sliced by the full-scan range path (see
+    /// `PjrtLogistic::iota`)
+    iota: Vec<u32>,
     batch_cap: usize,
     d: usize,
 }
@@ -186,7 +192,8 @@ impl<'a> PjrtIca<'a> {
             model.d()
         );
         rt.load("ica_lldiff")?;
-        Ok(PjrtIca { model, rt: Mutex::new(rt), batch_cap, d })
+        let iota: Vec<u32> = (0..model.n() as u32).collect();
+        Ok(PjrtIca { model, rt: Mutex::new(rt), iota, batch_cap, d })
     }
 
     fn mat_f32(&self, m: &crate::data::Mat) -> Vec<f32> {
@@ -231,9 +238,9 @@ impl LlDiffModel for PjrtIca<'_> {
         cur: &Self::Param,
         prop: &Self::Param,
     ) -> (f64, f64) {
-        // same chunked kernel dispatch as the gathered path (bit-equal)
-        let idx: Vec<u32> = (start as u32..end as u32).collect();
-        self.lldiff_moments(&idx, cur, prop)
+        // same chunked kernel dispatch as the gathered path (bit-equal),
+        // sliced from the precomputed iota table — no per-chunk staging
+        self.lldiff_moments(&self.iota[start..end], cur, prop)
     }
 
     fn lldiff_moments(&self, idx: &[u32], cur: &Self::Param, prop: &Self::Param) -> (f64, f64) {

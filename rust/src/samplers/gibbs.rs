@@ -7,7 +7,8 @@
 //! equivalent to mean lldiff > log(u/(1-u))/Np (see DESIGN.md).
 
 use crate::coordinator::austerity::BoundSeq;
-use crate::coordinator::kernel::{StepOutcome, TransitionKernel};
+use crate::coordinator::checkpoint::{BinReader, BinWriter, CkptError, Persist};
+use crate::coordinator::kernel::{restore_sched, StepOutcome, TransitionKernel};
 use crate::coordinator::scheduler::MinibatchScheduler;
 use crate::models::mrf::MrfModel;
 use crate::stats::student_t::t_sf;
@@ -127,7 +128,21 @@ impl TransitionKernel for GibbsSweepKernel<'_> {
         let mut stats = GibbsStats::default();
         gibbs_sweep(self.model, x, &self.mode, scratch, &mut stats, rng);
         // a sweep always advances the state; cost is in pair evaluations
-        StepOutcome { accepted: true, data_used: stats.pairs_used }
+        StepOutcome { accepted: true, data_used: stats.pairs_used, guard_trips: 0 }
+    }
+
+    // The approximate mode's scheduler permutation carries across sweeps;
+    // the exact mode writes an untouched (fresh-equivalent) buffer.
+    fn save_scratch(&self, scratch: &GibbsScratch, w: &mut BinWriter) {
+        scratch.sched.persist(w);
+    }
+
+    fn restore_scratch(
+        &self,
+        scratch: &mut GibbsScratch,
+        r: &mut BinReader<'_>,
+    ) -> Result<(), CkptError> {
+        restore_sched(&mut scratch.sched, self.model.n_pairs(), r)
     }
 }
 

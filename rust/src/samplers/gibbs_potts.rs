@@ -22,7 +22,8 @@
 //! comparison errs with the controlled probability of §5.
 
 use crate::coordinator::austerity::BoundSeq;
-use crate::coordinator::kernel::{StepOutcome, TransitionKernel};
+use crate::coordinator::checkpoint::{BinReader, BinWriter, CkptError, Persist};
+use crate::coordinator::kernel::{restore_sched, StepOutcome, TransitionKernel};
 use crate::coordinator::scheduler::MinibatchScheduler;
 use crate::models::potts::PottsModel;
 use crate::stats::student_t::t_sf;
@@ -168,7 +169,21 @@ impl TransitionKernel for PottsSweepKernel<'_> {
     fn step(&self, x: &mut Vec<usize>, scratch: &mut PottsScratch, rng: &mut Pcg64) -> StepOutcome {
         let mut stats = PottsStats::default();
         potts_sweep(self.model, x, &self.mode, scratch, &mut stats, rng);
-        StepOutcome { accepted: true, data_used: stats.pairs_used }
+        StepOutcome { accepted: true, data_used: stats.pairs_used, guard_trips: 0 }
+    }
+
+    // Only the scheduler permutation carries across sweeps; the Gumbel
+    // buffer is redrawn per update and `ranks` is rebuilt per batch.
+    fn save_scratch(&self, scratch: &PottsScratch, w: &mut BinWriter) {
+        scratch.sched.persist(w);
+    }
+
+    fn restore_scratch(
+        &self,
+        scratch: &mut PottsScratch,
+        r: &mut BinReader<'_>,
+    ) -> Result<(), CkptError> {
+        restore_sched(&mut scratch.sched, self.model.n_pairs(), r)
     }
 }
 

@@ -16,7 +16,8 @@
 //! sequential test keeps mixing.
 
 use crate::coordinator::engine::ChainObserver;
-use crate::coordinator::kernel::{StepOutcome, TransitionKernel};
+use crate::coordinator::checkpoint::{BinReader, BinWriter, CkptError, Persist};
+use crate::coordinator::kernel::{restore_sched, StepOutcome, TransitionKernel};
 use crate::coordinator::scheduler::MinibatchScheduler;
 use crate::models::traits::{LlDiffModel, Proposal, ProposalKernel};
 use crate::stats::Pcg64;
@@ -197,7 +198,41 @@ where
             state.stuck += 1;
             state.longest_stuck = state.longest_stuck.max(state.stuck);
         }
-        StepOutcome { accepted, data_used }
+        StepOutcome { accepted, data_used, guard_trips: 0 }
+    }
+
+    fn save_scratch(&self, scratch: &PmScratch, w: &mut BinWriter) {
+        scratch.sched.persist(w);
+    }
+
+    fn restore_scratch(
+        &self,
+        scratch: &mut PmScratch,
+        r: &mut BinReader<'_>,
+    ) -> Result<(), CkptError> {
+        restore_sched(&mut scratch.sched, self.model.n(), r)
+    }
+}
+
+/// The carried weight and pathology counters are genuinely Markov state
+/// (see [`PmState`]), so they checkpoint with the parameter.
+impl<P: Persist> Persist for PmState<P> {
+    fn persist(&self, w: &mut BinWriter) {
+        self.param.persist(w);
+        w.put_f64(self.weight);
+        w.put_usize(self.clamped);
+        w.put_usize(self.stuck);
+        w.put_usize(self.longest_stuck);
+    }
+
+    fn restore(r: &mut BinReader<'_>) -> Result<Self, CkptError> {
+        Ok(PmState {
+            param: P::restore(r)?,
+            weight: r.f64()?,
+            clamped: r.usize_()?,
+            stuck: r.usize_()?,
+            longest_stuck: r.usize_()?,
+        })
     }
 }
 

@@ -12,7 +12,8 @@
 //!                       / (rho(theta') q(theta|theta', Xn)) ].
 
 use crate::coordinator::austerity::{seq_mh_test, SeqTestConfig};
-use crate::coordinator::kernel::{StepOutcome, TransitionKernel};
+use crate::coordinator::checkpoint::{BinReader, BinWriter, CkptError, Persist};
+use crate::coordinator::kernel::{restore_sched, StepOutcome, TransitionKernel};
 use crate::coordinator::scheduler::MinibatchScheduler;
 use crate::models::linreg::LinRegModel;
 use crate::models::traits::LlDiffModel;
@@ -116,7 +117,24 @@ impl TransitionKernel for SgldKernel<'_> {
         if accepted {
             *theta = prop;
         }
-        StepOutcome { accepted, data_used }
+        StepOutcome { accepted, data_used, guard_trips: 0 }
+    }
+
+    // Both scheduler permutations carry across steps and feed future
+    // mini-batch draws, so resume bit-identity needs them verbatim
+    // (idx_buf is rebuilt every step).
+    fn save_scratch(&self, scratch: &SgldScratch, w: &mut BinWriter) {
+        scratch.grad_sched.persist(w);
+        scratch.test_sched.persist(w);
+    }
+
+    fn restore_scratch(
+        &self,
+        scratch: &mut SgldScratch,
+        r: &mut BinReader<'_>,
+    ) -> Result<(), CkptError> {
+        restore_sched(&mut scratch.grad_sched, self.model.n(), r)?;
+        restore_sched(&mut scratch.test_sched, self.model.n(), r)
     }
 }
 

@@ -9,7 +9,9 @@
 //!   against an analytic CDF, and z-score moment checks, both with
 //!   deterministic seeded thresholds;
 //! * `models` — analytically solvable targets (the conjugate Gaussian
-//!   mean model) to validate acceptance rules end to end.
+//!   mean model) to validate acceptance rules end to end;
+//! * `fault` — scripted fault injection (`FaultyModel`) exercising the
+//!   engine's panic isolation and the numerical-guard layer.
 //!
 //! ```ignore
 //! forall(128, |rng| {
@@ -245,6 +247,94 @@ pub mod models {
     }
 }
 
+/// Scripted fault injection for the fault-tolerance tests.
+pub mod fault {
+    use crate::coordinator::chain::current_chain_step;
+    use crate::models::traits::LlDiffModel;
+
+    /// What a scripted fault point injects when reached.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum FaultKind {
+        /// Panic inside the likelihood evaluation (worker crash).
+        Panic,
+        /// Return NaN moments (silent numerical poisoning).
+        Nan,
+        /// Return +Inf moments.
+        Inf,
+    }
+
+    /// Wraps any `LlDiffModel` and fires scripted faults when the
+    /// executing chain reaches a scheduled step, identified through the
+    /// drive loop's thread-local chain/step context
+    /// (`coordinator::chain::current_chain_step`). Every unscheduled
+    /// evaluation delegates to the inner model untouched, so a
+    /// fault-free `FaultyModel` run is bit-identical to the bare model.
+    pub struct FaultyModel<M> {
+        inner: M,
+        faults: Vec<(usize, usize, FaultKind)>,
+    }
+
+    impl<M> FaultyModel<M> {
+        pub fn new(inner: M) -> Self {
+            FaultyModel { inner, faults: Vec::new() }
+        }
+
+        /// Schedule `kind` to fire whenever `chain` executes step `step`.
+        pub fn fault(mut self, chain: usize, step: usize, kind: FaultKind) -> Self {
+            self.faults.push((chain, step, kind));
+            self
+        }
+
+        fn active(&self) -> Option<FaultKind> {
+            let (chain, step) = current_chain_step();
+            self.faults.iter().find(|&&(c, s, _)| c == chain && s == step).map(|&(.., k)| k)
+        }
+
+        fn poison(kind: FaultKind) -> (f64, f64) {
+            match kind {
+                FaultKind::Panic => panic!("injected fault: scripted panic in likelihood"),
+                FaultKind::Nan => (f64::NAN, f64::NAN),
+                FaultKind::Inf => (f64::INFINITY, f64::INFINITY),
+            }
+        }
+    }
+
+    impl<M: LlDiffModel> LlDiffModel for FaultyModel<M> {
+        type Param = M::Param;
+
+        fn n(&self) -> usize {
+            self.inner.n()
+        }
+
+        fn lldiff(&self, i: usize, cur: &M::Param, prop: &M::Param) -> f64 {
+            match self.active() {
+                Some(kind) => Self::poison(kind).0,
+                None => self.inner.lldiff(i, cur, prop),
+            }
+        }
+
+        fn lldiff_moments(&self, idx: &[u32], cur: &M::Param, prop: &M::Param) -> (f64, f64) {
+            match self.active() {
+                Some(kind) => Self::poison(kind),
+                None => self.inner.lldiff_moments(idx, cur, prop),
+            }
+        }
+
+        fn lldiff_range_moments(
+            &self,
+            start: usize,
+            end: usize,
+            cur: &M::Param,
+            prop: &M::Param,
+        ) -> (f64, f64) {
+            match self.active() {
+                Some(kind) => Self::poison(kind),
+                None => self.inner.lldiff_range_moments(start, end, cur, prop),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -330,6 +420,20 @@ mod tests {
         let ll = |x: f64, t: f64| -(x - t) * (x - t) / (2.0 * 2.0);
         let want = ll(1.0, 0.7) - ll(1.0, 0.2);
         assert!((m.lldiff(0, &0.2, &0.7) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faulty_model_delegates_when_no_fault_is_scheduled_here() {
+        use crate::models::traits::LlDiffModel;
+        let inner = models::ConjugateGaussian::new(vec![1.0, 3.0], 2.0, 0.0, 8.0);
+        let want = inner.lldiff(0, &0.2, &0.7);
+        let m = fault::FaultyModel::new(inner).fault(0, 5, fault::FaultKind::Nan);
+        // outside a drive loop the chain/step context is unset, so the
+        // scripted point never matches and the wrapper is transparent
+        assert_eq!(m.lldiff(0, &0.2, &0.7), want);
+        let (s, s2) = m.lldiff_moments(&[0, 1], &0.2, &0.7);
+        assert!(s.is_finite() && s2.is_finite());
+        assert_eq!(m.n(), 2);
     }
 
     #[test]

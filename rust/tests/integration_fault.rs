@@ -1,0 +1,425 @@
+//! Fault-tolerance integration suite.
+//!
+//! Three pillars, matching DESIGN.md §Fault-tolerance layer:
+//!
+//! 1. **Checkpoint/resume bit-identity** — a launch that checkpoints,
+//!    stops at a partial budget and resumes must produce draws,
+//!    acceptance counters and budget accounting bitwise identical to the
+//!    same-seed uninterrupted run, for the cached and uncached MH paths
+//!    under all four acceptance rules plus the SGLD and Gibbs kernel
+//!    families.
+//! 2. **Panic isolation** — a scripted worker panic downs exactly its
+//!    own chain (`ChainStatus::Failed` with the faulting step), while
+//!    the other chains complete and the merged statistics stay finite.
+//! 3. **Numerical guards** — NaN/Inf moments reaching an acceptance
+//!    test are counted (`Warn`), force-rejected (`RejectProposal`) or
+//!    turned into a single failed chain (`Abort`).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use austerity::coordinator::record::ScalarFn;
+use austerity::coordinator::{
+    Budget, ChainRun, ChainStatus, GuardPolicy, KernelSession, MhMode, Sample, Session,
+};
+use austerity::data::synthetic::{linreg_toy, two_class_gaussian};
+use austerity::models::{LinRegModel, LlDiffModel, LogisticModel, MrfModel};
+use austerity::samplers::gibbs::{GibbsMode, GibbsSweepKernel};
+use austerity::samplers::sgld::{SgldConfig, SgldKernel};
+use austerity::samplers::GaussianRandomWalk;
+use austerity::testkit::fault::{FaultKind, FaultyModel};
+use austerity::testkit::models::ConjugateGaussian;
+
+static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// Fresh per-test checkpoint directory under the system temp dir.
+fn scratch_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "austerity_fault_{tag}_{}_{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+fn bits(samples: &[Sample]) -> Vec<u64> {
+    samples.iter().map(|s| s.value.to_bits()).collect()
+}
+
+/// Chain-by-chain equality of draws (bitwise) and every counter the
+/// checkpoint carries. Wall time is excluded: it is real elapsed time
+/// and legitimately differs between the two runs.
+fn assert_runs_identical(a: &[ChainRun], b: &[ChainRun], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: chain count");
+    for (ra, rb) in a.iter().zip(b) {
+        let c = ra.chain;
+        assert_eq!(ra.chain, rb.chain, "{label}");
+        assert_eq!(ra.stats.steps, rb.stats.steps, "{label} chain {c}: steps");
+        assert_eq!(ra.stats.accepted, rb.stats.accepted, "{label} chain {c}: accepted");
+        assert_eq!(ra.stats.data_used, rb.stats.data_used, "{label} chain {c}: data_used");
+        assert_eq!(ra.stats.guard_trips, rb.stats.guard_trips, "{label} chain {c}: guard_trips");
+        assert_eq!(bits(&ra.samples), bits(&rb.samples), "{label} chain {c}: draws");
+    }
+}
+
+fn mh_modes(batch: usize) -> Vec<MhMode> {
+    vec![
+        MhMode::Exact,
+        MhMode::approx(0.05, batch),
+        MhMode::confidence(0.05, batch),
+        MhMode::barker(1.0, batch),
+    ]
+}
+
+// ---------------------------------------------------------------------
+// 1. checkpoint/resume bit-identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn resume_is_bit_identical_for_uncached_mh_rules() {
+    let model = ConjugateGaussian::synthetic(900, 0.3, 1.0, 0.0, 2.0, 7);
+    let proposal = model.rw_proposal(0.4);
+    for (i, mode) in mh_modes(64).into_iter().enumerate() {
+        let dir = scratch_dir(&format!("uncached_{i}"));
+        let launch = |budget: usize| {
+            Session::new(&model)
+                .kernel(&proposal)
+                .rule(mode.clone())
+                .chains(2)
+                .seed(11)
+                .budget(Budget::Steps(budget))
+                .burn_in(10)
+                .thin(2)
+                .init(0.0)
+        };
+        let full = launch(120).run();
+        assert_eq!(full.backend, "uncached");
+        // interrupted run: checkpoints land at steps 15, 30, 45, 60
+        let partial = launch(60).checkpoint_every(15).checkpoint_dir(dir.clone()).run();
+        assert_eq!(partial.merged.steps, 2 * 60);
+        let resumed = launch(120).resume_from(dir.clone()).run();
+        assert_runs_identical(&resumed.runs, &full.runs, &format!("uncached {mode:?}"));
+        assert_eq!(resumed.merged.data_used, full.merged.data_used, "{mode:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn resume_is_bit_identical_for_cached_mh_rules() {
+    let model = LogisticModel::new(two_class_gaussian(1_200, 5, 1.2, 0), 10.0);
+    let init = model.map_estimate(40);
+    let kernel = GaussianRandomWalk::new(0.02, 10.0);
+    for (i, mode) in mh_modes(100).into_iter().enumerate() {
+        let dir = scratch_dir(&format!("cached_{i}"));
+        let launch = |budget: usize| {
+            Session::new(&model)
+                .kernel(&kernel)
+                .rule(mode.clone())
+                .chains(2)
+                .seed(42)
+                .budget(Budget::Steps(budget))
+                .burn_in(10)
+                .thin(2)
+                .init(init.clone())
+        };
+        let full = launch(120).run();
+        assert_eq!(full.backend, "cached", "logistic model rides the cached path");
+        let partial = launch(60).checkpoint_every(20).checkpoint_dir(dir.clone()).run();
+        assert_eq!(partial.merged.steps, 2 * 60);
+        // the likelihood cache is rebuilt from the restored state on
+        // resume, so the cached path must still replay bit for bit
+        let resumed = launch(120).resume_from(dir.clone()).run();
+        assert_runs_identical(&resumed.runs, &full.runs, &format!("cached {mode:?}"));
+        assert_eq!(resumed.merged.data_used, full.merged.data_used, "{mode:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn resume_is_bit_identical_for_sgld_kernel_sessions() {
+    let model = LinRegModel::new(linreg_toy(2_000, 0), 3.0, 4950.0);
+    let kernel = SgldKernel {
+        model: &model,
+        cfg: SgldConfig { alpha: 5e-6, grad_batch: 50, correction: None },
+    };
+    let dir = scratch_dir("sgld");
+    let launch = |budget: usize| {
+        KernelSession::new(&kernel)
+            .label("sgld")
+            .data_size(model.n())
+            .chains(2)
+            .seed(9)
+            .budget(Budget::Steps(budget))
+            .burn_in(30)
+            .init(0.45)
+    };
+    let full = launch(300).run();
+    let partial = launch(150).checkpoint_every(50).checkpoint_dir(dir.clone()).run();
+    assert_eq!(partial.merged.steps, 2 * 150);
+    let resumed = launch(300).resume_from(dir.clone()).run();
+    assert_runs_identical(&resumed.runs, &full.runs, "sgld");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_is_bit_identical_for_gibbs_kernel_sessions() {
+    let model = MrfModel::random(24, 0.1, 2);
+    let x0: Vec<bool> = (0..24).map(|i| i % 3 == 0).collect();
+    for (i, mode) in
+        [GibbsMode::Exact, GibbsMode::Approx { eps: 0.05, batch: 40 }].into_iter().enumerate()
+    {
+        let dir = scratch_dir(&format!("gibbs_{i}"));
+        let kernel = GibbsSweepKernel { model: &model, mode: mode.clone() };
+        let launch = |budget: usize| {
+            KernelSession::new(&kernel)
+                .label("gibbs")
+                .chains(2)
+                .seed(6)
+                .budget(Budget::Steps(budget))
+                .record(ScalarFn::new(|x: &Vec<bool>| {
+                    x.iter().filter(|&&b| b).count() as f64
+                }))
+                .init(x0.clone())
+        };
+        let full = launch(40).run();
+        let partial = launch(20).checkpoint_every(10).checkpoint_dir(dir.clone()).run();
+        assert_eq!(partial.merged.steps, 2 * 20);
+        let resumed = launch(40).resume_from(dir.clone()).run();
+        assert_runs_identical(&resumed.runs, &full.runs, &format!("gibbs {mode:?}"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn resume_with_missing_checkpoints_starts_fresh() {
+    let model = ConjugateGaussian::synthetic(400, 0.3, 1.0, 0.0, 2.0, 7);
+    let proposal = model.rw_proposal(0.4);
+    let dir = scratch_dir("missing");
+    let launch = || {
+        Session::new(&model)
+            .kernel(&proposal)
+            .rule(MhMode::approx(0.05, 64))
+            .chains(2)
+            .seed(5)
+            .budget(Budget::Steps(50))
+            .init(0.0)
+    };
+    let plain = launch().run();
+    // the directory holds no chain-<c>.ckpt files: every chain starts
+    // from scratch, identical to a launch without resume at all
+    let resumed = launch().resume_from(dir.clone()).run();
+    assert_runs_identical(&resumed.runs, &plain.runs, "fresh-start resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// 2. per-chain panic isolation
+// ---------------------------------------------------------------------
+
+#[test]
+fn scripted_panic_downs_exactly_one_chain() {
+    let inner = ConjugateGaussian::synthetic(900, 0.3, 1.0, 0.0, 2.0, 7);
+    let proposal = inner.rw_proposal(0.4);
+    let model = FaultyModel::new(inner).fault(2, 17, FaultKind::Panic);
+    let report = Session::new(&model)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(4)
+        .seed(3)
+        .budget(Budget::Steps(40))
+        .init(0.0)
+        .run();
+    assert_eq!(report.chains, 4);
+    assert_eq!(report.failed_chains(), 1);
+    match &report.statuses[2] {
+        ChainStatus::Failed { step, reason } => {
+            assert_eq!(*step, 17, "fault was scripted at step 17");
+            assert!(reason.contains("injected fault"), "reason: {reason}");
+        }
+        s => panic!("chain 2 should have failed, got {s:?}"),
+    }
+    for c in [0usize, 1, 3] {
+        assert_eq!(report.statuses[c], ChainStatus::Completed, "chain {c}");
+    }
+    // survivors keep their original chain indices and full budgets
+    let surviving: Vec<usize> = report.runs.iter().map(|r| r.chain).collect();
+    assert_eq!(surviving, vec![0, 1, 3]);
+    assert_eq!(report.merged.steps, 3 * 40);
+    assert!(report.rhat().is_finite(), "rhat {}", report.rhat());
+    assert!(report.ess().is_finite());
+    assert!(report.pooled_mean().is_finite());
+    let json = report.to_json();
+    assert!(json.contains("\"failed_chains\":1"), "{json}");
+    assert!(json.contains("\"status\":\"failed\""), "{json}");
+    assert!(json.contains("injected fault"), "{json}");
+}
+
+#[test]
+fn merged_stats_stay_finite_with_two_failed_chains() {
+    let inner = ConjugateGaussian::synthetic(900, 0.3, 1.0, 0.0, 2.0, 7);
+    let proposal = inner.rw_proposal(0.4);
+    let model = FaultyModel::new(inner)
+        .fault(0, 3, FaultKind::Panic)
+        .fault(2, 7, FaultKind::Panic);
+    let report = Session::new(&model)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(4)
+        .seed(3)
+        .budget(Budget::Steps(40))
+        .init(0.0)
+        .run();
+    assert_eq!(report.failed_chains(), 2);
+    assert_eq!(report.runs.len(), 2);
+    assert_eq!(report.merged.steps, 2 * 40);
+    assert!(report.rhat().is_finite());
+    assert!(report.ess().is_finite());
+    assert!(report.pooled_mean().is_finite());
+    assert!(report.acceptance_rate().is_finite());
+}
+
+#[test]
+fn single_surviving_chain_degrades_to_nan_rhat_without_panicking() {
+    let inner = ConjugateGaussian::synthetic(900, 0.3, 1.0, 0.0, 2.0, 7);
+    let proposal = inner.rw_proposal(0.4);
+    let model = FaultyModel::new(inner)
+        .fault(0, 2, FaultKind::Panic)
+        .fault(1, 2, FaultKind::Panic)
+        .fault(3, 2, FaultKind::Panic);
+    let report = Session::new(&model)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(4)
+        .seed(3)
+        .budget(Budget::Steps(40))
+        .init(0.0)
+        .run();
+    assert_eq!(report.failed_chains(), 3);
+    assert_eq!(report.runs.len(), 1);
+    assert_eq!(report.merged.steps, 40);
+    // cross-chain R-hat needs two chains; a degraded launch reports NaN
+    // rather than a meaningless single-chain value
+    assert!(report.rhat().is_nan(), "rhat {}", report.rhat());
+    assert!(report.pooled_mean().is_finite());
+}
+
+#[test]
+fn all_chains_failing_still_yields_a_report() {
+    let inner = ConjugateGaussian::synthetic(400, 0.3, 1.0, 0.0, 2.0, 7);
+    let proposal = inner.rw_proposal(0.4);
+    let mut model = FaultyModel::new(inner);
+    for c in 0..3 {
+        model = model.fault(c, 1, FaultKind::Panic);
+    }
+    let report = Session::new(&model)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(3)
+        .seed(3)
+        .budget(Budget::Steps(20))
+        .init(0.0)
+        .run();
+    assert_eq!(report.failed_chains(), 3);
+    assert!(report.runs.is_empty());
+    assert_eq!(report.merged.steps, 0);
+    assert!(report.rhat().is_nan());
+    // JSON still serializes (non-finite numbers become null)
+    assert!(report.to_json().contains("\"failed_chains\":3"));
+}
+
+// ---------------------------------------------------------------------
+// 3. numerical-guard policies
+// ---------------------------------------------------------------------
+
+#[test]
+fn guard_warn_counts_trips_and_completes() {
+    let inner = ConjugateGaussian::synthetic(900, 0.3, 1.0, 0.0, 2.0, 7);
+    let proposal = inner.rw_proposal(0.4);
+    let model = FaultyModel::new(inner).fault(0, 5, FaultKind::Nan);
+    let report = Session::new(&model)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(1)
+        .seed(2)
+        .budget(Budget::Steps(20))
+        .init(0.0)
+        .run();
+    assert_eq!(report.failed_chains(), 0);
+    assert!(report.merged.guard_trips >= 1, "trips {}", report.merged.guard_trips);
+    assert!(report.runs[0].samples.iter().all(|s| s.value.is_finite()));
+    assert!(report.to_json().contains("\"guard_trips\":"));
+}
+
+#[test]
+fn guard_reject_proposal_keeps_the_chain_alive() {
+    let inner = ConjugateGaussian::synthetic(900, 0.3, 1.0, 0.0, 2.0, 7);
+    let proposal = inner.rw_proposal(0.4);
+    let model = FaultyModel::new(inner).fault(0, 5, FaultKind::Inf);
+    let report = Session::new(&model)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(1)
+        .seed(2)
+        .budget(Budget::Steps(20))
+        .guard(GuardPolicy::RejectProposal)
+        .init(0.0)
+        .run();
+    assert_eq!(report.failed_chains(), 0);
+    assert_eq!(report.merged.steps, 20);
+    assert!(report.merged.guard_trips >= 1);
+    assert!(report.runs[0].samples.iter().all(|s| s.value.is_finite()));
+}
+
+#[test]
+fn guard_abort_downs_the_poisoned_chain_only() {
+    let inner = ConjugateGaussian::synthetic(900, 0.3, 1.0, 0.0, 2.0, 7);
+    let proposal = inner.rw_proposal(0.4);
+    let model = FaultyModel::new(inner).fault(1, 5, FaultKind::Nan);
+    let report = Session::new(&model)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(2)
+        .seed(2)
+        .budget(Budget::Steps(30))
+        .guard(GuardPolicy::Abort)
+        .init(0.0)
+        .run();
+    assert_eq!(report.failed_chains(), 1);
+    match &report.statuses[1] {
+        ChainStatus::Failed { step, reason } => {
+            assert_eq!(*step, 5);
+            assert!(reason.contains("numerical guard"), "reason: {reason}");
+        }
+        s => panic!("chain 1 should have aborted, got {s:?}"),
+    }
+    assert_eq!(report.statuses[0], ChainStatus::Completed);
+    assert_eq!(report.runs.len(), 1);
+    assert_eq!(report.runs[0].chain, 0);
+    assert_eq!(report.merged.steps, 30);
+}
+
+#[test]
+fn warn_guard_is_decision_transparent_on_clean_runs() {
+    // a fault-free FaultyModel run under the always-on Warn guard must
+    // be bit-identical to the bare model: the guard only observes.
+    let bare = ConjugateGaussian::synthetic(400, 0.3, 1.0, 0.0, 2.0, 7);
+    let proposal = bare.rw_proposal(0.4);
+    let launch_bare = Session::new(&bare)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(2)
+        .seed(8)
+        .budget(Budget::Steps(60))
+        .init(0.0)
+        .run();
+    let wrapped = FaultyModel::new(ConjugateGaussian::synthetic(400, 0.3, 1.0, 0.0, 2.0, 7));
+    let launch_wrapped = Session::new(&wrapped)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(2)
+        .seed(8)
+        .budget(Budget::Steps(60))
+        .init(0.0)
+        .run();
+    assert_runs_identical(&launch_wrapped.runs, &launch_bare.runs, "transparent guard");
+    assert_eq!(launch_wrapped.merged.guard_trips, 0);
+}
