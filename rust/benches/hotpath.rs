@@ -10,7 +10,13 @@
 //!                         reference on a logistic N = 50k population
 //!                         (`speedup_soa_vs_fused_x`), plus the
 //!                         deterministic parallel exact scan at 1 and 4
-//!                         workers (`full_scan_par_t{1,4}`)
+//!                         workers (`full_scan_par_t{1,4}`), the same
+//!                         scan on the persistent executor
+//!                         (`executor_scan_t{1,4}`) against a per-call
+//!                         `thread::scope` baseline
+//!                         (`executor_vs_scope_speedup_x`), and 4
+//!                         concurrent sessions sharing the global pool
+//!                         (`executor_many_sessions_sps`)
 //!   L3 sequential test  — one full approximate MH decision
 //!   L3 mh_step          — end-to-end step, uncached vs cached
 //!   L3 engine           — K-chain throughput scaling on the worker pool
@@ -27,7 +33,7 @@ use austerity::coordinator::austerity::{seq_mh_test, SeqTestConfig};
 use austerity::coordinator::dp::analyze_pocock;
 use austerity::coordinator::scheduler::MinibatchScheduler;
 use austerity::coordinator::{
-    mh_step, mh_step_cached, Budget, KernelSession, MhMode, MhScratch, ScalarFn, Session,
+    mh_step, mh_step_cached, Budget, Executor, KernelSession, MhMode, MhScratch, ScalarFn, Session,
 };
 use austerity::data::synthetic::linreg_toy;
 use austerity::models::traits::{
@@ -100,6 +106,47 @@ impl Recorder {
         std::fs::write(path, &s).expect("write bench json");
         println!("\nmachine-readable results -> {path}");
     }
+}
+
+/// The pre-executor span scan, kept verbatim as the baseline for
+/// `executor_vs_scope_speedup_x`: partition chunks into one span per
+/// worker, spawn a scoped thread per span *on every call*, reduce the
+/// per-chunk partials in chunk-index order.
+fn scoped_scan(
+    n: usize,
+    workers: usize,
+    partials: &mut Vec<(f64, f64)>,
+    eval: impl Fn(usize, usize) -> (f64, f64) + Sync,
+) -> (f64, f64) {
+    let n_chunks = n.div_ceil(FULL_SCAN_CHUNK);
+    partials.clear();
+    partials.resize(n_chunks, (0.0, 0.0));
+    let workers = workers.min(n_chunks).max(1);
+    std::thread::scope(|s| {
+        let mut rest: &mut [(f64, f64)] = partials;
+        let mut span_start = 0usize;
+        for w in 0..workers {
+            let len = n_chunks / workers + usize::from(w < n_chunks % workers);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            let start = span_start;
+            span_start += len * FULL_SCAN_CHUNK;
+            let eval = &eval;
+            s.spawn(move || {
+                for (i, out) in head.iter_mut().enumerate() {
+                    let a = start + i * FULL_SCAN_CHUNK;
+                    let b = (a + FULL_SCAN_CHUNK).min(n);
+                    *out = eval(a, b);
+                }
+            });
+        }
+    });
+    let (mut m1, mut m2) = (0.0, 0.0);
+    for &(a, b) in partials.iter() {
+        m1 += a;
+        m2 += b;
+    }
+    (m1, m2)
 }
 
 fn main() {
@@ -194,6 +241,36 @@ fn main() {
     println!(
         "  -> parallel exact scan 1 -> 4 workers: {scan_scaling:.2}x ({})",
         if scan_scaling > 1.0 { "PASS > 1x" } else { "FAIL <= 1x" }
+    );
+
+    // the same scan through the persistent executor: spans are pool
+    // tasks, zero thread spawns per call (3 workers + the helping
+    // submitter = the same 4-way concurrency as above)
+    let pool = Executor::new(3);
+    let mut t_exec = [0.0f64; 2];
+    for (slot, threads) in [(0usize, 1usize), (1, 4)] {
+        let mut scan = ScanScratch::on_pool(&pool, threads, n50);
+        let t = rec.bench(&format!("executor_scan_t{threads}"), 20, || {
+            std::hint::black_box(full_scan_moments_par(n50, &mut scan, |a, b| {
+                big.lldiff_range_moments(a, b, &theta50, &theta50_p)
+            }));
+        });
+        t_exec[slot] = t;
+    }
+    rec.record("executor_scan_scaling_x", t_exec[0] / t_exec[1]);
+    // per-call thread::scope baseline: same span partition, fresh OS
+    // threads each scan — what the hot path paid before the executor
+    let mut parts: Vec<(f64, f64)> = Vec::new();
+    let t_scope4 = rec.bench("full_scan_scope_t4", 20, || {
+        std::hint::black_box(scoped_scan(n50, 4, &mut parts, |a, b| {
+            big.lldiff_range_moments(a, b, &theta50, &theta50_p)
+        }));
+    });
+    let exec_speedup = t_scope4 / t_exec[1];
+    rec.record("executor_vs_scope_speedup_x", exec_speedup);
+    println!(
+        "  -> executor vs per-step scope at 4 workers: {exec_speedup:.2}x ({})",
+        if exec_speedup >= 1.0 { "PASS >= 1x" } else { "below 1x" }
     );
 
     println!("\n-- L3 sequential test + steps --");
@@ -295,6 +372,42 @@ fn main() {
         );
     }
 
+    // many small concurrent launches sharing the one global pool — the
+    // workload per-launch pool construction used to penalise hardest
+    {
+        let (m, krn) = (&model, &kernel);
+        let run_all = || -> usize {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..4u64)
+                    .map(|j| {
+                        let theta_j = theta.clone();
+                        let rule_j = mode.clone();
+                        s.spawn(move || {
+                            Session::new(m)
+                                .kernel(krn)
+                                .rule(rule_j)
+                                .chains(2)
+                                .threads(2)
+                                .seed(100 + j)
+                                .budget(Budget::Steps(200))
+                                .init(theta_j)
+                                .run()
+                                .merged
+                                .steps
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).sum()
+            })
+        };
+        let _ = run_all();
+        let t0 = Instant::now();
+        let total = run_all();
+        let sps = total as f64 / t0.elapsed().as_secs_f64();
+        rec.record("executor_many_sessions_sps", sps);
+        println!("4 concurrent sessions x 2 chains: {sps:>9.1} steps/s aggregate");
+    }
+
     println!("\n-- L3 engine kernels (ported families via TransitionKernel) --");
     // corrected SGLD on the §6.4 toy: gradient batch + first-batch test
     let toy = LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0);
@@ -378,7 +491,11 @@ fn main() {
 
     println!("\n-- speedup summary --");
     for (k, v) in &rec.rows {
-        if k.starts_with("speedup_") || k.starts_with("full_scan_par") || k.starts_with("engine_scaling") {
+        if k.starts_with("speedup_")
+            || k.starts_with("full_scan_par")
+            || k.starts_with("engine_scaling")
+            || k.starts_with("executor_")
+        {
             println!("{k:<44} {v:>9.3}");
         }
     }

@@ -18,6 +18,7 @@
 
 use crate::coordinator::chain::{drive_chain, Budget, ChainStats, Sample};
 use crate::coordinator::checkpoint::{BinReader, BinWriter, CkptError, Persist};
+use crate::coordinator::executor::IntraPar;
 use crate::coordinator::kernel::{restore_sched, StepOutcome, TransitionKernel};
 use crate::coordinator::mh::{mh_step, MhMode, MhScratch};
 use crate::models::traits::{LlDiffModel, ProposalKernel};
@@ -79,11 +80,8 @@ where
         AdaptiveScratch { mh: MhScratch::new(self.model.n()), step: 0 }
     }
 
-    fn scratch_par(&self, _init: &M::Param, intra_threads: usize) -> AdaptiveScratch {
-        AdaptiveScratch {
-            mh: MhScratch::with_scan_threads(self.model.n(), intra_threads),
-            step: 0,
-        }
+    fn scratch_par(&self, _init: &M::Param, intra: &IntraPar) -> AdaptiveScratch {
+        AdaptiveScratch { mh: MhScratch::with_scan_pool(self.model.n(), intra), step: 0 }
     }
 
     fn step(

@@ -11,6 +11,7 @@ use crate::coordinator::accept::AcceptanceTest;
 use crate::coordinator::checkpoint::{
     BinReader, BinWriter, ChainCheckpoint, CheckpointSpec, Persist,
 };
+use crate::coordinator::executor::IntraPar;
 use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
 use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
 use crate::stats::Pcg64;
@@ -29,8 +30,26 @@ pub fn current_chain_step() -> (usize, usize) {
     CHAIN_CTX.with(|c| c.get())
 }
 
-pub(crate) fn set_current_chain(chain: usize) {
-    CHAIN_CTX.with(|c| c.set((chain, usize::MAX)));
+/// RAII guard installing a `(chain, step)` context on the current
+/// thread and restoring the previous one on drop — including during
+/// unwinding. The engine wraps each chain task in one, and the scan
+/// layer wraps each pooled span task in one, so persistent executor
+/// workers never leak one chain's coordinates into the next task they
+/// claim (a fresh scoped thread started clean; a pool worker does not).
+pub(crate) struct ScopedChainCtx {
+    prev: (usize, usize),
+}
+
+impl ScopedChainCtx {
+    pub(crate) fn enter(ctx: (usize, usize)) -> Self {
+        ScopedChainCtx { prev: CHAIN_CTX.with(|c| c.replace(ctx)) }
+    }
+}
+
+impl Drop for ScopedChainCtx {
+    fn drop(&mut self) {
+        CHAIN_CTX.with(|c| c.set(self.prev));
+    }
 }
 
 fn set_current_step(step: usize) {
@@ -118,11 +137,11 @@ where
     drive_chain_par(kernel, init, budget, burn_in, thin, f, rng, 1)
 }
 
-/// `drive_chain` for a chain allowed to spend `intra_threads` worker
-/// threads inside a step (the engine's spare-worker path when
-/// `threads > chains`). Intra-step parallelism is deterministic by
-/// construction — samples are bit-identical to `drive_chain` — so this
-/// only changes wall time.
+/// `drive_chain` for a chain allowed to run up to `intra_threads`
+/// concurrent scan spans inside a step, drawn from the shared executor
+/// pool (the engine's spare-worker path when `threads > chains`).
+/// Intra-step parallelism is deterministic by construction — samples
+/// are bit-identical to `drive_chain` — so this only changes wall time.
 #[allow(clippy::too_many_arguments)]
 pub fn drive_chain_par<T, F>(
     kernel: &T,
@@ -138,7 +157,7 @@ where
     T: TransitionKernel,
     F: FnMut(&T::State) -> f64,
 {
-    let mut scratch = kernel.scratch_par(&init, intra_threads.max(1));
+    let mut scratch = kernel.scratch_par(&init, &IntraPar::threads(intra_threads.max(1)));
     let mut cur = init;
     let mut stats = ChainStats::default();
     let mut samples = Vec::new();
@@ -167,7 +186,8 @@ pub(crate) struct DriveCfg<'a> {
     pub budget: Budget,
     pub burn_in: usize,
     pub thin: usize,
-    pub intra_threads: usize,
+    /// Intra-step scan grant (width + pool) for `scratch_par`.
+    pub intra: IntraPar,
     /// `(spec, chain id, base seed)` when checkpoint writing is on.
     pub checkpoint: Option<(&'a CheckpointSpec, usize, u64)>,
     /// A previously captured checkpoint to continue from.
@@ -262,7 +282,7 @@ where
     T::State: Persist,
     F: FnMut(&T::State) -> f64,
 {
-    let DriveCfg { budget, burn_in, thin, intra_threads, checkpoint, resume, progress } = cfg;
+    let DriveCfg { budget, burn_in, thin, intra, checkpoint, resume, progress } = cfg;
     let (mut cur, mut stats, mut samples, prior, scratch_bytes) = match resume {
         Some(ck) => {
             let mut r = BinReader::new(&ck.state);
@@ -284,7 +304,7 @@ where
     // scratch is rebuilt from the (restored) state — this is what
     // regenerates the cached path's likelihood cache — then the
     // cross-step pieces (scheduler permutations, counters) are restored
-    let mut scratch = kernel.scratch_par(&cur, intra_threads.max(1));
+    let mut scratch = kernel.scratch_par(&cur, &intra);
     if let Some(bytes) = scratch_bytes {
         let mut r = BinReader::new(&bytes);
         kernel

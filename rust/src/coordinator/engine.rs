@@ -1,13 +1,14 @@
-//! Parallel multi-chain execution engine: K independent chains across a
-//! std::thread worker pool, per-chain RNG streams, merged statistics and
-//! cross-chain convergence diagnostics (split R-hat / ESS).
+//! Parallel multi-chain execution engine: K independent chains
+//! multiplexed over the persistent executor pool
+//! (`coordinator::executor`), per-chain RNG streams, merged statistics
+//! and cross-chain convergence diagnostics (split R-hat / ESS).
 //!
-//! Design rules (see DESIGN.md §Engine):
+//! Design rules (see DESIGN.md §Engine and §Executor layer):
 //!
 //! * **Determinism**: chain `c` always runs on `Pcg64::new(base_seed,
-//!   STREAM_BASE + c)`, regardless of how chains are packed onto worker
-//!   threads — the same configuration produces bit-identical samples
-//!   whether it runs on 1 thread or 16 (for step budgets; wall budgets
+//!   STREAM_BASE + c)`, regardless of how chains are packed onto pool
+//!   workers — the same configuration produces bit-identical samples
+//!   whether it runs on 1 worker or 16 (for step budgets; wall budgets
 //!   are inherently timing-dependent).
 //! * **No shared mutable state**: the model is shared immutably
 //!   (`M: Sync`); every chain owns its scratch, RNG, cache and observer.
@@ -15,16 +16,23 @@
 //!   factory and returned with the results, so experiments can stream
 //!   vector statistics (predictive means, inclusion counts) without a
 //!   second pass over samples.
+//! * **One pool, shared**: by default a launch draws its chain tasks —
+//!   and the chains' intra-step scan spans — from the process-global
+//!   `Executor`, grown once to the requested width; concurrent launches
+//!   therefore share fixed hardware instead of each spawning its own
+//!   threads, and the steady state spawns zero threads per step.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::coordinator::accept::AcceptanceTest;
 use crate::coordinator::chain::{
-    drive_chain_ckpt, set_current_chain, Budget, ChainStats, DriveCfg, Sample,
+    drive_chain_ckpt, Budget, ChainStats, DriveCfg, Sample, ScopedChainCtx,
 };
 use crate::coordinator::checkpoint::{write_manifest, ChainCheckpoint, CheckpointSpec, Persist};
+use crate::coordinator::executor::{Executor, IntraPar};
 use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
 use crate::metrics::convergence::{cross_chain, Convergence};
 use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
@@ -52,6 +60,11 @@ pub struct EngineConfig {
     /// Resume chains from checkpoints in this directory (chains without a
     /// checkpoint file start fresh).
     pub resume: Option<PathBuf>,
+    /// Run on this executor pool instead of the process-global one. The
+    /// pinned pool is taken as-is — never grown — so a launch can be
+    /// deliberately oversubscribed (more chain/scan tasks than workers)
+    /// and still completes, just with less overlap.
+    pub executor: Option<Executor>,
 }
 
 impl EngineConfig {
@@ -65,6 +78,7 @@ impl EngineConfig {
             thin: 1,
             checkpoint: None,
             resume: None,
+            executor: None,
         }
     }
 
@@ -97,6 +111,13 @@ impl EngineConfig {
     /// chain.
     pub fn resume(mut self, dir: impl Into<PathBuf>) -> Self {
         self.resume = Some(dir.into());
+        self
+    }
+
+    /// Pin the launch to `exec` instead of the process-global pool (see
+    /// the `executor` field for the oversubscription semantics).
+    pub fn executor(mut self, exec: Executor) -> Self {
+        self.executor = Some(exec);
         self
     }
 }
@@ -152,9 +173,12 @@ pub struct EngineResult<O> {
     /// slowest single chain (not the launch duration — chains may share
     /// workers).
     pub merged: ChainStats,
-    /// Wall-clock duration of the whole launch, spawn to last join.
-    /// Equals roughly max(chain walls) when every chain has its own
-    /// worker, and approaches their sum as the pool shrinks.
+    /// Wall-clock duration of the stepping itself: first chain task
+    /// submitted to last one finished. Pool construction (growing the
+    /// shared executor) happens before this clock starts, so
+    /// `steps_per_sec` / `data_per_sec` measure sampling, not thread
+    /// startup. Equals roughly max(chain walls) when every chain has its
+    /// own worker, and approaches their sum as the pool shrinks.
     pub wall: std::time::Duration,
     /// Cross-chain split R-hat / ESS over the recorded sample values.
     pub convergence: Convergence,
@@ -217,13 +241,40 @@ fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-/// Run `tasks` independent jobs over a worker pool of `threads` threads
-/// (0 = one per task), returning per-task results in task order. Task `i`
-/// always receives index `i`, so any deterministic task function yields
-/// identical results regardless of the pool size. A panicking task is
-/// isolated: it becomes `Err(TaskError)` in its own slot and every other
-/// task still runs to completion.
+/// Run `tasks` independent jobs with at most `threads` of them in
+/// flight at once (0 = all concurrent), returning per-task results in
+/// task order. Task `i` always receives index `i`, so any deterministic
+/// task function yields identical results regardless of the concurrency
+/// cap. A panicking task is isolated: it becomes `Err(TaskError)` in
+/// its own slot and every other task still runs to completion. Tasks
+/// run on the process-global executor pool, grown once to the requested
+/// width — no threads are spawned per call.
 pub fn parallel_map_result<T, F>(tasks: usize, threads: usize, f: F) -> Vec<Result<T, TaskError>>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let cap = if threads == 0 { tasks } else { threads.min(tasks) };
+    let exec = if cap > 1 {
+        let exec = Executor::global();
+        exec.ensure_workers(cap - 1);
+        Some(exec)
+    } else {
+        None
+    };
+    parallel_map_result_on(exec.as_ref(), tasks, cap, &f)
+}
+
+/// `parallel_map_result` on an explicit pool handle (or serially when
+/// `exec` is `None`): the engine resolves its pool once per launch and
+/// routes the chain fan-out through here so pool setup stays outside
+/// the launch clock.
+fn parallel_map_result_on<T, F>(
+    exec: Option<&Executor>,
+    tasks: usize,
+    cap: usize,
+    f: &F,
+) -> Vec<Result<T, TaskError>>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
@@ -232,44 +283,24 @@ where
         catch_unwind(AssertUnwindSafe(|| f(i)))
             .map_err(|p| TaskError { task: i, reason: panic_reason(p.as_ref()) })
     };
-    let workers = if threads == 0 { tasks } else { threads.min(tasks) };
-    if workers <= 1 {
-        return (0..tasks).map(run_one).collect();
-    }
-    let mut slots: Vec<Option<Result<T, TaskError>>> = Vec::with_capacity(tasks);
-    slots.resize_with(tasks, || None);
-    std::thread::scope(|scope| {
-        let run_one = &run_one;
-        let handles: Vec<_> = (0..workers)
-            .map(|w| {
-                scope.spawn(move || {
-                    let mut out = Vec::new();
-                    let mut i = w;
-                    while i < tasks {
-                        out.push((i, run_one(i)));
-                        i += workers;
-                    }
-                    out
-                })
-            })
-            .collect();
-        for h in handles {
-            // catch_unwind shields the worker loop, so a worker join can
-            // only fail on a panic escaping the harness itself; the
-            // affected slots then surface as explicit per-task errors
-            // below instead of poisoning the whole launch.
-            if let Ok(pairs) = h.join() {
-                for (i, t) in pairs {
-                    slots[i] = Some(t);
-                }
-            }
-        }
+    let exec = match exec {
+        Some(e) if cap > 1 && tasks > 1 => e,
+        _ => return (0..tasks).map(run_one).collect(),
+    };
+    let slots: Vec<Mutex<Option<Result<T, TaskError>>>> =
+        (0..tasks).map(|_| Mutex::new(None)).collect();
+    // run_one catches task panics, so the scope's own panic path (which
+    // would re-raise a payload here) is never taken for task failures;
+    // slots can only stay empty if a pool worker is killed from outside.
+    exec.scope_capped(tasks, cap, |i| {
+        let res = run_one(i);
+        *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(res);
     });
     slots
         .into_iter()
         .enumerate()
         .map(|(i, s)| {
-            s.unwrap_or_else(|| {
+            s.into_inner().unwrap_or_else(|e| e.into_inner()).unwrap_or_else(|| {
                 Err(TaskError { task: i, reason: "task result missing (worker died)".into() })
             })
         })
@@ -340,7 +371,25 @@ where
     O: ChainObserver<T::State>,
 {
     assert!(cfg.chains >= 1, "need at least one chain");
-    let intra = if cfg.threads > cfg.chains { cfg.threads / cfg.chains } else { 1 };
+    // Resolve the pool BEFORE the launch clock starts: growing the
+    // global pool (or none of it, for a pinned pool) is one-time thread
+    // construction that must not pollute steps_per_sec / data_per_sec.
+    let parallelism = if cfg.threads == 0 { cfg.chains } else { cfg.threads };
+    let cap = if cfg.threads == 0 { cfg.chains } else { cfg.threads.min(cfg.chains) };
+    let exec = match &cfg.executor {
+        Some(e) => Some(e.clone()),
+        None if parallelism > 1 => {
+            let exec = Executor::global();
+            exec.ensure_workers(parallelism - 1);
+            Some(exec)
+        }
+        None => None,
+    };
+    let intra_w = if cfg.threads > cfg.chains { cfg.threads / cfg.chains } else { 1 };
+    let intra = match &exec {
+        Some(e) if intra_w > 1 => IntraPar::on(intra_w, e.clone()),
+        _ => IntraPar::serial(),
+    };
     if let Some(spec) = &cfg.checkpoint {
         std::fs::create_dir_all(&spec.dir)
             .unwrap_or_else(|e| panic!("cannot create checkpoint dir: {e}"));
@@ -361,9 +410,12 @@ where
     let progress: Vec<AtomicU64> = (0..cfg.chains).map(|_| AtomicU64::new(0)).collect();
     let init = &init;
     let progress = &progress;
+    let intra = &intra;
     let start = std::time::Instant::now();
-    let results = parallel_map_result(cfg.chains, cfg.threads, |c| {
-        set_current_chain(c);
+    let results = parallel_map_result_on(exec.as_ref(), cfg.chains, cap, &|c| {
+        // pool workers are persistent and may carry another chain's
+        // stale (chain, step) context — scope this chain's over the task
+        let _ctx = ScopedChainCtx::enter((c, usize::MAX));
         let mut rng = Pcg64::new(cfg.base_seed, STREAM_BASE + c as u64);
         let mut obs = make_observer(c);
         let resume = cfg
@@ -377,7 +429,7 @@ where
                 budget: cfg.budget,
                 burn_in: cfg.burn_in,
                 thin: cfg.thin,
-                intra_threads: intra,
+                intra: intra.clone(),
                 checkpoint: cfg.checkpoint.as_ref().map(|spec| (spec, c, cfg.base_seed)),
                 resume,
                 progress: Some(&progress[c]),

@@ -1,0 +1,504 @@
+//! Persistent work-sharing executor: one long-lived pool of parked
+//! worker threads that both the engine's K-chain fan-out and the
+//! chains' intra-step scan spans draw from, replacing the per-launch
+//! and per-step `std::thread::scope` spawns (OS-thread churn on the
+//! exact-rule hot path).
+//!
+//! Task model — a chunk queue over parked workers:
+//!
+//! * An [`Executor::scope`] call publishes one *job*: `tasks` closure
+//!   invocations indexed `0..tasks`, claimed one index at a time from a
+//!   shared counter. Pool workers (and the submitting thread, which
+//!   always helps) claim the next unclaimed index, run it, and repeat —
+//!   a deque-free cousin of work stealing: idle workers pull from
+//!   whichever live job still has unclaimed tasks, so spare capacity
+//!   flows to whoever has work left, across concurrent launches.
+//! * **Determinism**: task `i` always receives index `i`; *which
+//!   thread* runs it is scheduling-dependent, so reproducibility is the
+//!   task function's contract (the scan layer ties every result bit to
+//!   the chunk index, never to the thread; see DESIGN.md §Executor
+//!   layer).
+//! * **Blocking discipline**: scan-span tasks are leaves (they never
+//!   block); a chain task blocks only on its *own* scan scopes; and a
+//!   submitter claims only from its own job while waiting, so it can
+//!   always drain the scope without a single pool worker. Every scope
+//!   therefore completes even on a pool far smaller than the submitted
+//!   parallelism (the oversubscription guarantee).
+//! * **Panics**: every task runs under `catch_unwind`; the first panic
+//!   payload of a job is re-raised in the submitting thread once the
+//!   job has fully drained, so a panicking scan span surfaces inside
+//!   its chain's task and downs only that chain (the engine's per-chain
+//!   isolation is itself a task-level `catch_unwind` on this pool).
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::fmt;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+/// Poison-proof lock. Pool code never runs user closures while holding
+/// a lock, so poisoning cannot indicate a broken invariant here — and a
+/// panicking task must not wedge every later launch.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One published scope: `tasks` closure invocations behind a claim
+/// counter. `f` is the submitting stack frame's closure with its
+/// lifetime erased; see the SAFETY argument in
+/// [`Executor::scope_capped`].
+struct Job {
+    tasks: usize,
+    /// At most this many tasks of the job in flight at once.
+    cap: usize,
+    f: &'static (dyn Fn(usize) + Sync),
+    prog: Mutex<JobProg>,
+    /// Signalled on every task completion; the submitter waits here.
+    done_cv: Condvar,
+}
+
+struct JobProg {
+    /// Next unclaimed task index (claims are handed out in order).
+    next: usize,
+    running: usize,
+    done: usize,
+    /// First panic payload observed among this job's tasks.
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+enum Claim {
+    Task(usize),
+    /// At the concurrency cap right now; may become claimable later.
+    Saturated,
+    /// Every task claimed; nothing left for anyone.
+    Drained,
+}
+
+impl Job {
+    fn try_claim(&self) -> Claim {
+        let mut p = lock(&self.prog);
+        if p.next >= self.tasks {
+            return Claim::Drained;
+        }
+        if p.running >= self.cap {
+            return Claim::Saturated;
+        }
+        p.next += 1;
+        p.running += 1;
+        Claim::Task(p.next - 1)
+    }
+
+    /// Run claimed task `i`, record its completion, wake the submitter,
+    /// and — if the job still has unclaimed tasks — re-wake the pool so
+    /// the freed cap slot is refilled.
+    fn run_claimed(&self, i: usize, shared: &Shared) {
+        let result = catch_unwind(AssertUnwindSafe(|| (self.f)(i)));
+        let mut p = lock(&self.prog);
+        p.running -= 1;
+        p.done += 1;
+        if let Err(payload) = result {
+            if p.panic.is_none() {
+                p.panic = Some(payload);
+            }
+        }
+        let more = p.next < self.tasks;
+        drop(p);
+        self.done_cv.notify_all();
+        if more {
+            // lock-then-notify so a worker that just found every job
+            // saturated cannot park between our update and the wakeup
+            let _st = lock(&shared.state);
+            shared.work_cv.notify_all();
+        }
+    }
+}
+
+struct PoolState {
+    /// Live jobs in submission order; drained entries are pruned lazily
+    /// by scanning workers and eagerly by their submitter at scope exit.
+    queue: VecDeque<Arc<Job>>,
+    workers: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Signalled when the queue gains claimable work (job pushed, cap
+    /// slot freed) and at shutdown.
+    work_cv: Condvar,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut st = lock(&shared.state);
+    loop {
+        if st.shutdown {
+            return;
+        }
+        // oldest job with a claimable task wins (FIFO keeps chain tasks
+        // ahead of scan spans submitted after them, and launches fair)
+        let mut claimed = None;
+        let mut i = 0;
+        while i < st.queue.len() {
+            let job = Arc::clone(&st.queue[i]);
+            match job.try_claim() {
+                Claim::Task(t) => {
+                    claimed = Some((job, t));
+                    break;
+                }
+                Claim::Saturated => i += 1,
+                Claim::Drained => {
+                    st.queue.remove(i);
+                }
+            }
+        }
+        match claimed {
+            Some((job, mut t)) => {
+                drop(st);
+                // greedily stay on the same job while it has work:
+                // span tasks of one scan then run back to back with
+                // their columns streaming through the same core
+                loop {
+                    job.run_claimed(t, &shared);
+                    match job.try_claim() {
+                        Claim::Task(nt) => t = nt,
+                        _ => break,
+                    }
+                }
+                st = lock(&shared.state);
+            }
+            None => st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner()),
+        }
+    }
+}
+
+struct PoolOwner {
+    shared: Arc<Shared>,
+}
+
+impl Drop for PoolOwner {
+    fn drop(&mut self) {
+        let mut st = lock(&self.shared.state);
+        st.shutdown = true;
+        drop(st);
+        self.shared.work_cv.notify_all();
+    }
+}
+
+/// Cloneable handle to a persistent worker pool. All clones share the
+/// same workers; the threads exit when the last handle drops (the
+/// process-wide [`Executor::global`] pool lives for the program).
+#[derive(Clone)]
+pub struct Executor {
+    owner: Arc<PoolOwner>,
+}
+
+impl fmt::Debug for Executor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Executor").field("workers", &self.workers()).finish()
+    }
+}
+
+static GLOBAL: OnceLock<Executor> = OnceLock::new();
+
+impl Executor {
+    /// A pool with exactly `workers` background threads. The submitting
+    /// thread of every [`Executor::scope`] also runs tasks, so `new(W)`
+    /// gives a single scope `W + 1`-way parallelism — and `new(0)` is a
+    /// valid, purely submitter-driven pool.
+    pub fn new(workers: usize) -> Self {
+        let exec = Executor {
+            owner: Arc::new(PoolOwner {
+                shared: Arc::new(Shared {
+                    state: Mutex::new(PoolState {
+                        queue: VecDeque::new(),
+                        workers: 0,
+                        shutdown: false,
+                    }),
+                    work_cv: Condvar::new(),
+                }),
+            }),
+        };
+        exec.ensure_workers(workers);
+        exec
+    }
+
+    /// The process-wide shared pool: every launch and pooled scan that
+    /// does not pin an explicit pool multiplexes over this one, so many
+    /// small concurrent sessions share fixed hardware instead of each
+    /// spawning its own threads.
+    pub fn global() -> Executor {
+        GLOBAL.get_or_init(|| Executor::new(0)).clone()
+    }
+
+    /// Grow the pool to at least `workers` background threads (never
+    /// shrinks; idle threads park on a condvar and cost nothing on the
+    /// hot path).
+    pub fn ensure_workers(&self, workers: usize) {
+        let shared = &self.owner.shared;
+        let mut st = lock(&shared.state);
+        while st.workers < workers {
+            let id = st.workers;
+            st.workers += 1;
+            let sh = Arc::clone(shared);
+            std::thread::Builder::new()
+                .name(format!("austerity-worker-{id}"))
+                .spawn(move || worker_loop(sh))
+                .expect("executor: cannot spawn pool worker");
+        }
+    }
+
+    /// Current background-thread count.
+    pub fn workers(&self) -> usize {
+        lock(&self.owner.shared.state).workers
+    }
+
+    /// Run `f(i)` for every `i in 0..tasks` across the pool and the
+    /// calling thread, returning when all of them have finished. Every
+    /// task runs exactly once even if some panic; the first panic
+    /// payload is re-raised here after the job drains.
+    pub fn scope<F>(&self, tasks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.scope_capped(tasks, usize::MAX, f);
+    }
+
+    /// [`Executor::scope`] with at most `cap` tasks in flight at once —
+    /// the engine uses this to honour a `threads` limit below the chain
+    /// count without giving up dynamic task claiming.
+    pub fn scope_capped<F>(&self, tasks: usize, cap: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if tasks == 0 {
+            return;
+        }
+        let cap = cap.max(1);
+        if tasks == 1 || cap == 1 || self.workers() == 0 {
+            // nothing to hand out: run inline, preserving the pooled
+            // contract (every task runs; first panic re-raised at the
+            // end)
+            let mut first_panic: Option<Box<dyn Any + Send>> = None;
+            for i in 0..tasks {
+                if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                    first_panic.get_or_insert(p);
+                }
+            }
+            if let Some(p) = first_panic {
+                resume_unwind(p);
+            }
+            return;
+        }
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: the erased borrow is only dereferenced by claimed
+        // tasks, claims stop at `tasks`, and this frame does not return
+        // until `done == tasks` — every task's completion happens-before
+        // the final `done` read in the wait loop below (both under
+        // `prog`). Queue stragglers holding the drained job afterwards
+        // only read its counters, never `f`.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f_ref)
+        };
+        let job = Arc::new(Job {
+            tasks,
+            cap,
+            f: f_static,
+            prog: Mutex::new(JobProg { next: 0, running: 0, done: 0, panic: None }),
+            done_cv: Condvar::new(),
+        });
+        let shared = &self.owner.shared;
+        {
+            let mut st = lock(&shared.state);
+            st.queue.push_back(Arc::clone(&job));
+        }
+        shared.work_cv.notify_all();
+        // help-first: the submitter claims from its OWN job only, so it
+        // can always drain the scope without any pool worker and never
+        // wanders into another scope's (possibly blocking) tasks.
+        let payload = {
+            let mut p = lock(&job.prog);
+            loop {
+                if p.next < tasks && p.running < cap {
+                    let t = p.next;
+                    p.next += 1;
+                    p.running += 1;
+                    drop(p);
+                    job.run_claimed(t, shared);
+                    p = lock(&job.prog);
+                } else if p.done == tasks {
+                    break p.panic.take();
+                } else {
+                    p = job.done_cv.wait(p).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        };
+        // eagerly drop the drained job from the queue (workers also
+        // prune lazily; this keeps the queue short and the erased
+        // closure unreachable the moment the scope ends)
+        {
+            let mut st = lock(&shared.state);
+            st.queue.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+}
+
+/// Intra-step parallelism grant for one chain: how many scan spans its
+/// full scans may run concurrently (`width`) and the pool those spans
+/// run on. Carried into `TransitionKernel::scratch_par` so kernels size
+/// their scan workspace against the right pool; a grant wider than the
+/// pool just multiplexes (completion is guaranteed by the blocking
+/// discipline above).
+#[derive(Clone, Debug)]
+pub struct IntraPar {
+    width: usize,
+    exec: Option<Executor>,
+}
+
+impl IntraPar {
+    /// No intra-step parallelism: scans run serially on the chain's
+    /// thread, touching no pool at all.
+    pub fn serial() -> Self {
+        IntraPar { width: 1, exec: None }
+    }
+
+    /// Up to `width` concurrent spans drawn from the shared global pool
+    /// (grown to `width - 1` background workers up front, so no scan
+    /// ever pays thread construction).
+    pub fn threads(width: usize) -> Self {
+        let width = width.max(1);
+        if width == 1 {
+            return Self::serial();
+        }
+        let exec = Executor::global();
+        exec.ensure_workers(width - 1);
+        IntraPar { width, exec: Some(exec) }
+    }
+
+    /// Up to `width` concurrent spans drawn from a specific pool, taken
+    /// as-is (the engine hands launches their pinned pool through
+    /// here).
+    pub fn on(width: usize, exec: Executor) -> Self {
+        IntraPar { width: width.max(1), exec: Some(exec) }
+    }
+
+    /// Maximum concurrent scan spans this grant allows.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// The pool spans run on (`None` for a serial grant).
+    pub fn executor(&self) -> Option<&Executor> {
+        self.exec.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn every_task_runs_exactly_once_for_any_pool_size() {
+        for workers in [0usize, 1, 3, 8] {
+            let pool = Executor::new(workers);
+            let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+            pool.scope(97, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "workers {workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn cap_bounds_in_flight_tasks() {
+        let pool = Executor::new(7);
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        pool.scope_capped(40, 3, |_| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(1));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        let peak = peak.load(Ordering::SeqCst);
+        assert!((1..=3).contains(&peak), "peak {peak}");
+    }
+
+    #[test]
+    fn first_panic_reaches_the_submitter_after_the_job_drains() {
+        let pool = Executor::new(2);
+        let ran = AtomicUsize::new(0);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(11, |i| {
+                ran.fetch_add(1, Ordering::SeqCst);
+                if i == 4 {
+                    panic!("span 4 died");
+                }
+            });
+        }))
+        .expect_err("the scope must re-raise");
+        assert_eq!(ran.load(Ordering::SeqCst), 11, "the other tasks still run");
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "span 4 died");
+    }
+
+    #[test]
+    fn nested_scopes_complete_on_an_undersized_pool() {
+        // 4 outer tasks each opening a 4-task inner scope on a 1-worker
+        // pool: submitters drain their own scopes, so no claim
+        // interleaving can deadlock this.
+        let pool = Executor::new(1);
+        let total = AtomicUsize::new(0);
+        pool.scope(4, |_| {
+            pool.scope(4, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_one_pool() {
+        let pool = Executor::new(2);
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let pool = pool.clone();
+                let total = &total;
+                s.spawn(move || {
+                    pool.scope(50, |_| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 150);
+    }
+
+    #[test]
+    fn pool_only_grows() {
+        let pool = Executor::new(2);
+        pool.ensure_workers(1);
+        assert_eq!(pool.workers(), 2);
+        pool.ensure_workers(4);
+        assert_eq!(pool.workers(), 4);
+    }
+
+    #[test]
+    fn serial_grant_touches_no_pool() {
+        let g = IntraPar::serial();
+        assert_eq!(g.width(), 1);
+        assert!(g.executor().is_none());
+        assert!(IntraPar::threads(1).executor().is_none());
+        let wide = IntraPar::threads(3);
+        assert_eq!(wide.width(), 3);
+        assert!(wide.executor().is_some());
+    }
+}

@@ -26,6 +26,7 @@
 
 use crate::coordinator::accept::AcceptanceTest;
 use crate::coordinator::checkpoint::{BinReader, BinWriter, CkptError, Persist};
+use crate::coordinator::executor::IntraPar;
 use crate::coordinator::mh::{mh_step, mh_step_cached, MhMode, MhScratch};
 use crate::coordinator::scheduler::MinibatchScheduler;
 use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
@@ -56,14 +57,15 @@ pub trait TransitionKernel {
     /// (schedulers, buffers, likelihood caches seeded from the state).
     fn scratch(&self, init: &Self::State) -> Self::Scratch;
 
-    /// `scratch` for a chain that may spend up to `intra_threads` worker
-    /// threads *inside* a step (the engine passes `threads / chains`
-    /// when it has more workers than chains). Kernels with a
-    /// parallelizable step (the MH families' exact-rule full scan)
-    /// override this; the default ignores the hint — intra-step
+    /// `scratch` for a chain granted intra-step parallelism: `intra`
+    /// names the span width and the shared executor pool the chain may
+    /// draw on *inside* a step (the engine grants `threads / chains`
+    /// spans on its pool when it has more workers than chains). Kernels
+    /// with a parallelizable step (the MH families' exact-rule full
+    /// scan) override this; the default ignores the grant — intra-step
     /// parallelism never changes results, only wall time.
-    fn scratch_par(&self, init: &Self::State, intra_threads: usize) -> Self::Scratch {
-        let _ = intra_threads;
+    fn scratch_par(&self, init: &Self::State, intra: &IntraPar) -> Self::Scratch {
+        let _ = intra;
         self.scratch(init)
     }
 
@@ -139,8 +141,8 @@ where
         MhScratch::new(self.model.n())
     }
 
-    fn scratch_par(&self, _init: &M::Param, intra_threads: usize) -> MhScratch {
-        MhScratch::with_scan_threads(self.model.n(), intra_threads)
+    fn scratch_par(&self, _init: &M::Param, intra: &IntraPar) -> MhScratch {
+        MhScratch::with_scan_pool(self.model.n(), intra)
     }
 
     fn step(&self, state: &mut M::Param, scratch: &mut MhScratch, rng: &mut Pcg64) -> StepOutcome {
@@ -197,9 +199,9 @@ where
         CachedMhScratch { mh: MhScratch::new(self.model.n()), cache: self.model.init_cache(init) }
     }
 
-    fn scratch_par(&self, init: &M::Param, intra_threads: usize) -> CachedMhScratch<M> {
+    fn scratch_par(&self, init: &M::Param, intra: &IntraPar) -> CachedMhScratch<M> {
         CachedMhScratch {
-            mh: MhScratch::with_scan_threads(self.model.n(), intra_threads),
+            mh: MhScratch::with_scan_pool(self.model.n(), intra),
             cache: self.model.init_cache(init),
         }
     }

@@ -16,6 +16,7 @@ use crate::coordinator::accept::{
     MomentsSource, StageTrace,
 };
 use crate::coordinator::austerity::SeqTestConfig;
+use crate::coordinator::executor::IntraPar;
 use crate::coordinator::scheduler::MinibatchScheduler;
 use crate::models::traits::{
     full_scan_moments_par, CachedLlDiff, LlDiffModel, Proposal, ScanScratch,
@@ -138,14 +139,23 @@ impl MhScratch {
         Self::with_scan_threads(n, 1)
     }
 
-    /// Scratch whose exact-rule full scans may use up to `scan_threads`
-    /// worker threads (bit-identical to serial for any value).
+    /// Scratch whose exact-rule full scans may run as up to
+    /// `scan_threads` concurrent spans on the process-global executor
+    /// pool (bit-identical to serial for any value).
     pub fn with_scan_threads(n: usize, scan_threads: usize) -> Self {
+        Self::with_scan_pool(n, &IntraPar::threads(scan_threads))
+    }
+
+    /// Scratch whose exact-rule full scans draw on the specific
+    /// intra-step grant `intra` — span width plus the (shared) executor
+    /// pool the spans run on. This is what `scratch_par` builds so every
+    /// chain of a launch multiplexes over one pool.
+    pub fn with_scan_pool(n: usize, intra: &IntraPar) -> Self {
         MhScratch {
             sched: MinibatchScheduler::new(n),
             idx_buf: Vec::new(),
             trace: Vec::new(),
-            scan: ScanScratch::new(scan_threads, n),
+            scan: ScanScratch::from_intra(intra, n),
         }
     }
 }

@@ -26,12 +26,16 @@
 //! * `guard` — numerical-guard layer (`GuardPolicy`, `Guarded`)
 //!   screening the log-likelihood moments entering any acceptance test
 //!   for NaN/Inf poisoning
-//! * `engine` — parallel multi-chain engine over any kernel: worker
-//!   pool, per-chain RNG streams and observers, merged stats, split
-//!   R-hat / ESS. Its `run_engine*` launchers (and `chain`'s
-//!   `run_chain*`) are internal — `Session` dispatches to them and
-//!   replays them bit for bit; they stay exported only as the same-seed
-//!   oracle for the integration tests
+//! * `engine` — parallel multi-chain engine over any kernel: per-chain
+//!   RNG streams and observers, merged stats, split R-hat / ESS. Its
+//!   `run_engine*` launchers (and `chain`'s `run_chain*`) are internal —
+//!   `Session` dispatches to them and replays them bit for bit; they
+//!   stay exported only as the same-seed oracle for the integration
+//!   tests
+//! * `executor` — the persistent work-sharing pool (`Executor`) both
+//!   the engine's chain fan-out and the chains' intra-step scan spans
+//!   draw from, so concurrent launches multiplex over fixed hardware
+//!   with zero per-step thread spawns
 //! * `adaptive` — adaptive-epsilon MH kernel (paper §7 future work)
 //! * `scheduler` — without-replacement mini-batch scheduling
 //! * `dp` — Gaussian-random-walk error/usage dynamic program (§5.1)
@@ -47,6 +51,7 @@ pub mod delta;
 pub mod design;
 pub mod dp;
 pub mod engine;
+pub mod executor;
 pub mod guard;
 pub mod kernel;
 pub mod mh;
@@ -69,6 +74,7 @@ pub use engine::{
     parallel_map, parallel_map_result, ChainObserver, ChainRun, ChainStatus, EngineConfig,
     EngineResult, TaskError,
 };
+pub use executor::{Executor, IntraPar};
 pub use guard::{GuardPolicy, Guarded};
 pub use kernel::{CachedMhKernel, CachedMhScratch, MhKernel, StepOutcome, TransitionKernel};
 pub use mh::{mh_step, mh_step_cached, CachedMoments, MhMode, MhScratch, ModelMoments, StepInfo};

@@ -37,6 +37,7 @@ use crate::coordinator::checkpoint::{json_num, json_str, CheckpointSpec, Persist
 use crate::coordinator::engine::{
     run_engine_kernel, ChainRun, ChainStatus, EngineConfig, EngineResult,
 };
+use crate::coordinator::executor::Executor;
 use crate::coordinator::guard::{GuardPolicy, Guarded};
 use crate::coordinator::kernel::TransitionKernel;
 use crate::coordinator::mh::MhMode;
@@ -63,6 +64,7 @@ struct LaunchCfg {
     checkpoint_dir: Option<PathBuf>,
     resume: Option<PathBuf>,
     guard: GuardPolicy,
+    executor: Option<Executor>,
 }
 
 impl LaunchCfg {
@@ -78,6 +80,7 @@ impl LaunchCfg {
             checkpoint_dir: None,
             resume: None,
             guard: GuardPolicy::default(),
+            executor: None,
         }
     }
 
@@ -99,6 +102,7 @@ impl LaunchCfg {
             thin: self.thin,
             checkpoint,
             resume: self.resume.clone(),
+            executor: self.executor.clone(),
         }
     }
 }
@@ -223,9 +227,20 @@ impl<'a, M: LlDiffModel, K, T, R> Session<'a, M, K, T, R> {
     }
 
     /// Worker threads (default 0 = one per chain; more than `chains`
-    /// hands the spare workers to the chains' intra-step scans).
+    /// hands the spare workers to the chains' intra-step scans). This
+    /// sizes the shared persistent executor pool the launch draws from —
+    /// grown once, before the launch clock starts — unless
+    /// [`Session::executor`] pins an explicit pool.
     pub fn threads(mut self, threads: usize) -> Self {
         self.cfg.threads = threads;
+        self
+    }
+
+    /// Run on this executor pool instead of the process-global one. The
+    /// pinned pool is taken as-is (never grown), so a launch can be
+    /// deliberately oversubscribed and still completes deterministically.
+    pub fn executor(mut self, exec: Executor) -> Self {
+        self.cfg.executor = Some(exec);
         self
     }
 
@@ -393,9 +408,18 @@ impl<'a, T: TransitionKernel, R> KernelSession<'a, T, R> {
         self
     }
 
-    /// Worker threads (default 0 = one per chain).
+    /// Worker threads (default 0 = one per chain). Sizes the shared
+    /// persistent executor pool the launch draws from, unless
+    /// [`KernelSession::executor`] pins an explicit pool.
     pub fn threads(mut self, threads: usize) -> Self {
         self.cfg.threads = threads;
+        self
+    }
+
+    /// Run on this executor pool instead of the process-global one
+    /// (taken as-is, never grown).
+    pub fn executor(mut self, exec: Executor) -> Self {
+        self.cfg.executor = Some(exec);
         self
     }
 

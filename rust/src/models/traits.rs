@@ -14,6 +14,11 @@
 //! are *range-based* (`lldiff_range_moments`) and never materialize an
 //! index vector at all.
 
+use std::sync::Mutex;
+
+use crate::coordinator::chain::{current_chain_step, ScopedChainCtx};
+use crate::coordinator::executor::{Executor, IntraPar};
+
 /// Chunk length for full-population scans. Matches the batch capacity of
 /// the AOT Pallas kernels so the chunked scan maps 1:1 onto kernel
 /// dispatches on the PJRT backend, keeps per-chunk state L1-resident,
@@ -50,11 +55,14 @@ pub fn full_scan_moments<F: FnMut(&[u32]) -> (f64, f64)>(
 }
 
 /// Reusable workspace of the deterministic (possibly parallel) full
-/// scan: the configured intra-step worker count and the per-chunk
-/// partial-moments buffer. Owned per chain (inside `MhScratch`), so the
-/// steady state allocates nothing.
+/// scan: the configured intra-step span width, the executor pool the
+/// spans run on, and the per-chunk partial-moments buffer. Owned per
+/// chain (inside `MhScratch`), so the steady state allocates nothing —
+/// and, since the pool threads are persistent, spawns nothing either.
 pub struct ScanScratch {
     threads: usize,
+    /// Pool the scan spans run on; `None` for serial workspaces.
+    exec: Option<Executor>,
     /// Per-chunk `(sum l, sum l^2)`, written by whichever worker owns
     /// the chunk and reduced serially in chunk-index order.
     partials: Vec<(f64, f64)>,
@@ -62,14 +70,31 @@ pub struct ScanScratch {
 
 impl ScanScratch {
     /// Workspace for scans over an `n`-point population using up to
-    /// `threads` intra-step workers (0 or 1 = serial). Parallel scratch
-    /// pre-reserves the per-chunk buffer so later scans never
-    /// reallocate; the serial fast path never touches it, so serial
-    /// scratch stays empty.
+    /// `threads` concurrent spans (0 or 1 = serial). A parallel
+    /// workspace draws its spans from the shared global [`Executor`]
+    /// (grown to `threads - 1` background workers up front) and
+    /// pre-reserves the per-chunk buffer, so later scans neither spawn
+    /// threads nor allocate; the serial fast path touches neither.
     pub fn new(threads: usize, n: usize) -> Self {
-        let threads = threads.max(1);
+        Self::from_intra(&IntraPar::threads(threads.max(1)), n)
+    }
+
+    /// Workspace whose spans run on a specific pool — the engine's
+    /// pinned per-launch pool, or a small test pool — instead of the
+    /// global one. The pool is taken as-is: fewer workers than
+    /// `threads` just multiplexes the spans.
+    pub fn on_pool(exec: &Executor, threads: usize, n: usize) -> Self {
+        Self::from_intra(&IntraPar::on(threads, exec.clone()), n)
+    }
+
+    /// Workspace for the grant `intra` (see [`IntraPar`]): up to
+    /// `intra.width()` concurrent spans on its pool, serial when the
+    /// grant is.
+    pub fn from_intra(intra: &IntraPar, n: usize) -> Self {
+        let threads = intra.width().max(1);
         let cap = if threads > 1 { n.div_ceil(FULL_SCAN_CHUNK) } else { 0 };
-        ScanScratch { threads, partials: Vec::with_capacity(cap) }
+        let exec = if threads > 1 { intra.executor().cloned() } else { None };
+        ScanScratch { threads, exec, partials: Vec::with_capacity(cap) }
     }
 
     pub fn threads(&self) -> usize {
@@ -77,61 +102,121 @@ impl ScanScratch {
     }
 }
 
-/// Deterministic full-population scan over a range-based chunk
-/// evaluator: the population splits on `FULL_SCAN_CHUNK` boundaries,
-/// each chunk is evaluated exactly once (concurrently when
-/// `scratch.threads() > 1`, with contiguous chunk spans per worker), and
-/// the per-chunk moments are reduced serially in chunk-index order.
-/// Because a chunk's value depends only on the chunk and the reduction
-/// order is fixed, the result is bit-identical on 1 or 16 threads — and
+/// The single skeleton behind both full-scan flavours (uncached and
+/// cached): split the population on `FULL_SCAN_CHUNK` boundaries,
+/// evaluate every chunk exactly once — serially, or as contiguous chunk
+/// spans on the scratch's executor pool — and reduce the per-chunk
+/// moments serially in chunk-index order. Because a chunk's value
+/// depends only on the chunk and the reduction order is fixed, the
+/// result is bit-identical for any span width and any pool size — and
 /// bit-identical to the serial `eval`-in-a-loop scan.
-pub fn full_scan_moments_par<E>(n: usize, scratch: &mut ScanScratch, eval: E) -> (f64, f64)
+///
+/// `lanes` is the per-index payload a chunk may mutate (`()` for the
+/// uncached scan, [`CacheLanes`] for the cached one); `split(lanes,
+/// len)` carves off the payload of the first `len` remaining population
+/// rows for a span, and `eval_chunk(start, end, lanes, rel)` evaluates
+/// population rows `[start, end)` against its span payload, in which
+/// row `start` lives at local offset `rel`. Chunk regions are disjoint
+/// by construction, so the pooled scan is race-free.
+fn scan_driver<L, E>(
+    n: usize,
+    scratch: &mut ScanScratch,
+    mut lanes: L,
+    mut split: impl FnMut(L, usize) -> (L, L),
+    eval_chunk: E,
+) -> (f64, f64)
 where
-    E: Fn(usize, usize) -> (f64, f64) + Sync,
+    L: Send,
+    E: Fn(usize, usize, &mut L, usize) -> (f64, f64) + Sync,
 {
     let n_chunks = n.div_ceil(FULL_SCAN_CHUNK);
     let workers = scratch.threads.min(n_chunks);
-    if workers <= 1 {
-        let (mut s, mut s2) = (0.0, 0.0);
-        for c in 0..n_chunks {
-            let start = c * FULL_SCAN_CHUNK;
-            let (bs, bs2) = eval(start, (start + FULL_SCAN_CHUNK).min(n));
-            s += bs;
-            s2 += bs2;
+    let exec = match &scratch.exec {
+        Some(e) if workers > 1 => e.clone(),
+        _ => {
+            // serial fast path: lanes stay whole, so a chunk's local
+            // offset is its population offset
+            let (mut s, mut s2) = (0.0, 0.0);
+            for c in 0..n_chunks {
+                let start = c * FULL_SCAN_CHUNK;
+                let end = (start + FULL_SCAN_CHUNK).min(n);
+                let (bs, bs2) = eval_chunk(start, end, &mut lanes, start);
+                s += bs;
+                s2 += bs2;
+            }
+            return (s, s2);
         }
-        return (s, s2);
-    }
+    };
     scratch.partials.clear();
     scratch.partials.resize(n_chunks, (0.0, 0.0));
-    {
-        // contiguous chunk spans per worker: determinism comes from the
-        // per-chunk evaluation + ordered reduction, not the assignment,
-        // but contiguous spans keep each worker's column reads streaming
-        let mut rest: &mut [(f64, f64)] = &mut scratch.partials;
-        let mut next_chunk = 0usize;
-        std::thread::scope(|scope| {
-            for w in 0..workers {
-                let span = n_chunks / workers + usize::from(w < n_chunks % workers);
-                let (mine, tail) = std::mem::take(&mut rest).split_at_mut(span);
-                rest = tail;
-                let first = next_chunk;
-                next_chunk += span;
-                let eval = &eval;
-                scope.spawn(move || {
-                    for (off, slot) in mine.iter_mut().enumerate() {
-                        let start = (first + off) * FULL_SCAN_CHUNK;
-                        *slot = eval(start, (start + FULL_SCAN_CHUNK).min(n));
-                    }
-                });
-            }
-        });
+    /// One worker's pre-carved share: its first chunk index, its slice
+    /// of the lane payload, and its slice of the partials buffer.
+    struct Span<'p, L> {
+        first: usize,
+        lanes: L,
+        parts: &'p mut [(f64, f64)],
     }
+    // carve one contiguous chunk span per worker up front (balanced to
+    // within one chunk): determinism comes from the per-chunk
+    // evaluation + ordered reduction, not the assignment, but
+    // contiguous spans keep each worker's column reads streaming
+    let mut spans: Vec<Mutex<Option<Span<'_, L>>>> = Vec::with_capacity(workers);
+    {
+        let mut rest: &mut [(f64, f64)] = &mut scratch.partials;
+        let mut rest_lanes = lanes;
+        let mut next_chunk = 0usize;
+        for w in 0..workers {
+            let len = n_chunks / workers + usize::from(w < n_chunks % workers);
+            let first = next_chunk;
+            next_chunk += len;
+            let span_start = first * FULL_SCAN_CHUNK;
+            let span_end = (span_start + len * FULL_SCAN_CHUNK).min(n);
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            let (my_lanes, lane_tail) = split(rest_lanes, span_end - span_start);
+            rest_lanes = lane_tail;
+            spans.push(Mutex::new(Some(Span { first, lanes: my_lanes, parts: mine })));
+        }
+    }
+    // span tasks may land on pool workers whose thread-locals belong to
+    // whatever chain they served last — propagate this chain's
+    // (chain, step) context so scripted faults and diagnostics see the
+    // right coordinates
+    let ctx = current_chain_step();
+    let eval_chunk = &eval_chunk;
+    exec.scope(workers, |w| {
+        let mut slot = spans[w].lock().unwrap_or_else(|e| e.into_inner());
+        let Some(Span { first, mut lanes, parts }) = slot.take() else { return };
+        drop(slot);
+        let _ctx = ScopedChainCtx::enter(ctx);
+        let span_start = first * FULL_SCAN_CHUNK;
+        for (off, out) in parts.iter_mut().enumerate() {
+            let start = (first + off) * FULL_SCAN_CHUNK;
+            let end = (start + FULL_SCAN_CHUNK).min(n);
+            *out = eval_chunk(start, end, &mut lanes, start - span_start);
+        }
+    });
+    drop(spans);
     let (mut s, mut s2) = (0.0, 0.0);
     for &(bs, bs2) in &scratch.partials {
         s += bs;
         s2 += bs2;
     }
     (s, s2)
+}
+
+/// Deterministic full-population scan over a range-based chunk
+/// evaluator: the population splits on `FULL_SCAN_CHUNK` boundaries,
+/// each chunk is evaluated exactly once (as pooled chunk spans when
+/// `scratch.threads() > 1` — no threads are spawned; the spans run on
+/// the scratch's persistent executor), and the per-chunk moments are
+/// reduced serially in chunk-index order. Bit-identical to the serial
+/// scan for any span width and any pool size.
+pub fn full_scan_moments_par<E>(n: usize, scratch: &mut ScanScratch, eval: E) -> (f64, f64)
+where
+    E: Fn(usize, usize) -> (f64, f64) + Sync,
+{
+    scan_driver(n, scratch, (), |(), _| ((), ()), |start, end, _: &mut (), _| eval(start, end))
 }
 
 /// The per-index arrays of a likelihood cache, borrowed mutably for a
@@ -172,70 +257,25 @@ impl<'a> CacheLanes<'a> {
 }
 
 /// `full_scan_moments_par` for cached models: identical chunking,
-/// worker-span and chunk-ordered reduction scheme, but each chunk
-/// evaluation also receives the mutable cache lanes of exactly that
-/// chunk (`eval(start, end, lanes)` with `lanes` rebased so local index
-/// 0 is population index `start`). Chunk regions are disjoint, so the
-/// scan is race-free by construction and bit-identical for any worker
-/// count.
+/// worker-span and chunk-ordered reduction scheme (the same
+/// `scan_driver` skeleton), but each chunk evaluation also receives the
+/// mutable cache lanes of exactly that chunk (`eval(start, end, lanes)`
+/// with `lanes` rebased so local index 0 is population index `start`).
+/// Chunk regions are disjoint, so the scan is race-free by construction
+/// and bit-identical for any worker count and pool size.
 pub fn cached_scan_par<E>(
     n: usize,
     scratch: &mut ScanScratch,
-    mut lanes: CacheLanes<'_>,
+    lanes: CacheLanes<'_>,
     eval: E,
 ) -> (f64, f64)
 where
     E: Fn(usize, usize, CacheLanes<'_>) -> (f64, f64) + Sync,
 {
     debug_assert_eq!(lanes.val_cur.len(), n);
-    let n_chunks = n.div_ceil(FULL_SCAN_CHUNK);
-    let workers = scratch.threads.min(n_chunks);
-    if workers <= 1 {
-        let (mut s, mut s2) = (0.0, 0.0);
-        for c in 0..n_chunks {
-            let start = c * FULL_SCAN_CHUNK;
-            let end = (start + FULL_SCAN_CHUNK).min(n);
-            let (bs, bs2) = eval(start, end, lanes.slice_mut(start, end));
-            s += bs;
-            s2 += bs2;
-        }
-        return (s, s2);
-    }
-    scratch.partials.clear();
-    scratch.partials.resize(n_chunks, (0.0, 0.0));
-    {
-        let mut rest: &mut [(f64, f64)] = &mut scratch.partials;
-        let mut rest_lanes = lanes;
-        let mut next_chunk = 0usize;
-        std::thread::scope(|scope| {
-            for w in 0..workers {
-                let span = n_chunks / workers + usize::from(w < n_chunks % workers);
-                let first = next_chunk;
-                next_chunk += span;
-                let span_start = first * FULL_SCAN_CHUNK;
-                let span_end = (span_start + span * FULL_SCAN_CHUNK).min(n);
-                let (mine, tail) = std::mem::take(&mut rest).split_at_mut(span);
-                rest = tail;
-                let (mut my_lanes, lane_tail) = rest_lanes.split_at_mut(span_end - span_start);
-                rest_lanes = lane_tail;
-                let eval = &eval;
-                scope.spawn(move || {
-                    for (off, slot) in mine.iter_mut().enumerate() {
-                        let start = (first + off) * FULL_SCAN_CHUNK;
-                        let end = (start + FULL_SCAN_CHUNK).min(n);
-                        let sub = my_lanes.slice_mut(start - span_start, end - span_start);
-                        *slot = eval(start, end, sub);
-                    }
-                });
-            }
-        });
-    }
-    let (mut s, mut s2) = (0.0, 0.0);
-    for &(bs, bs2) in &scratch.partials {
-        s += bs;
-        s2 += bs2;
-    }
-    (s, s2)
+    scan_driver(n, scratch, lanes, CacheLanes::split_at_mut, |start, end, sub, rel| {
+        eval(start, end, sub.slice_mut(rel, rel + (end - start)))
+    })
 }
 
 /// A target posterior whose likelihood factorizes over `n()` datapoints.

@@ -254,6 +254,41 @@ fn scripted_panic_downs_exactly_one_chain() {
 }
 
 #[test]
+fn scripted_panic_in_scan_span_downs_only_its_chain() {
+    // Exact rule + threads > chains: every step's full scan runs as
+    // spans on the shared executor pool, so the scripted panic fires
+    // inside a pooled span task (possibly on a worker serving other
+    // chains' spans too). The executor must route the payload back to
+    // the owning chain — and only that chain.
+    let inner = ConjugateGaussian::synthetic(3_000, 0.3, 1.0, 0.0, 2.0, 7);
+    let proposal = inner.rw_proposal(0.4);
+    let model = FaultyModel::new(inner).fault(1, 5, FaultKind::Panic);
+    let report = Session::new(&model)
+        .kernel(&proposal)
+        .rule(MhMode::Exact)
+        .chains(2)
+        .threads(8) // 4 intra-step scan spans per chain
+        .seed(11)
+        .budget(Budget::Steps(12))
+        .init(0.0)
+        .run();
+    assert_eq!(report.failed_chains(), 1);
+    match &report.statuses[1] {
+        ChainStatus::Failed { step, reason } => {
+            assert_eq!(*step, 5, "fault was scripted at step 5");
+            assert!(reason.contains("injected fault"), "reason: {reason}");
+        }
+        s => panic!("chain 1 should have failed, got {s:?}"),
+    }
+    assert_eq!(report.statuses[0], ChainStatus::Completed);
+    // the surviving chain keeps its full budget and finite statistics
+    // (rhat is deliberately NaN when failures leave fewer than 2 chains)
+    assert_eq!(report.merged.steps, 12);
+    assert!(report.pooled_mean().is_finite());
+    assert!(report.acceptance_rate().is_finite());
+}
+
+#[test]
 fn merged_stats_stay_finite_with_two_failed_chains() {
     let inner = ConjugateGaussian::synthetic(900, 0.3, 1.0, 0.0, 2.0, 7);
     let proposal = inner.rw_proposal(0.4);

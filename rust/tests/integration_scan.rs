@@ -11,10 +11,16 @@
 //!   sets (the contract `ExactTest`'s range-based scan rests on);
 //! * at the engine level, a K = 1 exact-rule launch with spare workers
 //!   (`threads > chains` ⇒ intra-step parallel scans) reproduces the
-//!   single-threaded launch bit for bit.
+//!   single-threaded launch bit for bit;
+//! * the persistent executor keeps all of the above: scans pinned to
+//!   explicit pools of 1/2/8 workers reproduce the serial bits (cached
+//!   and uncached), and a deliberately oversubscribed launch (4 chains ×
+//!   4 scan spans on a 2-worker pool) completes with the same bits as
+//!   the single-threaded launch.
 
 use austerity::coordinator::engine::{run_engine, run_engine_cached, EngineConfig};
 use austerity::coordinator::Budget;
+use austerity::coordinator::Executor;
 use austerity::coordinator::MhMode;
 use austerity::data::synthetic::{linreg_toy, two_class_gaussian};
 use austerity::models::traits::{full_scan_moments_par, CachedLlDiff, LlDiffModel, ScanScratch};
@@ -180,4 +186,61 @@ fn engine_exact_rule_identical_with_spare_workers_linreg_cached() {
     for threads in [1usize, 6, 9] {
         assert_eq!(launch(threads), base, "threads {threads}");
     }
+}
+
+#[test]
+fn executor_scan_bit_identical_across_pool_sizes() {
+    // span width (4) deliberately differs from the pool sizes, so spans
+    // multiplex on the small pools and sit idle-capacity on the large
+    // one — the bits must not care either way.
+    let model = logistic(6 * 512 + 201);
+    let mut rng = Pcg64::seeded(21);
+    let cur: Vec<f64> = (0..12).map(|_| 0.2 * rng.normal()).collect();
+    let prop: Vec<f64> = (0..12).map(|_| 0.2 * rng.normal()).collect();
+    let serial = model.full_moments(&cur, &prop);
+    for pool_workers in [1usize, 2, 8] {
+        let pool = Executor::new(pool_workers);
+        let mut scan = ScanScratch::on_pool(&pool, 4, model.n());
+        let par = full_scan_moments_par(model.n(), &mut scan, |a, b| {
+            model.lldiff_range_moments(a, b, &cur, &prop)
+        });
+        assert_eq!(par.0.to_bits(), serial.0.to_bits(), "pool {pool_workers}");
+        assert_eq!(par.1.to_bits(), serial.1.to_bits(), "pool {pool_workers}");
+
+        // cached == uncached == serial on the same pool
+        let mut cache = model.init_cache(&cur);
+        model.begin_step(&mut cache);
+        let cached = model.cached_full_scan(&mut cache, &prop, &mut scan);
+        assert_eq!(cached.0.to_bits(), serial.0.to_bits(), "cached pool {pool_workers}");
+        assert_eq!(cached.1.to_bits(), serial.1.to_bits(), "cached pool {pool_workers}");
+    }
+}
+
+#[test]
+fn engine_oversubscribed_pool_completes_deterministically() {
+    // 4 chains, each granted 4 intra-step scan spans (threads = 16), all
+    // pinned to a pool of only 2 background workers: 4 + 16 logical
+    // tasks multiplex over 2 threads plus the helping submitters. The
+    // launch must complete (no deadlock) with the bits of the
+    // single-threaded run.
+    let model = logistic(4_000);
+    let init = model.map_estimate(30);
+    let kernel = GaussianRandomWalk::new(0.02, 10.0);
+    let launch = |cfg: EngineConfig| {
+        let res = run_engine(&model, &kernel, &MhMode::Exact, init.clone(), &cfg, |_c| {
+            |t: &Vec<f64>| t[0]
+        });
+        assert_eq!(res.failed_chains(), 0);
+        res.runs
+            .iter()
+            .map(|r| r.samples.iter().map(|s| s.value.to_bits()).collect::<Vec<u64>>())
+            .collect::<Vec<_>>()
+    };
+    let base = launch(EngineConfig::new(4, 5, Budget::Steps(30)).threads(1));
+    let pooled = launch(
+        EngineConfig::new(4, 5, Budget::Steps(30))
+            .threads(16)
+            .executor(Executor::new(2)),
+    );
+    assert_eq!(pooled, base);
 }
