@@ -14,9 +14,13 @@
 //!                         scan on the persistent executor
 //!                         (`executor_scan_t{1,4}`) against a per-call
 //!                         `thread::scope` baseline
-//!                         (`executor_vs_scope_speedup_x`), and 4
+//!                         (`executor_vs_scope_speedup_x`), 4
 //!                         concurrent sessions sharing the global pool
-//!                         (`executor_many_sessions_sps`)
+//!                         (`executor_many_sessions_sps`), and the same
+//!                         scan over an 8-way sharded store
+//!                         (`shard_scan_t{1,4}`, `shard_scaling_x`)
+//!                         checked bit-identical to the monolithic
+//!                         store
 //!   L3 sequential test  — one full approximate MH decision
 //!   L3 mh_step          — end-to-end step, uncached vs cached
 //!   L3 engine           — K-chain throughput scaling on the worker pool
@@ -273,9 +277,45 @@ fn main() {
         if exec_speedup >= 1.0 { "PASS >= 1x" } else { "below 1x" }
     );
 
+    // the same exact scan over an 8-way sharded store: segment
+    // boundaries are FULL_SCAN_CHUNK-aligned, so every chunk stays
+    // inside one segment and the reduction is bit-identical to the
+    // monolithic store above
+    let sharded = austerity::models::LogisticModel::with_shards(
+        austerity::data::synthetic::two_class_gaussian(n50, 50, 1.2, 7),
+        10.0,
+        8,
+    )
+    .unwrap();
+    let mut t_shard = [0.0f64; 2];
+    for (slot, threads) in [(0usize, 1usize), (1, 4)] {
+        let mut scan = ScanScratch::new(threads, n50);
+        let t = rec.bench(&format!("shard_scan_t{threads}"), 20, || {
+            std::hint::black_box(full_scan_moments_par(n50, &mut scan, |a, b| {
+                sharded.lldiff_range_moments(a, b, &theta50, &theta50_p)
+            }));
+        });
+        t_shard[slot] = t;
+    }
+    rec.record("shard_scaling_x", t_shard[0] / t_shard[1]);
+    {
+        let mut scan = ScanScratch::new(4, n50);
+        let got = full_scan_moments_par(n50, &mut scan, |a, b| {
+            sharded.lldiff_range_moments(a, b, &theta50, &theta50_p)
+        });
+        let want = full_scan_moments_par(n50, &mut scan, |a, b| {
+            big.lldiff_range_moments(a, b, &theta50, &theta50_p)
+        });
+        let identical = got.0.to_bits() == want.0.to_bits() && got.1.to_bits() == want.1.to_bits();
+        println!(
+            "  -> sharded scan (8 segments) vs monolithic: {}",
+            if identical { "PASS bit-identical" } else { "FAIL bits differ" }
+        );
+    }
+
     println!("\n-- L3 sequential test + steps --");
     let cfg = SeqTestConfig::new(0.05, 500);
-    let mut sched = MinibatchScheduler::new(n);
+    let mut sched = MinibatchScheduler::new(n).unwrap();
     rec.bench("seq_mh_test", 100, || {
         let mu0 = (rng.uniform_pos().ln()) / n as f64;
         std::hint::black_box(seq_mh_test(&model, &theta, &theta_p, mu0, &cfg, &mut sched, &mut rng));
@@ -410,7 +450,7 @@ fn main() {
 
     println!("\n-- L3 engine kernels (ported families via TransitionKernel) --");
     // corrected SGLD on the §6.4 toy: gradient batch + first-batch test
-    let toy = LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0);
+    let toy = LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0).unwrap();
     let sgld_kernel = SgldKernel {
         model: &toy,
         cfg: SgldConfig {
@@ -495,6 +535,7 @@ fn main() {
             || k.starts_with("full_scan_par")
             || k.starts_with("engine_scaling")
             || k.starts_with("executor_")
+            || k.starts_with("shard_")
         {
             println!("{k:<44} {v:>9.3}");
         }

@@ -478,7 +478,7 @@ mod tests {
     }
 
     fn harness(n: usize) -> (MinibatchScheduler, Vec<u32>, Vec<StageTrace>) {
-        (MinibatchScheduler::new(n), Vec::new(), Vec::new())
+        (MinibatchScheduler::new(n).expect("population exceeds the u32 index space"), Vec::new(), Vec::new())
     }
 
     #[test]
@@ -553,7 +553,7 @@ mod tests {
             let mut rng_b = Pcg64::new(77, seed);
             let u = rng_b.uniform_pos();
             let mu0 = (u.ln() + 0.3) / n as f64;
-            let mut sched_b = MinibatchScheduler::new(n);
+            let mut sched_b = MinibatchScheduler::new(n).expect("population exceeds the u32 index space");
             let out_b = seq_mh_test(&model, &(), &(), mu0, &test.cfg, &mut sched_b, &mut rng_b);
             assert_eq!(out_a.accept, out_b.accept, "seed {seed}");
             assert_eq!(out_a.n_used, out_b.n_used, "seed {seed}");

@@ -172,7 +172,7 @@ mod tests {
 
     #[test]
     fn adaptive_chain_uses_more_data_over_time() {
-        let model = LogisticModel::new(two_class_gaussian(8_000, 6, 1.2, 0), 10.0);
+        let model = LogisticModel::new(two_class_gaussian(8_000, 6, 1.2, 0), 10.0).expect("population exceeds the u32 index space");
         let init = model.map_estimate(40);
         let kernel = GaussianRandomWalk::new(0.02, 10.0);
         let mut rng = Pcg64::seeded(0);
@@ -199,7 +199,7 @@ mod tests {
 
     #[test]
     fn adaptive_matches_fixed_when_schedule_constant() {
-        let model = LogisticModel::new(two_class_gaussian(4_000, 4, 1.2, 1), 10.0);
+        let model = LogisticModel::new(two_class_gaussian(4_000, 4, 1.2, 1), 10.0).expect("population exceeds the u32 index space");
         let init = model.map_estimate(30);
         let kernel = GaussianRandomWalk::new(0.02, 10.0);
         let run = |sched: EpsSchedule| {

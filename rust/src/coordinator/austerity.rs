@@ -205,7 +205,7 @@ mod tests {
         seed: u64,
     ) -> SeqTestOutcome {
         let model = FixedPopulation { ls };
-        let mut sched = MinibatchScheduler::new(model.n());
+        let mut sched = MinibatchScheduler::new(model.n()).expect("population exceeds the u32 index space");
         let mut rng = Pcg64::seeded(seed);
         seq_mh_test(&model, &(), &(), mu0, &SeqTestConfig::new(eps, m), &mut sched, &mut rng)
     }
@@ -250,7 +250,7 @@ mod tests {
             // mu0 very near the true mean forces a full scan
             let mu0 = mean + 1e-12;
             let model = FixedPopulation { ls };
-            let mut sched = MinibatchScheduler::new(n);
+            let mut sched = MinibatchScheduler::new(n).expect("population exceeds the u32 index space");
             let out =
                 seq_mh_test(&model, &(), &(), mu0, &SeqTestConfig::new(1e-9, 100), &mut sched, rng);
             assert_eq!(out.n_used, n);
@@ -278,7 +278,7 @@ mod tests {
             let mut used = Vec::new();
             for &eps in &[0.01, 0.05, 0.2] {
                 let model = FixedPopulation { ls: ls.clone() };
-                let mut sched = MinibatchScheduler::new(n);
+                let mut sched = MinibatchScheduler::new(n).expect("population exceeds the u32 index space");
                 let mut r = Pcg64::seeded(seed);
                 let out = seq_mh_test(
                     &model,
@@ -305,7 +305,7 @@ mod tests {
         let mean = ls.iter().sum::<f64>() / n as f64;
         let exact = mean > 0.0;
         let model = FixedPopulation { ls };
-        let mut sched = MinibatchScheduler::new(n);
+        let mut sched = MinibatchScheduler::new(n).expect("population exceeds the u32 index space");
         let mut wrong = 0;
         let trials = 200;
         for s in 0..trials {
@@ -395,7 +395,7 @@ mod tests {
                 for &side in &[-1.0, 1.0] {
                     let mu0 = mean + side * margin;
                     let exact = mean > mu0;
-                    let mut sched = MinibatchScheduler::new(n);
+                    let mut sched = MinibatchScheduler::new(n).expect("population exceeds the u32 index space");
                     let mut wrong = 0usize;
                     for s in 0..trials {
                         let mut rng = Pcg64::new(7_000 + s, 3);

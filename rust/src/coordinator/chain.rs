@@ -9,7 +9,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::accept::AcceptanceTest;
 use crate::coordinator::checkpoint::{
-    BinReader, BinWriter, ChainCheckpoint, CheckpointSpec, Persist,
+    BinReader, BinWriter, ChainCheckpoint, CheckpointSpec, Persist, ShardStamp,
 };
 use crate::coordinator::executor::IntraPar;
 use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
@@ -188,8 +188,9 @@ pub(crate) struct DriveCfg<'a> {
     pub thin: usize,
     /// Intra-step scan grant (width + pool) for `scratch_par`.
     pub intra: IntraPar,
-    /// `(spec, chain id, base seed)` when checkpoint writing is on.
-    pub checkpoint: Option<(&'a CheckpointSpec, usize, u64)>,
+    /// `(spec, chain id, base seed, shard stamp)` when checkpoint
+    /// writing is on.
+    pub checkpoint: Option<(&'a CheckpointSpec, usize, u64, ShardStamp)>,
     /// A previously captured checkpoint to continue from.
     pub resume: Option<ChainCheckpoint>,
     /// Published before every step: the 0-based index of the step being
@@ -326,7 +327,7 @@ where
         prior,
         progress,
         |state, scratch, rng, stats, samples, elapsed| {
-            if let Some((spec, chain, base_seed)) = checkpoint {
+            if let Some((spec, chain, base_seed, shard)) = checkpoint {
                 if spec.every > 0 && stats.steps % spec.every == 0 {
                     let mut sw = BinWriter::new();
                     state.persist(&mut sw);
@@ -335,6 +336,7 @@ where
                     let ck = ChainCheckpoint {
                         chain,
                         base_seed,
+                        shard,
                         steps: stats.steps,
                         accepted: stats.accepted,
                         data_used: stats.data_used,

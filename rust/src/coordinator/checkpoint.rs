@@ -35,8 +35,11 @@ use crate::coordinator::chain::{Budget, Sample};
 
 /// File magic of a chain checkpoint ("AUCK" little-endian).
 pub const CKPT_MAGIC: u32 = 0x4b43_5541;
-/// Current checkpoint format version.
-pub const CKPT_VERSION: u32 = 1;
+/// Current checkpoint format version. v2 added the shard stamp
+/// (index/count/row range) to the header; v1 files are rejected with
+/// [`CkptError::Version`] rather than silently read as shard 0 of 1 —
+/// a v1 run predates sharding and must be restarted, not adopted.
+pub const CKPT_VERSION: u32 = 2;
 
 // ---------------------------------------------------------------------------
 // Errors
@@ -288,6 +291,35 @@ impl Persist for Sample {
 // ---------------------------------------------------------------------------
 // Chain checkpoint
 
+/// Which shard of an embarrassingly-parallel run a chain belongs to.
+/// Stamped into every checkpoint so a resume cannot silently continue a
+/// shard-2-of-8 chain against shard 5's data (or against an unsharded
+/// run). The default stamp (`0 of 1`, empty row range) is the unsharded
+/// run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardStamp {
+    /// Shard index in `0..count`.
+    pub index: usize,
+    /// Total shard count (1 = unsharded).
+    pub count: usize,
+    /// Global row range `[start, end)` this shard owns (0, 0 when
+    /// unsharded — the chain sees the whole population).
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Default for ShardStamp {
+    fn default() -> Self {
+        ShardStamp { index: 0, count: 1, start: 0, end: 0 }
+    }
+}
+
+impl fmt::Display for ShardStamp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "shard {}/{} rows [{}, {})", self.index, self.count, self.start, self.end)
+    }
+}
+
 /// Everything one chain needs to resume bit-identically: budget
 /// accounting, recorded samples, RNG stream position, and the
 /// kernel-encoded state and scratch payloads.
@@ -297,6 +329,9 @@ pub struct ChainCheckpoint {
     pub chain: usize,
     /// Engine base seed; resuming under a different seed is refused.
     pub base_seed: u64,
+    /// Shard membership; resuming under a different shard layout is
+    /// refused (v2+).
+    pub shard: ShardStamp,
     pub steps: usize,
     pub accepted: usize,
     pub data_used: u64,
@@ -321,6 +356,10 @@ impl ChainCheckpoint {
         w.put_u32(CKPT_VERSION);
         w.put_usize(self.chain);
         w.put_u64(self.base_seed);
+        w.put_usize(self.shard.index);
+        w.put_usize(self.shard.count);
+        w.put_usize(self.shard.start);
+        w.put_usize(self.shard.end);
         w.put_usize(self.steps);
         w.put_usize(self.accepted);
         w.put_u64(self.data_used);
@@ -347,6 +386,12 @@ impl ChainCheckpoint {
         let ck = ChainCheckpoint {
             chain: r.usize_()?,
             base_seed: r.u64()?,
+            shard: ShardStamp {
+                index: r.usize_()?,
+                count: r.usize_()?,
+                start: r.usize_()?,
+                end: r.usize_()?,
+            },
             steps: r.usize_()?,
             accepted: r.usize_()?,
             data_used: r.u64()?,
@@ -357,6 +402,10 @@ impl ChainCheckpoint {
             state: r.bytes()?.to_vec(),
             scratch: r.bytes()?.to_vec(),
         };
+        if ck.shard.count == 0 || ck.shard.index >= ck.shard.count || ck.shard.start > ck.shard.end
+        {
+            return Err(CkptError::Corrupt("invalid shard stamp"));
+        }
         r.finish()?;
         Ok(ck)
     }
@@ -483,6 +532,7 @@ mod tests {
         ChainCheckpoint {
             chain: 2,
             base_seed: 42,
+            shard: ShardStamp { index: 1, count: 4, start: 2500, end: 5000 },
             steps: 137,
             accepted: 55,
             data_used: 12_345,
@@ -504,6 +554,7 @@ mod tests {
         let back = ChainCheckpoint::decode(&ck.encode()).unwrap();
         assert_eq!(back.chain, ck.chain);
         assert_eq!(back.base_seed, ck.base_seed);
+        assert_eq!(back.shard, ck.shard);
         assert_eq!(back.steps, ck.steps);
         assert_eq!(back.accepted, ck.accepted);
         assert_eq!(back.data_used, ck.data_used);
@@ -542,6 +593,33 @@ mod tests {
         let mut long = bytes.clone();
         long.push(0);
         assert!(ChainCheckpoint::decode(&long).is_err());
+    }
+
+    #[test]
+    fn v1_checkpoints_are_versioned_out_not_misread() {
+        // A pre-sharding (v1) file has no shard stamp; the loader must
+        // refuse it by version before attempting the v2 layout.
+        let mut bytes = sample_ckpt().encode();
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        assert!(matches!(
+            ChainCheckpoint::decode(&bytes),
+            Err(CkptError::Version { found: 1 })
+        ));
+    }
+
+    #[test]
+    fn nonsense_shard_stamps_are_corrupt() {
+        let mut ck = sample_ckpt();
+        ck.shard = ShardStamp { index: 4, count: 4, start: 0, end: 0 };
+        assert!(matches!(
+            ChainCheckpoint::decode(&ck.encode()),
+            Err(CkptError::Corrupt("invalid shard stamp"))
+        ));
+        ck.shard = ShardStamp { index: 0, count: 0, start: 0, end: 0 };
+        assert!(ChainCheckpoint::decode(&ck.encode()).is_err());
+        // the default (unsharded) stamp is always valid
+        ck.shard = ShardStamp::default();
+        assert_eq!(ChainCheckpoint::decode(&ck.encode()).unwrap().shard, ShardStamp::default());
     }
 
     #[test]

@@ -31,7 +31,9 @@ use crate::coordinator::accept::AcceptanceTest;
 use crate::coordinator::chain::{
     drive_chain_ckpt, Budget, ChainStats, DriveCfg, Sample, ScopedChainCtx,
 };
-use crate::coordinator::checkpoint::{write_manifest, ChainCheckpoint, CheckpointSpec, Persist};
+use crate::coordinator::checkpoint::{
+    write_manifest, ChainCheckpoint, CheckpointSpec, Persist, ShardStamp,
+};
 use crate::coordinator::executor::{Executor, IntraPar};
 use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
 use crate::metrics::convergence::{cross_chain, Convergence};
@@ -65,6 +67,10 @@ pub struct EngineConfig {
     /// deliberately oversubscribed (more chain/scan tasks than workers)
     /// and still completes, just with less overlap.
     pub executor: Option<Executor>,
+    /// Shard membership of this launch (default: unsharded). Stamped
+    /// into every checkpoint; resume refuses checkpoints carrying a
+    /// different stamp.
+    pub shard: ShardStamp,
 }
 
 impl EngineConfig {
@@ -79,6 +85,7 @@ impl EngineConfig {
             checkpoint: None,
             resume: None,
             executor: None,
+            shard: ShardStamp::default(),
         }
     }
 
@@ -118,6 +125,15 @@ impl EngineConfig {
     /// the `executor` field for the oversubscription semantics).
     pub fn executor(mut self, exec: Executor) -> Self {
         self.executor = Some(exec);
+        self
+    }
+
+    /// Stamp this launch as one shard of an embarrassingly-parallel run
+    /// (see `session::Session::shards`). Checkpoints written by the
+    /// launch carry the stamp and resume validates it.
+    pub fn shard(mut self, stamp: ShardStamp) -> Self {
+        assert!(stamp.count >= 1 && stamp.index < stamp.count, "invalid shard stamp");
+        self.shard = stamp;
         self
     }
 }
@@ -323,7 +339,12 @@ where
 /// Load chain `c`'s checkpoint for a resuming launch; a missing file
 /// means "start fresh", anything unreadable or belonging to a different
 /// run panics (downed by the per-chain isolation, not the launch).
-fn load_resume(dir: &Path, chain: usize, base_seed: u64) -> Option<ChainCheckpoint> {
+fn load_resume(
+    dir: &Path,
+    chain: usize,
+    base_seed: u64,
+    shard: ShardStamp,
+) -> Option<ChainCheckpoint> {
     match ChainCheckpoint::load(dir, chain) {
         Ok(None) => None,
         Ok(Some(ck)) => {
@@ -332,6 +353,13 @@ fn load_resume(dir: &Path, chain: usize, base_seed: u64) -> Option<ChainCheckpoi
                     "chain {chain}: checkpoint belongs to a different run \
                      (chain {}, base seed {})",
                     ck.chain, ck.base_seed
+                );
+            }
+            if ck.shard != shard {
+                panic!(
+                    "chain {chain}: checkpoint belongs to a different shard layout \
+                     ({}, expected {})",
+                    ck.shard, shard
                 );
             }
             Some(ck)
@@ -421,7 +449,7 @@ where
         let resume = cfg
             .resume
             .as_deref()
-            .and_then(|dir| load_resume(dir, c, cfg.base_seed));
+            .and_then(|dir| load_resume(dir, c, cfg.base_seed, cfg.shard));
         let (samples, stats) = drive_chain_ckpt(
             kernel,
             init.clone(),
@@ -430,7 +458,7 @@ where
                 burn_in: cfg.burn_in,
                 thin: cfg.thin,
                 intra: intra.clone(),
-                checkpoint: cfg.checkpoint.as_ref().map(|spec| (spec, c, cfg.base_seed)),
+                checkpoint: cfg.checkpoint.as_ref().map(|spec| (spec, c, cfg.base_seed, cfg.shard)),
                 resume,
                 progress: Some(&progress[c]),
             },

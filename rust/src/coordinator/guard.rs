@@ -134,7 +134,7 @@ mod tests {
     use crate::models::traits::LlDiffModel;
 
     fn harness(n: usize) -> (MinibatchScheduler, Vec<u32>, Vec<StageTrace>) {
-        (MinibatchScheduler::new(n), Vec::new(), Vec::new())
+        (MinibatchScheduler::new(n).expect("population exceeds the u32 index space"), Vec::new(), Vec::new())
     }
 
     fn decide<T: AcceptanceTest>(

@@ -152,7 +152,7 @@ impl MhScratch {
     /// chain of a launch multiplexes over one pool.
     pub fn with_scan_pool(n: usize, intra: &IntraPar) -> Self {
         MhScratch {
-            sched: MinibatchScheduler::new(n),
+            sched: MinibatchScheduler::new(n).expect("population exceeds the u32 index space"),
             idx_buf: Vec::new(),
             trace: Vec::new(),
             scan: ScanScratch::from_intra(intra, n),
@@ -432,7 +432,7 @@ mod tests {
         use crate::data::synthetic::linreg_toy;
         use crate::models::LinRegModel;
 
-        let model = LinRegModel::new(linreg_toy(3_000, 0), 3.0, 4950.0);
+        let model = LinRegModel::new(linreg_toy(3_000, 0), 3.0, 4950.0).expect("population exceeds the u32 index space");
         let kernel = |cur: &f64, rng: &mut Pcg64| Proposal {
             param: cur + rng.normal_scaled(0.0, 0.005),
             log_correction: 0.0,
@@ -480,7 +480,7 @@ mod tests {
         use crate::data::synthetic::linreg_toy;
         use crate::models::LinRegModel;
 
-        let model = LinRegModel::new(linreg_toy(3_000, 0), 3.0, 4950.0);
+        let model = LinRegModel::new(linreg_toy(3_000, 0), 3.0, 4950.0).expect("population exceeds the u32 index space");
         let kernel = |cur: &f64, rng: &mut Pcg64| Proposal {
             param: cur + rng.normal_scaled(0.0, 0.005),
             log_correction: 0.0,

@@ -66,7 +66,9 @@ pub use accept::{
 pub use adaptive::{run_adaptive_chain, AdaptiveMhKernel, EpsSchedule};
 pub use austerity::{seq_mh_test, seq_mh_test_cached, BoundSeq, SeqTestConfig, SeqTestOutcome};
 pub use chain::{current_chain_step, drive_chain, drive_chain_par, Budget, ChainStats, Sample};
-pub use checkpoint::{BinReader, BinWriter, ChainCheckpoint, CheckpointSpec, CkptError, Persist};
+pub use checkpoint::{
+    BinReader, BinWriter, ChainCheckpoint, CheckpointSpec, CkptError, Persist, ShardStamp,
+};
 pub use delta::{PairStats, SeqTestTable};
 pub use design::{average_design, wang_tsiatis_design, worst_case_design, DesignChoice, DesignGrid, WtChoice};
 pub use dp::{analyze_pocock, analyze_walk, simulate_walk, uniform_pis, SeqAnalysis};
@@ -82,7 +84,7 @@ pub use record::{
     Components, Param, PerChain, RecordDefault, RecordSpec, Replicate, ScalarFn, Thinned, VecMean,
 };
 pub use scheduler::MinibatchScheduler;
-pub use session::{KernelSession, NoProposal, RunReport, Session};
+pub use session::{KernelSession, NoProposal, RunReport, Session, ShardInfo, ShardReport};
 
 // Legacy launch entry points, demoted to internal shims behind
 // `Session` / `KernelSession`: re-exported (hidden) solely so the

@@ -15,6 +15,7 @@
 //! the kernels directly — there is no per-stage widening copy anywhere.
 
 use crate::coordinator::checkpoint::{BinReader, BinWriter, CkptError, Persist};
+use crate::data::sharded::{check_u32_indexable, DataTooLarge};
 use crate::stats::Pcg64;
 
 pub struct MinibatchScheduler {
@@ -24,9 +25,17 @@ pub struct MinibatchScheduler {
 }
 
 impl MinibatchScheduler {
-    pub fn new(n: usize) -> Self {
-        assert!(n > 0 && n <= u32::MAX as usize);
-        MinibatchScheduler { indices: (0..n as u32).collect(), pos: 0 }
+    /// Build the persistent permutation buffer over `n` datapoints.
+    /// The buffer stores indices as `u32`, so the population is
+    /// validated against the `u32` index space *before* allocation —
+    /// a too-tall population is a typed [`DataTooLarge`] error, never a
+    /// silent `n as u32` truncation (the global index space can exceed
+    /// `u32` once the store is sharded; per-shard index spaces stay
+    /// narrow).
+    pub fn new(n: usize) -> Result<Self, DataTooLarge> {
+        assert!(n > 0, "scheduler needs a non-empty population");
+        check_u32_indexable("minibatch scheduler", n)?;
+        Ok(MinibatchScheduler { indices: (0..n as u32).collect(), pos: 0 })
     }
 
     pub fn n(&self) -> usize {
@@ -107,7 +116,7 @@ mod tests {
         testkit::forall(64, |rng| {
             let n = rng.below(500) + 10;
             let m = rng.below(50) + 1;
-            let mut sched = MinibatchScheduler::new(n);
+            let mut sched = MinibatchScheduler::new(n).unwrap();
             sched.reset();
             let mut seen = std::collections::HashSet::new();
             loop {
@@ -125,8 +134,21 @@ mod tests {
     }
 
     #[test]
+    #[cfg(target_pointer_width = "64")]
+    fn too_tall_population_is_a_typed_error_not_a_truncation() {
+        // validated before the index buffer is allocated, so this is
+        // cheap even though the population would be > 4 Gi entries
+        let err = MinibatchScheduler::new(u32::MAX as usize + 1).unwrap_err();
+        assert_eq!(err.what, "minibatch scheduler");
+        assert_eq!(err.n, u32::MAX as usize + 1);
+        // the exact boundary still works... as a type; don't allocate
+        // 16 GiB in a unit test to prove it.
+        assert!(MinibatchScheduler::new(1).is_ok());
+    }
+
+    #[test]
     fn consumed_slice_is_the_draw_prefix() {
-        let mut sched = MinibatchScheduler::new(50);
+        let mut sched = MinibatchScheduler::new(50).unwrap();
         let mut rng = Pcg64::seeded(3);
         sched.reset();
         let first: Vec<u32> = sched.next_batch(7, &mut rng).to_vec();
@@ -139,7 +161,7 @@ mod tests {
     #[test]
     fn tail_batch_is_short() {
         let mut rng = Pcg64::seeded(0);
-        let mut sched = MinibatchScheduler::new(10);
+        let mut sched = MinibatchScheduler::new(10).unwrap();
         sched.reset();
         assert_eq!(sched.next_batch(7, &mut rng).len(), 7);
         assert_eq!(sched.next_batch(7, &mut rng).len(), 3);
@@ -152,7 +174,7 @@ mod tests {
     #[test]
     fn persist_roundtrip_resumes_identical_draw_sequence() {
         let mut rng = Pcg64::seeded(7);
-        let mut sched = MinibatchScheduler::new(200);
+        let mut sched = MinibatchScheduler::new(200).unwrap();
         // consume a few steps so the permutation is non-trivial and the
         // draw is mid-flight
         for _ in 0..3 {
@@ -205,7 +227,7 @@ mod tests {
         let m = 5;
         let steps = 40_000;
         let mut rng = Pcg64::seeded(1);
-        let mut sched = MinibatchScheduler::new(n);
+        let mut sched = MinibatchScheduler::new(n).unwrap();
         let mut counts = vec![0usize; n];
         for _ in 0..steps {
             sched.reset();
@@ -230,7 +252,7 @@ mod tests {
         let m = 3;
         let steps = 60_000;
         let mut rng = Pcg64::seeded(2);
-        let mut sched = MinibatchScheduler::new(n);
+        let mut sched = MinibatchScheduler::new(n).unwrap();
         let mut counts = vec![vec![0usize; n]; n];
         for _ in 0..steps {
             sched.reset();

@@ -33,7 +33,7 @@ use std::time::Duration;
 
 use crate::coordinator::accept::AcceptanceTest;
 use crate::coordinator::chain::{Budget, ChainStats};
-use crate::coordinator::checkpoint::{json_num, json_str, CheckpointSpec, Persist};
+use crate::coordinator::checkpoint::{json_num, json_str, CheckpointSpec, Persist, ShardStamp};
 use crate::coordinator::engine::{
     run_engine_kernel, ChainRun, ChainStatus, EngineConfig, EngineResult,
 };
@@ -42,9 +42,16 @@ use crate::coordinator::guard::{GuardPolicy, Guarded};
 use crate::coordinator::kernel::TransitionKernel;
 use crate::coordinator::mh::MhMode;
 use crate::coordinator::record::{PerChain, RecordDefault, RecordSpec, Replicate};
+use crate::data::sharded::{even_rows, DataTooLarge};
 use crate::metrics::convergence::Convergence;
-use crate::models::traits::{LlDiffModel, ProposalKernel};
+use crate::models::traits::{LlDiffModel, PriorTempered, ProposalKernel, ShardableModel};
+use crate::samplers::gibbs::{gaussian_product, GaussianMoments, MergeError};
 use crate::stats::welford::Welford;
+
+/// Per-shard seed stride (the 64-bit golden-ratio increment): shard `s`
+/// of a sharded launch runs under `seed + s * STRIDE` (wrapping), so the
+/// shards' chain streams are decorrelated without reserving stream ids.
+const SHARD_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
 
 /// Placeholder proposal-kernel type of a freshly built [`Session`]; it
 /// implements no `ProposalKernel`, so `run()` only compiles once
@@ -65,6 +72,7 @@ struct LaunchCfg {
     resume: Option<PathBuf>,
     guard: GuardPolicy,
     executor: Option<Executor>,
+    shards: usize,
 }
 
 impl LaunchCfg {
@@ -81,6 +89,7 @@ impl LaunchCfg {
             resume: None,
             guard: GuardPolicy::default(),
             executor: None,
+            shards: 1,
         }
     }
 
@@ -275,6 +284,18 @@ impl<'a, M: LlDiffModel, K, T, R> Session<'a, M, K, T, R> {
         self.cfg.guard = policy;
         self
     }
+
+    /// Split the launch into `shards` embarrassingly-parallel
+    /// sub-posterior runs (default 1 = ordinary launch). Each shard runs
+    /// the full chain configuration against its own row range of the
+    /// data under the 1/shards-tempered prior; launch with
+    /// [`Session::run_sharded`], which returns one [`RunReport`] per
+    /// shard plus the consensus (Gaussian-product) combination.
+    pub fn shards(mut self, shards: usize) -> Self {
+        assert!(shards >= 1, "need at least one shard");
+        self.cfg.shards = shards;
+        self
+    }
 }
 
 impl<'a, M, K, T, R> Session<'a, M, K, T, R>
@@ -293,6 +314,11 @@ where
     /// is decision-transparent, so guarded and bare launches match bit
     /// for bit).
     pub fn run(self) -> RunReport<R::Observer> {
+        assert!(
+            self.cfg.shards == 1,
+            "Session: .shards({}) was set — launch with .run_sharded()",
+            self.cfg.shards
+        );
         let Session { model, proposal, rule, record, init, cfg } = self;
         let proposal = proposal.expect("Session: call .kernel(..) before .run()");
         let init = init.expect("Session: call .init(..) before .run()");
@@ -300,6 +326,132 @@ where
         let rule = Guarded::new(rule, cfg.guard);
         let result = model.session_launch(proposal, &rule, init, &ecfg, |c| record.make(c));
         RunReport::from_engine(result, rule.name(), model.session_backend(), Some(model.n()), &ecfg)
+    }
+}
+
+impl<'a, M, K, T, R> Session<'a, M, K, T, R>
+where
+    M: ShardableModel + Sync,
+    M::Param: Persist + Clone,
+    K: ProposalKernel<M::Param> + Sync,
+    T: AcceptanceTest + Sync,
+    R: RecordSpec<M::Param> + Sync,
+{
+    /// Launch the configured run as `shards` independent sub-posterior
+    /// runs (embarrassingly-parallel MCMC): shard `s` gets its own even
+    /// row range of the data ([`ShardableModel::shard_model`]), the
+    /// 1/shards-tempered prior (so the shard product reproduces the
+    /// prior exactly once), a decorrelated base seed, and — when
+    /// checkpointing — its own `shard-<s>` subdirectory. Returns one
+    /// full [`RunReport`] per shard (each stamped with its
+    /// [`ShardInfo`]) inside a [`ShardReport`], whose
+    /// [`ShardReport::combined`] forms the consensus Gaussian-product
+    /// posterior over the recorded scalar.
+    ///
+    /// With `shards == 1` this is an ordinary [`Session::run`] launch
+    /// over the whole dataset: the prior tempering is an exact no-op
+    /// (`log_correction * 1.0`) and the row range is the full
+    /// population, so results are bit-identical to `run()`.
+    pub fn run_sharded(self) -> Result<ShardReport<R::Observer>, DataTooLarge> {
+        let Session { model, proposal, rule, record, init, cfg } = self;
+        let proposal = proposal.expect("Session: call .kernel(..) before .run_sharded()");
+        let init = init.expect("Session: call .init(..) before .run_sharded()");
+        let shards = cfg.shards;
+        let tempered = PriorTempered::new(proposal, shards);
+        let rule = Guarded::new(rule, cfg.guard);
+        let base = cfg.engine_config("Session");
+        let mut reports = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let sub = model.shard_model(s, shards)?;
+            let (start, end) = even_rows(model.n(), s, shards);
+            let stamp = ShardStamp { index: s, count: shards, start, end };
+            let mut ecfg = base.clone();
+            ecfg.base_seed = cfg.seed.wrapping_add((s as u64).wrapping_mul(SHARD_SEED_STRIDE));
+            ecfg.shard = stamp;
+            if let Some(spec) = &mut ecfg.checkpoint {
+                spec.dir = spec.dir.join(format!("shard-{s}"));
+            }
+            if let Some(dir) = &mut ecfg.resume {
+                *dir = dir.join(format!("shard-{s}"));
+            }
+            let result =
+                sub.session_launch(&tempered, &rule, init.clone(), &ecfg, |c| record.make(c));
+            let mut report = RunReport::from_engine(
+                result,
+                rule.name(),
+                sub.session_backend(),
+                Some(sub.n()),
+                &ecfg,
+            );
+            report.shard = Some(ShardInfo { index: s, count: shards, start, end });
+            reports.push(report);
+        }
+        Ok(ShardReport { shards: reports })
+    }
+}
+
+/// Which slice of a sharded launch a [`RunReport`] covers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardInfo {
+    /// Shard index in `0..count`.
+    pub index: usize,
+    /// Total shard count of the launch.
+    pub count: usize,
+    /// Global row range `[start, end)` of the shard's data.
+    pub start: usize,
+    pub end: usize,
+}
+
+impl ShardInfo {
+    /// Number of rows this shard owns.
+    pub fn rows(&self) -> usize {
+        self.end - self.start
+    }
+}
+
+/// Everything a sharded launch produced: one full per-shard
+/// [`RunReport`] (chains, draws, counters, convergence — each stamped
+/// with its [`ShardInfo`]) plus the consensus combination.
+pub struct ShardReport<O> {
+    /// Per-shard reports, in shard order.
+    pub shards: Vec<RunReport<O>>,
+}
+
+impl<O> ShardReport<O> {
+    /// Consensus (Gaussian-product) combination of the per-shard
+    /// posteriors over the recorded scalar: each shard contributes its
+    /// pooled mean/variance weighted by precision (Scott et al. CMC).
+    /// Errors if any shard's draws are degenerate (fewer than two, or a
+    /// zero/non-finite variance).
+    pub fn combined(&self) -> Result<GaussianMoments, MergeError> {
+        let parts: Vec<GaussianMoments> = self
+            .shards
+            .iter()
+            .map(|r| {
+                let std = r.pooled_std();
+                let n = r.runs.iter().map(|c| c.samples.len() as u64).sum();
+                GaussianMoments { mean: r.pooled_mean(), var: std * std, n }
+            })
+            .collect();
+        gaussian_product(&parts)
+    }
+
+    /// Chains that failed across all shards.
+    pub fn failed_chains(&self) -> usize {
+        self.shards.iter().map(|r| r.failed_chains()).sum()
+    }
+
+    /// Counters summed over every shard's completed chains.
+    pub fn merged(&self) -> ChainStats {
+        let mut m = ChainStats::default();
+        for r in &self.shards {
+            m.steps += r.merged.steps;
+            m.accepted += r.merged.accepted;
+            m.data_used += r.merged.data_used;
+            m.guard_trips += r.merged.guard_trips;
+            m.wall = m.wall.max(r.merged.wall);
+        }
+        m
     }
 }
 
@@ -500,6 +652,9 @@ pub struct RunReport<O> {
     pub wall: Duration,
     /// Cross-chain split R-hat / ESS over the recorded scalar stream.
     pub convergence: Convergence,
+    /// Set when this report is one shard of a [`Session::run_sharded`]
+    /// launch (`None` for ordinary runs).
+    pub shard: Option<ShardInfo>,
 }
 
 impl<O> RunReport<O> {
@@ -526,6 +681,7 @@ impl<O> RunReport<O> {
             merged,
             wall,
             convergence,
+            shard: None,
         }
     }
 
@@ -633,6 +789,13 @@ impl<O> RunReport<O> {
             "\"chains\":{},\"seed\":{},\"burn_in\":{},\"thin\":{},",
             self.chains, self.seed, self.burn_in, self.thin
         ));
+        match &self.shard {
+            Some(sh) => s.push_str(&format!(
+                "\"shard\":{{\"index\":{},\"count\":{},\"rows\":[{},{}]}},",
+                sh.index, sh.count, sh.start, sh.end
+            )),
+            None => s.push_str("\"shard\":null,"),
+        }
         let (kind, per_chain) = match self.budget {
             Budget::Steps(k) => ("steps", k as f64),
             Budget::Wall(d) => ("wall_secs", d.as_secs_f64()),
@@ -747,6 +910,13 @@ mod tests {
         move |cur: &f64, rng: &mut Pcg64| Proposal {
             param: cur + rng.normal_scaled(0.0, sigma),
             log_correction: 0.0,
+        }
+    }
+
+    impl ShardableModel for GaussTarget {
+        fn shard_model(&self, shard: usize, shards: usize) -> Result<Self, DataTooLarge> {
+            let (start, end) = even_rows(self.n, shard, shards);
+            Ok(GaussTarget { n: end - start })
         }
     }
 
@@ -901,6 +1071,99 @@ mod tests {
             _ => (b, k),
         });
         assert_eq!(depth, (0, 0));
+    }
+
+    #[test]
+    fn one_shard_run_matches_plain_run_bitwise() {
+        let model = GaussTarget { n: 40 };
+        let kernel = rw_kernel(1.0);
+        let build = || {
+            Session::new(&model)
+                .kernel(&kernel)
+                .chains(2)
+                .seed(13)
+                .budget(Budget::Steps(150))
+                .burn_in(10)
+                .init(0.0)
+        };
+        let plain = build().run();
+        let sharded = build().shards(1).run_sharded().unwrap();
+        assert_eq!(sharded.shards.len(), 1);
+        let shard = &sharded.shards[0];
+        assert_eq!(shard.shard, Some(ShardInfo { index: 0, count: 1, start: 0, end: 40 }));
+        assert_eq!(shard.merged.steps, plain.merged.steps);
+        assert_eq!(shard.merged.accepted, plain.merged.accepted);
+        for (a, b) in shard.runs.iter().zip(&plain.runs) {
+            let va: Vec<u64> = a.samples.iter().map(|s| s.value.to_bits()).collect();
+            let vb: Vec<u64> = b.samples.iter().map(|s| s.value.to_bits()).collect();
+            assert_eq!(va, vb);
+        }
+    }
+
+    #[test]
+    fn sharded_run_reports_per_shard_accounting_and_combines() {
+        let model = GaussTarget { n: 41 };
+        let kernel = rw_kernel(1.0);
+        let report = Session::new(&model)
+            .kernel(&kernel)
+            .chains(2)
+            .seed(7)
+            .budget(Budget::Steps(300))
+            .burn_in(50)
+            .shards(3)
+            .run_sharded()
+            .unwrap();
+        assert_eq!(report.shards.len(), 3);
+        let mut rows = 0;
+        for (s, r) in report.shards.iter().enumerate() {
+            let info = r.shard.expect("per-shard stamp");
+            assert_eq!(info.index, s);
+            assert_eq!(info.count, 3);
+            rows += info.rows();
+            assert_eq!(r.n_data, Some(info.rows()));
+            assert_eq!(r.failed_chains(), 0);
+            assert!(r.merged.steps > 0);
+            // the stamp rides into the JSON for per-shard accounting
+            let json = r.to_json();
+            assert!(json.contains(&format!("\"shard\":{{\"index\":{s},\"count\":3")), "{json}");
+        }
+        assert_eq!(rows, 41, "shards tile the population");
+        // shard seeds are decorrelated: not all first draws identical
+        let firsts: Vec<u64> = report
+            .shards
+            .iter()
+            .map(|r| r.runs[0].samples[0].value.to_bits())
+            .collect();
+        assert!(firsts.windows(2).any(|w| w[0] != w[1]), "{firsts:?}");
+        // consensus combination exists and is finite
+        let g = report.combined().unwrap();
+        assert!(g.mean.is_finite() && g.var > 0.0 && g.n > 0);
+        assert_eq!(report.merged().steps, 3 * 2 * 300);
+    }
+
+    #[test]
+    #[should_panic(expected = "run_sharded")]
+    fn plain_run_refuses_a_sharded_config() {
+        let model = GaussTarget { n: 10 };
+        let kernel = rw_kernel(1.0);
+        let _ = Session::new(&model)
+            .kernel(&kernel)
+            .budget(Budget::Steps(5))
+            .init(0.0)
+            .shards(2)
+            .run();
+    }
+
+    #[test]
+    fn unsharded_json_reports_shard_null() {
+        let model = GaussTarget { n: 10 };
+        let kernel = rw_kernel(1.0);
+        let report = Session::new(&model)
+            .kernel(&kernel)
+            .budget(Budget::Steps(5))
+            .init(0.0)
+            .run();
+        assert!(report.to_json().contains("\"shard\":null,"));
     }
 
     #[test]

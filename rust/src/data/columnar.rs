@@ -22,6 +22,7 @@
 //! *population* sums `sum l` / `sum l^2` are associated, never a row's
 //! `z`.
 
+use crate::data::sharded::{check_u32_indexable, DataTooLarge};
 use crate::data::Dataset;
 
 /// Rows per lane block. Eight f64 lanes = two AVX2 / one AVX-512 vector
@@ -46,19 +47,30 @@ pub struct Columnar {
 }
 
 impl Columnar {
-    /// Transpose a row-major dataset into lane-padded columns.
-    pub fn from_dataset(data: &Dataset) -> Self {
-        let (n, d) = (data.n(), data.d());
-        assert!(n <= u32::MAX as usize, "columnar indices are u32");
+    /// Transpose a row-major dataset into lane-padded columns. Errors
+    /// (never panics) when the row count exceeds the `u32` index space,
+    /// so model constructors surface it as a launch failure.
+    pub fn from_dataset(data: &Dataset) -> Result<Self, DataTooLarge> {
+        Self::from_rows(data, 0, data.n())
+    }
+
+    /// Transpose rows `[start, end)` into lane-padded columns — one
+    /// segment of a sharded store. Validates the segment's row count
+    /// against the `u32` index space *before* allocating.
+    pub fn from_rows(data: &Dataset, start: usize, end: usize) -> Result<Self, DataTooLarge> {
+        assert!(start <= end && end <= data.n(), "segment range out of bounds");
+        let n = end - start;
+        check_u32_indexable("columnar segment", n)?;
+        let d = data.d();
         let padded_n = n.div_ceil(LANES) * LANES;
         let mut cols = vec![0.0; d * padded_n];
         for i in 0..n {
-            let row = data.row(i);
+            let row = data.row(start + i);
             for j in 0..d {
                 cols[j * padded_n + i] = row[j];
             }
         }
-        Columnar { cols, y: data.labels().to_vec(), n, d, padded_n }
+        Ok(Columnar { cols, y: data.labels()[start..end].to_vec(), n, d, padded_n })
     }
 
     #[inline]
@@ -230,7 +242,7 @@ mod tests {
     #[test]
     fn transpose_round_trips_values_and_pads_with_zeros() {
         let data = random_dataset(13, 5, 0);
-        let cols = Columnar::from_dataset(&data);
+        let cols = Columnar::from_dataset(&data).unwrap();
         assert_eq!(cols.n(), 13);
         assert_eq!(cols.d(), 5);
         assert_eq!(cols.padded_n(), 16);
@@ -249,7 +261,7 @@ mod tests {
     #[test]
     fn row_dot_matches_reference_sum() {
         let data = random_dataset(40, 7, 1);
-        let cols = Columnar::from_dataset(&data);
+        let cols = Columnar::from_dataset(&data).unwrap();
         let mut rng = Pcg64::seeded(2);
         let t: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
         for i in [0usize, 17, 39] {
@@ -264,7 +276,7 @@ mod tests {
     #[test]
     fn block_variants_are_bit_identical_to_row_dots() {
         let data = random_dataset(64, 11, 3);
-        let cols = Columnar::from_dataset(&data);
+        let cols = Columnar::from_dataset(&data).unwrap();
         let mut rng = Pcg64::seeded(4);
         let a: Vec<f64> = (0..11).map(|_| rng.normal()).collect();
         let b: Vec<f64> = (0..11).map(|_| rng.normal()).collect();
@@ -301,6 +313,24 @@ mod tests {
         let mut sq = [0.0; LANES];
         cols.block_dot_seq(16, &b, &mut sq);
         assert_eq!(sq.map(f64::to_bits), z1.map(f64::to_bits));
+    }
+
+    #[test]
+    fn from_rows_extracts_a_padded_segment() {
+        let data = random_dataset(21, 3, 5);
+        let seg = Columnar::from_rows(&data, 8, 19).unwrap();
+        assert_eq!(seg.n(), 11);
+        assert_eq!(seg.padded_n(), 16);
+        for i in 0..11 {
+            let row = data.row(8 + i);
+            for j in 0..3 {
+                assert_eq!(seg.value(i, j).to_bits(), row[j].to_bits());
+            }
+            assert_eq!(seg.label(i), data.label(8 + i));
+        }
+        for j in 0..3 {
+            assert_eq!(&seg.col(j)[11..], &[0.0; 5]);
+        }
     }
 
     #[test]

@@ -64,6 +64,19 @@ impl Dataset {
         (take(&idx[..n_train]), take(&idx[n_train..]))
     }
 
+    /// Copy the contiguous rows `[start, end)` into a standalone
+    /// dataset — the per-shard split of the embarrassingly-parallel
+    /// mode.
+    pub fn slice_rows(&self, start: usize, end: usize) -> Dataset {
+        assert!(start <= end && end <= self.n, "row range out of bounds");
+        Dataset::new(
+            self.x[start * self.d..end * self.d].to_vec(),
+            self.y[start..end].to_vec(),
+            end - start,
+            self.d,
+        )
+    }
+
     /// Subset by explicit row indices.
     pub fn subset(&self, ids: &[usize]) -> Dataset {
         let mut x = Vec::with_capacity(ids.len() * self.d);
@@ -147,6 +160,17 @@ mod tests {
         let mut seen: Vec<f64> = tr.labels().iter().chain(te.labels()).copied().collect();
         seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(seen, (0..n).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn slice_rows_copies_a_contiguous_range() {
+        let d = toy();
+        let s = d.slice_rows(1, 3);
+        assert_eq!(s.n(), 2);
+        assert_eq!(s.row(0), &[3.0, 4.0]);
+        assert_eq!(s.row(1), &[5.0, 6.0]);
+        assert_eq!(s.labels(), &[-1.0, 1.0]);
+        assert_eq!(d.slice_rows(2, 2).n(), 0);
     }
 
     #[test]

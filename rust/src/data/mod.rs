@@ -3,8 +3,10 @@
 pub mod columnar;
 pub mod dataset;
 pub mod linalg;
+pub mod sharded;
 pub mod synthetic;
 
 pub use columnar::{Columnar, LANES};
 pub use dataset::{Dataset, Unsupervised};
 pub use linalg::Mat;
+pub use sharded::{DataTooLarge, SegmentSource, ShardedColumnar, SEGMENT_ALIGN};

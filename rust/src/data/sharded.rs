@@ -1,0 +1,520 @@
+//! Sharded columnar store: the out-of-core-ready data layer behind the
+//! tall-data scan path.
+//!
+//! [`ShardedColumnar`] splits the row index space `[0, n)` into
+//! [`SEGMENT_ALIGN`]-aligned segments, each held as an independent
+//! [`Columnar`] block materialized through a [`SegmentSource`]. Because
+//! every segment boundary is a multiple of `SEGMENT_ALIGN` — and the
+//! scan drivers partition work into `FULL_SCAN_CHUNK = SEGMENT_ALIGN`
+//! chunks reduced in chunk-index order — a full scan over the sharded
+//! store decomposes into exactly the same lane blocks as over the
+//! unsharded store, and is therefore bit-identical to it at any shard
+//! count × thread count (DESIGN.md §2c).
+//!
+//! The `SegmentSource` indirection is what makes the store
+//! out-of-core-ready: today the only source is the in-RAM row-major
+//! [`Dataset`]; a memory-mapped or on-disk source only needs to produce
+//! the same `Columnar` segments. Row indices *within* a segment stay
+//! `u32` (the minibatch index type); the *global* row space is `usize`,
+//! so a sharded store can in principle exceed the `u32` ceiling that a
+//! single segment — and the global minibatch scheduler — must respect.
+//! Every path that narrows a row count to `u32` validates first and
+//! reports a typed [`DataTooLarge`] instead of truncating or aborting.
+
+use std::fmt;
+
+use crate::data::columnar::{Columnar, LANES};
+use crate::data::dataset::Dataset;
+
+/// Segment boundary quantum (rows). `models::traits::FULL_SCAN_CHUNK`
+/// is defined in terms of this constant, and it is a multiple of
+/// `LANES`, so chunk-aligned lane blocks never straddle a segment
+/// boundary.
+pub const SEGMENT_ALIGN: usize = 512;
+
+const _: () = assert!(SEGMENT_ALIGN % LANES == 0);
+
+/// A row-index space was asked to cover more rows than its `u32` index
+/// type can address. Returned (never panicked) by every constructor on
+/// the data-index path, so `Session::run()` surfaces it as a launch
+/// error instead of a process abort.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DataTooLarge {
+    /// Which index space overflowed ("minibatch scheduler",
+    /// "columnar segment", ...).
+    pub what: &'static str,
+    /// The offending row count.
+    pub n: usize,
+}
+
+impl fmt::Display for DataTooLarge {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: {} rows exceed the u32 index space (max {}); \
+             shard the store to keep per-segment indices narrow",
+            self.what,
+            self.n,
+            u32::MAX
+        )
+    }
+}
+
+impl std::error::Error for DataTooLarge {}
+
+/// Validate that `n` rows fit the `u32` index space *before* anything
+/// proportional to `n` is allocated, so the failure is a cheap typed
+/// error rather than an OOM or a silent truncation.
+pub fn check_u32_indexable(what: &'static str, n: usize) -> Result<(), DataTooLarge> {
+    if n > u32::MAX as usize {
+        Err(DataTooLarge { what, n })
+    } else {
+        Ok(())
+    }
+}
+
+/// Where segments come from. `ShardedColumnar` never assumes the rows
+/// live in RAM — it asks the source to materialize one aligned row
+/// range at a time, which is the whole out-of-core contract.
+pub trait SegmentSource {
+    /// Total rows in the source.
+    fn n(&self) -> usize;
+
+    /// Features per row.
+    fn d(&self) -> usize;
+
+    /// Materialize rows `[start, end)` as one columnar segment.
+    fn load_segment(&self, start: usize, end: usize) -> Result<Columnar, DataTooLarge>;
+}
+
+impl SegmentSource for Dataset {
+    fn n(&self) -> usize {
+        Dataset::n(self)
+    }
+
+    fn d(&self) -> usize {
+        Dataset::d(self)
+    }
+
+    fn load_segment(&self, start: usize, end: usize) -> Result<Columnar, DataTooLarge> {
+        Columnar::from_rows(self, start, end)
+    }
+}
+
+/// Rows per segment for an `n`-row store split `shards` ways: the
+/// smallest `SEGMENT_ALIGN`-aligned length that covers `n` in at most
+/// `shards` segments. Every segment but the last has exactly this many
+/// rows; the last may be short.
+pub fn segment_rows(n: usize, shards: usize) -> usize {
+    assert!(shards >= 1, "need at least one shard");
+    n.div_ceil(SEGMENT_ALIGN).div_ceil(shards).max(1) * SEGMENT_ALIGN
+}
+
+/// Aligned row range `[start, end)` of segment `shard` of `shards` over
+/// `n` rows — the layout `ShardedColumnar::from_source` realizes.
+/// Trailing shards collapse to empty ranges when `n` has fewer than
+/// `shards` alignment chunks.
+pub fn shard_rows(n: usize, shard: usize, shards: usize) -> (usize, usize) {
+    let rows = segment_rows(n, shards);
+    let start = (shard * rows).min(n);
+    (start, (start + rows).min(n))
+}
+
+/// Even (unaligned) row range of shard `shard` of `shards` — the split
+/// the embarrassingly-parallel mode uses for its per-shard subset
+/// posteriors, where balance matters and alignment does not (each shard
+/// builds its own independently padded store). Never empty for
+/// `shards <= n`.
+pub fn even_rows(n: usize, shard: usize, shards: usize) -> (usize, usize) {
+    assert!(shards >= 1 && shard < shards);
+    (shard * n / shards, (shard + 1) * n / shards)
+}
+
+/// Feature-major store sharded into `SEGMENT_ALIGN`-aligned
+/// [`Columnar`] segments.
+///
+/// The method surface mirrors `Columnar`'s lane-block kernels exactly,
+/// with a single-segment fast path, so the models' moments kernels are
+/// agnostic to the shard count. Aligned blocks (every block the scan
+/// drivers produce) resolve to one segment and delegate; a block that
+/// straddles a boundary — only reachable from unaligned ad-hoc ranges —
+/// falls back to the routed per-row dots, which are bit-identical by
+/// the columnar accumulation contract.
+#[derive(Clone, Debug)]
+pub struct ShardedColumnar {
+    segments: Vec<Columnar>,
+    /// Rows per segment (all but the last); multiple of `SEGMENT_ALIGN`.
+    seg_rows: usize,
+    n: usize,
+    d: usize,
+}
+
+impl ShardedColumnar {
+    /// Build the store from `src` in at most `shards` aligned segments.
+    pub fn from_source<S: SegmentSource>(src: &S, shards: usize) -> Result<Self, DataTooLarge> {
+        let (n, d) = (src.n(), src.d());
+        assert!(n >= 1, "sharded store needs at least one row");
+        let seg_rows = segment_rows(n, shards);
+        let count = n.div_ceil(seg_rows);
+        let mut segments = Vec::with_capacity(count);
+        for s in 0..count {
+            let start = s * seg_rows;
+            let end = (start + seg_rows).min(n);
+            segments.push(src.load_segment(start, end)?);
+        }
+        Ok(ShardedColumnar { segments, seg_rows, n, d })
+    }
+
+    /// `from_source` over an in-RAM row-major dataset.
+    pub fn from_dataset(data: &Dataset, shards: usize) -> Result<Self, DataTooLarge> {
+        Self::from_source(data, shards)
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of segments actually realized (≤ the requested shard
+    /// count when `n` has fewer alignment chunks).
+    #[inline]
+    pub fn shards(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Global row range `[start, end)` held by segment `s`.
+    pub fn shard_range(&self, s: usize) -> (usize, usize) {
+        let start = s * self.seg_rows;
+        (start, (start + self.seg_rows).min(self.n))
+    }
+
+    /// Segment `s` as a plain columnar block.
+    #[inline]
+    pub fn segment(&self, s: usize) -> &Columnar {
+        &self.segments[s]
+    }
+
+    /// (segment, local row) of global row `i`.
+    #[inline]
+    fn locate(&self, i: usize) -> (usize, usize) {
+        debug_assert!(i < self.n);
+        (i / self.seg_rows, i % self.seg_rows)
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> f64 {
+        if self.segments.len() == 1 {
+            return self.segments[0].label(i);
+        }
+        let (s, r) = self.locate(i);
+        self.segments[s].label(r)
+    }
+
+    /// Feature value `(i, j)`.
+    #[inline]
+    pub fn value(&self, i: usize, j: usize) -> f64 {
+        if self.segments.len() == 1 {
+            return self.segments[0].value(i, j);
+        }
+        let (s, r) = self.locate(i);
+        self.segments[s].value(r, j)
+    }
+
+    /// `d == 1` helper for the regression kernels: feature 0 and label
+    /// of row `i` in one lookup.
+    #[inline]
+    pub fn xy1(&self, i: usize) -> (f64, f64) {
+        if self.segments.len() == 1 {
+            let seg = &self.segments[0];
+            return (seg.value(i, 0), seg.label(i));
+        }
+        let (s, r) = self.locate(i);
+        let seg = &self.segments[s];
+        (seg.value(r, 0), seg.label(r))
+    }
+
+    /// Single-row dot product `x_i . t` (canonical accumulation order).
+    #[inline]
+    pub fn row_dot(&self, i: usize, t: &[f64]) -> f64 {
+        if self.segments.len() == 1 {
+            return self.segments[0].row_dot(i, t);
+        }
+        let (s, r) = self.locate(i);
+        self.segments[s].row_dot(r, t)
+    }
+
+    /// Single-row dual dot product; each side bit-identical to
+    /// `row_dot`.
+    #[inline]
+    pub fn row_dot2(&self, i: usize, a: &[f64], b: &[f64]) -> (f64, f64) {
+        if self.segments.len() == 1 {
+            return self.segments[0].row_dot2(i, a, b);
+        }
+        let (s, r) = self.locate(i);
+        self.segments[s].row_dot2(r, a, b)
+    }
+
+    /// Dual dot products for `LANES` consecutive rows starting at
+    /// `base` (the full-scan fast path).
+    #[inline]
+    pub fn block_dot2_seq(
+        &self,
+        base: usize,
+        a: &[f64],
+        b: &[f64],
+        z0: &mut [f64; LANES],
+        z1: &mut [f64; LANES],
+    ) {
+        if self.segments.len() == 1 {
+            return self.segments[0].block_dot2_seq(base, a, b, z0, z1);
+        }
+        let (s, r) = self.locate(base);
+        let seg = &self.segments[s];
+        if r + LANES <= seg.padded_n() {
+            return seg.block_dot2_seq(r, a, b, z0, z1);
+        }
+        // Unaligned block straddling a segment boundary (never produced
+        // by the chunk-aligned scan drivers): routed per-row dots,
+        // bit-identical by the columnar accumulation contract; rows in
+        // the lane padding contribute exact zeros as in the unsharded
+        // store.
+        *z0 = [0.0; LANES];
+        *z1 = [0.0; LANES];
+        for k in 0..LANES {
+            let i = base + k;
+            if i < self.n {
+                let (w0, w1) = self.row_dot2(i, a, b);
+                z0[k] = w0;
+                z1[k] = w1;
+            }
+        }
+    }
+
+    /// Dual dot products for the first `LANES` gathered rows of `idx`
+    /// (the minibatch path). Global gather indices stay `u32` — the
+    /// minibatch scheduler validates its population fits.
+    #[inline]
+    pub fn block_dot2_gather(
+        &self,
+        idx: &[u32],
+        a: &[f64],
+        b: &[f64],
+        z0: &mut [f64; LANES],
+        z1: &mut [f64; LANES],
+    ) {
+        if self.segments.len() == 1 {
+            return self.segments[0].block_dot2_gather(idx, a, b, z0, z1);
+        }
+        debug_assert!(idx.len() >= LANES);
+        if let Some((s, local)) = self.same_segment(idx) {
+            return self.segments[s].block_dot2_gather(&local, a, b, z0, z1);
+        }
+        *z0 = [0.0; LANES];
+        *z1 = [0.0; LANES];
+        for k in 0..LANES {
+            let (w0, w1) = self.row_dot2(idx[k] as usize, a, b);
+            z0[k] = w0;
+            z1[k] = w1;
+        }
+    }
+
+    /// Single-parameter variant of `block_dot2_seq` (cached path:
+    /// proposal side only).
+    #[inline]
+    pub fn block_dot_seq(&self, base: usize, t: &[f64], z: &mut [f64; LANES]) {
+        if self.segments.len() == 1 {
+            return self.segments[0].block_dot_seq(base, t, z);
+        }
+        let (s, r) = self.locate(base);
+        let seg = &self.segments[s];
+        if r + LANES <= seg.padded_n() {
+            return seg.block_dot_seq(r, t, z);
+        }
+        *z = [0.0; LANES];
+        for k in 0..LANES {
+            let i = base + k;
+            if i < self.n {
+                z[k] = self.row_dot(i, t);
+            }
+        }
+    }
+
+    /// Single-parameter variant of `block_dot2_gather`.
+    #[inline]
+    pub fn block_dot_gather(&self, idx: &[u32], t: &[f64], z: &mut [f64; LANES]) {
+        if self.segments.len() == 1 {
+            return self.segments[0].block_dot_gather(idx, t, z);
+        }
+        debug_assert!(idx.len() >= LANES);
+        if let Some((s, local)) = self.same_segment(idx) {
+            return self.segments[s].block_dot_gather(&local, t, z);
+        }
+        *z = [0.0; LANES];
+        for k in 0..LANES {
+            z[k] = self.row_dot(idx[k] as usize, t);
+        }
+    }
+
+    /// If the first `LANES` indices all land in one segment, translate
+    /// them to that segment's local index space.
+    #[inline]
+    fn same_segment(&self, idx: &[u32]) -> Option<(usize, [u32; LANES])> {
+        let s = idx[0] as usize / self.seg_rows;
+        let base = s * self.seg_rows;
+        let mut local = [0u32; LANES];
+        for k in 0..LANES {
+            let i = idx[k] as usize;
+            if i / self.seg_rows != s {
+                return None;
+            }
+            local[k] = (i - base) as u32;
+        }
+        Some((s, local))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Pcg64;
+
+    fn random_dataset(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg64::seeded(seed);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 }).collect();
+        Dataset::new(x, y, n, d)
+    }
+
+    #[test]
+    fn layout_is_aligned_covering_and_ordered() {
+        for (n, shards) in [(1usize, 1usize), (512, 1), (513, 2), (4096, 8), (5 * 512 + 123, 4)] {
+            let rows = segment_rows(n, shards);
+            assert_eq!(rows % SEGMENT_ALIGN, 0);
+            let mut covered = 0;
+            for s in 0..shards {
+                let (a, b) = shard_rows(n, s, shards);
+                assert_eq!(a, covered.min(n));
+                assert!(a == b || a % SEGMENT_ALIGN == 0);
+                covered = b;
+            }
+            assert_eq!(covered, n, "n={n} shards={shards}");
+        }
+    }
+
+    #[test]
+    fn even_rows_partition_without_empties() {
+        for (n, shards) in [(10usize, 3usize), (1000, 8), (7, 7)] {
+            let mut covered = 0;
+            for s in 0..shards {
+                let (a, b) = even_rows(n, s, shards);
+                assert_eq!(a, covered);
+                assert!(b > a, "empty shard {s} for n={n} k={shards}");
+                covered = b;
+            }
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
+    fn check_u32_indexable_is_typed_and_cheap() {
+        assert!(check_u32_indexable("x", u32::MAX as usize).is_ok());
+        let err = check_u32_indexable("scheduler", u32::MAX as usize + 1).unwrap_err();
+        assert_eq!(err.what, "scheduler");
+        assert_eq!(err.n, u32::MAX as usize + 1);
+        let msg = err.to_string();
+        assert!(msg.contains("u32 index space"), "msg: {msg}");
+    }
+
+    #[test]
+    fn sharded_accessors_match_unsharded_bits() {
+        let data = random_dataset(3 * SEGMENT_ALIGN + 77, 5, 9);
+        let solo = Columnar::from_dataset(&data).unwrap();
+        let mut rng = Pcg64::seeded(10);
+        let a: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        for shards in [1usize, 2, 3, 8] {
+            let sc = ShardedColumnar::from_dataset(&data, shards).unwrap();
+            assert_eq!(sc.n(), data.n());
+            assert!(sc.shards() <= shards.max(1));
+            for i in [0usize, 511, 512, 513, 1024, sc.n() - 1] {
+                assert_eq!(sc.label(i).to_bits(), solo.label(i).to_bits());
+                assert_eq!(sc.value(i, 3).to_bits(), solo.value(i, 3).to_bits());
+                assert_eq!(sc.row_dot(i, &a).to_bits(), solo.row_dot(i, &a).to_bits());
+                let (s0, s1) = sc.row_dot2(i, &a, &b);
+                let (w0, w1) = solo.row_dot2(i, &a, &b);
+                assert_eq!(s0.to_bits(), w0.to_bits());
+                assert_eq!(s1.to_bits(), w1.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn seq_blocks_match_including_boundary_straddlers() {
+        let data = random_dataset(2 * SEGMENT_ALIGN + 40, 4, 11);
+        let solo = Columnar::from_dataset(&data).unwrap();
+        let sc = ShardedColumnar::from_dataset(&data, 2).unwrap();
+        assert_eq!(sc.shards(), 2);
+        let mut rng = Pcg64::seeded(12);
+        let a: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        // aligned bases (scan path), the boundary straddler 509, and the
+        // very last full block
+        for base in [0usize, 504, 509, 512, 1016, 1024, 2 * SEGMENT_ALIGN + 32] {
+            let (mut z0, mut z1) = ([0.0; LANES], [0.0; LANES]);
+            let (mut w0, mut w1) = ([0.0; LANES], [0.0; LANES]);
+            sc.block_dot2_seq(base, &a, &b, &mut z0, &mut z1);
+            solo.block_dot2_seq(base, &a, &b, &mut w0, &mut w1);
+            assert_eq!(z0.map(f64::to_bits), w0.map(f64::to_bits), "base {base}");
+            assert_eq!(z1.map(f64::to_bits), w1.map(f64::to_bits), "base {base}");
+            let mut zs = [0.0; LANES];
+            let mut ws = [0.0; LANES];
+            sc.block_dot_seq(base, &b, &mut zs);
+            solo.block_dot_seq(base, &b, &mut ws);
+            assert_eq!(zs.map(f64::to_bits), ws.map(f64::to_bits), "base {base}");
+        }
+    }
+
+    #[test]
+    fn gathered_blocks_match_within_and_across_segments() {
+        let data = random_dataset(2 * SEGMENT_ALIGN + 16, 6, 13);
+        let solo = Columnar::from_dataset(&data).unwrap();
+        let sc = ShardedColumnar::from_dataset(&data, 4).unwrap();
+        let mut rng = Pcg64::seeded(14);
+        let a: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let within: Vec<u32> = vec![3, 100, 511, 8, 42, 7, 250, 0];
+        let across: Vec<u32> = vec![3, 600, 511, 1025, 42, 512, 250, 1039];
+        for idx in [&within, &across] {
+            let (mut z0, mut z1) = ([0.0; LANES], [0.0; LANES]);
+            let (mut w0, mut w1) = ([0.0; LANES], [0.0; LANES]);
+            sc.block_dot2_gather(idx, &a, &b, &mut z0, &mut z1);
+            solo.block_dot2_gather(idx, &a, &b, &mut w0, &mut w1);
+            assert_eq!(z0.map(f64::to_bits), w0.map(f64::to_bits));
+            assert_eq!(z1.map(f64::to_bits), w1.map(f64::to_bits));
+            let mut zs = [0.0; LANES];
+            let mut ws = [0.0; LANES];
+            sc.block_dot_gather(idx, &b, &mut zs);
+            solo.block_dot_gather(idx, &b, &mut ws);
+            assert_eq!(zs.map(f64::to_bits), ws.map(f64::to_bits));
+        }
+    }
+
+    #[test]
+    fn shard_ranges_tile_the_store() {
+        let data = random_dataset(5 * SEGMENT_ALIGN + 123, 2, 15);
+        let sc = ShardedColumnar::from_dataset(&data, 4).unwrap();
+        let mut covered = 0;
+        for s in 0..sc.shards() {
+            let (a, b) = sc.shard_range(s);
+            assert_eq!(a, covered);
+            assert_eq!(sc.segment(s).n(), b - a);
+            covered = b;
+        }
+        assert_eq!(covered, sc.n());
+    }
+}

@@ -93,7 +93,7 @@ pub fn ablation_replacement(scale: Scale) -> (f64, f64) {
     // without replacement: the real sequential test
     let fixed = FixedLs(&pop.ls);
     let cfg = SeqTestConfig::new(0.05, m);
-    let mut sched = MinibatchScheduler::new(n);
+    let mut sched = MinibatchScheduler::new(n).expect("population exceeds the u32 index space");
     let mut rng = Pcg64::seeded(11);
     let mut used_wo = 0u64;
     for _ in 0..trials {

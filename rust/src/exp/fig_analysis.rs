@@ -40,7 +40,7 @@ pub fn run_fig1_and_fig10(scale: Scale) {
             let truth = pop.mu > mu0 || mu_std == 0.0;
             let cfg = SeqTestConfig::new(eps, m);
             let fixed = FixedLs(&pop.ls);
-            let mut sched = MinibatchScheduler::new(n);
+            let mut sched = MinibatchScheduler::new(n).expect("population exceeds the u32 index space");
             let mut rng = Pcg64::new(1000 + (eps * 1e4) as u64, mu_std.to_bits());
             let mut wrong = 0usize;
             let mut used = 0u64;
@@ -88,7 +88,7 @@ pub fn run_fig7(scale: Scale) {
     let mut rng = Pcg64::seeded(11);
     for &batch in &[50usize, 500, 5_000] {
         let batch = batch.min(n / 2);
-        let mut sched = MinibatchScheduler::new(n);
+        let mut sched = MinibatchScheduler::new(n).expect("population exceeds the u32 index space");
         let mut hist = Histogram::new(-5.0, 5.0, 50);
         for _ in 0..resamples {
             sched.reset();

@@ -48,7 +48,7 @@ pub fn run_fig11_and_fig12(scale: Scale) -> Vec<DeltaPoint> {
 
         // measured: run the actual sequential test with fresh u each time
         let fixed = FixedLs(&pop.ls);
-        let mut sched = MinibatchScheduler::new(n);
+        let mut sched = MinibatchScheduler::new(n).expect("population exceeds the u32 index space");
         let mut accepts = 0usize;
         for _ in 0..trials {
             let u = rng.uniform_pos();

@@ -191,7 +191,7 @@ pub fn run_fig15(scale: Scale) -> Vec<(f64, f64)> {
         subsets.iter().map(|s| SubsetMarginal::new(s.clone())).collect();
     for obs in &gt_res.observers {
         for (t, m) in truth_marginals.iter_mut().zip(&obs.marginals) {
-            t.merge(m);
+            t.merge(m).expect("ground-truth chains record the same subsets");
         }
     }
     let truth: Vec<Vec<f64>> = truth_marginals.iter().map(|m| m.probs()).collect();

@@ -62,7 +62,7 @@ fn run_sgld_engine(
 }
 
 pub fn run_fig5(scale: Scale) -> Fig5Summary {
-    let model = LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0);
+    let model = LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0).expect("population exceeds the u32 index space");
 
     // locate the true posterior on a wide grid first
     let (wide_grid, wide_dens) = model.posterior_density(-0.2, 0.8, 2_000);

@@ -13,7 +13,7 @@ use crate::stats::Pcg64;
 
 /// The paper's §6.1 target at a configurable N (default 12214, D=50).
 pub fn mnist_like_model(n: usize, seed: u64) -> LogisticModel {
-    LogisticModel::new(two_class_gaussian(n, 50, 1.2, seed), 10.0)
+    LogisticModel::new(two_class_gaussian(n, 50, 1.2, seed), 10.0).expect("population exceeds the u32 index space")
 }
 
 /// The l_i population for one (theta, theta') pair.

@@ -168,7 +168,7 @@ mod tests {
 
     #[test]
     fn smoke_risk_driver_orders_data_usage() {
-        let model = LogisticModel::new(two_class_gaussian(4_000, 5, 1.2, 0), 10.0);
+        let model = LogisticModel::new(two_class_gaussian(4_000, 5, 1.2, 0), 10.0).expect("population exceeds the u32 index space");
         let map = model.map_estimate(40);
         let kernel = GaussianRandomWalk::new(0.02, 10.0);
         let truth: Vec<f64> = (0..model.n().min(50))

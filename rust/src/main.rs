@@ -17,6 +17,7 @@ use std::process::ExitCode;
 use austerity::coordinator::design::{worst_case_design, DesignGrid};
 use austerity::coordinator::{Budget, MhMode, Session};
 use austerity::exp::{run_figure, Scale, ALL_FIGURES};
+use austerity::models::traits::ShardableModel;
 use austerity::models::LlDiffModel;
 use austerity::runtime::{PjrtLogistic, PjrtRuntime};
 use austerity::samplers::GaussianRandomWalk;
@@ -37,7 +38,7 @@ fn main() -> ExitCode {
                  design --n N --tol T          worst-case sequential test design\n\
                  sample [--rule exact|austerity|barker|confidence]\n\
                         [--eps E] [--sigma S] [--delta D] [--steps K] [--n N]\n\
-                        [--chains C] [--seed S] [--json] [--pjrt]\n\
+                        [--chains C] [--seed S] [--shards S] [--json] [--pjrt]\n\
                         [--checkpoint-dir D --checkpoint-every K] [--resume D]\n\
                  \n\
                  figures: {}",
@@ -183,6 +184,100 @@ fn run_sample<M>(
     }
 }
 
+/// Run an embarrassingly-parallel (sharded) launch and print the
+/// per-shard accounting plus the consensus combination.
+#[allow(clippy::too_many_arguments)]
+fn run_sample_sharded<M>(
+    model: &M,
+    kernel: &GaussianRandomWalk,
+    mode: &MhMode,
+    init: Vec<f64>,
+    steps: usize,
+    chains: usize,
+    seed: u64,
+    shards: usize,
+    json: bool,
+    ckpt: &CkptCli,
+) -> ExitCode
+where
+    M: ShardableModel<Param = Vec<f64>> + Sync,
+{
+    let mut session = Session::new(model)
+        .kernel(kernel)
+        .rule(mode.clone())
+        .chains(chains)
+        .seed(seed)
+        .budget(Budget::Steps(steps))
+        .shards(shards)
+        .init(init);
+    if let Some(every) = ckpt.every {
+        session = session.checkpoint_every(every);
+    }
+    if let Some(dir) = &ckpt.dir {
+        session = session.checkpoint_dir(dir.clone());
+    }
+    if let Some(dir) = &ckpt.resume {
+        session = session.resume_from(dir.clone());
+    }
+    let report = match session.run_sharded() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("sample: cannot shard the launch: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if json {
+        let mut s = String::from("{\"shards\":[");
+        for (i, r) in report.shards.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&r.to_json());
+        }
+        s.push_str("],\"consensus\":");
+        match report.combined() {
+            Ok(g) => s.push_str(&format!(
+                "{{\"mean\":{},\"var\":{},\"draws\":{}}}",
+                g.mean, g.var, g.n
+            )),
+            Err(_) => s.push_str("null"),
+        }
+        s.push('}');
+        println!("{s}");
+    } else {
+        for r in &report.shards {
+            let info = r.shard.expect("sharded reports carry their stamp");
+            println!(
+                "shard {}/{} rows=[{},{}) steps={} accept={:.2} \
+                 mean-data-fraction={:.4} rhat={:.3}",
+                info.index,
+                info.count,
+                info.start,
+                info.end,
+                r.merged.steps,
+                r.acceptance_rate(),
+                r.mean_data_fraction(),
+                r.rhat(),
+            );
+        }
+        match report.combined() {
+            Ok(g) => println!(
+                "consensus: mean={:.6} sd={:.6} over {} draws in {} shards",
+                g.mean,
+                g.var.sqrt(),
+                g.n,
+                report.shards.len()
+            ),
+            Err(e) => eprintln!("consensus combination unavailable: {e}"),
+        }
+    }
+    if report.failed_chains() > 0 {
+        eprintln!("{} chain(s) failed across shards", report.failed_chains());
+        return ExitCode::FAILURE;
+    }
+    ExitCode::SUCCESS
+}
+
 fn sample(args: &[String]) -> ExitCode {
     let eps: f64 = flag_value(args, "--eps").and_then(|s| s.parse().ok()).unwrap_or(0.05);
     let sigma: f64 =
@@ -196,8 +291,14 @@ fn sample(args: &[String]) -> ExitCode {
     let chains: usize =
         flag_value(args, "--chains").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
     let seed: u64 = flag_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let shards: usize =
+        flag_value(args, "--shards").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
     let rule = flag_value(args, "--rule").unwrap_or_else(|| "austerity".into());
     let use_pjrt = args.iter().any(|a| a == "--pjrt");
+    if use_pjrt && shards > 1 {
+        eprintln!("--shards is native-only (the PJRT backend binds one AOT artifact to the whole dataset)");
+        return ExitCode::from(2);
+    }
     let json = args.iter().any(|a| a == "--json");
     let ckpt = CkptCli {
         every: flag_value(args, "--checkpoint-every").and_then(|s| s.parse().ok()),
@@ -260,6 +361,13 @@ fn sample(args: &[String]) -> ExitCode {
             println!("backend: pjrt (AOT Pallas kernel), N={n}, rule={rule}");
         }
         run_sample(&pjrt, &kernel, &mode, init, steps, chains, seed, json, &ckpt);
+    } else if shards > 1 {
+        if !json {
+            println!("backend: native, N={n}, rule={rule}, shards={shards}");
+        }
+        return run_sample_sharded(
+            &model, &kernel, &mode, init, steps, chains, seed, shards, json, &ckpt,
+        );
     } else {
         if !json {
             println!("backend: native, N={n}, rule={rule}");

@@ -13,16 +13,19 @@
 //! construction; the pre-SoA scalar loop is retained as
 //! `lldiff_moments_ref`.
 
-use crate::data::columnar::{reduce_lanes, Columnar, LANES};
-use crate::data::Dataset;
+use crate::data::columnar::{reduce_lanes, LANES};
+use crate::data::sharded::even_rows;
+use crate::data::{DataTooLarge, Dataset, ShardedColumnar};
 use crate::models::traits::{
-    cached_scan_par, CacheLanes, CachedLlDiff, LlDiffModel, ScanScratch,
+    cached_scan_par, CacheLanes, CachedLlDiff, LlDiffModel, ScanScratch, ShardableModel,
 };
 
 pub struct LinRegModel {
     data: Dataset,
-    /// Columnar mirror (single feature column + targets).
-    cols: Columnar,
+    /// Columnar mirror (single feature column + targets), sharded into
+    /// aligned segments; the kernels read it through the routed `xy1`
+    /// accessor so they are agnostic to the shard count.
+    cols: ShardedColumnar,
     /// Gaussian noise precision lambda (paper: 3).
     pub lam: f64,
     /// Laplace prior rate lambda_0 (paper: 4950).
@@ -30,10 +33,21 @@ pub struct LinRegModel {
 }
 
 impl LinRegModel {
-    pub fn new(data: Dataset, lam: f64, lam0: f64) -> Self {
+    pub fn new(data: Dataset, lam: f64, lam0: f64) -> Result<Self, DataTooLarge> {
+        Self::with_shards(data, lam, lam0, 1)
+    }
+
+    /// Build the model over a store sharded `shards` ways (bit-identical
+    /// results at any shard count).
+    pub fn with_shards(
+        data: Dataset,
+        lam: f64,
+        lam0: f64,
+        shards: usize,
+    ) -> Result<Self, DataTooLarge> {
         assert_eq!(data.d(), 1, "toy model is 1-d");
-        let cols = Columnar::from_dataset(&data);
-        LinRegModel { data, cols, lam, lam0 }
+        let cols = ShardedColumnar::from_dataset(&data, shards)?;
+        Ok(LinRegModel { data, cols, lam, lam0 })
     }
 
     pub fn data(&self) -> &Dataset {
@@ -166,8 +180,6 @@ impl LinRegModel {
         version: u64,
         step: u64,
     ) -> (f64, f64) {
-        let xs = self.cols.col(0);
-        let ys = self.cols.labels();
         let mut sa = [0.0f64; LANES];
         let mut s2a = [0.0f64; LANES];
         let mut base = start;
@@ -175,9 +187,10 @@ impl LinRegModel {
             for k in 0..LANES {
                 let i = base + k;
                 let o = i - start;
+                let (x, y) = self.cols.xy1(i);
                 let l = self.cached_row(
-                    xs[i],
-                    ys[i],
+                    x,
+                    y,
                     &mut lanes.val_cur[o],
                     &mut lanes.ver_cur[o],
                     &mut lanes.val_prop[o],
@@ -196,9 +209,10 @@ impl LinRegModel {
         let mut s2 = reduce_lanes(&s2a);
         for i in base..end {
             let o = i - start;
+            let (x, y) = self.cols.xy1(i);
             let l = self.cached_row(
-                xs[i],
-                ys[i],
+                x,
+                y,
                 &mut lanes.val_cur[o],
                 &mut lanes.ver_cur[o],
                 &mut lanes.val_prop[o],
@@ -230,15 +244,12 @@ impl LlDiffModel for LinRegModel {
     }
 
     fn lldiff_moments(&self, idx: &[u32], cur: &f64, prop: &f64) -> (f64, f64) {
-        let xs = self.cols.col(0);
-        let ys = self.cols.labels();
         let mut sa = [0.0f64; LANES];
         let mut s2a = [0.0f64; LANES];
         let mut blocks = idx.chunks_exact(LANES);
         for block in &mut blocks {
             for k in 0..LANES {
-                let i = block[k] as usize;
-                let (x, y) = (xs[i], ys[i]);
+                let (x, y) = self.cols.xy1(block[k] as usize);
                 let (rc, rp) = (y - cur * x, y - prop * x);
                 let l = self.l_from_squares(rp * rp, rc * rc);
                 sa[k] += l;
@@ -248,8 +259,7 @@ impl LlDiffModel for LinRegModel {
         let mut s = reduce_lanes(&sa);
         let mut s2 = reduce_lanes(&s2a);
         for &iu in blocks.remainder() {
-            let i = iu as usize;
-            let (x, y) = (xs[i], ys[i]);
+            let (x, y) = self.cols.xy1(iu as usize);
             let (rc, rp) = (y - cur * x, y - prop * x);
             let l = self.l_from_squares(rp * rp, rc * rc);
             s += l;
@@ -261,15 +271,12 @@ impl LlDiffModel for LinRegModel {
     fn lldiff_range_moments(&self, start: usize, end: usize, cur: &f64, prop: &f64) -> (f64, f64) {
         // contiguous-load twin of the gathered kernel; bit-identical on
         // the same indices
-        let xs = self.cols.col(0);
-        let ys = self.cols.labels();
         let mut sa = [0.0f64; LANES];
         let mut s2a = [0.0f64; LANES];
         let mut base = start;
         while base + LANES <= end {
             for k in 0..LANES {
-                let i = base + k;
-                let (x, y) = (xs[i], ys[i]);
+                let (x, y) = self.cols.xy1(base + k);
                 let (rc, rp) = (y - cur * x, y - prop * x);
                 let l = self.l_from_squares(rp * rp, rc * rc);
                 sa[k] += l;
@@ -280,7 +287,7 @@ impl LlDiffModel for LinRegModel {
         let mut s = reduce_lanes(&sa);
         let mut s2 = reduce_lanes(&s2a);
         for i in base..end {
-            let (x, y) = (xs[i], ys[i]);
+            let (x, y) = self.cols.xy1(i);
             let (rc, rp) = (y - cur * x, y - prop * x);
             let l = self.l_from_squares(rp * rp, rc * rc);
             s += l;
@@ -330,8 +337,6 @@ impl CachedLlDiff for LinRegModel {
     }
 
     fn cached_moments(&self, cache: &mut LinRegCache, idx: &[u32], prop: &f64) -> (f64, f64) {
-        let xs = self.cols.col(0);
-        let ys = self.cols.labels();
         let prop = *prop;
         let LinRegCache { theta_cur, sq_cur, cur_ver, version, sq_prop, stamp, step } = cache;
         let (theta_cur, version, step) = (*theta_cur, *version, *step);
@@ -341,9 +346,10 @@ impl CachedLlDiff for LinRegModel {
         for block in &mut blocks {
             for k in 0..LANES {
                 let i = block[k] as usize;
+                let (x, y) = self.cols.xy1(i);
                 let l = self.cached_row(
-                    xs[i],
-                    ys[i],
+                    x,
+                    y,
                     &mut sq_cur[i],
                     &mut cur_ver[i],
                     &mut sq_prop[i],
@@ -361,9 +367,10 @@ impl CachedLlDiff for LinRegModel {
         let mut s2 = reduce_lanes(&s2a);
         for &iu in blocks.remainder() {
             let i = iu as usize;
+            let (x, y) = self.cols.xy1(i);
             let l = self.cached_row(
-                xs[i],
-                ys[i],
+                x,
+                y,
                 &mut sq_cur[i],
                 &mut cur_ver[i],
                 &mut sq_prop[i],
@@ -410,6 +417,15 @@ impl CachedLlDiff for LinRegModel {
     }
 }
 
+/// Embarrassingly-parallel splitting: shard `s` of `k` keeps the even
+/// (unaligned) row range, so every shard is non-empty whenever `k <= n`.
+impl ShardableModel for LinRegModel {
+    fn shard_model(&self, shard: usize, shards: usize) -> Result<Self, DataTooLarge> {
+        let (start, end) = even_rows(self.data.n(), shard, shards);
+        LinRegModel::new(self.data.slice_rows(start, end), self.lam, self.lam0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -419,7 +435,7 @@ mod tests {
     fn model() -> LinRegModel {
         // paper scale: N = 10000 (the prior/likelihood balance that
         // creates the valley depends on it)
-        LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0)
+        LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0).unwrap()
     }
 
     #[test]
@@ -521,6 +537,50 @@ mod tests {
             assert_eq!(got.0.to_bits(), want.0.to_bits(), "threads {threads}");
             assert_eq!(got.1.to_bits(), want.1.to_bits(), "threads {threads}");
         }
+    }
+
+    #[test]
+    fn sharded_kernels_bit_identical_to_unsharded() {
+        // non-multiple-of-chunk population so segment tails are exercised
+        let n = 2 * crate::models::traits::FULL_SCAN_CHUNK + 91;
+        let data = linreg_toy(n, 3);
+        let base = LinRegModel::new(data.clone(), 3.0, 4950.0).unwrap();
+        let mut rng = crate::stats::Pcg64::seeded(11);
+        let idx: Vec<u32> = (0..300).map(|_| rng.below(n) as u32).collect();
+        let want_g = base.lldiff_moments(&idx, &0.31, &0.44);
+        let want_full = base.full_moments(&0.31, &0.44);
+        for shards in [2usize, 3, 8] {
+            let m = LinRegModel::with_shards(data.clone(), 3.0, 4950.0, shards).unwrap();
+            let g = m.lldiff_moments(&idx, &0.31, &0.44);
+            assert_eq!(g.0.to_bits(), want_g.0.to_bits(), "shards {shards}");
+            assert_eq!(g.1.to_bits(), want_g.1.to_bits(), "shards {shards}");
+            let f = m.full_moments(&0.31, &0.44);
+            assert_eq!(f.0.to_bits(), want_full.0.to_bits(), "shards {shards}");
+            assert_eq!(f.1.to_bits(), want_full.1.to_bits(), "shards {shards}");
+            let mut cache = m.init_cache(&0.31);
+            m.begin_step(&mut cache);
+            let mut scan = ScanScratch::new(4, m.n());
+            let c = m.cached_full_scan(&mut cache, &0.44, &mut scan);
+            assert_eq!(c.0.to_bits(), want_full.0.to_bits(), "cached, shards {shards}");
+            assert_eq!(c.1.to_bits(), want_full.1.to_bits(), "cached, shards {shards}");
+        }
+    }
+
+    #[test]
+    fn shard_models_partition_the_population() {
+        let m = model();
+        let shards = 3;
+        let mut total = 0;
+        for s in 0..shards {
+            let sub = m.shard_model(s, shards).unwrap();
+            total += sub.n();
+        }
+        assert_eq!(total, m.n());
+        // boundary row of shard 1 matches the even split of the source
+        let (start, _) = even_rows(m.n(), 1, shards);
+        let sub = m.shard_model(1, shards).unwrap();
+        assert_eq!(sub.data().row(0)[0].to_bits(), m.data().row(start)[0].to_bits());
+        assert_eq!(sub.data().label(0).to_bits(), m.data().label(start).to_bits());
     }
 
     #[test]

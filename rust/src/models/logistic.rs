@@ -17,10 +17,11 @@
 //! pre-SoA scalar kernels (documented there; the scalar reference is
 //! retained as `lldiff_moments_ref` for benches and tolerance tests).
 
-use crate::data::columnar::{reduce_lanes, Columnar, LANES};
-use crate::data::Dataset;
+use crate::data::columnar::{reduce_lanes, LANES};
+use crate::data::sharded::even_rows;
+use crate::data::{DataTooLarge, Dataset, ShardedColumnar};
 use crate::models::traits::{
-    cached_scan_par, CacheLanes, CachedLlDiff, LlDiffModel, ScanScratch,
+    cached_scan_par, CacheLanes, CachedLlDiff, LlDiffModel, ScanScratch, ShardableModel,
 };
 
 /// Stable log sigmoid: log sig(z) = -softplus(-z).
@@ -33,16 +34,29 @@ pub fn log_sigmoid(z: f64) -> f64 {
 pub struct LogisticModel {
     data: Dataset,
     /// Feature-major, lane-padded mirror of `data` — the moments hot
-    /// path (gradients/predictions stay row-major).
-    cols: Columnar,
+    /// path (gradients/predictions stay row-major). Sharded into
+    /// `SEGMENT_ALIGN`-aligned segments; a one-segment store behaves
+    /// exactly like the plain `Columnar` it wraps.
+    cols: ShardedColumnar,
     /// Gaussian prior precision (paper uses 10).
     pub prior_precision: f64,
 }
 
 impl LogisticModel {
-    pub fn new(data: Dataset, prior_precision: f64) -> Self {
-        let cols = Columnar::from_dataset(&data);
-        LogisticModel { data, cols, prior_precision }
+    pub fn new(data: Dataset, prior_precision: f64) -> Result<Self, DataTooLarge> {
+        Self::with_shards(data, prior_precision, 1)
+    }
+
+    /// Build the model over a store sharded `shards` ways (scan results
+    /// are bit-identical at any shard count; sharding only bounds the
+    /// per-segment allocation).
+    pub fn with_shards(
+        data: Dataset,
+        prior_precision: f64,
+        shards: usize,
+    ) -> Result<Self, DataTooLarge> {
+        let cols = ShardedColumnar::from_dataset(&data, shards)?;
+        Ok(LogisticModel { data, cols, prior_precision })
     }
 
     pub fn data(&self) -> &Dataset {
@@ -50,7 +64,7 @@ impl LogisticModel {
     }
 
     /// The columnar view the moments kernels run on.
-    pub fn columns(&self) -> &Columnar {
+    pub fn columns(&self) -> &ShardedColumnar {
         &self.cols
     }
 
@@ -424,6 +438,13 @@ impl LlDiffModel for LogisticModel {
     crate::models::traits::cached_session_dispatch!();
 }
 
+impl ShardableModel for LogisticModel {
+    fn shard_model(&self, shard: usize, shards: usize) -> Result<Self, DataTooLarge> {
+        let (start, end) = even_rows(self.data.n(), shard, shards);
+        LogisticModel::new(self.data.slice_rows(start, end), self.prior_precision)
+    }
+}
+
 impl CachedLlDiff for LogisticModel {
     type Cache = LogisticCache;
 
@@ -555,7 +576,7 @@ mod tests {
     use crate::testkit;
 
     fn model() -> LogisticModel {
-        LogisticModel::new(two_class_gaussian(500, 8, 1.2, 0), 10.0)
+        LogisticModel::new(two_class_gaussian(500, 8, 1.2, 0), 10.0).unwrap()
     }
 
     #[test]
@@ -715,6 +736,48 @@ mod tests {
     }
 
     #[test]
+    fn sharded_kernels_bit_identical_to_unsharded() {
+        // the store shard count must never change a result bit, for the
+        // gathered, range, and cached kernels alike
+        let n = 2 * crate::models::traits::FULL_SCAN_CHUNK + 77;
+        let data = two_class_gaussian(n, 8, 1.2, 3);
+        let solo = LogisticModel::new(data.clone(), 10.0).unwrap();
+        let mut rng = Pcg64::seeded(8);
+        let cur: Vec<f64> = (0..8).map(|_| 0.2 * rng.normal()).collect();
+        let prop: Vec<f64> = (0..8).map(|_| 0.2 * rng.normal()).collect();
+        let idx: Vec<u32> = (0..300).map(|_| rng.below(n) as u32).collect();
+        let want_g = solo.lldiff_moments(&idx, &cur, &prop);
+        let want_f = solo.full_moments(&cur, &prop);
+        for shards in [2usize, 3, 8] {
+            let m = LogisticModel::with_shards(data.clone(), 10.0, shards).unwrap();
+            let g = m.lldiff_moments(&idx, &cur, &prop);
+            assert_eq!(g.0.to_bits(), want_g.0.to_bits(), "shards {shards}");
+            assert_eq!(g.1.to_bits(), want_g.1.to_bits(), "shards {shards}");
+            let f = m.full_moments(&cur, &prop);
+            assert_eq!(f.0.to_bits(), want_f.0.to_bits(), "shards {shards}");
+            assert_eq!(f.1.to_bits(), want_f.1.to_bits(), "shards {shards}");
+            let mut cache = m.init_cache(&cur);
+            m.begin_step(&mut cache);
+            let mut scan = ScanScratch::new(1, m.n());
+            let c = m.cached_full_scan(&mut cache, &prop, &mut scan);
+            assert_eq!(c.0.to_bits(), want_f.0.to_bits(), "cached, shards {shards}");
+            assert_eq!(c.1.to_bits(), want_f.1.to_bits(), "cached, shards {shards}");
+        }
+    }
+
+    #[test]
+    fn shard_models_partition_the_population() {
+        let m = model();
+        let shards: Vec<LogisticModel> =
+            (0..3).map(|s| m.shard_model(s, 3).unwrap()).collect();
+        assert_eq!(shards.iter().map(|s| s.n()).sum::<usize>(), m.n());
+        // row 0 of shard 1 is the row after the last row of shard 0
+        let boundary = shards[0].n();
+        assert_eq!(shards[1].data().row(0), m.data().row(boundary));
+        assert_eq!(shards[1].data().label(0), m.data().label(boundary));
+    }
+
+    #[test]
     fn map_improves_loglik_and_classifies() {
         let m = model();
         let theta = m.map_estimate(60);
@@ -752,8 +815,8 @@ mod tests {
 
     #[test]
     fn prior_precision_shrinks_map() {
-        let loose = LogisticModel::new(two_class_gaussian(500, 8, 1.2, 0), 0.1);
-        let tight = LogisticModel::new(two_class_gaussian(500, 8, 1.2, 0), 1000.0);
+        let loose = LogisticModel::new(two_class_gaussian(500, 8, 1.2, 0), 0.1).unwrap();
+        let tight = LogisticModel::new(two_class_gaussian(500, 8, 1.2, 0), 1000.0).unwrap();
         let norm = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>().sqrt();
         assert!(norm(&tight.map_estimate(40)) < norm(&loose.map_estimate(40)));
     }

@@ -15,4 +15,7 @@ pub use logistic::{LogisticCache, LogisticModel};
 pub use mrf::MrfModel;
 pub use potts::PottsModel;
 pub use rjlogistic::{RjLogisticModel, RjState};
-pub use traits::{CachedLlDiff, LlDiffModel, Proposal, ProposalKernel, ScanScratch};
+pub use traits::{
+    CachedLlDiff, LlDiffModel, PriorTempered, Proposal, ProposalKernel, ScanScratch,
+    ShardableModel,
+};

@@ -24,8 +24,10 @@ use crate::coordinator::executor::{Executor, IntraPar};
 /// dispatches on the PJRT backend, keeps per-chunk state L1-resident,
 /// and is the work quantum of the deterministic parallel scan (worker
 /// spans are chunk-aligned; per-chunk moments are reduced in chunk-index
-/// order, so the thread count never changes a result bit).
-pub const FULL_SCAN_CHUNK: usize = 512;
+/// order, so the thread count never changes a result bit). Defined as
+/// the sharded store's segment alignment: segment boundaries sit on
+/// chunk boundaries, so no scan chunk ever straddles two segments.
+pub const FULL_SCAN_CHUNK: usize = crate::data::sharded::SEGMENT_ALIGN;
 
 /// Chunked full-population scan over a *gathered* moments closure:
 /// streams `0..n` through `buf` in `FULL_SCAN_CHUNK` pieces and sums the
@@ -526,6 +528,48 @@ where
     }
 }
 
+/// Models that can split themselves into row-range shards — the
+/// embarrassingly-parallel mode of `Session::shards(k)`: each shard is
+/// a standalone model over its contiguous row slice, sampled by its own
+/// independent chains, and the per-shard subset posteriors are merged
+/// afterwards (`samplers::gibbs::gaussian_product` for continuous
+/// params, `SubsetMarginal::merge` for discrete ones).
+pub trait ShardableModel: LlDiffModel + Sized {
+    /// Build the model over shard `shard` of `shards` (the even
+    /// row-range split `data::sharded::even_rows`). Errors when a
+    /// shard's index space would overflow `u32`.
+    fn shard_model(&self, shard: usize, shards: usize)
+        -> Result<Self, crate::data::DataTooLarge>;
+}
+
+/// Wraps a proposal kernel for subset-posterior sampling: a shard must
+/// target `p(x_shard | theta) p(theta)^{1/k}` (so the product of the k
+/// subset posteriors recovers the full posterior), and in this codebase
+/// the prior enters an MH decision *only* through the kernel's
+/// `log_correction` — both random-walk kernels emit the pure prior
+/// ratio `log rho(cur) - log rho(prop)` with a symmetric q. Scaling the
+/// correction by `1/k` therefore tempers the prior exactly; with `k = 1`
+/// the multiply by 1.0 leaves the bits unchanged.
+pub struct PriorTempered<'a, K> {
+    inner: &'a K,
+    inv_shards: f64,
+}
+
+impl<'a, K> PriorTempered<'a, K> {
+    pub fn new(inner: &'a K, shards: usize) -> Self {
+        assert!(shards >= 1);
+        PriorTempered { inner, inv_shards: 1.0 / shards as f64 }
+    }
+}
+
+impl<P, K: ProposalKernel<P>> ProposalKernel<P> for PriorTempered<'_, K> {
+    fn propose(&self, cur: &P, rng: &mut crate::stats::Pcg64) -> Proposal<P> {
+        let mut p = self.inner.propose(cur, rng);
+        p.log_correction *= self.inv_shards;
+        p
+    }
+}
+
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
@@ -654,6 +698,25 @@ mod tests {
                 assert_eq!(t, (i / FULL_SCAN_CHUNK) as u64 + 1, "index {i} threads {threads}");
             }
         }
+    }
+
+    #[test]
+    fn prior_tempered_scales_only_the_correction() {
+        let k = |cur: &f64, rng: &mut crate::stats::Pcg64| Proposal {
+            param: cur + rng.normal(),
+            log_correction: 0.6,
+        };
+        let mut rng_a = crate::stats::Pcg64::seeded(5);
+        let mut rng_b = rng_a.clone();
+        let mut rng_c = rng_a.clone();
+        let plain = k.propose(&2.0, &mut rng_a);
+        let solo = PriorTempered::new(&k, 1).propose(&2.0, &mut rng_b);
+        let quartered = PriorTempered::new(&k, 4).propose(&2.0, &mut rng_c);
+        // k = 1 is a bit-exact no-op; k = 4 tempers the prior ratio
+        assert_eq!(solo.param.to_bits(), plain.param.to_bits());
+        assert_eq!(solo.log_correction.to_bits(), plain.log_correction.to_bits());
+        assert_eq!(quartered.param.to_bits(), plain.param.to_bits());
+        assert_eq!(quartered.log_correction.to_bits(), (0.6f64 * 0.25).to_bits());
     }
 
     #[test]

@@ -54,7 +54,7 @@ pub struct PottsScratch {
 impl PottsScratch {
     pub fn new(model: &PottsModel) -> Self {
         PottsScratch {
-            sched: MinibatchScheduler::new(model.n_pairs()),
+            sched: MinibatchScheduler::new(model.n_pairs()).expect("population exceeds the u32 index space"),
             ranks: Vec::new(),
             gumbels: vec![0.0; model.k()],
         }

@@ -18,8 +18,8 @@ pub mod sgld;
 pub mod stiefel;
 
 pub use gibbs::{
-    gibbs_sweep, gibbs_update, GibbsMode, GibbsScratch, GibbsStats, GibbsSweepKernel,
-    SubsetMarginal,
+    gaussian_product, gibbs_sweep, gibbs_update, GaussianMoments, GibbsMode, GibbsScratch,
+    GibbsStats, GibbsSweepKernel, MergeError, SubsetMarginal,
 };
 pub use gibbs_potts::{
     potts_sweep, potts_update, PottsMode, PottsScratch, PottsStats, PottsSweepKernel,

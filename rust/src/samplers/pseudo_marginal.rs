@@ -171,7 +171,7 @@ where
     type Scratch = PmScratch;
 
     fn scratch(&self, _init: &PmState<M::Param>) -> PmScratch {
-        PmScratch { sched: MinibatchScheduler::new(self.model.n()) }
+        PmScratch { sched: MinibatchScheduler::new(self.model.n()).expect("population exceeds the u32 index space") }
     }
 
     fn step(
@@ -287,7 +287,7 @@ where
     M::Param: Clone,
     K: ProposalKernel<M::Param>,
 {
-    let mut sched = MinibatchScheduler::new(model.n());
+    let mut sched = MinibatchScheduler::new(model.n()).expect("population exceeds the u32 index space");
     let anchor = init.clone();
     let mut cur = init;
     // W(init) vs anchor = init: all l_i are exactly 0, the estimator is
@@ -348,7 +348,7 @@ mod tests {
         let l = -2e-4; // N mu = -0.2
         let model = Const(n, l);
         let est = PoissonEstimator { batch: 50, lambda: 2.0, center: n as f64 * l - 1.0 };
-        let mut sched = MinibatchScheduler::new(n);
+        let mut sched = MinibatchScheduler::new(n).expect("population exceeds the u32 index space");
         let mut rng = Pcg64::seeded(0);
         let trials = 60_000;
         let mut sum = 0.0;
@@ -364,12 +364,12 @@ mod tests {
     fn estimator_variance_explodes_with_population_noise() {
         // Realistic noisy population: the estimator variance (and clamp
         // rate) is large — the pathology the paper describes.
-        let model = LogisticModel::new(two_class_gaussian(10_000, 10, 1.2, 0), 10.0);
+        let model = LogisticModel::new(two_class_gaussian(10_000, 10, 1.2, 0), 10.0).expect("population exceeds the u32 index space");
         let mut rng = Pcg64::seeded(1);
         let theta = model.map_estimate(40);
         let theta_p: Vec<f64> = theta.iter().map(|t| t + 0.05 * rng.normal()).collect();
         let est = PoissonEstimator { batch: 100, lambda: 3.0, center: 0.0 };
-        let mut sched = MinibatchScheduler::new(model.n());
+        let mut sched = MinibatchScheduler::new(model.n()).expect("population exceeds the u32 index space");
         let mut vals = Vec::new();
         for _ in 0..500 {
             vals.push(est.estimate_ratio(&model, &theta, &theta_p, &mut sched, &mut rng).value);
@@ -383,7 +383,7 @@ mod tests {
 
     #[test]
     fn pseudo_marginal_chain_gets_stuck_where_sequential_does_not() {
-        let model = LogisticModel::new(two_class_gaussian(10_000, 10, 1.2, 0), 10.0);
+        let model = LogisticModel::new(two_class_gaussian(10_000, 10, 1.2, 0), 10.0).expect("population exceeds the u32 index space");
         let init = model.map_estimate(40);
         let kernel = GaussianRandomWalk::new(0.02, 10.0);
         let est = PoissonEstimator { batch: 100, lambda: 3.0, center: 0.0 };

@@ -98,7 +98,7 @@ mod tests {
     #[test]
     fn exact_chain_matches_map_region() {
         // short exact chain on a small logistic posterior stays near MAP
-        let model = LogisticModel::new(two_class_gaussian(300, 4, 1.5, 0), 10.0);
+        let model = LogisticModel::new(two_class_gaussian(300, 4, 1.5, 0), 10.0).expect("population exceeds the u32 index space");
         let map = model.map_estimate(60);
         let kernel = GaussianRandomWalk::new(0.05, model.prior_precision);
         let mut rng = Pcg64::seeded(3);

@@ -73,8 +73,8 @@ impl TransitionKernel for SgldKernel<'_> {
     fn scratch(&self, _init: &f64) -> SgldScratch {
         let n = self.model.n();
         SgldScratch {
-            grad_sched: MinibatchScheduler::new(n),
-            test_sched: MinibatchScheduler::new(n),
+            grad_sched: MinibatchScheduler::new(n).expect("population exceeds the u32 index space"),
+            test_sched: MinibatchScheduler::new(n).expect("population exceeds the u32 index space"),
             idx_buf: Vec::new(),
         }
     }
@@ -154,8 +154,8 @@ pub fn run_sgld(
     rng: &mut Pcg64,
 ) -> (Vec<f64>, SgldStats) {
     let n_total = model.n();
-    let mut grad_sched = MinibatchScheduler::new(n_total);
-    let mut test_sched = MinibatchScheduler::new(n_total);
+    let mut grad_sched = MinibatchScheduler::new(n_total).expect("population exceeds the u32 index space");
+    let mut test_sched = MinibatchScheduler::new(n_total).expect("population exceeds the u32 index space");
     let mut idx_buf: Vec<usize> = Vec::new();
     let mut theta = init;
     let mut out = Vec::with_capacity(steps.saturating_sub(burn_in));
@@ -210,7 +210,7 @@ mod tests {
     use crate::stats::Histogram;
 
     fn model() -> LinRegModel {
-        LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0)
+        LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0).expect("population exceeds the u32 index space")
     }
 
     #[test]

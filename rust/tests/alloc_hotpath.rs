@@ -78,7 +78,7 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 
 #[test]
 fn cached_hot_path_steady_state_allocates_nothing() {
-    let model = LinRegModel::new(linreg_toy(5_000, 0), 3.0, 4950.0);
+    let model = LinRegModel::new(linreg_toy(5_000, 0), 3.0, 4950.0).unwrap();
     let kernel = ScalarRandomWalk { sigma: 0.004, log_prior: |t: f64| -4950.0 * t.abs() };
     let modes = [
         ("exact", MhMode::Exact),
@@ -111,7 +111,7 @@ fn cached_hot_path_steady_state_allocates_nothing() {
 
     // ---- phase 2: the parallel exact scan allocates nothing inside the
     // workers (uncached and cached), after warmup ----
-    let model = LinRegModel::new(linreg_toy(20_000, 1), 3.0, 4950.0);
+    let model = LinRegModel::new(linreg_toy(20_000, 1), 3.0, 4950.0).unwrap();
     let worker_allocs = AtomicU64::new(0);
     let evals = AtomicU64::new(0);
     let (cur, prop) = (0.44f64, 0.46f64);

@@ -32,7 +32,7 @@ use austerity::testkit::models::ConjugateGaussian;
 use austerity::testkit::validate::{chi_square_hist, moment_z};
 
 fn model() -> LogisticModel {
-    LogisticModel::new(two_class_gaussian(3_000, 10, 1.2, 0), 10.0)
+    LogisticModel::new(two_class_gaussian(3_000, 10, 1.2, 0), 10.0).unwrap()
 }
 
 /// The pre-refactor `mh_step` shape, byte for byte: draw u, resolve an
@@ -131,7 +131,7 @@ fn ported_tests_match_prerefactor_oracle_uncached() {
         let mut rng_a = Pcg64::new(7, 3);
         let mut rng_b = Pcg64::new(7, 3);
         let mut scratch = MhScratch::new(model.n());
-        let mut sched = MinibatchScheduler::new(model.n());
+        let mut sched = MinibatchScheduler::new(model.n()).unwrap();
         let mut buf: Vec<u32> = Vec::new();
         let mut cur_a = init.clone();
         let mut cur_b = init.clone();
@@ -164,7 +164,7 @@ fn ported_tests_match_prerefactor_oracle_cached() {
         let mut rng_a = Pcg64::new(21, 8);
         let mut rng_b = Pcg64::new(21, 8);
         let mut scratch = MhScratch::new(model.n());
-        let mut sched = MinibatchScheduler::new(model.n());
+        let mut sched = MinibatchScheduler::new(model.n()).unwrap();
         let mut buf: Vec<u32> = Vec::new();
         let mut cur_a = init.clone();
         let mut cur_b = init.clone();

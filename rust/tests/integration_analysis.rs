@@ -27,7 +27,7 @@ fn dp_predicts_real_test_error_and_usage() {
         let mu0 = pop.mu - mu_std * pop.sigma_l / sqrt_n1;
         let cfg = SeqTestConfig::new(eps, m);
         let fixed = FixedLs(&pop.ls);
-        let mut sched = MinibatchScheduler::new(n);
+        let mut sched = MinibatchScheduler::new(n).unwrap();
         let mut rng = Pcg64::new(50, mu_std.to_bits());
         let (mut wrong, mut used) = (0usize, 0u64);
         for _ in 0..trials {
@@ -69,7 +69,7 @@ fn table_interpolation_matches_measured_acceptance() {
         let stats = pop.stats();
         let pa_pred = austerity::coordinator::delta::approx_accept_prob(n, &stats, &table, 24);
         let fixed = FixedLs(&pop.ls);
-        let mut sched = MinibatchScheduler::new(n);
+        let mut sched = MinibatchScheduler::new(n).unwrap();
         let mut rng = Pcg64::seeded(stats.mu.to_bits());
         let mut acc = 0usize;
         for _ in 0..trials {

@@ -21,7 +21,7 @@ fn summarize(samples: &[austerity::coordinator::Sample]) -> Welford {
 
 #[test]
 fn logistic_posterior_matches_across_modes() {
-    let model = LogisticModel::new(two_class_gaussian(6_000, 8, 1.2, 0), 10.0);
+    let model = LogisticModel::new(two_class_gaussian(6_000, 8, 1.2, 0), 10.0).unwrap();
     let init = model.map_estimate(60);
     let kernel = GaussianRandomWalk::new(0.02, 10.0);
     let steps = 8_000;
@@ -98,7 +98,7 @@ fn ica_posterior_amari_matches_across_modes() {
 #[test]
 fn linreg_scalar_chain_matches_quadrature() {
     // exact-MH random walk on the SGLD toy posterior vs quadrature truth
-    let model = LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0);
+    let model = LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0).unwrap();
     let (grid, dens) = model.posterior_density(-0.2, 0.8, 4_000);
     let h = grid[1] - grid[0];
     let t_mean: f64 = grid.iter().zip(&dens).map(|(t, d)| t * d * h).sum();
@@ -130,7 +130,7 @@ fn linreg_scalar_chain_matches_quadrature() {
 #[test]
 fn rjmcmc_approx_recovers_same_support_as_exact() {
     let (ds, beta_true) = sparse_logistic(15_000, 13, 3, 0.3, 2);
-    let model = RjLogisticModel::new(ds, 1e-10);
+    let model = RjLogisticModel::new(ds, 1e-10).unwrap();
     let truly_active: Vec<usize> = (1..13).filter(|&j| beta_true[j] != 0.0).collect();
     let steps = 10_000;
 

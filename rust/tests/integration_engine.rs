@@ -31,7 +31,7 @@ use austerity::samplers::{GaussianRandomWalk, RjKernel, ScalarRandomWalk};
 use austerity::stats::Pcg64;
 
 fn model() -> LogisticModel {
-    LogisticModel::new(two_class_gaussian(3_000, 10, 1.2, 0), 10.0)
+    LogisticModel::new(two_class_gaussian(3_000, 10, 1.2, 0), 10.0).unwrap()
 }
 
 #[test]
@@ -109,7 +109,7 @@ fn cached_logistic_chain_is_bit_identical_to_uncached() {
 
 #[test]
 fn cached_linreg_chain_is_bit_identical_to_uncached() {
-    let model = LinRegModel::new(linreg_toy(5_000, 0), 3.0, 4950.0);
+    let model = LinRegModel::new(linreg_toy(5_000, 0), 3.0, 4950.0).unwrap();
     let kernel = ScalarRandomWalk { sigma: 0.004, log_prior: |t: f64| -4950.0 * t.abs() };
     let mode = MhMode::approx(0.05, 400);
     let mut rng_a = Pcg64::new(21, 8);
@@ -153,7 +153,7 @@ fn engine_diagnostics_see_one_posterior() {
 
 #[test]
 fn sgld_engine_replay_is_identical_across_pool_sizes() {
-    let model = LinRegModel::new(linreg_toy(3_000, 0), 3.0, 4950.0);
+    let model = LinRegModel::new(linreg_toy(3_000, 0), 3.0, 4950.0).unwrap();
     let kernel = SgldKernel {
         model: &model,
         cfg: SgldConfig {
@@ -189,7 +189,7 @@ fn sgld_engine_replay_is_identical_across_pool_sizes() {
 #[test]
 fn rjmcmc_engine_replay_is_identical_across_pool_sizes() {
     let (ds, _) = sparse_logistic(2_000, 11, 3, 0.3, 0);
-    let model = RjLogisticModel::new(ds, 1e-10);
+    let model = RjLogisticModel::new(ds, 1e-10).unwrap();
     let kernel = RjKernel::new(&model);
     let init = RjState::with_active(11, &[0], &[-0.5]);
     let run = |threads: usize| {
@@ -217,7 +217,7 @@ fn rjmcmc_engine_replay_is_identical_across_pool_sizes() {
 fn sgld_kernel_matches_bespoke_loop_same_seed() {
     // The ported SGLD kernel must replay the pre-refactor `run_sgld`
     // loop bit for bit under the same RNG stream, corrected or not.
-    let model = LinRegModel::new(linreg_toy(3_000, 0), 3.0, 4950.0);
+    let model = LinRegModel::new(linreg_toy(3_000, 0), 3.0, 4950.0).unwrap();
     for correction in [None, Some(SeqTestConfig::new(0.3, 200))] {
         let cfg = SgldConfig { alpha: 5e-6, grad_batch: 200, correction };
         let (steps, burn) = (500usize, 100usize);
@@ -241,7 +241,7 @@ fn sgld_kernel_matches_bespoke_loop_same_seed() {
 
 #[test]
 fn pm_kernel_matches_bespoke_loop_same_seed() {
-    let model = LogisticModel::new(two_class_gaussian(3_000, 8, 1.2, 0), 10.0);
+    let model = LogisticModel::new(two_class_gaussian(3_000, 8, 1.2, 0), 10.0).unwrap();
     let init = model.map_estimate(40);
     let kernel = GaussianRandomWalk::new(0.02, 10.0);
     let est = PoissonEstimator { batch: 100, lambda: 3.0, center: 0.0 };
@@ -351,7 +351,7 @@ fn concurrent_per_chain_schedulers_stay_exchangeable() {
     let steps = 20_000usize;
     let draw = |c: usize| {
         let mut rng = Pcg64::new(9, 1000 + c as u64);
-        let mut sched = MinibatchScheduler::new(n);
+        let mut sched = MinibatchScheduler::new(n).unwrap();
         let mut counts = vec![0usize; n];
         for _ in 0..steps {
             sched.reset();

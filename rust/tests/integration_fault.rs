@@ -105,7 +105,7 @@ fn resume_is_bit_identical_for_uncached_mh_rules() {
 
 #[test]
 fn resume_is_bit_identical_for_cached_mh_rules() {
-    let model = LogisticModel::new(two_class_gaussian(1_200, 5, 1.2, 0), 10.0);
+    let model = LogisticModel::new(two_class_gaussian(1_200, 5, 1.2, 0), 10.0).unwrap();
     let init = model.map_estimate(40);
     let kernel = GaussianRandomWalk::new(0.02, 10.0);
     for (i, mode) in mh_modes(100).into_iter().enumerate() {
@@ -136,7 +136,7 @@ fn resume_is_bit_identical_for_cached_mh_rules() {
 
 #[test]
 fn resume_is_bit_identical_for_sgld_kernel_sessions() {
-    let model = LinRegModel::new(linreg_toy(2_000, 0), 3.0, 4950.0);
+    let model = LinRegModel::new(linreg_toy(2_000, 0), 3.0, 4950.0).unwrap();
     let kernel = SgldKernel {
         model: &model,
         cfg: SgldConfig { alpha: 5e-6, grad_batch: 50, correction: None },

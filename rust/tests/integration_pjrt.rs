@@ -20,7 +20,7 @@ fn artifacts_ready() -> bool {
 }
 
 fn model() -> LogisticModel {
-    LogisticModel::new(two_class_gaussian(12_214, 50, 1.2, 7), 10.0)
+    LogisticModel::new(two_class_gaussian(12_214, 50, 1.2, 7), 10.0).unwrap()
 }
 
 #[test]

@@ -29,11 +29,11 @@ use austerity::samplers::{GaussianRandomWalk, ScalarRandomWalk};
 use austerity::stats::Pcg64;
 
 fn logistic(n: usize) -> LogisticModel {
-    LogisticModel::new(two_class_gaussian(n, 12, 1.2, 3), 10.0)
+    LogisticModel::new(two_class_gaussian(n, 12, 1.2, 3), 10.0).unwrap()
 }
 
 fn linreg(n: usize) -> LinRegModel {
-    LinRegModel::new(linreg_toy(n, 0), 3.0, 4950.0)
+    LinRegModel::new(linreg_toy(n, 0), 3.0, 4950.0).unwrap()
 }
 
 #[test]

@@ -51,7 +51,7 @@ fn mh_modes(batch: usize) -> Vec<MhMode> {
 
 #[test]
 fn session_replays_cached_engine_bitwise_for_every_rule() {
-    let model = LogisticModel::new(two_class_gaussian(1_200, 5, 1.2, 0), 10.0);
+    let model = LogisticModel::new(two_class_gaussian(1_200, 5, 1.2, 0), 10.0).unwrap();
     let init = model.map_estimate(40);
     let kernel = GaussianRandomWalk::new(0.02, 10.0);
     for mode in mh_modes(100) {
@@ -107,7 +107,7 @@ fn session_replays_uncached_engine_for_conjugate_gaussian() {
 
 #[test]
 fn single_chain_session_replays_run_chain_and_cached_variant() {
-    let model = LinRegModel::new(linreg_toy(2_000, 0), 3.0, 4950.0);
+    let model = LinRegModel::new(linreg_toy(2_000, 0), 3.0, 4950.0).unwrap();
     let kernel = |cur: &f64, rng: &mut Pcg64| Proposal {
         param: cur + rng.normal_scaled(0.0, 0.005),
         log_correction: 0.0,
@@ -168,7 +168,7 @@ fn single_chain_session_replays_run_chain_and_cached_variant() {
 
 #[test]
 fn kernel_session_replays_run_engine_kernel() {
-    let model = LinRegModel::new(linreg_toy(2_000, 0), 3.0, 4950.0);
+    let model = LinRegModel::new(linreg_toy(2_000, 0), 3.0, 4950.0).unwrap();
     let kernel = SgldKernel {
         model: &model,
         cfg: SgldConfig { alpha: 5e-6, grad_batch: 50, correction: None },
@@ -193,7 +193,7 @@ fn kernel_session_replays_run_engine_kernel() {
 
 #[test]
 fn data_budget_runs_surface_consumption_in_report_and_json() {
-    let model = LogisticModel::new(two_class_gaussian(1_000, 5, 1.2, 0), 10.0);
+    let model = LogisticModel::new(two_class_gaussian(1_000, 5, 1.2, 0), 10.0).unwrap();
     let init = model.map_estimate(40);
     let kernel = GaussianRandomWalk::new(0.02, 10.0);
     let budget = 40 * model.n() as u64; // 40 full-scan equivalents per chain

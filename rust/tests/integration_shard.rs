@@ -1,0 +1,257 @@
+//! Shard-boundary bit-identity suite for the sharded columnar store and
+//! the embarrassingly-parallel `Session` launch path:
+//!
+//! * full-scan moments over a store split into 1/2/8 segments are
+//!   bit-identical to the monolithic store at 1/2/8 scan workers, for
+//!   the uncached and cached paths of both SoA models, on a population
+//!   deliberately not a multiple of `FULL_SCAN_CHUNK`;
+//! * the same matrix holds with the spans pinned to explicit executor
+//!   pools of 1/2/8 background workers;
+//! * gathered minibatch kernels and segment-straddling range kernels
+//!   route through the sharded store without changing a bit;
+//! * a `Session::shards(1)` launch replays the plain `run()` bit for
+//!   bit end to end (prior tempering by 1/1 and the one-segment store
+//!   are both exact no-ops);
+//! * a multi-shard launch is deterministic (same seed ⇒ same bits),
+//!   tiles the population exactly, decorrelates the per-shard seeds,
+//!   and produces a finite consensus combination.
+
+use austerity::coordinator::{Budget, Executor, MhMode, Param, Sample, Session};
+use austerity::data::synthetic::{linreg_toy, two_class_gaussian};
+use austerity::models::traits::{
+    full_scan_moments_par, CachedLlDiff, LlDiffModel, ScanScratch, FULL_SCAN_CHUNK,
+};
+use austerity::models::{LinRegModel, LogisticModel};
+use austerity::samplers::GaussianRandomWalk;
+use austerity::stats::Pcg64;
+
+/// Population size deliberately not a multiple of the scan chunk (or
+/// the lane width), so the tail chunk and the last segment are ragged.
+const N: usize = 5 * FULL_SCAN_CHUNK + 123;
+
+fn logistic_sharded(n: usize, shards: usize) -> LogisticModel {
+    LogisticModel::with_shards(two_class_gaussian(n, 12, 1.2, 3), 10.0, shards).unwrap()
+}
+
+fn linreg_sharded(n: usize, shards: usize) -> LinRegModel {
+    LinRegModel::with_shards(linreg_toy(n, 0), 3.0, 4950.0, shards).unwrap()
+}
+
+fn params(d: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg64::seeded(seed);
+    let cur: Vec<f64> = (0..d).map(|_| 0.2 * rng.normal()).collect();
+    let prop: Vec<f64> = cur.iter().map(|t| t + 0.05 * rng.normal()).collect();
+    (cur, prop)
+}
+
+#[test]
+fn sharded_scan_bit_identical_across_shard_and_thread_counts() {
+    let (cur, prop) = params(12, 1);
+    let serial = logistic_sharded(N, 1).full_moments(&cur, &prop);
+    for shards in [1usize, 2, 8] {
+        let model = logistic_sharded(N, shards);
+        for threads in [1usize, 2, 8] {
+            let mut scan = ScanScratch::new(threads, N);
+            let par = full_scan_moments_par(N, &mut scan, |a, b| {
+                model.lldiff_range_moments(a, b, &cur, &prop)
+            });
+            assert_eq!(par.0.to_bits(), serial.0.to_bits(), "shards {shards} threads {threads}");
+            assert_eq!(par.1.to_bits(), serial.1.to_bits(), "shards {shards} threads {threads}");
+
+            let mut cache = model.init_cache(&cur);
+            model.begin_step(&mut cache);
+            let cached = model.cached_full_scan(&mut cache, &prop, &mut scan);
+            assert_eq!(
+                cached.0.to_bits(),
+                serial.0.to_bits(),
+                "cached shards {shards} threads {threads}"
+            );
+            assert_eq!(
+                cached.1.to_bits(),
+                serial.1.to_bits(),
+                "cached shards {shards} threads {threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_scan_bit_identical_across_pool_sizes() {
+    // span width (4) differs from every pool size, so spans multiplex
+    // on the small pools and leave idle capacity on the large one; the
+    // segment layout must not interact with either.
+    let (cur, prop) = params(12, 2);
+    let serial = logistic_sharded(N, 1).full_moments(&cur, &prop);
+    for shards in [1usize, 2, 8] {
+        let model = logistic_sharded(N, shards);
+        for pool_workers in [1usize, 2, 8] {
+            let pool = Executor::new(pool_workers);
+            let mut scan = ScanScratch::on_pool(&pool, 4, N);
+            let par = full_scan_moments_par(N, &mut scan, |a, b| {
+                model.lldiff_range_moments(a, b, &cur, &prop)
+            });
+            assert_eq!(par.0.to_bits(), serial.0.to_bits(), "shards {shards} pool {pool_workers}");
+            assert_eq!(par.1.to_bits(), serial.1.to_bits(), "shards {shards} pool {pool_workers}");
+
+            let mut cache = model.init_cache(&cur);
+            model.begin_step(&mut cache);
+            let cached = model.cached_full_scan(&mut cache, &prop, &mut scan);
+            assert_eq!(
+                cached.0.to_bits(),
+                serial.0.to_bits(),
+                "cached shards {shards} pool {pool_workers}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_scan_bit_identical_linreg() {
+    let n = 4 * FULL_SCAN_CHUNK + 77;
+    let serial = linreg_sharded(n, 1).full_moments(&0.44, &0.46);
+    for shards in [2usize, 3, 8] {
+        let model = linreg_sharded(n, shards);
+        for threads in [1usize, 2, 8] {
+            let mut scan = ScanScratch::new(threads, n);
+            let par = full_scan_moments_par(n, &mut scan, |a, b| {
+                model.lldiff_range_moments(a, b, &0.44, &0.46)
+            });
+            assert_eq!(par.0.to_bits(), serial.0.to_bits(), "shards {shards} threads {threads}");
+            assert_eq!(par.1.to_bits(), serial.1.to_bits(), "shards {shards} threads {threads}");
+
+            let mut cache = model.init_cache(&0.44);
+            model.begin_step(&mut cache);
+            let cached = model.cached_full_scan(&mut cache, &0.46, &mut scan);
+            assert_eq!(
+                cached.0.to_bits(),
+                serial.0.to_bits(),
+                "cached shards {shards} threads {threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gathered_and_straddling_kernels_route_through_segments_unchanged() {
+    let (cur, prop) = params(12, 5);
+    let mono = logistic_sharded(N, 1);
+    let sharded = logistic_sharded(N, 8);
+    let mut rng = Pcg64::seeded(9);
+
+    // random gathered minibatches (the sequential-test hot path)
+    for trial in 0..12 {
+        let k = rng.below(700) + 1;
+        let idx: Vec<u32> = (0..k).map(|_| rng.below(N) as u32).collect();
+        let a = mono.lldiff_moments(&idx, &cur, &prop);
+        let b = sharded.lldiff_moments(&idx, &cur, &prop);
+        assert_eq!(a.0.to_bits(), b.0.to_bits(), "gathered trial {trial}");
+        assert_eq!(a.1.to_bits(), b.1.to_bits(), "gathered trial {trial}");
+    }
+
+    // ranges chosen to straddle segment boundaries (8 segments over N
+    // rows ⇒ boundaries at multiples of FULL_SCAN_CHUNK): the routed
+    // per-row fallback must reproduce the in-segment block bits.
+    for boundary in 1..5usize {
+        let mid = boundary * FULL_SCAN_CHUNK;
+        let (a, b) = (mid - 37, (mid + 41).min(N));
+        let r_mono = mono.lldiff_range_moments(a, b, &cur, &prop);
+        let r_shard = sharded.lldiff_range_moments(a, b, &cur, &prop);
+        assert_eq!(r_mono.0.to_bits(), r_shard.0.to_bits(), "range [{a}, {b})");
+        assert_eq!(r_mono.1.to_bits(), r_shard.1.to_bits(), "range [{a}, {b})");
+    }
+}
+
+fn bits(samples: &[Sample]) -> Vec<u64> {
+    samples.iter().map(|s| s.value.to_bits()).collect()
+}
+
+#[test]
+fn one_shard_session_replays_the_plain_launch_bitwise() {
+    let model = logistic_sharded(1_500, 1);
+    let init = model.map_estimate(30);
+    let kernel = GaussianRandomWalk::new(0.02, 10.0);
+    let build = || {
+        Session::new(&model)
+            .kernel(&kernel)
+            .rule(MhMode::Exact)
+            .chains(2)
+            .seed(77)
+            .budget(Budget::Steps(40))
+            .record(Param::index(0))
+            .init(init.clone())
+    };
+    let plain = build().run();
+    let sharded = build().shards(1).run_sharded().unwrap();
+    assert_eq!(sharded.shards.len(), 1);
+    let shard = &sharded.shards[0];
+    assert_eq!(shard.merged.steps, plain.merged.steps);
+    assert_eq!(shard.merged.accepted, plain.merged.accepted);
+    assert_eq!(shard.merged.data_used, plain.merged.data_used);
+    for (a, b) in shard.runs.iter().zip(&plain.runs) {
+        assert_eq!(bits(&a.samples), bits(&b.samples), "chain {}", a.chain);
+    }
+}
+
+#[test]
+fn multi_shard_session_is_deterministic_and_tiles_the_population() {
+    let n = 1_847usize; // not divisible by 3
+    let model = logistic_sharded(n, 1);
+    let init = model.map_estimate(30);
+    let kernel = GaussianRandomWalk::new(0.05, 10.0);
+    let launch = || {
+        Session::new(&model)
+            .kernel(&kernel)
+            .rule(MhMode::approx(0.05, 200))
+            .chains(2)
+            .seed(11)
+            .budget(Budget::Steps(120))
+            .burn_in(20)
+            .record(Param::index(0))
+            .init(init.clone())
+            .shards(3)
+            .run_sharded()
+            .unwrap()
+    };
+    let a = launch();
+    let b = launch();
+    assert_eq!(a.shards.len(), 3);
+    assert_eq!(a.failed_chains(), 0);
+
+    // same seed ⇒ same bits, shard by shard, chain by chain
+    for (ra, rb) in a.shards.iter().zip(&b.shards) {
+        assert_eq!(ra.shard, rb.shard);
+        for (ca, cb) in ra.runs.iter().zip(&rb.runs) {
+            assert_eq!(bits(&ca.samples), bits(&cb.samples), "chain {}", ca.chain);
+        }
+    }
+
+    // the shard stamps tile [0, n) exactly
+    let mut next = 0usize;
+    for (s, r) in a.shards.iter().enumerate() {
+        let info = r.shard.expect("sharded runs carry their ShardInfo");
+        assert_eq!(info.index, s);
+        assert_eq!(info.count, 3);
+        assert_eq!(info.start, next);
+        next = info.end;
+    }
+    assert_eq!(next, n);
+
+    // per-shard seeds decorrelate: the first recorded draws differ
+    let firsts: Vec<u64> =
+        a.shards.iter().map(|r| r.runs[0].samples[0].value.to_bits()).collect();
+    assert!(
+        firsts[0] != firsts[1] || firsts[1] != firsts[2],
+        "shard chains should not replay each other"
+    );
+
+    // consensus combination exists and is finite
+    let combined = a.combined().expect("combine three healthy shards");
+    assert!(combined.mean.is_finite() && combined.var > 0.0);
+    let total_draws: u64 = a
+        .shards
+        .iter()
+        .flat_map(|r| r.runs.iter())
+        .map(|c| c.samples.len() as u64)
+        .sum();
+    assert_eq!(combined.n, total_draws);
+}
