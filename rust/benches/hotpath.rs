@@ -37,7 +37,8 @@ use austerity::coordinator::austerity::{seq_mh_test, SeqTestConfig};
 use austerity::coordinator::dp::analyze_pocock;
 use austerity::coordinator::scheduler::MinibatchScheduler;
 use austerity::coordinator::{
-    mh_step, mh_step_cached, Budget, Executor, KernelSession, MhMode, MhScratch, ScalarFn, Session,
+    mh_step, mh_step_cached, Budget, Executor, KernelSession, MhMode, MhScratch, RetryPolicy,
+    ScalarFn, Session,
 };
 use austerity::data::synthetic::linreg_toy;
 use austerity::models::traits::{
@@ -412,6 +413,34 @@ fn main() {
         );
     }
 
+    // the supervised launch path with nothing to supervise: retry policy
+    // armed, checkpoints rotating, watchdog ticking, zero faults — the
+    // delta against `engine_steps_per_sec_k4` is the cost of resilience
+    {
+        let ckpt_dir = std::env::temp_dir().join(format!("austerity-bench-ckpt-{}", std::process::id()));
+        let launch = || {
+            Session::new(&model)
+                .kernel(&kernel)
+                .rule(mode.clone())
+                .chains(4)
+                .seed(99)
+                .budget(Budget::Steps(400))
+                .retry(RetryPolicy::retries(2))
+                .checkpoint_every(100)
+                .checkpoint_dir(ckpt_dir.clone())
+                .stall_after(std::time::Duration::from_secs(30))
+                .init(theta.clone())
+                .run()
+        };
+        let _ = launch();
+        let t0 = Instant::now();
+        let res = launch();
+        let sps = res.merged.steps as f64 / t0.elapsed().as_secs_f64();
+        let _ = std::fs::remove_dir_all(&ckpt_dir);
+        rec.record("retry_overhead_sps", sps);
+        println!("supervised k=4 (retry+ckpt+watchdog, no faults): {sps:>9.1} steps/s");
+    }
+
     // many small concurrent launches sharing the one global pool — the
     // workload per-launch pool construction used to penalise hardest
     {
@@ -536,6 +565,7 @@ fn main() {
             || k.starts_with("engine_scaling")
             || k.starts_with("executor_")
             || k.starts_with("shard_")
+            || k.starts_with("retry_")
         {
             println!("{k:<44} {v:>9.3}");
         }

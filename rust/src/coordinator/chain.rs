@@ -4,12 +4,13 @@
 //! §6 (and supp. E/F) runs on.
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::accept::AcceptanceTest;
 use crate::coordinator::checkpoint::{
-    BinReader, BinWriter, ChainCheckpoint, CheckpointSpec, Persist, ShardStamp,
+    BinReader, BinWriter, ChainCheckpoint, CheckpointSpec, Persist, ShardStamp, StoreLayer,
 };
 use crate::coordinator::executor::IntraPar;
 use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
@@ -70,6 +71,11 @@ pub struct ChainStats {
     /// Steps whose decision tripped a numerical guard (non-finite
     /// log-likelihood moments; see `coordinator::guard`).
     pub guard_trips: u64,
+    /// Checkpoint writes that failed (disk full, permissions, torn
+    /// renames). Non-fatal: the chain keeps sampling on the previous
+    /// generation; the engine surfaces the count for alerting. Not
+    /// persisted inside checkpoints — each (re)run counts its own.
+    pub ckpt_failures: u64,
     pub wall: Duration,
 }
 
@@ -174,28 +180,47 @@ where
         rng,
         Duration::ZERO,
         None,
+        None,
         |_, _, _, _, _, _| {},
     );
     (samples, stats)
 }
 
+/// Where and how one chain's checkpoints are written: the spec (cadence,
+/// directory, generations retained), the store layer the bytes go
+/// through (the real filesystem, or `testkit::fault::FaultyStore` under
+/// test), and the identity stamped into every payload.
+pub(crate) struct CkptSink<'a> {
+    pub spec: &'a CheckpointSpec,
+    pub store: &'a Arc<dyn StoreLayer>,
+    pub chain: usize,
+    pub base_seed: u64,
+    pub shard: ShardStamp,
+}
+
 /// Engine-side options of the resumable chain driver
 /// (`drive_chain_ckpt`): the plain budget knobs plus checkpoint writing,
-/// a checkpoint to resume from, and a progress slot for panic forensics.
+/// a checkpoint to resume from, a progress slot for panic forensics, and
+/// the supervisor's cooperative abort flag.
 pub(crate) struct DriveCfg<'a> {
     pub budget: Budget,
     pub burn_in: usize,
     pub thin: usize,
     /// Intra-step scan grant (width + pool) for `scratch_par`.
     pub intra: IntraPar,
-    /// `(spec, chain id, base seed, shard stamp)` when checkpoint
-    /// writing is on.
-    pub checkpoint: Option<(&'a CheckpointSpec, usize, u64, ShardStamp)>,
+    /// Checkpoint destination when checkpoint writing is on.
+    pub checkpoint: Option<CkptSink<'a>>,
     /// A previously captured checkpoint to continue from.
     pub resume: Option<ChainCheckpoint>,
     /// Published before every step: the 0-based index of the step being
-    /// executed, read by the engine when the chain dies mid-step.
+    /// executed, read by the engine when the chain dies mid-step and
+    /// sampled by the stall watchdog.
     pub progress: Option<&'a AtomicU64>,
+    /// Checked at every step boundary; when set (quorum lost), the loop
+    /// exits early with whatever it has — a cooperative stop, so a chain
+    /// hung *inside* a step cannot be interrupted (see
+    /// `coordinator::supervise`).
+    pub abort: Option<&'a AtomicBool>,
 }
 
 /// The chain loop every driver shares: budget check, step, stat
@@ -216,15 +241,21 @@ fn drive_loop<T, F, C>(
     rng: &mut Pcg64,
     prior: Duration,
     progress: Option<&AtomicU64>,
+    abort: Option<&AtomicBool>,
     mut after_step: C,
 ) where
     T: TransitionKernel,
     F: FnMut(&T::State) -> f64,
-    C: FnMut(&T::State, &T::Scratch, &Pcg64, &ChainStats, &[Sample], Duration),
+    C: FnMut(&T::State, &T::Scratch, &Pcg64, &mut ChainStats, &[Sample], Duration),
 {
     assert!(thin >= 1);
     let start = Instant::now();
     loop {
+        if let Some(flag) = abort {
+            if flag.load(Ordering::Relaxed) {
+                break;
+            }
+        }
         match budget {
             Budget::Steps(s) => {
                 if stats.steps >= s {
@@ -265,12 +296,16 @@ fn drive_loop<T, F, C>(
 
 /// `drive_chain_par` with checkpoint/resume: restores state, stats,
 /// samples, RNG position and cross-step scratch from `cfg.resume`, then
-/// continues the loop, writing an atomic [`ChainCheckpoint`] every
-/// `spec.every` completed steps. A resumed chain replays the uninterrupted
-/// run bit for bit (draw values, acceptance counters, data accounting);
-/// wall-clock fields are offset by the checkpoint's elapsed time but are
-/// inherently timing-dependent. Corrupt or mismatched payloads panic,
-/// which the engine's per-chain isolation reports as a failed chain.
+/// continues the loop, writing a rotated [`ChainCheckpoint`] generation
+/// every `spec.every` completed steps (keeping the newest
+/// `spec.retain`). A resumed chain replays the uninterrupted run bit for
+/// bit (draw values, acceptance counters, data accounting); wall-clock
+/// fields are offset by the checkpoint's elapsed time but are inherently
+/// timing-dependent. Corrupt or mismatched payloads panic, which the
+/// engine's supervision layer retries or reports as a failed chain;
+/// checkpoint *write* failures are non-fatal — they bump
+/// `ChainStats::ckpt_failures` and the chain keeps sampling on its
+/// previous generation.
 pub(crate) fn drive_chain_ckpt<T, F>(
     kernel: &T,
     init: T::State,
@@ -283,8 +318,8 @@ where
     T::State: Persist,
     F: FnMut(&T::State) -> f64,
 {
-    let DriveCfg { budget, burn_in, thin, intra, checkpoint, resume, progress } = cfg;
-    let (mut cur, mut stats, mut samples, prior, scratch_bytes) = match resume {
+    let DriveCfg { budget, burn_in, thin, intra, checkpoint, resume, progress, abort } = cfg;
+    let (mut cur, mut stats, mut samples, prior, scratch_bytes, mut next_gen) = match resume {
         Some(ck) => {
             let mut r = BinReader::new(&ck.state);
             let cur = T::State::restore(&mut r)
@@ -295,12 +330,14 @@ where
                 accepted: ck.accepted,
                 data_used: ck.data_used,
                 guard_trips: ck.guard_trips,
+                ckpt_failures: 0,
                 wall: Duration::from_secs_f64(ck.wall_secs),
             };
             *rng = Pcg64::from_parts(ck.rng);
-            (cur, stats, ck.samples, Duration::from_secs_f64(ck.wall_secs), Some(ck.scratch))
+            let gen = ck.generation + 1;
+            (cur, stats, ck.samples, Duration::from_secs_f64(ck.wall_secs), Some(ck.scratch), gen)
         }
-        None => (init, ChainStats::default(), Vec::new(), Duration::ZERO, None),
+        None => (init, ChainStats::default(), Vec::new(), Duration::ZERO, None, 1),
     };
     // scratch is rebuilt from the (restored) state — this is what
     // regenerates the cached path's likelihood cache — then the
@@ -326,17 +363,19 @@ where
         rng,
         prior,
         progress,
+        abort,
         |state, scratch, rng, stats, samples, elapsed| {
-            if let Some((spec, chain, base_seed, shard)) = checkpoint {
-                if spec.every > 0 && stats.steps % spec.every == 0 {
+            if let Some(sink) = &checkpoint {
+                if sink.spec.every > 0 && stats.steps % sink.spec.every == 0 {
                     let mut sw = BinWriter::new();
                     state.persist(&mut sw);
                     let mut kw = BinWriter::new();
                     kernel.save_scratch(scratch, &mut kw);
                     let ck = ChainCheckpoint {
-                        chain,
-                        base_seed,
-                        shard,
+                        chain: sink.chain,
+                        base_seed: sink.base_seed,
+                        shard: sink.shard,
+                        generation: next_gen,
                         steps: stats.steps,
                         accepted: stats.accepted,
                         data_used: stats.data_used,
@@ -347,9 +386,20 @@ where
                         state: sw.into_bytes(),
                         scratch: kw.into_bytes(),
                     };
-                    ck.write_atomic(&spec.dir).unwrap_or_else(|e| {
-                        panic!("chain {chain}: checkpoint write failed: {e}")
-                    });
+                    match ck.write_rotated(sink.store.as_ref(), &sink.spec.dir, sink.spec.retain) {
+                        Ok(()) => next_gen += 1,
+                        Err(e) => {
+                            // non-fatal: keep sampling on the previous
+                            // generation and retry this generation number
+                            // at the next cadence point
+                            stats.ckpt_failures += 1;
+                            eprintln!(
+                                "engine: chain {}: checkpoint g{next_gen} write failed \
+                                 (continuing): {e}",
+                                sink.chain,
+                            );
+                        }
+                    }
                 }
             }
         },

@@ -11,15 +11,26 @@
 //! budgets terminate at a timing-dependent step and are therefore the one
 //! budget kind without a bit-identity guarantee).
 //!
-//! **Format.** One file per chain, `chain-<c>.ckpt`, in a compact
-//! little-endian binary framing ([`BinWriter`]/[`BinReader`]) headed by a
-//! magic word and a format version; unknown versions are rejected, never
-//! reinterpreted. Files are written atomically (temp file + rename) so a
-//! crash mid-write leaves the previous checkpoint intact. A human-readable
-//! `manifest.json` (hand-rolled writer, same dialect as
-//! `RunReport::to_json`) records the launch configuration for
-//! observability; resume reads only the binary files, which are
-//! self-contained.
+//! **Format (v3).** One file per chain *generation*,
+//! `chain-<c>.g<g>.ckpt`, in a compact little-endian binary framing
+//! ([`BinWriter`]/[`BinReader`]) headed by a magic word and a format
+//! version and sealed by a CRC32 (IEEE) trailer over everything before
+//! it; unknown versions are rejected, never reinterpreted, and a payload
+//! whose trailer does not match is [`CkptError::Corrupt`] — a single
+//! flipped bit cannot replay as a subtly different chain. Writers rotate
+//! generations (`1, 2, 3, ...`) and prune to the newest
+//! [`CheckpointSpec::retain`]; [`ChainCheckpoint::load_latest`] walks the
+//! surviving generations newest-first and silently falls back past
+//! torn/corrupt/short files, so one bad write costs `every` steps of
+//! replay, not the whole resume. All file traffic goes through a
+//! [`StoreLayer`] (atomic temp-file + rename writes by default) so the
+//! fault-injection testkit can script torn writes, bit flips, short
+//! reads, and ENOSPC at exact (chain, generation) points. A
+//! human-readable `manifest.json` (hand-rolled writer, same dialect as
+//! `RunReport::to_json`) records the launch configuration; on resume the
+//! engine cross-checks it ([`validate_manifest`]) so a checkpoint
+//! directory cannot be silently adopted by a different configuration,
+//! model, or acceptance rule.
 //!
 //! The cached MH path deliberately does **not** serialize its per-datapoint
 //! cache: `CachedLlDiff::init_cache` rebuilds it from the restored state,
@@ -30,16 +41,54 @@ use std::fmt;
 use std::fs;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::coordinator::chain::{Budget, Sample};
 
 /// File magic of a chain checkpoint ("AUCK" little-endian).
 pub const CKPT_MAGIC: u32 = 0x4b43_5541;
 /// Current checkpoint format version. v2 added the shard stamp
-/// (index/count/row range) to the header; v1 files are rejected with
-/// [`CkptError::Version`] rather than silently read as shard 0 of 1 —
-/// a v1 run predates sharding and must be restarted, not adopted.
-pub const CKPT_VERSION: u32 = 2;
+/// (index/count/row range) to the header; v3 added the generation
+/// counter and the CRC32 integrity trailer. Older versions are rejected
+/// with [`CkptError::Version`] rather than silently reinterpreted — a
+/// pre-v3 file has no trailer, so "adopting" it would mean trusting
+/// unverified bytes.
+pub const CKPT_VERSION: u32 = 3;
+
+/// How many checkpoint generations each chain keeps by default: the
+/// newest plus one fallback for torn-write recovery.
+pub const DEFAULT_RETAIN: usize = 2;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected) — table built at compile time, zero deps.
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// CRC32 (IEEE) of `bytes` — the checksum sealed into every v3
+/// checkpoint trailer.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xffff_ffffu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
 
 // ---------------------------------------------------------------------------
 // Errors
@@ -55,6 +104,10 @@ pub enum CkptError {
     /// A structurally valid checkpoint that does not match the run
     /// (wrong chain id, seed, or model size).
     Mismatch(String),
+    /// The checkpoint directory's `manifest.json` describes a different
+    /// launch (chains, seed, budget kind, shard layout, kernel, or rule)
+    /// than the one trying to resume from it.
+    ManifestMismatch(String),
 }
 
 impl fmt::Display for CkptError {
@@ -66,6 +119,9 @@ impl fmt::Display for CkptError {
                 write!(f, "unsupported checkpoint version {found} (expected {CKPT_VERSION})")
             }
             CkptError::Mismatch(what) => write!(f, "checkpoint mismatch: {what}"),
+            CkptError::ManifestMismatch(what) => {
+                write!(f, "checkpoint manifest mismatch: {what}")
+            }
         }
     }
 }
@@ -83,6 +139,55 @@ impl From<std::io::Error> for CkptError {
     fn from(e: std::io::Error) -> Self {
         CkptError::Io(e)
     }
+}
+
+// ---------------------------------------------------------------------------
+// Store layer
+
+/// Byte-level access to the checkpoint directory. Production uses
+/// [`FsStore`] (plain filesystem with atomic temp-file + rename writes);
+/// the fault-injection testkit wraps it to script torn writes, bit
+/// flips, short reads, and ENOSPC at exact (chain, generation) points —
+/// mirroring how `FaultyModel` scripts compute faults.
+pub trait StoreLayer: Send + Sync + fmt::Debug {
+    /// Read the whole file at `path`.
+    fn read(&self, path: &Path) -> std::io::Result<Vec<u8>>;
+    /// Write `bytes` to `path` atomically (the previous content of
+    /// `path`, if any, must survive an interrupted write).
+    fn write_atomic(&self, path: &Path, bytes: &[u8]) -> std::io::Result<()>;
+    /// Remove the file at `path` (used when pruning old generations).
+    fn remove(&self, path: &Path) -> std::io::Result<()>;
+}
+
+/// The production [`StoreLayer`]: plain filesystem access with
+/// temp-file + `rename` atomicity and `sync_all` before the rename.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FsStore;
+
+impl StoreLayer for FsStore {
+    fn read(&self, path: &Path) -> std::io::Result<Vec<u8>> {
+        fs::read(path)
+    }
+
+    fn write_atomic(&self, path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        drop(f);
+        fs::rename(&tmp, path)
+    }
+
+    fn remove(&self, path: &Path) -> std::io::Result<()> {
+        fs::remove_file(path)
+    }
+}
+
+/// The default store shared by engine launches that did not pin one.
+pub fn fs_store() -> Arc<dyn StoreLayer> {
+    Arc::new(FsStore)
 }
 
 // ---------------------------------------------------------------------------
@@ -332,6 +437,10 @@ pub struct ChainCheckpoint {
     /// Shard membership; resuming under a different shard layout is
     /// refused (v2+).
     pub shard: ShardStamp,
+    /// Rotation generation (1-based, monotone per chain). Sealed into
+    /// the payload so a renamed file cannot masquerade as a different
+    /// generation (v3+).
+    pub generation: u64,
     pub steps: usize,
     pub accepted: usize,
     pub data_used: u64,
@@ -350,6 +459,8 @@ pub struct ChainCheckpoint {
 }
 
 impl ChainCheckpoint {
+    /// Encode the payload and seal it with the CRC32 trailer (4 LE
+    /// bytes over everything before it).
     pub fn encode(&self) -> Vec<u8> {
         let mut w = BinWriter::new();
         w.put_u32(CKPT_MAGIC);
@@ -360,6 +471,7 @@ impl ChainCheckpoint {
         w.put_usize(self.shard.count);
         w.put_usize(self.shard.start);
         w.put_usize(self.shard.end);
+        w.put_u64(self.generation);
         w.put_usize(self.steps);
         w.put_usize(self.accepted);
         w.put_u64(self.data_used);
@@ -371,18 +483,37 @@ impl ChainCheckpoint {
         self.samples.persist(&mut w);
         w.put_bytes(&self.state);
         w.put_bytes(&self.scratch);
-        w.into_bytes()
+        let mut bytes = w.into_bytes();
+        let crc = crc32(&bytes);
+        bytes.extend_from_slice(&crc.to_le_bytes());
+        bytes
     }
 
     pub fn decode(bytes: &[u8]) -> Result<Self, CkptError> {
-        let mut r = BinReader::new(bytes);
-        if r.u32()? != CKPT_MAGIC {
+        // The version word is readable before the trailer check so a
+        // pre-v3 (trailer-less) file reports `Version`, not a confusing
+        // CRC failure; v3+ payloads must pass the trailer first.
+        if bytes.len() < 8 {
+            return Err(CkptError::Corrupt("truncated payload"));
+        }
+        if u32::from_le_bytes(bytes[0..4].try_into().unwrap()) != CKPT_MAGIC {
             return Err(CkptError::Corrupt("bad magic"));
         }
-        let version = r.u32()?;
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
         if version != CKPT_VERSION {
             return Err(CkptError::Version { found: version });
         }
+        if bytes.len() < 12 {
+            return Err(CkptError::Corrupt("truncated payload"));
+        }
+        let (payload, trailer) = bytes.split_at(bytes.len() - 4);
+        let stored = u32::from_le_bytes(trailer.try_into().unwrap());
+        if crc32(payload) != stored {
+            return Err(CkptError::Corrupt("crc mismatch"));
+        }
+        let mut r = BinReader::new(payload);
+        let _magic = r.u32()?;
+        let _version = r.u32()?;
         let ck = ChainCheckpoint {
             chain: r.usize_()?,
             base_seed: r.u64()?,
@@ -392,6 +523,7 @@ impl ChainCheckpoint {
                 start: r.usize_()?,
                 end: r.usize_()?,
             },
+            generation: r.u64()?,
             steps: r.usize_()?,
             accepted: r.usize_()?,
             data_used: r.u64()?,
@@ -406,47 +538,127 @@ impl ChainCheckpoint {
         {
             return Err(CkptError::Corrupt("invalid shard stamp"));
         }
+        if ck.generation == 0 {
+            return Err(CkptError::Corrupt("invalid generation"));
+        }
         r.finish()?;
         Ok(ck)
     }
 
-    /// Write `chain-<c>.ckpt` into `dir` atomically: the payload goes to a
-    /// temp file first and is renamed over the target, so an interrupted
-    /// write never destroys the previous checkpoint.
-    pub fn write_atomic(&self, dir: &Path) -> Result<(), CkptError> {
-        let tmp = dir.join(format!("chain-{}.ckpt.tmp", self.chain));
-        let bytes = self.encode();
-        let mut f = fs::File::create(&tmp)?;
-        f.write_all(&bytes)?;
-        f.sync_all()?;
-        drop(f);
-        fs::rename(&tmp, chain_path(dir, self.chain))?;
+    /// Write this checkpoint's generation file through `store` (the
+    /// production store renames a temp file over the target, so an
+    /// interrupted write never destroys an existing generation).
+    pub fn write_atomic(&self, store: &dyn StoreLayer, dir: &Path) -> Result<(), CkptError> {
+        store.write_atomic(&gen_path(dir, self.chain, self.generation), &self.encode())?;
         Ok(())
     }
 
-    /// Load chain `c`'s checkpoint from `dir`. `Ok(None)` when the file
-    /// does not exist (the chain never reached a checkpoint boundary —
-    /// it resumes from scratch); decode failures are errors.
-    pub fn load(dir: &Path, chain: usize) -> Result<Option<Self>, CkptError> {
-        match fs::read(chain_path(dir, chain)) {
-            Ok(bytes) => Self::decode(&bytes).map(Some),
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
-            Err(e) => Err(CkptError::Io(e)),
+    /// Write this generation, then prune the chain's oldest generations
+    /// down to `retain` files (best-effort; a failed prune never fails
+    /// the write that preceded it).
+    pub fn write_rotated(
+        &self,
+        store: &dyn StoreLayer,
+        dir: &Path,
+        retain: usize,
+    ) -> Result<(), CkptError> {
+        self.write_atomic(store, dir)?;
+        prune_generations(store, dir, self.chain, retain.max(1));
+        Ok(())
+    }
+
+    /// Load chain `c`'s newest loadable checkpoint from `dir`, walking
+    /// generations newest-first and silently skipping torn, corrupt, or
+    /// unreadable files. Returns the checkpoint together with how many
+    /// newer generations had to be skipped (`> 0` means the chain
+    /// recovered past a bad file). `Ok(None)` when no generation files
+    /// exist (the chain never reached a checkpoint boundary — it resumes
+    /// from scratch); an error only when files exist but none decode.
+    pub fn load_latest(
+        store: &dyn StoreLayer,
+        dir: &Path,
+        chain: usize,
+    ) -> Result<Option<(Self, usize)>, CkptError> {
+        let gens = list_generations(dir, chain)?;
+        if gens.is_empty() {
+            return Ok(None);
+        }
+        let mut skipped = 0usize;
+        let mut last_err = CkptError::Corrupt("no loadable generation");
+        for &g in gens.iter().rev() {
+            match store.read(&gen_path(dir, chain, g)) {
+                Ok(bytes) => match Self::decode(&bytes) {
+                    Ok(ck) if ck.generation == g => return Ok(Some((ck, skipped))),
+                    Ok(_) => last_err = CkptError::Corrupt("generation label mismatch"),
+                    Err(e) => last_err = e,
+                },
+                // racing a prune is not a fault; anything else is
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => last_err = CkptError::Io(e),
+            }
+            skipped += 1;
+        }
+        Err(last_err)
+    }
+}
+
+/// Generation `g` checkpoint file of chain `c` under `dir`.
+pub fn gen_path(dir: &Path, chain: usize, generation: u64) -> PathBuf {
+    dir.join(format!("chain-{chain}.g{generation}.ckpt"))
+}
+
+/// Parse a `chain-<c>.g<g>.ckpt` file name into `(chain, generation)`.
+pub(crate) fn parse_gen_name(name: &str) -> Option<(usize, u64)> {
+    let rest = name.strip_prefix("chain-")?.strip_suffix(".ckpt")?;
+    let (chain, gen) = rest.split_once(".g")?;
+    Some((chain.parse().ok()?, gen.parse().ok()?))
+}
+
+/// All on-disk generations of chain `c` under `dir`, sorted ascending.
+/// A missing directory reads as "no generations" rather than an error —
+/// a fresh launch has not created it yet.
+pub fn list_generations(dir: &Path, chain: usize) -> Result<Vec<u64>, CkptError> {
+    let entries = match fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(CkptError::Io(e)),
+    };
+    let mut gens = Vec::new();
+    for entry in entries {
+        let entry = entry?;
+        if let Some(name) = entry.file_name().to_str() {
+            if let Some((c, g)) = parse_gen_name(name) {
+                if c == chain {
+                    gens.push(g);
+                }
+            }
+        }
+    }
+    gens.sort_unstable();
+    Ok(gens)
+}
+
+/// Best-effort removal of chain `c`'s oldest generations, keeping the
+/// newest `retain` files. Removal failures are ignored: an unprunable
+/// old generation wastes disk but never blocks sampling.
+pub fn prune_generations(store: &dyn StoreLayer, dir: &Path, chain: usize, retain: usize) {
+    let Ok(gens) = list_generations(dir, chain) else { return };
+    if gens.len() > retain {
+        for &g in &gens[..gens.len() - retain] {
+            store.remove(&gen_path(dir, chain, g)).ok();
         }
     }
 }
 
-/// Checkpoint file of chain `c` under `dir`.
-pub fn chain_path(dir: &Path, chain: usize) -> PathBuf {
-    dir.join(format!("chain-{chain}.ckpt"))
-}
-
-/// Where and how often to checkpoint: every `every` completed steps, one
-/// file per chain under `dir`.
+/// Where and how often to checkpoint: every `every` completed steps,
+/// rotating up to `retain` generation files per chain under `dir`.
 #[derive(Clone, Debug)]
 pub struct CheckpointSpec {
     pub every: usize,
     pub dir: PathBuf,
+    /// Generations kept per chain (`>= 1`); older files are pruned
+    /// after each successful write.
+    pub retain: usize,
 }
 
 // ---------------------------------------------------------------------------
@@ -480,36 +692,177 @@ pub(crate) fn json_str(s: &str) -> String {
     out
 }
 
-/// Write `manifest.json` describing a checkpointing launch (atomically,
-/// like the chain files). Purely informational: resume never parses it.
-pub(crate) fn write_manifest(
-    dir: &Path,
-    chains: usize,
-    base_seed: u64,
-    burn_in: usize,
-    thin: usize,
-    every: usize,
-    budget: &Budget,
-) -> Result<(), CkptError> {
-    let (kind, per_chain) = match budget {
+/// What the manifest records about a checkpointing launch — the fields
+/// a resume must agree on before it may adopt the directory.
+#[derive(Clone, Debug)]
+pub struct ManifestInfo<'a> {
+    pub chains: usize,
+    pub base_seed: u64,
+    pub burn_in: usize,
+    pub thin: usize,
+    pub every: usize,
+    pub retain: usize,
+    pub budget: &'a Budget,
+    pub shard: ShardStamp,
+    /// Kernel/backend label (`session_backend()`); empty when launched
+    /// below the session layer, in which case validation skips it.
+    pub kernel: &'a str,
+    /// Acceptance-rule label (`AcceptanceTest::name`); empty when
+    /// launched below the session layer.
+    pub rule: &'a str,
+}
+
+fn budget_kind(budget: &Budget) -> (&'static str, f64) {
+    match budget {
         Budget::Steps(s) => ("steps", *s as f64),
         Budget::Wall(d) => ("wall_secs", d.as_secs_f64()),
         Budget::Data(d) => ("data", *d as f64),
-    };
+    }
+}
+
+/// Write `manifest.json` describing a checkpointing launch (atomically,
+/// like the chain files). Resume cross-checks it via
+/// [`validate_manifest`]; the binary chain files stay self-contained.
+pub(crate) fn write_manifest(
+    store: &dyn StoreLayer,
+    dir: &Path,
+    info: &ManifestInfo<'_>,
+) -> Result<(), CkptError> {
+    let (kind, per_chain) = budget_kind(info.budget);
     let json = format!(
-        "{{\"format_version\":{CKPT_VERSION},\"chains\":{chains},\"base_seed\":{base_seed},\
-         \"burn_in\":{burn_in},\"thin\":{thin},\"checkpoint_every\":{every},\
+        "{{\"format_version\":{CKPT_VERSION},\"chains\":{},\"base_seed\":{},\
+         \"burn_in\":{},\"thin\":{},\"checkpoint_every\":{},\"retain\":{},\
+         \"shard\":{{\"index\":{},\"count\":{}}},\"kernel\":{},\"rule\":{},\
          \"budget\":{{\"kind\":{},\"per_chain\":{}}}}}\n",
+        info.chains,
+        info.base_seed,
+        info.burn_in,
+        info.thin,
+        info.every,
+        info.retain,
+        info.shard.index,
+        info.shard.count,
+        json_str(info.kernel),
+        json_str(info.rule),
         json_str(kind),
         json_num(per_chain),
     );
-    let tmp = dir.join("manifest.json.tmp");
-    let mut f = fs::File::create(&tmp)?;
-    f.write_all(json.as_bytes())?;
-    f.sync_all()?;
-    drop(f);
-    fs::rename(&tmp, dir.join("manifest.json"))?;
+    store.write_atomic(&dir.join("manifest.json"), json.as_bytes())?;
     Ok(())
+}
+
+/// Extract the raw token after `"key":` in our own manifest dialect
+/// (flat values: numbers, strings, or one-level objects).
+fn manifest_field<'t>(text: &'t str, key: &str) -> Option<&'t str> {
+    let pat = format!("\"{key}\":");
+    let at = text.find(&pat)? + pat.len();
+    let rest = &text[at..];
+    let bytes = rest.as_bytes();
+    match bytes.first()? {
+        b'"' => {
+            let mut i = 1;
+            while i < bytes.len() {
+                match bytes[i] {
+                    b'\\' => i += 2,
+                    b'"' => return Some(&rest[..=i]),
+                    _ => i += 1,
+                }
+            }
+            None
+        }
+        b'{' => {
+            let mut depth = 0usize;
+            for (i, b) in bytes.iter().enumerate() {
+                match b {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            return Some(&rest[..=i]);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            None
+        }
+        _ => {
+            let end = rest.find([',', '}', '\n']).unwrap_or(rest.len());
+            Some(rest[..end].trim())
+        }
+    }
+}
+
+fn check_field(
+    text: &str,
+    key: &str,
+    expect: &str,
+    mismatches: &mut Vec<String>,
+) {
+    match manifest_field(text, key) {
+        Some(found) if found == expect => {}
+        Some(found) => mismatches.push(format!("{key}: manifest has {found}, run has {expect}")),
+        // a hand-edited or older manifest may lack a field; only a
+        // *conflicting* value refuses the resume
+        None => {}
+    }
+}
+
+/// Cross-check a checkpoint directory's `manifest.json` against the
+/// resuming launch. Chains, seed, burn-in, thinning, budget *kind*,
+/// shard layout, format version, and (when both sides carry them) the
+/// kernel/rule labels must agree; the budget *amount* may differ — a
+/// resume legitimately extends the budget. A missing manifest is
+/// tolerated (the binary files are self-contained and carry their own
+/// chain/seed/shard stamps).
+pub(crate) fn validate_manifest(
+    store: &dyn StoreLayer,
+    dir: &Path,
+    info: &ManifestInfo<'_>,
+) -> Result<(), CkptError> {
+    let bytes = match store.read(&dir.join("manifest.json")) {
+        Ok(bytes) => bytes,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(CkptError::Io(e)),
+    };
+    let text = String::from_utf8_lossy(&bytes).into_owned();
+    let mut bad = Vec::new();
+    check_field(&text, "format_version", &CKPT_VERSION.to_string(), &mut bad);
+    check_field(&text, "chains", &info.chains.to_string(), &mut bad);
+    check_field(&text, "base_seed", &info.base_seed.to_string(), &mut bad);
+    check_field(&text, "burn_in", &info.burn_in.to_string(), &mut bad);
+    check_field(&text, "thin", &info.thin.to_string(), &mut bad);
+    let (kind, _) = budget_kind(info.budget);
+    if let Some(budget) = manifest_field(&text, "budget") {
+        check_field(budget, "kind", &json_str(kind), &mut bad);
+    }
+    if let Some(shard) = manifest_field(&text, "shard") {
+        check_field(shard, "index", &info.shard.index.to_string(), &mut bad);
+        check_field(shard, "count", &info.shard.count.to_string(), &mut bad);
+    }
+    if !info.kernel.is_empty() {
+        match manifest_field(&text, "kernel") {
+            Some(found) if found == "\"\"" || found == json_str(info.kernel) => {}
+            Some(found) => {
+                bad.push(format!("kernel: manifest has {found}, run has {}", json_str(info.kernel)))
+            }
+            None => {}
+        }
+    }
+    if !info.rule.is_empty() {
+        match manifest_field(&text, "rule") {
+            Some(found) if found == "\"\"" || found == json_str(info.rule) => {}
+            Some(found) => {
+                bad.push(format!("rule: manifest has {found}, run has {}", json_str(info.rule)))
+            }
+            None => {}
+        }
+    }
+    if bad.is_empty() {
+        Ok(())
+    } else {
+        Err(CkptError::ManifestMismatch(bad.join("; ")))
+    }
 }
 
 #[cfg(test)]
@@ -533,6 +886,7 @@ mod tests {
             chain: 2,
             base_seed: 42,
             shard: ShardStamp { index: 1, count: 4, start: 2500, end: 5000 },
+            generation: 7,
             steps: 137,
             accepted: 55,
             data_used: 12_345,
@@ -555,6 +909,7 @@ mod tests {
         assert_eq!(back.chain, ck.chain);
         assert_eq!(back.base_seed, ck.base_seed);
         assert_eq!(back.shard, ck.shard);
+        assert_eq!(back.generation, ck.generation);
         assert_eq!(back.steps, ck.steps);
         assert_eq!(back.accepted, ck.accepted);
         assert_eq!(back.data_used, ck.data_used);
@@ -589,22 +944,44 @@ mod tests {
             ChainCheckpoint::decode(&vnext),
             Err(CkptError::Version { found }) if found == CKPT_VERSION + 1
         ));
-        // trailing garbage
+        // trailing garbage shifts the trailer, so the CRC catches it
         let mut long = bytes.clone();
         long.push(0);
         assert!(ChainCheckpoint::decode(&long).is_err());
     }
 
     #[test]
-    fn v1_checkpoints_are_versioned_out_not_misread() {
-        // A pre-sharding (v1) file has no shard stamp; the loader must
-        // refuse it by version before attempting the v2 layout.
-        let mut bytes = sample_ckpt().encode();
-        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
-        assert!(matches!(
-            ChainCheckpoint::decode(&bytes),
-            Err(CkptError::Version { found: 1 })
-        ));
+    fn single_bit_flips_anywhere_fail_the_crc() {
+        let bytes = sample_ckpt().encode();
+        // flip one bit in every byte past the header words: either the
+        // CRC trailer or (for flips inside the trailer itself) the
+        // recomputed checksum must refuse the payload
+        for at in 8..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x10;
+            assert!(ChainCheckpoint::decode(&bad).is_err(), "flip at byte {at}");
+        }
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_reference_vector() {
+        // the canonical IEEE 802.3 check value for "123456789"
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn old_checkpoint_versions_are_rejected_not_misread() {
+        // pre-v3 files have no CRC trailer (and v1 no shard stamp): the
+        // loader must refuse them by version, never trust their bytes
+        for old in [1u32, 2] {
+            let mut bytes = sample_ckpt().encode();
+            bytes[4..8].copy_from_slice(&old.to_le_bytes());
+            assert!(matches!(
+                ChainCheckpoint::decode(&bytes),
+                Err(CkptError::Version { found }) if found == old
+            ));
+        }
     }
 
     #[test]
@@ -647,28 +1024,152 @@ mod tests {
     }
 
     #[test]
-    fn atomic_write_then_load() {
+    fn atomic_write_then_load_latest() {
         let dir = temp_dir("atomic");
+        let store = FsStore;
         let ck = sample_ckpt();
-        assert!(ChainCheckpoint::load(&dir, 2).unwrap().is_none());
-        ck.write_atomic(&dir).unwrap();
-        let back = ChainCheckpoint::load(&dir, 2).unwrap().expect("present");
+        assert!(ChainCheckpoint::load_latest(&store, &dir, 2).unwrap().is_none());
+        ck.write_atomic(&store, &dir).unwrap();
+        let (back, skipped) =
+            ChainCheckpoint::load_latest(&store, &dir, 2).unwrap().expect("present");
         assert_eq!(back.steps, ck.steps);
+        assert_eq!(back.generation, 7);
+        assert_eq!(skipped, 0);
         // no temp droppings left behind
-        assert!(!dir.join("chain-2.ckpt.tmp").exists());
+        assert!(!dir.join("chain-2.g7.ckpt.tmp").exists());
         // other chains stay absent
-        assert!(ChainCheckpoint::load(&dir, 0).unwrap().is_none());
+        assert!(ChainCheckpoint::load_latest(&store, &dir, 0).unwrap().is_none());
         fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gen_names_parse_and_reject_strangers() {
+        assert_eq!(parse_gen_name("chain-3.g12.ckpt"), Some((3, 12)));
+        assert_eq!(parse_gen_name("chain-0.g1.ckpt"), Some((0, 1)));
+        assert_eq!(parse_gen_name("chain-0.g1.ckpt.tmp"), None);
+        assert_eq!(parse_gen_name("chain-0.ckpt"), None); // pre-v3 name
+        assert_eq!(parse_gen_name("manifest.json"), None);
+        assert_eq!(parse_gen_name("chain-x.g1.ckpt"), None);
+    }
+
+    #[test]
+    fn rotation_prunes_to_retain_and_falls_back_past_torn_generations() {
+        let dir = temp_dir("rotate");
+        let store = FsStore;
+        let mut ck = sample_ckpt();
+        for g in 1..=5u64 {
+            ck.generation = g;
+            ck.steps = 100 * g as usize;
+            ck.write_rotated(&store, &dir, 3).unwrap();
+        }
+        assert_eq!(list_generations(&dir, 2).unwrap(), vec![3, 4, 5]);
+
+        // tear the newest generation mid-file: load falls back to g4
+        let newest = gen_path(&dir, 2, 5);
+        let bytes = fs::read(&newest).unwrap();
+        fs::write(&newest, &bytes[..bytes.len() / 2]).unwrap();
+        let (back, skipped) =
+            ChainCheckpoint::load_latest(&store, &dir, 2).unwrap().expect("fallback");
+        assert_eq!(back.generation, 4);
+        assert_eq!(back.steps, 400);
+        assert_eq!(skipped, 1);
+
+        // corrupt every survivor: now loading is an error, not a fresh start
+        for g in 3..=5u64 {
+            fs::write(gen_path(&dir, 2, g), b"junk").unwrap();
+        }
+        assert!(ChainCheckpoint::load_latest(&store, &dir, 2).is_err());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn renamed_generation_files_are_refused() {
+        // the generation is sealed into the payload: copying g2's bytes
+        // into a g9 file name must not load as generation 9
+        let dir = temp_dir("rename");
+        let store = FsStore;
+        let mut ck = sample_ckpt();
+        ck.generation = 2;
+        ck.write_atomic(&store, &dir).unwrap();
+        fs::copy(gen_path(&dir, 2, 2), gen_path(&dir, 2, 9)).unwrap();
+        let (back, skipped) =
+            ChainCheckpoint::load_latest(&store, &dir, 2).unwrap().expect("fallback");
+        assert_eq!(back.generation, 2, "must fall back to the honestly-named file");
+        assert_eq!(skipped, 1);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    fn info<'a>(budget: &'a Budget, kernel: &'a str, rule: &'a str) -> ManifestInfo<'a> {
+        ManifestInfo {
+            chains: 4,
+            base_seed: 42,
+            burn_in: 10,
+            thin: 2,
+            every: 50,
+            retain: 2,
+            budget,
+            shard: ShardStamp::default(),
+            kernel,
+            rule,
+        }
     }
 
     #[test]
     fn manifest_is_written_and_valid_jsonish() {
         let dir = temp_dir("manifest");
-        write_manifest(&dir, 4, 42, 10, 2, 50, &Budget::Steps(1_000)).unwrap();
+        let budget = Budget::Steps(1_000);
+        write_manifest(&FsStore, &dir, &info(&budget, "cached", "austerity")).unwrap();
         let text = fs::read_to_string(dir.join("manifest.json")).unwrap();
         assert!(text.contains("\"chains\":4"));
         assert!(text.contains("\"kind\":\"steps\""));
+        assert!(text.contains("\"kernel\":\"cached\""));
+        assert!(text.contains("\"rule\":\"austerity\""));
         assert_eq!(text.matches('{').count(), text.matches('}').count());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_validation_accepts_the_writer_and_refuses_strangers() {
+        let dir = temp_dir("validate");
+        let store = FsStore;
+        let budget = Budget::Steps(1_000);
+        let written = info(&budget, "cached", "austerity");
+        write_manifest(&store, &dir, &written).unwrap();
+
+        // the writing configuration round-trips
+        validate_manifest(&store, &dir, &written).unwrap();
+
+        // a bigger budget of the same kind is a legitimate extension
+        let extended = Budget::Steps(5_000);
+        validate_manifest(&store, &dir, &info(&extended, "cached", "austerity")).unwrap();
+
+        // a sub-session launch with no labels skips the label checks
+        validate_manifest(&store, &dir, &info(&budget, "", "")).unwrap();
+
+        // wrong seed, rule, kernel, or budget kind all refuse
+        let mut wrong_seed = info(&budget, "cached", "austerity");
+        wrong_seed.base_seed = 7;
+        for (label, bad) in [
+            ("seed", wrong_seed),
+            ("rule", info(&budget, "cached", "exact")),
+            ("kernel", info(&budget, "uncached", "austerity")),
+        ] {
+            match validate_manifest(&store, &dir, &bad) {
+                Err(CkptError::ManifestMismatch(msg)) => {
+                    assert!(!msg.is_empty(), "{label}: empty message")
+                }
+                other => panic!("{label}: expected ManifestMismatch, got {other:?}"),
+            }
+        }
+        let wall = Budget::Wall(std::time::Duration::from_secs(5));
+        assert!(matches!(
+            validate_manifest(&store, &dir, &info(&wall, "cached", "austerity")),
+            Err(CkptError::ManifestMismatch(_))
+        ));
+
+        // a missing manifest is tolerated (binary files self-validate)
+        fs::remove_file(dir.join("manifest.json")).unwrap();
+        validate_manifest(&store, &dir, &written).unwrap();
         fs::remove_dir_all(&dir).ok();
     }
 }

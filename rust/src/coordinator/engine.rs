@@ -25,17 +25,20 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::coordinator::accept::AcceptanceTest;
 use crate::coordinator::chain::{
-    drive_chain_ckpt, Budget, ChainStats, DriveCfg, Sample, ScopedChainCtx,
+    drive_chain_ckpt, Budget, ChainStats, CkptSink, DriveCfg, Sample, ScopedChainCtx,
 };
 use crate::coordinator::checkpoint::{
-    write_manifest, ChainCheckpoint, CheckpointSpec, Persist, ShardStamp,
+    fs_store, validate_manifest, write_manifest, ChainCheckpoint, CheckpointSpec, ManifestInfo,
+    Persist, ShardStamp, StoreLayer, DEFAULT_RETAIN,
 };
 use crate::coordinator::executor::{Executor, IntraPar};
 use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
+use crate::coordinator::supervise::{spawn_watchdog, LaunchError, RetryPolicy, WatchState};
 use crate::metrics::convergence::{cross_chain, Convergence};
 use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
 use crate::stats::Pcg64;
@@ -71,6 +74,25 @@ pub struct EngineConfig {
     /// into every checkpoint; resume refuses checkpoints carrying a
     /// different stamp.
     pub shard: ShardStamp,
+    /// Restart failed chains from their last good checkpoint (default:
+    /// no retries — a failed chain stays `ChainStatus::Failed`).
+    pub retry: RetryPolicy,
+    /// Flag chains whose step counter has not advanced within this
+    /// window as `ChainStatus::Stalled` (default: no watchdog).
+    pub stall_after: Option<Duration>,
+    /// Healthy-chain quorum in `[0, 1]`: when the fraction of chains
+    /// neither failed nor stalled drops below it, the launch aborts with
+    /// `LaunchError::QuorumLost` (default 0 — degrade, never abort).
+    pub min_chains: f64,
+    /// Kernel/backend label written into the checkpoint manifest and
+    /// validated on resume; empty below the session layer.
+    pub kernel_label: &'static str,
+    /// Acceptance-rule label for the manifest; empty below the session
+    /// layer.
+    pub rule_label: &'static str,
+    /// Byte-level access to the checkpoint directory; the production
+    /// filesystem store unless the fault-injection testkit swaps one in.
+    pub store: Arc<dyn StoreLayer>,
 }
 
 impl EngineConfig {
@@ -86,6 +108,12 @@ impl EngineConfig {
             resume: None,
             executor: None,
             shard: ShardStamp::default(),
+            retry: RetryPolicy::none(),
+            stall_after: None,
+            min_chains: 0.0,
+            kernel_label: "",
+            rule_label: "",
+            store: fs_store(),
         }
     }
 
@@ -109,7 +137,61 @@ impl EngineConfig {
     /// `coordinator::checkpoint`).
     pub fn checkpoint(mut self, every: usize, dir: impl Into<PathBuf>) -> Self {
         assert!(every >= 1, "checkpoint interval must be at least 1 step");
-        self.checkpoint = Some(CheckpointSpec { every, dir: dir.into() });
+        self.checkpoint =
+            Some(CheckpointSpec { every, dir: dir.into(), retain: DEFAULT_RETAIN });
+        self
+    }
+
+    /// Keep the newest `k` checkpoint generations per chain (default 2:
+    /// the newest plus one torn-write fallback). No-op until
+    /// `checkpoint` is also set.
+    pub fn retain_checkpoints(mut self, k: usize) -> Self {
+        assert!(k >= 1, "must retain at least one checkpoint generation");
+        if let Some(spec) = &mut self.checkpoint {
+            spec.retain = k;
+        }
+        self
+    }
+
+    /// Restart failed chains from their last good checkpoint under
+    /// `policy`.
+    pub fn retry(mut self, policy: RetryPolicy) -> Self {
+        self.retry = policy;
+        self
+    }
+
+    /// Run the stall watchdog: chains not advancing within `window` are
+    /// flagged `ChainStatus::Stalled`.
+    pub fn stall_after(mut self, window: Duration) -> Self {
+        assert!(window > Duration::ZERO, "stall window must be positive");
+        self.stall_after = Some(window);
+        self
+    }
+
+    /// Abort the launch (typed `LaunchError::QuorumLost`) when fewer
+    /// than `fraction` of the chains remain healthy. Only meaningful
+    /// together with `stall_after`, which drives the quorum checks.
+    pub fn min_chains(mut self, fraction: f64) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&fraction),
+            "min_chains is a fraction in [0, 1]"
+        );
+        self.min_chains = fraction;
+        self
+    }
+
+    /// Route checkpoint I/O through `store` (the fault-injection hook;
+    /// production launches keep the default filesystem store).
+    pub fn store(mut self, store: Arc<dyn StoreLayer>) -> Self {
+        self.store = store;
+        self
+    }
+
+    /// Manifest labels for the kernel/backend and acceptance rule,
+    /// validated on resume (set by the session layer).
+    pub fn labels(mut self, kernel: &'static str, rule: &'static str) -> Self {
+        self.kernel_label = kernel;
+        self.rule_label = rule;
         self
     }
 
@@ -155,15 +237,32 @@ impl<P, F: FnMut(&P) -> f64 + Send> ChainObserver<P> for F {
 
 /// How one chain of a launch ended. Failures carry the 0-based index of
 /// the step the chain was executing when it died and the panic message.
+/// When several apply, the most severe wins: `Failed` over `Stalled`
+/// over `Recovered` over `Completed`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ChainStatus {
     Completed,
+    /// Completed, but only after recovery: `retries` counts restart
+    /// attempts plus checkpoint generations skipped past corruption.
+    /// The draws are bit-identical to a never-failed run.
+    Recovered { retries: usize },
+    /// Completed (or was aborted by quorum loss), but the watchdog
+    /// caught it frozen at `step` for at least `stall_after`.
+    Stalled { step: usize },
     Failed { step: usize, reason: String },
 }
 
 impl ChainStatus {
     pub fn is_failed(&self) -> bool {
         matches!(self, ChainStatus::Failed { .. })
+    }
+
+    pub fn is_recovered(&self) -> bool {
+        matches!(self, ChainStatus::Recovered { .. })
+    }
+
+    pub fn is_stalled(&self) -> bool {
+        matches!(self, ChainStatus::Stalled { .. })
     }
 }
 
@@ -204,6 +303,16 @@ impl<O> EngineResult<O> {
     /// Number of launched chains that failed.
     pub fn failed_chains(&self) -> usize {
         self.statuses.iter().filter(|s| s.is_failed()).count()
+    }
+
+    /// Number of chains that completed only after supervised recovery.
+    pub fn recovered_chains(&self) -> usize {
+        self.statuses.iter().filter(|s| s.is_recovered()).count()
+    }
+
+    /// Number of chains the watchdog flagged as stalled.
+    pub fn stalled_chains(&self) -> usize {
+        self.statuses.iter().filter(|s| s.is_stalled()).count()
     }
 
     /// Recorded values per chain (for custom diagnostics).
@@ -336,18 +445,29 @@ where
         .collect()
 }
 
-/// Load chain `c`'s checkpoint for a resuming launch; a missing file
-/// means "start fresh", anything unreadable or belonging to a different
-/// run panics (downed by the per-chain isolation, not the launch).
+/// A checkpoint adopted by a resuming (or retrying) chain, plus how
+/// many newer torn/corrupt generations the loader had to skip to reach
+/// it — skips count as recovery events in `ChainStatus::Recovered`.
+struct ResumeLoad {
+    ck: ChainCheckpoint,
+    skipped: usize,
+}
+
+/// Load chain `c`'s newest loadable checkpoint for a resuming launch; no
+/// generation files means "start fresh", a directory where every
+/// generation is corrupt — or a structurally valid checkpoint belonging
+/// to a different run — panics (downed by the per-chain isolation, not
+/// the launch).
 fn load_resume(
+    store: &dyn StoreLayer,
     dir: &Path,
     chain: usize,
     base_seed: u64,
     shard: ShardStamp,
-) -> Option<ChainCheckpoint> {
-    match ChainCheckpoint::load(dir, chain) {
+) -> Option<ResumeLoad> {
+    match ChainCheckpoint::load_latest(store, dir, chain) {
         Ok(None) => None,
-        Ok(Some(ck)) => {
+        Ok(Some((ck, skipped))) => {
             if ck.chain != chain || ck.base_seed != base_seed {
                 panic!(
                     "chain {chain}: checkpoint belongs to a different run \
@@ -362,7 +482,7 @@ fn load_resume(
                     ck.shard, shard
                 );
             }
-            Some(ck)
+            Some(ResumeLoad { ck, skipped })
         }
         Err(e) => panic!("chain {chain}: cannot load checkpoint: {e}"),
     }
@@ -383,8 +503,11 @@ fn load_resume(
 /// parallelism is deterministic by construction, so this keeps the
 /// bit-reproducibility guarantee while filling the pool at K = 1.
 ///
-/// A panicking chain is isolated (`ChainStatus::Failed`); checkpoint
+/// A panicking chain is isolated (`ChainStatus::Failed`) — or, under a
+/// `RetryPolicy`, restarted from its last good checkpoint; checkpoint
 /// and resume options on `cfg` flow through to `drive_chain_ckpt`.
+/// Panics on `LaunchError` (quorum loss, refused resume) — use
+/// [`run_engine_kernel_result`] for the typed error.
 #[doc(hidden)]
 pub fn run_engine_kernel<T, OF, O>(
     kernel: &T,
@@ -392,6 +515,46 @@ pub fn run_engine_kernel<T, OF, O>(
     cfg: &EngineConfig,
     make_observer: OF,
 ) -> EngineResult<O>
+where
+    T: TransitionKernel + Sync,
+    T::State: Sync + Persist,
+    OF: Fn(usize) -> O + Sync,
+    O: ChainObserver<T::State>,
+{
+    run_engine_kernel_result(kernel, init, cfg, make_observer)
+        .unwrap_or_else(|e| panic!("engine launch failed: {e}"))
+}
+
+/// The manifest view of a launch configuration (what resume validation
+/// compares against the directory's `manifest.json`).
+fn manifest_info(cfg: &EngineConfig) -> ManifestInfo<'_> {
+    let (every, retain) =
+        cfg.checkpoint.as_ref().map_or((0, DEFAULT_RETAIN), |s| (s.every, s.retain));
+    ManifestInfo {
+        chains: cfg.chains,
+        base_seed: cfg.base_seed,
+        burn_in: cfg.burn_in,
+        thin: cfg.thin,
+        every,
+        retain,
+        budget: &cfg.budget,
+        shard: cfg.shard,
+        kernel: cfg.kernel_label,
+        rule: cfg.rule_label,
+    }
+}
+
+/// [`run_engine_kernel`] with typed launch errors: a resume whose
+/// manifest describes a different launch is refused up front, and a
+/// `min_chains` quorum loss aborts with `LaunchError::QuorumLost`
+/// instead of returning a silently thin report.
+#[doc(hidden)]
+pub fn run_engine_kernel_result<T, OF, O>(
+    kernel: &T,
+    init: T::State,
+    cfg: &EngineConfig,
+    make_observer: OF,
+) -> Result<EngineResult<O>, LaunchError>
 where
     T: TransitionKernel + Sync,
     T::State: Sync + Persist,
@@ -418,71 +581,154 @@ where
         Some(e) if intra_w > 1 => IntraPar::on(intra_w, e.clone()),
         _ => IntraPar::serial(),
     };
+    // Validate the resume directory's manifest BEFORE (re)writing our
+    // own: when a launch resumes from its own checkpoint dir, writing
+    // first would overwrite the evidence a stale configuration leaves.
+    if let Some(dir) = &cfg.resume {
+        validate_manifest(cfg.store.as_ref(), dir, &manifest_info(cfg))?;
+    }
     if let Some(spec) = &cfg.checkpoint {
         std::fs::create_dir_all(&spec.dir)
             .unwrap_or_else(|e| panic!("cannot create checkpoint dir: {e}"));
-        write_manifest(
-            &spec.dir,
-            cfg.chains,
-            cfg.base_seed,
-            cfg.burn_in,
-            cfg.thin,
-            spec.every,
-            &cfg.budget,
-        )
-        .unwrap_or_else(|e| panic!("cannot write checkpoint manifest: {e}"));
+        write_manifest(cfg.store.as_ref(), &spec.dir, &manifest_info(cfg))
+            .unwrap_or_else(|e| panic!("cannot write checkpoint manifest: {e}"));
     }
     // 0-based index of the step each chain is executing, published before
     // every step — read back for `ChainStatus::Failed` forensics when a
-    // chain dies mid-step.
-    let progress: Vec<AtomicU64> = (0..cfg.chains).map(|_| AtomicU64::new(0)).collect();
+    // chain dies mid-step, and sampled by the stall watchdog.
+    let progress: Arc<Vec<AtomicU64>> =
+        Arc::new((0..cfg.chains).map(|_| AtomicU64::new(0)).collect());
+    let watch = Arc::new(WatchState::new(cfg.chains));
+    let watchdog = cfg
+        .stall_after
+        .map(|window| spawn_watchdog(Arc::clone(&watch), Arc::clone(&progress), window, cfg.min_chains));
     let init = &init;
-    let progress = &progress;
+    let progress_ref = &progress;
+    let watch_ref = &watch;
     let intra = &intra;
     let start = std::time::Instant::now();
     let results = parallel_map_result_on(exec.as_ref(), cfg.chains, cap, &|c| {
-        // pool workers are persistent and may carry another chain's
-        // stale (chain, step) context — scope this chain's over the task
-        let _ctx = ScopedChainCtx::enter((c, usize::MAX));
-        let mut rng = Pcg64::new(cfg.base_seed, STREAM_BASE + c as u64);
-        let mut obs = make_observer(c);
-        let resume = cfg
-            .resume
-            .as_deref()
-            .and_then(|dir| load_resume(dir, c, cfg.base_seed, cfg.shard));
-        let (samples, stats) = drive_chain_ckpt(
-            kernel,
-            init.clone(),
-            DriveCfg {
-                budget: cfg.budget,
-                burn_in: cfg.burn_in,
-                thin: cfg.thin,
-                intra: intra.clone(),
-                checkpoint: cfg.checkpoint.as_ref().map(|spec| (spec, c, cfg.base_seed, cfg.shard)),
-                resume,
-                progress: Some(&progress[c]),
-            },
-            |p| obs.observe(p),
-            &mut rng,
-        );
-        (ChainRun { chain: c, samples, stats }, obs)
+        watch_ref.started[c].store(true, Ordering::Relaxed);
+        let mut attempt = 0usize; // retries burned so far
+        let mut restarts = 0usize; // in-run recovery events
+        loop {
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                // pool workers are persistent and may carry another
+                // chain's stale (chain, step) context — scope this
+                // chain's over the attempt
+                let _ctx = ScopedChainCtx::enter((c, usize::MAX));
+                let mut rng = Pcg64::new(cfg.base_seed, STREAM_BASE + c as u64);
+                let mut obs = make_observer(c);
+                // a retry prefers this launch's own (fresher) checkpoints
+                // over the directory the launch originally resumed from;
+                // with neither, the attempt replays from scratch — still
+                // bit-identical, just more expensive
+                let resume_dir = if attempt > 0 {
+                    cfg.checkpoint.as_ref().map(|s| s.dir.as_path()).or(cfg.resume.as_deref())
+                } else {
+                    cfg.resume.as_deref()
+                };
+                let resume = resume_dir.and_then(|dir| {
+                    load_resume(cfg.store.as_ref(), dir, c, cfg.base_seed, cfg.shard)
+                });
+                let skipped = resume.as_ref().map_or(0, |r| r.skipped);
+                let (samples, stats) = drive_chain_ckpt(
+                    kernel,
+                    init.clone(),
+                    DriveCfg {
+                        budget: cfg.budget,
+                        burn_in: cfg.burn_in,
+                        thin: cfg.thin,
+                        intra: intra.clone(),
+                        checkpoint: cfg.checkpoint.as_ref().map(|spec| CkptSink {
+                            spec,
+                            store: &cfg.store,
+                            chain: c,
+                            base_seed: cfg.base_seed,
+                            shard: cfg.shard,
+                        }),
+                        resume: resume.map(|r| r.ck),
+                        progress: Some(&progress_ref[c]),
+                        abort: Some(&watch_ref.abort),
+                    },
+                    |p| obs.observe(p),
+                    &mut rng,
+                );
+                (ChainRun { chain: c, samples, stats }, obs, skipped)
+            }));
+            match outcome {
+                Ok((run, obs, skipped)) => {
+                    watch_ref.retries[c].store((restarts + skipped) as u64, Ordering::Relaxed);
+                    watch_ref.done[c].store(true, Ordering::Relaxed);
+                    return (run, obs);
+                }
+                Err(payload) => {
+                    if attempt >= cfg.retry.max_retries {
+                        watch_ref.retries[c].store(restarts as u64, Ordering::Relaxed);
+                        watch_ref.failed[c].store(true, Ordering::Relaxed);
+                        // hand the original payload to the task-level
+                        // catch: zero-retry launches report exactly the
+                        // pre-supervision reason
+                        std::panic::resume_unwind(payload);
+                    }
+                    attempt += 1;
+                    restarts += 1;
+                    eprintln!(
+                        "engine: chain {c} failed ({}); retry {attempt} of {} \
+                         from the last good checkpoint",
+                        panic_reason(payload.as_ref()),
+                        cfg.retry.max_retries,
+                    );
+                    let nap = cfg.retry.backoff_before(attempt);
+                    if !nap.is_zero() {
+                        std::thread::sleep(nap);
+                    }
+                }
+            }
+        }
     });
     let wall = start.elapsed();
+    if let Some(handle) = watchdog {
+        watch.stop();
+        handle.join().ok();
+    }
     let mut statuses = Vec::with_capacity(cfg.chains);
     let mut pairs = Vec::with_capacity(cfg.chains);
     for (c, res) in results.into_iter().enumerate() {
+        let retries = watch.retries[c].load(Ordering::Relaxed) as usize;
         match res {
             Ok(pair) => {
-                statuses.push(ChainStatus::Completed);
+                let status = if let Some(step) = watch.first_stall(c) {
+                    ChainStatus::Stalled { step: step as usize }
+                } else if retries > 0 {
+                    ChainStatus::Recovered { retries }
+                } else {
+                    ChainStatus::Completed
+                };
+                statuses.push(status);
                 pairs.push(pair);
             }
             Err(e) => {
                 let step = progress[c].load(Ordering::Relaxed) as usize;
-                statuses.push(ChainStatus::Failed { step, reason: e.reason });
+                let reason = if retries > 0 {
+                    format!("{} (after {retries} retries)", e.reason)
+                } else {
+                    e.reason
+                };
+                statuses.push(ChainStatus::Failed { step, reason });
             }
         }
     }
-    finish(pairs, statuses, wall)
+    if watch.quorum_lost.load(Ordering::Relaxed) {
+        return Err(LaunchError::QuorumLost {
+            healthy: watch.quorum_healthy.load(Ordering::Relaxed),
+            required: watch.quorum_required.load(Ordering::Relaxed),
+            failed: statuses.iter().filter(|s| s.is_failed()).count(),
+            stalled: statuses.iter().filter(|s| s.is_stalled()).count(),
+            chains: cfg.chains,
+        });
+    }
+    Ok(finish(pairs, statuses, wall))
 }
 
 /// Internal: run K MH chains of `model` under `mode` — any
@@ -508,6 +754,28 @@ where
     O: ChainObserver<M::Param>,
 {
     run_engine_kernel(&MhKernel { model, proposal: kernel, mode }, init, cfg, make_observer)
+}
+
+/// [`run_engine`] with typed launch errors (see
+/// [`run_engine_kernel_result`]); the session layer routes through this.
+#[doc(hidden)]
+pub fn run_engine_result<M, K, T, OF, O>(
+    model: &M,
+    kernel: &K,
+    mode: &T,
+    init: M::Param,
+    cfg: &EngineConfig,
+    make_observer: OF,
+) -> Result<EngineResult<O>, LaunchError>
+where
+    M: LlDiffModel + Sync,
+    M::Param: Persist,
+    K: ProposalKernel<M::Param> + Sync,
+    T: AcceptanceTest + Sync,
+    OF: Fn(usize) -> O + Sync,
+    O: ChainObserver<M::Param>,
+{
+    run_engine_kernel_result(&MhKernel { model, proposal: kernel, mode }, init, cfg, make_observer)
 }
 
 /// Internal: `run_engine` on the state-caching fast path — each chain
@@ -539,6 +807,33 @@ where
     )
 }
 
+/// [`run_engine_cached`] with typed launch errors (see
+/// [`run_engine_kernel_result`]); the session layer routes through this.
+#[doc(hidden)]
+pub fn run_engine_cached_result<M, K, T, OF, O>(
+    model: &M,
+    kernel: &K,
+    mode: &T,
+    init: M::Param,
+    cfg: &EngineConfig,
+    make_observer: OF,
+) -> Result<EngineResult<O>, LaunchError>
+where
+    M: CachedLlDiff + Sync,
+    M::Param: Persist,
+    K: ProposalKernel<M::Param> + Sync,
+    T: AcceptanceTest + Sync,
+    OF: Fn(usize) -> O + Sync,
+    O: ChainObserver<M::Param>,
+{
+    run_engine_kernel_result(
+        &CachedMhKernel { model, proposal: kernel, mode },
+        init,
+        cfg,
+        make_observer,
+    )
+}
+
 fn finish<O>(
     pairs: Vec<(ChainRun, O)>,
     statuses: Vec<ChainStatus>,
@@ -550,6 +845,7 @@ fn finish<O>(
         merged.accepted += run.stats.accepted;
         merged.data_used += run.stats.data_used;
         merged.guard_trips += run.stats.guard_trips;
+        merged.ckpt_failures += run.stats.ckpt_failures;
         merged.wall = merged.wall.max(run.stats.wall);
     }
     let series: Vec<Vec<f64>> = pairs

@@ -21,8 +21,14 @@
 //!   wall / datapoint budgets and thinning
 //! * `checkpoint` — versioned binary chain checkpoints (`Persist`,
 //!   `ChainCheckpoint`) behind `Session::checkpoint_every` /
-//!   `resume_from`, written atomically for crash-consistent resume with
+//!   `resume_from`: CRC32-sealed v3 framing, rotated generations per
+//!   chain, manifest validation on resume, all written atomically
+//!   through a swappable `StoreLayer` for crash-consistent resume with
 //!   bit-identical replay
+//! * `supervise` — the self-healing layer over the engine: per-chain
+//!   restart-from-checkpoint under a `RetryPolicy`, the stall watchdog
+//!   over the progress counters, and the `min_chains` quorum policy
+//!   (typed `LaunchError` when the launch cannot continue)
 //! * `guard` — numerical-guard layer (`GuardPolicy`, `Guarded`)
 //!   screening the log-likelihood moments entering any acceptance test
 //!   for NaN/Inf poisoning
@@ -58,6 +64,7 @@ pub mod mh;
 pub mod record;
 pub mod scheduler;
 pub mod session;
+pub mod supervise;
 
 pub use accept::{
     AcceptOutcome, AcceptanceTest, AusterityTest, BarkerTest, ConfidenceConfig, ConfidenceTest,
@@ -67,7 +74,8 @@ pub use adaptive::{run_adaptive_chain, AdaptiveMhKernel, EpsSchedule};
 pub use austerity::{seq_mh_test, seq_mh_test_cached, BoundSeq, SeqTestConfig, SeqTestOutcome};
 pub use chain::{current_chain_step, drive_chain, drive_chain_par, Budget, ChainStats, Sample};
 pub use checkpoint::{
-    BinReader, BinWriter, ChainCheckpoint, CheckpointSpec, CkptError, Persist, ShardStamp,
+    crc32, fs_store, BinReader, BinWriter, ChainCheckpoint, CheckpointSpec, CkptError, FsStore,
+    Persist, ShardStamp, StoreLayer, DEFAULT_RETAIN,
 };
 pub use delta::{PairStats, SeqTestTable};
 pub use design::{average_design, wang_tsiatis_design, worst_case_design, DesignChoice, DesignGrid, WtChoice};
@@ -84,7 +92,10 @@ pub use record::{
     Components, Param, PerChain, RecordDefault, RecordSpec, Replicate, ScalarFn, Thinned, VecMean,
 };
 pub use scheduler::MinibatchScheduler;
-pub use session::{KernelSession, NoProposal, RunReport, Session, ShardInfo, ShardReport};
+pub use session::{
+    KernelSession, NoProposal, RunReport, Session, ShardInfo, ShardReport, ShardedError,
+};
+pub use supervise::{LaunchError, RetryPolicy};
 
 // Legacy launch entry points, demoted to internal shims behind
 // `Session` / `KernelSession`: re-exported (hidden) solely so the

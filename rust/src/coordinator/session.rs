@@ -29,19 +29,23 @@
 //! ```
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::accept::AcceptanceTest;
 use crate::coordinator::chain::{Budget, ChainStats};
-use crate::coordinator::checkpoint::{json_num, json_str, CheckpointSpec, Persist, ShardStamp};
+use crate::coordinator::checkpoint::{
+    fs_store, json_num, json_str, CheckpointSpec, Persist, ShardStamp, StoreLayer, DEFAULT_RETAIN,
+};
 use crate::coordinator::engine::{
-    run_engine_kernel, ChainRun, ChainStatus, EngineConfig, EngineResult,
+    run_engine_kernel_result, ChainRun, ChainStatus, EngineConfig, EngineResult,
 };
 use crate::coordinator::executor::Executor;
 use crate::coordinator::guard::{GuardPolicy, Guarded};
 use crate::coordinator::kernel::TransitionKernel;
 use crate::coordinator::mh::MhMode;
 use crate::coordinator::record::{PerChain, RecordDefault, RecordSpec, Replicate};
+use crate::coordinator::supervise::{LaunchError, RetryPolicy};
 use crate::data::sharded::{even_rows, DataTooLarge};
 use crate::metrics::convergence::Convergence;
 use crate::models::traits::{LlDiffModel, PriorTempered, ProposalKernel, ShardableModel};
@@ -69,10 +73,15 @@ struct LaunchCfg {
     thin: usize,
     checkpoint_every: Option<usize>,
     checkpoint_dir: Option<PathBuf>,
+    retain: usize,
     resume: Option<PathBuf>,
     guard: GuardPolicy,
     executor: Option<Executor>,
     shards: usize,
+    retry: RetryPolicy,
+    stall_after: Option<Duration>,
+    min_chains: f64,
+    store: Option<Arc<dyn StoreLayer>>,
 }
 
 impl LaunchCfg {
@@ -86,10 +95,15 @@ impl LaunchCfg {
             thin: 1,
             checkpoint_every: None,
             checkpoint_dir: None,
+            retain: DEFAULT_RETAIN,
             resume: None,
             guard: GuardPolicy::default(),
             executor: None,
             shards: 1,
+            retry: RetryPolicy::none(),
+            stall_after: None,
+            min_chains: 0.0,
+            store: None,
         }
     }
 
@@ -98,10 +112,23 @@ impl LaunchCfg {
             .budget
             .unwrap_or_else(|| panic!("{who}: call .budget(..) before .run()"));
         let checkpoint = match (self.checkpoint_every, &self.checkpoint_dir) {
-            (Some(every), Some(dir)) => Some(CheckpointSpec { every, dir: dir.clone() }),
+            (Some(every), Some(dir)) => {
+                Some(CheckpointSpec { every, dir: dir.clone(), retain: self.retain })
+            }
             (None, None) => None,
             _ => panic!("{who}: checkpoint_every and checkpoint_dir must be set together"),
         };
+        // paired-flag rule: a resumed launch must keep checkpointing, or
+        // a crash after the resume would silently lose everything the
+        // first run saved past its last generation — and a supervised
+        // retry would have nowhere fresher than the original directory
+        // to restart from. Enforced here, at build time, so the mistake
+        // surfaces before any sampling happens.
+        assert!(
+            self.resume.is_none() || checkpoint.is_some(),
+            "{who}: .resume_from(..) requires .checkpoint_every(..) and .checkpoint_dir(..) \
+             (resume continues a checkpointed run — pair the flags)"
+        );
         EngineConfig {
             chains: self.chains,
             threads: self.threads,
@@ -112,6 +139,13 @@ impl LaunchCfg {
             checkpoint,
             resume: self.resume.clone(),
             executor: self.executor.clone(),
+            shard: ShardStamp::default(),
+            retry: self.retry,
+            stall_after: self.stall_after,
+            min_chains: self.min_chains,
+            kernel_label: "",
+            rule_label: "",
+            store: self.store.clone().unwrap_or_else(fs_store),
         }
     }
 }
@@ -271,9 +305,53 @@ impl<'a, M: LlDiffModel, K, T, R> Session<'a, M, K, T, R> {
     /// Resume chains from the checkpoints in `dir`. Chains without a
     /// checkpoint file start fresh; a resumed chain replays the
     /// uninterrupted same-seed run bit for bit (see
-    /// `coordinator::checkpoint`).
+    /// `coordinator::checkpoint`). Must be paired with
+    /// [`Session::checkpoint_every`] / [`Session::checkpoint_dir`] — a
+    /// resumed launch keeps checkpointing (enforced at build time).
     pub fn resume_from(mut self, dir: impl Into<PathBuf>) -> Self {
         self.cfg.resume = Some(dir.into());
+        self
+    }
+
+    /// Keep the newest `k` checkpoint generations per chain (default 2:
+    /// the newest plus one torn-write fallback).
+    pub fn retain_checkpoints(mut self, k: usize) -> Self {
+        assert!(k >= 1, "must retain at least one checkpoint generation");
+        self.cfg.retain = k;
+        self
+    }
+
+    /// Restart failed chains from their last good checkpoint under
+    /// `policy` (default: no retries). A recovered chain's draws are
+    /// bit-identical to a never-failed run.
+    pub fn retry(mut self, policy: RetryPolicy) -> Self {
+        self.cfg.retry = policy;
+        self
+    }
+
+    /// Flag chains whose step counter has not advanced within `window`
+    /// as [`ChainStatus::Stalled`] (default: no watchdog).
+    pub fn stall_after(mut self, window: Duration) -> Self {
+        assert!(window > Duration::ZERO, "stall window must be positive");
+        self.cfg.stall_after = Some(window);
+        self
+    }
+
+    /// Abort the launch (`LaunchError::QuorumLost` from
+    /// [`Session::try_run`]) when fewer than `fraction` of the chains
+    /// remain healthy; pair with [`Session::stall_after`], which drives
+    /// the checks. Default 0: degrade, never abort.
+    pub fn min_chains(mut self, fraction: f64) -> Self {
+        assert!((0.0..=1.0).contains(&fraction), "min_chains is a fraction in [0, 1]");
+        self.cfg.min_chains = fraction;
+        self
+    }
+
+    /// Route checkpoint I/O through `store` (the fault-injection hook —
+    /// see `testkit::fault::FaultyStore`; production launches keep the
+    /// default filesystem store).
+    pub fn checkpoint_store(mut self, store: Arc<dyn StoreLayer>) -> Self {
+        self.cfg.store = Some(store);
         self
     }
 
@@ -314,6 +392,16 @@ where
     /// is decision-transparent, so guarded and bare launches match bit
     /// for bit).
     pub fn run(self) -> RunReport<R::Observer> {
+        self.try_run().unwrap_or_else(|e| panic!("Session: launch failed: {e}"))
+    }
+
+    /// [`Session::run`] with typed launch errors instead of panics:
+    /// `LaunchError::Resume` when the checkpoint manifest refuses the
+    /// configuration, `LaunchError::QuorumLost` when the healthy-chain
+    /// fraction drops below [`Session::min_chains`]. Per-chain failures
+    /// still degrade (see `RunReport::statuses`) — only launch-level
+    /// faults surface here.
+    pub fn try_run(self) -> Result<RunReport<R::Observer>, LaunchError> {
         assert!(
             self.cfg.shards == 1,
             "Session: .shards({}) was set — launch with .run_sharded()",
@@ -322,10 +410,18 @@ where
         let Session { model, proposal, rule, record, init, cfg } = self;
         let proposal = proposal.expect("Session: call .kernel(..) before .run()");
         let init = init.expect("Session: call .init(..) before .run()");
-        let ecfg = cfg.engine_config("Session");
         let rule = Guarded::new(rule, cfg.guard);
-        let result = model.session_launch(proposal, &rule, init, &ecfg, |c| record.make(c));
-        RunReport::from_engine(result, rule.name(), model.session_backend(), Some(model.n()), &ecfg)
+        let ecfg = cfg
+            .engine_config("Session")
+            .labels(model.session_backend(), rule.name());
+        let result = model.session_launch(proposal, &rule, init, &ecfg, |c| record.make(c))?;
+        Ok(RunReport::from_engine(
+            result,
+            rule.name(),
+            model.session_backend(),
+            Some(model.n()),
+            &ecfg,
+        ))
     }
 }
 
@@ -352,14 +448,16 @@ where
     /// over the whole dataset: the prior tempering is an exact no-op
     /// (`log_correction * 1.0`) and the row range is the full
     /// population, so results are bit-identical to `run()`.
-    pub fn run_sharded(self) -> Result<ShardReport<R::Observer>, DataTooLarge> {
+    pub fn run_sharded(self) -> Result<ShardReport<R::Observer>, ShardedError> {
         let Session { model, proposal, rule, record, init, cfg } = self;
         let proposal = proposal.expect("Session: call .kernel(..) before .run_sharded()");
         let init = init.expect("Session: call .init(..) before .run_sharded()");
         let shards = cfg.shards;
         let tempered = PriorTempered::new(proposal, shards);
         let rule = Guarded::new(rule, cfg.guard);
-        let base = cfg.engine_config("Session");
+        let base = cfg
+            .engine_config("Session")
+            .labels(model.session_backend(), rule.name());
         let mut reports = Vec::with_capacity(shards);
         for s in 0..shards {
             let sub = model.shard_model(s, shards)?;
@@ -375,7 +473,7 @@ where
                 *dir = dir.join(format!("shard-{s}"));
             }
             let result =
-                sub.session_launch(&tempered, &rule, init.clone(), &ecfg, |c| record.make(c));
+                sub.session_launch(&tempered, &rule, init.clone(), &ecfg, |c| record.make(c))?;
             let mut report = RunReport::from_engine(
                 result,
                 rule.name(),
@@ -387,6 +485,45 @@ where
             reports.push(report);
         }
         Ok(ShardReport { shards: reports })
+    }
+}
+
+/// Why a [`Session::run_sharded`] launch could not run: the data split
+/// overflowed the u32 index space, or one shard's launch failed
+/// (manifest refusal, quorum loss).
+#[derive(Debug)]
+pub enum ShardedError {
+    Data(DataTooLarge),
+    Launch(LaunchError),
+}
+
+impl std::fmt::Display for ShardedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardedError::Data(e) => write!(f, "{e}"),
+            ShardedError::Launch(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ShardedError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ShardedError::Data(e) => Some(e),
+            ShardedError::Launch(e) => Some(e),
+        }
+    }
+}
+
+impl From<DataTooLarge> for ShardedError {
+    fn from(e: DataTooLarge) -> Self {
+        ShardedError::Data(e)
+    }
+}
+
+impl From<LaunchError> for ShardedError {
+    fn from(e: LaunchError) -> Self {
+        ShardedError::Launch(e)
     }
 }
 
@@ -421,8 +558,12 @@ impl<O> ShardReport<O> {
     /// Consensus (Gaussian-product) combination of the per-shard
     /// posteriors over the recorded scalar: each shard contributes its
     /// pooled mean/variance weighted by precision (Scott et al. CMC).
-    /// Errors if any shard's draws are degenerate (fewer than two, or a
-    /// zero/non-finite variance).
+    /// Shards degraded below two draws (all chains failed or aborted)
+    /// are left out, so one downed shard never poisons the consensus of
+    /// the survivors — how many were dropped is
+    /// [`ShardReport::degraded_shards`], and `to_json` stamps them.
+    /// Errors if a *contributing* shard's variance is zero/non-finite,
+    /// or no shard contributes at all.
     pub fn combined(&self) -> Result<GaussianMoments, MergeError> {
         let parts: Vec<GaussianMoments> = self
             .shards
@@ -432,6 +573,7 @@ impl<O> ShardReport<O> {
                 let n = r.runs.iter().map(|c| c.samples.len() as u64).sum();
                 GaussianMoments { mean: r.pooled_mean(), var: std * std, n }
             })
+            .filter(|g| g.n >= 2)
             .collect();
         gaussian_product(&parts)
     }
@@ -439,6 +581,15 @@ impl<O> ShardReport<O> {
     /// Chains that failed across all shards.
     pub fn failed_chains(&self) -> usize {
         self.shards.iter().map(|r| r.failed_chains()).sum()
+    }
+
+    /// Shards with fewer than two draws (every chain failed or was
+    /// aborted) — excluded from [`ShardReport::combined`].
+    pub fn degraded_shards(&self) -> usize {
+        self.shards
+            .iter()
+            .filter(|r| r.runs.iter().map(|c| c.samples.len()).sum::<usize>() < 2)
+            .count()
     }
 
     /// Counters summed over every shard's completed chains.
@@ -449,9 +600,42 @@ impl<O> ShardReport<O> {
             m.accepted += r.merged.accepted;
             m.data_used += r.merged.data_used;
             m.guard_trips += r.merged.guard_trips;
+            m.ckpt_failures += r.merged.ckpt_failures;
             m.wall = m.wall.max(r.merged.wall);
         }
         m
+    }
+
+    /// Serialize the whole sharded launch: every shard's full
+    /// [`RunReport::to_json`] object (each stamped with its shard info
+    /// and per-chain statuses, so a downed shard is visible), the
+    /// consensus combination (`null` when it cannot be formed), and the
+    /// launch-wide failure counters.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024 * self.shards.len().max(1));
+        s.push_str("{\"shards\":[");
+        for (i, r) in self.shards.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&r.to_json());
+        }
+        s.push_str("],");
+        match self.combined() {
+            Ok(g) => s.push_str(&format!(
+                "\"consensus\":{{\"mean\":{},\"var\":{},\"n\":{}}},",
+                json_num(g.mean),
+                json_num(g.var),
+                g.n
+            )),
+            Err(_) => s.push_str("\"consensus\":null,"),
+        }
+        s.push_str(&format!(
+            "\"failed_chains\":{},\"degraded_shards\":{}}}",
+            self.failed_chains(),
+            self.degraded_shards()
+        ));
+        s
     }
 }
 
@@ -591,9 +775,47 @@ impl<'a, T: TransitionKernel, R> KernelSession<'a, T, R> {
     }
 
     /// Resume chains from the checkpoints in `dir` (missing files start
-    /// fresh; see `coordinator::checkpoint`).
+    /// fresh; see `coordinator::checkpoint`). Must be paired with
+    /// [`KernelSession::checkpoint_every`] /
+    /// [`KernelSession::checkpoint_dir`] (enforced at build time).
     pub fn resume_from(mut self, dir: impl Into<PathBuf>) -> Self {
         self.cfg.resume = Some(dir.into());
+        self
+    }
+
+    /// Keep the newest `k` checkpoint generations per chain (default 2).
+    pub fn retain_checkpoints(mut self, k: usize) -> Self {
+        assert!(k >= 1, "must retain at least one checkpoint generation");
+        self.cfg.retain = k;
+        self
+    }
+
+    /// Restart failed chains from their last good checkpoint under
+    /// `policy` (default: no retries).
+    pub fn retry(mut self, policy: RetryPolicy) -> Self {
+        self.cfg.retry = policy;
+        self
+    }
+
+    /// Flag chains not advancing within `window` as
+    /// [`ChainStatus::Stalled`] (default: no watchdog).
+    pub fn stall_after(mut self, window: Duration) -> Self {
+        assert!(window > Duration::ZERO, "stall window must be positive");
+        self.cfg.stall_after = Some(window);
+        self
+    }
+
+    /// Abort (`LaunchError::QuorumLost` from [`KernelSession::try_run`])
+    /// when fewer than `fraction` of the chains remain healthy.
+    pub fn min_chains(mut self, fraction: f64) -> Self {
+        assert!((0.0..=1.0).contains(&fraction), "min_chains is a fraction in [0, 1]");
+        self.cfg.min_chains = fraction;
+        self
+    }
+
+    /// Route checkpoint I/O through `store` (the fault-injection hook).
+    pub fn checkpoint_store(mut self, store: Arc<dyn StoreLayer>) -> Self {
+        self.cfg.store = Some(store);
         self
     }
 }
@@ -607,11 +829,17 @@ where
     /// Launch the chains over the generic-kernel engine path and collect
     /// the typed report.
     pub fn run(self) -> RunReport<R::Observer> {
+        self.try_run().unwrap_or_else(|e| panic!("KernelSession: launch failed: {e}"))
+    }
+
+    /// [`KernelSession::run`] with typed launch errors (manifest
+    /// refusal, quorum loss) instead of panics.
+    pub fn try_run(self) -> Result<RunReport<R::Observer>, LaunchError> {
         let KernelSession { kernel, label, record, init, n_data, cfg } = self;
         let init = init.expect("KernelSession: call .init(..) before .run()");
-        let ecfg = cfg.engine_config("KernelSession");
-        let result = run_engine_kernel(kernel, init, &ecfg, |c| record.make(c));
-        RunReport::from_engine(result, label, "kernel", n_data, &ecfg)
+        let ecfg = cfg.engine_config("KernelSession").labels("kernel", label);
+        let result = run_engine_kernel_result(kernel, init, &ecfg, |c| record.make(c))?;
+        Ok(RunReport::from_engine(result, label, "kernel", n_data, &ecfg))
     }
 }
 
@@ -696,6 +924,17 @@ impl<O> RunReport<O> {
     /// Number of launched chains that failed (panic or guard abort).
     pub fn failed_chains(&self) -> usize {
         self.statuses.iter().filter(|s| s.is_failed()).count()
+    }
+
+    /// Number of chains that completed only after supervised recovery
+    /// (restart from checkpoint, or a fallback past a torn generation).
+    pub fn recovered_chains(&self) -> usize {
+        self.statuses.iter().filter(|s| s.is_recovered()).count()
+    }
+
+    /// Number of chains the stall watchdog flagged.
+    pub fn stalled_chains(&self) -> usize {
+        self.statuses.iter().filter(|s| s.is_stalled()).count()
     }
 
     /// Pooled acceptance rate over all chains.
@@ -808,12 +1047,13 @@ impl<O> RunReport<O> {
         ));
         s.push_str(&format!(
             "\"totals\":{{\"steps\":{},\"accepted\":{},\"data_used\":{},\"guard_trips\":{},\
-             \"wall_secs\":{},\"acceptance_rate\":{},\"mean_data_fraction\":{},\
-             \"steps_per_sec\":{},\"data_per_sec\":{}}},",
+             \"ckpt_failures\":{},\"wall_secs\":{},\"acceptance_rate\":{},\
+             \"mean_data_fraction\":{},\"steps_per_sec\":{},\"data_per_sec\":{}}},",
             self.merged.steps,
             self.merged.accepted,
             self.merged.data_used,
             self.merged.guard_trips,
+            self.merged.ckpt_failures,
             json_num(self.wall.as_secs_f64()),
             json_num(self.acceptance_rate()),
             json_num(self.mean_data_fraction()),
@@ -827,16 +1067,37 @@ impl<O> RunReport<O> {
             json_num(self.convergence.pooled_mean),
             self.convergence.n_samples
         ));
-        s.push_str(&format!("\"failed_chains\":{},", self.failed_chains()));
+        s.push_str(&format!(
+            "\"failed_chains\":{},\"recovered_chains\":{},\"stalled_chains\":{},",
+            self.failed_chains(),
+            self.recovered_chains(),
+            self.stalled_chains()
+        ));
         s.push_str("\"chain_status\":[");
         for (i, st) in self.statuses.iter().enumerate() {
             if i > 0 {
                 s.push(',');
             }
+            // completed flavours carry the chain's guard-trip count so
+            // the service layer can alert on numerical-instability
+            // trends without digging into per_chain
+            let trips = self
+                .runs
+                .iter()
+                .find(|r| r.chain == i)
+                .map_or(0, |r| r.stats.guard_trips);
             match st {
-                ChainStatus::Completed => {
-                    s.push_str(&format!("{{\"chain\":{i},\"status\":\"completed\"}}"));
-                }
+                ChainStatus::Completed => s.push_str(&format!(
+                    "{{\"chain\":{i},\"status\":\"completed\",\"guard_trips\":{trips}}}"
+                )),
+                ChainStatus::Recovered { retries } => s.push_str(&format!(
+                    "{{\"chain\":{i},\"status\":\"recovered\",\"retries\":{retries},\
+                     \"guard_trips\":{trips}}}"
+                )),
+                ChainStatus::Stalled { step } => s.push_str(&format!(
+                    "{{\"chain\":{i},\"status\":\"stalled\",\"step\":{step},\
+                     \"guard_trips\":{trips}}}"
+                )),
                 ChainStatus::Failed { step, reason } => s.push_str(&format!(
                     "{{\"chain\":{i},\"status\":\"failed\",\"step\":{step},\"reason\":{}}}",
                     json_str(reason)
@@ -851,12 +1112,13 @@ impl<O> RunReport<O> {
             }
             s.push_str(&format!(
                 "{{\"chain\":{},\"steps\":{},\"accepted\":{},\"data_used\":{},\
-                 \"guard_trips\":{},\"wall_secs\":{},\"draws\":[",
+                 \"guard_trips\":{},\"ckpt_failures\":{},\"wall_secs\":{},\"draws\":[",
                 run.chain,
                 run.stats.steps,
                 run.stats.accepted,
                 run.stats.data_used,
                 run.stats.guard_trips,
+                run.stats.ckpt_failures,
                 json_num(run.stats.wall.as_secs_f64())
             ));
             for (j, smp) in run.samples.iter().enumerate() {

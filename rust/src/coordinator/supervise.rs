@@ -1,0 +1,378 @@
+//! Chain supervision: retry policies, the stall watchdog, and quorum
+//! degradation — the layer that turns per-chain fault *reporting* (PR 6)
+//! into fault *recovery*.
+//!
+//! **State machine.** Each chain moves through
+//! `Running → (Failed | Stalled) → Recovering → (Recovered | Failed)`:
+//!
+//! * a worker panic (scripted fault, `GuardPolicy::Abort`, or a genuine
+//!   bug) is caught at the task boundary; under a [`RetryPolicy`] the
+//!   engine restarts the chain from its newest loadable checkpoint
+//!   generation (or from scratch when the launch is not checkpointing),
+//!   sleeping a linearly-growing backoff between attempts;
+//! * because a checkpoint captures the PCG stream position and the
+//!   scheduler scratch exactly, the replay is **bit-identical**: a chain
+//!   that failed once and recovered produces the same draws as one that
+//!   never failed (`ChainStatus::Recovered` records how many recovery
+//!   events it took);
+//! * a chain whose step counter has not advanced within `stall_after`
+//!   is flagged `Stalled` by the watchdog thread (built on the engine's
+//!   existing per-chain progress counters — zero new dependencies);
+//! * when the healthy fraction drops below the `min_chains` quorum, the
+//!   watchdog raises the abort flag: responsive chains stop at their
+//!   next step boundary and the launch returns
+//!   [`LaunchError::QuorumLost`] instead of a silently thin report.
+//!
+//! **Honesty note.** Rust cannot preempt a thread, so a truly hung step
+//! (a deadlocked scan, an infinite loop in a likelihood) is *detected*
+//! and *reported*, and the rest of the launch degrades or aborts around
+//! it — but the hung worker itself only exits with the process. The
+//! watchdog's job is to make sure nobody waits on it forever.
+//!
+//! Observer caveat: observers are not checkpointed, so a recovered (or
+//! resumed) chain's observer sees only post-recovery samples. The
+//! recorded draws themselves are exact.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::checkpoint::CkptError;
+
+/// How many times a failed chain is restarted from its last good
+/// checkpoint, and how long to wait between attempts (the sleep grows
+/// linearly: `backoff`, `2 * backoff`, ...). The default policy retries
+/// nothing — failures surface as `ChainStatus::Failed`, exactly the
+/// pre-supervision behavior.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Restart attempts per chain after its first failure.
+    pub max_retries: usize,
+    /// Base sleep before each restart (linear backoff; zero = retry
+    /// immediately).
+    pub backoff: Duration,
+}
+
+impl RetryPolicy {
+    /// No retries: a failed chain stays failed (the default).
+    pub fn none() -> Self {
+        RetryPolicy { max_retries: 0, backoff: Duration::ZERO }
+    }
+
+    /// Retry up to `max_retries` times with no backoff.
+    pub fn retries(max_retries: usize) -> Self {
+        RetryPolicy { max_retries, backoff: Duration::ZERO }
+    }
+
+    pub fn new(max_retries: usize, backoff: Duration) -> Self {
+        RetryPolicy { max_retries, backoff }
+    }
+
+    /// Sleep before retry attempt `attempt` (1-based).
+    pub(crate) fn backoff_before(&self, attempt: usize) -> Duration {
+        self.backoff * attempt.min(u32::MAX as usize) as u32
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+/// Why a supervised launch could not produce a report.
+#[derive(Debug)]
+pub enum LaunchError {
+    /// The checkpoint directory refused the resume (manifest describes
+    /// a different launch, or every generation of a chain is corrupt).
+    Resume(CkptError),
+    /// The stall watchdog saw the healthy-chain count drop below the
+    /// `min_chains` quorum and aborted the launch.
+    QuorumLost {
+        /// Chains still advancing when the quorum check failed.
+        healthy: usize,
+        /// `ceil(min_chains * chains)` — the healthy count required.
+        required: usize,
+        /// Chains down with exhausted retries at abort time.
+        failed: usize,
+        /// Chains flagged by the stall watchdog at abort time.
+        stalled: usize,
+        /// Total chains in the launch.
+        chains: usize,
+    },
+}
+
+impl fmt::Display for LaunchError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LaunchError::Resume(e) => write!(f, "resume refused: {e}"),
+            LaunchError::QuorumLost { healthy, required, failed, stalled, chains } => write!(
+                f,
+                "quorum lost: only {healthy} of {chains} chains healthy \
+                 (required {required}; {failed} failed, {stalled} stalled)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for LaunchError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LaunchError::Resume(e) => Some(e),
+            LaunchError::QuorumLost { .. } => None,
+        }
+    }
+}
+
+impl From<CkptError> for LaunchError {
+    fn from(e: CkptError) -> Self {
+        LaunchError::Resume(e)
+    }
+}
+
+/// The healthy-chain count a `min_chains` fraction demands of a launch
+/// (`0` disables the quorum entirely).
+pub(crate) fn required_quorum(min_chains: f64, chains: usize) -> usize {
+    if min_chains <= 0.0 || chains == 0 {
+        0
+    } else {
+        ((min_chains * chains as f64).ceil() as usize).min(chains)
+    }
+}
+
+/// Sentinel for "this chain never stalled" in [`WatchState::stalled_at`].
+pub(crate) const NEVER_STALLED: u64 = u64::MAX;
+
+/// Shared supervision scoreboard: chain tasks publish lifecycle flags,
+/// the watchdog publishes stall verdicts and the abort signal, and the
+/// engine reads everything back when assembling statuses. All fields are
+/// plain atomics — lock-free on both sides.
+#[derive(Debug)]
+pub(crate) struct WatchState {
+    /// Chain task entered (distinguishes "queued behind the worker cap"
+    /// from "started and not advancing" — only started chains can stall).
+    pub started: Vec<AtomicBool>,
+    /// Chain task returned successfully.
+    pub done: Vec<AtomicBool>,
+    /// Chain task failed with retries exhausted.
+    pub failed: Vec<AtomicBool>,
+    /// Watchdog's *current* verdict (clears if the chain advances again).
+    pub stalled_now: Vec<AtomicBool>,
+    /// Step at which the chain was first flagged stalled; sticky
+    /// ([`NEVER_STALLED`] until then) — a stall is reported even if the
+    /// chain later limps to completion.
+    pub stalled_at: Vec<AtomicU64>,
+    /// Recovery events per chain: in-run restarts plus checkpoint
+    /// generations skipped at load time.
+    pub retries: Vec<AtomicU64>,
+    /// Raised by the watchdog on quorum loss; responsive chains stop at
+    /// their next step boundary.
+    pub abort: AtomicBool,
+    /// Set together with `abort` — tells the engine the launch must
+    /// return [`LaunchError::QuorumLost`].
+    pub quorum_lost: AtomicBool,
+    pub quorum_healthy: AtomicUsize,
+    pub quorum_required: AtomicUsize,
+    stop: AtomicBool,
+}
+
+impl WatchState {
+    pub fn new(chains: usize) -> Self {
+        WatchState {
+            started: (0..chains).map(|_| AtomicBool::new(false)).collect(),
+            done: (0..chains).map(|_| AtomicBool::new(false)).collect(),
+            failed: (0..chains).map(|_| AtomicBool::new(false)).collect(),
+            stalled_now: (0..chains).map(|_| AtomicBool::new(false)).collect(),
+            stalled_at: (0..chains).map(|_| AtomicU64::new(NEVER_STALLED)).collect(),
+            retries: (0..chains).map(|_| AtomicU64::new(0)).collect(),
+            abort: AtomicBool::new(false),
+            quorum_lost: AtomicBool::new(false),
+            quorum_healthy: AtomicUsize::new(0),
+            quorum_required: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    /// Tell the watchdog to exit at its next tick.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// The step at which chain `c` first stalled, if it ever did.
+    pub fn first_stall(&self, c: usize) -> Option<u64> {
+        match self.stalled_at[c].load(Ordering::Relaxed) {
+            NEVER_STALLED => None,
+            step => Some(step),
+        }
+    }
+}
+
+/// Start the stall watchdog: samples the per-chain progress counters at
+/// a fraction of `stall_after`, flags chains that stop advancing, and
+/// aborts the launch when the healthy count drops below the quorum.
+pub(crate) fn spawn_watchdog(
+    watch: Arc<WatchState>,
+    progress: Arc<Vec<AtomicU64>>,
+    stall_after: Duration,
+    min_chains: f64,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("austerity-watchdog".into())
+        .spawn(move || {
+            let chains = progress.len();
+            let tick =
+                (stall_after / 8).clamp(Duration::from_millis(1), Duration::from_millis(200));
+            let required = required_quorum(min_chains, chains);
+            let mut last_step = vec![NEVER_STALLED; chains];
+            let mut last_change = vec![Instant::now(); chains];
+            while !watch.stopped() {
+                std::thread::sleep(tick);
+                if watch.stopped() {
+                    return;
+                }
+                let now = Instant::now();
+                for c in 0..chains {
+                    let live = watch.started[c].load(Ordering::Relaxed)
+                        && !watch.done[c].load(Ordering::Relaxed)
+                        && !watch.failed[c].load(Ordering::Relaxed);
+                    if !live {
+                        // queued, finished, or failed chains are not
+                        // "stalled"; keep their clocks fresh so a chain
+                        // that starts (or retries) late gets a full
+                        // stall_after window
+                        watch.stalled_now[c].store(false, Ordering::Relaxed);
+                        last_change[c] = now;
+                        continue;
+                    }
+                    let step = progress[c].load(Ordering::Relaxed);
+                    if step != last_step[c] {
+                        last_step[c] = step;
+                        last_change[c] = now;
+                        watch.stalled_now[c].store(false, Ordering::Relaxed);
+                    } else if now.duration_since(last_change[c]) >= stall_after {
+                        if !watch.stalled_now[c].swap(true, Ordering::Relaxed) {
+                            // sticky first-stall step for forensics
+                            let _ = watch.stalled_at[c].compare_exchange(
+                                NEVER_STALLED,
+                                step,
+                                Ordering::Relaxed,
+                                Ordering::Relaxed,
+                            );
+                        }
+                    }
+                }
+                if required > 0 {
+                    let mut healthy = 0usize;
+                    let mut failed = 0usize;
+                    for c in 0..chains {
+                        if watch.failed[c].load(Ordering::Relaxed) {
+                            failed += 1;
+                        } else if !watch.stalled_now[c].load(Ordering::Relaxed) {
+                            healthy += 1;
+                        }
+                    }
+                    if healthy < required {
+                        watch.quorum_healthy.store(healthy, Ordering::Relaxed);
+                        watch.quorum_required.store(required, Ordering::Relaxed);
+                        watch.quorum_lost.store(true, Ordering::Relaxed);
+                        watch.abort.store(true, Ordering::Relaxed);
+                        return;
+                    }
+                }
+            }
+        })
+        .expect("spawn the stall-watchdog thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quorum_arithmetic() {
+        assert_eq!(required_quorum(0.0, 8), 0);
+        assert_eq!(required_quorum(-1.0, 8), 0);
+        assert_eq!(required_quorum(0.5, 8), 4);
+        assert_eq!(required_quorum(0.5, 7), 4); // ceil
+        assert_eq!(required_quorum(1.0, 3), 3);
+        assert_eq!(required_quorum(2.0, 3), 3); // clamped
+        assert_eq!(required_quorum(0.01, 4), 1);
+        assert_eq!(required_quorum(1.0, 0), 0);
+    }
+
+    #[test]
+    fn retry_backoff_grows_linearly() {
+        let p = RetryPolicy::new(3, Duration::from_millis(10));
+        assert_eq!(p.backoff_before(1), Duration::from_millis(10));
+        assert_eq!(p.backoff_before(3), Duration::from_millis(30));
+        assert_eq!(RetryPolicy::retries(2).backoff_before(2), Duration::ZERO);
+        assert_eq!(RetryPolicy::default(), RetryPolicy::none());
+    }
+
+    #[test]
+    fn watchdog_flags_a_frozen_chain_and_clears_a_moving_one() {
+        let watch = Arc::new(WatchState::new(2));
+        let progress: Arc<Vec<AtomicU64>> = Arc::new((0..2).map(|_| AtomicU64::new(0)).collect());
+        for c in 0..2 {
+            watch.started[c].store(true, Ordering::Relaxed);
+        }
+        let handle = spawn_watchdog(
+            Arc::clone(&watch),
+            Arc::clone(&progress),
+            Duration::from_millis(40),
+            0.0,
+        );
+        // chain 0 advances every few ms; chain 1 freezes at step 5
+        progress[1].store(5, Ordering::Relaxed);
+        for i in 0..40u64 {
+            progress[0].store(i, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!watch.stalled_now[0].load(Ordering::Relaxed), "moving chain flagged");
+        assert!(watch.stalled_now[1].load(Ordering::Relaxed), "frozen chain not flagged");
+        assert_eq!(watch.first_stall(1), Some(5));
+        // the frozen chain wakes up: the live verdict clears, the
+        // sticky first-stall record survives
+        for i in 6..30u64 {
+            progress[1].store(i, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!watch.stalled_now[1].load(Ordering::Relaxed), "recovered chain still flagged");
+        assert_eq!(watch.first_stall(1), Some(5));
+        assert!(!watch.quorum_lost.load(Ordering::Relaxed), "no quorum configured");
+        watch.stop();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn watchdog_aborts_on_quorum_loss() {
+        let watch = Arc::new(WatchState::new(2));
+        let progress: Arc<Vec<AtomicU64>> = Arc::new((0..2).map(|_| AtomicU64::new(0)).collect());
+        for c in 0..2 {
+            watch.started[c].store(true, Ordering::Relaxed);
+        }
+        // both chains frozen, quorum demands both healthy
+        let handle = spawn_watchdog(
+            Arc::clone(&watch),
+            Arc::clone(&progress),
+            Duration::from_millis(20),
+            1.0,
+        );
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !watch.quorum_lost.load(Ordering::Relaxed) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(watch.quorum_lost.load(Ordering::Relaxed), "quorum loss not detected");
+        assert!(watch.abort.load(Ordering::Relaxed), "abort flag not raised");
+        assert!(watch.quorum_healthy.load(Ordering::Relaxed) < 2);
+        assert_eq!(watch.quorum_required.load(Ordering::Relaxed), 2);
+        handle.join().unwrap(); // the watchdog exits by itself on abort
+        watch.stop();
+    }
+}

@@ -9,13 +9,19 @@
 //!                                          the Session front-end, with
 //!                                          optional --checkpoint-dir /
 //!                                          --checkpoint-every / --resume
-//!                                          crash recovery
+//!                                          crash recovery, supervised
+//!                                          retry (--retries,
+//!                                          --retry-backoff-ms, --retain)
+//!                                          and the stall watchdog
+//!                                          (--stall-after-secs,
+//!                                          --min-chains)
 
 use std::path::PathBuf;
 use std::process::ExitCode;
+use std::time::Duration;
 
 use austerity::coordinator::design::{worst_case_design, DesignGrid};
-use austerity::coordinator::{Budget, MhMode, Session};
+use austerity::coordinator::{Budget, MhMode, RetryPolicy, Session};
 use austerity::exp::{run_figure, Scale, ALL_FIGURES};
 use austerity::models::traits::ShardableModel;
 use austerity::models::LlDiffModel;
@@ -40,6 +46,8 @@ fn main() -> ExitCode {
                         [--eps E] [--sigma S] [--delta D] [--steps K] [--n N]\n\
                         [--chains C] [--seed S] [--shards S] [--json] [--pjrt]\n\
                         [--checkpoint-dir D --checkpoint-every K] [--resume D]\n\
+                        [--retain K] [--retries R] [--retry-backoff-ms MS]\n\
+                        [--stall-after-secs S] [--min-chains F]\n\
                  \n\
                  figures: {}",
                 ALL_FIGURES.join(" ")
@@ -126,11 +134,23 @@ fn design(args: &[String]) -> ExitCode {
     }
 }
 
-/// Checkpoint/resume flags of the `sample` subcommand.
+/// Checkpoint/resume and supervision flags of the `sample` subcommand.
 struct CkptCli {
     every: Option<usize>,
     dir: Option<PathBuf>,
     resume: Option<PathBuf>,
+    retain: Option<usize>,
+    retries: usize,
+    backoff_ms: u64,
+    stall_after_secs: Option<f64>,
+    min_chains: f64,
+}
+
+impl CkptCli {
+    /// Apply the flags to either session flavour's shared builder calls.
+    fn retry_policy(&self) -> RetryPolicy {
+        RetryPolicy::new(self.retries, Duration::from_millis(self.backoff_ms))
+    }
 }
 
 /// Run a sample launch on the `Session` front-end and print either the
@@ -146,7 +166,8 @@ fn run_sample<M>(
     seed: u64,
     json: bool,
     ckpt: &CkptCli,
-) where
+) -> ExitCode
+where
     M: LlDiffModel<Param = Vec<f64>> + Sync,
 {
     let mut session = Session::new(model)
@@ -155,6 +176,8 @@ fn run_sample<M>(
         .chains(chains)
         .seed(seed)
         .budget(Budget::Steps(steps))
+        .retry(ckpt.retry_policy())
+        .min_chains(ckpt.min_chains)
         .init(init);
     if let Some(every) = ckpt.every {
         session = session.checkpoint_every(every);
@@ -165,7 +188,19 @@ fn run_sample<M>(
     if let Some(dir) = &ckpt.resume {
         session = session.resume_from(dir.clone());
     }
-    let report = session.run();
+    if let Some(k) = ckpt.retain {
+        session = session.retain_checkpoints(k);
+    }
+    if let Some(secs) = ckpt.stall_after_secs {
+        session = session.stall_after(Duration::from_secs_f64(secs));
+    }
+    let report = match session.try_run() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("sample: launch failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
     if json {
         println!("{}", report.to_json());
     } else {
@@ -181,7 +216,19 @@ fn run_sample<M>(
             report.data_per_sec(),
             report.rhat(),
         );
+        if report.recovered_chains() > 0 || report.stalled_chains() > 0 {
+            println!(
+                "supervision: {} chain(s) recovered, {} stalled",
+                report.recovered_chains(),
+                report.stalled_chains()
+            );
+        }
     }
+    if report.failed_chains() > 0 {
+        eprintln!("{} chain(s) failed", report.failed_chains());
+        return ExitCode::FAILURE;
+    }
+    ExitCode::SUCCESS
 }
 
 /// Run an embarrassingly-parallel (sharded) launch and print the
@@ -209,6 +256,8 @@ where
         .seed(seed)
         .budget(Budget::Steps(steps))
         .shards(shards)
+        .retry(ckpt.retry_policy())
+        .min_chains(ckpt.min_chains)
         .init(init);
     if let Some(every) = ckpt.every {
         session = session.checkpoint_every(every);
@@ -219,31 +268,21 @@ where
     if let Some(dir) = &ckpt.resume {
         session = session.resume_from(dir.clone());
     }
+    if let Some(k) = ckpt.retain {
+        session = session.retain_checkpoints(k);
+    }
+    if let Some(secs) = ckpt.stall_after_secs {
+        session = session.stall_after(Duration::from_secs_f64(secs));
+    }
     let report = match session.run_sharded() {
         Ok(r) => r,
         Err(e) => {
-            eprintln!("sample: cannot shard the launch: {e}");
+            eprintln!("sample: sharded launch failed: {e}");
             return ExitCode::FAILURE;
         }
     };
     if json {
-        let mut s = String::from("{\"shards\":[");
-        for (i, r) in report.shards.iter().enumerate() {
-            if i > 0 {
-                s.push(',');
-            }
-            s.push_str(&r.to_json());
-        }
-        s.push_str("],\"consensus\":");
-        match report.combined() {
-            Ok(g) => s.push_str(&format!(
-                "{{\"mean\":{},\"var\":{},\"draws\":{}}}",
-                g.mean, g.var, g.n
-            )),
-            Err(_) => s.push_str("null"),
-        }
-        s.push('}');
-        println!("{s}");
+        println!("{}", report.to_json());
     } else {
         for r in &report.shards {
             let info = r.shard.expect("sharded reports carry their stamp");
@@ -304,6 +343,13 @@ fn sample(args: &[String]) -> ExitCode {
         every: flag_value(args, "--checkpoint-every").and_then(|s| s.parse().ok()),
         dir: flag_value(args, "--checkpoint-dir").map(PathBuf::from),
         resume: flag_value(args, "--resume").map(PathBuf::from),
+        retain: flag_value(args, "--retain").and_then(|s| s.parse().ok()),
+        retries: flag_value(args, "--retries").and_then(|s| s.parse().ok()).unwrap_or(0),
+        backoff_ms: flag_value(args, "--retry-backoff-ms")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0),
+        stall_after_secs: flag_value(args, "--stall-after-secs").and_then(|s| s.parse().ok()),
+        min_chains: flag_value(args, "--min-chains").and_then(|s| s.parse().ok()).unwrap_or(0.0),
     };
     if ckpt.every.is_some() != ckpt.dir.is_some() {
         eprintln!("--checkpoint-every and --checkpoint-dir must be given together");
@@ -311,6 +357,23 @@ fn sample(args: &[String]) -> ExitCode {
     }
     if ckpt.every == Some(0) {
         eprintln!("--checkpoint-every must be >= 1");
+        return ExitCode::from(2);
+    }
+    if ckpt.resume.is_some() && ckpt.dir.is_none() {
+        eprintln!(
+            "--resume requires --checkpoint-dir and --checkpoint-every \
+             (resume continues a checkpointed run -- pair the flags)"
+        );
+        return ExitCode::from(2);
+    }
+    if let Some(k) = ckpt.retain {
+        if k == 0 {
+            eprintln!("--retain must be >= 1");
+            return ExitCode::from(2);
+        }
+    }
+    if !(0.0..=1.0).contains(&ckpt.min_chains) {
+        eprintln!("--min-chains must be in [0, 1]: got {}", ckpt.min_chains);
         return ExitCode::from(2);
     }
 
@@ -360,7 +423,7 @@ fn sample(args: &[String]) -> ExitCode {
         if !json {
             println!("backend: pjrt (AOT Pallas kernel), N={n}, rule={rule}");
         }
-        run_sample(&pjrt, &kernel, &mode, init, steps, chains, seed, json, &ckpt);
+        return run_sample(&pjrt, &kernel, &mode, init, steps, chains, seed, json, &ckpt);
     } else if shards > 1 {
         if !json {
             println!("backend: native, N={n}, rule={rule}, shards={shards}");
@@ -372,7 +435,6 @@ fn sample(args: &[String]) -> ExitCode {
         if !json {
             println!("backend: native, N={n}, rule={rule}");
         }
-        run_sample(&model, &kernel, &mode, init, steps, chains, seed, json, &ckpt);
+        return run_sample(&model, &kernel, &mode, init, steps, chains, seed, json, &ckpt);
     }
-    ExitCode::SUCCESS
 }

@@ -384,7 +384,10 @@ pub trait LlDiffModel {
         init: Self::Param,
         cfg: &crate::coordinator::engine::EngineConfig,
         make_observer: OF,
-    ) -> crate::coordinator::engine::EngineResult<O>
+    ) -> Result<
+        crate::coordinator::engine::EngineResult<O>,
+        crate::coordinator::supervise::LaunchError,
+    >
     where
         Self: Sized + Sync,
         Self::Param: crate::coordinator::checkpoint::Persist,
@@ -393,7 +396,14 @@ pub trait LlDiffModel {
         OF: Fn(usize) -> O + Sync,
         O: crate::coordinator::engine::ChainObserver<Self::Param>,
     {
-        crate::coordinator::engine::run_engine(self, proposal, rule, init, cfg, make_observer)
+        crate::coordinator::engine::run_engine_result(
+            self,
+            proposal,
+            rule,
+            init,
+            cfg,
+            make_observer,
+        )
     }
 
     /// Which engine path `session_launch` takes: `"uncached"` unless the
@@ -479,7 +489,10 @@ macro_rules! cached_session_dispatch {
             init: Self::Param,
             cfg: &crate::coordinator::engine::EngineConfig,
             make_observer: OF,
-        ) -> crate::coordinator::engine::EngineResult<O>
+        ) -> Result<
+            crate::coordinator::engine::EngineResult<O>,
+            crate::coordinator::supervise::LaunchError,
+        >
         where
             Self: Sized + Sync,
             Self::Param: crate::coordinator::checkpoint::Persist,
@@ -488,7 +501,7 @@ macro_rules! cached_session_dispatch {
             OF: Fn(usize) -> O + Sync,
             O: crate::coordinator::engine::ChainObserver<Self::Param>,
         {
-            crate::coordinator::engine::run_engine_cached(
+            crate::coordinator::engine::run_engine_cached_result(
                 self,
                 proposal,
                 rule,

@@ -10,8 +10,11 @@
 //!   deterministic seeded thresholds;
 //! * `models` — analytically solvable targets (the conjugate Gaussian
 //!   mean model) to validate acceptance rules end to end;
-//! * `fault` — scripted fault injection (`FaultyModel`) exercising the
-//!   engine's panic isolation and the numerical-guard layer.
+//! * `fault` — scripted fault injection: compute faults (`FaultyModel`)
+//!   exercising panic isolation, supervised retry and the
+//!   numerical-guard layer, and checkpoint I/O faults (`FaultyStore`)
+//!   — torn writes, bit flips, short reads, ENOSPC — exercising the
+//!   CRC-sealed generation fallback.
 //!
 //! ```ignore
 //! forall(128, |rng| {
@@ -245,12 +248,39 @@ pub mod models {
             (rc * rc - rp * rp) / (2.0 * self.noise_var)
         }
     }
+
+    impl crate::models::traits::ShardableModel for ConjugateGaussian {
+        /// Shard `shard` keeps its even row range of the observations
+        /// with the hyper-parameters unchanged (the 1/shards prior
+        /// tempering lives in the proposal's `log_correction`, applied
+        /// by `Session::run_sharded`).
+        fn shard_model(
+            &self,
+            shard: usize,
+            shards: usize,
+        ) -> Result<Self, crate::data::DataTooLarge> {
+            let (start, end) = crate::data::sharded::even_rows(self.xs.len(), shard, shards);
+            Ok(ConjugateGaussian {
+                xs: self.xs[start..end].to_vec(),
+                noise_var: self.noise_var,
+                prior_mean: self.prior_mean,
+                prior_var: self.prior_var,
+            })
+        }
+    }
 }
 
-/// Scripted fault injection for the fault-tolerance tests.
+/// Scripted fault injection for the fault-tolerance tests: compute
+/// faults ([`fault::FaultyModel`]) and checkpoint I/O faults
+/// ([`fault::FaultyStore`]), both deterministic by construction.
 pub mod fault {
+    use std::path::Path;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
     use crate::coordinator::chain::current_chain_step;
-    use crate::models::traits::LlDiffModel;
+    use crate::coordinator::checkpoint::{fs_store, StoreLayer};
+    use crate::models::traits::{LlDiffModel, ShardableModel};
 
     /// What a scripted fault point injects when reached.
     #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -263,31 +293,104 @@ pub mod fault {
         Inf,
     }
 
+    /// One scripted compute-fault point.
+    #[derive(Debug)]
+    struct Fault {
+        /// Restrict to this shard's model (`None` = any shard).
+        shard: Option<usize>,
+        chain: usize,
+        step: usize,
+        kind: FaultKind,
+        /// Fire only on the first hit — the supervised-retry scenario: a
+        /// chain crashes once, then its restarted attempt replays clean.
+        once: bool,
+        fired: AtomicBool,
+    }
+
     /// Wraps any `LlDiffModel` and fires scripted faults when the
     /// executing chain reaches a scheduled step, identified through the
     /// drive loop's thread-local chain/step context
     /// (`coordinator::chain::current_chain_step`). Every unscheduled
     /// evaluation delegates to the inner model untouched, so a
     /// fault-free `FaultyModel` run is bit-identical to the bare model.
+    ///
+    /// Faults scheduled with [`FaultyModel::fault`] fire on every hit
+    /// (a chain that retries into the same step crashes again);
+    /// [`FaultyModel::fault_once`] arms a one-shot fault so a supervised
+    /// retry replays past it. Fault state is shared across
+    /// [`ShardableModel::shard_model`] clones, and
+    /// [`FaultyModel::fault_on`] targets a single shard.
     pub struct FaultyModel<M> {
         inner: M,
-        faults: Vec<(usize, usize, FaultKind)>,
+        shard: Option<usize>,
+        faults: Vec<Arc<Fault>>,
     }
 
     impl<M> FaultyModel<M> {
         pub fn new(inner: M) -> Self {
-            FaultyModel { inner, faults: Vec::new() }
+            FaultyModel { inner, shard: None, faults: Vec::new() }
         }
 
-        /// Schedule `kind` to fire whenever `chain` executes step `step`.
+        /// Schedule `kind` to fire whenever `chain` executes step `step`
+        /// (every attempt — a retried chain crashes again).
         pub fn fault(mut self, chain: usize, step: usize, kind: FaultKind) -> Self {
-            self.faults.push((chain, step, kind));
+            self.faults.push(Arc::new(Fault {
+                shard: None,
+                chain,
+                step,
+                kind,
+                once: false,
+                fired: AtomicBool::new(false),
+            }));
+            self
+        }
+
+        /// Schedule `kind` to fire the *first* time `chain` executes
+        /// step `step`; subsequent hits (a supervised retry replaying
+        /// from checkpoint) pass through clean.
+        pub fn fault_once(mut self, chain: usize, step: usize, kind: FaultKind) -> Self {
+            self.faults.push(Arc::new(Fault {
+                shard: None,
+                chain,
+                step,
+                kind,
+                once: true,
+                fired: AtomicBool::new(false),
+            }));
+            self
+        }
+
+        /// Schedule `kind` on shard `shard`'s model only (for
+        /// `run_sharded` launches; fires every attempt).
+        pub fn fault_on(mut self, shard: usize, chain: usize, step: usize, kind: FaultKind) -> Self {
+            self.faults.push(Arc::new(Fault {
+                shard: Some(shard),
+                chain,
+                step,
+                kind,
+                once: false,
+                fired: AtomicBool::new(false),
+            }));
             self
         }
 
         fn active(&self) -> Option<FaultKind> {
             let (chain, step) = current_chain_step();
-            self.faults.iter().find(|&&(c, s, _)| c == chain && s == step).map(|&(.., k)| k)
+            for f in &self.faults {
+                if f.chain != chain || f.step != step {
+                    continue;
+                }
+                if let Some(s) = f.shard {
+                    if self.shard != Some(s) {
+                        continue;
+                    }
+                }
+                if f.once && f.fired.swap(true, Ordering::Relaxed) {
+                    continue;
+                }
+                return Some(f.kind);
+            }
+            None
         }
 
         fn poison(kind: FaultKind) -> (f64, f64) {
@@ -331,6 +434,151 @@ pub mod fault {
                 Some(kind) => Self::poison(kind),
                 None => self.inner.lldiff_range_moments(start, end, cur, prop),
             }
+        }
+    }
+
+    impl<M: ShardableModel> ShardableModel for FaultyModel<M> {
+        fn shard_model(
+            &self,
+            shard: usize,
+            shards: usize,
+        ) -> Result<Self, crate::data::DataTooLarge> {
+            Ok(FaultyModel {
+                inner: self.inner.shard_model(shard, shards)?,
+                shard: Some(shard),
+                // shared Arc state: a one-shot fault fires once across
+                // the whole sharded launch, not once per shard clone
+                faults: self.faults.clone(),
+            })
+        }
+    }
+
+    /// What a scripted [`FaultyStore`] point does to the checkpoint I/O
+    /// it intercepts.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum StoreFault {
+        /// Torn write: persist only the first `k` bytes, report success
+        /// (the crash-after-partial-flush a rename cannot save you from
+        /// when the tear happens before the rename source is complete).
+        TruncateAt(usize),
+        /// Fail the write with an out-of-space I/O error.
+        Enospc,
+        /// Flip one bit of byte `offset` on read (silent media
+        /// corruption; the CRC trailer must catch it).
+        FlipBit(usize),
+        /// Return only the first `k` bytes on read (short read).
+        ShortRead(usize),
+    }
+
+    impl StoreFault {
+        fn applies_to_write(self) -> bool {
+            matches!(self, StoreFault::TruncateAt(_) | StoreFault::Enospc)
+        }
+    }
+
+    /// One scripted I/O-fault point, keyed to an exact
+    /// `(chain, generation)` checkpoint file. One-shot: it fires on the
+    /// first matching operation and then disarms, so a rotated retry or
+    /// a fallback load observes the fault exactly once.
+    #[derive(Debug)]
+    struct StoreScript {
+        chain: usize,
+        generation: u64,
+        fault: StoreFault,
+        fired: AtomicBool,
+    }
+
+    /// A [`StoreLayer`] wrapper scripting checkpoint I/O faults at exact
+    /// `(chain, generation)` points — the disk-side mirror of
+    /// [`FaultyModel`]'s compute faults. Paths that are not generation
+    /// files (the manifest, foreign files) and unscheduled operations
+    /// delegate to the wrapped store untouched. Install it with
+    /// `Session::checkpoint_store(store.into_arc())`.
+    #[derive(Debug)]
+    pub struct FaultyStore {
+        inner: Arc<dyn StoreLayer>,
+        scripts: Vec<StoreScript>,
+    }
+
+    impl Default for FaultyStore {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl FaultyStore {
+        /// Script over the production filesystem store.
+        pub fn new() -> Self {
+            FaultyStore { inner: fs_store(), scripts: Vec::new() }
+        }
+
+        /// Schedule `fault` on chain `chain`'s generation-`generation`
+        /// checkpoint file (first matching operation only).
+        pub fn fault(mut self, chain: usize, generation: u64, fault: StoreFault) -> Self {
+            self.scripts.push(StoreScript {
+                chain,
+                generation,
+                fault,
+                fired: AtomicBool::new(false),
+            });
+            self
+        }
+
+        /// Finish scripting: the `Arc<dyn StoreLayer>` the session/engine
+        /// builders take.
+        pub fn into_arc(self) -> Arc<dyn StoreLayer> {
+            Arc::new(self)
+        }
+
+        /// The armed script matching `path` for a write (`write`) or
+        /// read operation, consuming its one shot.
+        fn take(&self, path: &Path, write: bool) -> Option<StoreFault> {
+            let name = path.file_name()?.to_str()?;
+            let (chain, generation) =
+                crate::coordinator::checkpoint::parse_gen_name(name)?;
+            for s in &self.scripts {
+                if s.chain == chain
+                    && s.generation == generation
+                    && s.fault.applies_to_write() == write
+                    && !s.fired.swap(true, Ordering::Relaxed)
+                {
+                    return Some(s.fault);
+                }
+            }
+            None
+        }
+    }
+
+    impl StoreLayer for FaultyStore {
+        fn read(&self, path: &Path) -> std::io::Result<Vec<u8>> {
+            let mut bytes = self.inner.read(path)?;
+            match self.take(path, false) {
+                Some(StoreFault::FlipBit(offset)) => {
+                    if let Some(b) = bytes.get_mut(offset) {
+                        *b ^= 0x01;
+                    }
+                }
+                Some(StoreFault::ShortRead(k)) => bytes.truncate(k),
+                _ => {}
+            }
+            Ok(bytes)
+        }
+
+        fn write_atomic(&self, path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+            match self.take(path, true) {
+                Some(StoreFault::TruncateAt(k)) => {
+                    self.inner.write_atomic(path, &bytes[..k.min(bytes.len())])
+                }
+                Some(StoreFault::Enospc) => Err(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "injected: no space left on device (ENOSPC)",
+                )),
+                _ => self.inner.write_atomic(path, bytes),
+            }
+        }
+
+        fn remove(&self, path: &Path) -> std::io::Result<()> {
+            self.inner.remove(path)
         }
     }
 }

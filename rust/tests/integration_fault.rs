@@ -96,7 +96,11 @@ fn resume_is_bit_identical_for_uncached_mh_rules() {
         // interrupted run: checkpoints land at steps 15, 30, 45, 60
         let partial = launch(60).checkpoint_every(15).checkpoint_dir(dir.clone()).run();
         assert_eq!(partial.merged.steps, 2 * 60);
-        let resumed = launch(120).resume_from(dir.clone()).run();
+        let resumed = launch(120)
+            .checkpoint_every(15)
+            .checkpoint_dir(dir.clone())
+            .resume_from(dir.clone())
+            .run();
         assert_runs_identical(&resumed.runs, &full.runs, &format!("uncached {mode:?}"));
         assert_eq!(resumed.merged.data_used, full.merged.data_used, "{mode:?}");
         let _ = std::fs::remove_dir_all(&dir);
@@ -127,7 +131,11 @@ fn resume_is_bit_identical_for_cached_mh_rules() {
         assert_eq!(partial.merged.steps, 2 * 60);
         // the likelihood cache is rebuilt from the restored state on
         // resume, so the cached path must still replay bit for bit
-        let resumed = launch(120).resume_from(dir.clone()).run();
+        let resumed = launch(120)
+            .checkpoint_every(20)
+            .checkpoint_dir(dir.clone())
+            .resume_from(dir.clone())
+            .run();
         assert_runs_identical(&resumed.runs, &full.runs, &format!("cached {mode:?}"));
         assert_eq!(resumed.merged.data_used, full.merged.data_used, "{mode:?}");
         let _ = std::fs::remove_dir_all(&dir);
@@ -155,7 +163,11 @@ fn resume_is_bit_identical_for_sgld_kernel_sessions() {
     let full = launch(300).run();
     let partial = launch(150).checkpoint_every(50).checkpoint_dir(dir.clone()).run();
     assert_eq!(partial.merged.steps, 2 * 150);
-    let resumed = launch(300).resume_from(dir.clone()).run();
+    let resumed = launch(300)
+        .checkpoint_every(50)
+        .checkpoint_dir(dir.clone())
+        .resume_from(dir.clone())
+        .run();
     assert_runs_identical(&resumed.runs, &full.runs, "sgld");
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -183,7 +195,11 @@ fn resume_is_bit_identical_for_gibbs_kernel_sessions() {
         let full = launch(40).run();
         let partial = launch(20).checkpoint_every(10).checkpoint_dir(dir.clone()).run();
         assert_eq!(partial.merged.steps, 2 * 20);
-        let resumed = launch(40).resume_from(dir.clone()).run();
+        let resumed = launch(40)
+            .checkpoint_every(10)
+            .checkpoint_dir(dir.clone())
+            .resume_from(dir.clone())
+            .run();
         assert_runs_identical(&resumed.runs, &full.runs, &format!("gibbs {mode:?}"));
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -204,9 +220,14 @@ fn resume_with_missing_checkpoints_starts_fresh() {
             .init(0.0)
     };
     let plain = launch().run();
-    // the directory holds no chain-<c>.ckpt files: every chain starts
-    // from scratch, identical to a launch without resume at all
-    let resumed = launch().resume_from(dir.clone()).run();
+    // the directory holds no chain-<c>.g<g>.ckpt files: every chain
+    // starts from scratch, identical to a launch without resume at all
+    // (resume always rides a checkpointed launch, so the flags pair up)
+    let resumed = launch()
+        .checkpoint_every(25)
+        .checkpoint_dir(dir.clone())
+        .resume_from(dir.clone())
+        .run();
     assert_runs_identical(&resumed.runs, &plain.runs, "fresh-start resume");
     let _ = std::fs::remove_dir_all(&dir);
 }

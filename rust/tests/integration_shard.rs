@@ -14,7 +14,10 @@
 //!   are both exact no-ops);
 //! * a multi-shard launch is deterministic (same seed ⇒ same bits),
 //!   tiles the population exactly, decorrelates the per-shard seeds,
-//!   and produces a finite consensus combination.
+//!   and produces a finite consensus combination;
+//! * a shard downed whole by `GuardPolicy::Abort` is excluded from the
+//!   consensus without poisoning the surviving shards, and the
+//!   `ShardReport` JSON stamps the failure and degradation counts.
 
 use austerity::coordinator::{Budget, Executor, MhMode, Param, Sample, Session};
 use austerity::data::synthetic::{linreg_toy, two_class_gaussian};
@@ -254,4 +257,47 @@ fn multi_shard_session_is_deterministic_and_tiles_the_population() {
         .map(|c| c.samples.len() as u64)
         .sum();
     assert_eq!(combined.n, total_draws);
+}
+
+#[test]
+fn guard_abort_downing_one_shard_leaves_the_consensus_finite() {
+    use austerity::coordinator::GuardPolicy;
+    use austerity::testkit::fault::{FaultKind, FaultyModel};
+    use austerity::testkit::models::ConjugateGaussian;
+
+    let inner = ConjugateGaussian::synthetic(1_200, 0.3, 1.0, 0.0, 2.0, 7);
+    let proposal = inner.rw_proposal(0.4);
+    // poison every chain of shard 1 at its very first step: under the
+    // Abort guard both chains die before recording a draw, so the whole
+    // shard degrades — the consensus must carry on over shards 0 and 2
+    let model = FaultyModel::new(inner)
+        .fault_on(1, 0, 0, FaultKind::Nan)
+        .fault_on(1, 1, 0, FaultKind::Nan);
+    let report = Session::new(&model)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(2)
+        .seed(19)
+        .budget(Budget::Steps(60))
+        .guard(GuardPolicy::Abort)
+        .init(0.0)
+        .shards(3)
+        .run_sharded()
+        .unwrap();
+    assert_eq!(report.shards.len(), 3);
+    assert_eq!(report.failed_chains(), 2, "both chains of shard 1");
+    assert_eq!(report.degraded_shards(), 1);
+    for (s, r) in report.shards.iter().enumerate() {
+        let expected_failures = if s == 1 { 2 } else { 0 };
+        assert_eq!(r.failed_chains(), expected_failures, "shard {s}");
+    }
+    let g = report.combined().expect("the two healthy shards still combine");
+    assert!(g.mean.is_finite() && g.var.is_finite() && g.var > 0.0, "consensus {g:?}");
+    assert!(g.n >= 2);
+    let json = report.to_json();
+    assert!(json.contains("\"failed_chains\":2"), "{json}");
+    assert!(json.contains("\"degraded_shards\":1"), "{json}");
+    assert!(json.contains("\"consensus\":{"), "{json}");
+    assert!(json.contains("\"status\":\"failed\""), "{json}");
+    assert!(json.contains("numerical guard"), "{json}");
 }

@@ -1,0 +1,476 @@
+//! Supervision integration suite: the self-healing layer of the engine.
+//!
+//! Four pillars, matching DESIGN.md §Supervision layer:
+//!
+//! 1. **Supervised retry** — a chain downed by a worker panic is
+//!    restarted from its last good checkpoint under a `RetryPolicy`,
+//!    and the recovered chain's draws are bit-identical to a run that
+//!    never failed (the checkpoint captures the PCG stream and the
+//!    scheduler position exactly).
+//! 2. **Checkpoint integrity** — torn writes, flipped bits and short
+//!    reads on generation files are caught by the CRC32-sealed v3
+//!    framing; resume falls back generation by generation and stamps
+//!    the fallback as `ChainStatus::Recovered`.
+//! 3. **Stall watchdog + quorum** — a chain frozen past `stall_after`
+//!    is flagged `Stalled`; when the healthy fraction drops below
+//!    `min_chains`, the launch aborts with `LaunchError::QuorumLost`.
+//! 4. **Typed launch errors** — a manifest describing a different
+//!    launch refuses the resume up front, and the resume/checkpoint
+//!    flag pairing is enforced at build time.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use austerity::coordinator::{
+    current_chain_step, Budget, ChainRun, ChainStatus, CkptError, KernelSession, LaunchError,
+    MhMode, RetryPolicy, Sample, Session, StepOutcome, TransitionKernel,
+};
+use austerity::stats::Pcg64;
+use austerity::testkit::fault::{FaultKind, FaultyModel, FaultyStore, StoreFault};
+use austerity::testkit::models::ConjugateGaussian;
+
+static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// Fresh per-test checkpoint directory under the system temp dir.
+fn scratch_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "austerity_supervise_{tag}_{}_{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+fn bits(samples: &[Sample]) -> Vec<u64> {
+    samples.iter().map(|s| s.value.to_bits()).collect()
+}
+
+/// Chain-by-chain equality of draws (bitwise) and every counter the
+/// checkpoint carries; wall time and `ckpt_failures` are per-run.
+fn assert_runs_identical(a: &[ChainRun], b: &[ChainRun], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: chain count");
+    for (ra, rb) in a.iter().zip(b) {
+        let c = ra.chain;
+        assert_eq!(ra.chain, rb.chain, "{label}");
+        assert_eq!(ra.stats.steps, rb.stats.steps, "{label} chain {c}: steps");
+        assert_eq!(ra.stats.accepted, rb.stats.accepted, "{label} chain {c}: accepted");
+        assert_eq!(ra.stats.data_used, rb.stats.data_used, "{label} chain {c}: data_used");
+        assert_eq!(ra.stats.guard_trips, rb.stats.guard_trips, "{label} chain {c}: guard_trips");
+        assert_eq!(bits(&ra.samples), bits(&rb.samples), "{label} chain {c}: draws");
+    }
+}
+
+fn test_model() -> ConjugateGaussian {
+    ConjugateGaussian::synthetic(900, 0.3, 1.0, 0.0, 2.0, 7)
+}
+
+// ---------------------------------------------------------------------
+// 1. supervised retry
+// ---------------------------------------------------------------------
+
+/// Acceptance test (a): a chain that crashes once mid-run, is retried
+/// under a `RetryPolicy` and resumes from its last checkpoint produces
+/// draws bit-identical to the same-seed run that never faulted.
+#[test]
+fn retried_chain_is_bit_identical_to_a_fault_free_run() {
+    let bare = test_model();
+    let proposal = bare.rw_proposal(0.4);
+    let clean = Session::new(&bare)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(2)
+        .seed(21)
+        .budget(Budget::Steps(40))
+        .init(0.0)
+        .run();
+    assert_eq!(clean.failed_chains(), 0);
+
+    // chain 1 panics the first time it executes step 17 — after the
+    // generation-1 checkpoint at step 10 — then replays clean
+    let faulty = FaultyModel::new(test_model()).fault_once(1, 17, FaultKind::Panic);
+    let dir = scratch_dir("retry_bitident");
+    let report = Session::new(&faulty)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(2)
+        .seed(21)
+        .budget(Budget::Steps(40))
+        .checkpoint_every(10)
+        .checkpoint_dir(dir.clone())
+        .retry(RetryPolicy::retries(1))
+        .init(0.0)
+        .run();
+    assert_eq!(report.failed_chains(), 0, "the retry must absorb the crash");
+    assert_eq!(
+        report.statuses[1],
+        ChainStatus::Recovered { retries: 1 },
+        "got {:?}",
+        report.statuses[1]
+    );
+    assert_eq!(report.statuses[0], ChainStatus::Completed);
+    assert_eq!(report.recovered_chains(), 1);
+    assert_runs_identical(&report.runs, &clean.runs, "supervised retry");
+    let json = report.to_json();
+    assert!(json.contains("\"recovered_chains\":1"), "{json}");
+    assert!(json.contains("\"status\":\"recovered\""), "{json}");
+    assert!(json.contains("\"retries\":1"), "{json}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A launch without checkpointing still retries — the restarted attempt
+/// replays from scratch (more expensive, still bit-identical).
+#[test]
+fn retry_without_checkpoints_replays_from_scratch() {
+    let bare = test_model();
+    let proposal = bare.rw_proposal(0.4);
+    let clean = Session::new(&bare)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(2)
+        .seed(5)
+        .budget(Budget::Steps(30))
+        .init(0.0)
+        .run();
+    let faulty = FaultyModel::new(test_model()).fault_once(0, 6, FaultKind::Panic);
+    let report = Session::new(&faulty)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(2)
+        .seed(5)
+        .budget(Budget::Steps(30))
+        .retry(RetryPolicy::new(2, Duration::from_millis(1)))
+        .init(0.0)
+        .run();
+    assert_eq!(report.failed_chains(), 0);
+    assert_eq!(report.statuses[0], ChainStatus::Recovered { retries: 1 });
+    assert_runs_identical(&report.runs, &clean.runs, "scratch replay");
+}
+
+/// A persistent fault exhausts the retry budget: the chain stays
+/// `Failed` and the reason records the burned retries.
+#[test]
+fn exhausted_retries_surface_as_failed_with_the_attempt_count() {
+    let faulty = FaultyModel::new(test_model()).fault(0, 5, FaultKind::Panic);
+    let proposal = test_model().rw_proposal(0.4);
+    let report = Session::new(&faulty)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(2)
+        .seed(3)
+        .budget(Budget::Steps(20))
+        .retry(RetryPolicy::retries(2))
+        .init(0.0)
+        .run();
+    assert_eq!(report.failed_chains(), 1);
+    match &report.statuses[0] {
+        ChainStatus::Failed { step, reason } => {
+            assert_eq!(*step, 5);
+            assert!(reason.contains("injected fault"), "reason: {reason}");
+            assert!(reason.contains("after 2 retries"), "reason: {reason}");
+        }
+        s => panic!("chain 0 should have failed, got {s:?}"),
+    }
+    assert_eq!(report.statuses[1], ChainStatus::Completed);
+}
+
+// ---------------------------------------------------------------------
+// 2. checkpoint integrity under I/O faults
+// ---------------------------------------------------------------------
+
+/// Acceptance test (b): the newest generation of a chain is torn on
+/// disk (truncated write that still reported success); resume falls
+/// back to the previous generation silently, completes, and stamps the
+/// chain `Recovered` — with draws bit-identical to an uninterrupted run.
+#[test]
+fn resume_falls_back_past_a_torn_newest_generation() {
+    let model = test_model();
+    let proposal = model.rw_proposal(0.4);
+    let dir = scratch_dir("torn_gen");
+    let launch = |budget: usize| {
+        Session::new(&model)
+            .kernel(&proposal)
+            .rule(MhMode::approx(0.05, 64))
+            .chains(2)
+            .seed(13)
+            .budget(Budget::Steps(budget))
+            .checkpoint_every(10)
+            .checkpoint_dir(dir.clone())
+    };
+    let full = Session::new(&model)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(2)
+        .seed(13)
+        .budget(Budget::Steps(80))
+        .init(0.0)
+        .run();
+    // partial run: generations 1..=4 per chain (default retain keeps 3
+    // and 4); chain 0's generation 4 is torn at byte 12 — the write
+    // "succeeds", the file is garbage
+    let torn = FaultyStore::new().fault(0, 4, StoreFault::TruncateAt(12));
+    let partial = launch(40).checkpoint_store(torn.into_arc()).init(0.0).run();
+    assert_eq!(partial.failed_chains(), 0, "a torn write is silent at write time");
+    let resumed = launch(80).resume_from(dir.clone()).init(0.0).run();
+    assert_eq!(resumed.failed_chains(), 0);
+    assert_eq!(
+        resumed.statuses[0],
+        ChainStatus::Recovered { retries: 1 },
+        "chain 0 must fall back one generation, got {:?}",
+        resumed.statuses[0]
+    );
+    assert_eq!(resumed.statuses[1], ChainStatus::Completed, "chain 1's files are intact");
+    assert_runs_identical(&resumed.runs, &full.runs, "torn-generation fallback");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Silent media corruption (one flipped bit) is caught by the CRC32
+/// trailer at load time; resume falls back to the previous generation.
+#[test]
+fn resume_falls_back_past_a_flipped_bit() {
+    let model = test_model();
+    let proposal = model.rw_proposal(0.4);
+    let dir = scratch_dir("flip_bit");
+    let launch = |budget: usize| {
+        Session::new(&model)
+            .kernel(&proposal)
+            .rule(MhMode::approx(0.05, 64))
+            .chains(1)
+            .seed(17)
+            .budget(Budget::Steps(budget))
+            .checkpoint_every(10)
+            .checkpoint_dir(dir.clone())
+    };
+    let full = Session::new(&model)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(1)
+        .seed(17)
+        .budget(Budget::Steps(80))
+        .init(0.0)
+        .run();
+    let partial = launch(40).init(0.0).run();
+    assert_eq!(partial.failed_chains(), 0);
+    // the corruption happens on the read path at resume time: byte 60
+    // of generation 4 comes back with one bit flipped
+    let flipped = FaultyStore::new().fault(0, 4, StoreFault::FlipBit(60));
+    let resumed =
+        launch(80).checkpoint_store(flipped.into_arc()).resume_from(dir.clone()).init(0.0).run();
+    assert_eq!(resumed.failed_chains(), 0);
+    assert_eq!(resumed.statuses[0], ChainStatus::Recovered { retries: 1 });
+    assert_runs_identical(&resumed.runs, &full.runs, "flipped-bit fallback");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A checkpoint write failing outright (injected ENOSPC) is non-fatal:
+/// the chain keeps sampling on its previous generation and the failure
+/// is counted in `ckpt_failures`.
+#[test]
+fn checkpoint_write_failure_is_counted_and_nonfatal() {
+    let model = test_model();
+    let proposal = model.rw_proposal(0.4);
+    let dir = scratch_dir("enospc");
+    let store = FaultyStore::new().fault(0, 2, StoreFault::Enospc);
+    let report = Session::new(&model)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(2)
+        .seed(9)
+        .budget(Budget::Steps(40))
+        .checkpoint_every(10)
+        .checkpoint_dir(dir.clone())
+        .checkpoint_store(store.into_arc())
+        .init(0.0)
+        .run();
+    assert_eq!(report.failed_chains(), 0, "ENOSPC on one generation must not down the chain");
+    assert_eq!(report.statuses[0], ChainStatus::Completed);
+    let chain0 = report.runs.iter().find(|r| r.chain == 0).expect("chain 0 completed");
+    assert_eq!(chain0.stats.ckpt_failures, 1, "exactly the scripted write fails");
+    assert_eq!(report.merged.ckpt_failures, 1);
+    let json = report.to_json();
+    assert!(json.contains("\"ckpt_failures\":1"), "{json}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// 3. stall watchdog + quorum
+// ---------------------------------------------------------------------
+
+/// A trivial random-walk kernel that freezes one scripted (chain, step)
+/// long enough for the watchdog to notice, then finishes normally.
+struct SleepyKernel {
+    slow_chain: usize,
+    sleep_at: usize,
+    sleep: Duration,
+}
+
+impl TransitionKernel for SleepyKernel {
+    type State = f64;
+    type Scratch = ();
+
+    fn scratch(&self, _init: &f64) -> Self::Scratch {}
+
+    fn step(&self, state: &mut f64, _scratch: &mut (), rng: &mut Pcg64) -> StepOutcome {
+        let (chain, step) = current_chain_step();
+        if chain == self.slow_chain && step == self.sleep_at {
+            std::thread::sleep(self.sleep);
+        }
+        *state += rng.normal();
+        StepOutcome { accepted: true, data_used: 1, guard_trips: 0 }
+    }
+}
+
+/// A chain frozen inside a step past `stall_after` is flagged — and the
+/// flag is sticky even though the chain later limps to completion.
+#[test]
+fn watchdog_flags_a_chain_frozen_past_the_stall_window() {
+    let kernel = SleepyKernel {
+        slow_chain: 1,
+        sleep_at: 10,
+        sleep: Duration::from_millis(400),
+    };
+    let report = KernelSession::new(&kernel)
+        .label("sleepy")
+        .chains(2)
+        .seed(4)
+        .budget(Budget::Steps(20))
+        .stall_after(Duration::from_millis(50))
+        .init(0.0)
+        .run();
+    assert_eq!(report.failed_chains(), 0);
+    assert_eq!(report.stalled_chains(), 1);
+    assert_eq!(
+        report.statuses[1],
+        ChainStatus::Stalled { step: 10 },
+        "got {:?}",
+        report.statuses[1]
+    );
+    assert_eq!(report.statuses[0], ChainStatus::Completed);
+    // a stalled-but-finished chain still delivered its full budget
+    assert_eq!(report.merged.steps, 2 * 20);
+    let json = report.to_json();
+    assert!(json.contains("\"stalled_chains\":1"), "{json}");
+    assert!(json.contains("\"status\":\"stalled\""), "{json}");
+}
+
+/// With a full quorum demanded, one stalled chain drops the healthy
+/// fraction below `min_chains`: the launch aborts with the typed
+/// `LaunchError::QuorumLost` instead of returning a thin report.
+#[test]
+fn quorum_loss_aborts_the_launch_with_a_typed_error() {
+    let kernel = SleepyKernel {
+        slow_chain: 0,
+        sleep_at: 5,
+        sleep: Duration::from_millis(900),
+    };
+    let result = KernelSession::new(&kernel)
+        .label("sleepy")
+        .chains(2)
+        .seed(8)
+        .budget(Budget::Steps(1_000_000))
+        .stall_after(Duration::from_millis(40))
+        .min_chains(1.0)
+        .init(0.0)
+        .try_run();
+    match result {
+        Err(LaunchError::QuorumLost { healthy, required, stalled, chains, .. }) => {
+            assert_eq!(chains, 2);
+            assert_eq!(required, 2);
+            assert!(healthy < required, "healthy {healthy} < required {required}");
+            assert!(stalled >= 1, "the sleeping chain must be flagged");
+            let msg = format!("{}", LaunchError::QuorumLost {
+                healthy,
+                required,
+                failed: 0,
+                stalled,
+                chains,
+            });
+            assert!(msg.contains("quorum lost"), "message: {msg}");
+        }
+        Ok(_) => panic!("quorum loss must abort the launch"),
+        Err(e) => panic!("wrong error flavour: {e}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4. typed launch errors and flag pairing
+// ---------------------------------------------------------------------
+
+/// Resuming into a directory whose manifest describes a different
+/// launch (here: a different base seed) is refused up front with a
+/// typed `CkptError::ManifestMismatch` — before any sampling happens.
+#[test]
+fn manifest_mismatch_refuses_the_resume() {
+    let model = test_model();
+    let proposal = model.rw_proposal(0.4);
+    let dir = scratch_dir("manifest");
+    let launch = |seed: u64| {
+        Session::new(&model)
+            .kernel(&proposal)
+            .rule(MhMode::approx(0.05, 64))
+            .chains(2)
+            .seed(seed)
+            .budget(Budget::Steps(30))
+            .checkpoint_every(10)
+            .checkpoint_dir(dir.clone())
+            .init(0.0)
+    };
+    launch(11).run();
+    let result = launch(12).resume_from(dir.clone()).try_run();
+    match result {
+        Err(LaunchError::Resume(CkptError::ManifestMismatch(what))) => {
+            assert!(what.contains("base_seed"), "detail: {what}");
+        }
+        Ok(_) => panic!("a mismatched manifest must refuse the resume"),
+        Err(e) => panic!("wrong error flavour: {e}"),
+    }
+    // the same-seed launch still resumes fine afterwards: refusing the
+    // resume must not have damaged the directory
+    let resumed = launch(11).resume_from(dir.clone()).run();
+    assert_eq!(resumed.failed_chains(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `.resume_from` without the checkpoint flags is a configuration bug,
+/// caught at build time with a message naming the missing pair.
+#[test]
+#[should_panic(expected = "requires .checkpoint_every")]
+fn resume_without_checkpoint_pairing_panics_at_build_time() {
+    let model = test_model();
+    let proposal = model.rw_proposal(0.4);
+    let _ = Session::new(&model)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(1)
+        .seed(1)
+        .budget(Budget::Steps(10))
+        .resume_from(scratch_dir("unpaired"))
+        .init(0.0)
+        .run();
+}
+
+/// The supervision counters all surface in the report JSON even on a
+/// plain, fault-free launch (zero-valued, but present for dashboards).
+#[test]
+fn report_json_carries_the_supervision_counters() {
+    let model = test_model();
+    let proposal = model.rw_proposal(0.4);
+    let report = Session::new(&model)
+        .kernel(&proposal)
+        .rule(MhMode::approx(0.05, 64))
+        .chains(2)
+        .seed(2)
+        .budget(Budget::Steps(20))
+        .init(0.0)
+        .run();
+    let json = report.to_json();
+    for key in [
+        "\"failed_chains\":0",
+        "\"recovered_chains\":0",
+        "\"stalled_chains\":0",
+        "\"ckpt_failures\":0",
+        "\"guard_trips\":",
+        "\"status\":\"completed\"",
+    ] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+}
