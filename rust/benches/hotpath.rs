@@ -477,6 +477,63 @@ fn main() {
         println!("4 concurrent sessions x 2 chains: {sps:>9.1} steps/s aggregate");
     }
 
+    // the serve daemon end-to-end: admit, run, and serve small jobs
+    // over real loopback HTTP — measures the whole submit→result path
+    {
+        use austerity::server::{ServeConfig, Server};
+        use std::io::{Read, Write};
+
+        let http = |addr: std::net::SocketAddr, method: &str, path: &str, body: &str| {
+            let mut s = std::net::TcpStream::connect(addr).expect("connect");
+            let req = format!(
+                "{method} {path} HTTP/1.1\r\nHost: b\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            s.write_all(req.as_bytes()).expect("send");
+            let mut raw = String::new();
+            s.read_to_string(&mut raw).expect("recv");
+            raw
+        };
+        let srv = Server::bind(ServeConfig {
+            addr: "127.0.0.1:0".parse().unwrap(),
+            max_jobs: 4,
+            max_queue: 64,
+            ..ServeConfig::default()
+        })
+        .expect("bind loopback");
+        let addr = srv.local_addr();
+        let stop = srv.shutdown_flag();
+        let server = std::thread::spawn(move || srv.run());
+
+        let spec = r#"{"model":{"kind":"conjugate","n":200,"data_seed":1},
+                       "rule":{"kind":"exact"},"chains":2,"seed":1,
+                       "budget":{"kind":"steps","steps":2000}}"#;
+        const JOBS: usize = 8;
+        let t0 = Instant::now();
+        for _ in 0..JOBS {
+            let resp = http(addr, "POST", "/jobs", spec);
+            assert!(resp.contains("202"), "{resp}");
+        }
+        for id in 0..JOBS {
+            loop {
+                let resp = http(addr, "GET", &format!("/jobs/{id}"), "");
+                if resp.contains("\"state\":\"done\"") {
+                    break;
+                }
+                assert!(
+                    !resp.contains("\"state\":\"failed\""),
+                    "bench job failed: {resp}"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+        let jps = JOBS as f64 / t0.elapsed().as_secs_f64();
+        rec.record("server_jobs_per_sec", jps);
+        println!("serve daemon, {JOBS} jobs x 2 chains x 2k steps: {jps:>9.2} jobs/s");
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        server.join().unwrap();
+    }
+
     println!("\n-- L3 engine kernels (ported families via TransitionKernel) --");
     // corrected SGLD on the §6.4 toy: gradient batch + first-batch test
     let toy = LinRegModel::new(linreg_toy(10_000, 0), 3.0, 4950.0).unwrap();
@@ -566,6 +623,7 @@ fn main() {
             || k.starts_with("executor_")
             || k.starts_with("shard_")
             || k.starts_with("retry_")
+            || k.starts_with("server_")
         {
             println!("{k:<44} {v:>9.3}");
         }

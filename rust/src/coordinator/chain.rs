@@ -14,6 +14,7 @@ use crate::coordinator::checkpoint::{
 };
 use crate::coordinator::executor::IntraPar;
 use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
+use crate::coordinator::supervise::ProgressBoard;
 use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
 use crate::stats::Pcg64;
 
@@ -181,6 +182,8 @@ where
         Duration::ZERO,
         None,
         None,
+        None,
+        None,
         |_, _, _, _, _, _| {},
     );
     (samples, stats)
@@ -221,6 +224,14 @@ pub(crate) struct DriveCfg<'a> {
     /// hung *inside* a step cannot be interrupted (see
     /// `coordinator::supervise`).
     pub abort: Option<&'a AtomicBool>,
+    /// Caller-raised cooperative cancel (`CancelToken`): polled at the
+    /// same step boundary as `abort`. Unlike an abort, a cancelled
+    /// checkpointing chain flushes one final generation on exit so the
+    /// run can `--resume` later.
+    pub cancel: Option<&'a AtomicBool>,
+    /// This chain's lane of the live progress board, published after
+    /// every completed step.
+    pub board: Option<(&'a ProgressBoard, usize)>,
 }
 
 /// The chain loop every driver shares: budget check, step, stat
@@ -242,6 +253,8 @@ fn drive_loop<T, F, C>(
     prior: Duration,
     progress: Option<&AtomicU64>,
     abort: Option<&AtomicBool>,
+    cancel: Option<&AtomicBool>,
+    board: Option<(&ProgressBoard, usize)>,
     mut after_step: C,
 ) where
     T: TransitionKernel,
@@ -252,6 +265,11 @@ fn drive_loop<T, F, C>(
     let start = Instant::now();
     loop {
         if let Some(flag) = abort {
+            if flag.load(Ordering::Relaxed) {
+                break;
+            }
+        }
+        if let Some(flag) = cancel {
             if flag.load(Ordering::Relaxed) {
                 break;
             }
@@ -282,6 +300,9 @@ fn drive_loop<T, F, C>(
         stats.accepted += outcome.accepted as usize;
         stats.data_used += outcome.data_used;
         stats.guard_trips += outcome.guard_trips as u64;
+        if let Some((b, c)) = board {
+            b.publish(c, stats.steps as u64, stats.accepted as u64, stats.data_used);
+        }
         if stats.steps > burn_in && (stats.steps - burn_in) % thin == 0 {
             samples.push(Sample {
                 value: f(cur),
@@ -292,6 +313,58 @@ fn drive_loop<T, F, C>(
         after_step(cur, scratch, rng, stats, samples, prior + start.elapsed());
     }
     stats.wall = prior + start.elapsed();
+}
+
+/// Serialize the chain's full resumable identity (state, scratch, RNG
+/// position, stats, samples) and write it as one rotated checkpoint
+/// generation. On success `next_gen` advances; on failure the chain
+/// keeps its previous generation, bumps `ChainStats::ckpt_failures`,
+/// and will retry the same generation number at the next write point —
+/// checkpoint write failures are non-fatal by contract.
+#[allow(clippy::too_many_arguments)]
+fn write_generation<T>(
+    kernel: &T,
+    sink: &CkptSink<'_>,
+    state: &T::State,
+    scratch: &T::Scratch,
+    rng: &Pcg64,
+    stats: &mut ChainStats,
+    samples: &[Sample],
+    elapsed: Duration,
+    next_gen: &mut u64,
+) where
+    T: TransitionKernel,
+    T::State: Persist,
+{
+    let mut sw = BinWriter::new();
+    state.persist(&mut sw);
+    let mut kw = BinWriter::new();
+    kernel.save_scratch(scratch, &mut kw);
+    let ck = ChainCheckpoint {
+        chain: sink.chain,
+        base_seed: sink.base_seed,
+        shard: sink.shard,
+        generation: *next_gen,
+        steps: stats.steps,
+        accepted: stats.accepted,
+        data_used: stats.data_used,
+        guard_trips: stats.guard_trips,
+        wall_secs: elapsed.as_secs_f64(),
+        rng: rng.state_parts(),
+        samples: samples.to_vec(),
+        state: sw.into_bytes(),
+        scratch: kw.into_bytes(),
+    };
+    match ck.write_rotated(sink.store.as_ref(), &sink.spec.dir, sink.spec.retain) {
+        Ok(()) => *next_gen += 1,
+        Err(e) => {
+            stats.ckpt_failures += 1;
+            eprintln!(
+                "engine: chain {}: checkpoint g{next_gen} write failed (continuing): {e}",
+                sink.chain,
+            );
+        }
+    }
 }
 
 /// `drive_chain_par` with checkpoint/resume: restores state, stats,
@@ -318,7 +391,8 @@ where
     T::State: Persist,
     F: FnMut(&T::State) -> f64,
 {
-    let DriveCfg { budget, burn_in, thin, intra, checkpoint, resume, progress, abort } = cfg;
+    let DriveCfg { budget, burn_in, thin, intra, checkpoint, resume, progress, abort, cancel, board } =
+        cfg;
     let (mut cur, mut stats, mut samples, prior, scratch_bytes, mut next_gen) = match resume {
         Some(ck) => {
             let mut r = BinReader::new(&ck.state);
@@ -364,46 +438,34 @@ where
         prior,
         progress,
         abort,
+        cancel,
+        board,
         |state, scratch, rng, stats, samples, elapsed| {
             if let Some(sink) = &checkpoint {
                 if sink.spec.every > 0 && stats.steps % sink.spec.every == 0 {
-                    let mut sw = BinWriter::new();
-                    state.persist(&mut sw);
-                    let mut kw = BinWriter::new();
-                    kernel.save_scratch(scratch, &mut kw);
-                    let ck = ChainCheckpoint {
-                        chain: sink.chain,
-                        base_seed: sink.base_seed,
-                        shard: sink.shard,
-                        generation: next_gen,
-                        steps: stats.steps,
-                        accepted: stats.accepted,
-                        data_used: stats.data_used,
-                        guard_trips: stats.guard_trips,
-                        wall_secs: elapsed.as_secs_f64(),
-                        rng: rng.state_parts(),
-                        samples: samples.to_vec(),
-                        state: sw.into_bytes(),
-                        scratch: kw.into_bytes(),
-                    };
-                    match ck.write_rotated(sink.store.as_ref(), &sink.spec.dir, sink.spec.retain) {
-                        Ok(()) => next_gen += 1,
-                        Err(e) => {
-                            // non-fatal: keep sampling on the previous
-                            // generation and retry this generation number
-                            // at the next cadence point
-                            stats.ckpt_failures += 1;
-                            eprintln!(
-                                "engine: chain {}: checkpoint g{next_gen} write failed \
-                                 (continuing): {e}",
-                                sink.chain,
-                            );
-                        }
-                    }
+                    write_generation(
+                        kernel, sink, state, scratch, rng, stats, samples, elapsed, &mut next_gen,
+                    );
                 }
             }
         },
     );
+    // A cooperative stop (cancel or abort) exits between cadence
+    // points; flush one final generation so whatever the chain sampled
+    // survives and a `--resume` can finish the interrupted run. Skipped
+    // when the cadence writer just covered this exact step count.
+    let interrupted = cancel.is_some_and(|f| f.load(Ordering::Relaxed))
+        || abort.is_some_and(|f| f.load(Ordering::Relaxed));
+    if interrupted {
+        if let Some(sink) = &checkpoint {
+            if stats.steps > 0 && (sink.spec.every == 0 || stats.steps % sink.spec.every != 0) {
+                let elapsed = stats.wall;
+                write_generation(
+                    kernel, sink, &cur, &scratch, rng, &mut stats, &samples, elapsed, &mut next_gen,
+                );
+            }
+        }
+    }
     (samples, stats)
 }
 

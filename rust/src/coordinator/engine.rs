@@ -38,7 +38,9 @@ use crate::coordinator::checkpoint::{
 };
 use crate::coordinator::executor::{Executor, IntraPar};
 use crate::coordinator::kernel::{CachedMhKernel, MhKernel, TransitionKernel};
-use crate::coordinator::supervise::{spawn_watchdog, LaunchError, RetryPolicy, WatchState};
+use crate::coordinator::supervise::{
+    spawn_watchdog, CancelToken, LaunchError, ProgressBoard, RetryPolicy, WatchState,
+};
 use crate::metrics::convergence::{cross_chain, Convergence};
 use crate::models::traits::{CachedLlDiff, LlDiffModel, ProposalKernel};
 use crate::stats::Pcg64;
@@ -93,6 +95,17 @@ pub struct EngineConfig {
     /// Byte-level access to the checkpoint directory; the production
     /// filesystem store unless the fault-injection testkit swaps one in.
     pub store: Arc<dyn StoreLayer>,
+    /// Caller-raised cooperative cancel (the serve layer's
+    /// `DELETE /jobs/:id` and shutdown drain): polled at every step
+    /// boundary next to the watchdog's abort. Cancelled chains stop
+    /// cleanly with what they have and flush a final checkpoint
+    /// generation, so a cancelled job can later resume (default: no
+    /// token — the launch runs to its budget).
+    pub cancel: Option<CancelToken>,
+    /// Live progress counters published after every completed step
+    /// (steps / acceptances / datapoint evaluations per chain); must be
+    /// sized to `chains` (checked at launch).
+    pub board: Option<Arc<ProgressBoard>>,
 }
 
 impl EngineConfig {
@@ -114,6 +127,8 @@ impl EngineConfig {
             kernel_label: "",
             rule_label: "",
             store: fs_store(),
+            cancel: None,
+            board: None,
         }
     }
 
@@ -216,6 +231,21 @@ impl EngineConfig {
     pub fn shard(mut self, stamp: ShardStamp) -> Self {
         assert!(stamp.count >= 1 && stamp.index < stamp.count, "invalid shard stamp");
         self.shard = stamp;
+        self
+    }
+
+    /// Poll `token` at every step boundary; when raised, every chain
+    /// stops cleanly at its next step with what it has (see the `cancel`
+    /// field for the checkpoint-flush semantics).
+    pub fn cancel_token(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+
+    /// Publish per-step progress into `board` (one lane per chain; the
+    /// launch asserts the sizes match).
+    pub fn progress_board(mut self, board: Arc<ProgressBoard>) -> Self {
+        self.board = Some(board);
         self
     }
 }
@@ -562,6 +592,15 @@ where
     O: ChainObserver<T::State>,
 {
     assert!(cfg.chains >= 1, "need at least one chain");
+    if let Some(board) = &cfg.board {
+        assert_eq!(
+            board.chains(),
+            cfg.chains,
+            "progress board sized for {} chains, launch has {}",
+            board.chains(),
+            cfg.chains,
+        );
+    }
     // Resolve the pool BEFORE the launch clock starts: growing the
     // global pool (or none of it, for a pinned pool) is one-time thread
     // construction that must not pollute steps_per_sec / data_per_sec.
@@ -650,6 +689,8 @@ where
                         resume: resume.map(|r| r.ck),
                         progress: Some(&progress_ref[c]),
                         abort: Some(&watch_ref.abort),
+                        cancel: cfg.cancel.as_ref().map(|t| t.flag()),
+                        board: cfg.board.as_ref().map(|b| (b.as_ref(), c)),
                     },
                     |p| obs.observe(p),
                     &mut rng,

@@ -28,7 +28,10 @@
 //! * `supervise` — the self-healing layer over the engine: per-chain
 //!   restart-from-checkpoint under a `RetryPolicy`, the stall watchdog
 //!   over the progress counters, and the `min_chains` quorum policy
-//!   (typed `LaunchError` when the launch cannot continue)
+//!   (typed `LaunchError` when the launch cannot continue); also the
+//!   caller-facing `CancelToken` (cooperative cancel at step
+//!   boundaries) and `ProgressBoard` (live per-chain progress) the
+//!   serve layer builds on
 //! * `guard` — numerical-guard layer (`GuardPolicy`, `Guarded`)
 //!   screening the log-likelihood moments entering any acceptance test
 //!   for NaN/Inf poisoning
@@ -95,7 +98,7 @@ pub use scheduler::MinibatchScheduler;
 pub use session::{
     KernelSession, NoProposal, RunReport, Session, ShardInfo, ShardReport, ShardedError,
 };
-pub use supervise::{LaunchError, RetryPolicy};
+pub use supervise::{CancelToken, LaunchError, ProgressBoard, ProgressSnapshot, RetryPolicy};
 
 // Legacy launch entry points, demoted to internal shims behind
 // `Session` / `KernelSession`: re-exported (hidden) solely so the

@@ -45,7 +45,7 @@ use crate::coordinator::guard::{GuardPolicy, Guarded};
 use crate::coordinator::kernel::TransitionKernel;
 use crate::coordinator::mh::MhMode;
 use crate::coordinator::record::{PerChain, RecordDefault, RecordSpec, Replicate};
-use crate::coordinator::supervise::{LaunchError, RetryPolicy};
+use crate::coordinator::supervise::{CancelToken, LaunchError, ProgressBoard, RetryPolicy};
 use crate::data::sharded::{even_rows, DataTooLarge};
 use crate::metrics::convergence::Convergence;
 use crate::models::traits::{LlDiffModel, PriorTempered, ProposalKernel, ShardableModel};
@@ -82,6 +82,8 @@ struct LaunchCfg {
     stall_after: Option<Duration>,
     min_chains: f64,
     store: Option<Arc<dyn StoreLayer>>,
+    cancel: Option<CancelToken>,
+    board: Option<Arc<ProgressBoard>>,
 }
 
 impl LaunchCfg {
@@ -104,6 +106,8 @@ impl LaunchCfg {
             stall_after: None,
             min_chains: 0.0,
             store: None,
+            cancel: None,
+            board: None,
         }
     }
 
@@ -146,6 +150,8 @@ impl LaunchCfg {
             kernel_label: "",
             rule_label: "",
             store: self.store.clone().unwrap_or_else(fs_store),
+            cancel: self.cancel.clone(),
+            board: self.board.clone(),
         }
     }
 }
@@ -360,6 +366,26 @@ impl<'a, M: LlDiffModel, K, T, R> Session<'a, M, K, T, R> {
     /// `ChainStats::guard_trips`, never alter decisions).
     pub fn guard(mut self, policy: GuardPolicy) -> Self {
         self.cfg.guard = policy;
+        self
+    }
+
+    /// Poll `token` at every step boundary: when the caller raises it
+    /// (job cancellation, daemon shutdown), every chain stops cleanly at
+    /// its next step with everything sampled so far — and, when the
+    /// launch is checkpointing, flushes one final generation so the run
+    /// can [`Session::resume_from`] later. Chain statuses stay
+    /// `Completed`; the caller holding the token knows it cancelled.
+    pub fn cancel_token(mut self, token: CancelToken) -> Self {
+        self.cfg.cancel = Some(token);
+        self
+    }
+
+    /// Publish live per-chain progress (steps, acceptances, datapoint
+    /// evaluations) into `board` after every step — the poll surface
+    /// behind `austerity serve`'s `GET /jobs/:id`. The board must have
+    /// one lane per chain ([`Session::chains`]; checked at launch).
+    pub fn progress_board(mut self, board: Arc<ProgressBoard>) -> Self {
+        self.cfg.board = Some(board);
         self
     }
 
@@ -816,6 +842,20 @@ impl<'a, T: TransitionKernel, R> KernelSession<'a, T, R> {
     /// Route checkpoint I/O through `store` (the fault-injection hook).
     pub fn checkpoint_store(mut self, store: Arc<dyn StoreLayer>) -> Self {
         self.cfg.store = Some(store);
+        self
+    }
+
+    /// Poll `token` at every step boundary; when raised, every chain
+    /// stops cleanly at its next step (see [`Session::cancel_token`]).
+    pub fn cancel_token(mut self, token: CancelToken) -> Self {
+        self.cfg.cancel = Some(token);
+        self
+    }
+
+    /// Publish live per-chain progress into `board` after every step
+    /// (see [`Session::progress_board`]).
+    pub fn progress_board(mut self, board: Arc<ProgressBoard>) -> Self {
+        self.cfg.board = Some(board);
         self
     }
 }
@@ -1426,6 +1466,62 @@ mod tests {
             .init(0.0)
             .run();
         assert!(report.to_json().contains("\"shard\":null,"));
+    }
+
+    #[test]
+    fn pre_raised_cancel_token_stops_before_any_step() {
+        let model = GaussTarget { n: 10 };
+        let kernel = rw_kernel(1.0);
+        let tok = CancelToken::new();
+        tok.cancel();
+        let report = Session::new(&model)
+            .kernel(&kernel)
+            .chains(2)
+            .seed(4)
+            .budget(Budget::Steps(10_000))
+            .cancel_token(tok)
+            .init(0.0)
+            .run();
+        // cancelled at the first step boundary: zero steps, clean
+        // Completed statuses — the caller holding the token knows why
+        assert_eq!(report.merged.steps, 0);
+        assert_eq!(report.failed_chains(), 0);
+        assert!(report.statuses.iter().all(|s| *s == ChainStatus::Completed));
+    }
+
+    #[test]
+    fn progress_board_reaches_the_budget_totals() {
+        let model = GaussTarget { n: 10 };
+        let kernel = rw_kernel(1.0);
+        let board = Arc::new(ProgressBoard::new(3));
+        let report = Session::new(&model)
+            .kernel(&kernel)
+            .chains(3)
+            .seed(6)
+            .budget(Budget::Steps(123))
+            .progress_board(Arc::clone(&board))
+            .init(0.0)
+            .run();
+        let snap = board.snapshot();
+        assert_eq!(snap.steps, vec![123, 123, 123]);
+        assert_eq!(snap.total_steps() as usize, report.merged.steps);
+        assert_eq!(snap.total_accepted() as usize, report.merged.accepted);
+        assert_eq!(snap.total_data_used(), report.merged.data_used);
+        assert!((snap.acceptance_rate() - report.acceptance_rate()).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "progress board sized for")]
+    fn mis_sized_progress_board_is_refused() {
+        let model = GaussTarget { n: 10 };
+        let kernel = rw_kernel(1.0);
+        let _ = Session::new(&model)
+            .kernel(&kernel)
+            .chains(2)
+            .budget(Budget::Steps(5))
+            .progress_board(Arc::new(ProgressBoard::new(3)))
+            .init(0.0)
+            .run();
     }
 
     #[test]

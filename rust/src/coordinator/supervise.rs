@@ -82,6 +82,123 @@ impl Default for RetryPolicy {
     }
 }
 
+/// Cooperative cancellation handle for a launch. The caller keeps one
+/// clone and hands another to the engine
+/// (`Session::cancel_token` / `EngineConfig::cancel`); raising it asks
+/// every chain to stop at its next step boundary — the same poll point
+/// the watchdog's abort uses — so a cancelled launch returns cleanly
+/// with everything sampled so far. Unlike an abort, a cancel also
+/// flushes a final checkpoint generation when the launch is
+/// checkpointing, so a cancelled job can later `--resume` to
+/// completion. Cancellation is one-way and idempotent: there is no
+/// un-cancel, and raising the token twice is harmless.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ask every chain holding this token to stop at its next step
+    /// boundary.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Relaxed)
+    }
+
+    /// The raw flag the chain driver polls.
+    pub(crate) fn flag(&self) -> &AtomicBool {
+        &self.flag
+    }
+}
+
+/// Live per-chain progress counters published after every completed
+/// step (`Session::progress_board` / `EngineConfig::board`): steps
+/// done, proposals accepted, datapoint evaluations consumed. The serve
+/// layer polls [`ProgressBoard::snapshot`] to answer `GET /jobs/:id`
+/// without touching the chains; readers see values at most one step
+/// stale (plain relaxed atomics — no locks on the hot path).
+#[derive(Debug, Default)]
+pub struct ProgressBoard {
+    steps: Vec<AtomicU64>,
+    accepted: Vec<AtomicU64>,
+    data_used: Vec<AtomicU64>,
+}
+
+impl ProgressBoard {
+    /// A board with one lane per chain, all counters zero.
+    pub fn new(chains: usize) -> Self {
+        ProgressBoard {
+            steps: (0..chains).map(|_| AtomicU64::new(0)).collect(),
+            accepted: (0..chains).map(|_| AtomicU64::new(0)).collect(),
+            data_used: (0..chains).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Number of chain lanes (must match the launch's `chains`).
+    pub fn chains(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Publish chain `c`'s running totals (called by the chain driver
+    /// after every step).
+    pub(crate) fn publish(&self, c: usize, steps: u64, accepted: u64, data_used: u64) {
+        self.steps[c].store(steps, Ordering::Relaxed);
+        self.accepted[c].store(accepted, Ordering::Relaxed);
+        self.data_used[c].store(data_used, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of every lane.
+    pub fn snapshot(&self) -> ProgressSnapshot {
+        ProgressSnapshot {
+            steps: self.steps.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
+            accepted: self.accepted.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
+            data_used: self.data_used.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`ProgressBoard`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ProgressSnapshot {
+    /// Steps completed, per chain.
+    pub steps: Vec<u64>,
+    /// Proposals accepted, per chain.
+    pub accepted: Vec<u64>,
+    /// Datapoint likelihood evaluations consumed, per chain.
+    pub data_used: Vec<u64>,
+}
+
+impl ProgressSnapshot {
+    pub fn total_steps(&self) -> u64 {
+        self.steps.iter().sum()
+    }
+
+    pub fn total_accepted(&self) -> u64 {
+        self.accepted.iter().sum()
+    }
+
+    pub fn total_data_used(&self) -> u64 {
+        self.data_used.iter().sum()
+    }
+
+    /// Pooled acceptance rate so far (zero before any step completes).
+    pub fn acceptance_rate(&self) -> f64 {
+        let steps = self.total_steps();
+        if steps == 0 {
+            0.0
+        } else {
+            self.total_accepted() as f64 / steps as f64
+        }
+    }
+}
+
 /// Why a supervised launch could not produce a report.
 #[derive(Debug)]
 pub enum LaunchError {
@@ -313,6 +430,47 @@ mod tests {
         assert_eq!(p.backoff_before(3), Duration::from_millis(30));
         assert_eq!(RetryPolicy::retries(2).backoff_before(2), Duration::ZERO);
         assert_eq!(RetryPolicy::default(), RetryPolicy::none());
+    }
+
+    #[test]
+    fn cancel_token_is_shared_and_idempotent() {
+        let tok = CancelToken::new();
+        let peer = tok.clone();
+        assert!(!tok.is_cancelled());
+        peer.cancel();
+        assert!(tok.is_cancelled(), "clone raises the shared flag");
+        peer.cancel(); // idempotent
+        assert!(tok.is_cancelled());
+        assert!(tok.flag().load(Ordering::Relaxed));
+        assert!(!CancelToken::default().is_cancelled());
+    }
+
+    #[test]
+    fn progress_board_snapshots_published_lanes() {
+        let board = ProgressBoard::new(3);
+        assert_eq!(board.chains(), 3);
+        assert_eq!(board.snapshot(), ProgressSnapshot::default_for(3));
+        board.publish(0, 10, 4, 1000);
+        board.publish(2, 7, 7, 350);
+        let snap = board.snapshot();
+        assert_eq!(snap.steps, vec![10, 0, 7]);
+        assert_eq!(snap.accepted, vec![4, 0, 7]);
+        assert_eq!(snap.data_used, vec![1000, 0, 350]);
+        assert_eq!(snap.total_steps(), 17);
+        assert_eq!(snap.total_accepted(), 11);
+        assert_eq!(snap.total_data_used(), 1350);
+        assert!((snap.acceptance_rate() - 11.0 / 17.0).abs() < 1e-15);
+        assert_eq!(ProgressSnapshot::default().acceptance_rate(), 0.0);
+    }
+
+    impl ProgressSnapshot {
+        fn default_for(chains: usize) -> Self {
+            ProgressSnapshot {
+                steps: vec![0; chains],
+                accepted: vec![0; chains],
+                data_used: vec![0; chains],
+            }
+        }
     }
 
     #[test]

@@ -21,5 +21,6 @@ pub mod metrics;
 pub mod models;
 pub mod runtime;
 pub mod samplers;
+pub mod server;
 pub mod stats;
 pub mod testkit;

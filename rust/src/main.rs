@@ -15,6 +15,11 @@
 //!                                          and the stall watchdog
 //!                                          (--stall-after-secs,
 //!                                          --min-chains)
+//!   austerity serve [--addr A] [--max-jobs J] [--max-queue Q]
+//!                                          long-lived JSON job server over
+//!                                          the sampling engine; POST specs
+//!                                          to /jobs, poll /jobs/:id, fetch
+//!                                          /jobs/:id/result
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -35,9 +40,10 @@ fn main() -> ExitCode {
         Some("fig") => fig(&args[1..]),
         Some("design") => design(&args[1..]),
         Some("sample") => sample(&args[1..]),
+        Some("serve") => serve(&args[1..]),
         _ => {
             eprintln!(
-                "usage: austerity <info|fig|design|sample> [options]\n\
+                "usage: austerity <info|fig|design|sample|serve> [options]\n\
                  \n\
                  info                          show PJRT platform + artifacts\n\
                  fig <name|all> [--scale S]    regenerate figure CSVs (fig1..fig15, fig_accept)\n\
@@ -48,6 +54,9 @@ fn main() -> ExitCode {
                         [--checkpoint-dir D --checkpoint-every K] [--resume D]\n\
                         [--retain K] [--retries R] [--retry-backoff-ms MS]\n\
                         [--stall-after-secs S] [--min-chains F]\n\
+                 serve  [--addr HOST:PORT] [--max-jobs J] [--max-queue Q]\n\
+                        [--drain-secs S] [--threads T]\n\
+                        [--checkpoint-root DIR --checkpoint-every K]\n\
                  \n\
                  figures: {}",
                 ALL_FIGURES.join(" ")
@@ -437,4 +446,129 @@ fn sample(args: &[String]) -> ExitCode {
         }
         return run_sample(&model, &kernel, &mode, init, steps, chains, seed, json, &ckpt);
     }
+}
+
+fn serve(args: &[String]) -> ExitCode {
+    use austerity::server::{signal, ServeConfig, Server};
+
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!(
+            "usage: austerity serve [options]\n\
+             \n\
+             Long-lived job server over the sampling engine. Clients POST JSON\n\
+             job specs and poll for progress and results:\n\
+             \n\
+               POST   /jobs            admit a job spec       -> 202 {{\"id\": ...}}\n\
+               GET    /jobs/:id        incremental progress (steps, acceptance\n\
+                                       rate, running R-hat/ESS)\n\
+               GET    /jobs/:id/result full RunReport JSON (409 until finished)\n\
+               DELETE /jobs/:id        cooperative cancel\n\
+               GET    /healthz         liveness + queue/running counts\n\
+               POST   /shutdown        graceful shutdown (same as SIGINT)\n\
+             \n\
+             options:\n\
+               --addr HOST:PORT       listen address (default 127.0.0.1:7878;\n\
+                                      port 0 picks a free port)\n\
+               --max-jobs J           concurrent jobs / runner threads (default 4)\n\
+               --max-queue Q          admission queue capacity; beyond it POST\n\
+                                      /jobs returns 429 (default 64)\n\
+               --drain-secs S         how long shutdown waits for running jobs\n\
+                                      before cancelling them (default 5)\n\
+               --threads T            pre-warm T executor workers shared by all\n\
+                                      jobs (default 0 = grow on demand)\n\
+               --checkpoint-root DIR  checkpoint every job under DIR/job-<id>\n\
+                                      (pairs with --checkpoint-every)\n\
+               --checkpoint-every K   checkpoint cadence in steps for jobs under\n\
+                                      --checkpoint-root (pairs with it)\n\
+             \n\
+             Determinism: a job's draws depend only on its spec (model, rule,\n\
+             seed, budget) — never on server load or job interleaving.\n\
+             \n\
+             Shutdown: first SIGINT/SIGTERM drains then cancels (running chains\n\
+             flush a final checkpoint, so a job resubmitted with \"resume\": true\n\
+             finishes the run); a second signal aborts immediately."
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let mut cfg = ServeConfig::default();
+    if let Some(text) = flag_value(args, "--addr") {
+        match text.parse() {
+            Ok(addr) => cfg.addr = addr,
+            Err(_) => {
+                eprintln!("--addr must be HOST:PORT (e.g. 127.0.0.1:7878): got {text:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if let Some(text) = flag_value(args, "--max-jobs") {
+        match text.parse::<usize>() {
+            Ok(j) if j >= 1 => cfg.max_jobs = j,
+            _ => {
+                eprintln!("--max-jobs must be an integer >= 1: got {text:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if let Some(text) = flag_value(args, "--max-queue") {
+        match text.parse::<usize>() {
+            Ok(q) if q >= 1 => cfg.max_queue = q,
+            _ => {
+                eprintln!("--max-queue must be an integer >= 1: got {text:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if let Some(text) = flag_value(args, "--drain-secs") {
+        match text.parse::<f64>() {
+            Ok(s) if s >= 0.0 && s.is_finite() => cfg.drain = Duration::from_secs_f64(s),
+            _ => {
+                eprintln!("--drain-secs must be a non-negative number: got {text:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if let Some(text) = flag_value(args, "--threads") {
+        match text.parse::<usize>() {
+            Ok(t) => cfg.threads = t,
+            Err(_) => {
+                eprintln!("--threads must be a non-negative integer: got {text:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    cfg.ckpt_root = flag_value(args, "--checkpoint-root").map(PathBuf::from);
+    cfg.ckpt_every = match flag_value(args, "--checkpoint-every") {
+        None => None,
+        Some(text) => match text.parse::<usize>() {
+            Ok(k) if k >= 1 => Some(k),
+            _ => {
+                eprintln!("--checkpoint-every must be an integer >= 1: got {text:?}");
+                return ExitCode::from(2);
+            }
+        },
+    };
+    // same pairing rule as `sample`: a cadence without a directory (or
+    // vice versa) is a config bug, not a default to guess at
+    if cfg.ckpt_root.is_some() != cfg.ckpt_every.is_some() {
+        eprintln!("--checkpoint-root and --checkpoint-every must be given together");
+        return ExitCode::from(2);
+    }
+
+    signal::install_signal_handlers();
+    let srv = match Server::bind(cfg.clone()) {
+        Ok(srv) => srv,
+        Err(e) => {
+            eprintln!("serve: cannot bind {}: {e}", cfg.addr);
+            return ExitCode::FAILURE;
+        }
+    };
+    println!(
+        "austerity serve: listening on http://{} (max-jobs {}, max-queue {})",
+        srv.local_addr(),
+        cfg.max_jobs,
+        cfg.max_queue,
+    );
+    srv.run();
+    ExitCode::SUCCESS
 }

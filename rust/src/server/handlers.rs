@@ -1,0 +1,178 @@
+//! Endpoint routing: one parsed [`Request`] in, one [`Response`] out.
+//!
+//! The API surface (all bodies JSON):
+//!
+//! | method & path          | behaviour                                             |
+//! |------------------------|-------------------------------------------------------|
+//! | `GET /healthz`         | liveness + queue/running counts                       |
+//! | `POST /jobs`           | admit a job spec → `202 {"id": …}`; 400/429/503       |
+//! | `GET /jobs/:id`        | incremental progress + running R-hat/ESS              |
+//! | `GET /jobs/:id/result` | full `RunReport` JSON; 409 while unfinished           |
+//! | `DELETE /jobs/:id`     | cooperative cancel                                    |
+//! | `POST /shutdown`       | graceful shutdown (same path as SIGINT)               |
+//!
+//! Routing is pure — no I/O — so every branch is unit-testable
+//! without a socket.
+
+use crate::server::http::{Request, Response};
+use crate::server::registry::{AdmitError, JobOutcome, JobState, Registry};
+
+/// Dispatch one request. The second return is `true` when the request
+/// asked for server shutdown (`POST /shutdown`).
+pub fn route(req: &Request, reg: &Registry) -> (Response, bool) {
+    let resp = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::json(200, reg.healthz_json()),
+        ("POST", "/jobs") => post_job(req, reg),
+        ("POST", "/shutdown") => {
+            return (Response::json(200, "{\"shutting_down\":true}"), true)
+        }
+        (method, path) => {
+            if let Some(rest) = path.strip_prefix("/jobs/") {
+                job_route(method, rest, reg)
+            } else if matches!(path, "/healthz" | "/jobs" | "/shutdown") {
+                Response::error(405, "method not allowed on this path")
+            } else {
+                Response::error(404, "no such endpoint")
+            }
+        }
+    };
+    (resp, false)
+}
+
+fn post_job(req: &Request, reg: &Registry) -> Response {
+    match reg.submit(&req.body) {
+        Ok(id) => Response::json(202, format!("{{\"id\":{id},\"state\":\"queued\"}}")),
+        Err(AdmitError::Spec(why)) => Response::error(400, &why),
+        Err(AdmitError::QueueFull { cap }) => {
+            Response::error(429, &format!("admission queue is full (capacity {cap}); retry later"))
+        }
+        Err(AdmitError::Draining) => {
+            Response::error(503, "server is draining for shutdown; not admitting jobs")
+        }
+    }
+}
+
+fn job_route(method: &str, rest: &str, reg: &Registry) -> Response {
+    let (id_text, sub) = match rest.split_once('/') {
+        Some((id, sub)) => (id, Some(sub)),
+        None => (rest, None),
+    };
+    let Ok(id) = id_text.parse::<usize>() else {
+        return Response::error(404, "job IDs are non-negative integers");
+    };
+    match (method, sub) {
+        ("GET", None) => match reg.status_json(id) {
+            Some(doc) => Response::json(200, doc),
+            None => Response::error(404, "no such job"),
+        },
+        ("GET", Some("result")) => match reg.outcome(id) {
+            None => Response::error(404, "no such job"),
+            Some(JobOutcome::Pending) => {
+                Response::error(409, "job has not finished; poll GET /jobs/:id")
+            }
+            Some(JobOutcome::Report(json)) => Response::json(200, json),
+            Some(JobOutcome::CancelledEarly) => {
+                Response::error(409, "job was cancelled before producing a report")
+            }
+            Some(JobOutcome::Failed(why)) => Response::error(500, &why),
+        },
+        ("DELETE", None) => match reg.cancel(id) {
+            None => Response::error(404, "no such job"),
+            Some(JobState::Running) => {
+                Response::json(200, format!("{{\"id\":{id},\"state\":\"cancelling\"}}"))
+            }
+            Some(state) => Response::json(
+                200,
+                format!("{{\"id\":{id},\"state\":\"{}\"}}", state.as_str()),
+            ),
+        },
+        ("GET" | "DELETE", Some(_)) => Response::error(404, "no such endpoint"),
+        _ => Response::error(405, "method not allowed on this path"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::registry::RegistryCfg;
+
+    fn reg() -> Registry {
+        Registry::new(RegistryCfg { max_jobs: 1, max_queue: 2, ckpt_root: None, ckpt_every: None })
+    }
+
+    fn req(method: &str, path: &str, body: &str) -> Request {
+        Request { method: method.into(), path: path.into(), body: body.into() }
+    }
+
+    const SPEC: &str =
+        r#"{"model":{"kind":"conjugate","n":64},"budget":{"kind":"steps","steps":10}}"#;
+
+    #[test]
+    fn submit_poll_cancel_flow() {
+        let r = reg();
+        let (resp, _) = route(&req("POST", "/jobs", SPEC), &r);
+        assert_eq!(resp.status, 202);
+        assert!(resp.body.contains("\"id\":0"), "{}", resp.body);
+
+        let (resp, _) = route(&req("GET", "/jobs/0", ""), &r);
+        assert_eq!(resp.status, 200);
+        assert!(resp.body.contains("\"state\":\"queued\""), "{}", resp.body);
+
+        let (resp, _) = route(&req("GET", "/jobs/0/result", ""), &r);
+        assert_eq!(resp.status, 409);
+
+        let (resp, _) = route(&req("DELETE", "/jobs/0", ""), &r);
+        assert_eq!(resp.status, 200);
+        assert!(resp.body.contains("\"state\":\"cancelled\""), "{}", resp.body);
+    }
+
+    #[test]
+    fn malformed_spec_is_a_400_with_the_parser_message() {
+        let r = reg();
+        let (resp, _) = route(&req("POST", "/jobs", "{\"seed\":NaN}"), &r);
+        assert_eq!(resp.status, 400);
+        assert!(resp.body.contains("non-finite"), "{}", resp.body);
+        let (resp, _) = route(&req("POST", "/jobs", "{}"), &r);
+        assert_eq!(resp.status, 400);
+        assert!(resp.body.contains("model"), "{}", resp.body);
+    }
+
+    #[test]
+    fn backpressure_maps_to_429() {
+        let r = reg();
+        route(&req("POST", "/jobs", SPEC), &r);
+        route(&req("POST", "/jobs", SPEC), &r);
+        let (resp, _) = route(&req("POST", "/jobs", SPEC), &r);
+        assert_eq!(resp.status, 429);
+        assert!(resp.body.contains("capacity 2"), "{}", resp.body);
+    }
+
+    #[test]
+    fn drain_maps_to_503() {
+        let r = reg();
+        r.begin_drain();
+        let (resp, _) = route(&req("POST", "/jobs", SPEC), &r);
+        assert_eq!(resp.status, 503);
+    }
+
+    #[test]
+    fn unknown_paths_ids_and_methods() {
+        let r = reg();
+        assert_eq!(route(&req("GET", "/nope", ""), &r).0.status, 404);
+        assert_eq!(route(&req("GET", "/jobs/99", ""), &r).0.status, 404);
+        assert_eq!(route(&req("GET", "/jobs/zebra", ""), &r).0.status, 404);
+        assert_eq!(route(&req("GET", "/jobs/0/zebra", ""), &r).0.status, 404);
+        assert_eq!(route(&req("PUT", "/jobs/0", ""), &r).0.status, 405);
+        assert_eq!(route(&req("DELETE", "/healthz", ""), &r).0.status, 405);
+        assert_eq!(route(&req("GET", "/healthz", ""), &r).0.status, 200);
+    }
+
+    #[test]
+    fn shutdown_flag_is_signalled() {
+        let r = reg();
+        let (resp, stop) = route(&req("POST", "/shutdown", ""), &r);
+        assert_eq!(resp.status, 200);
+        assert!(stop);
+        assert!(!route(&req("GET", "/healthz", ""), &r).1);
+    }
+}

@@ -1,0 +1,301 @@
+//! Minimal HTTP/1.1 framing over `std::net::TcpStream` — just enough
+//! protocol for the job API, hand-rolled so the daemon stays
+//! zero-dependency like the rest of the crate.
+//!
+//! Scope (deliberate):
+//!
+//! * one request per connection (`Connection: close` on every
+//!   response) — no keep-alive state machine to get wrong;
+//! * request line + headers up to [`MAX_HEAD`] bytes, body framed by
+//!   `Content-Length` up to [`MAX_BODY`] bytes — chunked encoding is
+//!   rejected rather than half-implemented;
+//! * query strings are stripped from the path (the API is purely
+//!   path + JSON body);
+//! * every response is `application/json` with an explicit
+//!   `Content-Length`.
+//!
+//! Oversized or malformed frames surface as [`HttpError`] and the
+//! accept loop answers with the matching 4xx — a hostile peer can
+//! never panic the daemon or hold a runner thread.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Cap on the request line + headers (bytes). 431 beyond this.
+pub const MAX_HEAD: usize = 16 * 1024;
+/// Cap on the request body (bytes). 413 beyond this. Job specs are a
+/// few hundred bytes; 1 MiB leaves generous headroom.
+pub const MAX_BODY: usize = 1024 * 1024;
+
+/// A parsed request: method, path (query stripped), and raw body.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Framing failure while reading a request. Each maps to one status.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Socket error or connection closed mid-frame.
+    Io(std::io::Error),
+    /// Request line/headers unparsable → 400.
+    BadRequest(&'static str),
+    /// Headers exceeded [`MAX_HEAD`] → 431.
+    HeadTooLarge,
+    /// Body exceeded [`MAX_BODY`] (declared or actual) → 413.
+    BodyTooLarge,
+}
+
+impl HttpError {
+    /// The response this framing error earns, if the socket is still
+    /// writable (Io errors get none — the peer is gone).
+    pub fn response(&self) -> Option<Response> {
+        match self {
+            HttpError::Io(_) => None,
+            HttpError::BadRequest(why) => Some(Response::error(400, why)),
+            HttpError::HeadTooLarge => Some(Response::error(431, "request headers too large")),
+            HttpError::BodyTooLarge => Some(Response::error(413, "request body too large")),
+        }
+    }
+}
+
+impl From<std::io::Error> for HttpError {
+    fn from(e: std::io::Error) -> Self {
+        HttpError::Io(e)
+    }
+}
+
+/// Read one request from the stream (blocking, honouring whatever
+/// read timeout the caller set on the socket).
+pub fn read_request(stream: &mut TcpStream) -> Result<Request, HttpError> {
+    // accumulate until the blank line terminating the header block
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD {
+            return Err(HttpError::HeadTooLarge);
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(HttpError::BadRequest("connection closed before headers ended"));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    if head_end > MAX_HEAD {
+        return Err(HttpError::HeadTooLarge);
+    }
+
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| HttpError::BadRequest("headers are not valid UTF-8"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("");
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(HttpError::BadRequest("malformed request line"));
+    }
+    // the API keys purely off the path; drop any query string
+    let path = target.split('?').next().unwrap_or(target).to_string();
+
+    let mut content_length: usize = 0;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        if name == "content-length" {
+            content_length = value
+                .parse()
+                .map_err(|_| HttpError::BadRequest("unparsable Content-Length"))?;
+        } else if name == "transfer-encoding" && !value.eq_ignore_ascii_case("identity") {
+            return Err(HttpError::BadRequest("chunked bodies are not supported"));
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(HttpError::BodyTooLarge);
+    }
+
+    // bytes already pulled past the header terminator belong to the body
+    let body_start = head_end + 4; // skip \r\n\r\n
+    let mut body: Vec<u8> = buf[body_start.min(buf.len())..].to_vec();
+    if body.len() > content_length {
+        // pipelined extra bytes: one request per connection, ignore them
+        body.truncate(content_length);
+    }
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(HttpError::BadRequest("connection closed mid-body"));
+        }
+        let need = content_length - body.len();
+        body.extend_from_slice(&chunk[..n.min(need)]);
+    }
+    let body = String::from_utf8(body)
+        .map_err(|_| HttpError::BadRequest("body is not valid UTF-8"))?;
+
+    Ok(Request { method, path, body })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// A response ready to serialize: status code + JSON body.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Response {
+    pub status: u16,
+    pub body: String,
+}
+
+impl Response {
+    /// 200 with a pre-serialized JSON body.
+    pub fn json(status: u16, body: impl Into<String>) -> Self {
+        Response { status, body: body.into() }
+    }
+
+    /// An error payload `{"error": "..."}` with proper escaping.
+    pub fn error(status: u16, message: &str) -> Self {
+        let body = format!(
+            "{{\"error\":{}}}",
+            crate::coordinator::checkpoint::json_str(message)
+        );
+        Response { status, body }
+    }
+
+    /// Serialize onto the socket. Errors are returned (the caller just
+    /// drops the connection — nothing more to salvage).
+    pub fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            status_text(self.status),
+            self.body.len(),
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(self.body.as_bytes())?;
+        stream.flush()
+    }
+}
+
+/// Reason phrases for the statuses this API emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    /// Push raw bytes through a loopback socket and read one request.
+    fn roundtrip(raw: &[u8]) -> Result<Request, HttpError> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_vec();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&raw).unwrap();
+            // keep the socket open briefly so reads see EOF only after data
+            s.shutdown(std::net::Shutdown::Write).ok();
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let out = read_request(&mut conn);
+        writer.join().unwrap();
+        out
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = roundtrip(
+            b"POST /jobs?trace=1 HTTP/1.1\r\nHost: x\r\nContent-Length: 7\r\n\r\n{\"a\":1}",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/jobs"); // query stripped
+        assert_eq!(req.body, "{\"a\":1}");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = roundtrip(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.body, "");
+    }
+
+    #[test]
+    fn rejects_malformed_frames() {
+        assert!(matches!(roundtrip(b"NOT-HTTP\r\n\r\n"), Err(HttpError::BadRequest(_))));
+        assert!(matches!(
+            roundtrip(b"GET / HTTP/1.1\r\nContent-Length: zebra\r\n\r\n"),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(
+            roundtrip(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(
+            roundtrip(b"GET / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n"),
+            Err(HttpError::BodyTooLarge)
+        ));
+        // headers never terminated and huge
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend(std::iter::repeat(b'x').take(MAX_HEAD + 16));
+        assert!(matches!(roundtrip(&raw), Err(HttpError::HeadTooLarge)));
+    }
+
+    #[test]
+    fn truncated_body_is_a_bad_request() {
+        assert!(matches!(
+            roundtrip(b"POST /jobs HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort"),
+            Err(HttpError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn response_serializes_with_length_and_close() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let reader = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        Response::error(429, "queue full").write_to(&mut conn).unwrap();
+        drop(conn);
+        let text = reader.join().unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("{\"error\":\"queue full\"}"), "{text}");
+        let len: usize = text
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert_eq!(len, "{\"error\":\"queue full\"}".len());
+    }
+}

@@ -1,0 +1,223 @@
+//! Job execution: one validated [`JobSpec`] → one `Session` launch →
+//! the `RunReport` JSON body served by `GET /jobs/:id/result`.
+//!
+//! Determinism contract: `run_job(spec, _)` is a pure function of the
+//! spec. The synthetic dataset comes from `(kind, n, d, data_seed)`,
+//! chain `c` draws from the same `Pcg64` stream `Session` always
+//! assigns (`STREAM_BASE + c`), and the live-progress instrumentation
+//! below observes the chains without perturbing them — so a job
+//! submitted to a saturated server produces draws bit-identical to the
+//! same spec run solo (regression-tested in
+//! `tests/integration_serve.rs`).
+
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::session::Session;
+use crate::coordinator::supervise::{CancelToken, LaunchError, ProgressBoard};
+use crate::models::traits::{LlDiffModel, ProposalKernel};
+use crate::models::{LinRegModel, LogisticModel};
+use crate::coordinator::record::Components;
+use crate::samplers::{GaussianRandomWalk, ScalarRandomWalk};
+use crate::server::spec::{JobSpec, ModelSpec};
+use crate::testkit::models::ConjugateGaussian;
+
+/// The handles a *running* job shares with the registry: the
+/// cooperative cancel token, the live per-chain progress counters, and
+/// the recorded-draw series the status endpoint computes running
+/// R-hat/ESS from.
+#[derive(Clone)]
+pub struct JobLive {
+    pub cancel: CancelToken,
+    pub board: Arc<ProgressBoard>,
+    /// Per-chain recorded values, appended as the chains run. Locked
+    /// per chain so concurrent chains never contend on one mutex.
+    pub series: Arc<Vec<Mutex<Vec<f64>>>>,
+}
+
+impl JobLive {
+    pub fn new(chains: usize) -> Self {
+        JobLive {
+            cancel: CancelToken::new(),
+            board: Arc::new(ProgressBoard::new(chains)),
+            series: Arc::new((0..chains).map(|_| Mutex::new(Vec::new())).collect()),
+        }
+    }
+
+    /// Clone of every chain's recorded values so far.
+    pub fn series_snapshot(&self) -> Vec<Vec<f64>> {
+        self.series
+            .iter()
+            .map(|m| m.lock().unwrap_or_else(|e| e.into_inner()).clone())
+            .collect()
+    }
+}
+
+/// The scalar a job records per retained step: component 0 of the
+/// parameter — exactly what the default `RecordDefault` observer
+/// (`Param::index(0)`) records, so instrumented and plain runs emit
+/// identical draw streams.
+fn observed<P: Components>(p: &P) -> f64 {
+    p.component(0)
+}
+
+/// Run one job to completion (or cancellation). `live` threads in the
+/// server-side instrumentation; `None` runs the identical launch bare
+/// (the bit-identity oracle the integration tests compare against).
+///
+/// Returns the `RunReport` JSON on success, a rendered error on launch
+/// failure (bad resume manifest, quorum loss, oversized dataset).
+pub fn run_job(spec: &JobSpec, live: Option<&JobLive>) -> Result<String, String> {
+    match spec.model {
+        ModelSpec::Logistic { n, d, data_seed } => {
+            let data = crate::data::synthetic::two_class_gaussian(n, d, 1.2, data_seed);
+            let model = LogisticModel::new(data, 10.0).map_err(|e| e.to_string())?;
+            let kernel =
+                GaussianRandomWalk::new(spec.sigma_prop.unwrap_or(0.01), model.prior_precision);
+            let init = model.map_estimate(60);
+            launch(&model, &kernel, init, spec, live)
+        }
+        ModelSpec::Linreg { n, data_seed } => {
+            let data = crate::data::synthetic::linreg_toy(n, data_seed);
+            let model = LinRegModel::new(data, 3.0, 4950.0).map_err(|e| e.to_string())?;
+            let kernel = ScalarRandomWalk {
+                sigma: spec.sigma_prop.unwrap_or(0.1),
+                log_prior: |t: f64| -4950.0 * t.abs(),
+            };
+            launch(&model, &kernel, 0.5, spec, live)
+        }
+        ModelSpec::Conjugate { n, data_seed } => {
+            let model = ConjugateGaussian::synthetic(n, 1.0, 1.0, 0.0, 3.0, data_seed);
+            let kernel = model.rw_proposal(spec.sigma_prop.unwrap_or(0.5));
+            launch(&model, &kernel, 0.0, spec, live)
+        }
+    }
+}
+
+fn launch<M, K>(
+    model: &M,
+    kernel: &K,
+    init: M::Param,
+    spec: &JobSpec,
+    live: Option<&JobLive>,
+) -> Result<String, String>
+where
+    M: LlDiffModel + Sync,
+    M::Param: crate::coordinator::checkpoint::Persist + Components,
+    K: ProposalKernel<M::Param> + Sync,
+{
+    let mode = spec.rule.mh_mode(model.n()).map_err(|e| e.to_string())?;
+
+    let mut session = Session::new(model)
+        .kernel(kernel)
+        .rule(mode)
+        .init(init)
+        .chains(spec.chains)
+        .seed(spec.seed)
+        .budget(spec.budget)
+        .burn_in(spec.burn_in)
+        .thin(spec.thin)
+        .retry(spec.retry_policy());
+    if let Some(every) = spec.checkpoint_every {
+        session = session.checkpoint_every(every);
+    }
+    if let Some(dir) = &spec.checkpoint_dir {
+        session = session.checkpoint_dir(dir.clone());
+        if spec.resume {
+            session = session.resume_from(dir.clone());
+        }
+    }
+
+    let report = match live {
+        Some(l) => {
+            let series = Arc::clone(&l.series);
+            session
+                .cancel_token(l.cancel.clone())
+                .progress_board(Arc::clone(&l.board))
+                .record_with(move |c: usize| {
+                    let sink = Arc::clone(&series);
+                    move |p: &M::Param| {
+                        let v = observed(p);
+                        sink[c].lock().unwrap_or_else(|e| e.into_inner()).push(v);
+                        v
+                    }
+                })
+                .try_run()
+                .map_err(render_launch_error)?
+                .to_json()
+        }
+        None => session.try_run().map_err(render_launch_error)?.to_json(),
+    };
+    Ok(report)
+}
+
+fn render_launch_error(e: LaunchError) -> String {
+    format!("launch failed: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::chain::Budget;
+    use crate::server::spec::{parse_spec, RuleSpec};
+
+    fn tiny_spec() -> JobSpec {
+        JobSpec {
+            model: ModelSpec::Conjugate { n: 64, data_seed: 3 },
+            sigma_prop: None,
+            rule: RuleSpec::Exact,
+            chains: 2,
+            seed: 11,
+            budget: Budget::Steps(40),
+            burn_in: 0,
+            thin: 1,
+            checkpoint_every: None,
+            checkpoint_dir: None,
+            resume: false,
+            retries: 0,
+            retry_backoff_ms: 0,
+        }
+    }
+
+    #[test]
+    fn instrumented_run_matches_bare_run_bit_for_bit() {
+        let spec = tiny_spec();
+        let bare = run_job(&spec, None).unwrap();
+        let live = JobLive::new(spec.chains);
+        let wired = run_job(&spec, Some(&live)).unwrap();
+        assert_eq!(bare, wired, "instrumentation must not perturb the chains");
+        // and the live series saw exactly the recorded draws
+        let series = live.series_snapshot();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].len(), 40);
+        assert_eq!(series[1].len(), 40);
+        // board reached the budget
+        let snap = live.board.snapshot();
+        assert_eq!(snap.steps, vec![40, 40]);
+    }
+
+    #[test]
+    fn spec_parsed_from_json_runs_end_to_end() {
+        let spec = parse_spec(
+            r#"{"model":{"kind":"linreg","n":128,"data_seed":1},
+                "rule":{"kind":"austerity","eps":0.1,"batch":32},
+                "chains":1,"seed":5,"budget":{"kind":"steps","steps":25}}"#,
+        )
+        .unwrap();
+        let json = run_job(&spec, None).unwrap();
+        assert!(json.contains("\"rule\":\"austerity\""), "{json}");
+        assert!(json.contains("\"draws\":["), "{json}");
+        // the report itself must reparse under the strict reader
+        crate::server::json_in::parse(&json)
+            .unwrap_or_else(|e| panic!("report JSON must satisfy the strict reader: {e}"));
+    }
+
+    #[test]
+    fn pre_cancelled_job_returns_a_report_with_zero_steps() {
+        let spec = tiny_spec();
+        let live = JobLive::new(spec.chains);
+        live.cancel.cancel();
+        let json = run_job(&spec, Some(&live)).unwrap();
+        assert!(json.contains("\"steps\":0"), "{json}");
+        assert!(live.series_snapshot().iter().all(|s| s.is_empty()));
+    }
+}

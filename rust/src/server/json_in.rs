@@ -1,0 +1,713 @@
+//! Hand-rolled zero-dependency JSON *reader* — the mirror of the
+//! crate's hand-rolled writer (`RunReport::to_json` and the `json_num`
+//! / `json_str` helpers in `coordinator::checkpoint`).
+//!
+//! Strictness contract (pinned by `tests/integration_serve.rs`):
+//!
+//! * **No non-finite numbers.** The writer emits `null` for NaN/Inf;
+//!   the reader enforces the same contract from the other side —
+//!   `NaN`, `Infinity`, `1e999` and friends are typed
+//!   [`JsonError::NonFinite`] rejections, never a silent `f64::NAN`
+//!   smuggled into a job spec.
+//! * **No duplicate keys.** Last-one-wins parsing silently drops half
+//!   of a conflicting job spec; we reject instead
+//!   ([`JsonError::DuplicateKey`]).
+//! * **No trailing garbage.** A value must consume the whole input
+//!   ([`JsonError::TrailingGarbage`]) — `{"a":1}}` and `{}{}` are
+//!   errors, exactly what a framed HTTP body should guarantee.
+//! * Strict JSON grammar otherwise: no comments, no single quotes, no
+//!   leading zeros, no unescaped control characters, `\uXXXX` escapes
+//!   with surrogate pairs, and a nesting-depth limit so a hostile body
+//!   cannot blow the stack.
+//!
+//! Round-trip contract: `parse(&v.write()) == Ok(v)` for every tree
+//! this module can produce. The writer keeps integers and floats
+//! distinguishable (`Num` always renders with a `.` or exponent —
+//! Rust's shortest-roundtrip `f64` Display never loses bits), so the
+//! round trip is exact down to f64 bit patterns.
+
+use std::fmt;
+
+/// Maximum array/object nesting the parser accepts. Deep enough for
+/// any legitimate job spec or report by orders of magnitude; shallow
+/// enough that a `[[[[…` bomb fails fast instead of overflowing the
+/// recursive-descent stack.
+pub const MAX_DEPTH: usize = 64;
+
+/// A parsed JSON value. Integers that fit `i64` are kept exact
+/// (`Int`); everything else numeric is an `Num` (f64). Object member
+/// order is preserved (the writer emits deterministic key order, and
+/// keeping it makes round-trip comparisons trivial).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object member lookup (None for non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    /// Numeric view: floats as-is, integers widened (exact up to 2^53,
+    /// and the writer never emits draws outside that — they come from
+    /// f64s in the first place).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            Json::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(members) => Some(members),
+            _ => None,
+        }
+    }
+
+    /// Serialize back out through the same conventions as the crate's
+    /// writer: non-finite floats become `null`, floats always carry a
+    /// `.` so they reparse as `Num` (not `Int`), strings escape
+    /// exactly like `json_str`.
+    pub fn write(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out);
+        out
+    }
+
+    fn write_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => out.push_str(&i.to_string()),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    // Rust f64 Display is shortest-roundtrip and never
+                    // emits an exponent; add ".0" to integral values so
+                    // the reader keeps Int and Num distinguishable
+                    let s = format!("{n}");
+                    out.push_str(&s);
+                    if !s.contains('.') {
+                        out.push_str(".0");
+                    }
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => out.push_str(&crate::coordinator::checkpoint::json_str(s)),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(members) => {
+                out.push('{');
+                for (i, (k, v)) in members.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(&crate::coordinator::checkpoint::json_str(k));
+                    out.push(':');
+                    v.write_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.write())
+    }
+}
+
+/// Typed parse failure, with the byte offset where it was detected.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JsonError {
+    /// Input ended inside a value.
+    Eof,
+    /// Unexpected byte (shown) where a value/token was required.
+    Unexpected { at: usize, found: char },
+    /// `NaN`/`Infinity` token, or a literal that overflows f64 — the
+    /// writer-side `null` convention is the only spelling of
+    /// non-finite this crate accepts.
+    NonFinite { at: usize },
+    /// Same key twice in one object.
+    DuplicateKey { at: usize, key: String },
+    /// A complete value was parsed but bytes remain.
+    TrailingGarbage { at: usize },
+    /// Malformed `\` escape inside a string.
+    BadEscape { at: usize },
+    /// Number breaks the JSON grammar (leading zero, bare `.`, …).
+    BadNumber { at: usize },
+    /// Raw control character (U+0000..U+001F) inside a string.
+    ControlChar { at: usize },
+    /// Nesting beyond [`MAX_DEPTH`].
+    TooDeep { at: usize },
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Eof => write!(f, "unexpected end of input"),
+            JsonError::Unexpected { at, found } => {
+                write!(f, "unexpected character {found:?} at byte {at}")
+            }
+            JsonError::NonFinite { at } => write!(
+                f,
+                "non-finite number at byte {at} (NaN/Infinity are not JSON; \
+                 this API writes them as null)"
+            ),
+            JsonError::DuplicateKey { at, key } => {
+                write!(f, "duplicate object key {key:?} at byte {at}")
+            }
+            JsonError::TrailingGarbage { at } => {
+                write!(f, "trailing garbage after the value, starting at byte {at}")
+            }
+            JsonError::BadEscape { at } => write!(f, "bad string escape at byte {at}"),
+            JsonError::BadNumber { at } => write!(f, "malformed number at byte {at}"),
+            JsonError::ControlChar { at } => {
+                write!(f, "raw control character in string at byte {at}")
+            }
+            JsonError::TooDeep { at } => {
+                write!(f, "nesting deeper than {MAX_DEPTH} at byte {at}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+/// Parse one complete JSON value; the whole input must be consumed
+/// (modulo surrounding whitespace).
+pub fn parse(src: &str) -> Result<Json, JsonError> {
+    let mut p = Parser { bytes: src.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos < p.bytes.len() {
+        return Err(JsonError::TrailingGarbage { at: p.pos });
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn unexpected(&self) -> JsonError {
+        match self.peek() {
+            None => JsonError::Eof,
+            Some(b) => JsonError::Unexpected { at: self.pos, found: b as char },
+        }
+    }
+
+    /// Consume `lit` if it starts here.
+    fn eat(&mut self, lit: &str) -> bool {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, JsonError> {
+        if depth > MAX_DEPTH {
+            return Err(JsonError::TooDeep { at: self.pos });
+        }
+        let at = self.pos;
+        match self.peek().ok_or(JsonError::Eof)? {
+            b'n' => {
+                if self.eat("null") {
+                    Ok(Json::Null)
+                } else if self.eat("nan") {
+                    Err(JsonError::NonFinite { at })
+                } else {
+                    Err(self.unexpected())
+                }
+            }
+            b't' => {
+                if self.eat("true") {
+                    Ok(Json::Bool(true))
+                } else {
+                    Err(self.unexpected())
+                }
+            }
+            b'f' => {
+                if self.eat("false") {
+                    Ok(Json::Bool(false))
+                } else {
+                    Err(self.unexpected())
+                }
+            }
+            // the common non-JSON spellings of non-finite get the typed
+            // rejection rather than a generic "unexpected character"
+            b'N' => {
+                if self.eat("NaN") {
+                    Err(JsonError::NonFinite { at })
+                } else {
+                    Err(self.unexpected())
+                }
+            }
+            b'I' => {
+                if self.eat("Infinity") || self.eat("Inf") {
+                    Err(JsonError::NonFinite { at })
+                } else {
+                    Err(self.unexpected())
+                }
+            }
+            b'i' => {
+                if self.eat("inf") {
+                    Err(JsonError::NonFinite { at })
+                } else {
+                    Err(self.unexpected())
+                }
+            }
+            b'"' => self.string().map(Json::Str),
+            b'[' => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    self.skip_ws();
+                    items.push(self.value(depth + 1)?);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => return Err(self.unexpected()),
+                    }
+                }
+            }
+            b'{' => {
+                self.pos += 1;
+                let mut members: Vec<(String, Json)> = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(Json::Obj(members));
+                }
+                loop {
+                    self.skip_ws();
+                    let key_at = self.pos;
+                    if self.peek() != Some(b'"') {
+                        return Err(self.unexpected());
+                    }
+                    let key = self.string()?;
+                    if members.iter().any(|(k, _)| *k == key) {
+                        return Err(JsonError::DuplicateKey { at: key_at, key });
+                    }
+                    self.skip_ws();
+                    if self.peek() != Some(b':') {
+                        return Err(self.unexpected());
+                    }
+                    self.pos += 1;
+                    self.skip_ws();
+                    let val = self.value(depth + 1)?;
+                    members.push((key, val));
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(Json::Obj(members));
+                        }
+                        _ => return Err(self.unexpected()),
+                    }
+                }
+            }
+            b'-' | b'0'..=b'9' => self.number(),
+            _ => Err(self.unexpected()),
+        }
+    }
+
+    /// Parse a string (cursor on the opening quote).
+    fn string(&mut self) -> Result<String, JsonError> {
+        debug_assert_eq!(self.peek(), Some(b'"'));
+        self.pos += 1;
+        let mut out = String::new();
+        loop {
+            let at = self.pos;
+            match self.peek().ok_or(JsonError::Eof)? {
+                b'"' => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    match self.peek().ok_or(JsonError::Eof)? {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            self.pos += 1;
+                            let hi = self.hex4().ok_or(JsonError::BadEscape { at })?;
+                            let ch = if (0xD800..0xDC00).contains(&hi) {
+                                // high surrogate: a \uXXXX low surrogate
+                                // must follow
+                                if !self.eat("\\u") {
+                                    return Err(JsonError::BadEscape { at });
+                                }
+                                let lo = self.hex4().ok_or(JsonError::BadEscape { at })?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(JsonError::BadEscape { at });
+                                }
+                                let cp =
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                char::from_u32(cp).ok_or(JsonError::BadEscape { at })?
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                // lone low surrogate
+                                return Err(JsonError::BadEscape { at });
+                            } else {
+                                char::from_u32(hi).ok_or(JsonError::BadEscape { at })?
+                            };
+                            out.push(ch);
+                            // hex4 leaves the cursor after the digits;
+                            // skip the shared `pos += 1` below
+                            continue;
+                        }
+                        _ => return Err(JsonError::BadEscape { at }),
+                    }
+                    self.pos += 1;
+                }
+                b if b < 0x20 => return Err(JsonError::ControlChar { at }),
+                _ => {
+                    // multi-byte UTF-8 sequences pass through verbatim:
+                    // the input is &str, so they are guaranteed valid
+                    let s = &self.bytes[self.pos..];
+                    let step = utf8_len(s[0]);
+                    for i in 0..step {
+                        out.push_str(
+                            std::str::from_utf8(&s[i..i + 1]).unwrap_or(""),
+                        );
+                    }
+                    self.pos += step;
+                }
+            }
+        }
+    }
+
+    /// Read exactly four hex digits, advancing past them.
+    fn hex4(&mut self) -> Option<u32> {
+        let s = self.bytes.get(self.pos..self.pos + 4)?;
+        let mut v = 0u32;
+        for &b in s {
+            v = v * 16 + (b as char).to_digit(16)?;
+        }
+        self.pos += 4;
+        Some(v)
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let at = self.pos;
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+            // catch "-Infinity" / "-inf" / "-nan" with the typed error
+            if matches!(self.peek(), Some(b'I') | Some(b'i') | Some(b'N') | Some(b'n')) {
+                let rest = &self.bytes[self.pos..];
+                for lit in ["Infinity", "Inf", "inf", "NaN", "nan"] {
+                    if rest.starts_with(lit.as_bytes()) {
+                        return Err(JsonError::NonFinite { at });
+                    }
+                }
+                return Err(self.unexpected());
+            }
+        }
+        // integer part: 0, or [1-9][0-9]*
+        match self.peek() {
+            Some(b'0') => {
+                self.pos += 1;
+                if matches!(self.peek(), Some(b'0'..=b'9')) {
+                    return Err(JsonError::BadNumber { at });
+                }
+            }
+            Some(b'1'..=b'9') => {
+                while matches!(self.peek(), Some(b'0'..=b'9')) {
+                    self.pos += 1;
+                }
+            }
+            _ => return Err(JsonError::BadNumber { at }),
+        }
+        let mut is_float = false;
+        if self.peek() == Some(b'.') {
+            is_float = true;
+            self.pos += 1;
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(JsonError::BadNumber { at });
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            is_float = true;
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.pos += 1;
+            }
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(JsonError::BadNumber { at });
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .expect("number slice is ASCII");
+        if !is_float {
+            // keep i64-sized integers exact; larger literals fall
+            // through to the float path below
+            if let Ok(i) = text.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+        }
+        let v: f64 = text.parse().map_err(|_| JsonError::BadNumber { at })?;
+        if !v.is_finite() {
+            // e.g. 1e999 overflows to +Inf — same contract as the
+            // explicit Infinity tokens
+            return Err(JsonError::NonFinite { at });
+        }
+        Ok(Json::Num(v))
+    }
+}
+
+/// Byte length of the UTF-8 sequence starting with `first` (input is a
+/// valid &str, so the lead byte is trustworthy).
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(src: &str) -> Json {
+        parse(src).unwrap_or_else(|e| panic!("parse {src:?}: {e}"))
+    }
+
+    #[test]
+    fn scalars_parse() {
+        assert_eq!(p("null"), Json::Null);
+        assert_eq!(p("true"), Json::Bool(true));
+        assert_eq!(p("false"), Json::Bool(false));
+        assert_eq!(p("42"), Json::Int(42));
+        assert_eq!(p("-7"), Json::Int(-7));
+        assert_eq!(p("0"), Json::Int(0));
+        assert_eq!(p("3.25"), Json::Num(3.25));
+        assert_eq!(p("-0.5"), Json::Num(-0.5));
+        assert_eq!(p("1e3"), Json::Num(1000.0));
+        assert_eq!(p("2.5E-2"), Json::Num(0.025));
+        assert_eq!(p("\"hi\""), Json::Str("hi".into()));
+        assert_eq!(p("  [1, 2]  "), Json::Arr(vec![Json::Int(1), Json::Int(2)]));
+    }
+
+    #[test]
+    fn nested_structures_parse_with_order_preserved() {
+        let v = p(r#"{"b":[1,{"x":null}],"a":"s"}"#);
+        let obj = v.as_obj().unwrap();
+        assert_eq!(obj[0].0, "b");
+        assert_eq!(obj[1].0, "a");
+        assert_eq!(v.get("a").and_then(Json::as_str), Some("s"));
+        assert_eq!(v.get("b").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+        assert!(v.get("b").unwrap().as_arr().unwrap()[1].get("x").unwrap().is_null());
+    }
+
+    #[test]
+    fn string_escapes_decode() {
+        assert_eq!(p(r#""a\"b\\c\/d\n\t\r\b\f""#), Json::Str("a\"b\\c/d\n\t\r\u{8}\u{c}".into()));
+        assert_eq!(p(r#""Aé""#), Json::Str("Aé".into()));
+        // surrogate pair: U+1D11E musical G clef
+        assert_eq!(p(r#""𝄞""#), Json::Str("\u{1D11E}".into()));
+        // raw multi-byte UTF-8 passes through
+        assert_eq!(p("\"héllo → €\""), Json::Str("héllo → €".into()));
+    }
+
+    #[test]
+    fn non_finite_is_a_typed_rejection() {
+        for src in [
+            "NaN", "nan", "Infinity", "-Infinity", "inf", "-inf", "Inf", "-nan", "1e999",
+            "-1e999", "[1, NaN]", r#"{"eps": Infinity}"#,
+        ] {
+            match parse(src) {
+                Err(JsonError::NonFinite { .. }) => {}
+                other => panic!("{src:?} -> {other:?}, wanted NonFinite"),
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_are_rejected() {
+        match parse(r#"{"a":1,"b":2,"a":3}"#) {
+            Err(JsonError::DuplicateKey { key, .. }) => assert_eq!(key, "a"),
+            other => panic!("{other:?}"),
+        }
+        // nested objects each get their own key space
+        assert!(parse(r#"{"a":{"a":1},"b":{"a":2}}"#).is_ok());
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        for src in ["{} {}", "1 2", "[1]]", "null x", "{\"a\":1}tail"] {
+            match parse(src) {
+                Err(JsonError::TrailingGarbage { .. }) | Err(JsonError::Unexpected { .. }) => {}
+                other => panic!("{src:?} -> {other:?}"),
+            }
+        }
+        // specifically: a complete value plus garbage is TrailingGarbage
+        assert!(matches!(parse("{} {}"), Err(JsonError::TrailingGarbage { .. })));
+    }
+
+    #[test]
+    fn malformed_inputs_are_typed_errors_not_panics() {
+        assert!(matches!(parse(""), Err(JsonError::Eof)));
+        assert!(matches!(parse("{"), Err(JsonError::Eof)));
+        assert!(matches!(parse("\"abc"), Err(JsonError::Eof)));
+        assert!(matches!(parse("01"), Err(JsonError::BadNumber { .. })));
+        assert!(matches!(parse("1."), Err(JsonError::BadNumber { .. })));
+        assert!(matches!(parse("-"), Err(JsonError::BadNumber { .. })));
+        assert!(matches!(parse("1e"), Err(JsonError::BadNumber { .. })));
+        assert!(matches!(parse(r#""\q""#), Err(JsonError::BadEscape { .. })));
+        assert!(matches!(parse(r#""\ud834""#), Err(JsonError::BadEscape { .. })));
+        assert!(matches!(parse("\"a\nb\""), Err(JsonError::ControlChar { .. })));
+        assert!(matches!(parse("{1:2}"), Err(JsonError::Unexpected { .. })));
+        assert!(matches!(parse("[1,]"), Err(JsonError::Unexpected { .. })));
+        let bomb = "[".repeat(MAX_DEPTH + 2);
+        assert!(matches!(parse(&bomb), Err(JsonError::TooDeep { .. })));
+    }
+
+    #[test]
+    fn big_integers_fall_back_to_float_or_reject() {
+        assert_eq!(p("9223372036854775807"), Json::Int(i64::MAX));
+        // beyond i64: becomes a float (finite), not an error
+        match p("92233720368547758080") {
+            Json::Num(v) => assert!(v.is_finite()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn write_round_trips_bit_exactly() {
+        let tree = Json::Obj(vec![
+            ("rule".into(), Json::Str("austerity".into())),
+            ("eps".into(), Json::Num(0.05)),
+            ("steps".into(), Json::Int(4000)),
+            ("whole".into(), Json::Num(2.0)), // integral float stays a float
+            ("bad".into(), Json::Null),
+            (
+                "draws".into(),
+                Json::Arr(vec![
+                    Json::Num(-1.2345678912345679e-7),
+                    Json::Num(f64::MIN_POSITIVE),
+                    Json::Num(1.0 / 3.0),
+                    Json::Bool(false),
+                ]),
+            ),
+            ("label".into(), Json::Str("quote \" slash \\ nl \n".into())),
+        ]);
+        let text = tree.write();
+        assert_eq!(parse(&text), Ok(tree.clone()), "round trip of {text}");
+        // and a second trip is a fixed point
+        assert_eq!(parse(&p(&text).write()), Ok(tree));
+    }
+
+    #[test]
+    fn write_renders_non_finite_as_null() {
+        assert_eq!(Json::Num(f64::NAN).write(), "null");
+        assert_eq!(Json::Arr(vec![Json::Num(f64::INFINITY)]).write(), "[null]");
+    }
+}

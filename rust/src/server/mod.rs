@@ -1,0 +1,423 @@
+//! The `austerity serve` daemon: a long-lived job server over the
+//! sampling engine (`austerity serve --addr 127.0.0.1:7878`).
+//!
+//! Clients POST JSON job specs — which built-in synthetic model
+//! (logistic / linreg / conjugate-Gaussian, with size and seed),
+//! which acceptance rule and budget, how many chains, checkpoint and
+//! retry knobs — and poll for incremental progress and the final
+//! `RunReport`. Many jobs run concurrently, all multiplexed over the
+//! crate's shared global [`Executor`] pool, so a saturated server
+//! degrades throughput but never correctness:
+//!
+//! * **Determinism** — same job spec + seed → bit-identical draws
+//!   regardless of concurrent load, because chains own their RNG
+//!   streams and the executor only decides *where* work runs, never
+//!   *what* is computed (`tests/integration_serve.rs` pins this).
+//! * **Typed backpressure** — at most `--max-jobs` jobs run at once,
+//!   at most `--max-queue` wait; beyond that, admission returns 429.
+//! * **Graceful shutdown** — SIGINT/SIGTERM (or `POST /shutdown`)
+//!   stops admissions, waits up to the drain deadline for running
+//!   jobs, then raises every job's cancel token; chains flush a final
+//!   checkpoint at the next step boundary, so a later job with
+//!   `"resume": true` finishes the interrupted run. A second signal
+//!   aborts immediately.
+//!
+//! Module map:
+//!
+//! * [`json_in`] — strict zero-dep JSON reader (mirror of the crate's
+//!   writer; rejects NaN/Inf, duplicate keys, trailing garbage)
+//! * [`http`] — minimal HTTP/1.1 framing over `std::net`
+//! * [`spec`] — typed job specs with admission-time validation
+//! * [`registry`] — job table, bounded FIFO admission, lifecycle
+//! * [`jobs`] — spec → `Session` launch → `RunReport` JSON
+//! * [`handlers`] — endpoint routing (pure, unit-testable)
+//!
+//! Everything is hand-rolled on `std` — the daemon adds no
+//! dependencies, like the rest of the crate.
+
+pub mod handlers;
+pub mod http;
+pub mod jobs;
+pub mod json_in;
+pub mod registry;
+pub mod spec;
+
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::executor::Executor;
+use registry::{Registry, RegistryCfg};
+
+/// Construction knobs for [`Server::bind`] (the `serve` CLI flags).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address, e.g. `127.0.0.1:7878` (`:0` picks a free port).
+    pub addr: SocketAddr,
+    /// Concurrent jobs (= runner threads).
+    pub max_jobs: usize,
+    /// Admission queue capacity beyond the running jobs.
+    pub max_queue: usize,
+    /// How long shutdown waits for running jobs before cancelling them.
+    pub drain: Duration,
+    /// Worker threads to pre-warm in the shared executor pool
+    /// (0 = leave the pool as-is; chains grow it on demand).
+    pub threads: usize,
+    /// Server-side default checkpoint root: jobs without explicit
+    /// checkpoint config get `<root>/job-<id>` at `ckpt_every`.
+    pub ckpt_root: Option<PathBuf>,
+    pub ckpt_every: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".parse().expect("static addr parses"),
+            max_jobs: 4,
+            max_queue: 64,
+            drain: Duration::from_secs(5),
+            threads: 0,
+            ckpt_root: None,
+            ckpt_every: None,
+        }
+    }
+}
+
+/// The bound daemon: listener + registry + runner threads.
+pub struct Server {
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    runners: Vec<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    drain: Duration,
+}
+
+impl Server {
+    /// Bind the listener and spawn the runner threads. The server does
+    /// not accept connections until [`Server::run`].
+    pub fn bind(cfg: ServeConfig) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(cfg.addr)?;
+        // nonblocking so the accept loop can poll the shutdown flags
+        listener.set_nonblocking(true)?;
+        if cfg.threads > 0 {
+            // the accept loop itself is a thread; pre-warm the rest
+            Executor::global().ensure_workers(cfg.threads.saturating_sub(1).max(1));
+        }
+        let registry = Arc::new(Registry::new(RegistryCfg {
+            max_jobs: cfg.max_jobs,
+            max_queue: cfg.max_queue,
+            ckpt_root: cfg.ckpt_root.clone(),
+            ckpt_every: cfg.ckpt_every,
+        }));
+        let runners = (0..cfg.max_jobs.max(1))
+            .map(|i| {
+                let reg = Arc::clone(&registry);
+                std::thread::Builder::new()
+                    .name(format!("austerity-runner-{i}"))
+                    .spawn(move || runner_loop(&reg))
+                    .expect("spawn runner thread")
+            })
+            .collect();
+        Ok(Server {
+            listener,
+            registry,
+            runners,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            drain: cfg.drain,
+        })
+    }
+
+    /// The actual bound address (port resolved when `:0` was asked).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// Handle for programmatic shutdown (tests, embedding): store
+    /// `true` and the accept loop exits into the drain sequence.
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    /// Registry handle (tests and embedding).
+    pub fn registry(&self) -> Arc<Registry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Serve until shutdown is requested (signal, `POST /shutdown`, or
+    /// [`Server::shutdown_flag`]), then drain and exit.
+    pub fn run(self) {
+        let Server { listener, registry, runners, shutdown, drain } = self;
+        let mut connections: Vec<JoinHandle<()>> = Vec::new();
+        loop {
+            if shutdown.load(Ordering::Relaxed) || signal::interrupted() {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let reg = Arc::clone(&registry);
+                    let stop = Arc::clone(&shutdown);
+                    let handle = std::thread::Builder::new()
+                        .name("austerity-conn".into())
+                        .spawn(move || handle_connection(stream, &reg, &stop))
+                        .expect("spawn connection thread");
+                    connections.push(handle);
+                    // reap finished connection threads so the vec stays small
+                    connections.retain(|h| !h.is_finished());
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    eprintln!("serve: accept failed: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+
+        // -- graceful shutdown -----------------------------------------
+        // 1. stop admissions (new POSTs get 503 while we drain)
+        registry.begin_drain();
+        eprintln!("serve: draining (up to {:.1}s)...", drain.as_secs_f64());
+        // 2. give running jobs the drain window to finish on their own
+        let idle = registry.await_idle(drain);
+        if !idle {
+            // 3. past the deadline: cancel cooperatively; chains flush a
+            //    final checkpoint at the next step boundary, so these
+            //    jobs are resumable
+            eprintln!("serve: drain deadline passed; cancelling running jobs");
+            registry.cancel_running();
+            if !registry.await_idle(Duration::from_secs(10)) {
+                eprintln!("serve: jobs still running after cancel; abandoning");
+            }
+        }
+        // 4. wake blocked runners and join them
+        registry.close();
+        for h in runners {
+            let _ = h.join();
+        }
+        for h in connections {
+            let _ = h.join();
+        }
+        eprintln!("serve: shut down cleanly");
+    }
+}
+
+/// One runner thread: claim jobs until the registry closes. A panic
+/// inside a launch is caught and recorded as a job failure — one bad
+/// job never takes a runner (or the daemon) down.
+fn runner_loop(reg: &Registry) {
+    while let Some((id, spec, live)) = reg.next_job() {
+        let outcome = catch_unwind(AssertUnwindSafe(|| jobs::run_job(&spec, Some(&live))));
+        let outcome = match outcome {
+            Ok(res) => res,
+            Err(payload) => Err(format!("job panicked: {}", panic_reason(&payload))),
+        };
+        reg.finish(id, outcome);
+    }
+}
+
+/// Render a panic payload (local copy of the engine's private helper).
+fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Serve one connection: read a request, route it, write the response.
+/// Framing errors get their 4xx; socket errors just drop the
+/// connection. Never panics the daemon.
+fn handle_connection(mut stream: TcpStream, reg: &Registry, shutdown: &AtomicBool) {
+    // a stuck peer must not pin a thread forever
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_nonblocking(false);
+    match http::read_request(&mut stream) {
+        Ok(req) => {
+            let (resp, stop) = handlers::route(&req, reg);
+            if stop {
+                shutdown.store(true, Ordering::Relaxed);
+            }
+            if let Err(e) = resp.write_to(&mut stream) {
+                eprintln!("serve: response write failed: {e}");
+            }
+        }
+        Err(e) => {
+            if let Some(resp) = e.response() {
+                let _ = resp.write_to(&mut stream);
+            }
+        }
+    }
+}
+
+/// Process-signal plumbing for graceful shutdown, built on the raw
+/// libc `signal(2)` entry point so the daemon stays zero-dependency.
+/// The handler is async-signal-safe: it only increments an atomic.
+pub mod signal {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static SIGNAL_COUNT: AtomicUsize = AtomicUsize::new(0);
+
+    /// Has a termination signal arrived since the handlers were
+    /// installed?
+    pub fn interrupted() -> bool {
+        SIGNAL_COUNT.load(Ordering::Relaxed) > 0
+    }
+
+    #[cfg(unix)]
+    mod imp {
+        use super::SIGNAL_COUNT;
+        use std::sync::atomic::Ordering;
+
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+        }
+
+        extern "C" fn on_signal(_signum: i32) {
+            // first signal: request graceful drain; second: the user
+            // really means it — abort (abort() is async-signal-safe)
+            if SIGNAL_COUNT.fetch_add(1, Ordering::Relaxed) >= 1 {
+                std::process::abort();
+            }
+        }
+
+        pub fn install() {
+            unsafe {
+                signal(SIGINT, on_signal);
+                signal(SIGTERM, on_signal);
+            }
+        }
+    }
+
+    #[cfg(not(unix))]
+    mod imp {
+        pub fn install() {}
+    }
+
+    /// Install SIGINT/SIGTERM handlers (unix; no-op elsewhere). First
+    /// signal drains gracefully, second aborts.
+    pub fn install_signal_handlers() {
+        imp::install();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    fn start(cfg: ServeConfig) -> (SocketAddr, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+        let srv = Server::bind(cfg).unwrap();
+        let addr = srv.local_addr();
+        let stop = srv.shutdown_flag();
+        let t = std::thread::spawn(move || srv.run());
+        (addr, stop, t)
+    }
+
+    fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        s.write_all(req.as_bytes()).unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        let status: u16 = raw
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("no status line in {raw:?}"));
+        let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, body)
+    }
+
+    fn local_cfg() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".parse().unwrap(),
+            max_jobs: 2,
+            max_queue: 4,
+            drain: Duration::from_secs(2),
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn healthz_round_trips_over_a_real_socket() {
+        let (addr, stop, t) = start(local_cfg());
+        let (status, body) = http(addr, "GET", "/healthz", "");
+        assert_eq!(status, 200);
+        assert!(body.contains("\"status\":\"ok\""), "{body}");
+        stop.store(true, Ordering::Relaxed);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn submit_runs_to_done_and_serves_the_report() {
+        let (addr, stop, t) = start(local_cfg());
+        let spec = r#"{"model":{"kind":"conjugate","n":64,"data_seed":2},
+                       "rule":{"kind":"exact"},"chains":2,"seed":9,
+                       "budget":{"kind":"steps","steps":60}}"#;
+        let (status, body) = http(addr, "POST", "/jobs", spec);
+        assert_eq!(status, 202, "{body}");
+        assert!(body.contains("\"id\":0"), "{body}");
+        // poll until terminal
+        let mut last = String::new();
+        for _ in 0..400 {
+            let (s, b) = http(addr, "GET", "/jobs/0", "");
+            assert_eq!(s, 200);
+            last = b;
+            if last.contains("\"state\":\"done\"") {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(last.contains("\"state\":\"done\""), "{last}");
+        let (s, report) = http(addr, "GET", "/jobs/0/result", "");
+        assert_eq!(s, 200);
+        assert!(report.contains("\"rule\":\"exact\""), "{report}");
+        json_in::parse(&report).expect("report must satisfy the strict reader");
+        stop.store(true, Ordering::Relaxed);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn malformed_frames_and_specs_never_kill_the_daemon() {
+        let (addr, stop, t) = start(local_cfg());
+        // raw garbage instead of HTTP
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"\x00\x01\x02 garbage\r\n\r\n").unwrap();
+            let mut out = Vec::new();
+            let _ = s.read_to_end(&mut out);
+        }
+        // bad spec
+        let (s, _) = http(addr, "POST", "/jobs", "{\"model\":");
+        assert_eq!(s, 400);
+        // the daemon is still alive
+        let (s, _) = http(addr, "GET", "/healthz", "");
+        assert_eq!(s, 200);
+        stop.store(true, Ordering::Relaxed);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn post_shutdown_drains_the_server() {
+        let (addr, _stop, t) = start(local_cfg());
+        let (s, body) = http(addr, "POST", "/shutdown", "");
+        assert_eq!(s, 200);
+        assert!(body.contains("shutting_down"), "{body}");
+        t.join().unwrap(); // run() returns on its own
+    }
+}

@@ -1,0 +1,571 @@
+//! The job registry: admission, queueing, lifecycle, and progress.
+//!
+//! One [`Registry`] instance is shared by the accept loop (admission +
+//! status queries), the runner threads (claim / finish), and the
+//! shutdown path (drain / cancel / close). All state lives behind a
+//! single mutex with two condvars:
+//!
+//! * `work` — wakes runner threads when a job is queued (or the
+//!   registry closes);
+//! * `idle` — wakes the drain path when the last running job finishes.
+//!
+//! Admission control is a bounded FIFO: at most `max_jobs` jobs run at
+//! once (one per runner thread), at most `max_queue` more wait. Beyond
+//! that, [`AdmitError::QueueFull`] maps to the 429 the API promises —
+//! typed backpressure, never an unbounded pile-up.
+//!
+//! Job IDs are indices into an append-only slot vector: they stay
+//! valid for the daemon's lifetime, so a client can poll a finished
+//! job long after it completed.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::checkpoint::{json_num, json_str};
+use crate::metrics::convergence::cross_chain;
+use crate::server::jobs::JobLive;
+use crate::server::spec::{parse_spec, JobSpec};
+
+/// Where a job is in its lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted, waiting for a runner slot.
+    Queued,
+    /// A runner thread is driving its chains.
+    Running,
+    /// Finished; the `RunReport` JSON is available.
+    Done,
+    /// The launch failed; the error string is available.
+    Failed,
+    /// Cancelled before or during execution.
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// Why admission refused a job.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdmitError {
+    /// The bounded queue is at capacity → 429.
+    QueueFull { cap: usize },
+    /// The server is draining for shutdown → 503.
+    Draining,
+    /// The spec failed parsing/validation → 400 (rendered message).
+    Spec(String),
+}
+
+/// The result view `GET /jobs/:id/result` serves.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobOutcome {
+    /// Still queued or running → 409.
+    Pending,
+    /// The full `RunReport` JSON.
+    Report(String),
+    /// Cancelled before a report was produced.
+    CancelledEarly,
+    /// Launch failure, rendered.
+    Failed(String),
+}
+
+/// Registry construction knobs (from the `serve` CLI flags).
+#[derive(Clone, Debug)]
+pub struct RegistryCfg {
+    /// Concurrent jobs (= runner threads).
+    pub max_jobs: usize,
+    /// Waiting jobs beyond the running ones.
+    pub max_queue: usize,
+    /// When set, jobs that request checkpointing without an explicit
+    /// directory get `<ckpt_root>/job-<id>`; when `ckpt_every` is also
+    /// set, *every* job is checkpointed at that cadence by default —
+    /// the knob behind "shutdown flushes, `resume` finishes".
+    pub ckpt_root: Option<PathBuf>,
+    pub ckpt_every: Option<usize>,
+}
+
+struct JobSlot {
+    spec: Arc<JobSpec>,
+    state: JobState,
+    live: JobLive,
+    result: Option<String>,
+    error: Option<String>,
+    /// Set when DELETE arrived while the job ran: `finish` maps the
+    /// (cooperatively stopped) report to `Cancelled`, not `Done`.
+    cancel_requested: bool,
+    /// FIFO stamp assigned when a runner claimed the job — lets tests
+    /// assert admission order directly.
+    admitted_seq: Option<u64>,
+}
+
+struct RegState {
+    jobs: Vec<JobSlot>,
+    queue: VecDeque<usize>,
+    running: usize,
+    draining: bool,
+    closed: bool,
+    admit_seq: u64,
+}
+
+/// Shared job table + admission queue. See module docs.
+pub struct Registry {
+    state: Mutex<RegState>,
+    work: Condvar,
+    idle: Condvar,
+    cfg: RegistryCfg,
+}
+
+impl Registry {
+    pub fn new(cfg: RegistryCfg) -> Self {
+        Registry {
+            state: Mutex::new(RegState {
+                jobs: Vec::new(),
+                queue: VecDeque::new(),
+                running: 0,
+                draining: false,
+                closed: false,
+                admit_seq: 0,
+            }),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+            cfg,
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, RegState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Parse, validate and enqueue a job. Returns its ID.
+    pub fn submit(&self, body: &str) -> Result<usize, AdmitError> {
+        let mut spec = parse_spec(body).map_err(|e| AdmitError::Spec(e.to_string()))?;
+        let mut st = self.lock();
+        if st.draining || st.closed {
+            return Err(AdmitError::Draining);
+        }
+        if st.queue.len() >= self.cfg.max_queue {
+            return Err(AdmitError::QueueFull { cap: self.cfg.max_queue });
+        }
+        let id = st.jobs.len();
+        // server-side checkpoint defaults: give the job a directory
+        // (and cadence, if configured) under the checkpoint root
+        if let Some(root) = &self.cfg.ckpt_root {
+            if spec.checkpoint_every.is_none() {
+                spec.checkpoint_every = self.cfg.ckpt_every;
+            }
+            if spec.checkpoint_every.is_some() && spec.checkpoint_dir.is_none() {
+                spec.checkpoint_dir = Some(root.join(format!("job-{id}")));
+            }
+        }
+        let live = JobLive::new(spec.chains);
+        st.jobs.push(JobSlot {
+            spec: Arc::new(spec),
+            state: JobState::Queued,
+            live,
+            result: None,
+            error: None,
+            cancel_requested: false,
+            admitted_seq: None,
+        });
+        st.queue.push_back(id);
+        drop(st);
+        self.work.notify_one();
+        Ok(id)
+    }
+
+    /// Runner-thread entry: block until a job is available, claim it
+    /// (FIFO), and return its handles. `None` once the registry is
+    /// closed and the queue is empty — the runner should exit.
+    pub fn next_job(&self) -> Option<(usize, Arc<JobSpec>, JobLive)> {
+        let mut st = self.lock();
+        loop {
+            if let Some(id) = st.queue.pop_front() {
+                let seq = st.admit_seq;
+                st.admit_seq += 1;
+                st.running += 1;
+                let slot = &mut st.jobs[id];
+                slot.state = JobState::Running;
+                slot.admitted_seq = Some(seq);
+                return Some((id, Arc::clone(&slot.spec), slot.live.clone()));
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.work.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Runner-thread exit: record the outcome and release the slot.
+    pub fn finish(&self, id: usize, outcome: Result<String, String>) {
+        let mut st = self.lock();
+        st.running = st.running.saturating_sub(1);
+        let slot = &mut st.jobs[id];
+        match outcome {
+            // a cooperatively-cancelled launch still returns a report;
+            // the cancel request wins over "done"
+            Ok(report) => {
+                slot.result = Some(report);
+                slot.state = if slot.cancel_requested {
+                    JobState::Cancelled
+                } else {
+                    JobState::Done
+                };
+            }
+            Err(e) => {
+                slot.error = Some(e);
+                slot.state = if slot.cancel_requested {
+                    JobState::Cancelled
+                } else {
+                    JobState::Failed
+                };
+            }
+        }
+        drop(st);
+        self.idle.notify_all();
+    }
+
+    /// Cooperative cancel. Queued jobs cancel immediately; running jobs
+    /// get their token raised and settle as `Cancelled` when the chains
+    /// notice (next step boundary). Terminal jobs are left unchanged.
+    /// `None` for unknown IDs.
+    pub fn cancel(&self, id: usize) -> Option<JobState> {
+        let mut st = self.lock();
+        let exists = id < st.jobs.len();
+        if !exists {
+            return None;
+        }
+        match st.jobs[id].state {
+            JobState::Queued => {
+                st.queue.retain(|&q| q != id);
+                let slot = &mut st.jobs[id];
+                slot.state = JobState::Cancelled;
+                slot.cancel_requested = true;
+                Some(JobState::Cancelled)
+            }
+            JobState::Running => {
+                let slot = &mut st.jobs[id];
+                slot.cancel_requested = true;
+                slot.live.cancel.cancel();
+                Some(JobState::Running)
+            }
+            terminal => Some(terminal),
+        }
+    }
+
+    /// Current state of a job (`None` for unknown IDs).
+    pub fn state_of(&self, id: usize) -> Option<JobState> {
+        self.lock().jobs.get(id).map(|s| s.state)
+    }
+
+    /// FIFO claim stamp (test hook for admission-order assertions).
+    pub fn admitted_seq(&self, id: usize) -> Option<u64> {
+        self.lock().jobs.get(id).and_then(|s| s.admitted_seq)
+    }
+
+    /// Incremental progress document for `GET /jobs/:id`: lifecycle
+    /// state plus live counters and running convergence diagnostics
+    /// computed over the draws recorded *so far*.
+    pub fn status_json(&self, id: usize) -> Option<String> {
+        let (state, spec, live, cancel_requested) = {
+            let st = self.lock();
+            let slot = st.jobs.get(id)?;
+            (slot.state, Arc::clone(&slot.spec), slot.live.clone(), slot.cancel_requested)
+        };
+        // snapshot outside the registry lock: cross_chain over long
+        // series must not stall admissions
+        let snap = live.board.snapshot();
+        let series = live.series_snapshot();
+        let conv = cross_chain(&series);
+        let draws: usize = series.iter().map(|s| s.len()).sum();
+        let mut out = String::with_capacity(256);
+        out.push_str("{\"id\":");
+        out.push_str(&id.to_string());
+        out.push_str(",\"state\":");
+        out.push_str(&json_str(state.as_str()));
+        out.push_str(",\"cancel_requested\":");
+        out.push_str(if cancel_requested { "true" } else { "false" });
+        out.push_str(",\"model\":");
+        out.push_str(&json_str(spec.model.kind()));
+        out.push_str(",\"rule\":");
+        out.push_str(&json_str(spec.rule.label()));
+        out.push_str(",\"chains\":");
+        out.push_str(&spec.chains.to_string());
+        out.push_str(",\"progress\":{\"steps\":");
+        out.push_str(&snap.total_steps().to_string());
+        out.push_str(",\"accepted\":");
+        out.push_str(&snap.total_accepted().to_string());
+        out.push_str(",\"data_used\":");
+        out.push_str(&snap.total_data_used().to_string());
+        out.push_str(",\"acceptance_rate\":");
+        out.push_str(&json_num(snap.acceptance_rate()));
+        out.push_str(",\"draws\":");
+        out.push_str(&draws.to_string());
+        out.push_str(",\"per_chain_steps\":[");
+        for (i, s) in snap.steps.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&s.to_string());
+        }
+        out.push_str("]},\"convergence\":{\"rhat\":");
+        out.push_str(&json_num(conv.rhat));
+        out.push_str(",\"ess\":");
+        out.push_str(&json_num(conv.ess));
+        out.push_str(",\"pooled_mean\":");
+        out.push_str(&json_num(conv.pooled_mean));
+        out.push_str(",\"n_samples\":");
+        out.push_str(&conv.n_samples.to_string());
+        out.push_str("}}");
+        Some(out)
+    }
+
+    /// The result view (`None` for unknown IDs).
+    pub fn outcome(&self, id: usize) -> Option<JobOutcome> {
+        let st = self.lock();
+        let slot = st.jobs.get(id)?;
+        Some(match slot.state {
+            JobState::Queued | JobState::Running => JobOutcome::Pending,
+            JobState::Done => JobOutcome::Report(
+                slot.result.clone().unwrap_or_else(|| "{}".into()),
+            ),
+            JobState::Cancelled => match &slot.result {
+                // the flushed partial report is still useful; serve it
+                Some(r) => JobOutcome::Report(r.clone()),
+                None => JobOutcome::CancelledEarly,
+            },
+            JobState::Failed => {
+                JobOutcome::Failed(slot.error.clone().unwrap_or_else(|| "unknown".into()))
+            }
+        })
+    }
+
+    /// `GET /healthz` document: queue/running/terminal counts.
+    pub fn healthz_json(&self) -> String {
+        let st = self.lock();
+        let mut done = 0usize;
+        let mut failed = 0usize;
+        let mut cancelled = 0usize;
+        for j in &st.jobs {
+            match j.state {
+                JobState::Done => done += 1,
+                JobState::Failed => failed += 1,
+                JobState::Cancelled => cancelled += 1,
+                _ => {}
+            }
+        }
+        format!(
+            "{{\"status\":\"ok\",\"draining\":{},\"jobs\":{{\"queued\":{},\"running\":{},\"done\":{done},\"failed\":{failed},\"cancelled\":{cancelled}}},\"max_jobs\":{},\"max_queue\":{}}}",
+            st.draining, st.queue.len(), st.running, self.cfg.max_jobs, self.cfg.max_queue,
+        )
+    }
+
+    /// Stop admitting new jobs (submissions now get 503). Queued and
+    /// running jobs continue.
+    pub fn begin_drain(&self) {
+        self.lock().draining = true;
+    }
+
+    /// Raise every running job's cancel token and cancel everything
+    /// still queued (the impatient half of shutdown, after the drain
+    /// deadline passes). Running jobs flush a final checkpoint at the
+    /// next step boundary, so `resume` can finish them later.
+    pub fn cancel_running(&self) {
+        let ids: Vec<usize> = {
+            let st = self.lock();
+            (0..st.jobs.len())
+                .filter(|&i| !st.jobs[i].state.is_terminal())
+                .collect()
+        };
+        for id in ids {
+            self.cancel(id);
+        }
+    }
+
+    /// Block until no job is queued or running, or the deadline passes.
+    /// Returns `true` when idle.
+    pub fn await_idle(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.lock();
+        loop {
+            if st.running == 0 && st.queue.is_empty() {
+                return true;
+            }
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+                return false;
+            };
+            let (g, _) = self
+                .idle
+                .wait_timeout(st, left)
+                .unwrap_or_else(|e| e.into_inner());
+            st = g;
+        }
+    }
+
+    /// Final shutdown: wake every blocked runner so `next_job` returns
+    /// `None` and the threads exit.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.work.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg(max_jobs: usize, max_queue: usize) -> Registry {
+        Registry::new(RegistryCfg { max_jobs, max_queue, ckpt_root: None, ckpt_every: None })
+    }
+
+    const SPEC: &str =
+        r#"{"model":{"kind":"conjugate","n":64},"budget":{"kind":"steps","steps":10}}"#;
+
+    #[test]
+    fn lifecycle_queued_running_done() {
+        let r = reg(1, 8);
+        let id = r.submit(SPEC).unwrap();
+        assert_eq!(r.state_of(id), Some(JobState::Queued));
+        assert_eq!(r.outcome(id), Some(JobOutcome::Pending));
+        let (claimed, _spec, _live) = r.next_job().unwrap();
+        assert_eq!(claimed, id);
+        assert_eq!(r.state_of(id), Some(JobState::Running));
+        r.finish(id, Ok("{\"ok\":true}".into()));
+        assert_eq!(r.state_of(id), Some(JobState::Done));
+        assert_eq!(r.outcome(id), Some(JobOutcome::Report("{\"ok\":true}".into())));
+    }
+
+    #[test]
+    fn bounded_queue_rejects_with_capacity() {
+        let r = reg(1, 2);
+        r.submit(SPEC).unwrap();
+        r.submit(SPEC).unwrap();
+        match r.submit(SPEC) {
+            Err(AdmitError::QueueFull { cap }) => assert_eq!(cap, 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_refused_at_admission() {
+        let r = reg(1, 8);
+        assert!(matches!(r.submit("not json"), Err(AdmitError::Spec(_))));
+        assert!(matches!(
+            r.submit(r#"{"model":{"kind":"zebra"},"budget":{"kind":"steps","steps":1}}"#),
+            Err(AdmitError::Spec(_))
+        ));
+        // nothing was enqueued
+        assert!(r.healthz_json().contains("\"queued\":0"));
+    }
+
+    #[test]
+    fn queued_cancel_is_immediate_and_skips_execution() {
+        let r = reg(1, 8);
+        let a = r.submit(SPEC).unwrap();
+        let b = r.submit(SPEC).unwrap();
+        assert_eq!(r.cancel(a), Some(JobState::Cancelled));
+        assert_eq!(r.state_of(a), Some(JobState::Cancelled));
+        assert_eq!(r.outcome(a), Some(JobOutcome::CancelledEarly));
+        // the runner now claims b, not the cancelled a
+        let (claimed, ..) = r.next_job().unwrap();
+        assert_eq!(claimed, b);
+    }
+
+    #[test]
+    fn running_cancel_raises_the_token_and_wins_over_done() {
+        let r = reg(1, 8);
+        let id = r.submit(SPEC).unwrap();
+        let (_, _, live) = r.next_job().unwrap();
+        assert!(!live.cancel.is_cancelled());
+        assert_eq!(r.cancel(id), Some(JobState::Running));
+        assert!(live.cancel.is_cancelled(), "token must be shared with the runner");
+        // the runner returns its flushed partial report
+        r.finish(id, Ok("{\"partial\":true}".into()));
+        assert_eq!(r.state_of(id), Some(JobState::Cancelled));
+        assert_eq!(r.outcome(id), Some(JobOutcome::Report("{\"partial\":true}".into())));
+    }
+
+    #[test]
+    fn drain_refuses_new_work_but_keeps_old() {
+        let r = reg(1, 8);
+        let id = r.submit(SPEC).unwrap();
+        r.begin_drain();
+        assert!(matches!(r.submit(SPEC), Err(AdmitError::Draining)));
+        assert_eq!(r.state_of(id), Some(JobState::Queued));
+        let (claimed, ..) = r.next_job().unwrap();
+        assert_eq!(claimed, id);
+        r.finish(id, Ok("{}".into()));
+        assert!(r.await_idle(Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn close_unblocks_runners() {
+        let r = Arc::new(reg(1, 8));
+        let r2 = Arc::clone(&r);
+        let t = std::thread::spawn(move || r2.next_job().is_none());
+        std::thread::sleep(Duration::from_millis(20));
+        r.close();
+        assert!(t.join().unwrap(), "blocked runner must see None after close()");
+    }
+
+    #[test]
+    fn fifo_order_is_stamped() {
+        let r = reg(2, 8);
+        let a = r.submit(SPEC).unwrap();
+        let b = r.submit(SPEC).unwrap();
+        let c = r.submit(SPEC).unwrap();
+        for _ in 0..3 {
+            let (id, ..) = r.next_job().unwrap();
+            r.finish(id, Ok("{}".into()));
+        }
+        let (sa, sb, sc) =
+            (r.admitted_seq(a).unwrap(), r.admitted_seq(b).unwrap(), r.admitted_seq(c).unwrap());
+        assert!(sa < sb && sb < sc, "claims must follow submission order: {sa} {sb} {sc}");
+    }
+
+    #[test]
+    fn server_side_checkpoint_defaults_are_applied() {
+        let dir = std::env::temp_dir().join("austerity_registry_ckpt_root");
+        let r = Registry::new(RegistryCfg {
+            max_jobs: 1,
+            max_queue: 8,
+            ckpt_root: Some(dir.clone()),
+            ckpt_every: Some(25),
+        });
+        let id = r.submit(SPEC).unwrap();
+        let (_, spec, _) = r.next_job().unwrap();
+        assert_eq!(spec.checkpoint_every, Some(25));
+        assert_eq!(spec.checkpoint_dir.as_deref(), Some(dir.join(format!("job-{id}")).as_path()));
+    }
+
+    #[test]
+    fn status_json_reports_live_progress() {
+        let r = reg(1, 8);
+        let id = r.submit(SPEC).unwrap();
+        let (_, _, live) = r.next_job().unwrap();
+        live.board.publish(0, 7, 3, 420);
+        live.series[0].lock().unwrap().extend([0.5; 8]);
+        let s = r.status_json(id).unwrap();
+        assert!(s.contains("\"state\":\"running\""), "{s}");
+        assert!(s.contains("\"steps\":7"), "{s}");
+        assert!(s.contains("\"accepted\":3"), "{s}");
+        assert!(s.contains("\"data_used\":420"), "{s}");
+        assert!(s.contains("\"draws\":8"), "{s}");
+        // the document itself satisfies the strict reader
+        crate::server::json_in::parse(&s).unwrap();
+        assert!(r.status_json(999).is_none());
+    }
+}

@@ -1,0 +1,632 @@
+//! Typed job specifications: the JSON body of `POST /jobs` decoded
+//! into a validated [`JobSpec`].
+//!
+//! Validation philosophy: *reject loudly at admission time*. Every
+//! field is checked before a job enters the queue — unknown keys,
+//! wrong types, out-of-range knobs and incoherent flag pairings all
+//! come back as a typed [`SpecError`] rendered into the 400 body, so
+//! a misconfigured client never discovers its mistake as a worker
+//! panic minutes later.
+//!
+//! A spec fully determines a run: `(spec, seed)` → bit-identical
+//! draws no matter how loaded the server is, because the models are
+//! synthesized deterministically from `(n, d, data_seed)` and the
+//! chains draw from the same per-chain RNG streams `Session` always
+//! uses.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::coordinator::chain::Budget;
+use crate::coordinator::mh::MhMode;
+use crate::coordinator::supervise::RetryPolicy;
+use crate::server::json_in::{self, Json, JsonError};
+use crate::stats::logistic_corr::{SIGMA_MAX, SIGMA_MIN};
+
+/// Hard cap on `chains` per job: enough for any real launch, small
+/// enough that one hostile spec cannot allocate unbounded lanes.
+pub const MAX_CHAINS: usize = 256;
+/// Hard cap on synthetic dataset size per job.
+pub const MAX_DATA: usize = 5_000_000;
+
+/// Which built-in synthetic model the job samples.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelSpec {
+    /// d-dimensional logistic regression on a two-class Gaussian
+    /// mixture (`exp::population::two_class_gaussian`).
+    Logistic { n: usize, d: usize, data_seed: u64 },
+    /// Scalar linear-regression toy with the heavy Laplace prior.
+    Linreg { n: usize, data_seed: u64 },
+    /// Conjugate Gaussian mean model (closed-form posterior — the
+    /// testkit's ground-truth workhorse).
+    Conjugate { n: usize, data_seed: u64 },
+}
+
+impl ModelSpec {
+    /// Dataset size — the `N` the acceptance rules batch over.
+    pub fn n(&self) -> usize {
+        match self {
+            ModelSpec::Logistic { n, .. }
+            | ModelSpec::Linreg { n, .. }
+            | ModelSpec::Conjugate { n, .. } => *n,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ModelSpec::Logistic { .. } => "logistic",
+            ModelSpec::Linreg { .. } => "linreg",
+            ModelSpec::Conjugate { .. } => "conjugate",
+        }
+    }
+}
+
+/// Which acceptance rule drives the MH decisions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RuleSpec {
+    Exact,
+    /// The paper's sequential test at error budget `eps`.
+    Austerity { eps: f64, batch: Option<usize> },
+    /// Noise-corrected minibatch Barker test at noise target `sigma`.
+    Barker { sigma: f64, batch: Option<usize> },
+    /// Concentration-bound confidence sampler at level `delta`.
+    Confidence { delta: f64, batch: Option<usize> },
+}
+
+impl RuleSpec {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RuleSpec::Exact => "exact",
+            RuleSpec::Austerity { .. } => "austerity",
+            RuleSpec::Barker { .. } => "barker",
+            RuleSpec::Confidence { .. } => "confidence",
+        }
+    }
+
+    /// Resolve to the engine-facing [`MhMode`] for a dataset of `n`
+    /// points, validating every knob against the same bounds the CLI
+    /// enforces.
+    pub fn mh_mode(&self, n: usize) -> Result<MhMode, SpecError> {
+        let default_batch = 500.min(n / 4).max(16).min(n.max(1));
+        let resolve = |batch: Option<usize>| -> Result<usize, SpecError> {
+            match batch {
+                None => Ok(default_batch),
+                Some(b) if b >= 1 && b <= n => Ok(b),
+                Some(b) => Err(SpecError::BadValue {
+                    field: "batch",
+                    why: format!("must be in [1, n={n}]: got {b}"),
+                }),
+            }
+        };
+        match *self {
+            RuleSpec::Exact => Ok(MhMode::Exact),
+            RuleSpec::Austerity { eps, batch } => {
+                if !(eps > 0.0 && eps < 1.0) {
+                    return Err(SpecError::BadValue {
+                        field: "eps",
+                        why: format!("must be in (0, 1): got {eps}"),
+                    });
+                }
+                Ok(MhMode::approx(eps, resolve(batch)?))
+            }
+            RuleSpec::Barker { sigma, batch } => {
+                if !(SIGMA_MIN..=SIGMA_MAX).contains(&sigma) {
+                    return Err(SpecError::BadValue {
+                        field: "sigma",
+                        why: format!("must be in [{SIGMA_MIN}, {SIGMA_MAX}]: got {sigma}"),
+                    });
+                }
+                Ok(MhMode::barker(sigma, resolve(batch)?))
+            }
+            RuleSpec::Confidence { delta, batch } => {
+                if !(delta > 0.0 && delta < 1.0) {
+                    return Err(SpecError::BadValue {
+                        field: "delta",
+                        why: format!("must be in (0, 1): got {delta}"),
+                    });
+                }
+                Ok(MhMode::confidence(delta, resolve(batch)?))
+            }
+        }
+    }
+}
+
+/// A fully validated job: everything `server::jobs::run_job` needs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub model: ModelSpec,
+    /// Proposal step size (model-specific default when absent).
+    pub sigma_prop: Option<f64>,
+    pub rule: RuleSpec,
+    pub chains: usize,
+    pub seed: u64,
+    pub budget: Budget,
+    pub burn_in: usize,
+    pub thin: usize,
+    /// Checkpoint cadence in steps; `checkpoint_dir` resolved at
+    /// admission (explicit, or `<ckpt_root>/job-<id>` server default).
+    pub checkpoint_every: Option<usize>,
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from `checkpoint_dir` instead of starting fresh.
+    pub resume: bool,
+    pub retries: usize,
+    pub retry_backoff_ms: u64,
+}
+
+impl JobSpec {
+    pub fn retry_policy(&self) -> RetryPolicy {
+        RetryPolicy::new(self.retries, Duration::from_millis(self.retry_backoff_ms))
+    }
+}
+
+/// Why a job spec was refused. Rendered into the 400 response body.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecError {
+    /// The body was not valid JSON at all.
+    Json(JsonError),
+    /// Top level was not a JSON object.
+    NotAnObject,
+    /// A required field is absent.
+    Missing { field: &'static str },
+    /// Field present with the wrong JSON type.
+    BadType { field: &'static str, want: &'static str },
+    /// Field parsed but fails validation.
+    BadValue { field: &'static str, why: String },
+    /// Key this API does not know — likely a typo'd knob; rejecting
+    /// beats silently ignoring it.
+    UnknownField { field: String },
+    /// `model.kind` / `rule.kind` outside the built-in set.
+    UnknownKind { field: &'static str, got: String },
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::Json(e) => write!(f, "invalid JSON: {e}"),
+            SpecError::NotAnObject => write!(f, "job spec must be a JSON object"),
+            SpecError::Missing { field } => write!(f, "missing required field {field:?}"),
+            SpecError::BadType { field, want } => {
+                write!(f, "field {field:?} must be {want}")
+            }
+            SpecError::BadValue { field, why } => write!(f, "field {field:?} {why}"),
+            SpecError::UnknownField { field } => {
+                write!(f, "unknown field {field:?} (strict parsing: typos are rejected)")
+            }
+            SpecError::UnknownKind { field, got } => {
+                write!(f, "unknown {field} kind {got:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+impl From<JsonError> for SpecError {
+    fn from(e: JsonError) -> Self {
+        SpecError::Json(e)
+    }
+}
+
+/// Parse and validate a job spec from a raw request body.
+pub fn parse_spec(body: &str) -> Result<JobSpec, SpecError> {
+    let tree = json_in::parse(body)?;
+    spec_from_json(&tree)
+}
+
+// -- field helpers ----------------------------------------------------
+
+fn want_obj<'a>(v: &'a Json) -> Result<&'a [(String, Json)], SpecError> {
+    v.as_obj().ok_or(SpecError::NotAnObject)
+}
+
+fn opt_usize(v: &Json, field: &'static str) -> Result<usize, SpecError> {
+    v.as_usize().ok_or(SpecError::BadType { field, want: "a non-negative integer" })
+}
+
+fn opt_u64(v: &Json, field: &'static str) -> Result<u64, SpecError> {
+    v.as_u64().ok_or(SpecError::BadType { field, want: "a non-negative integer" })
+}
+
+fn opt_f64(v: &Json, field: &'static str) -> Result<f64, SpecError> {
+    v.as_f64().ok_or(SpecError::BadType { field, want: "a number" })
+}
+
+fn opt_str<'a>(v: &'a Json, field: &'static str) -> Result<&'a str, SpecError> {
+    v.as_str().ok_or(SpecError::BadType { field, want: "a string" })
+}
+
+fn opt_bool(v: &Json, field: &'static str) -> Result<bool, SpecError> {
+    v.as_bool().ok_or(SpecError::BadType { field, want: "a boolean" })
+}
+
+fn bounded(field: &'static str, v: usize, lo: usize, hi: usize) -> Result<usize, SpecError> {
+    if (lo..=hi).contains(&v) {
+        Ok(v)
+    } else {
+        Err(SpecError::BadValue { field, why: format!("must be in [{lo}, {hi}]: got {v}") })
+    }
+}
+
+fn model_from_json(v: &Json) -> Result<ModelSpec, SpecError> {
+    let members = v.as_obj().ok_or(SpecError::BadType { field: "model", want: "an object" })?;
+    let mut kind: Option<&str> = None;
+    let mut n: Option<usize> = None;
+    let mut d: Option<usize> = None;
+    let mut data_seed: u64 = 0;
+    for (k, val) in members {
+        match k.as_str() {
+            "kind" => kind = Some(opt_str(val, "model.kind")?),
+            "n" => n = Some(opt_usize(val, "model.n")?),
+            "d" => d = Some(opt_usize(val, "model.d")?),
+            "data_seed" => data_seed = opt_u64(val, "model.data_seed")?,
+            other => {
+                return Err(SpecError::UnknownField { field: format!("model.{other}") })
+            }
+        }
+    }
+    let kind = kind.ok_or(SpecError::Missing { field: "model.kind" })?;
+    match kind {
+        "logistic" => {
+            let n = bounded("model.n", n.unwrap_or(2_000), 16, MAX_DATA)?;
+            let d = bounded("model.d", d.unwrap_or(20), 1, 512)?;
+            Ok(ModelSpec::Logistic { n, d, data_seed })
+        }
+        "linreg" => {
+            if d.is_some() {
+                return Err(SpecError::BadValue {
+                    field: "model.d",
+                    why: "does not apply to the scalar linreg model".into(),
+                });
+            }
+            let n = bounded("model.n", n.unwrap_or(2_000), 16, MAX_DATA)?;
+            Ok(ModelSpec::Linreg { n, data_seed })
+        }
+        "conjugate" => {
+            if d.is_some() {
+                return Err(SpecError::BadValue {
+                    field: "model.d",
+                    why: "does not apply to the scalar conjugate model".into(),
+                });
+            }
+            let n = bounded("model.n", n.unwrap_or(1_000), 16, MAX_DATA)?;
+            Ok(ModelSpec::Conjugate { n, data_seed })
+        }
+        other => Err(SpecError::UnknownKind { field: "model", got: other.to_string() }),
+    }
+}
+
+fn rule_from_json(v: &Json) -> Result<RuleSpec, SpecError> {
+    let members = v.as_obj().ok_or(SpecError::BadType { field: "rule", want: "an object" })?;
+    let mut kind: Option<&str> = None;
+    let mut eps: Option<f64> = None;
+    let mut sigma: Option<f64> = None;
+    let mut delta: Option<f64> = None;
+    let mut batch: Option<usize> = None;
+    for (k, val) in members {
+        match k.as_str() {
+            "kind" => kind = Some(opt_str(val, "rule.kind")?),
+            "eps" => eps = Some(opt_f64(val, "rule.eps")?),
+            "sigma" => sigma = Some(opt_f64(val, "rule.sigma")?),
+            "delta" => delta = Some(opt_f64(val, "rule.delta")?),
+            "batch" => batch = Some(opt_usize(val, "rule.batch")?),
+            other => return Err(SpecError::UnknownField { field: format!("rule.{other}") }),
+        }
+    }
+    let kind = kind.ok_or(SpecError::Missing { field: "rule.kind" })?;
+    let reject_knob = |name: &'static str, present: bool| -> Result<(), SpecError> {
+        if present {
+            Err(SpecError::BadValue {
+                field: name,
+                why: format!("does not apply to rule kind {kind:?}"),
+            })
+        } else {
+            Ok(())
+        }
+    };
+    match kind {
+        "exact" => {
+            reject_knob("rule.eps", eps.is_some())?;
+            reject_knob("rule.sigma", sigma.is_some())?;
+            reject_knob("rule.delta", delta.is_some())?;
+            reject_knob("rule.batch", batch.is_some())?;
+            Ok(RuleSpec::Exact)
+        }
+        "austerity" => {
+            reject_knob("rule.sigma", sigma.is_some())?;
+            reject_knob("rule.delta", delta.is_some())?;
+            Ok(RuleSpec::Austerity { eps: eps.unwrap_or(0.05), batch })
+        }
+        "barker" => {
+            reject_knob("rule.eps", eps.is_some())?;
+            reject_knob("rule.delta", delta.is_some())?;
+            Ok(RuleSpec::Barker { sigma: sigma.unwrap_or(1.0), batch })
+        }
+        "confidence" => {
+            reject_knob("rule.eps", eps.is_some())?;
+            reject_knob("rule.sigma", sigma.is_some())?;
+            Ok(RuleSpec::Confidence { delta: delta.unwrap_or(0.05), batch })
+        }
+        other => Err(SpecError::UnknownKind { field: "rule", got: other.to_string() }),
+    }
+}
+
+fn budget_from_json(v: &Json) -> Result<Budget, SpecError> {
+    let members =
+        v.as_obj().ok_or(SpecError::BadType { field: "budget", want: "an object" })?;
+    let mut kind: Option<&str> = None;
+    let mut steps: Option<usize> = None;
+    let mut data: Option<u64> = None;
+    for (k, val) in members {
+        match k.as_str() {
+            "kind" => kind = Some(opt_str(val, "budget.kind")?),
+            "steps" => steps = Some(opt_usize(val, "budget.steps")?),
+            "data" => data = Some(opt_u64(val, "budget.data")?),
+            other => {
+                return Err(SpecError::UnknownField { field: format!("budget.{other}") })
+            }
+        }
+    }
+    match kind.ok_or(SpecError::Missing { field: "budget.kind" })? {
+        "steps" => {
+            let s = steps.ok_or(SpecError::Missing { field: "budget.steps" })?;
+            if s == 0 {
+                return Err(SpecError::BadValue {
+                    field: "budget.steps",
+                    why: "must be >= 1".into(),
+                });
+            }
+            Ok(Budget::Steps(s))
+        }
+        "data" => {
+            let d = data.ok_or(SpecError::Missing { field: "budget.data" })?;
+            if d == 0 {
+                return Err(SpecError::BadValue {
+                    field: "budget.data",
+                    why: "must be >= 1".into(),
+                });
+            }
+            Ok(Budget::Data(d))
+        }
+        // a wall-clock budget is timing-dependent and would break the
+        // bit-identity contract the server advertises — refuse it
+        "wall" => Err(SpecError::BadValue {
+            field: "budget.kind",
+            why: "wall budgets are not reproducible under server load; use steps or data"
+                .into(),
+        }),
+        other => Err(SpecError::UnknownKind { field: "budget", got: other.to_string() }),
+    }
+}
+
+fn spec_from_json(tree: &Json) -> Result<JobSpec, SpecError> {
+    let members = want_obj(tree)?;
+    let mut model: Option<ModelSpec> = None;
+    let mut sigma_prop: Option<f64> = None;
+    let mut rule: Option<RuleSpec> = None;
+    let mut chains: usize = 2;
+    let mut seed: u64 = 0;
+    let mut budget: Option<Budget> = None;
+    let mut burn_in: usize = 0;
+    let mut thin: usize = 1;
+    let mut checkpoint_every: Option<usize> = None;
+    let mut checkpoint_dir: Option<PathBuf> = None;
+    let mut resume = false;
+    let mut retries: usize = 0;
+    let mut retry_backoff_ms: u64 = 0;
+
+    for (k, v) in members {
+        match k.as_str() {
+            "model" => model = Some(model_from_json(v)?),
+            "proposal_sigma" => {
+                let s = opt_f64(v, "proposal_sigma")?;
+                if !(s > 0.0) {
+                    return Err(SpecError::BadValue {
+                        field: "proposal_sigma",
+                        why: format!("must be > 0: got {s}"),
+                    });
+                }
+                sigma_prop = Some(s);
+            }
+            "rule" => rule = Some(rule_from_json(v)?),
+            "chains" => chains = bounded("chains", opt_usize(v, "chains")?, 1, MAX_CHAINS)?,
+            "seed" => seed = opt_u64(v, "seed")?,
+            "budget" => budget = Some(budget_from_json(v)?),
+            "burn_in" => burn_in = opt_usize(v, "burn_in")?,
+            "thin" => {
+                thin = opt_usize(v, "thin")?;
+                if thin == 0 {
+                    return Err(SpecError::BadValue {
+                        field: "thin",
+                        why: "must be >= 1".into(),
+                    });
+                }
+            }
+            "checkpoint_every" => {
+                let e = opt_usize(v, "checkpoint_every")?;
+                if e == 0 {
+                    return Err(SpecError::BadValue {
+                        field: "checkpoint_every",
+                        why: "must be >= 1".into(),
+                    });
+                }
+                checkpoint_every = Some(e);
+            }
+            "checkpoint_dir" => {
+                checkpoint_dir = Some(PathBuf::from(opt_str(v, "checkpoint_dir")?))
+            }
+            "resume" => resume = opt_bool(v, "resume")?,
+            "retries" => retries = bounded("retries", opt_usize(v, "retries")?, 0, 16)?,
+            "retry_backoff_ms" => retry_backoff_ms = opt_u64(v, "retry_backoff_ms")?,
+            other => return Err(SpecError::UnknownField { field: other.to_string() }),
+        }
+    }
+
+    let model = model.ok_or(SpecError::Missing { field: "model" })?;
+    let rule = rule.unwrap_or(RuleSpec::Austerity { eps: 0.05, batch: None });
+    let budget = budget.ok_or(SpecError::Missing { field: "budget" })?;
+
+    // the same pairing rule the CLI enforces: a cadence without a
+    // directory (or vice versa at resume time) is a config bug
+    if checkpoint_dir.is_some() && checkpoint_every.is_none() {
+        return Err(SpecError::BadValue {
+            field: "checkpoint_dir",
+            why: "requires checkpoint_every (pair the knobs)".into(),
+        });
+    }
+    if resume && checkpoint_every.is_none() {
+        return Err(SpecError::BadValue {
+            field: "resume",
+            why: "requires checkpoint_every (resume continues a checkpointed run)".into(),
+        });
+    }
+    // validate the rule knobs against the model's N now, not at run time
+    rule.mh_mode(model.n())?;
+
+    Ok(JobSpec {
+        model,
+        sigma_prop,
+        rule,
+        chains,
+        seed,
+        budget,
+        burn_in,
+        thin,
+        checkpoint_every,
+        checkpoint_dir,
+        resume,
+        retries,
+        retry_backoff_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_spec_fills_defaults() {
+        let spec = parse_spec(
+            r#"{"model":{"kind":"conjugate","n":500},"budget":{"kind":"steps","steps":100}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.model, ModelSpec::Conjugate { n: 500, data_seed: 0 });
+        assert_eq!(spec.rule, RuleSpec::Austerity { eps: 0.05, batch: None });
+        assert_eq!(spec.chains, 2);
+        assert_eq!(spec.seed, 0);
+        assert_eq!(spec.budget, Budget::Steps(100));
+        assert_eq!((spec.burn_in, spec.thin), (0, 1));
+        assert!(!spec.resume && spec.checkpoint_every.is_none());
+    }
+
+    #[test]
+    fn full_spec_round_trips_every_knob() {
+        let spec = parse_spec(
+            r#"{
+              "model": {"kind": "logistic", "n": 800, "d": 5, "data_seed": 9},
+              "proposal_sigma": 0.02,
+              "rule": {"kind": "barker", "sigma": 0.9, "batch": 64},
+              "chains": 4, "seed": 123,
+              "budget": {"kind": "data", "data": 50000},
+              "burn_in": 10, "thin": 2,
+              "checkpoint_every": 50, "checkpoint_dir": "/tmp/ck",
+              "retries": 2, "retry_backoff_ms": 5
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.model, ModelSpec::Logistic { n: 800, d: 5, data_seed: 9 });
+        assert_eq!(spec.sigma_prop, Some(0.02));
+        assert_eq!(spec.rule, RuleSpec::Barker { sigma: 0.9, batch: Some(64) });
+        assert_eq!(spec.budget, Budget::Data(50_000));
+        assert_eq!(spec.checkpoint_every, Some(50));
+        assert_eq!(spec.checkpoint_dir.as_deref(), Some(std::path::Path::new("/tmp/ck")));
+        assert_eq!(spec.retries, 2);
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected_at_every_level() {
+        for body in [
+            r#"{"model":{"kind":"conjugate"},"budget":{"kind":"steps","steps":1},"zebra":1}"#,
+            r#"{"model":{"kind":"conjugate","zebra":1},"budget":{"kind":"steps","steps":1}}"#,
+            r#"{"model":{"kind":"conjugate"},"rule":{"kind":"exact","zebra":1},"budget":{"kind":"steps","steps":1}}"#,
+            r#"{"model":{"kind":"conjugate"},"budget":{"kind":"steps","steps":1,"zebra":1}}"#,
+        ] {
+            assert!(
+                matches!(parse_spec(body), Err(SpecError::UnknownField { .. })),
+                "{body}"
+            );
+        }
+    }
+
+    #[test]
+    fn incoherent_specs_get_typed_errors() {
+        // wall budget refused by name
+        let e = parse_spec(
+            r#"{"model":{"kind":"conjugate"},"budget":{"kind":"wall","steps":1}}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(e, SpecError::BadValue { field: "budget.kind", .. }), "{e}");
+        // resume without checkpointing
+        let e = parse_spec(
+            r#"{"model":{"kind":"conjugate"},"budget":{"kind":"steps","steps":1},"resume":true}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(e, SpecError::BadValue { field: "resume", .. }), "{e}");
+        // dir without cadence
+        let e = parse_spec(
+            r#"{"model":{"kind":"conjugate"},"budget":{"kind":"steps","steps":1},"checkpoint_dir":"/tmp/x"}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(e, SpecError::BadValue { field: "checkpoint_dir", .. }), "{e}");
+        // rule knob out of range
+        let e = parse_spec(
+            r#"{"model":{"kind":"conjugate"},"rule":{"kind":"austerity","eps":2.0},"budget":{"kind":"steps","steps":1}}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(e, SpecError::BadValue { field: "eps", .. }), "{e}");
+        // batch larger than the dataset
+        let e = parse_spec(
+            r#"{"model":{"kind":"conjugate","n":100},"rule":{"kind":"austerity","batch":500},"budget":{"kind":"steps","steps":1}}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(e, SpecError::BadValue { field: "batch", .. }), "{e}");
+        // knob for the wrong rule
+        let e = parse_spec(
+            r#"{"model":{"kind":"conjugate"},"rule":{"kind":"exact","eps":0.1},"budget":{"kind":"steps","steps":1}}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(e, SpecError::BadValue { field: "rule.eps", .. }), "{e}");
+        // d on a scalar model
+        let e = parse_spec(
+            r#"{"model":{"kind":"linreg","d":3},"budget":{"kind":"steps","steps":1}}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(e, SpecError::BadValue { field: "model.d", .. }), "{e}");
+    }
+
+    #[test]
+    fn parser_level_failures_pass_through_typed() {
+        assert!(matches!(parse_spec("not json"), Err(SpecError::Json(_))));
+        assert!(matches!(
+            parse_spec(r#"{"model":{"kind":"conjugate"},"budget":{"kind":"steps","steps":NaN}}"#),
+            Err(SpecError::Json(JsonError::NonFinite { .. }))
+        ));
+        assert!(matches!(
+            parse_spec(r#"{"seed":1,"seed":2}"#),
+            Err(SpecError::Json(JsonError::DuplicateKey { .. }))
+        ));
+        assert!(matches!(
+            parse_spec(r#"{"model":{"kind":"conjugate"}} extra"#),
+            Err(SpecError::Json(JsonError::TrailingGarbage { .. }))
+        ));
+        assert!(matches!(parse_spec("[1,2]"), Err(SpecError::NotAnObject)));
+    }
+
+    #[test]
+    fn mh_mode_resolves_with_cli_default_batch() {
+        let rule = RuleSpec::Austerity { eps: 0.05, batch: None };
+        // n=2000 -> 500.min(500).max(16) = 500
+        assert!(matches!(rule.mh_mode(2_000), Ok(MhMode::Approx { .. })));
+        // tiny n clamps the floor to n itself
+        assert!(rule.mh_mode(20).is_ok());
+    }
+}

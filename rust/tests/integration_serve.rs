@@ -1,0 +1,487 @@
+//! Server-layer integration suite: the `austerity serve` daemon
+//! end-to-end over real loopback sockets.
+//!
+//! Pillars, matching DESIGN.md §Server layer:
+//!
+//! 1. **Bit-identity under concurrency** — two jobs racing on the
+//!    shared executor produce draws bit-identical to the same specs
+//!    run solo through `run_job` and to a hand-built `Session::run`
+//!    with the same seeds: server load never touches the chains.
+//! 2. **Cooperative cancel** — `DELETE /jobs/:id` mid-run settles the
+//!    job as `Cancelled` with a partial-progress snapshot, and the
+//!    shared executor keeps serving later jobs unpoisoned.
+//! 3. **Bounded admission** — with `--max-jobs 1`, extra jobs queue
+//!    (visible via `/healthz` and job states) and are admitted FIFO.
+//! 4. **Malformed input** — bad JSON, NaN, duplicate keys, trailing
+//!    garbage, unknown fields and wall budgets all get a 4xx carrying
+//!    the typed parser error; the daemon never panics.
+//! 5. **Round-trip property** — `RunReport::to_json()` output
+//!    satisfies the strict reader, reserializes to an equal tree, and
+//!    pins `null` for non-finite statistics.
+//! 6. **Shutdown flush + resume** — shutdown mid-run cancels
+//!    cooperatively, the interrupted job's chains leave checkpoints on
+//!    disk, and a follow-up job with `"resume": true` finishes the run.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use austerity::coordinator::{Budget, MhMode, Session};
+use austerity::server::json_in::{self, Json};
+use austerity::server::jobs::run_job;
+use austerity::server::spec::parse_spec;
+use austerity::server::{ServeConfig, Server};
+use austerity::testkit::models::ConjugateGaussian;
+
+static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// Fresh per-test checkpoint directory under the system temp dir.
+fn scratch_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "austerity_serve_{tag}_{}_{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Boot a daemon on a free loopback port.
+fn start(cfg: ServeConfig) -> (SocketAddr, Arc<AtomicBool>, JoinHandle<()>) {
+    let srv = Server::bind(cfg).expect("bind loopback");
+    let addr = srv.local_addr();
+    let stop = srv.shutdown_flag();
+    let handle = std::thread::spawn(move || srv.run());
+    (addr, stop, handle)
+}
+
+fn serve_cfg(max_jobs: usize) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".parse().unwrap(),
+        max_jobs,
+        max_queue: 16,
+        drain: Duration::from_secs(3),
+        ..ServeConfig::default()
+    }
+}
+
+/// One blocking HTTP exchange; returns (status, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("send request");
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read response");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in {raw:?}"));
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+/// Poll `GET /jobs/:id` until the state is terminal (or panic).
+fn await_terminal(addr: SocketAddr, id: usize) -> String {
+    for _ in 0..3_000 {
+        let (status, body) = http(addr, "GET", &format!("/jobs/{id}"), "");
+        assert_eq!(status, 200, "{body}");
+        if ["\"done\"", "\"failed\"", "\"cancelled\""]
+            .iter()
+            .any(|s| body.contains(&format!("\"state\":{s}")))
+        {
+            return body;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("job {id} never reached a terminal state");
+}
+
+/// Per-chain draw streams of a report, as exact bit patterns.
+fn draw_bits(report: &str) -> Vec<Vec<u64>> {
+    let tree = json_in::parse(report).expect("report parses under the strict reader");
+    let chains = tree.get("per_chain").and_then(Json::as_arr).expect("per_chain array");
+    chains
+        .iter()
+        .map(|c| {
+            c.get("draws")
+                .and_then(Json::as_arr)
+                .expect("draws array")
+                .iter()
+                .map(|d| d.as_f64().expect("finite draw").to_bits())
+                .collect()
+        })
+        .collect()
+}
+
+const CONJ_SPEC: &str = r#"{
+    "model": {"kind": "conjugate", "n": 400, "data_seed": 7},
+    "rule": {"kind": "austerity", "eps": 0.05, "batch": 50},
+    "chains": 2, "seed": 7,
+    "budget": {"kind": "steps", "steps": 600}
+}"#;
+
+const LOGI_SPEC: &str = r#"{
+    "model": {"kind": "logistic", "n": 300, "d": 5, "data_seed": 3},
+    "rule": {"kind": "exact"},
+    "chains": 2, "seed": 3,
+    "budget": {"kind": "steps", "steps": 150}
+}"#;
+
+// ---------------------------------------------------------------- 1 --
+
+#[test]
+fn concurrent_jobs_are_bit_identical_to_solo_runs() {
+    // oracle runs first, on an unloaded process
+    let conj_solo = run_job(&parse_spec(CONJ_SPEC).unwrap(), None).unwrap();
+    let logi_solo = run_job(&parse_spec(LOGI_SPEC).unwrap(), None).unwrap();
+
+    let (addr, stop, handle) = start(serve_cfg(4));
+    let (s1, b1) = http(addr, "POST", "/jobs", CONJ_SPEC);
+    let (s2, b2) = http(addr, "POST", "/jobs", LOGI_SPEC);
+    assert_eq!((s1, s2), (202, 202), "{b1} {b2}");
+    await_terminal(addr, 0);
+    await_terminal(addr, 1);
+
+    let (s, conj_served) = http(addr, "GET", "/jobs/0/result", "");
+    assert_eq!(s, 200, "{conj_served}");
+    let (s, logi_served) = http(addr, "GET", "/jobs/1/result", "");
+    assert_eq!(s, 200, "{logi_served}");
+
+    assert_eq!(
+        draw_bits(&conj_served),
+        draw_bits(&conj_solo),
+        "conjugate draws must not depend on server load"
+    );
+    assert_eq!(
+        draw_bits(&logi_served),
+        draw_bits(&logi_solo),
+        "logistic draws must not depend on server load"
+    );
+
+    // the conjugate job also matches a hand-built Session with the
+    // same seed — the server is a thin shell over the front door
+    let model = ConjugateGaussian::synthetic(400, 1.0, 1.0, 0.0, 3.0, 7);
+    let kernel = model.rw_proposal(0.5);
+    let report = Session::new(&model)
+        .kernel(&kernel)
+        .rule(MhMode::approx(0.05, 50))
+        .init(0.0)
+        .chains(2)
+        .seed(7)
+        .budget(Budget::Steps(600))
+        .run();
+    let hand: Vec<Vec<u64>> = report
+        .values()
+        .iter()
+        .map(|chain| chain.iter().map(|v| v.to_bits()).collect())
+        .collect();
+    assert_eq!(draw_bits(&conj_served), hand, "server vs hand-built Session");
+
+    stop.store(true, Ordering::Relaxed);
+    handle.join().unwrap();
+}
+
+// ---------------------------------------------------------------- 2 --
+
+#[test]
+fn cancel_mid_run_snapshots_progress_and_keeps_the_executor_healthy() {
+    let (addr, stop, handle) = start(serve_cfg(2));
+    // effectively unbounded: only the cancel ends it
+    let big = r#"{
+        "model": {"kind": "conjugate", "n": 256, "data_seed": 1},
+        "rule": {"kind": "exact"},
+        "chains": 2, "seed": 1,
+        "budget": {"kind": "steps", "steps": 50000000}
+    }"#;
+    let (s, body) = http(addr, "POST", "/jobs", big);
+    assert_eq!(s, 202, "{body}");
+
+    // wait until the chains demonstrably move
+    let mut started = false;
+    for _ in 0..1_000 {
+        let (_, b) = http(addr, "GET", "/jobs/0", "");
+        let tree = json_in::parse(&b).unwrap();
+        let steps = tree
+            .get("progress")
+            .and_then(|p| p.get("steps"))
+            .and_then(Json::as_u64)
+            .unwrap_or(0);
+        if steps > 100 {
+            started = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(started, "job never made progress");
+
+    let (s, body) = http(addr, "DELETE", "/jobs/0", "");
+    assert_eq!(s, 200, "{body}");
+    let status = await_terminal(addr, 0);
+    assert!(status.contains("\"state\":\"cancelled\""), "{status}");
+
+    // the partial-progress snapshot survives the cancel
+    let tree = json_in::parse(&status).unwrap();
+    let steps = tree
+        .get("progress")
+        .and_then(|p| p.get("steps"))
+        .and_then(Json::as_u64)
+        .unwrap();
+    assert!(steps > 0, "cancelled job must keep its progress: {status}");
+    let draws = tree
+        .get("progress")
+        .and_then(|p| p.get("draws"))
+        .and_then(Json::as_u64)
+        .unwrap();
+    assert!(draws > 0, "cancelled job must keep its recorded draws: {status}");
+
+    // a cancelled launch still yields its flushed partial report
+    let (s, partial) = http(addr, "GET", "/jobs/0/result", "");
+    assert_eq!(s, 200, "{partial}");
+    assert!(!draw_bits(&partial).is_empty());
+
+    // the shared executor is not poisoned: a fresh job completes and
+    // matches its solo oracle bit for bit
+    let solo = run_job(&parse_spec(CONJ_SPEC).unwrap(), None).unwrap();
+    let (s, body) = http(addr, "POST", "/jobs", CONJ_SPEC);
+    assert_eq!(s, 202, "{body}");
+    await_terminal(addr, 1);
+    let (s, served) = http(addr, "GET", "/jobs/1/result", "");
+    assert_eq!(s, 200, "{served}");
+    assert_eq!(draw_bits(&served), draw_bits(&solo));
+
+    stop.store(true, Ordering::Relaxed);
+    handle.join().unwrap();
+}
+
+// ---------------------------------------------------------------- 3 --
+
+#[test]
+fn max_jobs_one_queues_then_admits_fifo() {
+    let srv = Server::bind(serve_cfg(1)).expect("bind loopback");
+    let addr = srv.local_addr();
+    let stop = srv.shutdown_flag();
+    let registry = srv.registry();
+    let handle = std::thread::spawn(move || srv.run());
+    let long = r#"{
+        "model": {"kind": "conjugate", "n": 256, "data_seed": 4},
+        "rule": {"kind": "exact"},
+        "chains": 1, "seed": 4,
+        "budget": {"kind": "steps", "steps": 50000000}
+    }"#;
+    let quick = r#"{
+        "model": {"kind": "conjugate", "n": 64, "data_seed": 5},
+        "rule": {"kind": "exact"},
+        "chains": 1, "seed": 5,
+        "budget": {"kind": "steps", "steps": 30}
+    }"#;
+    let (s, _) = http(addr, "POST", "/jobs", long);
+    assert_eq!(s, 202);
+    // wait until job 0 occupies the single runner
+    for _ in 0..1_000 {
+        let (_, b) = http(addr, "GET", "/jobs/0", "");
+        if b.contains("\"state\":\"running\"") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let (s, _) = http(addr, "POST", "/jobs", quick);
+    assert_eq!(s, 202);
+    let (s, _) = http(addr, "POST", "/jobs", quick);
+    assert_eq!(s, 202);
+
+    // both extras sit queued while job 0 hogs the only slot
+    let (_, b1) = http(addr, "GET", "/jobs/1", "");
+    let (_, b2) = http(addr, "GET", "/jobs/2", "");
+    assert!(b1.contains("\"state\":\"queued\""), "{b1}");
+    assert!(b2.contains("\"state\":\"queued\""), "{b2}");
+    let (_, health) = http(addr, "GET", "/healthz", "");
+    assert!(health.contains("\"queued\":2"), "{health}");
+    assert!(health.contains("\"running\":1"), "{health}");
+
+    // release the slot; the queue drains in submission order
+    let (s, _) = http(addr, "DELETE", "/jobs/0", "");
+    assert_eq!(s, 200);
+    await_terminal(addr, 0);
+    await_terminal(addr, 1);
+    await_terminal(addr, 2);
+
+    let (_, b1) = http(addr, "GET", "/jobs/1", "");
+    let (_, b2) = http(addr, "GET", "/jobs/2", "");
+    assert!(b1.contains("\"state\":\"done\""), "{b1}");
+    assert!(b2.contains("\"state\":\"done\""), "{b2}");
+
+    // FIFO admission, asserted via the registry's claim stamps
+    let (s0, s1, s2) = (
+        registry.admitted_seq(0).unwrap(),
+        registry.admitted_seq(1).unwrap(),
+        registry.admitted_seq(2).unwrap(),
+    );
+    assert!(s0 < s1 && s1 < s2, "claims must follow submission order: {s0} {s1} {s2}");
+
+    stop.store(true, Ordering::Relaxed);
+    handle.join().unwrap();
+}
+
+// ---------------------------------------------------------------- 4 --
+
+#[test]
+fn malformed_specs_get_4xx_with_the_typed_parser_error() {
+    let (addr, stop, handle) = start(serve_cfg(1));
+    let cases: &[(&str, &str)] = &[
+        ("{\"model\":", "invalid JSON"),
+        (r#"{"model":{"kind":"conjugate"},"budget":{"kind":"steps","steps":NaN}}"#, "non-finite"),
+        (r#"{"seed":1,"seed":2}"#, "duplicate"),
+        (r#"{"model":{"kind":"conjugate"},"budget":{"kind":"steps","steps":1}} extra"#, "trailing"),
+        (r#"{"model":{"kind":"conjugate"},"budget":{"kind":"steps","steps":1},"zebra":1}"#, "unknown field"),
+        (r#"{"model":{"kind":"conjugate"},"budget":{"kind":"wall","steps":1}}"#, "not reproducible"),
+        (r#"{"model":{"kind":"zebra"},"budget":{"kind":"steps","steps":1}}"#, "unknown model kind"),
+    ];
+    for (body, needle) in cases {
+        let (status, resp) = http(addr, "POST", "/jobs", body);
+        assert_eq!(status, 400, "{body} -> {resp}");
+        assert!(
+            resp.to_lowercase().contains(&needle.to_lowercase()),
+            "{body}: wanted {needle:?} in {resp}"
+        );
+    }
+    // nothing was admitted, nothing crashed
+    let (s, health) = http(addr, "GET", "/healthz", "");
+    assert_eq!(s, 200);
+    assert!(health.contains("\"queued\":0") && health.contains("\"running\":0"), "{health}");
+    stop.store(true, Ordering::Relaxed);
+    handle.join().unwrap();
+}
+
+// ---------------------------------------------------------------- 5 --
+
+#[test]
+fn run_report_json_round_trips_under_the_strict_reader() {
+    // property-style: varied seeds, rules and shapes, every report must
+    // (a) parse, (b) reserialize to an equal tree, (c) keep draws exact
+    for seed in [1u64, 2, 3, 11, 99] {
+        let model = ConjugateGaussian::synthetic(128, 0.5, 1.0, 0.0, 2.0, seed);
+        let kernel = model.rw_proposal(0.4);
+        let report = Session::new(&model)
+            .kernel(&kernel)
+            .rule(MhMode::approx(0.05, 32))
+            .init(0.0)
+            .chains(2)
+            .seed(seed)
+            .budget(Budget::Steps(80 + seed as usize))
+            .run();
+        let text = report.to_json();
+        let tree = json_in::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: report must parse: {e}\n{text}"));
+        let again = json_in::parse(&tree.write()).unwrap();
+        assert_eq!(tree, again, "seed {seed}: write→parse must be a fixed point");
+        // draws survive the round trip bit for bit
+        let direct: Vec<Vec<u64>> = report
+            .values()
+            .iter()
+            .map(|c| c.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        assert_eq!(draw_bits(&text), direct, "seed {seed}");
+    }
+
+    // non-finite statistics are pinned to null from the read side: one
+    // chain of one draw has no R-hat (NaN) — the writer must emit null
+    // and the reader must surface Json::Null
+    let model = ConjugateGaussian::synthetic(64, 0.5, 1.0, 0.0, 2.0, 42);
+    let kernel = model.rw_proposal(0.4);
+    let report = Session::new(&model)
+        .kernel(&kernel)
+        .rule(MhMode::Exact)
+        .init(0.0)
+        .chains(1)
+        .seed(42)
+        .budget(Budget::Steps(1))
+        .run();
+    let text = report.to_json();
+    let tree = json_in::parse(&text).unwrap();
+    let rhat = tree.get("convergence").and_then(|c| c.get("rhat")).unwrap();
+    assert!(rhat.is_null(), "NaN R-hat must serialize as null: {text}");
+}
+
+// ---------------------------------------------------------------- 6 --
+
+#[test]
+fn shutdown_flushes_checkpoints_and_resume_finishes_the_job() {
+    let dir = scratch_dir("shutdown_resume");
+    let dir_text = dir.to_string_lossy().replace('\\', "/");
+    let spec = format!(
+        r#"{{
+            "model": {{"kind": "conjugate", "n": 256, "data_seed": 6}},
+            "rule": {{"kind": "exact"}},
+            "chains": 2, "seed": 6,
+            "budget": {{"kind": "steps", "steps": 50000000}},
+            "checkpoint_every": 200,
+            "checkpoint_dir": "{dir_text}"
+        }}"#
+    );
+    // short drain so shutdown goes straight to the cancel-and-flush path
+    let mut cfg = serve_cfg(1);
+    cfg.drain = Duration::from_millis(200);
+    let (addr, stop, handle) = start(cfg);
+    let (s, body) = http(addr, "POST", "/jobs", &spec);
+    assert_eq!(s, 202, "{body}");
+    // let it run long enough to cross a checkpoint boundary
+    for _ in 0..1_000 {
+        let (_, b) = http(addr, "GET", "/jobs/0", "");
+        let steps = json_in::parse(&b)
+            .ok()
+            .and_then(|t| t.get("progress").and_then(|p| p.get("steps")).and_then(Json::as_u64))
+            .unwrap_or(0);
+        if steps > 400 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // graceful shutdown mid-run
+    stop.store(true, Ordering::Relaxed);
+    handle.join().unwrap();
+
+    // the interrupted chains left checkpoints behind
+    let mut found = 0;
+    if let Ok(entries) = std::fs::read_dir(&dir) {
+        for e in entries.flatten() {
+            if e.file_name().to_string_lossy().contains("chain") {
+                found += 1;
+            }
+        }
+    }
+    assert!(found > 0, "shutdown must flush checkpoints into {}", dir.display());
+
+    // a finite resume job picks the run back up from those checkpoints
+    let resume_spec = format!(
+        r#"{{
+            "model": {{"kind": "conjugate", "n": 256, "data_seed": 6}},
+            "rule": {{"kind": "exact"}},
+            "chains": 2, "seed": 6,
+            "budget": {{"kind": "steps", "steps": 1000}},
+            "checkpoint_every": 200,
+            "checkpoint_dir": "{dir_text}",
+            "resume": true
+        }}"#
+    );
+    let resumed = run_job(&parse_spec(&resume_spec).unwrap(), None)
+        .expect("resume from the flushed checkpoints must succeed");
+    let bits = draw_bits(&resumed);
+    assert_eq!(bits.len(), 2);
+    // each chain either extends to the 1000-step resume budget or had
+    // already passed it when the shutdown flush caught it — both prove
+    // the run continued from the flushed state rather than restarting
+    assert!(
+        bits.iter().all(|c| c.len() >= 1000),
+        "resumed chains must reach the resume budget: {:?}",
+        bits.iter().map(Vec::len).collect::<Vec<_>>()
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}
